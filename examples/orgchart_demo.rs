@@ -1,0 +1,82 @@
+//! UNHCR-style org-chart scenario (the T-RAG paper's original domain):
+//! build the org forest, run all four retrieval algorithms on the same
+//! workload, and print the Table-1-style comparison plus a sample answer.
+//!
+//! Run: `cargo run --release --example orgchart_demo`
+
+use std::sync::Arc;
+
+use cft_rag::bench::harness::{bench, fmt_secs, fmt_speedup, print_table};
+use cft_rag::data::corpus::corpus_from_texts;
+use cft_rag::data::orgchart::{OrgChartConfig, OrgChartDataset};
+use cft_rag::data::workload::{Workload, WorkloadConfig};
+use cft_rag::rag::config::{Algorithm, RagConfig};
+use cft_rag::rag::pipeline::{make_retriever, RagPipeline};
+use cft_rag::runtime::engine::NativeEngine;
+
+fn main() {
+    let ds = OrgChartDataset::generate(OrgChartConfig {
+        trees: 40,
+        ..OrgChartConfig::default()
+    });
+    let forest = Arc::new(ds.build_forest());
+    let stats = forest.stats();
+    println!(
+        "org forest: {} trees, {} nodes, {} entities, depth {}",
+        stats.trees, stats.nodes, stats.distinct_entities, stats.max_depth
+    );
+
+    // Compare all four algorithms on one workload.
+    let workload = Workload::generate(
+        &forest,
+        WorkloadConfig { entities_per_query: 5, queries: 50, ..Default::default() },
+    );
+    let mut rows = Vec::new();
+    let mut naive = 0.0;
+    for alg in Algorithm::ALL {
+        let cfg = RagConfig { algorithm: alg, ..RagConfig::default() };
+        let mut r = make_retriever(forest.clone(), &cfg);
+        let res = bench(alg.label(), 1, 5, || {
+            for q in &workload.queries {
+                for e in &q.entities {
+                    let _ = r.find(e);
+                }
+            }
+        });
+        let mean = res.mean();
+        if alg == Algorithm::Naive {
+            naive = mean;
+        }
+        rows.push(vec![
+            alg.label().to_string(),
+            fmt_secs(mean),
+            fmt_speedup(naive, mean),
+            format!("{} KiB", r.index_bytes() / 1024),
+        ]);
+    }
+    print_table(
+        "org chart — 50-query workload, 5 entities/query",
+        &["algorithm", "time_s", "speedup", "index"],
+        &rows,
+    );
+
+    // One full pipeline answer.
+    let mut pipeline = RagPipeline::build(
+        forest,
+        corpus_from_texts(&ds.documents()),
+        Arc::new(NativeEngine::new()),
+        RagConfig::default(),
+    )
+    .expect("pipeline");
+    let q = "describe the hierarchy around protection division";
+    let resp = pipeline.answer(q).expect("answer");
+    println!("\nQ: {q}");
+    println!(
+        "   {} facts from {} entities in {:?}",
+        resp.context.len(),
+        resp.entities.len(),
+        resp.retrieval_time
+    );
+    let preview: String = resp.answer.text.chars().take(400).collect();
+    println!("A: {preview}...");
+}

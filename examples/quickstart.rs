@@ -1,0 +1,73 @@
+//! Quickstart: build a small entity forest, index it with the improved
+//! Cuckoo Filter, retrieve an entity's addresses, and print its
+//! hierarchical context — the paper's core loop in ~50 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use cft_rag::forest::{builder::build_trees, Forest};
+use cft_rag::retrieval::context::generate_context;
+use cft_rag::retrieval::cuckoo_rag::CuckooTRag;
+use cft_rag::retrieval::Retriever;
+
+fn main() {
+    // 1. Knowledge: (child, parent) relations from two organizations.
+    let mut forest = Forest::new();
+    build_trees(
+        &mut forest,
+        &[
+            rel("cardiology", "mercy hospital"),
+            rel("surgery", "mercy hospital"),
+            rel("icu", "cardiology"),
+            rel("recovery ward", "surgery"),
+        ],
+    );
+    build_trees(
+        &mut forest,
+        &[
+            rel("cardiology", "riverside clinic"),
+            rel("day unit", "cardiology"),
+        ],
+    );
+    let forest = Arc::new(forest);
+    let stats = forest.stats();
+    println!(
+        "forest: {} trees, {} nodes, {} distinct entities",
+        stats.trees, stats.nodes, stats.distinct_entities
+    );
+
+    // 2. Index with the paper's Cuckoo Filter (temperature + block lists).
+    let mut retriever = CuckooTRag::new(forest.clone());
+
+    // 3. One O(1) lookup returns every address across the forest.
+    let addresses = retriever.find("cardiology");
+    println!("\n'cardiology' occurs at {} addresses:", addresses.len());
+    for a in &addresses {
+        println!("  tree {} node {}", a.tree, a.node);
+    }
+
+    // 4. Algorithm 3: n-level hierarchical context.
+    let context = generate_context(&forest, "cardiology", &addresses, 2);
+    println!("\ncontext ({} facts):", context.len());
+    print!("{}", context.render());
+
+    // 5. Temperatures: repeated lookups promote the entity in its bucket.
+    for _ in 0..5 {
+        retriever.find("cardiology");
+    }
+    retriever.maintain();
+    println!(
+        "\ncardiology temperature: {:?} (bucket position {:?})",
+        retriever
+            .filter()
+            .temperature(cft_rag::filter::entity_key("cardiology")),
+        retriever
+            .filter()
+            .bucket_position(cft_rag::filter::entity_key("cardiology")),
+    );
+}
+
+fn rel(c: &str, p: &str) -> (String, String) {
+    (c.to_string(), p.to_string())
+}

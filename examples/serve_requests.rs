@@ -1,0 +1,194 @@
+//! **End-to-end serving driver** (EXPERIMENTS.md §E2E): load the AOT
+//! artifacts on the PJRT CPU client, start the coordinator, replay a
+//! batched query workload against the hospital knowledge base, and
+//! report latency/throughput/accuracy — proving all three layers
+//! compose: Pallas kernels → JAX graphs → HLO artifacts → Rust runtime →
+//! coordinator.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_requests`
+//! Flags: --trees N --requests N --workers N --native (skip artifacts)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use cft_rag::coordinator::{Coordinator, CoordinatorConfig};
+use cft_rag::data::corpus::corpus_from_texts;
+use cft_rag::data::hospital::{HospitalConfig, HospitalDataset};
+use cft_rag::data::workload::{Workload, WorkloadConfig};
+use cft_rag::llm::judge::{judge, Judgement};
+use cft_rag::rag::config::RagConfig;
+use cft_rag::runtime::engine::{Engine, NativeEngine, PjrtEngine};
+use cft_rag::runtime::default_dir;
+use cft_rag::util::cli::{spec, Args};
+use cft_rag::util::stats::Summary;
+
+fn main() {
+    let args = Args::from_env(vec![
+        spec("trees", "hospital tree count", Some("100"), false),
+        spec("requests", "total queries to serve", Some("256"), false),
+        spec("workers", "coordinator workers", Some("4"), false),
+        spec("pool", "PJRT runtime pool size", Some("1"), false),
+        spec("native", "use the native engine instead of PJRT", None, true),
+        spec("trace-out", "record the workload to a JSON trace file", None, false),
+        spec("trace-in", "replay a recorded JSON trace (paced by offsets)", None, false),
+    ])
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    if args.wants_help() {
+        println!("{}", args.usage());
+        return;
+    }
+
+    // ---- dataset + forest ----
+    let trees = args.num_or("trees", 100usize);
+    let ds = HospitalDataset::generate(HospitalConfig {
+        trees,
+        ..HospitalConfig::default()
+    });
+    let forest = Arc::new(ds.build_forest());
+    let stats = forest.stats();
+    println!(
+        "forest: {} trees, {} nodes, {} distinct entities, depth {}",
+        stats.trees, stats.nodes, stats.distinct_entities, stats.max_depth
+    );
+
+    // ---- engine: PJRT artifacts (the real path) or native fallback ----
+    // Pool default 1: the PJRT CPU client parallelizes executions
+    // internally; extra clients oversubscribe cores (§Perf iteration 3,
+    // measured slower at pool=4).
+    let pool = args.num_or("pool", 1usize);
+    let engine: Arc<dyn Engine> = if args.flag("native") {
+        println!("engine: native-rust (requested)");
+        Arc::new(NativeEngine::new())
+    } else {
+        match PjrtEngine::with_pool(default_dir(), pool) {
+            Ok(e) => {
+                println!("engine: pjrt-cpu (pool of {})", e.pool_size());
+                Arc::new(e)
+            }
+            Err(e) => {
+                println!("engine: native-rust (PJRT unavailable: {e})");
+                Arc::new(NativeEngine::new())
+            }
+        }
+    };
+    let backend = engine.backend();
+
+    // ---- coordinator ----
+    let coordinator = Coordinator::start(
+        forest.clone(),
+        corpus_from_texts(&ds.documents()),
+        engine,
+        RagConfig::default(),
+        CoordinatorConfig {
+            workers: args.num_or("workers", 4),
+            ..Default::default()
+        },
+    )
+    .expect("coordinator start");
+
+    // ---- workload ----
+    let n_requests = args.num_or("requests", 256usize);
+    let workload = Workload::generate(
+        &forest,
+        WorkloadConfig {
+            entities_per_query: 5,
+            queries: n_requests,
+            ..Default::default()
+        },
+    );
+
+    // ---- optional trace record / replay ----
+    use cft_rag::data::trace::QueryTrace;
+    if let Some(path) = args.get("trace-out") {
+        QueryTrace::from_workload(&workload, 0.0)
+            .save(path)
+            .expect("write trace");
+        println!("recorded trace to {path}");
+    }
+    let trace: Option<QueryTrace> = args
+        .get("trace-in")
+        .map(|p| QueryTrace::load(p).expect("read trace"));
+
+    // ---- replay: submit requests (paced if a trace provides offsets),
+    //      then collect ----
+    println!("\nserving {n_requests} requests on backend {backend}...");
+    let t0 = Instant::now();
+    let rxs: Vec<_> = match &trace {
+        Some(t) => t
+            .records
+            .iter()
+            .zip(workload.queries.iter().cycle())
+            .map(|(rec, q)| {
+                let due = std::time::Duration::from_micros(rec.offset_us);
+                if let Some(wait) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(wait);
+                }
+                (coordinator.submit(&rec.query), q)
+            })
+            .collect(),
+        None => workload
+            .queries
+            .iter()
+            .map(|q| (coordinator.submit(&q.text), q))
+            .collect(),
+    };
+
+    let mut latencies = Vec::with_capacity(n_requests);
+    let mut retrievals = Vec::with_capacity(n_requests);
+    let mut judgement = Judgement::default();
+    let mut failures = 0usize;
+    for (rx, q) in rxs {
+        match rx.recv().expect("response") {
+            Ok(resp) => {
+                latencies.push(resp.total_time.as_secs_f64());
+                retrievals.push(resp.retrieval_time.as_secs_f64());
+                judgement.merge(judge(&resp.answer, &q.gold));
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("request failed: {e}");
+            }
+        }
+    }
+    let wall = t0.elapsed();
+
+    // ---- report ----
+    let lat = Summary::of(&latencies);
+    let ret = Summary::of(&retrievals);
+    let snap = coordinator.metrics().snapshot();
+    println!("\n== E2E serving report ({backend}) ==");
+    println!("requests:        {n_requests} ({failures} failures)");
+    println!("wall time:       {:.3}s", wall.as_secs_f64());
+    println!(
+        "throughput:      {:.1} req/s",
+        n_requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency (ms):    mean {:.2}  p50 {:.2}  p90 {:.2}  p99 {:.2}",
+        lat.mean * 1e3,
+        lat.p50 * 1e3,
+        lat.p90 * 1e3,
+        lat.p99 * 1e3
+    );
+    println!(
+        "retrieval (us):  mean {:.1}  p50 {:.1}  p99 {:.1}",
+        ret.mean * 1e6,
+        ret.p50 * 1e6,
+        ret.p99 * 1e6
+    );
+    println!(
+        "batching:        {} batches, mean fill {:.2}",
+        snap.batches, snap.mean_batch_fill
+    );
+    println!(
+        "answer accuracy: {:.2}% ({}/{} gold facts)",
+        judgement.accuracy() * 100.0,
+        judgement.gold_recalled,
+        judgement.gold_total
+    );
+
+    coordinator.shutdown();
+}

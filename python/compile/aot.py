@@ -1,0 +1,101 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+Run once by ``make artifacts``; Python never runs at serve time. The Rust
+runtime loads these with ``HloModuleProto::from_text_file`` and compiles
+them on the PJRT CPU client.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids, so text round-trips cleanly. Lowering goes
+through ``return_tuple=True`` so every artifact's output is a 1-tuple the
+Rust side unwraps with ``to_tuple1()``.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text via stablehlo.
+
+    ``as_hlo_text(True)`` = print_large_constants: the embedder's
+    FREQ/PHASE/GAMMA weight vectors must be materialized in the text, or
+    the parser on the Rust side reads them back as zeros.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "large constants were elided from HLO text"
+    return text
+
+
+# artifact name -> (fn, example-arg specs)
+ARTIFACTS = {
+    "embed": (model.embed, model.embed_specs),
+    "score": (model.score, model.score_specs),
+    "rank": (model.rank, model.rank_specs),
+}
+
+
+def build_manifest() -> dict:
+    """Shape/dtype manifest consumed by rust/src/runtime/artifact.rs."""
+    return {
+        "version": 1,
+        "embed_dim": model.EMBED_DIM,
+        "max_tokens": model.MAX_TOKENS,
+        "shard_docs": model.SHARD_DOCS,
+        "max_facts": model.MAX_FACTS,
+        "batch": model.BATCH,
+        "pad_id": model.PAD_ID,
+        "artifacts": {
+            name: {
+                "file": f"{name}.hlo.txt",
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": s.dtype.name}
+                    for s in specs()
+                ],
+            }
+            for name, (_, specs) in ARTIFACTS.items()
+        },
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated artifact names"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    for name, (fn, specs) in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs())
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(build_manifest(), f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for CFT-RAG's neural compute.
+
+Three kernels back the request-path artifacts:
+
+* :mod:`similarity` — tiled query x corpus similarity matmul (vector search).
+* :mod:`attention`  — single-head masked attention weights (fact re-ranking).
+* :mod:`layernorm`  — fused layer-norm (embedder output head).
+
+All kernels are lowered with ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); their *structure* — BlockSpec tiling, VMEM
+footprint, MXU-aligned tiles — is designed for TPU per DESIGN.md
+§Hardware-Adaptation. Pure-jnp oracles live in :mod:`ref` and every kernel
+is pytest/hypothesis-checked against them.
+"""
+
+from . import ref  # noqa: F401
+from .similarity import similarity_scores  # noqa: F401
+from .attention import attention_weights  # noqa: F401
+from .layernorm import layer_norm  # noqa: F401

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: masked single-head attention weights for fact ranking.
+
+The generator stage of CFT-RAG ranks the retrieved hierarchy facts by
+relevance to the query before filling the answer template. Ranking is a
+single-head scaled dot-product attention: ``softmax(q . K^T / sqrt(D))``
+with padding positions masked out. The artifact ships weights back to Rust,
+which orders facts by weight.
+
+TPU mapping: one request's (L, D) key tile fits VMEM outright
+(L=64, D=64, f32 => 16 KiB), so the grid is over the batch dimension and
+softmax is fused in-kernel — logits never round-trip to HBM, the exact
+"keep the reduction in shared memory" trick a CUDA flash-attention port
+would use, expressed with a BlockSpec instead of a threadblock.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, keys_ref, lens_ref, out_ref):
+    """One grid step: full masked-softmax attention row for one request."""
+    q = q_ref[...].astype(jnp.float32)        # [1, D]
+    keys = keys_ref[...].astype(jnp.float32)  # [1, L, D]
+    ln = lens_ref[...]                        # [1] int32
+    d = q.shape[-1]
+    logits = jnp.einsum("bd,bld->bl", q, keys) / jnp.sqrt(jnp.float32(d))
+    mask = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1) < ln[:, None]
+    logits = jnp.where(mask, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    w = jnp.exp(logits - m)
+    w = jnp.where(mask, w, 0.0)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+    out_ref[...] = jnp.where(denom > 0.0, w / jnp.maximum(denom, 1e-30), 0.0)
+
+
+@jax.jit
+def attention_weights(q, keys, lens):
+    """Masked attention weights of each query over its (padded) fact keys.
+
+    Args:
+      q:    [B, D] float — per-request query embeddings.
+      keys: [B, L, D] float — per-request fact keys, zero-padded to L.
+      lens: [B] int32 — valid fact count per request.
+
+    Returns:
+      [B, L] float32 — attention weights; padding positions exactly 0,
+      all-zero rows for requests with lens == 0.
+    """
+    b, d = q.shape
+    b2, l, d2 = keys.shape
+    assert (b, d) == (b2, d2), f"shape mismatch q={q.shape} keys={keys.shape}"
+    return pl.pallas_call(
+        _attention_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, l, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, keys, lens.astype(jnp.int32))

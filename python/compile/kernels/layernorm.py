@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: fused layer-norm (mean/var/normalize/affine, one pass).
+
+Used as the output head of the embedder (model.embed). Fusing the three
+reductions plus the affine into one VMEM-resident pass avoids materializing
+mean/var to HBM — the standard fused-layernorm structure.
+
+TPU mapping: a (block_b, D) tile per grid step; D=64 keeps a tile at
+block_b=8 to 2 KiB, so the grid only exists to scale to larger batches.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, gamma_ref, beta_ref, out_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)        # [block_b, D]
+    gamma = gamma_ref[...].astype(jnp.float32)  # [D]
+    beta = beta_ref[...].astype(jnp.float32)    # [D]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    centered = x - mean
+    var = jnp.mean(centered * centered, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    out_ref[...] = centered * inv * gamma + beta
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "eps"))
+def layer_norm(x, gamma, beta, *, eps=1e-5, block_b=8):
+    """Fused layer-norm over the last axis.
+
+    Args:
+      x:     [B, D] float.
+      gamma: [D] float scale.
+      beta:  [D] float shift.
+
+    Returns:
+      [B, D] float32.
+    """
+    b, d = x.shape
+    if b < block_b:
+        block_b = b
+    assert b % block_b == 0, f"B={b} not divisible by block_b={block_b}"
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, gamma, beta)

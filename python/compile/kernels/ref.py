@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: no Pallas, no tiling, just the
+mathematical definition. pytest/hypothesis sweeps shapes and dtypes and
+asserts the kernels match these within tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def similarity_scores_ref(q, docs):
+    """Similarity scores between query vectors and document vectors.
+
+    Args:
+      q:    [B, D] float — (normalized) query embeddings.
+      docs: [N, D] float — (normalized) document embeddings.
+
+    Returns:
+      [B, N] float32 — dot-product scores (cosine if inputs normalized).
+    """
+    return jnp.dot(q.astype(jnp.float32), docs.astype(jnp.float32).T)
+
+
+def attention_weights_ref(q, keys, lens):
+    """Masked single-head attention weights of each query over its facts.
+
+    Args:
+      q:    [B, D] float — per-request query embedding.
+      keys: [B, L, D] float — per-request fact-key matrix (zero padded).
+      lens: [B] int32 — number of valid facts per request (<= L).
+
+    Returns:
+      [B, L] float32 — softmax(q . K^T / sqrt(D)) with positions >= lens
+      masked to exactly 0. Rows with lens == 0 return all zeros.
+    """
+    q = q.astype(jnp.float32)
+    keys = keys.astype(jnp.float32)
+    d = q.shape[-1]
+    logits = jnp.einsum("bd,bld->bl", q, keys) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.arange(keys.shape[1])[None, :] < lens[:, None]
+    logits = jnp.where(mask, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    w = jnp.exp(logits - m)
+    w = jnp.where(mask, w, 0.0)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.where(denom > 0.0, w / jnp.maximum(denom, 1e-30), 0.0)
+
+
+def layer_norm_ref(x, gamma, beta, eps=1e-5):
+    """Layer norm over the last axis.
+
+    Args:
+      x:     [B, D] float.
+      gamma: [D] float — scale.
+      beta:  [D] float — shift.
+
+    Returns:
+      [B, D] float32.
+    """
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta

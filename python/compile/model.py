@@ -1,0 +1,128 @@
+"""L2: the JAX compute graphs behind the request-path artifacts.
+
+Three graphs, each AOT-lowered once by :mod:`compile.aot`:
+
+* :func:`embed`  — token ids -> L2-normalized sentence embedding. Uses a
+  deterministic *random-feature* token embedding (sinusoidal features of
+  the hashed token id) so no multi-MiB table has to be baked into HLO
+  text; mean-pools over non-padding tokens; finishes with the fused
+  Pallas layer-norm and an L2 normalize. Bag-of-words random projection:
+  cosine similarity between outputs approximates token overlap, which is
+  exactly what deterministic vector search needs.
+* :func:`score`  — Pallas tiled similarity matmul of queries vs a corpus
+  shard (see kernels.similarity).
+* :func:`rank`   — Pallas masked attention weights of queries over their
+  retrieved facts (see kernels.attention).
+
+Everything is shape-static at lowering time; the Rust coordinator batches
+requests up to the artifact batch size and pads.
+
+Python never runs at serve time: these functions exist only to be lowered.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.similarity import similarity_scores
+from .kernels.attention import attention_weights
+from .kernels.layernorm import layer_norm
+
+# ---------------------------------------------------------------------------
+# Fixed model hyperparameters (must match rust/src/runtime/artifact.rs).
+# ---------------------------------------------------------------------------
+EMBED_DIM = 64          # D: embedding dimension
+MAX_TOKENS = 32         # L_tok: tokens per text (padded/truncated)
+SHARD_DOCS = 1024       # N: corpus shard size for the score artifact
+MAX_FACTS = 64          # L_fact: facts per request for the rank artifact
+BATCH = 8               # B: artifact batch size
+PAD_ID = 0              # token id reserved for padding
+
+# Deterministic feature constants, generated once at import from a fixed
+# seed; they are baked into the HLO as ~KiB-scale constants.
+_key = jax.random.PRNGKey(20_25)
+_k_freq, _k_phase, _k_gamma = jax.random.split(_key, 3)
+FREQ = jax.random.uniform(_k_freq, (EMBED_DIM,), jnp.float32, 0.05, 2.0)
+PHASE = jax.random.uniform(_k_phase, (EMBED_DIM,), jnp.float32, 0.0, 6.2831853)
+GAMMA = 1.0 + 0.1 * jax.random.normal(_k_gamma, (EMBED_DIM,), jnp.float32)
+BETA = jnp.zeros((EMBED_DIM,), jnp.float32)
+
+
+def token_features(ids):
+    """Deterministic random-feature embedding of token ids.
+
+    Args:
+      ids: [...] int32 hashed token ids (PAD_ID = padding).
+
+    Returns:
+      [..., EMBED_DIM] float32 — near-orthogonal unit-scale features per id.
+    """
+    x = ids.astype(jnp.float32)[..., None]  # [..., 1]
+    # sin(id * freq + phase): distinct ids land on effectively independent
+    # phases, giving random-projection behaviour without a lookup table.
+    return jnp.sin(x * FREQ + PHASE)
+
+
+def embed(tokens):
+    """Token ids -> L2-normalized sentence embeddings.
+
+    Args:
+      tokens: [B, MAX_TOKENS] int32, PAD_ID-padded.
+
+    Returns:
+      [B, EMBED_DIM] float32, unit L2 norm (zero rows for empty inputs).
+    """
+    feats = token_features(tokens)                      # [B, L, D]
+    mask = (tokens != PAD_ID).astype(jnp.float32)       # [B, L]
+    summed = jnp.einsum("bld,bl->bd", feats, mask)
+    count = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+    pooled = summed / count                             # [B, D] mean pool
+    normed = layer_norm(pooled, GAMMA, BETA)            # fused Pallas LN
+    norm = jnp.sqrt(jnp.sum(normed * normed, axis=-1, keepdims=True))
+    return normed / jnp.maximum(norm, 1e-12)
+
+
+def score(q, docs):
+    """Similarity scores of query embeddings vs one corpus shard.
+
+    Args:
+      q:    [B, EMBED_DIM] float32.
+      docs: [SHARD_DOCS, EMBED_DIM] float32.
+
+    Returns:
+      [B, SHARD_DOCS] float32.
+    """
+    return similarity_scores(q, docs)
+
+
+def rank(q, facts, lens):
+    """Attention weights of each query over its retrieved facts.
+
+    Args:
+      q:     [B, EMBED_DIM] float32 query embeddings.
+      facts: [B, MAX_FACTS, EMBED_DIM] float32 fact embeddings, zero padded.
+      lens:  [B] int32 valid-fact counts.
+
+    Returns:
+      [B, MAX_FACTS] float32 weights.
+    """
+    return attention_weights(q, facts, lens)
+
+
+# Example input specs for AOT lowering (shape/dtype only, no data).
+def embed_specs():
+    return (jax.ShapeDtypeStruct((BATCH, MAX_TOKENS), jnp.int32),)
+
+
+def score_specs():
+    return (
+        jax.ShapeDtypeStruct((BATCH, EMBED_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((SHARD_DOCS, EMBED_DIM), jnp.float32),
+    )
+
+
+def rank_specs():
+    return (
+        jax.ShapeDtypeStruct((BATCH, EMBED_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((BATCH, MAX_FACTS, EMBED_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((BATCH,), jnp.int32),
+    )

@@ -1,0 +1,61 @@
+"""AOT lowering path tests: HLO text integrity + manifest contract.
+
+Guards the build-path bug class that silently zeroes weights: the default
+HLO printer elides >KiB constants to `{...}`, which the Rust-side text
+parser reads back as zeros (caught live during bring-up — see
+EXPERIMENTS.md §Perf L2 notes).
+"""
+
+import json
+
+import jax
+
+from compile import aot, model
+
+
+def test_hlo_text_materializes_large_constants():
+    for name, (fn, specs) in aot.ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*specs())
+        text = aot.to_hlo_text(lowered)
+        assert "{...}" not in text, f"{name}: constants elided"
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+
+
+def test_embed_hlo_contains_weight_vectors():
+    lowered = jax.jit(model.embed).lower(*model.embed_specs())
+    text = aot.to_hlo_text(lowered)
+    # the FREQ vector's first element must appear literally in the text
+    first_freq = float(model.FREQ[0])
+    assert f"{first_freq:.6g}"[:6] in text.replace(" ", ""), (
+        "FREQ constants not materialized in HLO text"
+    )
+
+
+def test_manifest_matches_model_constants():
+    m = aot.build_manifest()
+    assert m["embed_dim"] == model.EMBED_DIM
+    assert m["max_tokens"] == model.MAX_TOKENS
+    assert m["shard_docs"] == model.SHARD_DOCS
+    assert m["max_facts"] == model.MAX_FACTS
+    assert m["batch"] == model.BATCH
+    assert m["pad_id"] == model.PAD_ID
+    # round-trips through json
+    assert json.loads(json.dumps(m)) == m
+    # every artifact declares its input shapes
+    for name in ("embed", "score", "rank"):
+        inputs = m["artifacts"][name]["inputs"]
+        assert all(len(i["shape"]) >= 1 for i in inputs)
+
+
+def test_artifact_entry_shapes():
+    m = aot.build_manifest()
+    assert m["artifacts"]["embed"]["inputs"][0]["shape"] == [
+        model.BATCH,
+        model.MAX_TOKENS,
+    ]
+    assert m["artifacts"]["embed"]["inputs"][0]["dtype"] == "int32"
+    assert m["artifacts"]["score"]["inputs"][1]["shape"] == [
+        model.SHARD_DOCS,
+        model.EMBED_DIM,
+    ]
+    assert m["artifacts"]["rank"]["inputs"][2]["shape"] == [model.BATCH]

@@ -1,0 +1,168 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes and dtypes of every Pallas kernel against the
+pure-jnp references in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.similarity import similarity_scores
+from compile.kernels.attention import attention_weights
+from compile.kernels.layernorm import layer_norm
+
+jax.config.update("jax_platform_name", "cpu")
+
+FLOAT_DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _arr(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# similarity
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 12),
+    d=st.sampled_from([8, 32, 64, 96]),
+    nblocks=st.integers(1, 5),
+    block_n=st.sampled_from([16, 64, 256]),
+    dtype_i=st.integers(0, len(FLOAT_DTYPES) - 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_similarity_matches_ref(b, d, nblocks, block_n, dtype_i, seed):
+    rng = np.random.default_rng(seed)
+    dtype = FLOAT_DTYPES[dtype_i]
+    n = nblocks * block_n
+    q = _arr(rng, (b, d), dtype)
+    docs = _arr(rng, (n, d), dtype)
+    got = similarity_scores(q, docs, block_n=block_n)
+    want = ref.similarity_scores_ref(q, docs)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_similarity_block_larger_than_n():
+    rng = np.random.default_rng(0)
+    q = _arr(rng, (4, 16), jnp.float32)
+    docs = _arr(rng, (32, 16), jnp.float32)
+    got = similarity_scores(q, docs, block_n=256)  # clamps to N
+    np.testing.assert_allclose(
+        got, ref.similarity_scores_ref(q, docs), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_similarity_rejects_dim_mismatch():
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError):
+        similarity_scores(
+            _arr(rng, (2, 8), jnp.float32), _arr(rng, (16, 4), jnp.float32)
+        )
+
+
+def test_similarity_identity_cosine():
+    """Normalized vectors scored against themselves give 1.0 diagonals."""
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((8, 64)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    got = np.asarray(similarity_scores(jnp.asarray(x), jnp.asarray(x)))
+    np.testing.assert_allclose(np.diag(got), np.ones(8), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 10),
+    l=st.sampled_from([4, 16, 64]),
+    d=st.sampled_from([8, 64]),
+    dtype_i=st.integers(0, len(FLOAT_DTYPES) - 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, l, d, dtype_i, seed):
+    rng = np.random.default_rng(seed)
+    dtype = FLOAT_DTYPES[dtype_i]
+    q = _arr(rng, (b, d), dtype)
+    keys = _arr(rng, (b, l, d), dtype)
+    lens = jnp.asarray(rng.integers(0, l + 1, size=(b,)), jnp.int32)
+    got = attention_weights(q, keys, lens)
+    want = ref.attention_weights_ref(q, keys, lens)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 8), l=st.sampled_from([8, 64]), seed=st.integers(0, 2**31 - 1))
+def test_attention_rows_sum_to_one(b, l, seed):
+    rng = np.random.default_rng(seed)
+    q = _arr(rng, (b, 32), jnp.float32)
+    keys = _arr(rng, (b, l, 32), jnp.float32)
+    lens = jnp.asarray(rng.integers(1, l + 1, size=(b,)), jnp.int32)
+    w = np.asarray(attention_weights(q, keys, lens))
+    np.testing.assert_allclose(w.sum(axis=-1), np.ones(b), rtol=1e-5, atol=1e-5)
+    # padding positions exactly zero
+    for i in range(b):
+        assert (w[i, int(lens[i]):] == 0).all()
+
+
+def test_attention_zero_len_rows_are_zero():
+    rng = np.random.default_rng(3)
+    q = _arr(rng, (4, 16), jnp.float32)
+    keys = _arr(rng, (4, 8, 16), jnp.float32)
+    lens = jnp.asarray([0, 3, 0, 8], jnp.int32)
+    w = np.asarray(attention_weights(q, keys, lens))
+    assert (w[0] == 0).all() and (w[2] == 0).all()
+    np.testing.assert_allclose(w[[1, 3]].sum(-1), [1.0, 1.0], rtol=1e-5)
+
+
+def test_attention_prefers_aligned_key():
+    """The key equal to the query must get the largest weight."""
+    rng = np.random.default_rng(4)
+    q = rng.standard_normal((1, 32)).astype(np.float32) * 3
+    keys = rng.standard_normal((1, 8, 32)).astype(np.float32)
+    keys[0, 5] = q[0]
+    w = np.asarray(
+        attention_weights(jnp.asarray(q), jnp.asarray(keys), jnp.asarray([8]))
+    )
+    assert w[0].argmax() == 5
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 16),
+    d=st.sampled_from([8, 64, 128]),
+    block_b=st.sampled_from([1, 2, 8]),
+    dtype_i=st.integers(0, len(FLOAT_DTYPES) - 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(b, d, block_b, dtype_i, seed):
+    rng = np.random.default_rng(seed)
+    dtype = FLOAT_DTYPES[dtype_i]
+    if b % min(block_b, b) != 0:
+        b = block_b * max(1, b // block_b)
+    x = _arr(rng, (b, d), dtype)
+    gamma = _arr(rng, (d,), jnp.float32)
+    beta = _arr(rng, (d,), jnp.float32)
+    got = layer_norm(x, gamma, beta, block_b=block_b)
+    want = ref.layer_norm_ref(x, gamma, beta)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_layernorm_unit_stats():
+    """gamma=1, beta=0 output has ~zero mean, ~unit variance per row."""
+    rng = np.random.default_rng(5)
+    x = _arr(rng, (8, 64), jnp.float32) * 10 + 3
+    out = np.asarray(layer_norm(x, jnp.ones(64), jnp.zeros(64)))
+    np.testing.assert_allclose(out.mean(axis=-1), np.zeros(8), atol=1e-5)
+    np.testing.assert_allclose(out.var(axis=-1), np.ones(8), rtol=1e-3)

@@ -1,0 +1,88 @@
+"""L2 model graph tests: shapes, determinism, retrieval semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def _tok(rng, b):
+    """Random padded token batch."""
+    lens = rng.integers(1, model.MAX_TOKENS + 1, size=b)
+    out = np.zeros((b, model.MAX_TOKENS), np.int32)
+    for i, ln in enumerate(lens):
+        out[i, :ln] = rng.integers(1, 50_000, size=ln)
+    return jnp.asarray(out)
+
+
+def test_embed_shape_and_norm():
+    rng = np.random.default_rng(0)
+    tokens = _tok(rng, model.BATCH)
+    e = np.asarray(model.embed(tokens))
+    assert e.shape == (model.BATCH, model.EMBED_DIM)
+    np.testing.assert_allclose(
+        np.linalg.norm(e, axis=1), np.ones(model.BATCH), rtol=1e-5
+    )
+
+
+def test_embed_deterministic():
+    rng = np.random.default_rng(1)
+    tokens = _tok(rng, 4)
+    a = np.asarray(model.embed(tokens))
+    b = np.asarray(model.embed(tokens))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_embed_token_order_invariant_up_to_count():
+    """Mean pooling => same multiset of tokens embeds identically."""
+    ids = np.zeros((2, model.MAX_TOKENS), np.int32)
+    ids[0, :3] = [7, 11, 13]
+    ids[1, :3] = [13, 7, 11]
+    e = np.asarray(model.embed(jnp.asarray(ids)))
+    np.testing.assert_allclose(e[0], e[1], rtol=1e-5, atol=1e-6)
+
+
+def test_embed_similarity_tracks_token_overlap():
+    """More shared tokens => higher cosine similarity."""
+    base = [5, 9, 21, 33, 47, 60]
+    rows = np.zeros((3, model.MAX_TOKENS), np.int32)
+    rows[0, :6] = base
+    rows[1, :6] = base[:4] + [900, 901]        # 4/6 overlap
+    rows[2, :6] = [700, 701, 702, 703, 704, 705]  # disjoint
+    e = np.asarray(model.embed(jnp.asarray(rows)))
+    sim_close = float(e[0] @ e[1])
+    sim_far = float(e[0] @ e[2])
+    assert sim_close > sim_far + 0.2
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_score_top1_is_self(seed):
+    """A doc queried against a shard containing it ranks itself first."""
+    rng = np.random.default_rng(seed)
+    docs = rng.standard_normal((model.SHARD_DOCS, model.EMBED_DIM)).astype(
+        np.float32
+    )
+    docs /= np.linalg.norm(docs, axis=1, keepdims=True)
+    idx = rng.integers(0, model.SHARD_DOCS, size=model.BATCH)
+    q = docs[idx]
+    s = np.asarray(model.score(jnp.asarray(q), jnp.asarray(docs)))
+    assert s.shape == (model.BATCH, model.SHARD_DOCS)
+    np.testing.assert_array_equal(s.argmax(axis=1), idx)
+
+
+def test_rank_shapes_and_mask():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((model.BATCH, model.EMBED_DIM)), jnp.float32)
+    facts = jnp.asarray(
+        rng.standard_normal((model.BATCH, model.MAX_FACTS, model.EMBED_DIM)),
+        jnp.float32,
+    )
+    lens = jnp.asarray([0, 1, 5, 64, 10, 2, 7, 33], jnp.int32)
+    w = np.asarray(model.rank(q, facts, lens))
+    assert w.shape == (model.BATCH, model.MAX_FACTS)
+    for i, ln in enumerate([0, 1, 5, 64, 10, 2, 7, 33]):
+        assert (w[i, ln:] == 0).all()
+        if ln:
+            np.testing.assert_allclose(w[i].sum(), 1.0, rtol=1e-5)

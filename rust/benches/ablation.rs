@@ -1,0 +1,35 @@
+//! Design-choice ablations beyond Figure 5: bucket slots {2,4,8} x
+//! fingerprint bits {8,12,16} x sorting {on,off} — retrieval time and
+//! index memory (DESIGN.md per-experiment index).
+//!
+//! Run: `cargo bench --bench ablation`. Writes `results/ablation.csv`.
+
+use cft_rag::bench::experiments::{ablation, ExperimentConfig};
+use cft_rag::util::cli::{spec, Args};
+
+fn main() {
+    let args = Args::from_env(vec![
+        spec("trees", "tree count", Some("300"), false),
+        spec("queries", "queries per workload", Some("100"), false),
+        spec("repeats", "timed repeats", Some("10"), false),
+        spec("out", "CSV output path", Some("results/ablation.csv"), false),
+        spec("bench", "ignored (cargo bench passes it)", None, true),
+    ])
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    if args.wants_help() {
+        println!("{}", args.usage());
+        return;
+    }
+    let cfg = ExperimentConfig {
+        queries: args.num_or("queries", 100),
+        repeats: args.num_or("repeats", 10),
+        ..ExperimentConfig::default()
+    };
+    let csv = ablation(cfg, args.num_or("trees", 300));
+    let out = args.str_or("out", "results/ablation.csv");
+    csv.write_to(&out).expect("write csv");
+    println!("\nwrote {out}");
+}

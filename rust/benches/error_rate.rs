@@ -1,0 +1,34 @@
+//! Reproduces the **§4.5.1 error analysis**: 1024-bucket x 4-slot filter,
+//! entity counts swept through the paper's 3,148 (load 0.7686), counting
+//! fingerprint-collision shadowing and foreign false positives.
+//!
+//! Run: `cargo bench --bench error_rate`. Writes `results/error_rate.csv`.
+
+use cft_rag::bench::experiments::error_rate;
+use cft_rag::util::cli::{spec, Args};
+
+fn main() {
+    let args = Args::from_env(vec![
+        spec(
+            "entities",
+            "comma-separated entity counts",
+            Some("500,1000,2000,3148,3900"),
+            false,
+        ),
+        spec("out", "CSV output path", Some("results/error_rate.csv"), false),
+        spec("bench", "ignored (cargo bench passes it)", None, true),
+    ])
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    if args.wants_help() {
+        println!("{}", args.usage());
+        return;
+    }
+    let counts: Vec<usize> = args.list_or("entities", &[500, 1000, 2000, 3148, 3900]);
+    let csv = error_rate(&counts);
+    let out = args.str_or("out", "results/error_rate.csv");
+    csv.write_to(&out).expect("write csv");
+    println!("\nwrote {out}");
+}

@@ -1,0 +1,36 @@
+//! Reproduces **Figure 5**: CF T-RAG search time per query round for
+//! several (trees, entities) settings — the temperature-sorting ablation
+//! (§4.5.2). Round 1 is cold; later rounds benefit from bucket sorting.
+//!
+//! Run: `cargo bench --bench fig5`. Writes `results/fig5.csv`.
+
+use cft_rag::bench::experiments::{fig5, ExperimentConfig};
+use cft_rag::util::cli::{spec, Args};
+
+fn main() {
+    let args = Args::from_env(vec![
+        spec("rounds", "query rounds", Some("10"), false),
+        spec("queries", "queries per round", Some("100"), false),
+        spec("repeats", "timed repeats per round", Some("10"), false),
+        spec("out", "CSV output path", Some("results/fig5.csv"), false),
+        spec("bench", "ignored (cargo bench passes it)", None, true),
+    ])
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    if args.wants_help() {
+        println!("{}", args.usage());
+        return;
+    }
+    let cfg = ExperimentConfig {
+        queries: args.num_or("queries", 100),
+        repeats: args.num_or("repeats", 10),
+        ..ExperimentConfig::default()
+    };
+    let settings = [(300usize, 5usize), (300, 10), (600, 5), (600, 10)];
+    let csv = fig5(cfg, &settings, args.num_or("rounds", 10));
+    let out = args.str_or("out", "results/fig5.csv");
+    csv.write_to(&out).expect("write csv");
+    println!("\nwrote {out}");
+}

@@ -1,0 +1,160 @@
+//! Filter micro-benchmarks: insert / lookup / delete ops per second for
+//! the improved Cuckoo Filter vs Bloom filter vs std HashMap index —
+//! the raw data-structure numbers behind the Table 1/2 system results.
+//!
+//! Run: `cargo bench --bench filters`. Writes `results/filters.csv`.
+
+use std::collections::HashMap;
+
+use cft_rag::bench::harness::{bench, print_table};
+use cft_rag::filter::bloom::BloomFilter;
+use cft_rag::filter::cuckoo::{CuckooConfig, CuckooFilter};
+use cft_rag::filter::fingerprint::entity_key;
+use cft_rag::forest::EntityAddress;
+use cft_rag::util::cli::{spec, Args};
+use cft_rag::util::csv::CsvTable;
+
+fn main() {
+    let args = Args::from_env(vec![
+        spec("n", "entities", Some("100000"), false),
+        spec("repeats", "timed repeats", Some("5"), false),
+        spec("out", "CSV output path", Some("results/filters.csv"), false),
+        spec("bench", "ignored (cargo bench passes it)", None, true),
+    ])
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    if args.wants_help() {
+        println!("{}", args.usage());
+        return;
+    }
+    let n: usize = args.num_or("n", 100_000);
+    let repeats: usize = args.num_or("repeats", 5);
+
+    let keys: Vec<u64> = (0..n)
+        .map(|i| entity_key(&format!("entity-{i}")))
+        .collect();
+    let addr = [EntityAddress::new(0, 0)];
+
+    let mut rows = Vec::new();
+    let mut csv = CsvTable::new(&["structure", "op", "mops_per_s"]);
+    let mut emit = |structure: &str, op: &str, secs: f64, ops: usize| {
+        let mops = ops as f64 / secs / 1e6;
+        rows.push(vec![
+            structure.to_string(),
+            op.to_string(),
+            format!("{mops:.2}"),
+        ]);
+        csv.push(&[structure.to_string(), op.to_string(), format!("{mops}")]);
+    };
+
+    // Cuckoo filter
+    {
+        let r = bench("cuckoo-insert", 1, repeats, || {
+            let mut cf = CuckooFilter::new(CuckooConfig::default());
+            for &k in &keys {
+                cf.insert(k, &addr);
+            }
+        });
+        emit("cuckoo", "insert", r.summary().p50, n);
+
+        let mut cf = CuckooFilter::new(CuckooConfig::default());
+        for &k in &keys {
+            cf.insert(k, &addr);
+        }
+        let r = bench("cuckoo-lookup", 1, repeats, || {
+            let mut hits = 0usize;
+            for &k in &keys {
+                if cf.lookup(k).is_some() {
+                    hits += 1;
+                }
+            }
+            assert_eq!(hits, keys.len());
+        });
+        emit("cuckoo", "lookup-hit", r.summary().p50, n);
+
+        let miss_keys: Vec<u64> = (0..n)
+            .map(|i| entity_key(&format!("missing-{i}")))
+            .collect();
+        let r = bench("cuckoo-lookup-miss", 1, repeats, || {
+            let mut hits = 0usize;
+            for &k in &miss_keys {
+                if cf.contains(k) {
+                    hits += 1;
+                }
+            }
+            assert!(hits < n / 50, "fp rate blew up: {hits}");
+        });
+        emit("cuckoo", "lookup-miss", r.summary().p50, n);
+
+        let r = bench("cuckoo-delete", 1, repeats, || {
+            let mut cf2 = cf.clone();
+            for &k in &keys {
+                cf2.delete(k);
+            }
+        });
+        emit("cuckoo", "delete(+clone)", r.summary().p50, n);
+    }
+
+    // Bloom filter
+    {
+        let r = bench("bloom-insert", 1, repeats, || {
+            let mut bf = BloomFilter::new(n, 0.01);
+            for &k in &keys {
+                bf.insert(k);
+            }
+        });
+        emit("bloom", "insert", r.summary().p50, n);
+
+        let mut bf = BloomFilter::new(n, 0.01);
+        for &k in &keys {
+            bf.insert(k);
+        }
+        let r = bench("bloom-lookup", 1, repeats, || {
+            let mut hits = 0usize;
+            for &k in &keys {
+                if bf.contains(k) {
+                    hits += 1;
+                }
+            }
+            assert_eq!(hits, keys.len());
+        });
+        emit("bloom", "lookup-hit", r.summary().p50, n);
+    }
+
+    // HashMap direct index (upper-bound comparator)
+    {
+        let r = bench("hashmap-insert", 1, repeats, || {
+            let mut m: HashMap<u64, Vec<EntityAddress>> = HashMap::new();
+            for &k in &keys {
+                m.insert(k, addr.to_vec());
+            }
+        });
+        emit("hashmap", "insert", r.summary().p50, n);
+
+        let mut m: HashMap<u64, Vec<EntityAddress>> = HashMap::new();
+        for &k in &keys {
+            m.insert(k, addr.to_vec());
+        }
+        let r = bench("hashmap-lookup", 1, repeats, || {
+            let mut hits = 0usize;
+            for &k in &keys {
+                if m.contains_key(&k) {
+                    hits += 1;
+                }
+            }
+            assert_eq!(hits, keys.len());
+        });
+        emit("hashmap", "lookup-hit", r.summary().p50, n);
+    }
+
+    print_table(
+        &format!("Filter micro-benchmarks ({n} keys)"),
+        &["structure", "op", "Mops/s"],
+        &rows,
+    );
+    let out = args.str_or("out", "results/filters.csv");
+    csv.write_to(&out).expect("write csv");
+    println!("\nwrote {out}");
+}

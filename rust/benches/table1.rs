@@ -1,0 +1,36 @@
+//! Reproduces **Table 1**: retrieval time + accuracy for tree counts
+//! {50, 300, 600} across Naive / BF / BF2 / CF T-RAG.
+//!
+//! Run: `cargo bench --bench table1` (flags: --trees, --queries, --repeats)
+//! Writes `results/table1.csv`.
+
+use cft_rag::bench::experiments::{table1, ExperimentConfig};
+use cft_rag::util::cli::{spec, Args};
+
+fn main() {
+    let args = Args::from_env(vec![
+        spec("trees", "comma-separated tree counts", Some("50,300,600"), false),
+        spec("queries", "queries per workload", Some("100"), false),
+        spec("repeats", "timed repeats", Some("10"), false),
+        spec("out", "CSV output path", Some("results/table1.csv"), false),
+        spec("bench", "ignored (cargo bench passes it)", None, true),
+    ])
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    if args.wants_help() {
+        println!("{}", args.usage());
+        return;
+    }
+    let cfg = ExperimentConfig {
+        queries: args.num_or("queries", 100),
+        repeats: args.num_or("repeats", 10),
+        ..ExperimentConfig::default()
+    };
+    let trees: Vec<usize> = args.list_or("trees", &[50, 300, 600]);
+    let csv = table1(cfg, &trees);
+    let out = args.str_or("out", "results/table1.csv");
+    csv.write_to(&out).expect("write csv");
+    println!("\nwrote {out}");
+}

@@ -1,0 +1,36 @@
+//! Reproduces **Table 2**: retrieval time vs entities-per-query
+//! {5, 10, 20} at 600 trees.
+//!
+//! Run: `cargo bench --bench table2`. Writes `results/table2.csv`.
+
+use cft_rag::bench::experiments::{table2, ExperimentConfig};
+use cft_rag::util::cli::{spec, Args};
+
+fn main() {
+    let args = Args::from_env(vec![
+        spec("trees", "tree count", Some("600"), false),
+        spec("entities", "comma-separated entities/query", Some("5,10,20"), false),
+        spec("queries", "queries per workload", Some("100"), false),
+        spec("repeats", "timed repeats", Some("10"), false),
+        spec("out", "CSV output path", Some("results/table2.csv"), false),
+        spec("bench", "ignored (cargo bench passes it)", None, true),
+    ])
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    if args.wants_help() {
+        println!("{}", args.usage());
+        return;
+    }
+    let cfg = ExperimentConfig {
+        queries: args.num_or("queries", 100),
+        repeats: args.num_or("repeats", 10),
+        ..ExperimentConfig::default()
+    };
+    let entities: Vec<usize> = args.list_or("entities", &[5, 10, 20]);
+    let csv = table2(cfg, args.num_or("trees", 600), &entities);
+    let out = args.str_or("out", "results/table2.csv");
+    csv.write_to(&out).expect("write csv");
+    println!("\nwrote {out}");
+}

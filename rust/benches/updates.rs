@@ -1,0 +1,80 @@
+//! Dynamic-update bench (paper §5: CF "is suitable for ongoing data
+//! update"): cost of ingesting one new document (tree) into an existing
+//! index, per algorithm. The Cuckoo retriever reindexes *incrementally*
+//! (insert only the new addresses); the Bloom baselines must rebuild
+//! their per-node annotations; Naive is index-free.
+//!
+//! Run: `cargo bench --bench updates`. Writes `results/updates.csv`.
+
+use std::sync::Arc;
+
+use cft_rag::bench::experiments::experiment_forest;
+use cft_rag::bench::harness::{fmt_secs, print_table};
+use cft_rag::forest::builder::build_trees;
+use cft_rag::rag::config::{Algorithm, RagConfig};
+use cft_rag::rag::pipeline::make_retriever;
+use cft_rag::util::cli::{spec, Args};
+use cft_rag::util::csv::CsvTable;
+
+fn main() {
+    let args = Args::from_env(vec![
+        spec("trees", "comma-separated base forest sizes", Some("50,300,600"), false),
+        spec("repeats", "timed repeats", Some("10"), false),
+        spec("out", "CSV output path", Some("results/updates.csv"), false),
+        spec("bench", "ignored (cargo bench passes it)", None, true),
+    ])
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    if args.wants_help() {
+        println!("{}", args.usage());
+        return;
+    }
+    let repeats: usize = args.num_or("repeats", 10);
+    let tree_counts: Vec<usize> = args.list_or("trees", &[50, 300, 600]);
+
+    let mut csv = CsvTable::new(&["base_trees", "algorithm", "update_time_s"]);
+    let mut rows = Vec::new();
+    for &trees in &tree_counts {
+        let base = experiment_forest(trees, 42);
+        // the incoming document: one new hospital with a dozen relations
+        let new_relations: Vec<(String, String)> = (0..12)
+            .map(|i| (format!("new unit {i}"), "updated hospital".to_string()))
+            .chain([("cardiology".to_string(), "updated hospital".to_string())])
+            .collect();
+
+        for alg in Algorithm::ALL {
+            let cfg = RagConfig { algorithm: alg, ..RagConfig::default() };
+            // pre-grow the forest once (identical for all repeats)
+            let mut grown = (*base).clone();
+            let new_trees = build_trees(&mut grown, &new_relations);
+            let grown = Arc::new(grown);
+
+            // a fresh retriever per sample: reindex must apply exactly once
+            let mut samples = Vec::with_capacity(repeats);
+            for _ in 0..=repeats {
+                let mut retriever = make_retriever(base.clone(), &cfg);
+                let timer = cft_rag::util::stats::Timer::start();
+                retriever.reindex(grown.clone(), &new_trees);
+                samples.push(timer.secs());
+            }
+            samples.remove(0); // warmup
+            let t = cft_rag::util::stats::Summary::of(&samples).p50;
+            rows.push(vec![
+                trees.to_string(),
+                alg.label().to_string(),
+                fmt_secs(t),
+            ]);
+            csv.push(&[trees.to_string(), alg.label().to_string(), format!("{t}")]);
+        }
+    }
+    print_table(
+        "Dynamic updates — reindex cost for one new document",
+        &["base_trees", "algorithm", "update_time_s"],
+        &rows,
+    );
+    let out = args.str_or("out", "results/updates.csv");
+    csv.write_to(&out).expect("write csv");
+    println!("\nwrote {out}");
+}

@@ -1,0 +1,510 @@
+//! Experiment drivers reproducing every table and figure in the paper's
+//! evaluation (§4.5). Each driver prints the paper-style rows and returns
+//! a CSV table written by the corresponding bench target to `results/`.
+//!
+//! Paper-vs-measured notes live in EXPERIMENTS.md. Absolute times differ
+//! from the paper (their substrate: Python + C++ on an H100 box with a
+//! real LLM; ours: pure Rust on CPU) — the *shape* is the reproduction
+//! target: algorithm ordering, speedup growth with tree count, CF
+//! flatness in query entity count, accuracy invariance.
+
+use std::sync::Arc;
+
+use crate::bench::harness::{bench, fmt_secs, fmt_speedup, print_table};
+use crate::data::hospital::{HospitalConfig, HospitalDataset};
+use crate::data::workload::{Workload, WorkloadConfig};
+use crate::filter::cuckoo::{CuckooConfig, CuckooFilter};
+use crate::filter::fingerprint::entity_key;
+use crate::forest::{EntityAddress, Forest};
+use crate::llm::generator::Generator;
+use crate::llm::judge::{judge, Judgement};
+use crate::llm::prompt::Prompt;
+use crate::rag::config::{Algorithm, RagConfig};
+use crate::rag::pipeline::make_retriever;
+use crate::retrieval::context::{generate_context, Context};
+use crate::runtime::engine::{Engine, NativeEngine};
+use crate::util::csv::CsvTable;
+
+/// Shared experiment defaults (paper §4.4–4.5).
+#[derive(Clone, Copy, Debug)]
+pub struct ExperimentConfig {
+    /// Queries per workload (paper: 100 repetitions).
+    pub queries: usize,
+    /// Timed repeats per measurement.
+    pub repeats: usize,
+    /// Context levels n.
+    pub context_levels: usize,
+    /// Zipf exponent for query locality.
+    pub zipf_s: f64,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            queries: 100,
+            repeats: 10,
+            context_levels: 3,
+            zipf_s: 1.1,
+            seed: 42,
+        }
+    }
+}
+
+/// Build the hospital forest for a tree count (shared by all drivers).
+pub fn experiment_forest(trees: usize, seed: u64) -> Arc<Forest> {
+    Arc::new(
+        HospitalDataset::generate(HospitalConfig {
+            trees,
+            seed,
+            ..HospitalConfig::default()
+        })
+        .build_forest(),
+    )
+}
+
+/// One timed retrieval pass: find every entity of every query.
+fn retrieval_pass(
+    retriever: &mut (dyn crate::retrieval::Retriever + Send),
+    workload: &Workload,
+) -> usize {
+    let mut found = 0usize;
+    let mut buf = Vec::with_capacity(256);
+    for q in &workload.queries {
+        for e in &q.entities {
+            buf.clear();
+            retriever.find_into(e, &mut buf);
+            found += buf.len();
+        }
+    }
+    found
+}
+
+/// Judge answer accuracy for one algorithm over a workload (run once —
+/// accuracy is timing-independent).
+fn measure_accuracy(
+    forest: &Arc<Forest>,
+    algorithm: Algorithm,
+    workload: &Workload,
+    levels: usize,
+    engine: &dyn Engine,
+) -> f64 {
+    let cfg = RagConfig { algorithm, context_levels: levels, ..RagConfig::default() };
+    let mut retriever = make_retriever(forest.clone(), &cfg);
+    let generator = Generator::new(engine);
+    let mut total = Judgement::default();
+    for q in &workload.queries {
+        let mut ctx = Context::default();
+        for e in &q.entities {
+            let addrs = retriever.find(e);
+            ctx.merge(generate_context(forest, e, &addrs, levels));
+        }
+        let prompt = Prompt::assemble(Vec::new(), &ctx, &q.text);
+        let answer = generator
+            .generate(&q.text, &ctx, &prompt)
+            .expect("generation");
+        total.merge(judge(&answer.text, &q.gold));
+    }
+    total.accuracy()
+}
+
+// ---------------------------------------------------------------------
+// Table 1: retrieval time + accuracy vs tree count
+// ---------------------------------------------------------------------
+
+/// Reproduce Table 1. Returns the CSV rows.
+pub fn table1(cfg: ExperimentConfig, tree_counts: &[usize]) -> CsvTable {
+    let engine = NativeEngine::new();
+    let mut csv = CsvTable::new(&[
+        "trees", "algorithm", "time_s", "acc", "speedup_vs_naive", "found",
+    ]);
+    let mut rows = Vec::new();
+
+    for &trees in tree_counts {
+        let forest = experiment_forest(trees, cfg.seed);
+        let workload = Workload::generate(
+            &forest,
+            WorkloadConfig {
+                entities_per_query: 5,
+                queries: cfg.queries,
+                zipf_s: cfg.zipf_s,
+                deep_bias: 0.95,
+                seed: cfg.seed ^ trees as u64,
+            },
+        );
+        let mut naive_time = 0.0;
+        for alg in Algorithm::ALL {
+            let rag = RagConfig { algorithm: alg, ..RagConfig::default() };
+            let mut retriever = make_retriever(forest.clone(), &rag);
+            let mut found = 0;
+            let result = bench(alg.label(), 1, cfg.repeats, || {
+                found = retrieval_pass(retriever.as_mut(), &workload);
+            });
+            let mean = result.mean();
+            if alg == Algorithm::Naive {
+                naive_time = mean;
+            }
+            let acc = measure_accuracy(
+                &forest, alg, &workload, cfg.context_levels, &engine,
+            );
+            rows.push(vec![
+                trees.to_string(),
+                alg.label().to_string(),
+                fmt_secs(mean),
+                format!("{:.2}", acc * 100.0),
+                fmt_speedup(naive_time, mean),
+                found.to_string(),
+            ]);
+            csv.push(&[
+                trees.to_string(),
+                alg.label().to_string(),
+                format!("{mean}"),
+                format!("{acc}"),
+                format!("{}", naive_time / mean.max(1e-12)),
+                found.to_string(),
+            ]);
+        }
+    }
+    print_table(
+        "Table 1 — retrieval time per 100-query workload (5 entities/query)",
+        &["trees", "algorithm", "time_s", "acc_%", "speedup", "found"],
+        &rows,
+    );
+    csv
+}
+
+// ---------------------------------------------------------------------
+// Table 2: retrieval time vs entities per query (600 trees)
+// ---------------------------------------------------------------------
+
+/// Reproduce Table 2. Returns the CSV rows.
+pub fn table2(cfg: ExperimentConfig, trees: usize, entity_counts: &[usize]) -> CsvTable {
+    let engine = NativeEngine::new();
+    let forest = experiment_forest(trees, cfg.seed);
+    let mut csv = CsvTable::new(&[
+        "entities_per_query", "algorithm", "time_s", "acc", "speedup_vs_naive",
+    ]);
+    let mut rows = Vec::new();
+
+    for &k in entity_counts {
+        let workload = Workload::generate(
+            &forest,
+            WorkloadConfig {
+                entities_per_query: k,
+                queries: cfg.queries,
+                zipf_s: cfg.zipf_s,
+                deep_bias: 0.95,
+                seed: cfg.seed ^ (k as u64).rotate_left(17),
+            },
+        );
+        let mut naive_time = 0.0;
+        for alg in Algorithm::ALL {
+            let rag = RagConfig { algorithm: alg, ..RagConfig::default() };
+            let mut retriever = make_retriever(forest.clone(), &rag);
+            let result = bench(alg.label(), 1, cfg.repeats, || {
+                retrieval_pass(retriever.as_mut(), &workload);
+            });
+            let mean = result.mean();
+            if alg == Algorithm::Naive {
+                naive_time = mean;
+            }
+            let acc = measure_accuracy(
+                &forest, alg, &workload, cfg.context_levels, &engine,
+            );
+            rows.push(vec![
+                k.to_string(),
+                alg.label().to_string(),
+                fmt_secs(mean),
+                format!("{:.2}", acc * 100.0),
+                fmt_speedup(naive_time, mean),
+            ]);
+            csv.push(&[
+                k.to_string(),
+                alg.label().to_string(),
+                format!("{mean}"),
+                format!("{acc}"),
+                format!("{}", naive_time / mean.max(1e-12)),
+            ]);
+        }
+    }
+    print_table(
+        &format!("Table 2 — retrieval time vs entities/query ({trees} trees)"),
+        &["entities", "algorithm", "time_s", "acc_%", "speedup"],
+        &rows,
+    );
+    csv
+}
+
+// ---------------------------------------------------------------------
+// Figure 5: per-round search time, temperature sorting ablation
+// ---------------------------------------------------------------------
+
+/// Reproduce Figure 5: per-round CF retrieval cost across repeated query
+/// rounds, sorting on vs off. Two readings per round:
+///
+/// * `time_s` — wall time of the full retrieval pass;
+/// * `probes_per_lookup` — bucket slots scanned per filter lookup, the
+///   quantity temperature sorting directly minimizes. At Rust-native
+///   speeds one in-bucket probe is ~1 ns, so the paper's seconds-scale
+///   wallclock gap (inflated by their Python/C++ boundary) compresses
+///   into this mechanism-level metric here (EXPERIMENTS.md discusses).
+pub fn fig5(
+    cfg: ExperimentConfig,
+    settings: &[(usize, usize)], // (trees, entities_per_query)
+    rounds: usize,
+) -> CsvTable {
+    let mut csv = CsvTable::new(&[
+        "trees", "entities_per_query", "sorting", "round", "time_s",
+        "probes_per_lookup",
+    ]);
+    let mut rows = Vec::new();
+
+    for &(trees, k) in settings {
+        let forest = experiment_forest(trees, cfg.seed);
+        let workload = Workload::generate(
+            &forest,
+            WorkloadConfig {
+                entities_per_query: k,
+                queries: cfg.queries,
+                zipf_s: cfg.zipf_s,
+                deep_bias: 0.95,
+                seed: cfg.seed ^ (trees as u64) ^ ((k as u64) << 32),
+            },
+        );
+        for sorting in [true, false] {
+            // concrete CuckooTRag for probe-count stats access
+            let mut retriever =
+                crate::retrieval::cuckoo_rag::CuckooTRag::with_config(
+                    forest.clone(),
+                    CuckooConfig {
+                        sort_by_temperature: sorting,
+                        ..CuckooConfig::default()
+                    },
+                );
+            use crate::retrieval::Retriever as _;
+            for round in 1..=rounds {
+                let before = retriever.filter().stats();
+                // median of repeats for a stable per-round number
+                let result = bench("round", 0, cfg.repeats, || {
+                    retrieval_pass(&mut retriever, &workload);
+                });
+                let after = retriever.filter().stats();
+                let lookups = (after.lookups - before.lookups).max(1);
+                let probes = (after.slots_probed - before.slots_probed) as f64
+                    / lookups as f64;
+                // end-of-round maintenance: the paper sorts between rounds
+                retriever.maintain();
+                let t = result.summary().p50;
+                rows.push(vec![
+                    trees.to_string(),
+                    k.to_string(),
+                    if sorting { "on" } else { "off" }.to_string(),
+                    round.to_string(),
+                    fmt_secs(t),
+                    format!("{probes:.3}"),
+                ]);
+                csv.push(&[
+                    trees.to_string(),
+                    k.to_string(),
+                    sorting.to_string(),
+                    round.to_string(),
+                    format!("{t}"),
+                    format!("{probes}"),
+                ]);
+            }
+        }
+    }
+    print_table(
+        "Figure 5 — CF T-RAG per-round cost (temperature ablation)",
+        &["trees", "entities", "sorting", "round", "time_s", "probes/lookup"],
+        &rows,
+    );
+    csv
+}
+
+// ---------------------------------------------------------------------
+// §4.5.1 error-rate / load-factor analysis
+// ---------------------------------------------------------------------
+
+/// Reproduce the error analysis: insert `n` entities into a fixed-size
+/// filter, count (a) inserted entities whose lookup is shadowed by a
+/// fingerprint collision and (b) foreign-key false positives.
+pub fn error_rate(entity_counts: &[usize]) -> CsvTable {
+    let mut csv = CsvTable::new(&[
+        "entities", "buckets", "load_factor", "shadowed", "fp_rate",
+    ]);
+    let mut rows = Vec::new();
+    for &n in entity_counts {
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 1024,
+            load_threshold: 1.01, // hold size fixed like the paper's 1024
+            ..CuckooConfig::default()
+        });
+        let mut keys = Vec::with_capacity(n);
+        for i in 0..n {
+            let key = entity_key(&format!("entity-{i}"));
+            keys.push(key);
+            cf.insert(key, &[EntityAddress::new(0, i as u32)]);
+        }
+        // (a) shadowing: a lookup that would return a *different* entity's
+        // block list (same bucket pair, same fingerprint, earlier slot).
+        let mut shadowed = 0usize;
+        for (i, &key) in keys.iter().enumerate() {
+            if let Some(hit) = cf.lookup(key) {
+                let addrs = cf.addresses(hit);
+                if addrs.first().map(|a| a.node) != Some(i as u32) {
+                    shadowed += 1;
+                }
+            }
+        }
+        // (b) foreign false positives
+        let probes = 100_000usize;
+        let fp = (0..probes)
+            .filter(|i| cf.contains(entity_key(&format!("foreign-{i}"))))
+            .count();
+        rows.push(vec![
+            n.to_string(),
+            cf.buckets().to_string(),
+            format!("{:.4}", cf.load_factor()),
+            shadowed.to_string(),
+            format!("{:.5}", fp as f64 / probes as f64),
+        ]);
+        csv.push(&[
+            n.to_string(),
+            cf.buckets().to_string(),
+            format!("{}", cf.load_factor()),
+            shadowed.to_string(),
+            format!("{}", fp as f64 / probes as f64),
+        ]);
+    }
+    print_table(
+        "Error analysis — fingerprint collisions vs load (1024 buckets x 4)",
+        &["entities", "buckets", "load", "shadowed", "fp_rate"],
+        &rows,
+    );
+    csv
+}
+
+// ---------------------------------------------------------------------
+// Ablations: design-choice sweeps beyond the paper's Figure 5
+// ---------------------------------------------------------------------
+
+/// Ablate bucket slots and fingerprint bits: retrieval time + shadowing.
+pub fn ablation(cfg: ExperimentConfig, trees: usize) -> CsvTable {
+    let forest = experiment_forest(trees, cfg.seed);
+    let workload = Workload::generate(
+        &forest,
+        WorkloadConfig {
+            entities_per_query: 10,
+            queries: cfg.queries,
+            zipf_s: cfg.zipf_s,
+            deep_bias: 0.95,
+            seed: cfg.seed,
+        },
+    );
+    let mut csv = CsvTable::new(&[
+        "slots", "fp_bits", "sorting", "time_s", "load_factor", "memory_kb",
+    ]);
+    let mut rows = Vec::new();
+    for slots in [2usize, 4, 8] {
+        for fp_bits in [8u32, 12, 16] {
+            for sorting in [true, false] {
+                let rag = RagConfig {
+                    algorithm: Algorithm::Cuckoo,
+                    cuckoo: CuckooConfig {
+                        slots,
+                        fingerprint_bits: fp_bits,
+                        sort_by_temperature: sorting,
+                        ..CuckooConfig::default()
+                    },
+                    ..RagConfig::default()
+                };
+                let mut retriever = make_retriever(forest.clone(), &rag);
+                // warm temperatures then measure
+                retrieval_pass(retriever.as_mut(), &workload);
+                retriever.maintain();
+                let result = bench("ablation", 1, cfg.repeats, || {
+                    retrieval_pass(retriever.as_mut(), &workload);
+                });
+                let mean = result.mean();
+                let bytes = retriever.index_bytes();
+                rows.push(vec![
+                    slots.to_string(),
+                    fp_bits.to_string(),
+                    if sorting { "on" } else { "off" }.to_string(),
+                    fmt_secs(mean),
+                    String::new(),
+                    (bytes / 1024).to_string(),
+                ]);
+                csv.push(&[
+                    slots.to_string(),
+                    fp_bits.to_string(),
+                    sorting.to_string(),
+                    format!("{mean}"),
+                    String::new(),
+                    (bytes / 1024).to_string(),
+                ]);
+            }
+        }
+    }
+    print_table(
+        &format!("Ablation — CF parameters ({trees} trees, 10 entities/query)"),
+        &["slots", "fp_bits", "sorting", "time_s", "load", "mem_kb"],
+        &rows,
+    );
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny-scale smoke runs of every driver (full scale runs in benches).
+    #[test]
+    fn drivers_smoke() {
+        let cfg = ExperimentConfig {
+            queries: 4,
+            repeats: 2,
+            ..ExperimentConfig::default()
+        };
+        let t1 = table1(cfg, &[5]);
+        assert_eq!(t1.len(), 4, "one row per algorithm");
+        let t2 = table2(cfg, 5, &[2]);
+        assert_eq!(t2.len(), 4);
+        let f5 = fig5(cfg, &[(5, 2)], 2);
+        assert_eq!(f5.len(), 2 * 2, "rounds x sorting");
+        let er = error_rate(&[100]);
+        assert_eq!(er.len(), 1);
+    }
+
+    #[test]
+    fn speedup_ordering_holds_at_small_scale() {
+        let cfg = ExperimentConfig {
+            queries: 20,
+            repeats: 3,
+            ..ExperimentConfig::default()
+        };
+        let forest = experiment_forest(30, cfg.seed);
+        let workload = Workload::generate(
+            &forest,
+            WorkloadConfig { queries: 20, ..Default::default() },
+        );
+        let mut times = Vec::new();
+        for alg in Algorithm::ALL {
+            let rag = RagConfig { algorithm: alg, ..RagConfig::default() };
+            let mut r = make_retriever(forest.clone(), &rag);
+            let res = bench(alg.label(), 1, 3, || {
+                retrieval_pass(r.as_mut(), &workload);
+            });
+            times.push(res.summary().p50);
+        }
+        // CF must beat Naive soundly
+        assert!(
+            times[3] * 3.0 < times[0],
+            "cf {} vs naive {}",
+            times[3],
+            times[0]
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! Measurement harness (criterion replacement): warmup + repeated timed
+//! runs + summary statistics, plus pretty table printing for the paper
+//! reproductions.
+
+use crate::util::stats::{Summary, Timer};
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-repeat wall times in seconds.
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    /// Summary stats over the samples.
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples)
+    }
+
+    /// Mean seconds.
+    pub fn mean(&self) -> f64 {
+        self.summary().mean
+    }
+}
+
+/// Run `f` `warmup` times untimed, then `repeats` times timed.
+///
+/// `f` should perform one full workload pass (the paper repeats each
+/// algorithm 100 times and averages; benches pass repeats=… to match).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, repeats: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    BenchResult { name: name.to_string(), samples }
+}
+
+/// Render a results table: column headers + rows of cells.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+    for row in rows {
+        line(row);
+    }
+}
+
+/// Format seconds like the paper's tables (6 decimal places).
+pub fn fmt_secs(s: f64) -> String {
+    format!("{s:.6}")
+}
+
+/// Format a speedup factor.
+pub fn fmt_speedup(base: f64, other: f64) -> String {
+    if other == 0.0 {
+        "inf".to_string()
+    } else {
+        format!("{:.1}x", base / other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut n = 0u64;
+        let r = bench("noop", 2, 5, || {
+            n += 1;
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert_eq!(n, 7, "warmup + repeats");
+        assert!(r.mean() >= 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(0.0123456789), "0.012346");
+        assert_eq!(fmt_speedup(1.0, 0.1), "10.0x");
+        assert_eq!(fmt_speedup(1.0, 0.0), "inf");
+    }
+}

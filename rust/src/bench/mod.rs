@@ -1,0 +1,8 @@
+//! Benchmark harness + the drivers regenerating every table/figure in
+//! the paper's evaluation. The `rust/benches/*.rs` targets are thin
+//! shells over [`experiments`].
+
+pub mod experiments;
+pub mod harness;
+
+pub use harness::{bench, print_table, BenchResult};

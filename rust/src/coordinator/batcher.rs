@@ -1,0 +1,116 @@
+//! Dynamic batching: group incoming requests up to the artifact batch
+//! size, waiting at most a deadline for stragglers — the standard
+//! serving trade-off between device efficiency (full batches for the
+//! fixed-shape artifacts) and tail latency.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch (the artifact batch size).
+    pub max_batch: usize,
+    /// Maximum time to hold the first request while waiting for more.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Outcome of one collect call.
+pub enum BatchOutcome<T> {
+    /// A (possibly partial) batch.
+    Batch(Vec<T>),
+    /// The channel closed and no items remain.
+    Closed,
+}
+
+/// Block for the next batch: wait indefinitely for the first item, then
+/// fill up to `policy.max_batch` within `policy.max_wait`.
+pub fn collect_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> BatchOutcome<T> {
+    let first = match rx.recv() {
+        Ok(item) => item,
+        Err(_) => return BatchOutcome::Closed,
+    };
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    BatchOutcome::Batch(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::thread;
+
+    #[test]
+    fn fills_to_max_when_items_ready() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        match collect_batch(&rx, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) }) {
+            BatchOutcome::Batch(b) => assert_eq!(b, (0..8).collect::<Vec<_>>()),
+            BatchOutcome::Closed => panic!("closed"),
+        }
+        // leftovers stay queued
+        match collect_batch(&rx, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) }) {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![8, 9]),
+            BatchOutcome::Closed => panic!("closed"),
+        }
+    }
+
+    #[test]
+    fn partial_batch_after_deadline() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let t = Instant::now();
+        match collect_batch(&rx, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) }) {
+            BatchOutcome::Batch(b) => {
+                assert_eq!(b, vec![1]);
+                assert!(t.elapsed() >= Duration::from_millis(9));
+            }
+            BatchOutcome::Closed => panic!("closed"),
+        }
+    }
+
+    #[test]
+    fn closed_channel_reports_closed() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(matches!(
+            collect_batch(&rx, BatchPolicy::default()),
+            BatchOutcome::Closed
+        ));
+    }
+
+    #[test]
+    fn stragglers_join_within_window() {
+        let (tx, rx) = channel();
+        tx.send(0).unwrap();
+        let tx2 = tx.clone();
+        thread::spawn(move || {
+            thread::sleep(Duration::from_millis(3));
+            tx2.send(1).unwrap();
+        });
+        match collect_batch(&rx, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(40) }) {
+            BatchOutcome::Batch(b) => assert_eq!(b.len(), 2, "straggler joined"),
+            BatchOutcome::Closed => panic!("closed"),
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Serving metrics: request counters, stage latency histograms, batch
+//! fill statistics. Shared across threads behind one mutex (updates are
+//! a few hundred ns; contention is negligible at this testbed's rates).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::stats::LatencyHistogram;
+
+/// Snapshot of the counters at one instant.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub failures: u64,
+    pub batches: u64,
+    pub mean_batch_fill: f64,
+    pub total_mean_s: f64,
+    pub total_p50_s: f64,
+    pub total_p99_s: f64,
+    pub retrieval_mean_s: f64,
+    pub retrieval_p99_s: f64,
+}
+
+impl MetricsSnapshot {
+    /// Requests per second given an elapsed window.
+    pub fn throughput(&self, elapsed: Duration) -> f64 {
+        if elapsed.as_secs_f64() == 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / elapsed.as_secs_f64()
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    failures: u64,
+    batches: u64,
+    batch_fill_sum: u64,
+    total: LatencyHistogram,
+    retrieval: LatencyHistogram,
+}
+
+/// Thread-shared metrics sink.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl Metrics {
+    /// New empty metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed request.
+    pub fn record_request(&self, total: Duration, retrieval: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        m.total.record(total.as_secs_f64());
+        m.retrieval.record(retrieval.as_secs_f64());
+    }
+
+    /// Record one failed request.
+    pub fn record_failure(&self) {
+        self.inner.lock().unwrap().failures += 1;
+    }
+
+    /// Record one dispatched batch of `fill` requests.
+    pub fn record_batch(&self, fill: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batch_fill_sum += fill as u64;
+    }
+
+    /// Current snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            requests: m.requests,
+            failures: m.failures,
+            batches: m.batches,
+            mean_batch_fill: if m.batches == 0 {
+                0.0
+            } else {
+                m.batch_fill_sum as f64 / m.batches as f64
+            },
+            total_mean_s: m.total.mean(),
+            total_p50_s: m.total.quantile(0.5),
+            total_p99_s: m.total.quantile(0.99),
+            retrieval_mean_s: m.retrieval.mean(),
+            retrieval_p99_s: m.retrieval.quantile(0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_request(Duration::from_millis(10), Duration::from_micros(50));
+        m.record_request(Duration::from_millis(20), Duration::from_micros(70));
+        m.record_batch(8);
+        m.record_batch(4);
+        m.record_failure();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.failures, 1);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_fill - 6.0).abs() < 1e-12);
+        assert!(s.total_mean_s > 0.009 && s.total_mean_s < 0.021);
+        assert!(s.retrieval_mean_s > 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Metrics::new();
+        for _ in 0..100 {
+            m.record_request(Duration::from_millis(1), Duration::from_micros(1));
+        }
+        let s = m.snapshot();
+        assert!((s.throughput(Duration::from_secs(10)) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_across_clones() {
+        let m = Metrics::new();
+        let m2 = m.clone();
+        m2.record_request(Duration::from_millis(1), Duration::from_micros(1));
+        assert_eq!(m.snapshot().requests, 1);
+    }
+}

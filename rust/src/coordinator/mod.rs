@@ -1,0 +1,11 @@
+//! L3 serving coordinator: dynamic batcher, worker pool, metrics, and a
+//! TCP front end. See `server.rs` for the stage diagram.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod tcp;
+
+pub use batcher::{collect_batch, BatchOutcome, BatchPolicy};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{Coordinator, CoordinatorConfig, ServeResponse};

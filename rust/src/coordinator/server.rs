@@ -1,0 +1,384 @@
+//! The serving coordinator: request queue → dynamic batcher (embedding +
+//! vector search at artifact batch size) → worker pool (NER, tree
+//! retrieval, context, generation) → response channels. All Rust, all
+//! threads; Python never runs here.
+//!
+//! ```text
+//!  submit() ─► [queue] ─► batcher thread ── embed+search (batch B) ──┐
+//!                                                                    ▼
+//!  response ◄── worker pool (N threads): NER → retrieve → context → generate
+//! ```
+
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{collect_batch, BatchOutcome, BatchPolicy};
+use crate::coordinator::metrics::Metrics;
+use crate::data::corpus::Document;
+use crate::error::{CftError, Result};
+use crate::forest::Forest;
+use crate::llm::cache::EmbedCache;
+use crate::llm::generator::Generator;
+use crate::llm::prompt::Prompt;
+use crate::nlp::ner::GazetteerNer;
+use crate::rag::config::RagConfig;
+use crate::rag::pipeline::make_retriever;
+use crate::retrieval::context::{generate_context, Context};
+use crate::retrieval::Retriever;
+use crate::runtime::engine::Engine;
+use crate::text::tokenizer::tokenize_padded;
+use crate::util::stats::Timer;
+use crate::vector::{search_topk, VectorStore};
+
+/// Coordinator tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker threads for the per-query stage.
+    pub workers: usize,
+    /// Batching policy for the embed/search stage.
+    pub batch: BatchPolicy,
+    /// Run retriever maintenance every this many batches (0 = never).
+    pub maintain_every: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 4,
+            batch: BatchPolicy::default(),
+            maintain_every: 16,
+        }
+    }
+}
+
+/// One served response.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub answer: String,
+    pub entities: Vec<String>,
+    pub fact_count: usize,
+    pub docs: Vec<u32>,
+    pub retrieval_time: Duration,
+    pub total_time: Duration,
+}
+
+struct Job {
+    query: String,
+    enqueued: Instant,
+    resp: Sender<Result<ServeResponse>>,
+}
+
+struct WorkItem {
+    job: Job,
+    doc_hits: Vec<u32>,
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    submit_tx: Option<SyncSender<Job>>,
+    metrics: Metrics,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Build all stages and spawn the batcher + worker threads.
+    pub fn start(
+        forest: Arc<Forest>,
+        documents: Vec<Document>,
+        engine: Arc<dyn Engine>,
+        rag_cfg: RagConfig,
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        let store = Arc::new(VectorStore::build(engine.as_ref(), documents)?);
+        let ner = Arc::new(GazetteerNer::new(
+            forest.interner().iter().map(|(_, n)| n),
+        ));
+        let retriever: Arc<Mutex<Box<dyn Retriever + Send>>> =
+            Arc::new(Mutex::new(make_retriever(forest.clone(), &rag_cfg)));
+        let metrics = Metrics::new();
+        let cache = EmbedCache::new();
+
+        let (submit_tx, submit_rx) = sync_channel::<Job>(1024);
+        let (work_tx, work_rx) = sync_channel::<WorkItem>(1024);
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        let mut threads = Vec::new();
+
+        // ---- batcher thread: embed + vector search at batch size ----
+        {
+            let engine = engine.clone();
+            let store = store.clone();
+            let metrics = metrics.clone();
+            let retriever = retriever.clone();
+            let topk = rag_cfg.topk_docs;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("cft-batcher".into())
+                    .spawn(move || {
+                        let mut batches = 0usize;
+                        loop {
+                            let jobs = match collect_batch(&submit_rx, cfg.batch) {
+                                BatchOutcome::Batch(b) => b,
+                                BatchOutcome::Closed => break,
+                            };
+                            batches += 1;
+                            metrics.record_batch(jobs.len());
+                            if cfg.maintain_every > 0
+                                && batches % cfg.maintain_every == 0
+                            {
+                                retriever.lock().unwrap().maintain();
+                            }
+                            dispatch_batch(jobs, &engine, &store, topk, &work_tx);
+                        }
+                        // dropping work_tx closes the worker queue
+                    })
+                    .expect("spawn batcher"),
+            );
+        }
+
+        // ---- worker pool: per-query retrieval + generation ----
+        for w in 0..cfg.workers.max(1) {
+            let work_rx = work_rx.clone();
+            let engine = engine.clone();
+            let forest = forest.clone();
+            let ner = ner.clone();
+            let retriever = retriever.clone();
+            let metrics = metrics.clone();
+            let store = store.clone();
+            let cache = cache.clone();
+            let levels = rag_cfg.context_levels;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("cft-worker-{w}"))
+                    .spawn(move || loop {
+                        let item = {
+                            let rx = work_rx.lock().unwrap();
+                            rx.recv()
+                        };
+                        let Ok(item) = item else { break };
+                        let out = serve_one(
+                            &item, &engine, &forest, &ner, &retriever, &store,
+                            &cache, levels,
+                        );
+                        match &out {
+                            Ok(r) => metrics
+                                .record_request(r.total_time, r.retrieval_time),
+                            Err(_) => metrics.record_failure(),
+                        }
+                        let _ = item.job.resp.send(out);
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        Ok(Coordinator { submit_tx: Some(submit_tx), metrics, threads })
+    }
+
+    /// Submit a query; returns the channel the response will arrive on.
+    pub fn submit(&self, query: &str) -> Receiver<Result<ServeResponse>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let job = Job {
+            query: query.to_string(),
+            enqueued: Instant::now(),
+            resp: tx,
+        };
+        if let Some(s) = &self.submit_tx {
+            let _ = s.send(job); // on closed queue rx yields RecvError
+        }
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn query_blocking(&self, query: &str) -> Result<ServeResponse> {
+        self.submit(query)
+            .recv()
+            .map_err(|_| CftError::Coordinator("coordinator stopped".into()))?
+    }
+
+    /// Metrics handle.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Stop accepting work and join all threads.
+    pub fn shutdown(mut self) {
+        self.submit_tx.take(); // close the queue; batcher exits, then workers
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Embed + vector-search one batch of jobs, then fan work out to the pool.
+fn dispatch_batch(
+    jobs: Vec<Job>,
+    engine: &Arc<dyn Engine>,
+    store: &Arc<VectorStore>,
+    topk: usize,
+    work_tx: &SyncSender<WorkItem>,
+) {
+    let shape = engine.shape();
+    let mut jobs = jobs;
+    while !jobs.is_empty() {
+        let take = jobs.len().min(shape.batch);
+        let chunk: Vec<Job> = jobs.drain(..take).collect();
+
+        let mut tokens = vec![0i32; shape.batch * shape.max_tokens];
+        for (i, job) in chunk.iter().enumerate() {
+            tokens[i * shape.max_tokens..(i + 1) * shape.max_tokens]
+                .copy_from_slice(&tokenize_padded(&job.query, shape.max_tokens));
+        }
+        let hits = engine.embed(&tokens).and_then(|qemb| {
+            if store.is_empty() {
+                Ok(vec![Vec::new(); chunk.len()])
+            } else {
+                search_topk(engine.as_ref(), store, &qemb, chunk.len(), topk)
+            }
+        });
+        match hits {
+            Ok(rows) => {
+                for (job, row) in chunk.into_iter().zip(rows) {
+                    let item = WorkItem {
+                        job,
+                        doc_hits: row.iter().map(|h| h.doc).collect(),
+                    };
+                    if work_tx.send(item).is_err() {
+                        return; // workers gone; shutting down
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for job in chunk {
+                    let _ = job
+                        .resp
+                        .send(Err(CftError::Runtime(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+/// The per-query stage: NER → tree retrieval → context → generation.
+#[allow(clippy::too_many_arguments)]
+fn serve_one(
+    item: &WorkItem,
+    engine: &Arc<dyn Engine>,
+    forest: &Arc<Forest>,
+    ner: &Arc<GazetteerNer>,
+    retriever: &Arc<Mutex<Box<dyn Retriever + Send>>>,
+    store: &Arc<VectorStore>,
+    cache: &EmbedCache,
+    levels: usize,
+) -> Result<ServeResponse> {
+    let query = &item.job.query;
+    let entities = ner.recognize(query);
+
+    let rt = Timer::start();
+    let mut context = Context::default();
+    {
+        let mut r = retriever.lock().unwrap();
+        let mut addrs = Vec::with_capacity(64);
+        for e in &entities {
+            addrs.clear();
+            r.find_into(e, &mut addrs);
+            context.merge(generate_context(forest, e, &addrs, levels));
+        }
+    }
+    let retrieval_time = rt.elapsed();
+
+    let docs_text: Vec<String> = item
+        .doc_hits
+        .iter()
+        .map(|&d| store.doc(d).body.clone())
+        .collect();
+    let prompt = Prompt::assemble(docs_text, &context, query);
+    let generator = Generator::with_cache(engine.as_ref(), cache.clone());
+    let answer = generator.generate(query, &context, &prompt)?;
+
+    Ok(ServeResponse {
+        answer: answer.text,
+        entities,
+        fact_count: context.len(),
+        docs: item.doc_hits.clone(),
+        retrieval_time,
+        total_time: item.job.enqueued.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::corpus_from_texts;
+    use crate::data::hospital::{HospitalConfig, HospitalDataset};
+    use crate::runtime::engine::NativeEngine;
+
+    fn start_coordinator() -> Coordinator {
+        let ds = HospitalDataset::generate(HospitalConfig {
+            trees: 6,
+            ..HospitalConfig::default()
+        });
+        let forest = Arc::new(ds.build_forest());
+        let docs = corpus_from_texts(&ds.documents());
+        let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+        Coordinator::start(
+            forest,
+            docs,
+            engine,
+            RagConfig::default(),
+            CoordinatorConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_single_query() {
+        let c = start_coordinator();
+        let r = c.query_blocking("where does cardiology sit in the organization").unwrap();
+        assert!(r.entities.contains(&"cardiology".to_string()));
+        assert!(r.fact_count > 0);
+        assert!(r.answer.contains("cardiology"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn serves_concurrent_queries_batched() {
+        let c = start_coordinator();
+        let queries = [
+            "describe the hierarchy around cardiology",
+            "where does surgery sit in the organization",
+            "what is the parent unit of oncology",
+            "list the structure above and below radiology",
+            "which units report to pediatrics and who oversees it",
+            "describe the hierarchy around pathology",
+        ];
+        let rxs: Vec<_> = queries.iter().map(|q| c.submit(q)).collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            assert!(!r.answer.is_empty());
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.requests, 6);
+        assert!(snap.batches >= 1);
+        assert!(snap.mean_batch_fill >= 1.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let c = start_coordinator();
+        let _ = c.query_blocking("describe the hierarchy around cardiology");
+        c.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn unknown_entities_still_answered() {
+        let c = start_coordinator();
+        let r = c.query_blocking("tell me about flux capacitors").unwrap();
+        assert_eq!(r.fact_count, 0);
+        assert!(r.answer.contains("No hierarchy information"));
+        c.shutdown();
+    }
+}

@@ -1,0 +1,132 @@
+//! Minimal TCP line protocol in front of the coordinator: one query per
+//! line in, one JSON object per line out. `cft-rag serve --port N`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::coordinator::server::Coordinator;
+use crate::error::Result;
+use crate::util::json::Json;
+
+/// Serve until the process is killed. Each connection gets a thread;
+/// queries are newline-delimited; responses are JSON lines.
+pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    log::info!("cft-rag listening on {addr}");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let c = coordinator.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(c, stream);
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(coordinator: Arc<Coordinator>, stream: TcpStream) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    log::debug!("connection from {peer}");
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        let query = line.trim();
+        if query.is_empty() {
+            continue;
+        }
+        if query == ":quit" {
+            break;
+        }
+        let reply = respond(&coordinator, query);
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+/// Build the JSON reply for one query (exposed for tests).
+pub fn respond(coordinator: &Coordinator, query: &str) -> Json {
+    match coordinator.query_blocking(query) {
+        Ok(r) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("answer", Json::Str(r.answer)),
+            (
+                "entities",
+                Json::Arr(r.entities.into_iter().map(Json::Str).collect()),
+            ),
+            ("facts", Json::Num(r.fact_count as f64)),
+            (
+                "retrieval_us",
+                Json::Num(r.retrieval_time.as_micros() as f64),
+            ),
+            ("total_ms", Json::Num(r.total_time.as_millis() as f64)),
+        ]),
+        Err(e) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str(e.to_string())),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::CoordinatorConfig;
+    use crate::data::corpus::corpus_from_texts;
+    use crate::data::hospital::{HospitalConfig, HospitalDataset};
+    use crate::rag::config::RagConfig;
+    use crate::runtime::engine::{Engine, NativeEngine};
+    use std::io::{BufRead, BufReader, Write};
+
+    fn coordinator() -> Arc<Coordinator> {
+        let ds = HospitalDataset::generate(HospitalConfig {
+            trees: 4,
+            ..HospitalConfig::default()
+        });
+        let forest = Arc::new(ds.build_forest());
+        let docs = corpus_from_texts(&ds.documents());
+        let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+        Arc::new(
+            Coordinator::start(
+                forest,
+                docs,
+                engine,
+                RagConfig::default(),
+                CoordinatorConfig { workers: 2, ..Default::default() },
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn respond_builds_json() {
+        let c = coordinator();
+        let json = respond(&c, "describe the hierarchy around cardiology");
+        assert_eq!(json.get("ok"), Some(&Json::Bool(true)));
+        assert!(json.get("answer").unwrap().as_str().unwrap().len() > 10);
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let c = coordinator();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                let (stream, _) = listener.accept().unwrap();
+                handle_conn(c, stream).unwrap();
+            })
+        };
+        let mut client = TcpStream::connect(addr).unwrap();
+        client
+            .write_all(b"what is the parent unit of cardiology\n:quit\n")
+            .unwrap();
+        let mut reader = BufReader::new(client.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "{line}");
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,58 @@
+//! Document corpus for the vector-search stage (Figure 1's first step).
+//!
+//! Wraps dataset documents in a store-ready form: id, title, body and the
+//! padded token batch the embed artifact consumes.
+
+use crate::text::tokenizer::tokenize_padded;
+
+/// One retrievable document.
+#[derive(Clone, Debug)]
+pub struct Document {
+    pub id: u32,
+    pub title: String,
+    pub body: String,
+}
+
+impl Document {
+    /// Token ids for the embed artifact (`max_tokens` padded).
+    pub fn tokens(&self, max_tokens: usize) -> Vec<i32> {
+        let text = format!("{} {}", self.title, self.body);
+        tokenize_padded(&text, max_tokens)
+    }
+}
+
+/// Build documents from raw texts.
+pub fn corpus_from_texts(texts: &[String]) -> Vec<Document> {
+    texts
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let title = t.split('.').next().unwrap_or("").trim().to_string();
+            Document { id: i as u32, title, body: t.clone() }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_documents_with_titles() {
+        let texts = vec![
+            "Mercy General Hospital was founded in 1910. It grew.".to_string(),
+            "Riverside Clinic history. Ward nine opened.".to_string(),
+        ];
+        let docs = corpus_from_texts(&texts);
+        assert_eq!(docs.len(), 2);
+        assert_eq!(docs[0].title, "Mercy General Hospital was founded in 1910");
+        assert_eq!(docs[1].id, 1);
+    }
+
+    #[test]
+    fn tokens_padded() {
+        let docs = corpus_from_texts(&["short doc.".to_string()]);
+        let toks = docs[0].tokens(32);
+        assert_eq!(toks.len(), 32);
+    }
+}

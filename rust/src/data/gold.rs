@@ -1,0 +1,96 @@
+//! Gold facts for accuracy judging — the langsmith/doubao replacement's
+//! ground truth (DESIGN.md §Substitutions).
+//!
+//! For a query entity, the gold set is its full ancestor chain at its
+//! first forest occurrence. Facts within `context_levels` of the entity
+//! are *answerable* (a correct retriever + generator will state them);
+//! deeper facts are *unanswerable* given the n-level context window —
+//! they model the knowledge the paper's LLM also failed to produce,
+//! which is what pins accuracy near the paper's ~66% plateau for every
+//! algorithm. Any filter-induced retrieval loss lowers recall below the
+//! plateau, so the judge remains sensitive to real degradations.
+
+use crate::forest::traverse::ancestors;
+use crate::forest::Forest;
+
+/// One gold (entity, ancestor) fact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GoldFact {
+    pub entity: String,
+    pub related: String,
+    /// Hierarchy distance (1 = parent).
+    pub distance: u8,
+}
+
+/// Gold facts for one entity: the ancestor chain at its first occurrence.
+pub fn gold_for_entity(forest: &Forest, entity: &str) -> Vec<GoldFact> {
+    let Some(id) = forest.entity_id(entity) else {
+        return Vec::new();
+    };
+    let addrs = forest.scan_addresses(id);
+    let Some(&first) = addrs.first() else {
+        return Vec::new();
+    };
+    ancestors(forest, first, usize::MAX)
+        .into_iter()
+        .enumerate()
+        .map(|(i, anc)| GoldFact {
+            entity: entity.to_string(),
+            related: forest.entity_name(anc).to_string(),
+            distance: i as u8 + 1,
+        })
+        .collect()
+}
+
+/// Fraction of gold facts answerable within `n` context levels — the
+/// theoretical accuracy ceiling of the workload (should sit near the
+/// paper's ~0.66 plateau for the default generators).
+pub fn answerable_fraction(gold: &[GoldFact], n: usize) -> f64 {
+    if gold.is_empty() {
+        return 0.0;
+    }
+    let ok = gold.iter().filter(|g| (g.distance as usize) <= n).count();
+    ok as f64 / gold.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::Tree;
+
+    fn forest() -> Forest {
+        let mut f = Forest::new();
+        let ids: Vec<_> = ["a", "b", "c", "d", "e"].iter().map(|n| f.intern(n)).collect();
+        let mut t = Tree::with_root(ids[0]);
+        let b = t.add_child(0, ids[1]);
+        let c = t.add_child(b, ids[2]);
+        let d = t.add_child(c, ids[3]);
+        t.add_child(d, ids[4]);
+        f.add_tree(t);
+        f
+    }
+
+    #[test]
+    fn full_chain_with_distances() {
+        let f = forest();
+        let g = gold_for_entity(&f, "e");
+        let rel: Vec<(&str, u8)> =
+            g.iter().map(|x| (x.related.as_str(), x.distance)).collect();
+        assert_eq!(rel, vec![("d", 1), ("c", 2), ("b", 3), ("a", 4)]);
+    }
+
+    #[test]
+    fn answerable_fraction_counts() {
+        let f = forest();
+        let g = gold_for_entity(&f, "e");
+        assert!((answerable_fraction(&g, 3) - 0.75).abs() < 1e-9);
+        assert!((answerable_fraction(&g, 4) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn root_has_no_gold() {
+        let f = forest();
+        assert!(gold_for_entity(&f, "a").is_empty());
+        assert!(gold_for_entity(&f, "zz").is_empty());
+    }
+}

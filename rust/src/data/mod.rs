@@ -1,0 +1,15 @@
+//! Synthetic datasets, corpora, workloads and gold answers — the
+//! substitutes for the paper's UNHCR org chart and private hospital
+//! histories (see DESIGN.md §Substitutions for the mapping).
+
+pub mod corpus;
+pub mod gold;
+pub mod hospital;
+pub mod orgchart;
+pub mod trace;
+pub mod vocab;
+pub mod workload;
+
+pub use hospital::{Hospital, HospitalConfig, HospitalDataset};
+pub use orgchart::{OrgChartConfig, OrgChartDataset};
+pub use workload::{Query, Workload, WorkloadConfig};

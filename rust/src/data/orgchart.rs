@@ -1,0 +1,132 @@
+//! Synthetic UNHCR-style organizational chart — stand-in for the T-RAG
+//! paper's org-chart dataset (§4.3, "the English dataset of the UNHCR
+//! organizational chart"). Pre-segmented into entities (no raw-text
+//! path): headquarters -> divisions -> regional bureaus -> field teams.
+
+use crate::data::vocab::{ORG_DIVISIONS, ORG_REGIONS, ORG_TEAMS};
+use crate::forest::{builder::build_trees, Forest};
+use crate::util::rng::Rng;
+
+/// Generator parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct OrgChartConfig {
+    /// Number of organizations (= trees).
+    pub trees: usize,
+    /// Divisions per organization.
+    pub divisions: usize,
+    /// Bureaus per division.
+    pub bureaus: usize,
+    /// Teams per bureau.
+    pub teams: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for OrgChartConfig {
+    fn default() -> Self {
+        OrgChartConfig { trees: 10, divisions: 6, bureaus: 3, teams: 4, seed: 0x0A61 }
+    }
+}
+
+/// The generated dataset: relation groups per organization.
+#[derive(Clone, Debug)]
+pub struct OrgChartDataset {
+    pub orgs: Vec<(String, Vec<(String, String)>)>,
+}
+
+impl OrgChartDataset {
+    /// Generate deterministically.
+    pub fn generate(cfg: OrgChartConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mut orgs = Vec::with_capacity(cfg.trees);
+        for i in 0..cfg.trees {
+            let root = format!("organization {i}");
+            let mut rels = Vec::new();
+            let ndiv = rng.range(cfg.divisions / 2 + 1, cfg.divisions + 2);
+            for d in 0..ndiv {
+                // shared division names across orgs (cross-tree entities)
+                let div = ORG_DIVISIONS[d % ORG_DIVISIONS.len()].to_string();
+                rels.push((div.clone(), root.clone()));
+                let nbur = rng.range(1, cfg.bureaus + 1);
+                for b in 0..nbur {
+                    let bureau = format!(
+                        "{} {}",
+                        ORG_REGIONS[(d + b) % ORG_REGIONS.len()],
+                        div.split_whitespace().next().unwrap()
+                    );
+                    rels.push((bureau.clone(), div.clone()));
+                    let nteam = rng.range(1, cfg.teams + 1);
+                    for t in 0..nteam {
+                        let team = format!(
+                            "{} {} {}",
+                            bureau.split_whitespace().next().unwrap(),
+                            ORG_TEAMS[(b + t) % ORG_TEAMS.len()],
+                            t
+                        );
+                        rels.push((team, bureau.clone()));
+                    }
+                }
+            }
+            orgs.push((root, rels));
+        }
+        OrgChartDataset { orgs }
+    }
+
+    /// Build the forest.
+    pub fn build_forest(&self) -> Forest {
+        let mut forest = Forest::new();
+        for (_, rels) in &self.orgs {
+            build_trees(&mut forest, rels);
+        }
+        forest
+    }
+
+    /// Summary documents (vector-search corpus): one per organization.
+    pub fn documents(&self) -> Vec<String> {
+        self.orgs
+            .iter()
+            .map(|(root, rels)| {
+                let mut doc = format!("{root} structure overview.");
+                for (c, p) in rels.iter().take(40) {
+                    doc.push_str(&format!(" The {c} reports to {p}."));
+                }
+                doc
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let a = OrgChartDataset::generate(OrgChartConfig::default());
+        let b = OrgChartDataset::generate(OrgChartConfig::default());
+        assert_eq!(a.orgs.len(), 10);
+        assert_eq!(a.orgs[3].1, b.orgs[3].1);
+    }
+
+    #[test]
+    fn forest_depth_is_three_plus() {
+        let f = OrgChartDataset::generate(OrgChartConfig::default()).build_forest();
+        assert!(f.stats().max_depth >= 3);
+        assert_eq!(f.len(), 10);
+    }
+
+    #[test]
+    fn divisions_shared_across_orgs() {
+        let f = OrgChartDataset::generate(OrgChartConfig::default()).build_forest();
+        let id = f.entity_id("protection division").expect("exists");
+        assert!(f.scan_addresses(id).len() >= 5, "shared across trees");
+    }
+
+    #[test]
+    fn documents_mention_structure() {
+        let ds = OrgChartDataset::generate(OrgChartConfig::default());
+        let docs = ds.documents();
+        assert_eq!(docs.len(), 10);
+        assert!(docs[0].contains("reports to"));
+    }
+}

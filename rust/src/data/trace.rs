@@ -1,0 +1,171 @@
+//! Serving trace record/replay: persist a query workload (with arrival
+//! offsets) as JSON so serving experiments are reproducible across runs
+//! and machines, and so real traces can be replayed against the
+//! coordinator later (`examples/serve_requests --trace-*`).
+
+use std::path::Path;
+
+use crate::data::workload::Workload;
+use crate::error::{CftError, Result};
+use crate::util::json::Json;
+
+/// One traced request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Arrival offset from trace start, in microseconds.
+    pub offset_us: u64,
+    /// Query text.
+    pub query: String,
+}
+
+/// A recorded query trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QueryTrace {
+    pub records: Vec<TraceRecord>,
+}
+
+impl QueryTrace {
+    /// Build a trace from a workload at a fixed arrival rate (req/s).
+    /// `rate <= 0` means all requests arrive at t=0 (closed-loop burst).
+    pub fn from_workload(workload: &Workload, rate_per_s: f64) -> QueryTrace {
+        let gap_us = if rate_per_s > 0.0 {
+            (1e6 / rate_per_s) as u64
+        } else {
+            0
+        };
+        QueryTrace {
+            records: workload
+                .queries
+                .iter()
+                .enumerate()
+                .map(|(i, q)| TraceRecord {
+                    offset_us: gap_us * i as u64,
+                    query: q.text.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Serialize to JSON text.
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            (
+                "records",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("offset_us", Json::Num(r.offset_us as f64)),
+                                ("query", Json::Str(r.query.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string()
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json(text: &str) -> Result<QueryTrace> {
+        let doc = Json::parse(text)
+            .map_err(|e| CftError::Config(format!("bad trace: {e}")))?;
+        let records = doc
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| CftError::Config("trace missing 'records'".into()))?
+            .iter()
+            .map(|r| {
+                Ok(TraceRecord {
+                    offset_us: r
+                        .get("offset_us")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| {
+                            CftError::Config("record missing offset_us".into())
+                        })? as u64,
+                    query: r
+                        .get("query")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| {
+                            CftError::Config("record missing query".into())
+                        })?
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(QueryTrace { records })
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    /// Read from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<QueryTrace> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::hospital::{HospitalConfig, HospitalDataset};
+    use crate::data::workload::WorkloadConfig;
+
+    fn workload() -> Workload {
+        let f = HospitalDataset::generate(HospitalConfig {
+            trees: 4,
+            ..HospitalConfig::default()
+        })
+        .build_forest();
+        Workload::generate(&f, WorkloadConfig { queries: 5, ..Default::default() })
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = QueryTrace::from_workload(&workload(), 100.0);
+        let back = QueryTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.len(), 5);
+        assert_eq!(back.records[1].offset_us, 10_000);
+    }
+
+    #[test]
+    fn burst_trace_all_at_zero() {
+        let t = QueryTrace::from_workload(&workload(), 0.0);
+        assert!(t.records.iter().all(|r| r.offset_us == 0));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = QueryTrace::from_workload(&workload(), 50.0);
+        let path = std::env::temp_dir().join("cft_trace_test.json");
+        t.save(&path).unwrap();
+        let back = QueryTrace::load(&path).unwrap();
+        assert_eq!(t, back);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        assert!(QueryTrace::from_json("{}").is_err());
+        assert!(QueryTrace::from_json("not json").is_err());
+    }
+}

@@ -1,0 +1,78 @@
+//! Shared name vocabulary for the synthetic dataset generators.
+//!
+//! Both generators compose entity names from realistic stems so that the
+//! tokenizer, NER and relation extractor all see hospital-/org-chart-like
+//! surface forms rather than `entity-17`.
+
+/// Hospital department stems (shared across hospitals — the cross-tree
+/// entity sharing that makes CF block lists matter).
+pub const DEPARTMENTS: &[&str] = &[
+    "cardiology", "oncology", "neurology", "radiology", "pediatrics",
+    "surgery", "orthopedics", "dermatology", "pathology", "pharmacy",
+    "urology", "nephrology", "hematology", "psychiatry", "gastroenterology",
+    "ophthalmology", "anesthesiology", "rheumatology", "endocrinology",
+    "pulmonology", "geriatrics", "obstetrics", "immunology", "neonatology",
+    "toxicology", "virology", "audiology", "neurosurgery", "traumatology",
+    "physiotherapy",
+];
+
+/// Sub-unit stems hung below departments.
+pub const SUBUNITS: &[&str] = &[
+    "icu", "ward", "clinic", "lab", "outpatient unit", "inpatient unit",
+    "emergency room", "operating theatre", "recovery room", "day unit",
+    "research group", "imaging suite", "triage desk", "records office",
+    "blood bank", "isolation ward", "observation unit", "consultation room",
+];
+
+/// Modifiers for composing distinct sub-unit names.
+pub const MODIFIERS: &[&str] = &[
+    "north", "south", "east", "west", "central", "upper", "lower",
+    "first", "second", "third", "fourth", "new", "old", "main", "annex",
+    "red", "blue", "green", "amber", "acute", "chronic", "rapid",
+];
+
+/// Hospital name parts (tree roots — unique per tree).
+pub const HOSPITAL_FIRST: &[&str] = &[
+    "mercy", "saint jude", "riverside", "lakeview", "hillcrest",
+    "northgate", "westfield", "eastbrook", "southport", "granite",
+    "cedar", "willow", "maple", "summit", "harbor", "prairie",
+    "valley", "golden gate", "silver lake", "stone bridge",
+];
+
+/// Hospital name suffixes.
+pub const HOSPITAL_SECOND: &[&str] = &[
+    "general hospital", "medical center", "community hospital",
+    "university hospital", "regional clinic", "memorial hospital",
+    "children's hospital", "teaching hospital",
+];
+
+/// Org-chart (UNHCR-like) division stems.
+pub const ORG_DIVISIONS: &[&str] = &[
+    "protection division", "operations division", "external relations",
+    "resilience service", "emergency service", "field support",
+    "supply service", "legal affairs", "policy service", "data service",
+    "resettlement service", "registration service", "logistics cell",
+    "program unit", "liaison office", "coordination cell",
+];
+
+/// Org-chart regional offices.
+pub const ORG_REGIONS: &[&str] = &[
+    "east africa bureau", "west africa bureau", "middle east bureau",
+    "asia pacific bureau", "europe bureau", "americas bureau",
+    "central asia bureau", "southern africa bureau",
+];
+
+/// Org-chart sub-teams.
+pub const ORG_TEAMS: &[&str] = &[
+    "field office", "sub office", "country team", "desk", "task force",
+    "working group", "secretariat", "focal point",
+];
+
+/// Question templates (`{e}` replaced by an entity mention).
+pub const QUERY_TEMPLATES: &[&str] = &[
+    "where does {e} sit in the organization",
+    "which units report to {e} and who oversees it",
+    "describe the hierarchy around {e}",
+    "what is the parent unit of {e}",
+    "list the structure above and below {e}",
+];

@@ -1,0 +1,36 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All failure modes of the CFT-RAG stack.
+#[derive(Debug, Error)]
+pub enum CftError {
+    /// Artifact loading / manifest problems (run `make artifacts`).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failures.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Bad request or configuration.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Coordinator lifecycle problems (channel closed, worker died).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// I/O.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for CftError {
+    fn from(e: xla::Error) -> Self {
+        CftError::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, CftError>;

@@ -1,0 +1,158 @@
+//! Bloom filter — the baseline probabilistic membership structure
+//! (Bloom 1970), used by the BF / BF2 T-RAG baselines (paper §4.1).
+//!
+//! Standard bit-array + k hash functions via double hashing
+//! (h_i(x) = h1(x) + i·h2(x)), sized from the target false-positive rate:
+//! m = -n·ln(p)/ln(2)², k = (m/n)·ln(2).
+
+/// A fixed-size Bloom filter over 64-bit keys.
+#[derive(Clone, Debug)]
+pub struct BloomFilter {
+    bits: Vec<u64>,
+    nbits: usize,
+    k: u32,
+    items: usize,
+}
+
+impl BloomFilter {
+    /// Sized for `expected_items` at `fp_rate` (clamped to sane bounds).
+    pub fn new(expected_items: usize, fp_rate: f64) -> Self {
+        let n = expected_items.max(1) as f64;
+        let p = fp_rate.clamp(1e-9, 0.5);
+        let m = (-n * p.ln() / (2f64.ln() * 2f64.ln())).ceil().max(8.0) as usize;
+        let k = ((m as f64 / n) * 2f64.ln()).round().clamp(1.0, 16.0) as u32;
+        BloomFilter {
+            bits: vec![0; m.div_ceil(64)],
+            nbits: m,
+            k,
+            items: 0,
+        }
+    }
+
+    #[inline]
+    fn positions(&self, key: u64) -> impl Iterator<Item = usize> + '_ {
+        // double hashing: two independent mixes of the key
+        let h1 = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let h2 = (key ^ 0xDEAD_BEEF_CAFE_F00D).wrapping_mul(0xC2B2_AE3D_27D4_EB4F) | 1;
+        let nbits = self.nbits as u64;
+        (0..self.k as u64).map(move |i| {
+            (h1.wrapping_add(i.wrapping_mul(h2)) % nbits) as usize
+        })
+    }
+
+    /// Insert a key.
+    pub fn insert(&mut self, key: u64) {
+        let positions: Vec<usize> = self.positions(key).collect();
+        for p in positions {
+            self.bits[p / 64] |= 1u64 << (p % 64);
+        }
+        self.items += 1;
+    }
+
+    /// Might the key be present? (false => definitely absent)
+    pub fn contains(&self, key: u64) -> bool {
+        self.positions(key)
+            .all(|p| self.bits[p / 64] & (1u64 << (p % 64)) != 0)
+    }
+
+    /// Union another filter into this one (must be identically sized).
+    pub fn union(&mut self, other: &BloomFilter) {
+        assert_eq!(self.nbits, other.nbits, "union of mismatched blooms");
+        assert_eq!(self.k, other.k);
+        for (a, b) in self.bits.iter_mut().zip(&other.bits) {
+            *a |= b;
+        }
+        self.items += other.items;
+    }
+
+    /// Number of hash functions.
+    pub fn hashes(&self) -> u32 {
+        self.k
+    }
+
+    /// Bit-array size.
+    pub fn nbits(&self) -> usize {
+        self.nbits
+    }
+
+    /// Heap bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.bits.capacity() * 8
+    }
+
+    /// Items inserted (including unions).
+    pub fn items(&self) -> usize {
+        self.items
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::fnv1a;
+
+    fn key(i: u64) -> u64 {
+        fnv1a(&i.to_le_bytes())
+    }
+
+    #[test]
+    fn no_false_negatives() {
+        let mut bf = BloomFilter::new(1000, 0.01);
+        for i in 0..1000 {
+            bf.insert(key(i));
+        }
+        for i in 0..1000 {
+            assert!(bf.contains(key(i)), "false negative {i}");
+        }
+    }
+
+    #[test]
+    fn false_positive_rate_near_target() {
+        let mut bf = BloomFilter::new(10_000, 0.01);
+        for i in 0..10_000 {
+            bf.insert(key(i));
+        }
+        let fps = (100_000..200_000).filter(|&i| bf.contains(key(i))).count();
+        let rate = fps as f64 / 100_000.0;
+        assert!(rate < 0.03, "fp rate {rate} far above 1% target");
+        assert!(rate > 0.001, "fp rate {rate} suspiciously low");
+    }
+
+    #[test]
+    fn empty_filter_contains_nothing() {
+        let bf = BloomFilter::new(100, 0.01);
+        assert!((0..1000).all(|i| !bf.contains(key(i))));
+    }
+
+    #[test]
+    fn union_covers_both_sets() {
+        let mut a = BloomFilter::new(1000, 0.01);
+        let mut b = BloomFilter::new(1000, 0.01);
+        for i in 0..100 {
+            a.insert(key(i));
+        }
+        for i in 100..200 {
+            b.insert(key(i));
+        }
+        a.union(&b);
+        for i in 0..200 {
+            assert!(a.contains(key(i)));
+        }
+    }
+
+    #[test]
+    fn sizing_scales_with_items() {
+        let small = BloomFilter::new(10, 0.01);
+        let big = BloomFilter::new(10_000, 0.01);
+        assert!(big.nbits() > small.nbits() * 100);
+        assert!(small.hashes() >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched")]
+    fn union_size_mismatch_panics() {
+        let mut a = BloomFilter::new(10, 0.01);
+        let b = BloomFilter::new(10_000, 0.01);
+        a.union(&b);
+    }
+}

@@ -1,0 +1,838 @@
+//! The improved Cuckoo Filter — the paper's core contribution (§3).
+//!
+//! A partial-key cuckoo hash table (Fan et al. 2014) whose entries carry,
+//! besides the fingerprint, the paper's two additions:
+//!
+//! * a **temperature** — access counter bumped on every hit; buckets are
+//!   re-sorted by descending temperature during maintenance so linear
+//!   in-bucket scans hit hot entities first (§3.1, ablated in Figure 5);
+//! * the **head of a block linked list** of all forest addresses of the
+//!   entity (§3.1), so one O(1) lookup replaces a whole forest BFS.
+//!
+//! Layout is struct-of-arrays: the hot fingerprint array is scanned on
+//! lookup; temperatures, list heads and the (cold) original keys live in
+//! parallel arrays touched only on hits, maintenance, and expansion.
+//! Expansion doubles the bucket count and re-inserts every live entry
+//! from its stored key — mirroring the paper's "original elements are
+//! re-hashed and migrated" description (the C++ original equally retains
+//! entities to re-hash; the key array is the cold-path cost of dynamic
+//! growth).
+
+use crate::filter::blocklist::{BlockArena, NIL};
+use crate::filter::fingerprint::{alt_index, fingerprint, primary_index};
+use crate::forest::EntityAddress;
+use crate::util::rng::Rng;
+
+/// Tunables (paper values as defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct CuckooConfig {
+    /// Initial bucket count (rounded up to a power of two). Paper: 1024.
+    pub initial_buckets: usize,
+    /// Slots per bucket. Paper: 4.
+    pub slots: usize,
+    /// Fingerprint width in bits. Paper: 12.
+    pub fingerprint_bits: u32,
+    /// Max displacement chain length before declaring the table full.
+    pub max_kicks: usize,
+    /// Expand when load factor would exceed this.
+    pub load_threshold: f64,
+    /// Adaptive temperature sorting (§3.1) — ablation switch.
+    pub sort_by_temperature: bool,
+    /// RNG seed for eviction victim choice.
+    pub seed: u64,
+}
+
+impl Default for CuckooConfig {
+    fn default() -> Self {
+        CuckooConfig {
+            initial_buckets: 1024,
+            slots: 4,
+            fingerprint_bits: 12,
+            max_kicks: 500,
+            load_threshold: 0.94,
+            sort_by_temperature: true,
+            seed: 0xCF17_4A06,
+        }
+    }
+}
+
+/// Counters reported by benches and EXPERIMENTS.md.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CuckooStats {
+    pub inserts: u64,
+    pub kicks: u64,
+    pub expansions: u64,
+    pub lookups: u64,
+    /// slots probed across all lookups (the metric temperature sorting improves)
+    pub slots_probed: u64,
+}
+
+/// A successful lookup: the entity's block-list head.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LookupHit {
+    /// Head of the block linked list of addresses (NIL if entity was
+    /// inserted with no addresses).
+    pub head: u32,
+}
+
+/// The improved Cuckoo Filter.
+#[derive(Clone, Debug)]
+pub struct CuckooFilter {
+    cfg: CuckooConfig,
+    nbuckets: usize,
+    /// hot path: fingerprints, 0 = empty slot; len = nbuckets * slots
+    fps: Vec<u16>,
+    /// temperature per slot
+    temps: Vec<u32>,
+    /// block-list head per slot (NIL when none)
+    heads: Vec<u32>,
+    /// cold path: original keys, used for expansion & exact-match checks
+    keys: Vec<u64>,
+    /// buckets whose temperature order may be stale
+    dirty: Vec<bool>,
+    arena: BlockArena,
+    len: usize,
+    rng: Rng,
+    stats: CuckooStats,
+}
+
+impl Default for CuckooFilter {
+    fn default() -> Self {
+        Self::new(CuckooConfig::default())
+    }
+}
+
+impl CuckooFilter {
+    /// New filter with the given configuration.
+    pub fn new(cfg: CuckooConfig) -> Self {
+        let nbuckets = cfg.initial_buckets.next_power_of_two().max(1);
+        let slots = nbuckets * cfg.slots;
+        CuckooFilter {
+            nbuckets,
+            fps: vec![0; slots],
+            temps: vec![0; slots],
+            heads: vec![NIL; slots],
+            keys: vec![0; slots],
+            dirty: vec![false; nbuckets],
+            arena: BlockArena::new(),
+            len: 0,
+            rng: Rng::new(cfg.seed),
+            stats: CuckooStats::default(),
+            cfg,
+        }
+    }
+
+    /// Entries stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Current bucket count.
+    pub fn buckets(&self) -> usize {
+        self.nbuckets
+    }
+
+    /// Load factor: occupied slots / total slots.
+    pub fn load_factor(&self) -> f64 {
+        self.len as f64 / (self.nbuckets * self.cfg.slots) as f64
+    }
+
+    /// Counters.
+    pub fn stats(&self) -> CuckooStats {
+        self.stats
+    }
+
+    /// The block arena (for reading address lists from a [`LookupHit`]).
+    pub fn arena(&self) -> &BlockArena {
+        &self.arena
+    }
+
+    /// Approximate heap usage in bytes (hot + cold + arena).
+    pub fn memory_bytes(&self) -> usize {
+        self.fps.capacity() * 2
+            + self.temps.capacity() * 4
+            + self.heads.capacity() * 4
+            + self.keys.capacity() * 8
+            + self.dirty.capacity()
+            + self.arena.memory_bytes()
+    }
+
+    /// Bytes on the lookup-critical path only (fingerprint array).
+    pub fn hot_bytes(&self) -> usize {
+        self.fps.capacity() * 2
+    }
+
+    #[inline]
+    fn slot_range(&self, bucket: usize) -> std::ops::Range<usize> {
+        bucket * self.cfg.slots..(bucket + 1) * self.cfg.slots
+    }
+
+    // ---------------------------------------------------------------
+    // Insertion (paper Algorithm 1)
+    // ---------------------------------------------------------------
+
+    /// Insert an entity (by key) with all its forest addresses.
+    ///
+    /// Duplicate keys are rejected (`false`); use [`push_address`] to grow
+    /// an existing entry. Expands automatically: insertion only fails if
+    /// expansion itself cannot place the elements, which cannot happen
+    /// below the load threshold.
+    pub fn insert(&mut self, key: u64, addrs: &[EntityAddress]) -> bool {
+        // Exact duplicate check on the cold keys — a fingerprint-only
+        // check would misreject fresh keys on fingerprint collisions.
+        if self.contains_exact(key) {
+            return false;
+        }
+        if self.load_factor_after_insert() > self.cfg.load_threshold {
+            self.expand();
+        }
+        let head = self.arena.build(addrs);
+        loop {
+            if self.try_place(key, 0, head) {
+                self.len += 1;
+                self.stats.inserts += 1;
+                return true;
+            }
+            // Table too dense for this key's bucket pair: double and retry.
+            self.expand();
+        }
+    }
+
+    fn load_factor_after_insert(&self) -> f64 {
+        (self.len + 1) as f64 / (self.nbuckets * self.cfg.slots) as f64
+    }
+
+    /// Algorithm 1: place (key, temp, head), evicting if necessary.
+    fn try_place(&mut self, key: u64, temp: u32, head: u32) -> bool {
+        let fp = fingerprint(key, self.cfg.fingerprint_bits);
+        let i1 = primary_index(key, self.nbuckets);
+        let i2 = alt_index(i1, fp, self.nbuckets);
+
+        for b in [i1, i2] {
+            if let Some(s) = self.empty_slot(b) {
+                self.write_slot(s, fp, key, temp, head);
+                return true;
+            }
+        }
+
+        // Eviction loop.
+        let mut i = if self.rng.chance(0.5) { i1 } else { i2 };
+        let mut cur = (fp, key, temp, head);
+        for _ in 0..self.cfg.max_kicks {
+            // evict a random resident entry
+            let s = i * self.cfg.slots + self.rng.range(0, self.cfg.slots);
+            let victim = (self.fps[s], self.keys[s], self.temps[s], self.heads[s]);
+            self.write_slot(s, cur.0, cur.1, cur.2, cur.3);
+            cur = victim;
+            self.stats.kicks += 1;
+
+            i = alt_index(i, cur.0, self.nbuckets);
+            if let Some(s2) = self.empty_slot(i) {
+                self.write_slot(s2, cur.0, cur.1, cur.2, cur.3);
+                return true;
+            }
+        }
+        // Undo is unnecessary: the displaced chain is all valid entries;
+        // only `cur` is homeless. Re-place it after expansion.
+        let (_, k, t, h) = cur;
+        self.pending_reinsert(k, t, h);
+        false
+    }
+
+    /// Stash for the single homeless entry after a failed kick chain: we
+    /// expand and re-place it (never lost).
+    fn pending_reinsert(&mut self, key: u64, temp: u32, head: u32) {
+        self.expand();
+        assert!(
+            self.try_place(key, temp, head),
+            "placement must succeed right after expansion"
+        );
+    }
+
+    fn empty_slot(&self, bucket: usize) -> Option<usize> {
+        self.slot_range(bucket).find(|&s| self.fps[s] == 0)
+    }
+
+    fn write_slot(&mut self, s: usize, fp: u16, key: u64, temp: u32, head: u32) {
+        self.fps[s] = fp;
+        self.keys[s] = key;
+        self.temps[s] = temp;
+        self.heads[s] = head;
+        self.dirty[s / self.cfg.slots] = true;
+    }
+
+    // ---------------------------------------------------------------
+    // Lookup + context entry point (paper §3.4)
+    // ---------------------------------------------------------------
+
+    /// Membership probe by fingerprint only — the classic cuckoo-filter
+    /// query, subject to fingerprint false positives.
+    pub fn contains(&self, key: u64) -> bool {
+        let (fp, i1, i2) = self.probe(key);
+        self.find_fp(i1, fp).is_some() || self.find_fp(i2, fp).is_some()
+    }
+
+    /// Exact membership: fingerprint match confirmed against the stored
+    /// key (cold path; used by insert's duplicate check and tests).
+    pub fn contains_exact(&self, key: u64) -> bool {
+        let (fp, i1, i2) = self.probe(key);
+        for b in [i1, i2] {
+            for s in self.slot_range(b) {
+                if self.fps[s] == fp && self.keys[s] == key {
+                    return true;
+                }
+            }
+            if i1 == i2 {
+                break;
+            }
+        }
+        false
+    }
+
+    /// Lookup: on a fingerprint hit, bump the entity's temperature and
+    /// return its block-list head (paper §3.4). Probes at most two
+    /// buckets; within a bucket the scan is linear, which is what the
+    /// temperature ordering accelerates.
+    pub fn lookup(&mut self, key: u64) -> Option<LookupHit> {
+        self.stats.lookups += 1;
+        let (fp, i1, i2) = self.probe(key);
+        for b in [i1, i2] {
+            if let Some(s) = self.find_fp_counting(b, fp) {
+                self.temps[s] = self.temps[s].saturating_add(1);
+                self.dirty[b] = true;
+                return Some(LookupHit { head: self.heads[s] });
+            }
+            if b == i2 && i1 == i2 {
+                break;
+            }
+        }
+        None
+    }
+
+    /// All addresses for a hit (collects the block list).
+    pub fn addresses(&self, hit: LookupHit) -> Vec<EntityAddress> {
+        self.arena.iter(hit.head).collect()
+    }
+
+    /// Iterate a hit's addresses without allocating.
+    pub fn addresses_iter(
+        &self,
+        hit: LookupHit,
+    ) -> impl Iterator<Item = EntityAddress> + '_ {
+        self.arena.iter(hit.head)
+    }
+
+    #[inline]
+    fn probe(&self, key: u64) -> (u16, usize, usize) {
+        let fp = fingerprint(key, self.cfg.fingerprint_bits);
+        let i1 = primary_index(key, self.nbuckets);
+        let i2 = alt_index(i1, fp, self.nbuckets);
+        (fp, i1, i2)
+    }
+
+    /// One 64-bit load of a 4-slot bucket's fingerprints (the default
+    /// layout: 4 × u16 = one word). Requires `cfg.slots == 4`.
+    #[inline]
+    fn bucket_word(&self, bucket: usize) -> u64 {
+        debug_assert_eq!(self.cfg.slots, 4);
+        let base = bucket * 4;
+        debug_assert!(base + 4 <= self.fps.len());
+        // SAFETY: fps holds nbuckets*4 contiguous u16s; base+4 <= len.
+        unsafe { (self.fps.as_ptr().add(base) as *const u64).read_unaligned() }
+    }
+
+    /// SWAR scan of one 4-lane fingerprint word: returns the first slot
+    /// holding `fp` (if any before the first empty lane) and the number
+    /// of slots a linear scan would have probed — so temperature-sorting
+    /// statistics stay exact while the scan itself is branch-light.
+    ///
+    /// Buckets are left-packed (inserts fill the first hole, deletes
+    /// compact), so lanes at/after the first empty lane are all zero.
+    #[inline]
+    fn scan4(word: u64, fp: u16) -> (Option<usize>, u64) {
+        const LO: u64 = 0x0001_0001_0001_0001;
+        const HI: u64 = 0x8000_8000_8000_8000;
+        let pat = (fp as u64).wrapping_mul(LO); // broadcast fp to 4 lanes
+        let x = word ^ pat; // zero lane <=> fingerprint match
+        // first-zero-lane detection; the lowest flagged lane is exact
+        let hit = x.wrapping_sub(LO) & !x & HI;
+        let empty = word.wrapping_sub(LO) & !word & HI;
+        let hit_pos = (hit.trailing_zeros() / 16) as usize; // 4 if none
+        let empty_pos = (empty.trailing_zeros() / 16) as usize; // 4 if none
+        if hit != 0 && hit_pos < empty_pos {
+            (Some(hit_pos), hit_pos as u64 + 1)
+        } else {
+            // linear scan would probe up to and including the first
+            // empty slot, or the whole bucket
+            (None, (empty_pos + 1).min(4) as u64)
+        }
+    }
+
+    #[inline]
+    fn find_fp(&self, bucket: usize, fp: u16) -> Option<usize> {
+        if self.cfg.slots == 4 {
+            let (pos, _) = Self::scan4(self.bucket_word(bucket), fp);
+            return pos.map(|p| bucket * 4 + p);
+        }
+        for s in self.slot_range(bucket) {
+            if self.fps[s] == fp {
+                return Some(s);
+            }
+            if self.fps[s] == 0 {
+                return None; // left-packed: rest of the bucket is empty
+            }
+        }
+        None
+    }
+
+    /// Like `find_fp` but records how many slots were probed (the
+    /// quantity temperature sorting minimizes). Buckets are kept
+    /// left-packed (inserts fill the first empty slot, deletes compact),
+    /// so the scan terminates at the first empty slot.
+    #[inline]
+    fn find_fp_counting(&mut self, bucket: usize, fp: u16) -> Option<usize> {
+        if self.cfg.slots == 4 {
+            let (pos, probes) = Self::scan4(self.bucket_word(bucket), fp);
+            self.stats.slots_probed += probes;
+            return pos.map(|p| bucket * 4 + p);
+        }
+        let base = bucket * self.cfg.slots;
+        for off in 0..self.cfg.slots {
+            self.stats.slots_probed += 1;
+            let cur = self.fps[base + off];
+            if cur == fp {
+                return Some(base + off);
+            }
+            if cur == 0 {
+                return None; // left-packed: rest of the bucket is empty
+            }
+        }
+        None
+    }
+
+    // ---------------------------------------------------------------
+    // Deletion (paper Algorithm 2)
+    // ---------------------------------------------------------------
+
+    /// Remove an entity by key. Exact (keys compared on the cold path to
+    /// avoid deleting a fingerprint-colliding neighbour). Returns whether
+    /// an entry was removed.
+    pub fn delete(&mut self, key: u64) -> bool {
+        let (fp, i1, i2) = self.probe(key);
+        for b in [i1, i2] {
+            let range = self.slot_range(b);
+            for s in range {
+                if self.fps[s] == fp && self.keys[s] == key {
+                    self.fps[s] = 0;
+                    self.keys[s] = 0;
+                    self.temps[s] = 0;
+                    self.heads[s] = NIL;
+                    self.compact_bucket(b, s);
+                    self.dirty[b] = true;
+                    self.len -= 1;
+                    return true;
+                }
+            }
+            if i1 == i2 {
+                break;
+            }
+        }
+        false
+    }
+
+    /// Restore the left-packed invariant after clearing slot `hole`:
+    /// shift the occupied suffix of the bucket one slot left (order of
+    /// survivors — and thus temperature order — is preserved).
+    fn compact_bucket(&mut self, bucket: usize, hole: usize) {
+        let end = (bucket + 1) * self.cfg.slots;
+        let mut dst = hole;
+        for src in hole + 1..end {
+            if self.fps[src] == 0 {
+                break;
+            }
+            self.swap_slots(dst, src);
+            dst += 1;
+        }
+    }
+
+    /// Append a new forest address to an existing entity (dynamic update
+    /// path: a new tree mentions a known entity). Exact-match on key.
+    pub fn push_address(&mut self, key: u64, addr: EntityAddress) -> bool {
+        let (fp, i1, i2) = self.probe(key);
+        for b in [i1, i2] {
+            let range = self.slot_range(b);
+            for s in range {
+                if self.fps[s] == fp && self.keys[s] == key {
+                    self.heads[s] = self.arena.push(self.heads[s], addr);
+                    return true;
+                }
+            }
+            if i1 == i2 {
+                break;
+            }
+        }
+        false
+    }
+
+    // ---------------------------------------------------------------
+    // Maintenance: adaptive temperature sorting (§3.1) + expansion
+    // ---------------------------------------------------------------
+
+    /// Re-sort dirty buckets by descending temperature ("for each bucket,
+    /// if it is free, sort" — we run it between query rounds, exactly how
+    /// the paper's experiment uses idle time). No-op when the ablation
+    /// switch `sort_by_temperature` is off.
+    pub fn maintain(&mut self) {
+        if !self.cfg.sort_by_temperature {
+            return;
+        }
+        for b in 0..self.nbuckets {
+            if self.dirty[b] {
+                self.sort_bucket(b);
+                self.dirty[b] = false;
+            }
+        }
+    }
+
+    /// Insertion-sort one bucket's slots: occupied before empty, higher
+    /// temperature first. Buckets have ≤ 8 slots, so insertion sort wins.
+    fn sort_bucket(&mut self, bucket: usize) {
+        let base = bucket * self.cfg.slots;
+        let n = self.cfg.slots;
+        for i in 1..n {
+            let mut j = i;
+            while j > 0 && self.slot_less(base + j - 1, base + j) {
+                self.swap_slots(base + j - 1, base + j);
+                j -= 1;
+            }
+        }
+    }
+
+    /// Ordering: occupied (fp != 0) outranks empty; then temperature desc.
+    #[inline]
+    fn slot_less(&self, a: usize, b: usize) -> bool {
+        let occ_a = self.fps[a] != 0;
+        let occ_b = self.fps[b] != 0;
+        match (occ_a, occ_b) {
+            (false, true) => true,
+            (true, true) => self.temps[a] < self.temps[b],
+            _ => false,
+        }
+    }
+
+    #[inline]
+    fn swap_slots(&mut self, a: usize, b: usize) {
+        self.fps.swap(a, b);
+        self.keys.swap(a, b);
+        self.temps.swap(a, b);
+        self.heads.swap(a, b);
+    }
+
+    /// Double the bucket count and migrate every live entry by re-hashing
+    /// its stored key (paper §1: "double expansion ... re-hashed and
+    /// migrated"). Temperatures and block lists move with their entries;
+    /// the arena is shared and untouched.
+    fn expand(&mut self) {
+        loop {
+            let new_n = self.nbuckets * 2;
+            let slots = new_n * self.cfg.slots;
+            let old = (
+                std::mem::replace(&mut self.fps, vec![0; slots]),
+                std::mem::replace(&mut self.keys, vec![0; slots]),
+                std::mem::replace(&mut self.temps, vec![0; slots]),
+                std::mem::replace(&mut self.heads, vec![NIL; slots]),
+            );
+            self.dirty = vec![false; new_n];
+            self.nbuckets = new_n;
+            self.stats.expansions += 1;
+
+            let mut ok = true;
+            for s in 0..old.0.len() {
+                if old.0[s] != 0
+                    && !self.try_place_no_expand(old.1[s], old.2[s], old.3[s])
+                {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                return;
+            }
+            // Migration collision storm (vanishingly rare): double again.
+        }
+    }
+
+    /// `try_place` without the recursive expansion fallback (used during
+    /// migration, where failure triggers another doubling of the target).
+    fn try_place_no_expand(&mut self, key: u64, temp: u32, head: u32) -> bool {
+        let fp = fingerprint(key, self.cfg.fingerprint_bits);
+        let i1 = primary_index(key, self.nbuckets);
+        let i2 = alt_index(i1, fp, self.nbuckets);
+        for b in [i1, i2] {
+            if let Some(s) = self.empty_slot(b) {
+                self.write_slot(s, fp, key, temp, head);
+                return true;
+            }
+        }
+        let mut i = if self.rng.chance(0.5) { i1 } else { i2 };
+        let mut cur = (fp, key, temp, head);
+        for _ in 0..self.cfg.max_kicks {
+            let s = i * self.cfg.slots + self.rng.range(0, self.cfg.slots);
+            let victim = (self.fps[s], self.keys[s], self.temps[s], self.heads[s]);
+            self.write_slot(s, cur.0, cur.1, cur.2, cur.3);
+            cur = victim;
+            self.stats.kicks += 1;
+            i = alt_index(i, cur.0, self.nbuckets);
+            if let Some(s2) = self.empty_slot(i) {
+                self.write_slot(s2, cur.0, cur.1, cur.2, cur.3);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Temperature of a key (exact match), if present. Test/bench helper.
+    pub fn temperature(&self, key: u64) -> Option<u32> {
+        let (fp, i1, i2) = self.probe(key);
+        for b in [i1, i2] {
+            for s in self.slot_range(b) {
+                if self.fps[s] == fp && self.keys[s] == key {
+                    return Some(self.temps[s]);
+                }
+            }
+        }
+        None
+    }
+
+    /// Position (0-based) of the key's slot within its bucket — lower is
+    /// cheaper to find. Exposes the effect of temperature sorting.
+    pub fn bucket_position(&self, key: u64) -> Option<usize> {
+        let (fp, i1, i2) = self.probe(key);
+        for b in [i1, i2] {
+            for (off, s) in self.slot_range(b).enumerate() {
+                if self.fps[s] == fp && self.keys[s] == key {
+                    return Some(off);
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::fingerprint::entity_key;
+
+    fn addrs(n: u32) -> Vec<EntityAddress> {
+        (0..n).map(|i| EntityAddress::new(i, i * 2)).collect()
+    }
+
+    fn key(i: u64) -> u64 {
+        entity_key(&format!("entity-{i}"))
+    }
+
+    #[test]
+    fn insert_then_lookup_returns_addresses() {
+        let mut cf = CuckooFilter::default();
+        let a = addrs(5);
+        assert!(cf.insert(key(1), &a));
+        let hit = cf.lookup(key(1)).expect("hit");
+        assert_eq!(cf.addresses(hit), a);
+    }
+
+    #[test]
+    fn missing_key_misses() {
+        let mut cf = CuckooFilter::default();
+        cf.insert(key(1), &addrs(1));
+        assert!(cf.lookup(key(2)).is_none());
+        assert!(!cf.contains(key(2)));
+    }
+
+    #[test]
+    fn duplicate_insert_rejected() {
+        let mut cf = CuckooFilter::default();
+        assert!(cf.insert(key(1), &addrs(1)));
+        assert!(!cf.insert(key(1), &addrs(2)));
+        assert_eq!(cf.len(), 1);
+    }
+
+    #[test]
+    fn delete_removes_and_allows_reinsert() {
+        let mut cf = CuckooFilter::default();
+        cf.insert(key(1), &addrs(3));
+        assert!(cf.delete(key(1)));
+        assert!(!cf.contains(key(1)));
+        assert!(!cf.delete(key(1)), "double delete fails");
+        assert!(cf.insert(key(1), &addrs(2)));
+        let hit = cf.lookup(key(1)).unwrap();
+        assert_eq!(cf.addresses(hit).len(), 2);
+    }
+
+    #[test]
+    fn temperature_bumps_on_lookup() {
+        let mut cf = CuckooFilter::default();
+        cf.insert(key(1), &addrs(1));
+        assert_eq!(cf.temperature(key(1)), Some(0));
+        cf.lookup(key(1));
+        cf.lookup(key(1));
+        assert_eq!(cf.temperature(key(1)), Some(2));
+    }
+
+    #[test]
+    fn no_false_negatives_at_high_load() {
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 64,
+            ..CuckooConfig::default()
+        });
+        let n = 3000u64;
+        for i in 0..n {
+            assert!(cf.insert(key(i), &addrs(1)), "insert {i}");
+        }
+        for i in 0..n {
+            assert!(cf.contains(key(i)), "false negative for {i}");
+        }
+        assert!(cf.stats().expansions > 0, "should have grown");
+        assert!(cf.load_factor() <= 1.0);
+    }
+
+    #[test]
+    fn expansion_preserves_addresses_and_temps() {
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 16,
+            ..CuckooConfig::default()
+        });
+        cf.insert(key(0), &addrs(7));
+        for _ in 0..5 {
+            cf.lookup(key(0));
+        }
+        for i in 1..2000u64 {
+            cf.insert(key(i), &addrs(1));
+        }
+        assert!(cf.stats().expansions >= 1);
+        let hit = cf.lookup(key(0)).unwrap();
+        assert_eq!(cf.addresses(hit).len(), 7);
+        assert_eq!(cf.temperature(key(0)), Some(6));
+    }
+
+    #[test]
+    fn push_address_grows_list() {
+        let mut cf = CuckooFilter::default();
+        cf.insert(key(1), &addrs(2));
+        assert!(cf.push_address(key(1), EntityAddress::new(9, 9)));
+        let hit = cf.lookup(key(1)).unwrap();
+        assert_eq!(cf.addresses(hit).len(), 3);
+        assert!(!cf.push_address(key(2), EntityAddress::new(0, 0)));
+    }
+
+    #[test]
+    fn maintain_sorts_hot_entities_front() {
+        // Two entities forced into the same bucket: look one up many
+        // times; after maintain() it must sit at position 0.
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 1, // single bucket: everything collides
+            slots: 4,
+            load_threshold: 1.0,
+            ..CuckooConfig::default()
+        });
+        let (a, b, c) = (key(10), key(20), key(30));
+        cf.insert(a, &addrs(1));
+        cf.insert(b, &addrs(1));
+        cf.insert(c, &addrs(1));
+        for _ in 0..10 {
+            cf.lookup(c);
+        }
+        cf.lookup(a);
+        cf.maintain();
+        assert_eq!(cf.bucket_position(c), Some(0), "hottest first");
+        // colder entities still findable
+        assert!(cf.contains(a) && cf.contains(b));
+    }
+
+    #[test]
+    fn sorting_disabled_is_a_noop() {
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 1,
+            slots: 4,
+            load_threshold: 1.0,
+            sort_by_temperature: false,
+            ..CuckooConfig::default()
+        });
+        let (a, b) = (key(1), key(2));
+        cf.insert(a, &addrs(1));
+        cf.insert(b, &addrs(1));
+        let before = cf.bucket_position(b);
+        for _ in 0..10 {
+            cf.lookup(b);
+        }
+        cf.maintain();
+        assert_eq!(cf.bucket_position(b), before, "no reorder when disabled");
+    }
+
+    #[test]
+    fn load_factor_tracks_len() {
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 256,
+            ..CuckooConfig::default()
+        });
+        for i in 0..512u64 {
+            cf.insert(key(i), &[]);
+        }
+        assert!((cf.load_factor() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_address_list_insert() {
+        let mut cf = CuckooFilter::default();
+        cf.insert(key(1), &[]);
+        let hit = cf.lookup(key(1)).unwrap();
+        assert_eq!(hit.head, NIL);
+        assert!(cf.addresses(hit).is_empty());
+    }
+
+    #[test]
+    fn stats_count_probes() {
+        let mut cf = CuckooFilter::default();
+        cf.insert(key(1), &addrs(1));
+        cf.lookup(key(1));
+        let s = cf.stats();
+        assert_eq!(s.lookups, 1);
+        assert!(s.slots_probed >= 1);
+    }
+
+    #[test]
+    fn paper_scale_3148_entities_in_1024_buckets() {
+        // §4.5.1: 3,148 entities, 1024 buckets x 4 slots, load 0.7686,
+        // and a near-zero error rate.
+        let mut cf = CuckooFilter::new(CuckooConfig::default());
+        for i in 0..3148u64 {
+            assert!(cf.insert(key(i), &addrs(1)));
+        }
+        assert_eq!(cf.buckets(), 1024, "no expansion needed at 0.77 load");
+        let lf = cf.load_factor();
+        assert!((lf - 0.7686).abs() < 1e-4, "load factor {lf}");
+        // false-positive sweep over foreign keys
+        let fp = (10_000..30_000u64).filter(|&i| cf.contains(key(i))).count();
+        let rate = fp as f64 / 20_000.0;
+        assert!(rate < 0.01, "fp rate {rate}");
+    }
+
+    #[test]
+    fn hot_bytes_much_smaller_than_total() {
+        let mut cf = CuckooFilter::default();
+        for i in 0..1000u64 {
+            cf.insert(key(i), &addrs(2));
+        }
+        assert!(cf.hot_bytes() * 4 < cf.memory_bytes());
+    }
+
+    #[test]
+    fn block_cap_constant_sane() {
+        assert!(crate::filter::blocklist::BLOCK_CAP >= 4);
+    }
+}

@@ -1,0 +1,107 @@
+//! Fingerprints and bucket indexing for the Cuckoo Filter (paper §3.2).
+//!
+//! An entity key (64-bit hash of its name) is reduced to a short
+//! fingerprint `f(x)` (12 bits by default, paper §1) and a primary bucket
+//! `i1 = h(x)`. The alternate bucket is `i2 = i1 XOR h(f(x))` — the
+//! partial-key cuckoo scheme of Fan et al. 2014, chosen so that either
+//! bucket index plus the fingerprint recovers the other (`alt(alt(i)) ==
+//! i`), which is what makes eviction possible without the original key.
+
+use crate::util::rng::fnv1a;
+
+/// Entity key: stable 64-bit hash of the (normalized) entity name.
+pub fn entity_key(name: &str) -> u64 {
+    fnv1a(name.as_bytes())
+}
+
+/// Secondary mix so fingerprint bits are independent of index bits.
+#[inline]
+fn mix(mut h: u64) -> u64 {
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    h ^ (h >> 33)
+}
+
+/// Fingerprint of a key: `bits` wide, never zero (zero marks empty slots).
+#[inline]
+pub fn fingerprint(key: u64, bits: u32) -> u16 {
+    debug_assert!((1..=16).contains(&bits));
+    let mask = ((1u32 << bits) - 1) as u64;
+    let fp = (mix(key) & mask) as u16;
+    if fp == 0 { 1 } else { fp }
+}
+
+/// Primary bucket index `i1 = h(x)` for a table of `nbuckets` (power of 2).
+#[inline]
+pub fn primary_index(key: u64, nbuckets: usize) -> usize {
+    debug_assert!(nbuckets.is_power_of_two());
+    (key as usize) & (nbuckets - 1)
+}
+
+/// Alternate bucket index `i XOR h(f)` — involutive for fixed `nbuckets`.
+#[inline]
+pub fn alt_index(index: usize, fp: u16, nbuckets: usize) -> usize {
+    debug_assert!(nbuckets.is_power_of_two());
+    // hash the fingerprint so sparse fp values still spread across buckets
+    let h = mix(fp as u64) as usize;
+    (index ^ h) & (nbuckets - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_nonzero_and_bounded() {
+        for bits in [8u32, 12, 16] {
+            for k in 0..5000u64 {
+                let fp = fingerprint(k.wrapping_mul(0x9E3779B97F4A7C15), bits);
+                assert!(fp > 0);
+                assert!((fp as u32) < (1 << bits));
+            }
+        }
+    }
+
+    #[test]
+    fn alt_index_is_involution() {
+        let n = 1024;
+        for k in 0..2000u64 {
+            let key = fnv1a(&k.to_le_bytes());
+            let fp = fingerprint(key, 12);
+            let i1 = primary_index(key, n);
+            let i2 = alt_index(i1, fp, n);
+            assert_eq!(alt_index(i2, fp, n), i1, "involution broken");
+        }
+    }
+
+    #[test]
+    fn fingerprints_spread() {
+        // 12-bit fingerprints over 4096 values: expect good coverage
+        let mut seen = vec![false; 1 << 12];
+        for k in 0..20_000u64 {
+            seen[fingerprint(fnv1a(&k.to_le_bytes()), 12) as usize] = true;
+        }
+        let covered = seen.iter().filter(|&&s| s).count();
+        assert!(covered > 3500, "only {covered} fingerprints seen");
+    }
+
+    #[test]
+    fn indexes_spread_over_buckets() {
+        let n = 256;
+        let mut counts = vec![0usize; n];
+        for k in 0..10_000u64 {
+            counts[primary_index(fnv1a(&k.to_le_bytes()), n)] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(min > 10 && max < 100, "skewed: min={min} max={max}");
+    }
+
+    #[test]
+    fn entity_key_stable() {
+        assert_eq!(entity_key("cardiology"), entity_key("cardiology"));
+        assert_ne!(entity_key("cardiology"), entity_key("oncology"));
+    }
+}

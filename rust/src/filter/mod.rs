@@ -1,0 +1,15 @@
+//! Membership-filter substrate: the paper's improved Cuckoo Filter
+//! (fingerprints + temperature + block linked lists) and the Bloom-filter
+//! baselines it is compared against.
+
+pub mod blocklist;
+pub mod bloom;
+pub mod cuckoo;
+pub mod fingerprint;
+pub mod tree_bloom;
+
+pub use blocklist::{BlockArena, BLOCK_CAP, NIL};
+pub use bloom::BloomFilter;
+pub use cuckoo::{CuckooConfig, CuckooFilter, CuckooStats, LookupHit};
+pub use fingerprint::entity_key;
+pub use tree_bloom::BloomForest;

@@ -1,0 +1,118 @@
+//! Per-node subtree Bloom annotations — the substrate of the BF / BF2
+//! T-RAG baselines (paper §4.1): "we incorporate a Bloom Filter at each
+//! node in the entity tree [indicating] whether an entity exists in the
+//! node or its descendants. During retrieval, if a Bloom Filter suggests
+//! that an entity is absent, the search path is pruned."
+
+use crate::filter::bloom::BloomFilter;
+use crate::filter::fingerprint::entity_key;
+use crate::forest::{Forest, NodeIdx};
+
+/// Bloom filters for every node of every tree in a forest.
+#[derive(Clone, Debug)]
+pub struct BloomForest {
+    /// `blooms[tree][node]` — subtree membership filter.
+    blooms: Vec<Vec<BloomFilter>>,
+}
+
+impl BloomForest {
+    /// Annotate `forest` with subtree blooms at the given target
+    /// false-positive rate. All nodes of one tree share a sizing (the
+    /// tree's node count) so parent filters can be unioned from children.
+    pub fn build(forest: &Forest, fp_rate: f64) -> Self {
+        let mut blooms = Vec::with_capacity(forest.len());
+        for tree in forest.trees() {
+            let n = tree.len();
+            let mut per_node: Vec<BloomFilter> =
+                (0..n).map(|_| BloomFilter::new(n, fp_rate)).collect();
+            // children always have larger arena indices than their parent,
+            // so one reverse pass builds bottom-up.
+            for idx in (0..n).rev() {
+                let key = entity_key(forest.entity_name(tree.entity(idx as NodeIdx)));
+                per_node[idx].insert(key);
+                let node = tree.node(idx as NodeIdx);
+                // union children into this node (children already final)
+                for &c in &node.children {
+                    let (head, tail) = per_node.split_at_mut(c as usize);
+                    head[idx].union(&tail[0]);
+                }
+            }
+            blooms.push(per_node);
+        }
+        BloomForest { blooms }
+    }
+
+    /// Might `key` occur at `node` or anywhere below it?
+    #[inline]
+    pub fn might_contain(&self, tree: u32, node: NodeIdx, key: u64) -> bool {
+        self.blooms[tree as usize][node as usize].contains(key)
+    }
+
+    /// Total heap bytes across all node filters.
+    pub fn memory_bytes(&self) -> usize {
+        self.blooms
+            .iter()
+            .flat_map(|t| t.iter().map(BloomFilter::memory_bytes))
+            .sum()
+    }
+
+    /// Total number of node filters.
+    pub fn filters(&self) -> usize {
+        self.blooms.iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::Tree;
+
+    /// hospital -> {cardiology -> {icu}, surgery}
+    fn forest() -> Forest {
+        let mut f = Forest::new();
+        let h = f.intern("hospital");
+        let c = f.intern("cardiology");
+        let s = f.intern("surgery");
+        let i = f.intern("icu");
+        let mut t = Tree::with_root(h);
+        let cn = t.add_child(0, c);
+        t.add_child(0, s);
+        t.add_child(cn, i);
+        f.add_tree(t);
+        f
+    }
+
+    #[test]
+    fn root_bloom_covers_whole_tree() {
+        let f = forest();
+        let bf = BloomForest::build(&f, 0.01);
+        for name in ["hospital", "cardiology", "surgery", "icu"] {
+            assert!(bf.might_contain(0, 0, entity_key(name)), "{name}");
+        }
+    }
+
+    #[test]
+    fn subtree_blooms_scoped() {
+        let f = forest();
+        let bf = BloomForest::build(&f, 0.001);
+        let card_node = 1; // insertion order: root=0, cardiology=1
+        assert!(bf.might_contain(0, card_node, entity_key("icu")));
+        // surgery is a sibling, not under cardiology
+        assert!(!bf.might_contain(0, card_node, entity_key("surgery")));
+    }
+
+    #[test]
+    fn absent_entity_pruned() {
+        let f = forest();
+        let bf = BloomForest::build(&f, 0.001);
+        assert!(!bf.might_contain(0, 0, entity_key("radiology")));
+    }
+
+    #[test]
+    fn filter_count_matches_nodes() {
+        let f = forest();
+        let bf = BloomForest::build(&f, 0.01);
+        assert_eq!(bf.filters(), f.total_nodes());
+        assert!(bf.memory_bytes() > 0);
+    }
+}

@@ -1,0 +1,47 @@
+//! Entity addresses: the (tree, node) coordinates stored in the Cuckoo
+//! Filter's block linked lists (paper §3.1). Compact and `Copy` — eight
+//! bytes — because the CF stores *every* occurrence of every entity.
+
+/// Position of one entity occurrence in the forest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EntityAddress {
+    /// Index of the tree within the forest.
+    pub tree: u32,
+    /// Index of the node within that tree's arena.
+    pub node: u32,
+}
+
+impl EntityAddress {
+    /// Construct an address.
+    pub fn new(tree: u32, node: u32) -> Self {
+        EntityAddress { tree, node }
+    }
+
+    /// Pack into a u64 (tree in high bits) — used for dedup sets.
+    pub fn pack(self) -> u64 {
+        ((self.tree as u64) << 32) | self.node as u64
+    }
+
+    /// Unpack from `pack()` form.
+    pub fn unpack(v: u64) -> Self {
+        EntityAddress { tree: (v >> 32) as u32, node: v as u32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_roundtrip() {
+        let a = EntityAddress::new(600, 12345);
+        assert_eq!(EntityAddress::unpack(a.pack()), a);
+    }
+
+    #[test]
+    fn ordering_by_tree_then_node() {
+        let a = EntityAddress::new(1, 9);
+        let b = EntityAddress::new(2, 0);
+        assert!(a < b);
+    }
+}

@@ -1,0 +1,186 @@
+//! Forest construction from (child, parent) relation tuples — the output
+//! of the §2 pre-processing pipeline. One relation group (one document /
+//! organization) yields one or more trees: every node without a parent in
+//! the group becomes a root.
+//!
+//! The builder is defensive: it tolerates duplicate edges, multiple
+//! parents (first one wins — the relation filter should already have
+//! pruned these) and cycles (back-edges are skipped via a visited set),
+//! so malformed extraction output degrades gracefully instead of hanging.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::forest::forest::Forest;
+use crate::forest::interner::EntityId;
+use crate::forest::tree::Tree;
+
+/// Build trees from one relation group, returning the new tree indices.
+///
+/// `relations` are (child, parent) name pairs, already normalized.
+pub fn build_trees(forest: &mut Forest, relations: &[(String, String)]) -> Vec<u32> {
+    // Intern every name; record first-parent and children adjacency.
+    let mut parent_of: HashMap<EntityId, EntityId> = HashMap::new();
+    let mut children_of: HashMap<EntityId, Vec<EntityId>> = HashMap::new();
+    let mut seen_edges: HashSet<(EntityId, EntityId)> = HashSet::new();
+    let mut order: Vec<EntityId> = Vec::new(); // deterministic iteration
+    let mut known: HashSet<EntityId> = HashSet::new();
+
+    for (child, parent) in relations {
+        let c = forest.intern(child);
+        let p = forest.intern(parent);
+        for id in [p, c] {
+            if known.insert(id) {
+                order.push(id);
+            }
+        }
+        if c == p || !seen_edges.insert((c, p)) {
+            continue; // self-loop or duplicate edge
+        }
+        if parent_of.contains_key(&c) {
+            continue; // second parent: first one wins
+        }
+        parent_of.insert(c, p);
+        children_of.entry(p).or_default().push(c);
+    }
+
+    // Roots: nodes that never appear as a child.
+    let roots: Vec<EntityId> = order
+        .iter()
+        .copied()
+        .filter(|id| !parent_of.contains_key(id))
+        .collect();
+
+    let mut out = Vec::new();
+    let mut placed: HashSet<EntityId> = HashSet::new();
+    for root in roots {
+        let mut tree = Tree::with_root(root);
+        placed.insert(root);
+        // BFS attach children, guarding against cycles.
+        let mut queue = vec![(0u32, root)];
+        while let Some((node_idx, id)) = queue.pop() {
+            if let Some(kids) = children_of.get(&id) {
+                for &k in kids {
+                    if placed.insert(k) {
+                        let ci = tree.add_child(node_idx, k);
+                        queue.push((ci, k));
+                    }
+                }
+            }
+        }
+        out.push(forest.add_tree(tree));
+    }
+
+    // Nodes trapped in pure cycles (no root reaches them): emit each
+    // unplaced strongly-connected remnant as its own single-node tree so
+    // no extracted entity silently vanishes from the knowledge base.
+    for id in order {
+        if !placed.contains(&id) {
+            // break the cycle at this node: attach reachable unplaced nodes
+            let mut tree = Tree::with_root(id);
+            placed.insert(id);
+            let mut queue = vec![(0u32, id)];
+            while let Some((node_idx, nid)) = queue.pop() {
+                if let Some(kids) = children_of.get(&nid) {
+                    for &k in kids {
+                        if placed.insert(k) {
+                            let ci = tree.add_child(node_idx, k);
+                            queue.push((ci, k));
+                        }
+                    }
+                }
+            }
+            out.push(forest.add_tree(tree));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rel(c: &str, p: &str) -> (String, String) {
+        (c.to_string(), p.to_string())
+    }
+
+    #[test]
+    fn single_tree_from_relations() {
+        let mut f = Forest::new();
+        let idxs = build_trees(
+            &mut f,
+            &[
+                rel("cardiology", "hospital"),
+                rel("surgery", "hospital"),
+                rel("icu", "cardiology"),
+            ],
+        );
+        assert_eq!(idxs.len(), 1);
+        let t = f.tree(idxs[0]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(f.entity_name(t.entity(t.root())), "hospital");
+        assert_eq!(t.max_depth(), 2);
+    }
+
+    #[test]
+    fn multiple_roots_make_multiple_trees() {
+        let mut f = Forest::new();
+        let idxs = build_trees(
+            &mut f,
+            &[rel("a", "root1"), rel("b", "root2")],
+        );
+        assert_eq!(idxs.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut f = Forest::new();
+        let idxs = build_trees(
+            &mut f,
+            &[rel("a", "r"), rel("a", "r"), rel("a", "r")],
+        );
+        assert_eq!(f.tree(idxs[0]).len(), 2);
+    }
+
+    #[test]
+    fn second_parent_ignored() {
+        let mut f = Forest::new();
+        let idxs = build_trees(
+            &mut f,
+            &[rel("a", "r1"), rel("a", "r2")],
+        );
+        // a under r1; r2 becomes its own tree
+        assert_eq!(idxs.len(), 2);
+        let sizes: Vec<usize> = idxs.iter().map(|&i| f.tree(i).len()).collect();
+        assert_eq!(sizes, vec![2, 1]);
+    }
+
+    #[test]
+    fn self_loop_dropped() {
+        let mut f = Forest::new();
+        let idxs = build_trees(&mut f, &[rel("x", "x"), rel("y", "x")]);
+        assert_eq!(idxs.len(), 1);
+        assert_eq!(f.tree(idxs[0]).len(), 2);
+    }
+
+    #[test]
+    fn cycle_does_not_hang_and_keeps_entities() {
+        let mut f = Forest::new();
+        let idxs = build_trees(
+            &mut f,
+            &[rel("a", "b"), rel("b", "a")],
+        );
+        // pure 2-cycle: emitted as one tree rooted at the first entity seen
+        assert_eq!(idxs.len(), 1);
+        let total: usize = idxs.iter().map(|&i| f.tree(i).len()).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn same_entity_across_groups_lands_in_both_trees() {
+        let mut f = Forest::new();
+        build_trees(&mut f, &[rel("cardiology", "hospital-a")]);
+        build_trees(&mut f, &[rel("cardiology", "hospital-b")]);
+        let card = f.entity_id("cardiology").unwrap();
+        assert_eq!(f.scan_addresses(card).len(), 2);
+    }
+}

@@ -1,0 +1,185 @@
+//! The entity forest: all trees plus the shared interner. This is the
+//! knowledge base every retrieval algorithm searches; the Cuckoo Filter
+//! indexes *addresses into this structure*.
+
+use std::collections::HashMap;
+
+use crate::forest::address::EntityAddress;
+use crate::forest::interner::{EntityId, Interner};
+use crate::forest::tree::{NodeIdx, Tree};
+
+/// Forest of entity trees with the shared entity interner.
+#[derive(Clone, Debug, Default)]
+pub struct Forest {
+    trees: Vec<Tree>,
+    interner: Interner,
+}
+
+/// Shape statistics (logged by builders, asserted by tests).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ForestStats {
+    pub trees: usize,
+    pub nodes: usize,
+    pub distinct_entities: usize,
+    pub max_depth: u32,
+    pub total_leaves: usize,
+}
+
+impl Forest {
+    /// New empty forest.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern an entity name.
+    pub fn intern(&mut self, name: &str) -> EntityId {
+        self.interner.intern(name)
+    }
+
+    /// Entity id of a name if known.
+    pub fn entity_id(&self, name: &str) -> Option<EntityId> {
+        self.interner.get(name)
+    }
+
+    /// Name of an entity id.
+    pub fn entity_name(&self, id: EntityId) -> &str {
+        self.interner.name(id)
+    }
+
+    /// The interner.
+    pub fn interner(&self) -> &Interner {
+        &self.interner
+    }
+
+    /// Add a tree, returning its index.
+    pub fn add_tree(&mut self, tree: Tree) -> u32 {
+        self.trees.push(tree);
+        (self.trees.len() - 1) as u32
+    }
+
+    /// Tree accessor.
+    pub fn tree(&self, idx: u32) -> &Tree {
+        &self.trees[idx as usize]
+    }
+
+    /// All trees.
+    pub fn trees(&self) -> &[Tree] {
+        &self.trees
+    }
+
+    /// Number of trees.
+    pub fn len(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// True if no trees.
+    pub fn is_empty(&self) -> bool {
+        self.trees.is_empty()
+    }
+
+    /// Total node count across trees.
+    pub fn total_nodes(&self) -> usize {
+        self.trees.iter().map(Tree::len).sum()
+    }
+
+    /// Entity at an address.
+    pub fn entity_at(&self, addr: EntityAddress) -> EntityId {
+        self.tree(addr.tree).entity(addr.node as NodeIdx)
+    }
+
+    /// Exhaustively scan the forest for every address of `entity`
+    /// (ground truth used to validate retrievers and to build the CF).
+    pub fn scan_addresses(&self, entity: EntityId) -> Vec<EntityAddress> {
+        let mut out = Vec::new();
+        for (t, tree) in self.trees.iter().enumerate() {
+            for idx in tree.indices() {
+                if tree.entity(idx) == entity {
+                    out.push(EntityAddress::new(t as u32, idx));
+                }
+            }
+        }
+        out
+    }
+
+    /// Build the full entity -> addresses table in one forest pass.
+    pub fn address_table(&self) -> HashMap<EntityId, Vec<EntityAddress>> {
+        let mut table: HashMap<EntityId, Vec<EntityAddress>> = HashMap::new();
+        for (t, tree) in self.trees.iter().enumerate() {
+            for idx in tree.indices() {
+                table
+                    .entry(tree.entity(idx))
+                    .or_default()
+                    .push(EntityAddress::new(t as u32, idx));
+            }
+        }
+        table
+    }
+
+    /// Shape statistics.
+    pub fn stats(&self) -> ForestStats {
+        ForestStats {
+            trees: self.trees.len(),
+            nodes: self.total_nodes(),
+            distinct_entities: self.interner.len(),
+            max_depth: self.trees.iter().map(Tree::max_depth).max().unwrap_or(0),
+            total_leaves: self.trees.iter().map(Tree::leaves).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_forest() -> Forest {
+        let mut f = Forest::new();
+        let root = f.intern("hospital");
+        let card = f.intern("cardiology");
+        let icu = f.intern("icu");
+        let mut t0 = Tree::with_root(root);
+        let c = t0.add_child(0, card);
+        t0.add_child(c, icu);
+        f.add_tree(t0);
+        let mut t1 = Tree::with_root(f.intern("clinic"));
+        t1.add_child(0, card); // cardiology appears in both trees
+        f.add_tree(t1);
+        f
+    }
+
+    #[test]
+    fn scan_finds_all_occurrences() {
+        let f = sample_forest();
+        let card = f.entity_id("cardiology").unwrap();
+        let addrs = f.scan_addresses(card);
+        assert_eq!(addrs.len(), 2);
+        assert_eq!(addrs[0].tree, 0);
+        assert_eq!(addrs[1].tree, 1);
+    }
+
+    #[test]
+    fn address_table_matches_scan() {
+        let f = sample_forest();
+        let table = f.address_table();
+        for (id, _) in f.interner().iter() {
+            assert_eq!(table.get(&id).cloned().unwrap_or_default(), f.scan_addresses(id));
+        }
+    }
+
+    #[test]
+    fn entity_at_roundtrip() {
+        let f = sample_forest();
+        let icu = f.entity_id("icu").unwrap();
+        let addr = f.scan_addresses(icu)[0];
+        assert_eq!(f.entity_at(addr), icu);
+    }
+
+    #[test]
+    fn stats_counts() {
+        let f = sample_forest();
+        let s = f.stats();
+        assert_eq!(s.trees, 2);
+        assert_eq!(s.nodes, 5);
+        assert_eq!(s.distinct_entities, 4);
+        assert_eq!(s.max_depth, 2);
+    }
+}

@@ -1,0 +1,103 @@
+//! Entity string interning: every distinct entity surface form gets a
+//! dense `EntityId`, so trees, filters and workloads pass around `u32`s
+//! instead of strings on the hot path.
+
+use std::collections::HashMap;
+
+/// Dense id of an interned entity name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EntityId(pub u32);
+
+/// Bidirectional entity-name table.
+#[derive(Clone, Debug, Default)]
+pub struct Interner {
+    map: HashMap<String, EntityId>,
+    names: Vec<String>,
+}
+
+impl Interner {
+    /// New empty interner.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern a name (normalized by the caller), returning its id.
+    pub fn intern(&mut self, name: &str) -> EntityId {
+        if let Some(&id) = self.map.get(name) {
+            return id;
+        }
+        let id = EntityId(self.names.len() as u32);
+        self.names.push(name.to_string());
+        self.map.insert(name.to_string(), id);
+        id
+    }
+
+    /// Lookup without inserting.
+    pub fn get(&self, name: &str) -> Option<EntityId> {
+        self.map.get(name).copied()
+    }
+
+    /// Name of an id. Panics on a foreign id.
+    pub fn name(&self, id: EntityId) -> &str {
+        &self.names[id.0 as usize]
+    }
+
+    /// Number of interned names.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True if nothing interned.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Iterate over all (id, name) pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (EntityId, &str)> {
+        self.names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (EntityId(i as u32), n.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let mut i = Interner::new();
+        let a = i.intern("cardiology");
+        let b = i.intern("cardiology");
+        assert_eq!(a, b);
+        assert_eq!(i.len(), 1);
+    }
+
+    #[test]
+    fn ids_are_dense() {
+        let mut i = Interner::new();
+        let a = i.intern("a");
+        let b = i.intern("b");
+        assert_eq!(a, EntityId(0));
+        assert_eq!(b, EntityId(1));
+    }
+
+    #[test]
+    fn roundtrip_name() {
+        let mut i = Interner::new();
+        let id = i.intern("surgery ward");
+        assert_eq!(i.name(id), "surgery ward");
+        assert_eq!(i.get("surgery ward"), Some(id));
+        assert_eq!(i.get("missing"), None);
+    }
+
+    #[test]
+    fn iter_covers_all() {
+        let mut i = Interner::new();
+        i.intern("x");
+        i.intern("y");
+        let all: Vec<_> = i.iter().map(|(_, n)| n.to_string()).collect();
+        assert_eq!(all, vec!["x", "y"]);
+    }
+}

@@ -1,0 +1,15 @@
+//! The entity forest substrate: interning, arena trees, addresses,
+//! construction from extracted relations, and traversal primitives.
+
+pub mod address;
+pub mod builder;
+#[allow(clippy::module_inception)]
+pub mod forest;
+pub mod interner;
+pub mod traverse;
+pub mod tree;
+
+pub use address::EntityAddress;
+pub use forest::{Forest, ForestStats};
+pub use interner::{EntityId, Interner};
+pub use tree::{Node, NodeIdx, Tree};

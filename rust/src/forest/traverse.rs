@@ -1,0 +1,162 @@
+//! Tree traversal: BFS iteration (the Naive T-RAG search primitive) and
+//! the n-level ancestor/descendant walks used by context generation
+//! (paper Algorithm 3's `H_up` / `H_down`).
+
+use std::collections::VecDeque;
+
+use crate::forest::address::EntityAddress;
+use crate::forest::forest::Forest;
+use crate::forest::interner::EntityId;
+use crate::forest::tree::{NodeIdx, Tree};
+
+/// Breadth-first iterator over a tree's node indices.
+pub struct Bfs<'a> {
+    tree: &'a Tree,
+    queue: VecDeque<NodeIdx>,
+}
+
+impl<'a> Bfs<'a> {
+    /// BFS from the root.
+    pub fn new(tree: &'a Tree) -> Self {
+        let mut queue = VecDeque::new();
+        if !tree.is_empty() {
+            queue.push_back(tree.root());
+        }
+        Bfs { tree, queue }
+    }
+}
+
+impl<'a> Iterator for Bfs<'a> {
+    type Item = NodeIdx;
+
+    fn next(&mut self) -> Option<NodeIdx> {
+        let idx = self.queue.pop_front()?;
+        for &c in &self.tree.node(idx).children {
+            self.queue.push_back(c);
+        }
+        Some(idx)
+    }
+}
+
+/// Up to `n` ancestors of `addr`, nearest first (parent, grandparent, ...).
+pub fn ancestors(forest: &Forest, addr: EntityAddress, n: usize) -> Vec<EntityId> {
+    let tree = forest.tree(addr.tree);
+    let mut out = Vec::new();
+    let mut cur = tree.node(addr.node).parent;
+    while let Some(p) = cur {
+        if out.len() >= n {
+            break;
+        }
+        out.push(tree.entity(p));
+        cur = tree.node(p).parent;
+    }
+    out
+}
+
+/// Descendants of `addr` down to `n` levels, BFS order (children first).
+pub fn descendants(forest: &Forest, addr: EntityAddress, n: usize) -> Vec<EntityId> {
+    descendants_with_depth(forest, addr, n)
+        .into_iter()
+        .map(|(e, _)| e)
+        .collect()
+}
+
+/// Like [`descendants`], also returning each node's distance below `addr`
+/// (1 = direct child).
+pub fn descendants_with_depth(
+    forest: &Forest,
+    addr: EntityAddress,
+    n: usize,
+) -> Vec<(EntityId, u32)> {
+    let tree = forest.tree(addr.tree);
+    let base_depth = tree.node(addr.node).depth;
+    let mut out = Vec::new();
+    let mut queue = VecDeque::new();
+    queue.push_back(addr.node);
+    while let Some(idx) = queue.pop_front() {
+        for &c in &tree.node(idx).children {
+            let d = tree.node(c).depth - base_depth;
+            if d as usize <= n {
+                out.push((tree.entity(c), d));
+                queue.push_back(c);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::tree::Tree;
+
+    /// hospital -> {cardiology -> {icu, ward}, surgery -> {theatre}}
+    fn forest() -> Forest {
+        let mut f = Forest::new();
+        let ids: Vec<EntityId> = ["hospital", "cardiology", "surgery", "icu", "ward", "theatre"]
+            .iter()
+            .map(|n| f.intern(n))
+            .collect();
+        let mut t = Tree::with_root(ids[0]);
+        let card = t.add_child(0, ids[1]);
+        let surg = t.add_child(0, ids[2]);
+        t.add_child(card, ids[3]);
+        t.add_child(card, ids[4]);
+        t.add_child(surg, ids[5]);
+        f.add_tree(t);
+        f
+    }
+
+    #[test]
+    fn bfs_visits_level_order() {
+        let f = forest();
+        let t = f.tree(0);
+        let order: Vec<&str> = Bfs::new(t)
+            .map(|i| f.entity_name(t.entity(i)))
+            .collect();
+        assert_eq!(order, vec!["hospital", "cardiology", "surgery", "icu", "ward", "theatre"]);
+    }
+
+    #[test]
+    fn ancestors_nearest_first() {
+        let f = forest();
+        let icu = f.entity_id("icu").unwrap();
+        let addr = f.scan_addresses(icu)[0];
+        let up: Vec<&str> = ancestors(&f, addr, 5)
+            .iter()
+            .map(|&e| f.entity_name(e))
+            .collect();
+        assert_eq!(up, vec!["cardiology", "hospital"]);
+    }
+
+    #[test]
+    fn ancestors_respects_n() {
+        let f = forest();
+        let icu = f.entity_id("icu").unwrap();
+        let addr = f.scan_addresses(icu)[0];
+        assert_eq!(ancestors(&f, addr, 1).len(), 1);
+        assert_eq!(ancestors(&f, addr, 0).len(), 0);
+    }
+
+    #[test]
+    fn descendants_bfs_and_depth_limited() {
+        let f = forest();
+        let hosp = f.entity_id("hospital").unwrap();
+        let addr = f.scan_addresses(hosp)[0];
+        let one: Vec<&str> = descendants(&f, addr, 1)
+            .iter()
+            .map(|&e| f.entity_name(e))
+            .collect();
+        assert_eq!(one, vec!["cardiology", "surgery"]);
+        let two = descendants(&f, addr, 2);
+        assert_eq!(two.len(), 5);
+    }
+
+    #[test]
+    fn descendants_of_leaf_empty() {
+        let f = forest();
+        let icu = f.entity_id("icu").unwrap();
+        let addr = f.scan_addresses(icu)[0];
+        assert!(descendants(&f, addr, 3).is_empty());
+    }
+}

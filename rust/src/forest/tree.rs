@@ -1,0 +1,121 @@
+//! Arena-allocated entity tree: the hierarchical knowledge structure of
+//! Tree-RAG. Nodes carry an `EntityId`; parent/child links are arena
+//! indices so traversal is pointer-chasing-free and cache-friendly.
+
+use crate::forest::interner::EntityId;
+
+/// Index of a node within its tree's arena.
+pub type NodeIdx = u32;
+
+/// One tree node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// The entity at this node.
+    pub entity: EntityId,
+    /// Parent arena index (`None` for the root).
+    pub parent: Option<NodeIdx>,
+    /// Child arena indices, in insertion order.
+    pub children: Vec<NodeIdx>,
+    /// Depth from the root (root = 0).
+    pub depth: u32,
+}
+
+/// An entity tree.
+#[derive(Clone, Debug)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    /// New tree with a root entity.
+    pub fn with_root(entity: EntityId) -> Self {
+        Tree {
+            nodes: vec![Node { entity, parent: None, children: Vec::new(), depth: 0 }],
+        }
+    }
+
+    /// The root's arena index (always 0).
+    pub fn root(&self) -> NodeIdx {
+        0
+    }
+
+    /// Append a child under `parent`, returning the new node's index.
+    pub fn add_child(&mut self, parent: NodeIdx, entity: EntityId) -> NodeIdx {
+        let idx = self.nodes.len() as NodeIdx;
+        let depth = self.nodes[parent as usize].depth + 1;
+        self.nodes.push(Node { entity, parent: Some(parent), children: Vec::new(), depth });
+        self.nodes[parent as usize].children.push(idx);
+        idx
+    }
+
+    /// Node accessor.
+    pub fn node(&self, idx: NodeIdx) -> &Node {
+        &self.nodes[idx as usize]
+    }
+
+    /// Entity at a node.
+    pub fn entity(&self, idx: NodeIdx) -> EntityId {
+        self.nodes[idx as usize].entity
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True if only a root exists... never empty by construction.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Max depth over all nodes.
+    pub fn max_depth(&self) -> u32 {
+        self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
+    }
+
+    /// Iterate arena indices in insertion (BFS-compatible) order.
+    pub fn indices(&self) -> impl Iterator<Item = NodeIdx> {
+        0..self.nodes.len() as NodeIdx
+    }
+
+    /// Leaf count.
+    pub fn leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.children.is_empty()).count()
+    }
+
+    /// Iterate all nodes.
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(i: u32) -> EntityId {
+        EntityId(i)
+    }
+
+    #[test]
+    fn build_small_tree() {
+        let mut t = Tree::with_root(e(0));
+        let a = t.add_child(t.root(), e(1));
+        let b = t.add_child(t.root(), e(2));
+        let c = t.add_child(a, e(3));
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.node(a).parent, Some(0));
+        assert_eq!(t.node(c).depth, 2);
+        assert_eq!(t.node(0).children, vec![a, b]);
+        assert_eq!(t.max_depth(), 2);
+        assert_eq!(t.leaves(), 2);
+    }
+
+    #[test]
+    fn entities_accessible() {
+        let mut t = Tree::with_root(e(7));
+        let a = t.add_child(0, e(9));
+        assert_eq!(t.entity(0), e(7));
+        assert_eq!(t.entity(a), e(9));
+    }
+}

@@ -1,0 +1,29 @@
+//! # CFT-RAG
+//!
+//! Reproduction of *"CFT-RAG: An Entity Tree Based Retrieval Augmented
+//! Generation Algorithm With Cuckoo Filter"* (Li et al., 2025) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! * Layer 3 (this crate): the improved Cuckoo Filter, the entity forest,
+//!   all baseline retrievers, the pre-processing pipeline, the serving
+//!   coordinator and the benchmark harness.
+//! * Layer 2/1 (build-time Python, `python/compile/`): the embedder /
+//!   scorer / ranker JAX graphs and their Pallas kernels, AOT-lowered to
+//!   `artifacts/*.hlo.txt` and executed here via the PJRT CPU client.
+//!
+//! Quick start: see `examples/quickstart.rs`; architecture: `DESIGN.md`.
+
+pub mod util;
+pub mod text;
+pub mod nlp;
+pub mod forest;
+pub mod filter;
+pub mod retrieval;
+pub mod data;
+pub mod error;
+pub mod runtime;
+pub mod vector;
+pub mod llm;
+pub mod rag;
+pub mod coordinator;
+pub mod bench;

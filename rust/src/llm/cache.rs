@@ -1,0 +1,98 @@
+//! Shared fact-embedding cache for the generator.
+//!
+//! Query workloads have Zipf locality (the same hot entities — thus the
+//! same context-fact sentences — recur across requests), so the
+//! generator's per-sentence embeddings are highly re-usable. The cache
+//! keys on the FNV hash of the sentence and stores the `[embed_dim]`
+//! vector; §Perf records the serving-throughput effect.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::util::rng::fnv1a;
+
+/// Thread-shared sentence-embedding cache with hit/miss counters.
+#[derive(Clone, Debug, Default)]
+pub struct EmbedCache {
+    inner: Arc<Mutex<CacheInner>>,
+}
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    map: HashMap<u64, Arc<Vec<f32>>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl EmbedCache {
+    /// New empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lookup by sentence text.
+    pub fn get(&self, sentence: &str) -> Option<Arc<Vec<f32>>> {
+        let key = fnv1a(sentence.as_bytes());
+        let mut inner = self.inner.lock().unwrap();
+        match inner.map.get(&key).cloned() {
+            Some(v) => {
+                inner.hits += 1;
+                Some(v)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a computed embedding.
+    pub fn put(&self, sentence: &str, embedding: Vec<f32>) {
+        let key = fnv1a(sentence.as_bytes());
+        self.inner
+            .lock()
+            .unwrap()
+            .map
+            .insert(key, Arc::new(embedding));
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.hits, inner.misses)
+    }
+
+    /// Entries cached.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let c = EmbedCache::new();
+        assert!(c.get("a sentence").is_none());
+        c.put("a sentence", vec![1.0, 2.0]);
+        assert_eq!(c.get("a sentence").unwrap().as_slice(), &[1.0, 2.0]);
+        let (hits, misses) = c.stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn shared_across_clones() {
+        let c = EmbedCache::new();
+        let c2 = c.clone();
+        c2.put("x", vec![0.5]);
+        assert!(c.get("x").is_some());
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,237 @@
+//! Answer generation — the deterministic LLM stand-in (DESIGN.md
+//! §Substitutions).
+//!
+//! The paper feeds the assembled prompt to an external LLM. Offline we
+//! generate answers *from the same prompt content* in two steps:
+//!
+//! 1. **Neural fact ranking** (real request-path ML): the query and each
+//!    context fact are embedded by the embed artifact, and the rank
+//!    artifact (Pallas masked-attention kernel) produces attention
+//!    weights; facts are ordered by weight.
+//! 2. **Template realization**: ordered facts are rendered into answer
+//!    sentences.
+//!
+//! Because step 2 states exactly the facts present in the retrieved
+//! context, answer accuracy (judged against gold hierarchy facts)
+//! measures retrieval completeness — the quantity the paper's filters
+//! could affect — while the ~66% plateau emerges from context-window
+//! limits, as in the paper.
+
+use crate::error::Result;
+use crate::llm::prompt::Prompt;
+use crate::retrieval::context::Context;
+use crate::runtime::engine::Engine;
+use crate::text::tokenizer::tokenize_padded;
+
+/// A generated answer plus ranking diagnostics.
+#[derive(Clone, Debug)]
+pub struct Answer {
+    pub text: String,
+    /// (fact sentence, attention weight), ordered by weight desc.
+    pub ranked_facts: Vec<(String, f32)>,
+}
+
+/// Deterministic generator over an [`Engine`].
+pub struct Generator<'a> {
+    engine: &'a dyn Engine,
+    cache: Option<crate::llm::cache::EmbedCache>,
+}
+
+impl<'a> Generator<'a> {
+    /// Wrap an engine.
+    pub fn new(engine: &'a dyn Engine) -> Self {
+        Generator { engine, cache: None }
+    }
+
+    /// Wrap an engine with a shared fact-embedding cache (serving path;
+    /// Zipf-repeated fact sentences skip re-embedding).
+    pub fn with_cache(
+        engine: &'a dyn Engine,
+        cache: crate::llm::cache::EmbedCache,
+    ) -> Self {
+        Generator { engine, cache: Some(cache) }
+    }
+
+    /// Generate an answer for one (query, context) pair.
+    ///
+    /// Facts beyond the artifact's `max_facts` are ranked in chunks and
+    /// merged, so large contexts degrade gracefully rather than truncate.
+    pub fn generate(&self, query: &str, context: &Context, prompt: &Prompt) -> Result<Answer> {
+        let shape = self.engine.shape();
+        let sentences: Vec<String> =
+            context.facts.iter().map(|f| f.render()).collect();
+        if sentences.is_empty() {
+            return Ok(Answer {
+                text: format!(
+                    "No hierarchy information was retrieved for: {query}."
+                ),
+                ranked_facts: Vec::new(),
+            });
+        }
+
+        // Embed the query (batch row 0; rest padding).
+        let mut qtoks = vec![0i32; shape.batch * shape.max_tokens];
+        qtoks[..shape.max_tokens]
+            .copy_from_slice(&tokenize_padded(query, shape.max_tokens));
+        let qemb_all = self.engine.embed(&qtoks)?;
+        let qrow = &qemb_all[..shape.embed_dim];
+
+        // Rank fact sentences chunk by chunk.
+        let mut ranked: Vec<(String, f32)> = Vec::with_capacity(sentences.len());
+        for chunk in sentences.chunks(shape.max_facts) {
+            let weights = self.rank_chunk(qrow, chunk)?;
+            ranked.extend(
+                chunk
+                    .iter()
+                    .cloned()
+                    .zip(weights.iter().copied().take(chunk.len())),
+            );
+        }
+        ranked.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap().then_with(|| a.0.cmp(&b.0))
+        });
+
+        // Realize the answer: every fact is stated, hottest first (the
+        // prompt demands explicit relationships; ordering mirrors the
+        // attention weights an LLM would put on them).
+        let mut text = format!("Answer (context: {} documents): ", prompt.documents.len());
+        for (s, _) in &ranked {
+            text.push_str(s);
+            text.push_str(". ");
+        }
+        Ok(Answer { text, ranked_facts: ranked })
+    }
+
+    /// Rank up to `max_facts` sentences against a query embedding row.
+    fn rank_chunk(&self, qrow: &[f32], sentences: &[String]) -> Result<Vec<f32>> {
+        let shape = self.engine.shape();
+        debug_assert!(sentences.len() <= shape.max_facts);
+
+        // Embed the fact sentences (cache-aware), batching the misses.
+        let d = shape.embed_dim;
+        let mut fact_embs: Vec<f32> = vec![0.0; sentences.len() * d];
+        let mut misses: Vec<usize> = Vec::new();
+        for (i, s) in sentences.iter().enumerate() {
+            match self.cache.as_ref().and_then(|c| c.get(s)) {
+                Some(v) => fact_embs[i * d..(i + 1) * d].copy_from_slice(&v),
+                None => misses.push(i),
+            }
+        }
+        for chunk in misses.chunks(shape.batch) {
+            let mut toks = vec![0i32; shape.batch * shape.max_tokens];
+            for (bi, &i) in chunk.iter().enumerate() {
+                toks[bi * shape.max_tokens..(bi + 1) * shape.max_tokens]
+                    .copy_from_slice(&tokenize_padded(
+                        &sentences[i],
+                        shape.max_tokens,
+                    ));
+            }
+            let emb = self.engine.embed(&toks)?;
+            for (bi, &i) in chunk.iter().enumerate() {
+                let row = &emb[bi * d..(bi + 1) * d];
+                fact_embs[i * d..(i + 1) * d].copy_from_slice(row);
+                if let Some(c) = &self.cache {
+                    c.put(&sentences[i], row.to_vec());
+                }
+            }
+        }
+
+        // One rank call: batch row 0 carries the real request.
+        let mut q = vec![0f32; shape.batch * shape.embed_dim];
+        q[..shape.embed_dim].copy_from_slice(qrow);
+        let mut facts = vec![0f32; shape.batch * shape.max_facts * shape.embed_dim];
+        facts[..fact_embs.len()].copy_from_slice(&fact_embs);
+        let mut lens = vec![0i32; shape.batch];
+        lens[0] = sentences.len() as i32;
+        let w = self.engine.rank(&q, &facts, &lens)?;
+        Ok(w[..shape.max_facts].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retrieval::context::{ContextFact, Direction};
+    use crate::runtime::engine::NativeEngine;
+
+    fn ctx(pairs: &[(&str, &str)]) -> Context {
+        Context {
+            facts: pairs
+                .iter()
+                .map(|(e, r)| ContextFact {
+                    entity: e.to_string(),
+                    related: r.to_string(),
+                    direction: Direction::Up,
+                    tree: 0,
+                    distance: 1,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn states_all_facts() {
+        let e = NativeEngine::new();
+        let g = Generator::new(&e);
+        let c = ctx(&[("icu", "cardiology"), ("pharmacy", "hospital")]);
+        let p = Prompt::assemble(vec![], &c, "where is the icu");
+        let a = g.generate("where is the icu", &c, &p).unwrap();
+        assert!(a.text.contains("icu is under cardiology"));
+        assert!(a.text.contains("pharmacy is under hospital"));
+        assert_eq!(a.ranked_facts.len(), 2);
+    }
+
+    #[test]
+    fn relevant_fact_ranked_first() {
+        let e = NativeEngine::new();
+        let g = Generator::new(&e);
+        let c = ctx(&[
+            ("logistics warehouse", "supply division"),
+            ("cardiology icu", "cardiology"),
+        ]);
+        let p = Prompt::assemble(vec![], &c, "tell me about the cardiology icu");
+        let a = g
+            .generate("tell me about the cardiology icu", &c, &p)
+            .unwrap();
+        assert!(
+            a.ranked_facts[0].0.contains("cardiology icu"),
+            "ranking: {:?}",
+            a.ranked_facts
+        );
+    }
+
+    #[test]
+    fn empty_context_graceful() {
+        let e = NativeEngine::new();
+        let g = Generator::new(&e);
+        let c = Context::default();
+        let p = Prompt::assemble(vec![], &c, "anything");
+        let a = g.generate("anything", &c, &p).unwrap();
+        assert!(a.text.contains("No hierarchy information"));
+    }
+
+    #[test]
+    fn many_facts_chunked() {
+        let e = NativeEngine::new();
+        let shape = e.shape();
+        let pairs: Vec<(String, String)> = (0..shape.max_facts + 10)
+            .map(|i| (format!("unit{i}"), format!("parent{i}")))
+            .collect();
+        let c = Context {
+            facts: pairs
+                .iter()
+                .map(|(a, b)| ContextFact {
+                    entity: a.clone(),
+                    related: b.clone(),
+                    direction: Direction::Up,
+                    tree: 0,
+                    distance: 1,
+                })
+                .collect(),
+        };
+        let g = Generator::new(&e);
+        let p = Prompt::assemble(vec![], &c, "unit3");
+        let a = g.generate("unit3", &c, &p).unwrap();
+        assert_eq!(a.ranked_facts.len(), shape.max_facts + 10);
+    }
+}

@@ -1,0 +1,113 @@
+//! Deterministic answer-accuracy judge — the langsmith/doubao stand-in
+//! (paper §4.4 uses an LLM scoring framework; see DESIGN.md
+//! §Substitutions for why fact-recall preserves the comparison).
+//!
+//! Accuracy of an answer = fraction of the query's gold facts whose
+//! related entity is stated in the answer in relation to its entity.
+
+use crate::data::gold::GoldFact;
+
+/// Judgement for one answer.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Judgement {
+    pub gold_total: usize,
+    pub gold_recalled: usize,
+}
+
+impl Judgement {
+    /// Accuracy in [0, 1]; empty gold judges as 1.0 (nothing to miss).
+    pub fn accuracy(&self) -> f64 {
+        if self.gold_total == 0 {
+            1.0
+        } else {
+            self.gold_recalled as f64 / self.gold_total as f64
+        }
+    }
+
+    /// Merge (for averaging across a workload).
+    pub fn merge(&mut self, other: Judgement) {
+        self.gold_total += other.gold_total;
+        self.gold_recalled += other.gold_recalled;
+    }
+}
+
+/// Judge one answer against its gold facts.
+///
+/// A gold fact (entity, related) counts as recalled when the answer
+/// contains a statement linking them (both names present in one
+/// sentence-ish window, or an explicit "entity is under related").
+pub fn judge(answer: &str, gold: &[GoldFact]) -> Judgement {
+    let answer_lc = answer.to_lowercase();
+    let sentences: Vec<&str> = answer_lc
+        .split(['.', '\n'])
+        .filter(|s| !s.trim().is_empty())
+        .collect();
+    let mut recalled = 0;
+    for g in gold {
+        let e = g.entity.to_lowercase();
+        let r = g.related.to_lowercase();
+        let hit = sentences
+            .iter()
+            .any(|s| s.contains(&e) && s.contains(&r));
+        if hit {
+            recalled += 1;
+        }
+    }
+    Judgement { gold_total: gold.len(), gold_recalled: recalled }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(e: &str, r: &str, d: u8) -> GoldFact {
+        GoldFact { entity: e.into(), related: r.into(), distance: d }
+    }
+
+    #[test]
+    fn full_recall() {
+        let gold = vec![g("icu", "cardiology", 1), g("icu", "hospital", 2)];
+        let ans = "icu is under cardiology (level 1, tree 0). \
+                   icu is under hospital (level 2, tree 0).";
+        let j = judge(ans, &gold);
+        assert_eq!(j.gold_recalled, 2);
+        assert!((j.accuracy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_recall() {
+        let gold = vec![g("icu", "cardiology", 1), g("icu", "hospital", 2)];
+        let j = judge("icu is under cardiology.", &gold);
+        assert_eq!(j.gold_recalled, 1);
+        assert!((j.accuracy() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn requires_same_sentence() {
+        let gold = vec![g("icu", "hospital", 2)];
+        // both words present but never linked in one sentence
+        let j = judge("the icu is busy. the hospital is old.", &gold);
+        assert_eq!(j.gold_recalled, 0);
+    }
+
+    #[test]
+    fn empty_gold_is_perfect() {
+        let j = judge("anything", &[]);
+        assert!((j.accuracy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Judgement { gold_total: 2, gold_recalled: 1 };
+        a.merge(Judgement { gold_total: 2, gold_recalled: 2 });
+        assert_eq!(a.gold_total, 4);
+        assert!((a.accuracy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn case_insensitive() {
+        let gold = vec![g("ICU", "Cardiology", 1)];
+        let j = judge("The icu is under cardiology today.", &gold);
+        assert_eq!(j.gold_recalled, 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Prompt assembly, the deterministic answer generator (LLM stand-in,
+//! backed by the rank artifact's attention kernel) and the accuracy judge.
+
+pub mod cache;
+pub mod generator;
+pub mod judge;
+pub mod prompt;
+
+pub use cache::EmbedCache;
+pub use generator::{Answer, Generator};
+pub use judge::{judge, Judgement};
+pub use prompt::Prompt;

@@ -1,0 +1,81 @@
+//! Prompt assembly (Figure 1's final pre-LLM step): system prompt +
+//! retrieved documents + hierarchical context + user query.
+
+use crate::retrieval::context::Context;
+
+/// The system preamble fused into every prompt.
+pub const SYSTEM_PROMPT: &str = "You are an assistant answering questions \
+about organizational hierarchies. Use ONLY the provided context. State \
+each relationship explicitly.";
+
+/// A fully assembled prompt.
+#[derive(Clone, Debug)]
+pub struct Prompt {
+    pub system: String,
+    pub documents: Vec<String>,
+    pub context: String,
+    pub query: String,
+}
+
+impl Prompt {
+    /// Assemble from pipeline pieces.
+    pub fn assemble(documents: Vec<String>, context: &Context, query: &str) -> Prompt {
+        Prompt {
+            system: SYSTEM_PROMPT.to_string(),
+            documents,
+            context: context.render(),
+            query: query.to_string(),
+        }
+    }
+
+    /// Render to the flat string an LLM would consume.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("[system]\n");
+        out.push_str(&self.system);
+        out.push_str("\n\n[documents]\n");
+        for (i, d) in self.documents.iter().enumerate() {
+            out.push_str(&format!("({i}) {d}\n"));
+        }
+        out.push_str("\n[hierarchy context]\n");
+        out.push_str(&self.context);
+        out.push_str("\n[query]\n");
+        out.push_str(&self.query);
+        out
+    }
+
+    /// Approximate token count (whitespace split) for length accounting.
+    pub fn approx_tokens(&self) -> usize {
+        self.render().split_whitespace().count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retrieval::context::{Context, ContextFact, Direction};
+
+    #[test]
+    fn renders_all_sections() {
+        let ctx = Context {
+            facts: vec![ContextFact {
+                entity: "icu".into(),
+                related: "cardiology".into(),
+                direction: Direction::Up,
+                tree: 0,
+                distance: 1,
+            }],
+        };
+        let p = Prompt::assemble(
+            vec!["Mercy hospital history.".into()],
+            &ctx,
+            "where is the icu",
+        );
+        let text = p.render();
+        assert!(text.contains("[system]"));
+        assert!(text.contains("Mercy hospital history."));
+        assert!(text.contains("icu is under cardiology"));
+        assert!(text.contains("where is the icu"));
+        assert!(p.approx_tokens() > 10);
+    }
+}

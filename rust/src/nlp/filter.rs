@@ -1,0 +1,176 @@
+//! Relationship filtering — paper §2.3.
+//!
+//! After extraction the edge set may violate tree-ness. Four repairs, in
+//! the paper's order:
+//!
+//! 1. **Transitive relations**: if "A→B", "B→C" and the shortcut "A→C"
+//!    all exist, remove the distant relation A→C (transitive reduction).
+//! 2. **Cycle relations**: if a cycle exists, keep only the closest
+//!    relationship — we break cycles by dropping the *latest-extracted*
+//!    edge in the cycle (extraction order approximates textual proximity,
+//!    so earlier = closer).
+//! 3. **Self-pointing edges**: A→A removed.
+//! 4. **Duplicate edges**: repeated (A, B) pruned to one.
+
+use std::collections::{HashMap, HashSet};
+
+/// (child, parent) edge list in extraction order.
+pub type Edges = Vec<(String, String)>;
+
+/// Apply all four §2.3 repairs. Order: self-edges, duplicates, cycles,
+/// transitive reduction (reduction last, so it sees a DAG).
+pub fn filter_relations(edges: &Edges) -> Edges {
+    let mut out: Edges = Vec::new();
+    let mut seen: HashSet<(String, String)> = HashSet::new();
+
+    // 3 + 4: drop self-edges and duplicates, preserving order.
+    for (c, p) in edges {
+        if c == p {
+            continue;
+        }
+        let key = (c.clone(), p.clone());
+        if seen.insert(key) {
+            out.push((c.clone(), p.clone()));
+        }
+    }
+
+    // 2: break cycles. Insert edges one at a time: adding child→parent
+    // closes a cycle iff the child is already reachable walking upward
+    // from the parent. Later edges lose (extraction order ≈ proximity).
+    let mut kept: Edges = Vec::new();
+    let mut parents: HashMap<&str, Vec<&str>> = HashMap::new();
+    for (c, p) in &out {
+        if is_ancestor(&parents, p, c) {
+            continue; // edge would close a cycle: drop the later relation
+        }
+        parents.entry(c.as_str()).or_default().push(p.as_str());
+        kept.push((c.clone(), p.clone()));
+    }
+
+    // 1: transitive reduction — remove A→C if a longer path A ⇒ C exists
+    // through the remaining edges.
+    let mut reduced: Edges = Vec::new();
+    for (i, (c, p)) in kept.iter().enumerate() {
+        // Build ancestor map excluding this edge.
+        let mut without: HashMap<&str, Vec<&str>> = HashMap::new();
+        for (j, (c2, p2)) in kept.iter().enumerate() {
+            if i != j {
+                without.entry(c2.as_str()).or_default().push(p2.as_str());
+            }
+        }
+        if is_ancestor(&without, c, p) {
+            // p still reachable from c without the direct edge => distant
+            continue;
+        }
+        reduced.push((c.clone(), p.clone()));
+    }
+    reduced
+}
+
+/// Is `target` reachable from `start` following child→parent edges?
+fn is_ancestor(
+    parents: &HashMap<&str, Vec<&str>>,
+    start: &str,
+    target: &str,
+) -> bool {
+    if start == target {
+        return true;
+    }
+    let mut stack: Vec<&str> = vec![start];
+    let mut visited: HashSet<&str> = HashSet::new();
+    while let Some(n) = stack.pop() {
+        if !visited.insert(n) {
+            continue;
+        }
+        if let Some(ps) = parents.get(n) {
+            for &p in ps {
+                if p == target {
+                    return true;
+                }
+                stack.push(p);
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(c: &str, p: &str) -> (String, String) {
+        (c.to_string(), p.to_string())
+    }
+
+    #[test]
+    fn removes_self_edges() {
+        let out = filter_relations(&vec![e("a", "a"), e("a", "b")]);
+        assert_eq!(out, vec![e("a", "b")]);
+    }
+
+    #[test]
+    fn removes_duplicates() {
+        let out = filter_relations(&vec![e("a", "b"), e("a", "b"), e("a", "b")]);
+        assert_eq!(out, vec![e("a", "b")]);
+    }
+
+    #[test]
+    fn breaks_two_cycle_keeping_earlier() {
+        let out = filter_relations(&vec![e("a", "b"), e("b", "a")]);
+        assert_eq!(out, vec![e("a", "b")]);
+    }
+
+    #[test]
+    fn breaks_long_cycle() {
+        let out = filter_relations(&vec![e("a", "b"), e("b", "c"), e("c", "a")]);
+        assert_eq!(out, vec![e("a", "b"), e("b", "c")]);
+    }
+
+    #[test]
+    fn transitive_reduction_drops_shortcut() {
+        // paper's example: A→B, B→C, A→C  =>  drop A→C
+        let out = filter_relations(&vec![e("a", "b"), e("b", "c"), e("a", "c")]);
+        assert_eq!(out, vec![e("a", "b"), e("b", "c")]);
+    }
+
+    #[test]
+    fn keeps_legitimate_dag_edges() {
+        // siblings under one parent: nothing removed
+        let input = vec![e("x", "r"), e("y", "r"), e("z", "x")];
+        assert_eq!(filter_relations(&input), input);
+    }
+
+    #[test]
+    fn deep_transitive_chain() {
+        // a→b→c→d plus shortcut a→d: shortcut removed
+        let out = filter_relations(&vec![
+            e("a", "b"),
+            e("b", "c"),
+            e("c", "d"),
+            e("a", "d"),
+        ]);
+        assert_eq!(out.len(), 3);
+        assert!(!out.contains(&e("a", "d")));
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(filter_relations(&Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn combined_mess() {
+        let out = filter_relations(&vec![
+            e("icu", "icu"),               // self
+            e("icu", "cardiology"),
+            e("icu", "cardiology"),        // dup
+            e("cardiology", "hospital"),
+            e("icu", "hospital"),          // transitive shortcut
+            e("hospital", "icu"),          // would close a cycle
+        ]);
+        assert_eq!(
+            out,
+            vec![e("icu", "cardiology"), e("cardiology", "hospital")]
+        );
+    }
+}

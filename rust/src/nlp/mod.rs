@@ -1,0 +1,6 @@
+//! NLP pre-processing substrate (paper §2): named-entity recognition,
+//! hierarchical relationship extraction, and relationship filtering.
+
+pub mod filter;
+pub mod ner;
+pub mod relate;

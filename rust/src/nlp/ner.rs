@@ -1,0 +1,192 @@
+//! Named-entity recognition — the SpaCy stand-in (paper §2.1).
+//!
+//! Two recognizers:
+//!
+//! * [`GazetteerNer`] — used on the *query path* (Figure 1: "key entities
+//!   are identified from entity trees"): matches longest n-grams of the
+//!   query against the forest's known entity names. Deterministic and
+//!   exact, which is what the retrieval benchmarks need.
+//! * [`heuristic_entities`] — used on the *pre-processing path* for raw
+//!   text: capitalized-span detection with stopword trimming, the
+//!   classic rule-based NE heuristic.
+
+use std::collections::HashMap;
+
+use crate::text::normalize::{is_capitalized, normalize};
+use crate::text::stopwords::is_stopword;
+
+/// Longest-match gazetteer recognizer over known entity names.
+#[derive(Clone, Debug, Default)]
+pub struct GazetteerNer {
+    /// normalized name -> original name
+    names: HashMap<String, String>,
+    /// longest gazetteer entry, in words
+    max_words: usize,
+}
+
+impl GazetteerNer {
+    /// Build from an iterator of entity names.
+    pub fn new<'a>(names: impl IntoIterator<Item = &'a str>) -> Self {
+        let mut map = HashMap::new();
+        let mut max_words = 1;
+        for name in names {
+            let norm = normalize(name);
+            if norm.is_empty() {
+                continue;
+            }
+            max_words = max_words.max(norm.split_whitespace().count());
+            map.insert(norm, name.to_string());
+        }
+        GazetteerNer { names: map, max_words }
+    }
+
+    /// Number of gazetteer entries.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True if the gazetteer is empty.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Recognize entities in `text`, longest match first, no overlaps.
+    /// Returns the gazetteer's original names in query order.
+    pub fn recognize(&self, text: &str) -> Vec<String> {
+        let norm = normalize(text);
+        let words: Vec<&str> = norm.split_whitespace().collect();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < words.len() {
+            let mut matched = 0;
+            // longest window first
+            let max_w = self.max_words.min(words.len() - i);
+            for w in (1..=max_w).rev() {
+                let cand = words[i..i + w].join(" ");
+                if let Some(orig) = self.names.get(&cand) {
+                    out.push(orig.clone());
+                    matched = w;
+                    break;
+                }
+            }
+            i += if matched > 0 { matched } else { 1 };
+        }
+        out
+    }
+}
+
+/// Heuristic NER for raw text: maximal runs of capitalized words (allowing
+/// inner stopwords like "of"), trimmed of leading/trailing stopwords.
+/// Mirrors what a small statistical NER would produce on clean text.
+pub fn heuristic_entities(raw: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let words: Vec<&str> = raw.split_whitespace().collect();
+    let mut run: Vec<&str> = Vec::new();
+    let mut first_word = true;
+
+    let flush = |run: &mut Vec<&str>, out: &mut Vec<String>| {
+        // trim stopwords at both ends
+        while run
+            .first()
+            .is_some_and(|w| is_stopword(&w.to_lowercase()))
+        {
+            run.remove(0);
+        }
+        while run
+            .last()
+            .is_some_and(|w| is_stopword(&w.to_lowercase()))
+        {
+            run.pop();
+        }
+        if !run.is_empty() {
+            let name = normalize(&run.join(" "));
+            if !name.is_empty() {
+                out.push(name);
+            }
+        }
+        run.clear();
+    };
+
+    for w in words {
+        let clean = w.trim_matches(|c: char| !c.is_alphanumeric());
+        if clean.is_empty() {
+            flush(&mut run, &mut out);
+            first_word = w.ends_with(['.', '!', '?']);
+            continue;
+        }
+        let lower = clean.to_lowercase();
+        let cap = is_capitalized(clean);
+        // Sentence-initial capitals are ambiguous; only extend an existing
+        // run with them, never start one.
+        if cap && (!first_word || !run.is_empty()) {
+            run.push(clean);
+        } else if !run.is_empty() && is_stopword(&lower) {
+            run.push(clean); // allow "Ministry of Health"
+        } else {
+            flush(&mut run, &mut out);
+        }
+        if w.ends_with(['.', '!', '?']) {
+            flush(&mut run, &mut out);
+            first_word = true;
+        } else {
+            first_word = false;
+        }
+    }
+    flush(&mut run, &mut out);
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gazetteer_matches_longest() {
+        let ner = GazetteerNer::new(["cardiology", "cardiology icu", "surgery"]);
+        let found = ner.recognize("tell me about the Cardiology ICU and surgery");
+        assert_eq!(found, vec!["cardiology icu", "surgery"]);
+    }
+
+    #[test]
+    fn gazetteer_no_overlap() {
+        let ner = GazetteerNer::new(["alpha beta", "beta gamma"]);
+        let found = ner.recognize("alpha beta gamma");
+        // greedy left-to-right: "alpha beta" consumes beta
+        assert_eq!(found, vec!["alpha beta"]);
+    }
+
+    #[test]
+    fn gazetteer_normalization_invariant() {
+        let ner = GazetteerNer::new(["Mercy Hospital"]);
+        assert_eq!(ner.recognize("about MERCY hospital?"), vec!["Mercy Hospital"]);
+    }
+
+    #[test]
+    fn gazetteer_empty_query() {
+        let ner = GazetteerNer::new(["x"]);
+        assert!(ner.recognize("").is_empty());
+    }
+
+    #[test]
+    fn heuristic_finds_capitalized_spans() {
+        let ents = heuristic_entities(
+            "The department was renamed Mercy General Hospital in 1954. \
+             Doctors at the Cardiology Center treated patients.",
+        );
+        assert!(ents.contains(&"mercy general hospital".to_string()), "{ents:?}");
+        assert!(ents.contains(&"cardiology center".to_string()), "{ents:?}");
+    }
+
+    #[test]
+    fn heuristic_allows_inner_stopwords() {
+        let ents = heuristic_entities("She joined the Ministry of Health last year.");
+        assert!(ents.contains(&"ministry of health".to_string()), "{ents:?}");
+    }
+
+    #[test]
+    fn heuristic_skips_sentence_initial_cap() {
+        let ents = heuristic_entities("Yesterday the clinic opened. Surgeons arrived.");
+        assert!(ents.is_empty(), "{ents:?}");
+    }
+}

@@ -1,0 +1,310 @@
+//! Relationship extraction — paper §2.2.
+//!
+//! The paper uses dependency-parsing models (GPT-4 / NLP libraries) to
+//! pull hierarchical (child, parent) relations out of text. Offline, we
+//! implement the rule layer the paper describes on top of a pattern
+//! matcher: dependency cues like "belongs to", "is part of", "contains",
+//! prepositional "X of Y", appositives ("X, a unit of Y"), and
+//! conjunction grouping ("A and B belong to C" puts both A and B under C).
+
+use crate::text::normalize::{normalize, sentences};
+
+/// An extracted (child, parent) relation with the matching rule name.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Relation {
+    pub child: String,
+    pub parent: String,
+    /// which pattern produced this (for debugging/ablation)
+    pub rule: &'static str,
+}
+
+impl Relation {
+    fn new(child: &str, parent: &str, rule: &'static str) -> Option<Relation> {
+        let child = clean_phrase(child);
+        let parent = clean_phrase(parent);
+        if child.is_empty() || parent.is_empty() {
+            return None;
+        }
+        Some(Relation { child, parent, rule })
+    }
+}
+
+/// Normalize an entity phrase and strip leading determiners.
+fn clean_phrase(phrase: &str) -> String {
+    let mut s = normalize(phrase);
+    for det in ["the ", "a ", "an ", "its ", "their ", "our "] {
+        if let Some(rest) = s.strip_prefix(det) {
+            s = rest.to_string();
+            break;
+        }
+    }
+    s
+}
+
+/// Child-side dependency cues: `<child> CUE <parent>`. Grouped by the
+/// §2.2 relationship categories (organizational, inclusion, functional,
+/// attribute, geographic, temporal).
+const CHILD_CUES: &[(&str, &str)] = &[
+    // organizational
+    (" belongs to ", "belongs-to"),
+    (" belong to ", "belongs-to"),
+    (" reports to ", "reports-to"),
+    (" report to ", "reports-to"),
+    (" is under ", "under"),
+    (" operates under ", "under"),
+    (" answers to ", "answers-to"),
+    (" is attached to ", "attached-to"),
+    // categorization / appositive-like copulas
+    (" is a unit of ", "unit-of"),
+    (" is a division of ", "division-of"),
+    (" is a department of ", "department-of"),
+    (" is a branch of ", "branch-of"),
+    (" is a subsidiary of ", "subsidiary-of"),
+    // inclusion
+    (" is part of ", "part-of"),
+    (" are part of ", "part-of"),
+    (" is within ", "within"),
+    (" is housed in ", "housed-in"),
+    // functional
+    (" is dependent on ", "dependent-on"),
+    (" depends on ", "dependent-on"),
+    (" is run by ", "run-by"),
+    (" is operated by ", "operated-by"),
+    (" is administered by ", "administered-by"),
+    // geographic
+    (" is located in ", "located-in"),
+    (" is based in ", "based-in"),
+    (" is situated in ", "situated-in"),
+    // temporal (founding lineage treated as hierarchy per §2.2)
+    (" was founded under ", "founded-under"),
+    (" was established under ", "founded-under"),
+    (" was created under ", "founded-under"),
+];
+
+/// Parent-side dependency cues: `<parent> CUE <child>`.
+const PARENT_CUES: &[(&str, &str)] = &[
+    // inclusion
+    (" contains ", "contains"),
+    (" contain ", "contains"),
+    (" includes ", "includes"),
+    (" include ", "includes"),
+    (" comprises ", "comprises"),
+    (" is composed of ", "composed-of"),
+    (" consists of ", "consists-of"),
+    (" encompasses ", "encompasses"),
+    (" houses ", "houses"),
+    (" hosts ", "hosts"),
+    // functional / organizational
+    (" oversees ", "oversees"),
+    (" supervises ", "supervises"),
+    (" manages ", "manages"),
+    (" administers ", "administers"),
+    (" governs ", "governs"),
+    (" coordinates ", "coordinates"),
+    // attribute (possession implies hierarchy in org charts)
+    (" is responsible for ", "responsible-for"),
+];
+
+/// Split a conjunction group ("a, b and c") into its member phrases.
+fn split_conjuncts(phrase: &str) -> Vec<String> {
+    phrase
+        .replace(" as well as ", " and ")
+        .split(" and ")
+        .flat_map(|part| part.split(',').map(str::to_string).collect::<Vec<_>>())
+        .map(|s| clean_phrase(&s))
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// Lowercase + collapse whitespace, *keeping* commas (pattern matching
+/// needs them for appositives and conjunct lists; `clean_phrase` strips
+/// them from the final entity names).
+fn light_lower(sentence: &str) -> String {
+    sentence
+        .to_lowercase()
+        .split_whitespace()
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Extract relations from one sentence.
+fn extract_sentence(sentence: &str) -> Vec<Relation> {
+    let s = format!(" {} ", light_lower(sentence));
+    let mut out = Vec::new();
+
+    for &(cue, rule) in CHILD_CUES {
+        if let Some(pos) = s.find(cue) {
+            let (lhs, rhs) = (&s[..pos], &s[pos + cue.len()..]);
+            // conjunctions on the child side group under the same parent
+            let parent = first_phrase(rhs);
+            for child in split_conjuncts(lhs) {
+                out.extend(Relation::new(&child, &parent, rule));
+            }
+        }
+    }
+    for &(cue, rule) in PARENT_CUES {
+        if let Some(pos) = s.find(cue) {
+            let (lhs, rhs) = (&s[..pos], &s[pos + cue.len()..]);
+            let parent = normalize(lhs);
+            for child in split_conjuncts(rhs) {
+                out.extend(Relation::new(&child, &parent, rule));
+            }
+        }
+    }
+
+    // Appositive: "X, a unit/department/division/branch of Y"
+    for marker in ["a unit of", "a department of", "a division of", "a branch of", "a part of"] {
+        let pat = format!(", {marker} ");
+        if let Some(pos) = s.find(&pat) {
+            let child = &s[..pos];
+            let parent = first_phrase(&s[pos + pat.len()..]);
+            out.extend(Relation::new(child, &parent, "appositive"));
+        }
+    }
+    out
+}
+
+/// First noun-phrase-ish chunk of a right-hand side: stop at conjunction,
+/// comma or relative clause so "belongs to X and was founded" doesn't
+/// swallow the rest of the sentence.
+fn first_phrase(rhs: &str) -> String {
+    let trimmed = rhs.trim();
+    let end = trimmed
+        .find(" and ")
+        .or_else(|| trimmed.find(','))
+        .or_else(|| trimmed.find(" which "))
+        .or_else(|| trimmed.find(" that "))
+        .unwrap_or(trimmed.len());
+    trimmed[..end].to_string()
+}
+
+/// Extract hierarchical relations from a whole document.
+pub fn extract(text: &str) -> Vec<Relation> {
+    sentences(text)
+        .iter()
+        .flat_map(|s| extract_sentence(s))
+        .collect()
+}
+
+/// Convenience: extraction to plain (child, parent) name pairs.
+pub fn extract_pairs(text: &str) -> Vec<(String, String)> {
+    extract(text)
+        .into_iter()
+        .map(|r| (r.child, r.parent))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn belongs_to() {
+        let r = extract("The cardiology ward belongs to Mercy Hospital.");
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].child, "cardiology ward");
+        assert_eq!(r[0].parent, "mercy hospital");
+    }
+
+    #[test]
+    fn contains_reverses_direction() {
+        let r = extract("Mercy Hospital contains the surgery center.");
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].child, "surgery center");
+        assert_eq!(r[0].parent, "mercy hospital");
+    }
+
+    #[test]
+    fn conjunction_groups_children() {
+        let r = extract("The ICU and the burn unit belong to the surgery center.");
+        assert_eq!(r.len(), 2);
+        assert!(r.iter().all(|x| x.parent == "surgery center"));
+        let children: Vec<&str> = r.iter().map(|x| x.child.as_str()).collect();
+        assert!(children.contains(&"icu"));
+        assert!(children.contains(&"burn unit"));
+    }
+
+    #[test]
+    fn comma_conjunction_on_parent_side() {
+        let r = extract("The faculty includes radiology, oncology and pediatrics.");
+        assert_eq!(r.len(), 3);
+        assert!(r.iter().all(|x| x.parent == "faculty"));
+    }
+
+    #[test]
+    fn appositive() {
+        let r = extract("The blood bank, a unit of the pathology lab, opened in 1990.");
+        assert!(r.iter().any(|x| x.child == "blood bank" && x.parent == "pathology lab"),
+            "{r:?}");
+    }
+
+    #[test]
+    fn parent_phrase_stops_at_clause() {
+        let r = extract("The pharmacy belongs to the hospital which was founded in 1900.");
+        assert_eq!(r[0].parent, "hospital");
+    }
+
+    #[test]
+    fn multiple_sentences() {
+        let r = extract(
+            "The ICU belongs to cardiology. Cardiology is part of Mercy Hospital.",
+        );
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn no_relation_no_output() {
+        assert!(extract("The hospital opened in 1950 with ten beds.").is_empty());
+    }
+
+    #[test]
+    fn dependent_on() {
+        let r = extract("The dialysis unit is dependent on the nephrology service.");
+        assert_eq!(r[0].child, "dialysis unit");
+        assert_eq!(r[0].parent, "nephrology service");
+    }
+
+    #[test]
+    fn geographic_located_in() {
+        let r = extract("The burn center is located in the west wing.");
+        assert_eq!(r[0].child, "burn center");
+        assert_eq!(r[0].parent, "west wing");
+        assert_eq!(r[0].rule, "located-in");
+    }
+
+    #[test]
+    fn temporal_founded_under() {
+        let r = extract("The imaging suite was founded under the radiology board.");
+        assert_eq!(r[0].child, "imaging suite");
+        assert_eq!(r[0].parent, "radiology board");
+    }
+
+    #[test]
+    fn functional_operated_by() {
+        let r = extract("The helipad is operated by the emergency service.");
+        assert_eq!(r[0].child, "helipad");
+        assert_eq!(r[0].parent, "emergency service");
+    }
+
+    #[test]
+    fn attribute_responsible_for() {
+        let r = extract("The pathology lab is responsible for the blood bank and the morgue.");
+        assert_eq!(r.len(), 2);
+        assert!(r.iter().all(|x| x.parent == "pathology lab"));
+    }
+
+    #[test]
+    fn parent_side_houses_hosts() {
+        let r = extract("The annex houses the archive. The campus hosts the clinic.");
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].child, "archive");
+        assert_eq!(r[1].child, "clinic");
+    }
+
+    #[test]
+    fn subsidiary_of() {
+        let r = extract("Lakeside Imaging is a subsidiary of Granite Health.");
+        assert_eq!(r[0].child, "lakeside imaging");
+        assert_eq!(r[0].parent, "granite health");
+    }
+}

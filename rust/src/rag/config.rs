@@ -1,0 +1,89 @@
+//! Pipeline configuration.
+
+use crate::filter::cuckoo::CuckooConfig;
+
+/// Which retrieval algorithm backs the pipeline (paper §4.1–4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Naive T-RAG: BFS every tree.
+    Naive,
+    /// Bloom Filter T-RAG.
+    Bloom,
+    /// Improved Bloom Filter T-RAG (skip near-leaf checks).
+    Bloom2,
+    /// Cuckoo Filter T-RAG (the paper's system).
+    Cuckoo,
+}
+
+impl Algorithm {
+    /// All four, in the paper's table order.
+    pub const ALL: [Algorithm; 4] =
+        [Algorithm::Naive, Algorithm::Bloom, Algorithm::Bloom2, Algorithm::Cuckoo];
+
+    /// Table label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algorithm::Naive => "Naive T-RAG",
+            Algorithm::Bloom => "BF T-RAG",
+            Algorithm::Bloom2 => "BF2 T-RAG",
+            Algorithm::Cuckoo => "CF T-RAG",
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s.to_lowercase().as_str() {
+            "naive" => Some(Algorithm::Naive),
+            "bloom" | "bf" => Some(Algorithm::Bloom),
+            "bloom2" | "bf2" => Some(Algorithm::Bloom2),
+            "cuckoo" | "cf" => Some(Algorithm::Cuckoo),
+            _ => None,
+        }
+    }
+}
+
+/// End-to-end pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct RagConfig {
+    /// Retrieval algorithm.
+    pub algorithm: Algorithm,
+    /// Hierarchy levels captured up/down in context (paper's n).
+    pub context_levels: usize,
+    /// Documents fetched by the vector-search stage.
+    pub topk_docs: usize,
+    /// Bloom baselines: per-node filter FP rate.
+    pub bloom_fp_rate: f64,
+    /// Cuckoo filter tuning.
+    pub cuckoo: CuckooConfig,
+}
+
+impl Default for RagConfig {
+    fn default() -> Self {
+        RagConfig {
+            algorithm: Algorithm::Cuckoo,
+            context_levels: 3,
+            topk_docs: 3,
+            bloom_fp_rate: 0.01,
+            cuckoo: CuckooConfig::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_labels() {
+        assert_eq!(Algorithm::parse("cf"), Some(Algorithm::Cuckoo));
+        assert_eq!(Algorithm::parse("NAIVE"), Some(Algorithm::Naive));
+        assert_eq!(Algorithm::parse("bf2"), Some(Algorithm::Bloom2));
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn labels_match_paper() {
+        assert_eq!(Algorithm::Cuckoo.label(), "CF T-RAG");
+        assert_eq!(Algorithm::ALL.len(), 4);
+    }
+}

@@ -1,0 +1,7 @@
+//! The CFT-RAG pipeline (Figure 1) and its configuration.
+
+pub mod config;
+pub mod pipeline;
+
+pub use config::{Algorithm, RagConfig};
+pub use pipeline::{make_retriever, RagPipeline, RagResponse};

@@ -1,0 +1,123 @@
+//! Bloom Filter T-RAG (paper §4.1): every node carries a Bloom filter of
+//! its subtree's entities; a descent is pruned the moment a filter says
+//! the entity cannot be below. Still traverses, but skips cold subtrees.
+
+use std::sync::Arc;
+
+use crate::filter::fingerprint::entity_key;
+use crate::filter::tree_bloom::BloomForest;
+use crate::forest::{EntityAddress, Forest, NodeIdx};
+use crate::retrieval::Retriever;
+
+/// Bloom-pruned retriever.
+pub struct BloomTRag {
+    forest: Arc<Forest>,
+    blooms: BloomForest,
+    fp_rate: f64,
+    bytes: usize,
+}
+
+impl BloomTRag {
+    /// Build subtree blooms over `forest` at the given FP rate.
+    pub fn new(forest: Arc<Forest>, fp_rate: f64) -> Self {
+        let blooms = BloomForest::build(&forest, fp_rate);
+        let bytes = blooms.memory_bytes();
+        BloomTRag { forest, blooms, fp_rate, bytes }
+    }
+
+    fn descend(
+        &self,
+        tree_idx: u32,
+        node: NodeIdx,
+        id: crate::forest::EntityId,
+        key: u64,
+        out: &mut Vec<EntityAddress>,
+    ) {
+        let tree = self.forest.tree(tree_idx);
+        if tree.entity(node) == id {
+            out.push(EntityAddress::new(tree_idx, node));
+        }
+        for &c in &tree.node(node).children {
+            // prune: child's bloom covers child + its descendants
+            if self.blooms.might_contain(tree_idx, c, key) {
+                self.descend(tree_idx, c, id, key, out);
+            }
+        }
+    }
+}
+
+impl Retriever for BloomTRag {
+    fn name(&self) -> &'static str {
+        "BF T-RAG"
+    }
+
+    fn find(&mut self, entity: &str) -> Vec<EntityAddress> {
+        let Some(id) = self.forest.entity_id(entity) else {
+            return Vec::new();
+        };
+        let key = entity_key(entity);
+        let mut out = Vec::new();
+        for t in 0..self.forest.len() as u32 {
+            if self.blooms.might_contain(t, 0, key) {
+                self.descend(t, 0, id, key, &mut out);
+            }
+        }
+        out
+    }
+
+    fn reindex(&mut self, forest: Arc<Forest>, _new_trees: &[u32]) {
+        // per-node blooms are subtree-global: rebuild (the update cost
+        // the CF design avoids — measured by benches/updates.rs)
+        self.blooms = BloomForest::build(&forest, self.fp_rate);
+        self.bytes = self.blooms.memory_bytes();
+        self.forest = forest;
+    }
+
+    fn index_bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::Tree;
+
+    fn forest() -> Arc<Forest> {
+        let mut f = Forest::new();
+        let names: Vec<_> = ["h", "a", "b", "c", "d"]
+            .iter()
+            .map(|n| f.intern(n))
+            .collect();
+        let mut t = Tree::with_root(names[0]);
+        let a = t.add_child(0, names[1]);
+        t.add_child(0, names[2]);
+        t.add_child(a, names[3]);
+        t.add_child(a, names[4]);
+        f.add_tree(t);
+        // second tree without "c"
+        let mut t2 = Tree::with_root(names[2]);
+        t2.add_child(0, names[4]);
+        f.add_tree(t2);
+        Arc::new(f)
+    }
+
+    #[test]
+    fn agrees_with_scan() {
+        let f = forest();
+        let mut r = BloomTRag::new(f.clone(), 0.01);
+        for name in ["h", "a", "b", "c", "d", "zzz"] {
+            let want = f
+                .entity_id(name)
+                .map(|id| f.scan_addresses(id))
+                .unwrap_or_default();
+            assert_eq!(r.find(name), want, "{name}");
+        }
+    }
+
+    #[test]
+    fn reports_index_memory() {
+        let r = BloomTRag::new(forest(), 0.01);
+        assert!(r.index_bytes() > 0);
+    }
+}

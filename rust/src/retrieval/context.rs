@@ -1,0 +1,234 @@
+//! Context generation — paper Algorithm 3 / §3.4.
+//!
+//! For each retrieved address of a query entity, record the first `n`
+//! upward (ancestor) and downward (descendant) hierarchical relationship
+//! nodes and render them into the template fused into the LLM prompt
+//! ("the upward hierarchical relationship of entity A are: B, C and D").
+
+use std::collections::BTreeSet;
+
+use crate::forest::traverse::{ancestors, descendants_with_depth};
+use crate::forest::{EntityAddress, Forest};
+
+/// Direction of a hierarchical relationship fact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Direction {
+    /// Related node is an ancestor of the entity.
+    Up,
+    /// Related node is a descendant of the entity.
+    Down,
+}
+
+/// One (entity, related-node) hierarchical fact.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ContextFact {
+    pub entity: String,
+    pub related: String,
+    pub direction: Direction,
+    /// Tree the relationship was found in.
+    pub tree: u32,
+    /// Hierarchy distance (1 = parent/child).
+    pub distance: u8,
+}
+
+impl ContextFact {
+    /// Render the fact as a prompt sentence.
+    pub fn render(&self) -> String {
+        match self.direction {
+            Direction::Up => format!(
+                "{} is under {} (level {}, tree {})",
+                self.entity, self.related, self.distance, self.tree
+            ),
+            Direction::Down => format!(
+                "{} contains {} (level {}, tree {})",
+                self.entity, self.related, self.distance, self.tree
+            ),
+        }
+    }
+}
+
+/// The assembled context for one query entity.
+#[derive(Clone, Debug, Default)]
+pub struct Context {
+    pub facts: Vec<ContextFact>,
+}
+
+impl Context {
+    /// Render the whole context block for the prompt.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.facts {
+            out.push_str(&f.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Number of facts.
+    pub fn len(&self) -> usize {
+        self.facts.len()
+    }
+
+    /// True if no facts.
+    pub fn is_empty(&self) -> bool {
+        self.facts.is_empty()
+    }
+
+    /// Merge another context (multi-entity queries).
+    pub fn merge(&mut self, other: Context) {
+        self.facts.extend(other.facts);
+    }
+
+    /// All related-node names (deduped) — what the judge checks recall
+    /// against.
+    pub fn related_set(&self) -> BTreeSet<String> {
+        self.facts.iter().map(|f| f.related.clone()).collect()
+    }
+}
+
+/// Algorithm 3: walk every address of `entity`, collecting the first `n`
+/// upward and the descendants within `n` levels downward.
+pub fn generate_context(
+    forest: &Forest,
+    entity: &str,
+    addresses: &[EntityAddress],
+    n: usize,
+) -> Context {
+    let mut facts = Vec::new();
+    let mut seen: BTreeSet<(String, Direction, u32)> = BTreeSet::new();
+    for &addr in addresses {
+        for (dist, anc) in ancestors(forest, addr, n).into_iter().enumerate() {
+            let name = forest.entity_name(anc).to_string();
+            if seen.insert((name.clone(), Direction::Up, addr.tree)) {
+                facts.push(ContextFact {
+                    entity: entity.to_string(),
+                    related: name,
+                    direction: Direction::Up,
+                    tree: addr.tree,
+                    distance: dist as u8 + 1,
+                });
+            }
+        }
+        for (desc, dist) in descendants_with_depth(forest, addr, n) {
+            let name = forest.entity_name(desc).to_string();
+            if seen.insert((name.clone(), Direction::Down, addr.tree)) {
+                facts.push(ContextFact {
+                    entity: entity.to_string(),
+                    related: name,
+                    direction: Direction::Down,
+                    tree: addr.tree,
+                    distance: dist as u8,
+                });
+            }
+        }
+    }
+    Context { facts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::Tree;
+
+    /// t0: hospital -> cardiology -> icu -> bed9 ; t1: clinic -> cardiology
+    fn forest() -> Forest {
+        let mut f = Forest::new();
+        let h = f.intern("hospital");
+        let c = f.intern("cardiology");
+        let i = f.intern("icu");
+        let b = f.intern("bed9");
+        let cl = f.intern("clinic");
+        let mut t0 = Tree::with_root(h);
+        let cn = t0.add_child(0, c);
+        let im = t0.add_child(cn, i);
+        t0.add_child(im, b);
+        f.add_tree(t0);
+        let mut t1 = Tree::with_root(cl);
+        t1.add_child(0, c);
+        f.add_tree(t1);
+        f
+    }
+
+    #[test]
+    fn collects_up_and_down_within_n() {
+        let f = forest();
+        let card = f.entity_id("cardiology").unwrap();
+        let addrs = f.scan_addresses(card);
+        let ctx = generate_context(&f, "cardiology", &addrs, 2);
+
+        let ups: Vec<&str> = ctx
+            .facts
+            .iter()
+            .filter(|x| x.direction == Direction::Up)
+            .map(|x| x.related.as_str())
+            .collect();
+        // tree 0 ancestor: hospital; tree 1 ancestor: clinic
+        assert!(ups.contains(&"hospital"));
+        assert!(ups.contains(&"clinic"));
+
+        let downs: Vec<&str> = ctx
+            .facts
+            .iter()
+            .filter(|x| x.direction == Direction::Down)
+            .map(|x| x.related.as_str())
+            .collect();
+        assert!(downs.contains(&"icu"));
+        assert!(downs.contains(&"bed9"), "2 levels down included");
+    }
+
+    #[test]
+    fn n_limits_depth() {
+        let f = forest();
+        let card = f.entity_id("cardiology").unwrap();
+        let addrs = f.scan_addresses(card);
+        let ctx = generate_context(&f, "cardiology", &addrs, 1);
+        let downs: Vec<&str> = ctx
+            .facts
+            .iter()
+            .filter(|x| x.direction == Direction::Down)
+            .map(|x| x.related.as_str())
+            .collect();
+        assert_eq!(downs, vec!["icu"], "bed9 is 2 levels down");
+    }
+
+    #[test]
+    fn distances_recorded() {
+        let f = forest();
+        let card = f.entity_id("cardiology").unwrap();
+        let addrs = f.scan_addresses(card);
+        let ctx = generate_context(&f, "cardiology", &addrs, 3);
+        let bed = ctx.facts.iter().find(|x| x.related == "bed9").unwrap();
+        assert_eq!(bed.distance, 2);
+        assert_eq!(bed.direction, Direction::Down);
+    }
+
+    #[test]
+    fn render_contains_relations() {
+        let f = forest();
+        let icu = f.entity_id("icu").unwrap();
+        let addrs = f.scan_addresses(icu);
+        let ctx = generate_context(&f, "icu", &addrs, 2);
+        let text = ctx.render();
+        assert!(text.contains("icu is under cardiology"));
+        assert!(text.contains("icu contains bed9"));
+    }
+
+    #[test]
+    fn empty_addresses_empty_context() {
+        let f = forest();
+        let ctx = generate_context(&f, "ghost", &[], 3);
+        assert!(ctx.is_empty());
+    }
+
+    #[test]
+    fn merge_concatenates() {
+        let f = forest();
+        let icu = f.entity_id("icu").unwrap();
+        let a = f.scan_addresses(icu);
+        let mut c1 = generate_context(&f, "icu", &a, 1);
+        let c2 = generate_context(&f, "icu", &a, 2);
+        let total = c1.len() + c2.len();
+        c1.merge(c2);
+        assert_eq!(c1.len(), total);
+    }
+}

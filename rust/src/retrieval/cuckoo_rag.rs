@@ -1,0 +1,179 @@
+//! Cuckoo Filter T-RAG — the paper's system (§4.2). At build time every
+//! entity's full address list is packed into a block linked list and
+//! indexed by the improved Cuckoo Filter; at query time one O(1) filter
+//! lookup replaces the forest traversal entirely. Temperatures are bumped
+//! on hit and buckets re-sorted in [`Retriever::maintain`] (§3.1).
+
+use std::sync::Arc;
+
+use crate::filter::cuckoo::{CuckooConfig, CuckooFilter};
+use crate::filter::fingerprint::entity_key;
+use crate::forest::{EntityAddress, Forest};
+use crate::retrieval::Retriever;
+
+/// The Cuckoo-Filter-indexed retriever.
+pub struct CuckooTRag {
+    forest: Arc<Forest>,
+    cf: CuckooFilter,
+}
+
+impl CuckooTRag {
+    /// Index a forest with the paper's default filter parameters.
+    pub fn new(forest: Arc<Forest>) -> Self {
+        Self::with_config(forest, CuckooConfig::default())
+    }
+
+    /// Index with custom filter parameters (ablations).
+    pub fn with_config(forest: Arc<Forest>, cfg: CuckooConfig) -> Self {
+        let mut cf = CuckooFilter::new(cfg);
+        // One forest pass builds every entity's address list, then each
+        // list is inserted behind its fingerprint.
+        let table = forest.address_table();
+        for (id, addrs) in table {
+            let key = entity_key(forest.entity_name(id));
+            cf.insert(key, &addrs);
+        }
+        CuckooTRag { forest, cf }
+    }
+
+    /// Access the underlying filter (benches/inspection).
+    pub fn filter(&self) -> &CuckooFilter {
+        &self.cf
+    }
+
+    /// Mutable access (benches that need to reconfigure).
+    pub fn filter_mut(&mut self) -> &mut CuckooFilter {
+        &mut self.cf
+    }
+
+    /// The forest this retriever indexes.
+    pub fn forest(&self) -> &Arc<Forest> {
+        &self.forest
+    }
+
+    /// Dynamic update: register a newly added occurrence of an entity
+    /// (inserts the entity if unknown).
+    pub fn add_occurrence(&mut self, entity: &str, addr: EntityAddress) {
+        let key = entity_key(entity);
+        if !self.cf.push_address(key, addr) {
+            self.cf.insert(key, &[addr]);
+        }
+    }
+
+    /// Dynamic update: remove an entity entirely (paper Algorithm 2).
+    pub fn remove_entity(&mut self, entity: &str) -> bool {
+        self.cf.delete(entity_key(entity))
+    }
+}
+
+impl Retriever for CuckooTRag {
+    fn name(&self) -> &'static str {
+        "CF T-RAG"
+    }
+
+    fn find(&mut self, entity: &str) -> Vec<EntityAddress> {
+        match self.cf.lookup(entity_key(entity)) {
+            Some(hit) => self.cf.addresses(hit),
+            None => Vec::new(),
+        }
+    }
+
+    fn find_into(&mut self, entity: &str, out: &mut Vec<EntityAddress>) {
+        if let Some(hit) = self.cf.lookup(entity_key(entity)) {
+            out.extend(self.cf.addresses_iter(hit));
+        }
+    }
+
+    fn maintain(&mut self) {
+        self.cf.maintain();
+    }
+
+    fn reindex(&mut self, forest: Arc<Forest>, new_trees: &[u32]) {
+        // Incremental (the paper's dynamic-update story): only the new
+        // trees' addresses are inserted/appended; the existing filter
+        // state — including temperatures — is untouched.
+        for &t in new_trees {
+            let tree = forest.tree(t);
+            for idx in tree.indices() {
+                let name = forest.entity_name(tree.entity(idx));
+                let key = entity_key(name);
+                let addr = EntityAddress::new(t, idx);
+                if !self.cf.push_address(key, addr) {
+                    self.cf.insert(key, &[addr]);
+                }
+            }
+        }
+        self.forest = forest;
+    }
+
+    fn index_bytes(&self) -> usize {
+        self.cf.memory_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::Tree;
+
+    fn forest() -> Arc<Forest> {
+        let mut f = Forest::new();
+        let a = f.intern("alpha");
+        let b = f.intern("beta");
+        let c = f.intern("gamma");
+        let mut t0 = Tree::with_root(a);
+        t0.add_child(0, b);
+        t0.add_child(0, c);
+        f.add_tree(t0);
+        let mut t1 = Tree::with_root(b);
+        t1.add_child(0, a);
+        f.add_tree(t1);
+        Arc::new(f)
+    }
+
+    #[test]
+    fn agrees_with_scan() {
+        let f = forest();
+        let mut r = CuckooTRag::new(f.clone());
+        for name in ["alpha", "beta", "gamma", "missing"] {
+            let mut got = r.find(name);
+            got.sort();
+            let mut want = f
+                .entity_id(name)
+                .map(|id| f.scan_addresses(id))
+                .unwrap_or_default();
+            want.sort();
+            assert_eq!(got, want, "{name}");
+        }
+    }
+
+    #[test]
+    fn temperatures_rise_and_sorting_runs() {
+        let f = forest();
+        let mut r = CuckooTRag::new(f);
+        for _ in 0..5 {
+            r.find("alpha");
+        }
+        r.maintain();
+        let key = entity_key("alpha");
+        assert_eq!(r.filter().temperature(key), Some(5));
+    }
+
+    #[test]
+    fn dynamic_add_and_remove() {
+        let f = forest();
+        let mut r = CuckooTRag::new(f);
+        r.add_occurrence("delta", EntityAddress::new(5, 0));
+        assert_eq!(r.find("delta").len(), 1);
+        r.add_occurrence("delta", EntityAddress::new(6, 3));
+        assert_eq!(r.find("delta").len(), 2);
+        assert!(r.remove_entity("delta"));
+        assert!(r.find("delta").is_empty());
+    }
+
+    #[test]
+    fn index_memory_reported() {
+        let r = CuckooTRag::new(forest());
+        assert!(r.index_bytes() > 0);
+    }
+}

@@ -1,0 +1,71 @@
+//! Entity retrieval: the four algorithms compared in the paper's
+//! evaluation (§4.1–4.2), behind one trait.
+//!
+//! Given an entity mention, a retriever returns **every address** of that
+//! entity across the forest — the step whose cost the paper attacks.
+//! All four implementations are address-set-equivalent (asserted by
+//! `rust/tests/baselines_agree.rs`); they differ only in how much of the
+//! forest they touch:
+//!
+//! * [`naive::NaiveTRag`] — BFS of every tree (the Tree-RAG baseline).
+//! * [`bloom_rag::BloomTRag`] — per-node subtree Blooms prune descents.
+//! * [`bloom2_rag::Bloom2TRag`] — additionally skips Bloom checks just
+//!   above the leaf level.
+//! * [`cuckoo_rag::CuckooTRag`] — the paper's system: one filter lookup
+//!   returns the precomputed block list of addresses.
+
+pub mod bloom2_rag;
+pub mod bloom_rag;
+pub mod context;
+pub mod cuckoo_rag;
+pub mod naive;
+
+use crate::forest::EntityAddress;
+
+/// A Tree-RAG entity retriever.
+pub trait Retriever {
+    /// Algorithm name as printed in result tables (paper's abbreviations).
+    fn name(&self) -> &'static str;
+
+    /// All addresses of `entity` (normalized name) in the forest.
+    /// `&mut` because the Cuckoo retriever updates temperatures.
+    fn find(&mut self, entity: &str) -> Vec<EntityAddress>;
+
+    /// Allocation-free variant for hot loops: append all addresses of
+    /// `entity` to `out` (which the caller clears and reuses). Default
+    /// delegates to [`find`]; implementations override to avoid the
+    /// per-call `Vec`.
+    fn find_into(&mut self, entity: &str, out: &mut Vec<EntityAddress>) {
+        out.extend(self.find(entity));
+    }
+
+    /// End-of-round maintenance (the Cuckoo retriever re-sorts buckets
+    /// by temperature here; others no-op).
+    fn maintain(&mut self) {}
+
+    /// Knowledge update: the forest grew by `new_trees` (appended tree
+    /// indices; existing trees are immutable). Implementations refresh
+    /// their index — the Cuckoo retriever does this *incrementally*
+    /// (insert/extend only the new addresses, paper §5's "ongoing data
+    /// update"), while Bloom baselines must rebuild their per-node
+    /// annotations.
+    fn reindex(&mut self, forest: std::sync::Arc<crate::forest::Forest>, new_trees: &[u32]);
+
+    /// Approximate heap bytes of the retriever's index structures
+    /// (0 for index-free retrievers).
+    fn index_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Convenience: retrieve several entities and concatenate address lists
+/// (the multi-entity-query workload of Table 2).
+pub fn find_all(
+    r: &mut dyn Retriever,
+    entities: &[String],
+) -> Vec<(String, Vec<EntityAddress>)> {
+    entities
+        .iter()
+        .map(|e| (e.clone(), r.find(e)))
+        .collect()
+}

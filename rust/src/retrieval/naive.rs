@@ -1,0 +1,92 @@
+//! Naive T-RAG (paper §4.1): no filtering — BFS every tree for every
+//! entity. O(total forest nodes) per query entity; the baseline whose
+//! scaling Table 1/2 show degrading with tree count and query size.
+
+use std::sync::Arc;
+
+use crate::forest::traverse::Bfs;
+use crate::forest::{EntityAddress, Forest};
+use crate::retrieval::Retriever;
+
+/// The unfiltered baseline retriever.
+pub struct NaiveTRag {
+    forest: Arc<Forest>,
+}
+
+impl NaiveTRag {
+    /// Wrap a forest (no index to build).
+    pub fn new(forest: Arc<Forest>) -> Self {
+        NaiveTRag { forest }
+    }
+}
+
+impl Retriever for NaiveTRag {
+    fn name(&self) -> &'static str {
+        "Naive T-RAG"
+    }
+
+    fn find(&mut self, entity: &str) -> Vec<EntityAddress> {
+        let mut out = Vec::new();
+        self.find_into(entity, &mut out);
+        out
+    }
+
+    fn reindex(&mut self, forest: Arc<Forest>, _new_trees: &[u32]) {
+        self.forest = forest; // index-free: nothing else to refresh
+    }
+
+    fn find_into(&mut self, entity: &str, out: &mut Vec<EntityAddress>) {
+        let Some(id) = self.forest.entity_id(entity) else {
+            return;
+        };
+        for (t, tree) in self.forest.trees().iter().enumerate() {
+            for idx in Bfs::new(tree) {
+                if tree.entity(idx) == id {
+                    out.push(EntityAddress::new(t as u32, idx));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::Tree;
+
+    fn forest() -> Arc<Forest> {
+        let mut f = Forest::new();
+        let a = f.intern("alpha");
+        let b = f.intern("beta");
+        let mut t0 = Tree::with_root(a);
+        t0.add_child(0, b);
+        f.add_tree(t0);
+        let mut t1 = Tree::with_root(b);
+        t1.add_child(0, a);
+        f.add_tree(t1);
+        Arc::new(f)
+    }
+
+    #[test]
+    fn finds_all_occurrences() {
+        let mut r = NaiveTRag::new(forest());
+        let addrs = r.find("beta");
+        assert_eq!(addrs.len(), 2);
+        assert_eq!(addrs[0].tree, 0);
+        assert_eq!(addrs[1], EntityAddress::new(1, 0));
+    }
+
+    #[test]
+    fn unknown_entity_empty() {
+        let mut r = NaiveTRag::new(forest());
+        assert!(r.find("gamma").is_empty());
+    }
+
+    #[test]
+    fn matches_forest_scan() {
+        let f = forest();
+        let mut r = NaiveTRag::new(f.clone());
+        let id = f.entity_id("alpha").unwrap();
+        assert_eq!(r.find("alpha"), f.scan_addresses(id));
+    }
+}

@@ -1,0 +1,102 @@
+//! Artifact manifest: shapes and files produced by `python/compile/aot.py`
+//! (`make artifacts`). The manifest pins the contract between the L2
+//! graphs and the Rust hot path — batch size, embedding dim, shard size —
+//! so a drifted artifact directory fails fast instead of mis-executing.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{CftError, Result};
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub embed_dim: usize,
+    pub max_tokens: usize,
+    pub shard_docs: usize,
+    pub max_facts: usize,
+    pub batch: usize,
+    pub pad_id: i32,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            CftError::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        let doc = Json::parse(&text)
+            .map_err(|e| CftError::Artifact(format!("bad manifest: {e}")))?;
+        let get = |k: &str| -> Result<usize> {
+            doc.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| CftError::Artifact(format!("manifest missing '{k}'")))
+        };
+        let m = Manifest {
+            embed_dim: get("embed_dim")?,
+            max_tokens: get("max_tokens")?,
+            shard_docs: get("shard_docs")?,
+            max_facts: get("max_facts")?,
+            batch: get("batch")?,
+            pad_id: get("pad_id")? as i32,
+            dir,
+        };
+        for name in ["embed", "score", "rank"] {
+            let f = m.hlo_path(name);
+            if !f.exists() {
+                return Err(CftError::Artifact(format!(
+                    "artifact {} missing (run `make artifacts`)",
+                    f.display()
+                )));
+            }
+        }
+        Ok(m)
+    }
+
+    /// Path of one artifact's HLO text.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+/// Default artifact directory: `$CFT_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("CFT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_clear_error() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        // Integration-level check, but cheap: if artifacts/ exists in the
+        // repo root, it must parse and agree with the Python constants.
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts present");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.embed_dim, 64);
+        assert_eq!(m.max_tokens, 32);
+        assert_eq!(m.shard_docs, 1024);
+        assert_eq!(m.max_facts, 64);
+        assert_eq!(m.batch, 8);
+    }
+}

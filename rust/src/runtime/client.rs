@@ -1,0 +1,150 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client. This is the ONLY place Python-authored compute
+//! enters the Rust hot path; Python itself never runs at serve time.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! DESIGN.md): jax >= 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::path::Path;
+
+use crate::error::{CftError, Result};
+use crate::runtime::artifact::Manifest;
+
+/// Compiled artifacts + the PJRT client that runs them.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    embed_exe: xla::PjRtLoadedExecutable,
+    score_exe: xla::PjRtLoadedExecutable,
+    rank_exe: xla::PjRtLoadedExecutable,
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load every artifact from `dir` and compile it on the CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = manifest.hlo_path(name);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        Ok(Runtime {
+            embed_exe: compile("embed")?,
+            score_exe: compile("score")?,
+            rank_exe: compile("rank")?,
+            client,
+            manifest,
+        })
+    }
+
+    /// The artifact manifest (shapes).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Embed a padded token batch.
+    ///
+    /// `tokens` is row-major `[batch, max_tokens]`; returns row-major
+    /// `[batch, embed_dim]` L2-normalized embeddings.
+    pub fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let expect = m.batch * m.max_tokens;
+        if tokens.len() != expect {
+            return Err(CftError::Runtime(format!(
+                "embed input len {} != {}x{}",
+                tokens.len(),
+                m.batch,
+                m.max_tokens
+            )));
+        }
+        let lit = xla::Literal::vec1(tokens)
+            .reshape(&[m.batch as i64, m.max_tokens as i64])?;
+        self.run1(&self.embed_exe, &[lit], m.batch * m.embed_dim)
+    }
+
+    /// Score a query batch against one corpus shard.
+    ///
+    /// `q` is `[batch, embed_dim]`, `docs` is `[shard_docs, embed_dim]`;
+    /// returns `[batch, shard_docs]` similarity scores.
+    pub fn score(&self, q: &[f32], docs: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        if q.len() != m.batch * m.embed_dim {
+            return Err(CftError::Runtime(format!(
+                "score q len {} != {}x{}",
+                q.len(),
+                m.batch,
+                m.embed_dim
+            )));
+        }
+        if docs.len() != m.shard_docs * m.embed_dim {
+            return Err(CftError::Runtime(format!(
+                "score docs len {} != {}x{}",
+                docs.len(),
+                m.shard_docs,
+                m.embed_dim
+            )));
+        }
+        let ql = xla::Literal::vec1(q)
+            .reshape(&[m.batch as i64, m.embed_dim as i64])?;
+        let dl = xla::Literal::vec1(docs)
+            .reshape(&[m.shard_docs as i64, m.embed_dim as i64])?;
+        self.run1(&self.score_exe, &[ql, dl], m.batch * m.shard_docs)
+    }
+
+    /// Attention-rank facts for each request in a batch.
+    ///
+    /// `q` is `[batch, embed_dim]`, `facts` is
+    /// `[batch, max_facts, embed_dim]` zero-padded, `lens[b]` counts the
+    /// valid facts; returns `[batch, max_facts]` attention weights.
+    pub fn rank(&self, q: &[f32], facts: &[f32], lens: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        if q.len() != m.batch * m.embed_dim
+            || facts.len() != m.batch * m.max_facts * m.embed_dim
+            || lens.len() != m.batch
+        {
+            return Err(CftError::Runtime("rank input shape mismatch".into()));
+        }
+        let ql = xla::Literal::vec1(q)
+            .reshape(&[m.batch as i64, m.embed_dim as i64])?;
+        let fl = xla::Literal::vec1(facts).reshape(&[
+            m.batch as i64,
+            m.max_facts as i64,
+            m.embed_dim as i64,
+        ])?;
+        let ll = xla::Literal::vec1(lens).reshape(&[m.batch as i64])?;
+        self.run1(&self.rank_exe, &[ql, fl, ll], m.batch * m.max_facts)
+    }
+
+    /// Execute a 1-output-tuple executable and pull the f32 result.
+    fn run1(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+        expect_len: usize,
+    ) -> Result<Vec<f32>> {
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        if values.len() != expect_len {
+            return Err(CftError::Runtime(format!(
+                "output len {} != expected {expect_len}",
+                values.len()
+            )));
+        }
+        Ok(values)
+    }
+}
+
+// The runtime is used behind a dedicated executor thread by the
+// coordinator; it is Send (raw PJRT handles are plain pointers owned
+// exclusively by the wrapper).
+unsafe impl Send for Runtime {}

@@ -1,0 +1,367 @@
+//! The neural-compute interface used by the request path, with two
+//! implementations:
+//!
+//! * [`PjrtEngine`] — the real thing: AOT artifacts on the PJRT client.
+//! * [`NativeEngine`] — a pure-Rust functional twin (same random-feature
+//!   embedding construction, same masked-attention math) used by tests
+//!   and benches that must run without `make artifacts`, and as the
+//!   cross-check oracle for the integration tests.
+//!
+//! Both satisfy [`Engine`]; everything downstream (vector store,
+//! generator, coordinator) is implementation-agnostic.
+
+use std::sync::Mutex;
+
+use crate::error::Result;
+use crate::runtime::client::Runtime;
+
+/// Fixed shapes shared by both engines (must match the artifact manifest).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineShape {
+    pub batch: usize,
+    pub max_tokens: usize,
+    pub embed_dim: usize,
+    pub shard_docs: usize,
+    pub max_facts: usize,
+}
+
+impl Default for EngineShape {
+    fn default() -> Self {
+        // mirrors python/compile/model.py
+        EngineShape {
+            batch: 8,
+            max_tokens: 32,
+            embed_dim: 64,
+            shard_docs: 1024,
+            max_facts: 64,
+        }
+    }
+}
+
+/// Batched neural compute on the request path.
+pub trait Engine: Send + Sync {
+    /// Shapes this engine was built with.
+    fn shape(&self) -> EngineShape;
+
+    /// `[batch, max_tokens]` ids -> `[batch, embed_dim]` unit embeddings.
+    fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// `[batch, D]` x `[shard_docs, D]` -> `[batch, shard_docs]` scores.
+    fn score(&self, q: &[f32], docs: &[f32]) -> Result<Vec<f32>>;
+
+    /// `[batch, D]`, `[batch, max_facts, D]`, `[batch]` lens ->
+    /// `[batch, max_facts]` attention weights.
+    fn rank(&self, q: &[f32], facts: &[f32], lens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Human-readable backend name.
+    fn backend(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------
+// PJRT-backed engine
+// ---------------------------------------------------------------------
+
+/// [`Engine`] over the AOT artifacts (the production path).
+///
+/// Holds a small pool of compiled runtimes: PJRT execute calls are made
+/// behind per-runtime mutexes, so `pool_size > 1` lets coordinator
+/// workers run neural stages concurrently instead of serializing on one
+/// lock (§Perf in EXPERIMENTS.md: +~2× serving throughput at 4 workers).
+pub struct PjrtEngine {
+    runtimes: Vec<Mutex<Runtime>>,
+    next: std::sync::atomic::AtomicUsize,
+    shape: EngineShape,
+}
+
+impl PjrtEngine {
+    /// Wrap a single loaded runtime.
+    pub fn new(runtime: Runtime) -> Self {
+        let m = runtime.manifest();
+        let shape = EngineShape {
+            batch: m.batch,
+            max_tokens: m.max_tokens,
+            embed_dim: m.embed_dim,
+            shard_docs: m.shard_docs,
+            max_facts: m.max_facts,
+        };
+        PjrtEngine {
+            runtimes: vec![Mutex::new(runtime)],
+            next: std::sync::atomic::AtomicUsize::new(0),
+            shape,
+        }
+    }
+
+    /// Load a pool of `n` runtimes from the artifact directory.
+    pub fn with_pool(dir: impl AsRef<std::path::Path>, n: usize) -> Result<Self> {
+        let n = n.max(1);
+        let first = Runtime::load(&dir)?;
+        let mut engine = Self::new(first);
+        for _ in 1..n {
+            engine.runtimes.push(Mutex::new(Runtime::load(&dir)?));
+        }
+        Ok(engine)
+    }
+
+    /// Number of pooled runtimes.
+    pub fn pool_size(&self) -> usize {
+        self.runtimes.len()
+    }
+
+    /// Round-robin a runtime, preferring an uncontended one.
+    fn with_runtime<T>(&self, f: impl Fn(&Runtime) -> Result<T>) -> Result<T> {
+        let n = self.runtimes.len();
+        let start = self
+            .next
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // first pass: try-lock to dodge contention
+        for i in 0..n {
+            if let Ok(rt) = self.runtimes[(start + i) % n].try_lock() {
+                return f(&rt);
+            }
+        }
+        // all busy: block on our round-robin slot
+        let rt = self.runtimes[start % n].lock().unwrap();
+        f(&rt)
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn shape(&self) -> EngineShape {
+        self.shape
+    }
+
+    fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.with_runtime(|rt| rt.embed(tokens))
+    }
+
+    fn score(&self, q: &[f32], docs: &[f32]) -> Result<Vec<f32>> {
+        self.with_runtime(|rt| rt.score(q, docs))
+    }
+
+    fn rank(&self, q: &[f32], facts: &[f32], lens: &[i32]) -> Result<Vec<f32>> {
+        self.with_runtime(|rt| rt.rank(q, facts, lens))
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt-cpu"
+    }
+}
+
+// ---------------------------------------------------------------------
+// Native reference engine
+// ---------------------------------------------------------------------
+
+/// Pure-Rust functional twin of the L2 graphs: random-feature token
+/// embedding (sin features), mean pool, layer norm, L2 normalize; dot
+/// product scoring; masked softmax attention. Constants differ from the
+/// Python model's (both are seeded random), so *embeddings* differ, but
+/// retrieval semantics — cosine ≈ token overlap — are identical, which
+/// is what the artifact-less tests rely on.
+pub struct NativeEngine {
+    shape: EngineShape,
+    freq: Vec<f32>,
+    phase: Vec<f32>,
+}
+
+impl NativeEngine {
+    /// Build with the default shapes.
+    pub fn new() -> Self {
+        Self::with_shape(EngineShape::default())
+    }
+
+    /// Build with explicit shapes (tests use small ones).
+    pub fn with_shape(shape: EngineShape) -> Self {
+        let mut rng = crate::util::rng::Rng::new(2025);
+        let freq = (0..shape.embed_dim)
+            .map(|_| 0.05 + 1.95 * rng.f32())
+            .collect();
+        let phase = (0..shape.embed_dim)
+            .map(|_| rng.f32() * std::f32::consts::TAU)
+            .collect();
+        NativeEngine { shape, freq, phase }
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine for NativeEngine {
+    fn shape(&self) -> EngineShape {
+        self.shape
+    }
+
+    fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let s = self.shape;
+        assert_eq!(tokens.len(), s.batch * s.max_tokens);
+        let mut out = vec![0f32; s.batch * s.embed_dim];
+        for b in 0..s.batch {
+            let row = &tokens[b * s.max_tokens..(b + 1) * s.max_tokens];
+            let emb = &mut out[b * s.embed_dim..(b + 1) * s.embed_dim];
+            let mut count = 0f32;
+            for &id in row.iter().filter(|&&id| id != 0) {
+                count += 1.0;
+                for d in 0..s.embed_dim {
+                    emb[d] += (id as f32 * self.freq[d] + self.phase[d]).sin();
+                }
+            }
+            let count = count.max(1.0);
+            for v in emb.iter_mut() {
+                *v /= count;
+            }
+            // layer norm (gamma=1, beta=0)
+            let mean: f32 = emb.iter().sum::<f32>() / s.embed_dim as f32;
+            let var: f32 = emb.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+                / s.embed_dim as f32;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for v in emb.iter_mut() {
+                *v = (*v - mean) * inv;
+            }
+            // l2 normalize
+            let norm: f32 = emb.iter().map(|v| v * v).sum::<f32>();
+            let norm = norm.sqrt().max(1e-12);
+            for v in emb.iter_mut() {
+                *v /= norm;
+            }
+        }
+        Ok(out)
+    }
+
+    fn score(&self, q: &[f32], docs: &[f32]) -> Result<Vec<f32>> {
+        let s = self.shape;
+        assert_eq!(q.len(), s.batch * s.embed_dim);
+        assert_eq!(docs.len(), s.shard_docs * s.embed_dim);
+        let mut out = vec![0f32; s.batch * s.shard_docs];
+        for b in 0..s.batch {
+            let qv = &q[b * s.embed_dim..(b + 1) * s.embed_dim];
+            for n in 0..s.shard_docs {
+                let dv = &docs[n * s.embed_dim..(n + 1) * s.embed_dim];
+                out[b * s.shard_docs + n] =
+                    qv.iter().zip(dv).map(|(a, c)| a * c).sum();
+            }
+        }
+        Ok(out)
+    }
+
+    fn rank(&self, q: &[f32], facts: &[f32], lens: &[i32]) -> Result<Vec<f32>> {
+        let s = self.shape;
+        assert_eq!(q.len(), s.batch * s.embed_dim);
+        assert_eq!(facts.len(), s.batch * s.max_facts * s.embed_dim);
+        assert_eq!(lens.len(), s.batch);
+        let scale = 1.0 / (s.embed_dim as f32).sqrt();
+        let mut out = vec![0f32; s.batch * s.max_facts];
+        for b in 0..s.batch {
+            let l = (lens[b].max(0) as usize).min(s.max_facts);
+            if l == 0 {
+                continue;
+            }
+            let qv = &q[b * s.embed_dim..(b + 1) * s.embed_dim];
+            let mut logits = vec![0f32; l];
+            for (i, logit) in logits.iter_mut().enumerate() {
+                let base = (b * s.max_facts + i) * s.embed_dim;
+                let fv = &facts[base..base + s.embed_dim];
+                *logit = qv.iter().zip(fv).map(|(a, c)| a * c).sum::<f32>() * scale;
+            }
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0f32;
+            for logit in logits.iter_mut() {
+                *logit = (*logit - m).exp();
+                denom += *logit;
+            }
+            for (i, logit) in logits.iter().enumerate() {
+                out[b * s.max_facts + i] = logit / denom;
+            }
+        }
+        Ok(out)
+    }
+
+    fn backend(&self) -> &'static str {
+        "native-rust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::tokenizer::tokenize_padded;
+
+    fn tok_batch(texts: &[&str], shape: EngineShape) -> Vec<i32> {
+        let mut out = Vec::new();
+        for i in 0..shape.batch {
+            let t = texts.get(i).copied().unwrap_or("");
+            out.extend(tokenize_padded(t, shape.max_tokens));
+        }
+        out
+    }
+
+    #[test]
+    fn native_embeddings_unit_norm() {
+        let e = NativeEngine::new();
+        let s = e.shape();
+        let toks = tok_batch(&["cardiology ward nine", "surgery"], s);
+        let emb = e.embed(&toks).unwrap();
+        for b in 0..2 {
+            let row = &emb[b * s.embed_dim..(b + 1) * s.embed_dim];
+            let n: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-4, "norm {n}");
+        }
+    }
+
+    #[test]
+    fn native_similarity_tracks_overlap() {
+        let e = NativeEngine::new();
+        let s = e.shape();
+        let toks = tok_batch(
+            &[
+                "cardiology intensive care unit",
+                "cardiology intensive care ward",
+                "logistics supply chain office",
+            ],
+            s,
+        );
+        let emb = e.embed(&toks).unwrap();
+        let dot = |a: usize, b: usize| -> f32 {
+            emb[a * s.embed_dim..(a + 1) * s.embed_dim]
+                .iter()
+                .zip(&emb[b * s.embed_dim..(b + 1) * s.embed_dim])
+                .map(|(x, y)| x * y)
+                .sum()
+        };
+        assert!(dot(0, 1) > dot(0, 2) + 0.15, "{} vs {}", dot(0, 1), dot(0, 2));
+    }
+
+    #[test]
+    fn native_rank_masks_and_normalizes() {
+        let e = NativeEngine::new();
+        let s = e.shape();
+        let q = vec![0.1f32; s.batch * s.embed_dim];
+        let facts = vec![0.05f32; s.batch * s.max_facts * s.embed_dim];
+        let mut lens = vec![0i32; s.batch];
+        lens[0] = 3;
+        lens[1] = 0;
+        let w = e.rank(&q, &facts, &lens).unwrap();
+        let row0: f32 = w[..s.max_facts].iter().sum();
+        assert!((row0 - 1.0).abs() < 1e-5);
+        assert!(w[3] == 0.0, "masked positions zero");
+        assert!(w[s.max_facts..2 * s.max_facts].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn native_score_shapes() {
+        let shape = EngineShape {
+            batch: 2,
+            max_tokens: 8,
+            embed_dim: 4,
+            shard_docs: 8,
+            max_facts: 4,
+        };
+        let e = NativeEngine::with_shape(shape);
+        let q = vec![1.0f32; 2 * 4];
+        let docs = vec![0.5f32; 8 * 4];
+        let sres = e.score(&q, &docs).unwrap();
+        assert_eq!(sres.len(), 16);
+        assert!((sres[0] - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime layer: artifact manifest + executable loading/execution.
+//!
+//! `make artifacts` (Python, build time) produces `artifacts/*.hlo.txt`;
+//! this module loads them once and serves typed execute calls to the
+//! vector-search and generation stages. Start-to-finish request handling
+//! never touches Python.
+
+pub mod artifact;
+pub mod engine;
+pub mod client;
+
+pub use artifact::{default_dir, Manifest};
+pub use client::Runtime;
+pub use engine::{Engine, EngineShape, NativeEngine, PjrtEngine};

@@ -1,0 +1,6 @@
+//! Text substrate: normalization, sentence splitting, stopwords, and the
+//! hash tokenizer feeding the L2 embedder artifact.
+
+pub mod normalize;
+pub mod stopwords;
+pub mod tokenizer;

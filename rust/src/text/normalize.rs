@@ -1,0 +1,87 @@
+//! Text normalization and sentence splitting for the pre-processing
+//! pipeline (paper §2: raw text -> entities -> relations).
+
+/// Lowercase, collapse whitespace, strip non-alphanumeric edge punctuation.
+pub fn normalize(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut last_space = true;
+    for c in text.chars() {
+        let c = if c.is_alphanumeric() || c == '\'' || c == '-' {
+            c.to_ascii_lowercase()
+        } else {
+            ' '
+        };
+        if c == ' ' {
+            if !last_space {
+                out.push(' ');
+                last_space = true;
+            }
+        } else {
+            out.push(c);
+            last_space = false;
+        }
+    }
+    out.trim().to_string()
+}
+
+/// Split text into sentences on `.`, `!`, `?`, `;` and newlines, keeping
+/// non-empty trimmed segments. Abbreviation-naive by design: the synthetic
+/// corpora avoid ambiguous periods.
+pub fn sentences(text: &str) -> Vec<String> {
+    text.split(|c| matches!(c, '.' | '!' | '?' | ';' | '\n'))
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+/// Split a normalized string into words.
+pub fn words(text: &str) -> Vec<&str> {
+    text.split_whitespace().collect()
+}
+
+/// Title-case detector: does this raw (un-normalized) word start uppercase?
+pub fn is_capitalized(word: &str) -> bool {
+    word.chars().next().is_some_and(|c| c.is_uppercase())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_lowercases_and_collapses() {
+        assert_eq!(
+            normalize("  The  Cardiology   Department! "),
+            "the cardiology department"
+        );
+    }
+
+    #[test]
+    fn normalize_keeps_hyphens_apostrophes() {
+        assert_eq!(normalize("St-Mary's Ward"), "st-mary's ward");
+    }
+
+    #[test]
+    fn sentences_split_and_trim() {
+        let s = sentences("Alpha beta. Gamma!  Delta?\nEpsilon; ");
+        assert_eq!(s, vec!["Alpha beta", "Gamma", "Delta", "Epsilon"]);
+    }
+
+    #[test]
+    fn sentences_empty_input() {
+        assert!(sentences("  . ! ").is_empty());
+    }
+
+    #[test]
+    fn words_splits() {
+        assert_eq!(words("a b  c"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn capitalization_detector() {
+        assert!(is_capitalized("Hospital"));
+        assert!(!is_capitalized("hospital"));
+        assert!(!is_capitalized(""));
+    }
+}

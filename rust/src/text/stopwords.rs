@@ -1,0 +1,55 @@
+//! English stopword list used by the tokenizer and the NER heuristics.
+
+use std::collections::HashSet;
+
+use once_cell::sync::Lazy;
+
+/// Compact stopword list — function words that never begin or end an
+/// entity mention and carry no retrieval signal.
+pub static STOPWORDS: Lazy<HashSet<&'static str>> = Lazy::new(|| {
+    [
+        "a", "an", "the", "and", "or", "but", "of", "in", "on", "at", "to",
+        "for", "from", "by", "with", "about", "as", "into", "through",
+        "is", "am", "are", "was", "were", "be", "been", "being",
+        "do", "does", "did", "have", "has", "had", "having",
+        "i", "you", "he", "she", "it", "we", "they", "them", "his", "her",
+        "its", "their", "our", "your", "my", "me", "him", "us",
+        "this", "that", "these", "those", "which", "who", "whom", "whose",
+        "what", "where", "when", "why", "how",
+        "not", "no", "nor", "so", "too", "very", "can", "will", "just",
+        "should", "would", "could", "may", "might", "must", "shall",
+        "there", "here", "then", "than", "also", "such", "each", "both",
+        "more", "most", "some", "any", "all", "few", "other", "own", "same",
+        "under", "over", "between", "during", "before", "after", "above",
+        "below", "again", "further", "once", "only", "now", "while",
+        "belongs", "belong", "contains", "contain", "part", "within",
+        "department", "unit", "division", "branch", "section", "office",
+        "tell", "describe", "explain", "list", "give", "show", "report",
+    ]
+    .into_iter()
+    .collect()
+});
+
+/// Is `word` (already lowercased) a stopword?
+pub fn is_stopword(word: &str) -> bool {
+    STOPWORDS.contains(word)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn common_words_are_stopwords() {
+        for w in ["the", "of", "is", "belongs"] {
+            assert!(is_stopword(w), "{w}");
+        }
+    }
+
+    #[test]
+    fn content_words_are_not() {
+        for w in ["cardiology", "unhcr", "surgery", "geneva"] {
+            assert!(!is_stopword(w), "{w}");
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Word tokenizer + hash-token ids for the L2 embedder artifact.
+//!
+//! The embed artifact consumes fixed-shape `int32` token-id batches
+//! (`[B, MAX_TOKENS]`, PAD_ID = 0). Ids are produced here by hashing
+//! words into a bounded vocabulary with the shared FNV-1a hash; the
+//! embedder's random-feature construction (see python/compile/model.py)
+//! only needs ids to be deterministic and well-spread, not trained.
+
+use crate::text::normalize::normalize;
+use crate::text::stopwords::is_stopword;
+use crate::util::rng::fnv1a;
+
+/// Padding id — must match `PAD_ID` in python/compile/model.py.
+pub const PAD_ID: i32 = 0;
+
+/// Hash vocabulary size. Prime, and small enough that ids stay exactly
+/// representable in f32 inside the embedder's `sin(id * freq)` features.
+pub const VOCAB: i32 = 32_749;
+
+/// Hash one (lowercased) word to a token id in `[1, VOCAB]`.
+pub fn token_id(word: &str) -> i32 {
+    (fnv1a(word.as_bytes()) % VOCAB as u64) as i32 + 1
+}
+
+/// Tokenize text into hash ids: normalize, split, drop stopwords.
+pub fn tokenize(text: &str) -> Vec<i32> {
+    normalize(text)
+        .split_whitespace()
+        .filter(|w| !is_stopword(w))
+        .map(token_id)
+        .collect()
+}
+
+/// Tokenize and pad/truncate to exactly `max_len` ids.
+pub fn tokenize_padded(text: &str, max_len: usize) -> Vec<i32> {
+    let mut ids = tokenize(text);
+    ids.truncate(max_len);
+    ids.resize(max_len, PAD_ID);
+    ids
+}
+
+/// Tokenize keeping the content *words* (for NER/relations, which work on
+/// surface forms rather than ids).
+pub fn content_words(text: &str) -> Vec<String> {
+    normalize(text)
+        .split_whitespace()
+        .filter(|w| !is_stopword(w))
+        .map(str::to_string)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_deterministic_and_in_range() {
+        let a = tokenize("Cardiology ward nine");
+        let b = tokenize("cardiology ward NINE!");
+        assert_eq!(a, b, "normalization-invariant");
+        for &id in &a {
+            assert!(id >= 1 && id <= VOCAB);
+        }
+    }
+
+    #[test]
+    fn stopwords_dropped() {
+        let ids = tokenize("the history of the hospital");
+        assert_eq!(ids.len(), 2, "only 'history' and 'hospital' remain");
+    }
+
+    #[test]
+    fn padded_shape_exact() {
+        let ids = tokenize_padded("alpha beta", 8);
+        assert_eq!(ids.len(), 8);
+        assert_ne!(ids[0], PAD_ID);
+        assert_ne!(ids[1], PAD_ID);
+        assert!(ids[2..].iter().all(|&i| i == PAD_ID));
+    }
+
+    #[test]
+    fn padded_truncates() {
+        let long: String = (0..50).map(|i| format!("word{i} ")).collect();
+        let ids = tokenize_padded(&long, 8);
+        assert_eq!(ids.len(), 8);
+        assert!(ids.iter().all(|&i| i != PAD_ID));
+    }
+
+    #[test]
+    fn distinct_words_rarely_collide() {
+        let ids: Vec<i32> = (0..500)
+            .map(|i| token_id(&format!("entity-{i}")))
+            .collect();
+        let mut uniq = ids.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        // FNV over 32k vocab: expect only a handful of collisions in 500
+        assert!(uniq.len() >= 490, "{} unique of 500", uniq.len());
+    }
+
+    #[test]
+    fn content_words_surface_forms() {
+        let ws = content_words("The Cardiology Department of Mercy Hospital");
+        assert_eq!(ws, vec!["cardiology", "mercy", "hospital"]);
+    }
+}

@@ -1,0 +1,231 @@
+//! Minimal command-line flag parser (offline replacement for `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and typed getters with defaults. Each binary declares its
+//! flags up front so `--help` can print a usage table.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One declared flag (for help text and validation).
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_bool: bool,
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<FlagSpec>,
+}
+
+impl Args {
+    /// Declare flags (used for help/validation), then parse `argv`.
+    pub fn parse_with(
+        argv: impl IntoIterator<Item = String>,
+        specs: Vec<FlagSpec>,
+    ) -> Result<Args, String> {
+        let mut out = Args { specs, ..Default::default() };
+        let bool_names: Vec<&str> = out
+            .specs
+            .iter()
+            .filter(|s| s.is_bool)
+            .map(|s| s.name)
+            .collect();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_names.contains(&stripped) {
+                    out.bools.push(stripped.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        // flag with no value: treat as boolean anyway
+                        out.bools.push(stripped.to_string());
+                    } else {
+                        out.flags.insert(stripped.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.bools.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        // validate that provided flags were declared (if any specs given)
+        if !out.specs.is_empty() {
+            let known: Vec<&str> = out.specs.iter().map(|s| s.name).collect();
+            for k in out.flags.keys().chain(out.bools.iter()) {
+                if !known.contains(&k.as_str()) && k != "help" {
+                    return Err(format!("unknown flag --{k}\n{}", out.usage()));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process's actual argv (skipping the binary name).
+    pub fn from_env(specs: Vec<FlagSpec>) -> Result<Args, String> {
+        Self::parse_with(std::env::args().skip(1), specs)
+    }
+
+    /// True if `--help` was requested.
+    pub fn wants_help(&self) -> bool {
+        self.bools.iter().any(|b| b == "help") || self.flags.contains_key("help")
+    }
+
+    /// Usage string built from the declared specs.
+    pub fn usage(&self) -> String {
+        let mut s = String::from("flags:\n");
+        for spec in &self.specs {
+            let d = spec
+                .default
+                .map(|d| format!(" (default {d})"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  --{:<18} {}{}", spec.name, spec.help, d);
+        }
+        s
+    }
+
+    /// Raw string flag value (or declared default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .get(name)
+            .map(|s| s.as_str())
+            .or_else(|| {
+                self.specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .and_then(|s| s.default)
+            })
+    }
+
+    /// String flag with explicit fallback.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed flag parse with explicit fallback.
+    pub fn num_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Boolean flag (present => true).
+    pub fn flag(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+            || matches!(self.flags.get(name).map(|s| s.as_str()), Some("true" | "1"))
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list flag parsed to numbers.
+    pub fn list_or<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+/// Convenience macro-free spec builder.
+pub fn spec(
+    name: &'static str,
+    help: &'static str,
+    default: Option<&'static str>,
+    is_bool: bool,
+) -> FlagSpec {
+    FlagSpec { name, help, default, is_bool }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], specs: Vec<FlagSpec>) -> Args {
+        Args::parse_with(args.iter().map(|s| s.to_string()), specs).unwrap()
+    }
+
+    #[test]
+    fn parses_eq_and_space_forms() {
+        let a = parse(
+            &["--trees=300", "--entities", "5"],
+            vec![
+                spec("trees", "", None, false),
+                spec("entities", "", None, false),
+            ],
+        );
+        assert_eq!(a.num_or("trees", 0usize), 300);
+        assert_eq!(a.num_or("entities", 0usize), 5);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = parse(
+            &["--verbose", "--trees", "10"],
+            vec![
+                spec("verbose", "", None, true),
+                spec("trees", "", None, false),
+            ],
+        );
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.num_or("trees", 0usize), 10);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], vec![spec("out", "", Some("results.csv"), false)]);
+        assert_eq!(a.str_or("out", "x"), "results.csv");
+        assert_eq!(a.num_or("missing", 7u32), 7);
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parse(&["serve", "--port", "9000"], vec![spec("port", "", None, false)]);
+        assert_eq!(a.positional(), &["serve".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let r = Args::parse_with(
+            ["--bogus".to_string()],
+            vec![spec("real", "", None, false)],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["--sizes", "50,300,600"], vec![spec("sizes", "", None, false)]);
+        assert_eq!(a.list_or("sizes", &[1usize]), vec![50, 300, 600]);
+        assert_eq!(a.list_or("other", &[1usize, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse(
+            &["--trees", "5", "--sort"],
+            vec![spec("trees", "", None, false), spec("sort", "", None, true)],
+        );
+        assert!(a.flag("sort"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Tiny CSV writer for experiment outputs (bench harness results).
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// In-memory CSV table with a fixed header.
+#[derive(Clone, Debug)]
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    /// New table with the given column names.
+    pub fn new(header: &[&str]) -> Self {
+        CsvTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one row; must match the header arity.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Append a row of displayable values.
+    pub fn push<T: std::fmt::Display>(&mut self, cells: &[T]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to CSV text (RFC-4180 quoting where needed).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write to a file, creating parent dirs.
+    pub fn write_to(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+fn quote(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_basic() {
+        let mut t = CsvTable::new(&["algo", "time_s"]);
+        t.push(&["naive".to_string(), "1.5".to_string()]);
+        t.push(&["cf".to_string(), "0.01".to_string()]);
+        let out = t.render();
+        assert_eq!(out, "algo,time_s\nnaive,1.5\ncf,0.01\n");
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn quotes_commas_and_quotes() {
+        let mut t = CsvTable::new(&["a"]);
+        t.push(&["x,y".to_string()]);
+        t.push(&["he said \"hi\"".to_string()]);
+        let out = t.render();
+        assert!(out.contains("\"x,y\""));
+        assert!(out.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_mismatch_panics() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.push(&["only-one".to_string()]);
+    }
+}

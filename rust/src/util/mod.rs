@@ -1,0 +1,10 @@
+//! Foundation substrates the offline image forced us to own: deterministic
+//! RNG + distributions, timing/statistics, CLI flag parsing, JSON, CSV and
+//! a mini property-testing harness.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

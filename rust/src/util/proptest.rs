@@ -1,0 +1,168 @@
+//! Mini property-based testing harness (offline replacement for `proptest`).
+//!
+//! Provides `forall`: run a property over many seeded random inputs; on
+//! failure, attempt a bounded greedy shrink (caller supplies the shrinker)
+//! and report the minimal failing seed/input. Deterministic: the failure
+//! message includes the seed so a run can be reproduced by pinning
+//! `CFT_PROPTEST_SEED`.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (env `CFT_PROPTEST_SEED` overrides).
+    pub seed: u64,
+    /// Max shrink attempts after a failure.
+    pub max_shrinks: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("CFT_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases: 256, seed, max_shrinks: 500 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` inputs drawn by `gen`. On failure, shrink
+/// with `shrink` (returns candidate smaller inputs) and panic with the
+/// minimal input's debug representation.
+pub fn forall<T, G, P, S>(cfg: Config, mut gen: G, mut prop: P, shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = cfg.max_shrinks;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}): {best_msg}\n\
+                 minimal input: {best:?}",
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// `forall` with default config and no shrinking.
+pub fn forall_simple<T, G, P>(cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    forall(
+        Config { cases, ..Config::default() },
+        gen,
+        prop,
+        |_| Vec::new(),
+    );
+}
+
+/// Shrinker for vectors: halves, then drop-one prefixes.
+pub fn shrink_vec<T: Clone>(xs: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if xs.is_empty() {
+        return out;
+    }
+    out.push(xs[..xs.len() / 2].to_vec());
+    out.push(xs[xs.len() / 2..].to_vec());
+    if xs.len() <= 16 {
+        for i in 0..xs.len() {
+            let mut v = xs.to_vec();
+            v.remove(i);
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall_simple(
+            100,
+            |rng| rng.below(1000),
+            |&x| {
+                if x < 1000 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall_simple(
+            100,
+            |rng| rng.below(10),
+            |&x| if x < 5 { Ok(()) } else { Err("too big".into()) },
+        );
+    }
+
+    #[test]
+    fn shrink_finds_smaller_vec() {
+        // Property: no vector contains 7. Shrinker should reduce to ~[7].
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                Config { cases: 200, seed: 1, max_shrinks: 300 },
+                |rng| {
+                    let n = rng.range(0, 20);
+                    (0..n).map(|_| rng.below(10)).collect::<Vec<u64>>()
+                },
+                |xs| {
+                    if xs.contains(&7) {
+                        Err("contains 7".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+                |xs| shrink_vec(xs),
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // shrunk input should be small (a handful of elements at most)
+        let after = msg.split("minimal input: ").nth(1).unwrap();
+        assert!(after.len() < 40, "not shrunk: {after}");
+    }
+
+    #[test]
+    fn shrink_vec_produces_halves() {
+        let v: Vec<u64> = (0..8).collect();
+        let cands = shrink_vec(&v);
+        assert!(cands.contains(&vec![0, 1, 2, 3]));
+        assert!(cands.contains(&vec![4, 5, 6, 7]));
+    }
+}

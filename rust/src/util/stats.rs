@@ -1,0 +1,296 @@
+//! Timing and summary statistics for the benchmark harness and metrics.
+//!
+//! Criterion is unavailable offline, so the repo owns its measurement
+//! substrate: wall-clock timers, Welford online moments, and percentile
+//! summaries used by every bench target and the coordinator's latency
+//! histograms.
+
+use std::time::{Duration, Instant};
+
+/// Simple wall-clock timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Online mean/variance accumulator (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    /// New empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Count of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean (0 if empty).
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (0 if < 2 observations).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Summary of a sample: mean/std/min/max/percentiles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Summarize a sample (empty sample => all zeros).
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary {
+                count: 0, mean: 0.0, stddev: 0.0, min: 0.0,
+                p50: 0.0, p90: 0.0, p99: 0.0, max: 0.0,
+            };
+        }
+        let mut sorted: Vec<f64> = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut w = Welford::new();
+        for &x in xs {
+            w.push(x);
+        }
+        Summary {
+            count: xs.len(),
+            mean: w.mean(),
+            stddev: w.stddev(),
+            min: sorted[0],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+            max: sorted[sorted.len() - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    assert!((0.0..=1.0).contains(&q), "q out of range: {q}");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Fixed-bucket latency histogram (log-spaced), cheap enough for the
+/// coordinator hot path: one atomic-free increment per observation.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// bucket i covers [BASE * GROWTH^i, BASE * GROWTH^(i+1)) seconds
+    buckets: Vec<u64>,
+    overflow: u64,
+    count: u64,
+    sum: f64,
+}
+
+const HIST_BASE: f64 = 1e-7; // 100 ns
+const HIST_GROWTH: f64 = 1.5;
+const HIST_BUCKETS: usize = 64;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// New empty histogram covering ~100ns ..= ~3000s.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; HIST_BUCKETS],
+            overflow: 0,
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    /// Record one latency in seconds.
+    pub fn record(&mut self, secs: f64) {
+        self.count += 1;
+        self.sum += secs;
+        if secs < HIST_BASE {
+            self.buckets[0] += 1;
+            return;
+        }
+        let idx = ((secs / HIST_BASE).ln() / HIST_GROWTH.ln()) as usize;
+        if idx < HIST_BUCKETS {
+            self.buckets[idx] += 1;
+        } else {
+            self.overflow += 1;
+        }
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean latency in seconds (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    /// Approximate quantile (upper bucket edge), in seconds.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return HIST_BASE * HIST_GROWTH.powi(i as i32 + 1);
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.overflow += other.overflow;
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // direct sample variance
+        let mean = 5.0;
+        let var: f64 =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / 7.0;
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.count, 100);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 100.0).abs() < 1e-12);
+        assert!(s.p90 > 89.0 && s.p90 < 92.0);
+    }
+
+    #[test]
+    fn summary_empty_is_zero() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn summary_single_value() {
+        let s = Summary::of(&[3.5]);
+        assert_eq!(s.p50, 3.5);
+        assert_eq!(s.p99, 3.5);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..1000 {
+            h.record(1e-3);
+        }
+        let p50 = h.quantile(0.5);
+        // log-bucketed: true value within one growth factor
+        assert!(p50 > 1e-3 / HIST_GROWTH && p50 < 1e-3 * HIST_GROWTH * HIST_GROWTH);
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_merge_adds() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(1e-4);
+        b.record(1e-2);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.secs() >= 0.001);
+    }
+}

@@ -1,0 +1,8 @@
+//! Vector search stage (Figure 1, step 1): document store sharded to the
+//! score artifact's shape + top-k similarity search.
+
+pub mod search;
+pub mod store;
+
+pub use search::{search_topk, Hit};
+pub use store::VectorStore;

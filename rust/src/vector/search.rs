@@ -1,0 +1,149 @@
+//! Top-k similarity search over the vector store via the score artifact
+//! (the L1 Pallas tiled-matmul kernel under the hood).
+
+use crate::error::Result;
+use crate::runtime::engine::Engine;
+use crate::vector::store::VectorStore;
+
+/// One search hit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    pub doc: u32,
+    pub score: f32,
+}
+
+/// Top-k documents for each query in an embedded batch.
+///
+/// `q` is `[batch, D]` row-major; returns one hit list per batch row
+/// (rows beyond `valid` are skipped — they're batch padding).
+pub fn search_topk(
+    engine: &dyn Engine,
+    store: &VectorStore,
+    q: &[f32],
+    valid: usize,
+    k: usize,
+) -> Result<Vec<Vec<Hit>>> {
+    let shape = engine.shape();
+    let b = shape.batch;
+    let per = store.shard_docs();
+    let mut best: Vec<Vec<Hit>> = vec![Vec::new(); valid.min(b)];
+
+    for s in 0..store.shards() {
+        let scores = engine.score(q, store.shard(s))?;
+        for (row, best_row) in best.iter_mut().enumerate() {
+            let base = row * per;
+            for i in 0..per {
+                let doc = (s * per + i) as u32;
+                if doc as usize >= store.len() {
+                    break; // padding rows
+                }
+                push_topk(best_row, Hit { doc, score: scores[base + i] }, k);
+            }
+        }
+    }
+    for row in &mut best {
+        row.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap()
+                .then_with(|| a.doc.cmp(&b.doc))
+        });
+    }
+    Ok(best)
+}
+
+/// Maintain a bounded top-k list (small k: linear insert is fastest).
+fn push_topk(row: &mut Vec<Hit>, hit: Hit, k: usize) {
+    if row.len() < k {
+        row.push(hit);
+        return;
+    }
+    // replace the current minimum if beaten
+    let (mut min_i, mut min_s) = (0usize, f32::INFINITY);
+    for (i, h) in row.iter().enumerate() {
+        if h.score < min_s {
+            min_s = h.score;
+            min_i = i;
+        }
+    }
+    if hit.score > min_s {
+        row[min_i] = hit;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::corpus_from_texts;
+    use crate::runtime::engine::{EngineShape, NativeEngine};
+    use crate::text::tokenizer::tokenize_padded;
+
+    fn engine() -> NativeEngine {
+        NativeEngine::with_shape(EngineShape {
+            batch: 4,
+            max_tokens: 16,
+            embed_dim: 32,
+            shard_docs: 8,
+            max_facts: 8,
+        })
+    }
+
+    fn embed_queries(e: &NativeEngine, qs: &[&str]) -> Vec<f32> {
+        let s = e.shape();
+        let mut toks = vec![0i32; s.batch * s.max_tokens];
+        for (i, q) in qs.iter().enumerate() {
+            toks[i * s.max_tokens..(i + 1) * s.max_tokens]
+                .copy_from_slice(&tokenize_padded(q, s.max_tokens));
+        }
+        e.embed(&toks).unwrap()
+    }
+
+    #[test]
+    fn finds_matching_document() {
+        let e = engine();
+        let texts = vec![
+            "cardiology intensive care unit history".to_string(),
+            "logistics and warehouse supply records".to_string(),
+            "pediatrics vaccination program overview".to_string(),
+            "surgery theatre scheduling notes".to_string(),
+            "oncology chemotherapy ward summary".to_string(),
+            "radiology imaging suite report".to_string(),
+            "neurology outpatient clinic file".to_string(),
+            "pharmacy dispensary stock list".to_string(),
+            "dermatology skin clinic archive".to_string(),
+            "pathology blood bank papers".to_string(),
+        ];
+        let store = VectorStore::build(&e, corpus_from_texts(&texts)).unwrap();
+        let q = embed_queries(&e, &["cardiology intensive care", "pharmacy stock"]);
+        let hits = search_topk(&e, &store, &q, 2, 3).unwrap();
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0][0].doc, 0, "cardiology doc wins: {:?}", hits[0]);
+        assert_eq!(hits[1][0].doc, 7, "pharmacy doc wins: {:?}", hits[1]);
+        // scores sorted desc
+        assert!(hits[0][0].score >= hits[0][1].score);
+    }
+
+    #[test]
+    fn k_larger_than_corpus() {
+        let e = engine();
+        let store = VectorStore::build(
+            &e,
+            corpus_from_texts(&["single doc here".to_string()]),
+        )
+        .unwrap();
+        let q = embed_queries(&e, &["anything"]);
+        let hits = search_topk(&e, &store, &q, 1, 10).unwrap();
+        assert_eq!(hits[0].len(), 1, "padding never returned");
+    }
+
+    #[test]
+    fn topk_bounded() {
+        let e = engine();
+        let texts: Vec<String> =
+            (0..20).map(|i| format!("generic document {i}")).collect();
+        let store = VectorStore::build(&e, corpus_from_texts(&texts)).unwrap();
+        let q = embed_queries(&e, &["generic document"]);
+        let hits = search_topk(&e, &store, &q, 1, 5).unwrap();
+        assert_eq!(hits[0].len(), 5);
+    }
+}

@@ -1,0 +1,173 @@
+//! Vector store: documents + their embeddings, laid out in fixed-size
+//! shards matching the score artifact's `[shard_docs, D]` input shape.
+//!
+//! Shards are zero-padded; padding rows have zero embeddings and can
+//! never win top-k over a real document (scores are cosine in [-1, 1]
+//! and padding scores exactly 0 — real docs relevant to a query score
+//! above 0, and ties are broken toward real ids).
+
+use crate::data::corpus::Document;
+use crate::error::Result;
+use crate::runtime::engine::Engine;
+
+/// A corpus embedded into score-ready shards.
+pub struct VectorStore {
+    docs: Vec<Document>,
+    /// shard-major embeddings: each shard is `[shard_docs * D]` f32
+    shards: Vec<Vec<f32>>,
+    dim: usize,
+    shard_docs: usize,
+}
+
+impl VectorStore {
+    /// Embed `docs` with the engine (batched to the artifact batch size)
+    /// and pack them into shards.
+    pub fn build(engine: &dyn Engine, docs: Vec<Document>) -> Result<VectorStore> {
+        let shape = engine.shape();
+        let (b, l, d) = (shape.batch, shape.max_tokens, shape.embed_dim);
+
+        let mut embeddings: Vec<f32> = Vec::with_capacity(docs.len() * d);
+        for chunk in docs.chunks(b) {
+            let mut tokens = vec![0i32; b * l];
+            for (i, doc) in chunk.iter().enumerate() {
+                tokens[i * l..(i + 1) * l].copy_from_slice(&doc.tokens(l));
+            }
+            let emb = engine.embed(&tokens)?;
+            embeddings.extend_from_slice(&emb[..chunk.len() * d]);
+        }
+
+        // pack into zero-padded shards
+        let per = shape.shard_docs;
+        let nshards = docs.len().div_ceil(per).max(1);
+        let mut shards = Vec::with_capacity(nshards);
+        for s in 0..nshards {
+            let mut shard = vec![0f32; per * d];
+            let start = s * per;
+            let end = ((s + 1) * per).min(docs.len());
+            if start < end {
+                shard[..(end - start) * d]
+                    .copy_from_slice(&embeddings[start * d..end * d]);
+            }
+            shards.push(shard);
+        }
+        Ok(VectorStore { docs, shards, dim: d, shard_docs: per })
+    }
+
+    /// Number of documents.
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Raw shard embeddings (score artifact input).
+    pub fn shard(&self, idx: usize) -> &[f32] {
+        &self.shards[idx]
+    }
+
+    /// Document accessor.
+    pub fn doc(&self, id: u32) -> &Document {
+        &self.docs[id as usize]
+    }
+
+    /// Embedding dim.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Docs per shard.
+    pub fn shard_docs(&self) -> usize {
+        self.shard_docs
+    }
+
+    /// Approximate bytes held by shard embeddings.
+    pub fn memory_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.capacity() * 4).sum()
+    }
+
+    /// Dynamic update: embed and append one document (fills the next
+    /// padding row of the last shard, or opens a new shard). The new
+    /// document's id is returned and immediately searchable.
+    pub fn push(&mut self, engine: &dyn Engine, mut doc: Document) -> Result<u32> {
+        let shape = engine.shape();
+        let (b, l, d) = (shape.batch, shape.max_tokens, shape.embed_dim);
+        let mut tokens = vec![0i32; b * l];
+        tokens[..l].copy_from_slice(&doc.tokens(l));
+        let emb = engine.embed(&tokens)?;
+
+        let id = self.docs.len() as u32;
+        doc.id = id;
+        let per = self.shard_docs;
+        let shard_idx = id as usize / per;
+        if shard_idx >= self.shards.len() {
+            self.shards.push(vec![0f32; per * d]);
+        }
+        let row = id as usize % per;
+        self.shards[shard_idx][row * d..(row + 1) * d]
+            .copy_from_slice(&emb[..d]);
+        self.docs.push(doc);
+        Ok(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::corpus_from_texts;
+    use crate::runtime::engine::{EngineShape, NativeEngine};
+
+    fn small_engine() -> NativeEngine {
+        NativeEngine::with_shape(EngineShape {
+            batch: 4,
+            max_tokens: 16,
+            embed_dim: 16,
+            shard_docs: 8,
+            max_facts: 8,
+        })
+    }
+
+    fn texts(n: usize) -> Vec<String> {
+        (0..n)
+            .map(|i| format!("document number {i} about topic {}.", i % 3))
+            .collect()
+    }
+
+    #[test]
+    fn builds_shards_with_padding() {
+        let e = small_engine();
+        let store = VectorStore::build(&e, corpus_from_texts(&texts(10))).unwrap();
+        assert_eq!(store.len(), 10);
+        assert_eq!(store.shards(), 2, "10 docs over 8-doc shards");
+        // padding rows in shard 1 are zero
+        let sh = store.shard(1);
+        let pad_row = &sh[2 * 16..3 * 16];
+        assert!(pad_row.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn empty_corpus_one_empty_shard() {
+        let e = small_engine();
+        let store = VectorStore::build(&e, Vec::new()).unwrap();
+        assert_eq!(store.len(), 0);
+        assert_eq!(store.shards(), 1);
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn embeddings_are_row_aligned() {
+        let e = small_engine();
+        let docs = corpus_from_texts(&texts(3));
+        let store = VectorStore::build(&e, docs).unwrap();
+        // row 0 of shard 0 must be nonzero (a real embedding)
+        let row0 = &store.shard(0)[..16];
+        assert!(row0.iter().any(|&v| v != 0.0));
+    }
+}

@@ -1,0 +1,149 @@
+//! The cornerstone equivalence test: all four retrieval algorithms must
+//! return the *same address set* for every entity of randomly generated
+//! forests — the Cuckoo/Bloom structures only accelerate, never change,
+//! retrieval semantics. (Paper §4: accuracy invariance across methods.)
+
+use std::sync::Arc;
+
+use cft_rag::data::hospital::{HospitalConfig, HospitalDataset};
+use cft_rag::data::orgchart::{OrgChartConfig, OrgChartDataset};
+use cft_rag::rag::config::{Algorithm, RagConfig};
+use cft_rag::rag::pipeline::make_retriever;
+use cft_rag::util::proptest::forall_simple;
+
+fn assert_all_agree(forest: Arc<cft_rag::forest::Forest>) {
+    let mut retrievers: Vec<_> = Algorithm::ALL
+        .iter()
+        .map(|&algorithm| {
+            make_retriever(
+                forest.clone(),
+                &RagConfig { algorithm, ..RagConfig::default() },
+            )
+        })
+        .collect();
+
+    let names: Vec<String> = forest
+        .interner()
+        .iter()
+        .map(|(_, n)| n.to_string())
+        .collect();
+    for name in &names {
+        let id = forest.entity_id(name).unwrap();
+        let mut want = forest.scan_addresses(id);
+        want.sort();
+        for r in retrievers.iter_mut() {
+            let mut got = r.find(name);
+            got.sort();
+            assert_eq!(
+                got,
+                want,
+                "{} disagrees with scan for entity '{name}'",
+                r.name()
+            );
+        }
+    }
+    // unknown entities: everyone returns empty
+    for r in retrievers.iter_mut() {
+        assert!(r.find("definitely-not-an-entity").is_empty());
+    }
+}
+
+#[test]
+fn agree_on_hospital_forests() {
+    for trees in [1usize, 5, 25] {
+        let forest = Arc::new(
+            HospitalDataset::generate(HospitalConfig {
+                trees,
+                ..HospitalConfig::default()
+            })
+            .build_forest(),
+        );
+        assert_all_agree(forest);
+    }
+}
+
+#[test]
+fn agree_on_orgchart_forests() {
+    let forest = Arc::new(
+        OrgChartDataset::generate(OrgChartConfig {
+            trees: 15,
+            ..OrgChartConfig::default()
+        })
+        .build_forest(),
+    );
+    assert_all_agree(forest);
+}
+
+#[test]
+fn agree_on_random_seeds() {
+    forall_simple(
+        8,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let forest = Arc::new(
+                HospitalDataset::generate(HospitalConfig {
+                    trees: 8,
+                    seed,
+                    ..HospitalConfig::default()
+                })
+                .build_forest(),
+            );
+            // spot-check a sample of entities for speed
+            let mut retrievers: Vec<_> = Algorithm::ALL
+                .iter()
+                .map(|&algorithm| {
+                    make_retriever(
+                        forest.clone(),
+                        &RagConfig { algorithm, ..RagConfig::default() },
+                    )
+                })
+                .collect();
+            let names: Vec<String> = forest
+                .interner()
+                .iter()
+                .map(|(_, n)| n.to_string())
+                .take(40)
+                .collect();
+            for name in &names {
+                let id = forest.entity_id(name).unwrap();
+                let mut want = forest.scan_addresses(id);
+                want.sort();
+                for r in retrievers.iter_mut() {
+                    let mut got = r.find(name);
+                    got.sort();
+                    if got != want {
+                        return Err(format!(
+                            "{} disagrees on '{name}' (seed {seed})",
+                            r.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn repeated_queries_and_maintenance_do_not_change_results() {
+    let forest = Arc::new(
+        HospitalDataset::generate(HospitalConfig {
+            trees: 10,
+            ..HospitalConfig::default()
+        })
+        .build_forest(),
+    );
+    let mut cf = make_retriever(
+        forest.clone(),
+        &RagConfig { algorithm: Algorithm::Cuckoo, ..RagConfig::default() },
+    );
+    let id = forest.entity_id("cardiology").unwrap();
+    let mut want = forest.scan_addresses(id);
+    want.sort();
+    for round in 0..20 {
+        let mut got = cf.find("cardiology");
+        got.sort();
+        assert_eq!(got, want, "round {round}");
+        cf.maintain();
+    }
+}

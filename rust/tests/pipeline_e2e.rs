@@ -1,0 +1,155 @@
+//! End-to-end pipeline + coordinator integration: dataset → forest →
+//! (PJRT artifacts when present, else native engine) → retrieval →
+//! generation → judged accuracy, plus coordinator batching under load.
+
+use std::sync::Arc;
+
+use cft_rag::coordinator::{Coordinator, CoordinatorConfig};
+use cft_rag::data::corpus::corpus_from_texts;
+use cft_rag::data::hospital::{HospitalConfig, HospitalDataset};
+use cft_rag::data::workload::{Workload, WorkloadConfig};
+use cft_rag::llm::judge::{judge, Judgement};
+use cft_rag::rag::config::{Algorithm, RagConfig};
+use cft_rag::rag::pipeline::RagPipeline;
+use cft_rag::runtime::engine::{Engine, NativeEngine, PjrtEngine};
+use cft_rag::runtime::{default_dir, Runtime};
+
+fn engine() -> Arc<dyn Engine> {
+    match Runtime::load(default_dir()) {
+        Ok(rt) => Arc::new(PjrtEngine::new(rt)),
+        Err(_) => {
+            eprintln!("NOTE: artifacts missing; using native engine");
+            Arc::new(NativeEngine::new())
+        }
+    }
+}
+
+fn dataset(trees: usize) -> (HospitalDataset, Arc<cft_rag::forest::Forest>) {
+    let ds = HospitalDataset::generate(HospitalConfig {
+        trees,
+        ..HospitalConfig::default()
+    });
+    let forest = Arc::new(ds.build_forest());
+    (ds, forest)
+}
+
+#[test]
+fn pipeline_accuracy_in_plateau_band() {
+    let (ds, forest) = dataset(12);
+    let workload = Workload::generate(
+        &forest,
+        WorkloadConfig { queries: 25, ..Default::default() },
+    );
+    let mut accuracies = Vec::new();
+    for alg in Algorithm::ALL {
+        let mut pipeline = RagPipeline::build(
+            forest.clone(),
+            corpus_from_texts(&ds.documents()),
+            engine(),
+            RagConfig { algorithm: alg, ..RagConfig::default() },
+        )
+        .unwrap();
+        let mut total = Judgement::default();
+        for q in &workload.queries {
+            let resp = pipeline.answer(&q.text).unwrap();
+            total.merge(judge(&resp.answer.text, &q.gold));
+        }
+        let acc = total.accuracy();
+        // the n=3 window over depth-4..6 trees should land broadly near
+        // the paper's ~0.66 plateau; wide band for workload noise
+        assert!(
+            (0.4..=1.0).contains(&acc),
+            "{}: accuracy {acc}",
+            alg.label()
+        );
+        accuracies.push(acc);
+    }
+    // accuracy must be algorithm-invariant (the paper's key claim)
+    let max = accuracies.iter().cloned().fold(f64::MIN, f64::max);
+    let min = accuracies.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(
+        max - min < 0.02,
+        "accuracy differs across algorithms: {accuracies:?}"
+    );
+}
+
+#[test]
+fn pipeline_end_to_end_with_docs() {
+    let (ds, forest) = dataset(8);
+    let mut pipeline = RagPipeline::build(
+        forest,
+        corpus_from_texts(&ds.documents()),
+        engine(),
+        RagConfig::default(),
+    )
+    .unwrap();
+    let resp = pipeline
+        .answer("where does cardiology sit in the organization")
+        .unwrap();
+    assert!(!resp.retrieved_docs.is_empty(), "vector search returned docs");
+    assert!(resp.entities.contains(&"cardiology".to_string()));
+    assert!(resp.context.len() > 0);
+    assert!(resp.answer.text.contains("cardiology"));
+    assert!(resp.retrieval_time <= resp.total_time);
+}
+
+#[test]
+fn coordinator_under_concurrent_load() {
+    let (ds, forest) = dataset(10);
+    let workload = Workload::generate(
+        &forest,
+        WorkloadConfig { queries: 40, ..Default::default() },
+    );
+    let coordinator = Coordinator::start(
+        forest,
+        corpus_from_texts(&ds.documents()),
+        engine(),
+        RagConfig::default(),
+        CoordinatorConfig { workers: 3, ..Default::default() },
+    )
+    .unwrap();
+
+    let rxs: Vec<_> = workload
+        .queries
+        .iter()
+        .map(|q| coordinator.submit(&q.text))
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert!(!resp.answer.is_empty());
+        ok += 1;
+    }
+    assert_eq!(ok, 40);
+    let snap = coordinator.metrics().snapshot();
+    assert_eq!(snap.requests, 40);
+    assert_eq!(snap.failures, 0);
+    assert!(snap.batches <= 40, "batching collapsed queries");
+    assert!(snap.mean_batch_fill >= 1.0);
+    coordinator.shutdown();
+}
+
+#[test]
+fn cuckoo_dynamic_updates_visible_e2e() {
+    let (ds, forest) = dataset(5);
+    let mut pipeline = RagPipeline::build(
+        forest.clone(),
+        corpus_from_texts(&ds.documents()),
+        engine(),
+        RagConfig { algorithm: Algorithm::Cuckoo, ..RagConfig::default() },
+    )
+    .unwrap();
+    // entity present initially
+    let before = pipeline
+        .answer("describe the hierarchy around cardiology")
+        .unwrap();
+    assert!(before.context.len() > 0);
+    // retriever-level delete (paper Algorithm 2) — downcast via trait obj
+    // is not exposed; exercise via a fresh CuckooTRag instead
+    use cft_rag::retrieval::cuckoo_rag::CuckooTRag;
+    use cft_rag::retrieval::Retriever;
+    let mut r = CuckooTRag::new(forest);
+    assert!(!r.find("cardiology").is_empty());
+    assert!(r.remove_entity("cardiology"));
+    assert!(r.find("cardiology").is_empty());
+}

@@ -1,0 +1,248 @@
+//! Property-based tests for the improved Cuckoo Filter: random operation
+//! sequences checked against a HashMap reference model, plus structural
+//! invariants (no false negatives, expansion preserves state, maintain
+//! never loses entries).
+
+use std::collections::HashMap;
+
+use cft_rag::filter::cuckoo::{CuckooConfig, CuckooFilter};
+use cft_rag::filter::fingerprint::entity_key;
+use cft_rag::forest::EntityAddress;
+use cft_rag::util::proptest::{forall, forall_simple, shrink_vec, Config};
+use cft_rag::util::rng::Rng;
+
+/// A random filter operation.
+#[derive(Clone, Debug)]
+enum Op {
+    Insert(u16, u8),
+    Delete(u16),
+    Lookup(u16),
+    PushAddr(u16),
+    Maintain,
+}
+
+fn gen_ops(rng: &mut Rng, max_len: usize) -> Vec<Op> {
+    let n = rng.range(1, max_len + 1);
+    (0..n)
+        .map(|_| {
+            let id = rng.below(200) as u16;
+            match rng.below(10) {
+                0..=3 => Op::Insert(id, rng.below(6) as u8),
+                4..=5 => Op::Delete(id),
+                6..=7 => Op::Lookup(id),
+                8 => Op::PushAddr(id),
+                _ => Op::Maintain,
+            }
+        })
+        .collect()
+}
+
+fn key_of(id: u16) -> u64 {
+    entity_key(&format!("prop-entity-{id}"))
+}
+
+fn addrs_of(id: u16, n: u8) -> Vec<EntityAddress> {
+    (0..n as u32)
+        .map(|i| EntityAddress::new(id as u32, i))
+        .collect()
+}
+
+/// Execute ops against the filter and a HashMap model; compare after
+/// every step. Exact-match operations (insert/delete/push) must agree
+/// perfectly; lookups may additionally hit on fingerprint collisions
+/// (false positives), so the model only demands no false *negatives*.
+fn check_sequence(ops: &[Op]) -> Result<(), String> {
+    let mut cf = CuckooFilter::new(CuckooConfig {
+        initial_buckets: 8, // tiny: forces evictions + expansions
+        ..CuckooConfig::default()
+    });
+    let mut model: HashMap<u16, Vec<EntityAddress>> = HashMap::new();
+
+    for (step, op) in ops.iter().enumerate() {
+        match op {
+            Op::Insert(id, n) => {
+                let a = addrs_of(*id, *n);
+                let inserted = cf.insert(key_of(*id), &a);
+                let expected = !model.contains_key(id);
+                if inserted != expected {
+                    return Err(format!(
+                        "step {step}: insert({id}) returned {inserted}, model says {expected}"
+                    ));
+                }
+                if inserted {
+                    model.insert(*id, a);
+                }
+            }
+            Op::Delete(id) => {
+                let deleted = cf.delete(key_of(*id));
+                let expected = model.remove(id).is_some();
+                if deleted != expected {
+                    return Err(format!(
+                        "step {step}: delete({id}) returned {deleted}, model says {expected}"
+                    ));
+                }
+            }
+            Op::Lookup(id) => {
+                let hit = cf.lookup(key_of(*id));
+                match model.get(id) {
+                    Some(addrs) => {
+                        let got = hit
+                            .map(|h| cf.addresses(h))
+                            .unwrap_or_default();
+                        if &got != addrs {
+                            return Err(format!(
+                                "step {step}: lookup({id}) wrong addresses: {got:?} vs {addrs:?}"
+                            ));
+                        }
+                    }
+                    None => { /* false positives allowed */ }
+                }
+            }
+            Op::PushAddr(id) => {
+                let pushed =
+                    cf.push_address(key_of(*id), EntityAddress::new(999, *id as u32));
+                let expected = model.contains_key(id);
+                if pushed != expected {
+                    return Err(format!(
+                        "step {step}: push({id}) returned {pushed}, model says {expected}"
+                    ));
+                }
+                if pushed {
+                    model
+                        .get_mut(id)
+                        .unwrap()
+                        .push(EntityAddress::new(999, *id as u32));
+                }
+            }
+            Op::Maintain => cf.maintain(),
+        }
+        if cf.len() != model.len() {
+            return Err(format!(
+                "step {step}: len {} != model {}",
+                cf.len(),
+                model.len()
+            ));
+        }
+    }
+
+    // Final sweep: every model entry retrievable with exact addresses.
+    for (id, addrs) in &model {
+        match cf.lookup(key_of(*id)) {
+            None => return Err(format!("final: false negative for {id}")),
+            Some(h) => {
+                let got = cf.addresses(h);
+                if &got != addrs {
+                    return Err(format!("final: {id} addresses {got:?} != {addrs:?}"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn random_op_sequences_match_model() {
+    forall(
+        Config { cases: 150, ..Config::default() },
+        |rng| gen_ops(rng, 400),
+        |ops| check_sequence(ops),
+        |ops| shrink_vec(ops),
+    );
+}
+
+#[test]
+fn mass_insert_never_false_negative() {
+    forall_simple(
+        30,
+        |rng| {
+            let n = rng.range(1, 4000);
+            let seed = rng.next_u64();
+            (n, seed)
+        },
+        |&(n, seed)| {
+            let mut cf = CuckooFilter::new(CuckooConfig {
+                initial_buckets: 16,
+                seed,
+                ..CuckooConfig::default()
+            });
+            for i in 0..n {
+                let k = entity_key(&format!("k{seed}-{i}"));
+                if !cf.insert(k, &[]) {
+                    return Err(format!("insert {i}/{n} failed"));
+                }
+            }
+            for i in 0..n {
+                let k = entity_key(&format!("k{seed}-{i}"));
+                if !cf.contains(k) {
+                    return Err(format!("false negative at {i}/{n}"));
+                }
+            }
+            if cf.load_factor() > 1.0 {
+                return Err("load factor > 1".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn maintain_preserves_membership_under_heat() {
+    forall_simple(
+        30,
+        |rng| {
+            let ids: Vec<u16> = (0..rng.range(2, 60)).map(|_| rng.below(500) as u16).collect();
+            let hot: Vec<u16> = (0..rng.range(1, 20)).map(|_| rng.below(500) as u16).collect();
+            (ids, hot)
+        },
+        |(ids, hot)| {
+            let mut cf = CuckooFilter::new(CuckooConfig {
+                initial_buckets: 4,
+                ..CuckooConfig::default()
+            });
+            let mut inserted = Vec::new();
+            for &id in ids {
+                if cf.insert(key_of(id), &addrs_of(id, 2)) {
+                    inserted.push(id);
+                }
+            }
+            for &h in hot {
+                cf.lookup(key_of(h));
+            }
+            cf.maintain();
+            for &id in &inserted {
+                let Some(hit) = cf.lookup(key_of(id)) else {
+                    return Err(format!("{id} lost after maintain"));
+                };
+                if cf.addresses(hit) != addrs_of(id, 2) {
+                    return Err(format!("{id} addresses corrupted"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn expansion_scales_power_of_two() {
+    forall_simple(
+        20,
+        |rng| rng.range(1, 5000),
+        |&n| {
+            let mut cf = CuckooFilter::new(CuckooConfig {
+                initial_buckets: 32,
+                ..CuckooConfig::default()
+            });
+            for i in 0..n {
+                cf.insert(entity_key(&format!("e{i}")), &[]);
+            }
+            if !cf.buckets().is_power_of_two() {
+                return Err(format!("buckets {} not a power of two", cf.buckets()));
+            }
+            // load must respect the threshold after growth
+            if n > 64 && cf.load_factor() > 0.95 {
+                return Err(format!("load factor {} too high", cf.load_factor()));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,192 @@
+//! Property tests on the pre-processing substrate: relation filtering
+//! always yields a forest-buildable edge set, building preserves every
+//! entity, and tree structure invariants hold.
+
+use std::collections::HashSet;
+
+use cft_rag::forest::{builder::build_trees, Forest};
+use cft_rag::nlp::filter::filter_relations;
+use cft_rag::util::proptest::{forall, forall_simple, shrink_vec, Config};
+use cft_rag::util::rng::Rng;
+
+fn gen_edges(rng: &mut Rng, max_nodes: u64, max_edges: usize) -> Vec<(String, String)> {
+    let n = rng.range(0, max_edges + 1);
+    (0..n)
+        .map(|_| {
+            (
+                format!("n{}", rng.below(max_nodes)),
+                format!("n{}", rng.below(max_nodes)),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn filtered_relations_are_acyclic_and_single_parent() {
+    forall(
+        Config { cases: 300, ..Config::default() },
+        |rng| gen_edges(rng, 30, 80),
+        |edges| {
+            let filtered = filter_relations(edges);
+            // no self edges
+            if filtered.iter().any(|(c, p)| c == p) {
+                return Err("self edge survived".into());
+            }
+            // no duplicates
+            let set: HashSet<_> = filtered.iter().collect();
+            if set.len() != filtered.len() {
+                return Err("duplicate edge survived".into());
+            }
+            // acyclic: child->parent graph must topo-sort
+            if has_cycle(&filtered) {
+                return Err(format!("cycle survived: {filtered:?}"));
+            }
+            Ok(())
+        },
+        |edges| shrink_vec(edges),
+    );
+}
+
+fn has_cycle(edges: &[(String, String)]) -> bool {
+    // Kahn over child->parent edges
+    let mut nodes: HashSet<&str> = HashSet::new();
+    for (c, p) in edges {
+        nodes.insert(c);
+        nodes.insert(p);
+    }
+    let mut out: std::collections::HashMap<&str, Vec<&str>> = Default::default();
+    let mut indeg: std::collections::HashMap<&str, usize> = Default::default();
+    for n in &nodes {
+        indeg.insert(n, 0);
+    }
+    for (c, p) in edges {
+        out.entry(c.as_str()).or_default().push(p.as_str());
+        *indeg.get_mut(p.as_str()).unwrap() += 1;
+    }
+    let mut queue: Vec<&str> = indeg
+        .iter()
+        .filter(|(_, &d)| d == 0)
+        .map(|(n, _)| *n)
+        .collect();
+    let mut seen = 0;
+    while let Some(n) = queue.pop() {
+        seen += 1;
+        if let Some(ps) = out.get(n) {
+            for p in ps {
+                let d = indeg.get_mut(p).unwrap();
+                *d -= 1;
+                if *d == 0 {
+                    queue.push(p);
+                }
+            }
+        }
+    }
+    seen != nodes.len()
+}
+
+#[test]
+fn building_preserves_every_entity() {
+    forall_simple(
+        200,
+        |rng| gen_edges(rng, 25, 60),
+        |edges| {
+            let filtered = filter_relations(edges);
+            let mut forest = Forest::new();
+            build_trees(&mut forest, &filtered);
+            let mut expected: HashSet<&str> = HashSet::new();
+            for (c, p) in &filtered {
+                expected.insert(c);
+                expected.insert(p);
+            }
+            for name in &expected {
+                let Some(id) = forest.entity_id(name) else {
+                    return Err(format!("{name} missing from forest"));
+                };
+                if forest.scan_addresses(id).is_empty() {
+                    return Err(format!("{name} has no address"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tree_structure_invariants() {
+    forall_simple(
+        200,
+        |rng| gen_edges(rng, 20, 50),
+        |edges| {
+            let filtered = filter_relations(edges);
+            let mut forest = Forest::new();
+            let idxs = build_trees(&mut forest, &filtered);
+            for &ti in &idxs {
+                let tree = forest.tree(ti);
+                // root is its own ancestor chain end
+                if tree.node(0).parent.is_some() {
+                    return Err("root has a parent".into());
+                }
+                for idx in tree.indices() {
+                    let node = tree.node(idx);
+                    // depth consistency
+                    if let Some(p) = node.parent {
+                        if tree.node(p).depth + 1 != node.depth {
+                            return Err(format!("depth broken at node {idx}"));
+                        }
+                        if !tree.node(p).children.contains(&idx) {
+                            return Err("parent/child link asymmetric".into());
+                        }
+                    }
+                    // children point back
+                    for &c in &node.children {
+                        if tree.node(c).parent != Some(idx) {
+                            return Err("child's parent wrong".into());
+                        }
+                    }
+                }
+                // node count = reachable from root (no orphans inside a tree)
+                let reachable =
+                    cft_rag::forest::traverse::Bfs::new(tree).count();
+                if reachable != tree.len() {
+                    return Err(format!(
+                        "{} reachable of {} nodes",
+                        reachable,
+                        tree.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn every_forest_node_appears_in_exactly_one_tree_position() {
+    forall_simple(
+        100,
+        |rng| gen_edges(rng, 15, 40),
+        |edges| {
+            let filtered = filter_relations(edges);
+            let mut forest = Forest::new();
+            build_trees(&mut forest, &filtered);
+            // address_table covers total_nodes exactly once
+            let table = forest.address_table();
+            let total: usize = table.values().map(Vec::len).sum();
+            if total != forest.total_nodes() {
+                return Err(format!(
+                    "address table {total} != nodes {}",
+                    forest.total_nodes()
+                ));
+            }
+            let mut seen = HashSet::new();
+            for addrs in table.values() {
+                for a in addrs {
+                    if !seen.insert(a.pack()) {
+                        return Err("duplicate address".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

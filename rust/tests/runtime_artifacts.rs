@@ -1,0 +1,157 @@
+//! Integration tests over the REAL artifacts: load `artifacts/*.hlo.txt`
+//! on the PJRT CPU client and verify the L1/L2 semantics from Rust.
+//!
+//! Skipped (with a notice) when artifacts are absent — run
+//! `make artifacts` first; CI always runs them via the Makefile.
+
+use cft_rag::runtime::{default_dir, Manifest, Runtime};
+use cft_rag::text::tokenizer::tokenize_padded;
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime must load when artifacts exist"))
+}
+
+#[test]
+fn manifest_matches_python_constants() {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let m = Manifest::load(dir).unwrap();
+    assert_eq!(m.batch, 8);
+    assert_eq!(m.embed_dim, 64);
+    assert_eq!(m.max_tokens, 32);
+    assert_eq!(m.shard_docs, 1024);
+    assert_eq!(m.max_facts, 64);
+    assert_eq!(m.pad_id, 0);
+}
+
+#[test]
+fn embed_artifact_unit_norm_and_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest().clone();
+    let mut tokens = vec![0i32; m.batch * m.max_tokens];
+    tokens[..m.max_tokens]
+        .copy_from_slice(&tokenize_padded("cardiology intensive care", m.max_tokens));
+    tokens[m.max_tokens..2 * m.max_tokens]
+        .copy_from_slice(&tokenize_padded("surgery theatre", m.max_tokens));
+
+    let a = rt.embed(&tokens).unwrap();
+    let b = rt.embed(&tokens).unwrap();
+    assert_eq!(a, b, "deterministic");
+    for row in 0..2 {
+        let v = &a[row * m.embed_dim..(row + 1) * m.embed_dim];
+        let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-3, "row {row} norm {norm}");
+    }
+}
+
+#[test]
+fn embed_artifact_similarity_tracks_token_overlap() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest().clone();
+    let mut tokens = vec![0i32; m.batch * m.max_tokens];
+    let texts = [
+        "cardiology intensive care unit",
+        "cardiology intensive care ward",
+        "logistics warehouse supply office",
+    ];
+    for (i, t) in texts.iter().enumerate() {
+        tokens[i * m.max_tokens..(i + 1) * m.max_tokens]
+            .copy_from_slice(&tokenize_padded(t, m.max_tokens));
+    }
+    let e = rt.embed(&tokens).unwrap();
+    let dot = |a: usize, b: usize| -> f32 {
+        e[a * m.embed_dim..(a + 1) * m.embed_dim]
+            .iter()
+            .zip(&e[b * m.embed_dim..(b + 1) * m.embed_dim])
+            .map(|(x, y)| x * y)
+            .sum()
+    };
+    assert!(
+        dot(0, 1) > dot(0, 2) + 0.1,
+        "similar {} vs dissimilar {}",
+        dot(0, 1),
+        dot(0, 2)
+    );
+}
+
+#[test]
+fn score_artifact_finds_self() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest().clone();
+    // docs: deterministic unit vectors
+    let mut docs = vec![0f32; m.shard_docs * m.embed_dim];
+    for i in 0..m.shard_docs {
+        let mut norm = 0f32;
+        for d in 0..m.embed_dim {
+            let v = ((i * 31 + d * 7 + 3) as f32).sin();
+            docs[i * m.embed_dim + d] = v;
+            norm += v * v;
+        }
+        let norm = norm.sqrt();
+        for d in 0..m.embed_dim {
+            docs[i * m.embed_dim + d] /= norm;
+        }
+    }
+    // queries = rows 5, 100, 1023, ...
+    let picks = [5usize, 100, 1023, 0, 512, 7, 9, 300];
+    let mut q = vec![0f32; m.batch * m.embed_dim];
+    for (b, &i) in picks.iter().enumerate() {
+        q[b * m.embed_dim..(b + 1) * m.embed_dim]
+            .copy_from_slice(&docs[i * m.embed_dim..(i + 1) * m.embed_dim]);
+    }
+    let scores = rt.score(&q, &docs).unwrap();
+    for (b, &want) in picks.iter().enumerate() {
+        let row = &scores[b * m.shard_docs..(b + 1) * m.shard_docs];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, want, "row {b}");
+    }
+}
+
+#[test]
+fn rank_artifact_masks_padding_and_sums_to_one() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest().clone();
+    let mut q = vec![0f32; m.batch * m.embed_dim];
+    let mut facts = vec![0f32; m.batch * m.max_facts * m.embed_dim];
+    for (i, v) in q.iter_mut().enumerate() {
+        *v = ((i * 13) as f32).sin();
+    }
+    for (i, v) in facts.iter_mut().enumerate() {
+        *v = ((i * 17) as f32).cos() * 0.3;
+    }
+    let lens: Vec<i32> = vec![3, 0, 64, 10, 1, 7, 33, 2];
+    let w = rt.rank(&q, &facts, &lens).unwrap();
+    for (b, &l) in lens.iter().enumerate() {
+        let row = &w[b * m.max_facts..(b + 1) * m.max_facts];
+        let sum: f32 = row.iter().sum();
+        if l == 0 {
+            assert!(sum.abs() < 1e-5, "row {b} not all zero");
+        } else {
+            assert!((sum - 1.0).abs() < 1e-4, "row {b} sums to {sum}");
+            assert!(
+                row[l as usize..].iter().all(|&x| x == 0.0),
+                "row {b} padding leaked"
+            );
+        }
+    }
+}
+
+#[test]
+fn shape_mismatches_rejected() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.embed(&[0i32; 7]).is_err());
+    assert!(rt.score(&[0f32; 3], &[0f32; 3]).is_err());
+    assert!(rt.rank(&[0f32; 3], &[0f32; 3], &[0i32; 1]).is_err());
+}
