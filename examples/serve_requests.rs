@@ -6,7 +6,13 @@
 //! coordinator.
 //!
 //! Run: `make artifacts && cargo run --release --example serve_requests`
-//! Flags: --trees N --requests N --workers N --native (skip artifacts)
+//! Flags: --trees N --requests N --workers N --shards N
+//!        --native (skip artifacts)
+//!
+//! Retrieval runs on the sharded Cuckoo filter (`--shards`, default one
+//! shard per core), so worker threads retrieve in parallel instead of
+//! serializing on a global retriever lock — compare `--workers 1` vs
+//! `--workers 8` throughput to see the scaling.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -27,6 +33,7 @@ fn main() {
         spec("trees", "hospital tree count", Some("100"), false),
         spec("requests", "total queries to serve", Some("256"), false),
         spec("workers", "coordinator workers", Some("4"), false),
+        spec("shards", "cuckoo filter shards (0 = one per core)", Some("0"), false),
         spec("pool", "PJRT runtime pool size", Some("1"), false),
         spec("native", "use the native engine instead of PJRT", None, true),
         spec("trace-out", "record the workload to a JSON trace file", None, false),
@@ -77,11 +84,19 @@ fn main() {
     let backend = engine.backend();
 
     // ---- coordinator ----
+    let rag_cfg = RagConfig {
+        shards: args.num_or("shards", 0),
+        ..RagConfig::default()
+    };
+    println!(
+        "retriever: sharded cuckoo ({} shards)",
+        rag_cfg.resolved_shards().next_power_of_two()
+    );
     let coordinator = Coordinator::start(
         forest.clone(),
         corpus_from_texts(&ds.documents()),
         engine,
-        RagConfig::default(),
+        rag_cfg,
         CoordinatorConfig {
             workers: args.num_or("workers", 4),
             ..Default::default()

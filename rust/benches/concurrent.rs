@@ -1,0 +1,176 @@
+//! Concurrent retrieval bench: lookup throughput of the shard-parallel
+//! Cuckoo retriever vs the old global-mutex design, across thread counts
+//! — the scaling the coordinator's worker pool now inherits.
+//!
+//! Two arms per thread count:
+//!
+//! * `mutex`   — one `CuckooTRag` behind a `Mutex` (the pre-sharding
+//!   coordinator design): every lookup serializes.
+//! * `sharded` — `ShardedCuckooTRag`: lookups take only the read lock of
+//!   the key's shard, so throughput scales with threads.
+//!
+//! Also reports single-thread lookup latency for the unsharded filter vs
+//! the sharded one (the sharding overhead on an uncontended path).
+//!
+//! Run: `cargo bench --bench concurrent`. Writes `results/concurrent.csv`.
+
+use std::sync::{Arc, Mutex};
+
+use cft_rag::bench::experiments::experiment_forest;
+use cft_rag::bench::harness::{bench, print_table};
+use cft_rag::retrieval::cuckoo_rag::CuckooTRag;
+use cft_rag::retrieval::sharded_rag::ShardedCuckooTRag;
+use cft_rag::retrieval::{ConcurrentRetriever, Retriever};
+use cft_rag::util::cli::{spec, Args};
+use cft_rag::util::csv::CsvTable;
+use cft_rag::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env(vec![
+        spec("trees", "forest size", Some("300"), false),
+        spec("threads", "comma-separated thread counts", Some("1,2,4,8"), false),
+        spec("shards", "shard count (0 = one per core)", Some("0"), false),
+        spec("lookups", "lookups per thread per repeat", Some("200000"), false),
+        spec("repeats", "timed repeats", Some("5"), false),
+        spec("out", "CSV output path", Some("results/concurrent.csv"), false),
+        spec("bench", "ignored (cargo bench passes it)", None, true),
+    ])
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    if args.wants_help() {
+        println!("{}", args.usage());
+        return;
+    }
+    let trees: usize = args.num_or("trees", 300);
+    let thread_counts: Vec<usize> = args.list_or("threads", &[1, 2, 4, 8]);
+    let lookups: usize = args.num_or("lookups", 200_000);
+    let repeats: usize = args.num_or("repeats", 5);
+    let shards = match args.num_or("shards", 0usize) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    };
+
+    let forest = experiment_forest(trees, 42);
+    // Every entity name, repeated in random order per thread, so lookups
+    // hit (the serving-path case) and spread across all shards.
+    let names: Vec<String> = forest
+        .interner()
+        .iter()
+        .map(|(_, n)| n.to_string())
+        .collect();
+    assert!(!names.is_empty());
+
+    let mutexed = Arc::new(Mutex::new(CuckooTRag::new(forest.clone())));
+    let sharded = Arc::new(ShardedCuckooTRag::new(forest.clone(), shards));
+    println!(
+        "forest: {trees} trees, {} entities; {} shards; {lookups} lookups/thread",
+        names.len(),
+        sharded.filter().num_shards()
+    );
+
+    let mut rows = Vec::new();
+    let mut csv = CsvTable::new(&["design", "threads", "mops_per_s", "speedup_vs_mutex"]);
+
+    // per-(arm, threads) p50 Mops/s
+    let run = |label: &str, threads: usize, f: &(dyn Fn(usize) + Sync)| -> f64 {
+        let r = bench(label, 1, repeats, || {
+            std::thread::scope(|s| {
+                for t in 0..threads {
+                    s.spawn(move || f(t));
+                }
+            });
+        });
+        (threads * lookups) as f64 / r.summary().p50 / 1e6
+    };
+
+    for &threads in &thread_counts {
+        let mutex_arm = {
+            let m = mutexed.clone();
+            let names = &names;
+            run("mutex", threads, &move |tid: usize| {
+                let mut rng = Rng::new(0xBEEF ^ tid as u64);
+                let mut out = Vec::with_capacity(64);
+                let mut found = 0usize;
+                for _ in 0..lookups {
+                    let name = &names[rng.range(0, names.len())];
+                    out.clear();
+                    m.lock().unwrap().find_into(name, &mut out);
+                    if !out.is_empty() {
+                        found += 1;
+                    }
+                }
+                assert!(found > 0);
+            })
+        };
+        let sharded_arm = {
+            let r = sharded.clone();
+            let names = &names;
+            run("sharded", threads, &move |tid: usize| {
+                let mut rng = Rng::new(0xBEEF ^ tid as u64);
+                let mut out = Vec::with_capacity(64);
+                let mut found = 0usize;
+                for _ in 0..lookups {
+                    let name = &names[rng.range(0, names.len())];
+                    out.clear();
+                    r.find_concurrent(name, &mut out);
+                    if !out.is_empty() {
+                        found += 1;
+                    }
+                }
+                assert!(found > 0);
+            })
+        };
+        for (design, mops) in [("mutex", mutex_arm), ("sharded", sharded_arm)] {
+            let speedup = mops / mutex_arm;
+            rows.push(vec![
+                design.to_string(),
+                threads.to_string(),
+                format!("{mops:.2}"),
+                format!("{speedup:.2}x"),
+            ]);
+            csv.push(&[
+                design.to_string(),
+                threads.to_string(),
+                format!("{mops}"),
+                format!("{speedup}"),
+            ]);
+        }
+    }
+
+    print_table(
+        "Concurrent retrieval throughput (lookups, all threads hammering)",
+        &["design", "threads", "Mops/s", "vs mutex"],
+        &rows,
+    );
+
+    // single-thread latency sanity: sharding must cost ~nothing uncontended
+    let mut plain = CuckooTRag::new(forest.clone());
+    let single_plain = bench("plain-1t", 1, repeats, || {
+        let mut rng = Rng::new(7);
+        let mut out = Vec::with_capacity(64);
+        for _ in 0..lookups {
+            out.clear();
+            plain.find_into(&names[rng.range(0, names.len())], &mut out);
+        }
+    });
+    let single_sharded = bench("sharded-1t", 1, repeats, || {
+        let mut rng = Rng::new(7);
+        let mut out = Vec::with_capacity(64);
+        for _ in 0..lookups {
+            out.clear();
+            sharded.find_concurrent(&names[rng.range(0, names.len())], &mut out);
+        }
+    });
+    let p = single_plain.summary().p50 / lookups as f64 * 1e9;
+    let s = single_sharded.summary().p50 / lookups as f64 * 1e9;
+    println!(
+        "\nsingle-thread lookup: unsharded {p:.1} ns, sharded {s:.1} ns ({:.0}% overhead)",
+        (s / p - 1.0) * 100.0
+    );
+
+    let out = args.str_or("out", "results/concurrent.csv");
+    csv.write_to(&out).expect("write csv");
+    println!("\nwrote {out}");
+}

@@ -3,6 +3,12 @@
 //! retrieval, context, generation) → response channels. All Rust, all
 //! threads; Python never runs here.
 //!
+//! Retrieval is **lock-free across workers** for the Cuckoo algorithm:
+//! the pool shares an `Arc<dyn ConcurrentRetriever>` (a sharded filter
+//! whose lookups take only per-shard read locks), so throughput scales
+//! with `CoordinatorConfig::workers` instead of serializing on a global
+//! retriever mutex. Baseline algorithms fall back to a mutex adapter.
+//!
 //! ```text
 //!  submit() ─► [queue] ─► batcher thread ── embed+search (batch B) ──┐
 //!                                                                    ▼
@@ -24,9 +30,9 @@ use crate::llm::generator::Generator;
 use crate::llm::prompt::Prompt;
 use crate::nlp::ner::GazetteerNer;
 use crate::rag::config::RagConfig;
-use crate::rag::pipeline::make_retriever;
+use crate::rag::pipeline::make_concurrent_retriever;
 use crate::retrieval::context::{generate_context, Context};
-use crate::retrieval::Retriever;
+use crate::retrieval::ConcurrentRetriever;
 use crate::runtime::engine::Engine;
 use crate::text::tokenizer::tokenize_padded;
 use crate::util::stats::Timer;
@@ -95,8 +101,8 @@ impl Coordinator {
         let ner = Arc::new(GazetteerNer::new(
             forest.interner().iter().map(|(_, n)| n),
         ));
-        let retriever: Arc<Mutex<Box<dyn Retriever + Send>>> =
-            Arc::new(Mutex::new(make_retriever(forest.clone(), &rag_cfg)));
+        let retriever: Arc<dyn ConcurrentRetriever> =
+            make_concurrent_retriever(forest.clone(), &rag_cfg);
         let metrics = Metrics::new();
         let cache = EmbedCache::new();
 
@@ -128,7 +134,7 @@ impl Coordinator {
                             if cfg.maintain_every > 0
                                 && batches % cfg.maintain_every == 0
                             {
-                                retriever.lock().unwrap().maintain();
+                                retriever.maintain_concurrent();
                             }
                             dispatch_batch(jobs, &engine, &store, topk, &work_tx);
                         }
@@ -268,7 +274,7 @@ fn serve_one(
     engine: &Arc<dyn Engine>,
     forest: &Arc<Forest>,
     ner: &Arc<GazetteerNer>,
-    retriever: &Arc<Mutex<Box<dyn Retriever + Send>>>,
+    retriever: &Arc<dyn ConcurrentRetriever>,
     store: &Arc<VectorStore>,
     cache: &EmbedCache,
     levels: usize,
@@ -276,16 +282,15 @@ fn serve_one(
     let query = &item.job.query;
     let entities = ner.recognize(query);
 
+    // No retriever-wide lock: each find takes at most a shard read lock,
+    // so workers run this stage in parallel.
     let rt = Timer::start();
     let mut context = Context::default();
-    {
-        let mut r = retriever.lock().unwrap();
-        let mut addrs = Vec::with_capacity(64);
-        for e in &entities {
-            addrs.clear();
-            r.find_into(e, &mut addrs);
-            context.merge(generate_context(forest, e, &addrs, levels));
-        }
+    let mut addrs = Vec::with_capacity(64);
+    for e in &entities {
+        addrs.clear();
+        retriever.find_concurrent(e, &mut addrs);
+        context.merge(generate_context(forest, e, &addrs, levels));
     }
     let retrieval_time = rt.elapsed();
 

@@ -7,6 +7,10 @@
 //! iteration, and O(1) append at the head block. All blocks live in one
 //! shared arena (`Vec<Block>`), which removes per-list allocations and
 //! the memory fragmentation the paper calls out.
+//!
+//! Deleted lists are returned to an intrusive **free list** (threaded
+//! through the `next` field of dead blocks), so insert/delete churn
+//! reuses slots instead of growing the arena without bound.
 
 use crate::forest::EntityAddress;
 
@@ -35,15 +39,39 @@ impl Block {
 }
 
 /// Arena of blocks shared by every list in one Cuckoo Filter.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct BlockArena {
     blocks: Vec<Block>,
+    /// Head of the intrusive free list (`NIL` when empty).
+    free_head: u32,
+    /// Blocks currently on the free list.
+    free_len: usize,
+}
+
+impl Default for BlockArena {
+    fn default() -> Self {
+        BlockArena { blocks: Vec::new(), free_head: NIL, free_len: 0 }
+    }
 }
 
 impl BlockArena {
     /// New empty arena.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Place a block, reusing a freed slot when one is available.
+    fn alloc(&mut self, b: Block) -> u32 {
+        if self.free_head != NIL {
+            let idx = self.free_head;
+            self.free_head = self.blocks[idx as usize].next;
+            self.free_len -= 1;
+            self.blocks[idx as usize] = b;
+            idx
+        } else {
+            self.blocks.push(b);
+            (self.blocks.len() - 1) as u32
+        }
     }
 
     /// Build a list from a slice of addresses; returns the head index
@@ -54,8 +82,7 @@ impl BlockArena {
             let mut b = Block::empty(head);
             b.addrs[..chunk.len()].copy_from_slice(chunk);
             b.len = chunk.len() as u8;
-            head = self.blocks.len() as u32;
-            self.blocks.push(b);
+            head = self.alloc(b);
         }
         head
     }
@@ -74,8 +101,25 @@ impl BlockArena {
         let mut b = Block::empty(head);
         b.addrs[0] = addr;
         b.len = 1;
-        self.blocks.push(b);
-        (self.blocks.len() - 1) as u32
+        self.alloc(b)
+    }
+
+    /// Return a whole list's blocks to the free list (delete path).
+    /// `NIL` is a no-op. Returns how many blocks were reclaimed. The
+    /// caller must not use `head` afterwards.
+    pub fn free_chain(&mut self, head: u32) -> usize {
+        let mut n = 0;
+        let mut cur = head;
+        while cur != NIL {
+            let next = self.blocks[cur as usize].next;
+            self.blocks[cur as usize].len = 0;
+            self.blocks[cur as usize].next = self.free_head;
+            self.free_head = cur;
+            self.free_len += 1;
+            n += 1;
+            cur = next;
+        }
+        n
     }
 
     /// Iterate all addresses of a list.
@@ -95,9 +139,20 @@ impl BlockArena {
         n
     }
 
-    /// Total blocks allocated (for memory accounting).
+    /// Total blocks ever allocated — the arena's high-water mark. Stays
+    /// bounded under insert/delete churn because freed blocks are reused.
     pub fn blocks_allocated(&self) -> usize {
         self.blocks.len()
+    }
+
+    /// Blocks currently on the free list.
+    pub fn blocks_free(&self) -> usize {
+        self.free_len
+    }
+
+    /// Blocks currently backing live lists.
+    pub fn blocks_in_use(&self) -> usize {
+        self.blocks.len() - self.free_len
     }
 
     /// Approximate heap bytes used by the arena.
@@ -191,6 +246,53 @@ mod tests {
         let blocks = arena.blocks_allocated();
         // ceil(1000 / 14) = 72
         assert_eq!(blocks, 1000usize.div_ceil(BLOCK_CAP));
+    }
+
+    #[test]
+    fn free_chain_reclaims_and_alloc_reuses() {
+        let mut arena = BlockArena::new();
+        let addrs: Vec<EntityAddress> = (0..3 * BLOCK_CAP as u32).map(addr).collect();
+        let head = arena.build(&addrs);
+        assert_eq!(arena.blocks_allocated(), 3);
+        assert_eq!(arena.blocks_in_use(), 3);
+        assert_eq!(arena.free_chain(head), 3);
+        assert_eq!(arena.blocks_free(), 3);
+        assert_eq!(arena.blocks_in_use(), 0);
+        // rebuilding reuses the freed slots: no arena growth
+        let head2 = arena.build(&addrs);
+        assert_eq!(arena.blocks_allocated(), 3, "slots reused, not grown");
+        assert_eq!(arena.blocks_free(), 0);
+        let got: Vec<EntityAddress> = arena.iter(head2).collect();
+        assert_eq!(got, addrs);
+    }
+
+    #[test]
+    fn free_nil_is_noop() {
+        let mut arena = BlockArena::new();
+        assert_eq!(arena.free_chain(NIL), 0);
+        assert_eq!(arena.blocks_free(), 0);
+    }
+
+    #[test]
+    fn churn_bounded_by_live_set() {
+        let mut arena = BlockArena::new();
+        for round in 0..1000u32 {
+            let addrs: Vec<EntityAddress> =
+                (0..2 * BLOCK_CAP as u32).map(|i| addr(round + i)).collect();
+            let head = arena.build(&addrs);
+            arena.free_chain(head);
+        }
+        assert_eq!(arena.blocks_allocated(), 2, "churn must not grow the arena");
+    }
+
+    #[test]
+    fn freeing_one_list_leaves_others_intact() {
+        let mut arena = BlockArena::new();
+        let h1 = arena.build(&(0..20).map(addr).collect::<Vec<_>>());
+        let h2 = arena.build(&(100..120).map(addr).collect::<Vec<_>>());
+        arena.free_chain(h1);
+        let got: Vec<EntityAddress> = arena.iter(h2).collect();
+        assert_eq!(got, (100..120).map(addr).collect::<Vec<_>>());
     }
 
     #[test]

@@ -17,6 +17,15 @@
 //! re-hashed and migrated" description (the C++ original equally retains
 //! entities to re-hash; the key array is the cold-path cost of dynamic
 //! growth).
+//!
+//! **Concurrency:** temperatures and per-bucket dirty flags are atomics,
+//! so [`CuckooFilter::lookup_shared`] works through `&self` — many
+//! readers can probe in parallel under a shard *read* lock (see
+//! `filter::sharded`), with temperature bumps as relaxed increments.
+//! Every structural mutation (insert / delete / maintain / expansion)
+//! still takes `&mut self` and therefore an exclusive lock.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering::Relaxed};
 
 use crate::filter::blocklist::{BlockArena, NIL};
 use crate::filter::fingerprint::{alt_index, fingerprint, primary_index};
@@ -67,6 +76,17 @@ pub struct CuckooStats {
     pub slots_probed: u64,
 }
 
+impl CuckooStats {
+    /// Sum counters (sharded-filter aggregation).
+    pub fn merge(&mut self, other: CuckooStats) {
+        self.inserts += other.inserts;
+        self.kicks += other.kicks;
+        self.expansions += other.expansions;
+        self.lookups += other.lookups;
+        self.slots_probed += other.slots_probed;
+    }
+}
+
 /// A successful lookup: the entity's block-list head.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LookupHit {
@@ -75,30 +95,73 @@ pub struct LookupHit {
     pub head: u32,
 }
 
+/// An entry carried between table generations: (key, temperature, head).
+type Entry = (u64, u32, u32);
+
+/// The two candidate buckets of a key, deduplicated: when `i1 == i2`
+/// (which partial-key hashing does produce), the bucket is yielded once
+/// so no probe site scans — or counts — the same slots twice.
+#[inline]
+fn bucket_pair(i1: usize, i2: usize) -> impl Iterator<Item = usize> {
+    std::iter::once(i1).chain((i2 != i1).then_some(i2))
+}
+
 /// The improved Cuckoo Filter.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct CuckooFilter {
     cfg: CuckooConfig,
     nbuckets: usize,
     /// hot path: fingerprints, 0 = empty slot; len = nbuckets * slots
     fps: Vec<u16>,
-    /// temperature per slot
-    temps: Vec<u32>,
+    /// temperature per slot (atomic: bumped by shared-borrow lookups)
+    temps: Vec<AtomicU32>,
     /// block-list head per slot (NIL when none)
     heads: Vec<u32>,
     /// cold path: original keys, used for expansion & exact-match checks
     keys: Vec<u64>,
     /// buckets whose temperature order may be stale
-    dirty: Vec<bool>,
+    dirty: Vec<AtomicBool>,
     arena: BlockArena,
     len: usize,
     rng: Rng,
+    /// write-path counters (inserts / kicks / expansions)
     stats: CuckooStats,
+    /// read-path counters, atomic so `lookup_shared` can record them
+    lookups: AtomicU64,
+    slots_probed: AtomicU64,
 }
 
 impl Default for CuckooFilter {
     fn default() -> Self {
         Self::new(CuckooConfig::default())
+    }
+}
+
+impl Clone for CuckooFilter {
+    fn clone(&self) -> Self {
+        CuckooFilter {
+            cfg: self.cfg,
+            nbuckets: self.nbuckets,
+            fps: self.fps.clone(),
+            temps: self
+                .temps
+                .iter()
+                .map(|t| AtomicU32::new(t.load(Relaxed)))
+                .collect(),
+            heads: self.heads.clone(),
+            keys: self.keys.clone(),
+            dirty: self
+                .dirty
+                .iter()
+                .map(|d| AtomicBool::new(d.load(Relaxed)))
+                .collect(),
+            arena: self.arena.clone(),
+            len: self.len,
+            rng: self.rng.clone(),
+            stats: self.stats,
+            lookups: AtomicU64::new(self.lookups.load(Relaxed)),
+            slots_probed: AtomicU64::new(self.slots_probed.load(Relaxed)),
+        }
     }
 }
 
@@ -110,14 +173,20 @@ impl CuckooFilter {
         CuckooFilter {
             nbuckets,
             fps: vec![0; slots],
-            temps: vec![0; slots],
+            temps: std::iter::repeat_with(|| AtomicU32::new(0))
+                .take(slots)
+                .collect(),
             heads: vec![NIL; slots],
             keys: vec![0; slots],
-            dirty: vec![false; nbuckets],
+            dirty: std::iter::repeat_with(|| AtomicBool::new(false))
+                .take(nbuckets)
+                .collect(),
             arena: BlockArena::new(),
             len: 0,
             rng: Rng::new(cfg.seed),
             stats: CuckooStats::default(),
+            lookups: AtomicU64::new(0),
+            slots_probed: AtomicU64::new(0),
             cfg,
         }
     }
@@ -137,14 +206,22 @@ impl CuckooFilter {
         self.nbuckets
     }
 
+    /// Slots per bucket (configuration).
+    pub fn slots_per_bucket(&self) -> usize {
+        self.cfg.slots
+    }
+
     /// Load factor: occupied slots / total slots.
     pub fn load_factor(&self) -> f64 {
         self.len as f64 / (self.nbuckets * self.cfg.slots) as f64
     }
 
-    /// Counters.
+    /// Counters (snapshot; read-path counters are atomics).
     pub fn stats(&self) -> CuckooStats {
-        self.stats
+        let mut s = self.stats;
+        s.lookups = self.lookups.load(Relaxed);
+        s.slots_probed = self.slots_probed.load(Relaxed);
+        s
     }
 
     /// The block arena (for reading address lists from a [`LookupHit`]).
@@ -179,9 +256,10 @@ impl CuckooFilter {
     /// Insert an entity (by key) with all its forest addresses.
     ///
     /// Duplicate keys are rejected (`false`); use [`push_address`] to grow
-    /// an existing entry. Expands automatically: insertion only fails if
-    /// expansion itself cannot place the elements, which cannot happen
-    /// below the load threshold.
+    /// an existing entry. Expands automatically, so insertion of a fresh
+    /// key always succeeds.
+    ///
+    /// [`push_address`]: CuckooFilter::push_address
     pub fn insert(&mut self, key: u64, addrs: &[EntityAddress]) -> bool {
         // Exact duplicate check on the cold keys — a fingerprint-only
         // check would misreject fresh keys on fingerprint collisions.
@@ -192,66 +270,32 @@ impl CuckooFilter {
             self.expand();
         }
         let head = self.arena.build(addrs);
-        loop {
-            if self.try_place(key, 0, head) {
-                self.len += 1;
-                self.stats.inserts += 1;
-                return true;
-            }
-            // Table too dense for this key's bucket pair: double and retry.
-            self.expand();
-        }
+        self.place(key, 0, head);
+        self.len += 1;
+        self.stats.inserts += 1;
+        true
     }
 
     fn load_factor_after_insert(&self) -> f64 {
         (self.len + 1) as f64 / (self.nbuckets * self.cfg.slots) as f64
     }
 
-    /// Algorithm 1: place (key, temp, head), evicting if necessary.
-    fn try_place(&mut self, key: u64, temp: u32, head: u32) -> bool {
-        let fp = fingerprint(key, self.cfg.fingerprint_bits);
-        let i1 = primary_index(key, self.nbuckets);
-        let i2 = alt_index(i1, fp, self.nbuckets);
-
-        for b in [i1, i2] {
-            if let Some(s) = self.empty_slot(b) {
-                self.write_slot(s, fp, key, temp, head);
-                return true;
+    /// Place an entry, expanding until it fits. A failed kick chain
+    /// leaves the new entry placed and one displaced *victim* homeless
+    /// (`try_place_no_expand` hands it back); the victim — never the
+    /// table — is what gets re-placed after the doubling, so no entry is
+    /// ever dropped and no key is ever placed twice.
+    fn place(&mut self, key: u64, temp: u32, head: u32) {
+        let mut cur = (key, temp, head);
+        loop {
+            match self.try_place_no_expand(cur.0, cur.1, cur.2) {
+                Ok(()) => return,
+                Err(homeless) => {
+                    cur = homeless;
+                    self.expand();
+                }
             }
         }
-
-        // Eviction loop.
-        let mut i = if self.rng.chance(0.5) { i1 } else { i2 };
-        let mut cur = (fp, key, temp, head);
-        for _ in 0..self.cfg.max_kicks {
-            // evict a random resident entry
-            let s = i * self.cfg.slots + self.rng.range(0, self.cfg.slots);
-            let victim = (self.fps[s], self.keys[s], self.temps[s], self.heads[s]);
-            self.write_slot(s, cur.0, cur.1, cur.2, cur.3);
-            cur = victim;
-            self.stats.kicks += 1;
-
-            i = alt_index(i, cur.0, self.nbuckets);
-            if let Some(s2) = self.empty_slot(i) {
-                self.write_slot(s2, cur.0, cur.1, cur.2, cur.3);
-                return true;
-            }
-        }
-        // Undo is unnecessary: the displaced chain is all valid entries;
-        // only `cur` is homeless. Re-place it after expansion.
-        let (_, k, t, h) = cur;
-        self.pending_reinsert(k, t, h);
-        false
-    }
-
-    /// Stash for the single homeless entry after a failed kick chain: we
-    /// expand and re-place it (never lost).
-    fn pending_reinsert(&mut self, key: u64, temp: u32, head: u32) {
-        self.expand();
-        assert!(
-            self.try_place(key, temp, head),
-            "placement must succeed right after expansion"
-        );
     }
 
     fn empty_slot(&self, bucket: usize) -> Option<usize> {
@@ -261,9 +305,9 @@ impl CuckooFilter {
     fn write_slot(&mut self, s: usize, fp: u16, key: u64, temp: u32, head: u32) {
         self.fps[s] = fp;
         self.keys[s] = key;
-        self.temps[s] = temp;
+        *self.temps[s].get_mut() = temp;
         self.heads[s] = head;
-        self.dirty[s / self.cfg.slots] = true;
+        *self.dirty[s / self.cfg.slots].get_mut() = true;
     }
 
     // ---------------------------------------------------------------
@@ -274,24 +318,27 @@ impl CuckooFilter {
     /// query, subject to fingerprint false positives.
     pub fn contains(&self, key: u64) -> bool {
         let (fp, i1, i2) = self.probe(key);
-        self.find_fp(i1, fp).is_some() || self.find_fp(i2, fp).is_some()
+        bucket_pair(i1, i2).any(|b| self.find_fp(b, fp).is_some())
     }
 
     /// Exact membership: fingerprint match confirmed against the stored
     /// key (cold path; used by insert's duplicate check and tests).
     pub fn contains_exact(&self, key: u64) -> bool {
+        self.find_exact(key).is_some()
+    }
+
+    /// Slot index of the exact key, if present.
+    #[inline]
+    fn find_exact(&self, key: u64) -> Option<usize> {
         let (fp, i1, i2) = self.probe(key);
-        for b in [i1, i2] {
+        for b in bucket_pair(i1, i2) {
             for s in self.slot_range(b) {
                 if self.fps[s] == fp && self.keys[s] == key {
-                    return true;
+                    return Some(s);
                 }
             }
-            if i1 == i2 {
-                break;
-            }
         }
-        false
+        None
     }
 
     /// Lookup: on a fingerprint hit, bump the entity's temperature and
@@ -299,16 +346,24 @@ impl CuckooFilter {
     /// buckets; within a bucket the scan is linear, which is what the
     /// temperature ordering accelerates.
     pub fn lookup(&mut self, key: u64) -> Option<LookupHit> {
-        self.stats.lookups += 1;
+        self.lookup_shared(key)
+    }
+
+    /// [`lookup`](CuckooFilter::lookup) through a shared borrow — the
+    /// concurrent read path. The structure is not mutated: the
+    /// temperature bump is a relaxed atomic increment and the bucket's
+    /// dirty flag a relaxed store, so any number of threads may call this
+    /// concurrently (each under a shard read lock when sharded).
+    pub fn lookup_shared(&self, key: u64) -> Option<LookupHit> {
+        self.lookups.fetch_add(1, Relaxed);
         let (fp, i1, i2) = self.probe(key);
-        for b in [i1, i2] {
+        for b in bucket_pair(i1, i2) {
             if let Some(s) = self.find_fp_counting(b, fp) {
-                self.temps[s] = self.temps[s].saturating_add(1);
-                self.dirty[b] = true;
+                // saturating atomic bump: never wraps hot counters to 0
+                let _ = self.temps[s]
+                    .fetch_update(Relaxed, Relaxed, |t| t.checked_add(1));
+                self.dirty[b].store(true, Relaxed);
                 return Some(LookupHit { head: self.heads[s] });
-            }
-            if b == i2 && i1 == i2 {
-                break;
             }
         }
         None
@@ -395,15 +450,15 @@ impl CuckooFilter {
     /// left-packed (inserts fill the first empty slot, deletes compact),
     /// so the scan terminates at the first empty slot.
     #[inline]
-    fn find_fp_counting(&mut self, bucket: usize, fp: u16) -> Option<usize> {
+    fn find_fp_counting(&self, bucket: usize, fp: u16) -> Option<usize> {
         if self.cfg.slots == 4 {
             let (pos, probes) = Self::scan4(self.bucket_word(bucket), fp);
-            self.stats.slots_probed += probes;
+            self.slots_probed.fetch_add(probes, Relaxed);
             return pos.map(|p| bucket * 4 + p);
         }
         let base = bucket * self.cfg.slots;
         for off in 0..self.cfg.slots {
-            self.stats.slots_probed += 1;
+            self.slots_probed.fetch_add(1, Relaxed);
             let cur = self.fps[base + off];
             if cur == fp {
                 return Some(base + off);
@@ -420,29 +475,24 @@ impl CuckooFilter {
     // ---------------------------------------------------------------
 
     /// Remove an entity by key. Exact (keys compared on the cold path to
-    /// avoid deleting a fingerprint-colliding neighbour). Returns whether
-    /// an entry was removed.
+    /// avoid deleting a fingerprint-colliding neighbour). The entity's
+    /// block list is returned to the arena free list, so insert/delete
+    /// churn does not grow the arena. Returns whether an entry was
+    /// removed.
     pub fn delete(&mut self, key: u64) -> bool {
-        let (fp, i1, i2) = self.probe(key);
-        for b in [i1, i2] {
-            let range = self.slot_range(b);
-            for s in range {
-                if self.fps[s] == fp && self.keys[s] == key {
-                    self.fps[s] = 0;
-                    self.keys[s] = 0;
-                    self.temps[s] = 0;
-                    self.heads[s] = NIL;
-                    self.compact_bucket(b, s);
-                    self.dirty[b] = true;
-                    self.len -= 1;
-                    return true;
-                }
-            }
-            if i1 == i2 {
-                break;
-            }
-        }
-        false
+        let Some(s) = self.find_exact(key) else {
+            return false;
+        };
+        let b = s / self.cfg.slots;
+        self.arena.free_chain(self.heads[s]);
+        self.fps[s] = 0;
+        self.keys[s] = 0;
+        *self.temps[s].get_mut() = 0;
+        self.heads[s] = NIL;
+        self.compact_bucket(b, s);
+        *self.dirty[b].get_mut() = true;
+        self.len -= 1;
+        true
     }
 
     /// Restore the left-packed invariant after clearing slot `hole`:
@@ -463,20 +513,11 @@ impl CuckooFilter {
     /// Append a new forest address to an existing entity (dynamic update
     /// path: a new tree mentions a known entity). Exact-match on key.
     pub fn push_address(&mut self, key: u64, addr: EntityAddress) -> bool {
-        let (fp, i1, i2) = self.probe(key);
-        for b in [i1, i2] {
-            let range = self.slot_range(b);
-            for s in range {
-                if self.fps[s] == fp && self.keys[s] == key {
-                    self.heads[s] = self.arena.push(self.heads[s], addr);
-                    return true;
-                }
-            }
-            if i1 == i2 {
-                break;
-            }
-        }
-        false
+        let Some(s) = self.find_exact(key) else {
+            return false;
+        };
+        self.heads[s] = self.arena.push(self.heads[s], addr);
+        true
     }
 
     // ---------------------------------------------------------------
@@ -492,9 +533,9 @@ impl CuckooFilter {
             return;
         }
         for b in 0..self.nbuckets {
-            if self.dirty[b] {
+            if *self.dirty[b].get_mut() {
                 self.sort_bucket(b);
-                self.dirty[b] = false;
+                *self.dirty[b].get_mut() = false;
             }
         }
     }
@@ -520,7 +561,9 @@ impl CuckooFilter {
         let occ_b = self.fps[b] != 0;
         match (occ_a, occ_b) {
             (false, true) => true,
-            (true, true) => self.temps[a] < self.temps[b],
+            (true, true) => {
+                self.temps[a].load(Relaxed) < self.temps[b].load(Relaxed)
+            }
             _ => false,
         }
     }
@@ -533,94 +576,115 @@ impl CuckooFilter {
         self.heads.swap(a, b);
     }
 
+    /// Every live entry currently in the table.
+    fn collect_live(&self) -> Vec<Entry> {
+        let mut live = Vec::with_capacity(self.len);
+        for s in 0..self.fps.len() {
+            if self.fps[s] != 0 {
+                live.push((
+                    self.keys[s],
+                    self.temps[s].load(Relaxed),
+                    self.heads[s],
+                ));
+            }
+        }
+        live
+    }
+
+    /// Replace the table arrays with empty ones of `nbuckets` buckets.
+    fn reset_table(&mut self, nbuckets: usize) {
+        let slots = nbuckets * self.cfg.slots;
+        self.fps = vec![0; slots];
+        self.keys = vec![0; slots];
+        self.temps = std::iter::repeat_with(|| AtomicU32::new(0))
+            .take(slots)
+            .collect();
+        self.heads = vec![NIL; slots];
+        self.dirty = std::iter::repeat_with(|| AtomicBool::new(false))
+            .take(nbuckets)
+            .collect();
+        self.nbuckets = nbuckets;
+    }
+
     /// Double the bucket count and migrate every live entry by re-hashing
     /// its stored key (paper §1: "double expansion ... re-hashed and
     /// migrated"). Temperatures and block lists move with their entries;
     /// the arena is shared and untouched.
+    ///
+    /// The live set is snapshotted **once**, up front, and each doubling
+    /// attempt replays it into a fresh table. A migration collision storm
+    /// (vanishingly rare) therefore discards only the partial target
+    /// table and retries at double the size — it can never drop the
+    /// unmigrated suffix or an in-flight kick victim, which the previous
+    /// in-place retry loop did.
     fn expand(&mut self) {
+        let live = self.collect_live();
+        let mut new_n = self.nbuckets * 2;
         loop {
-            let new_n = self.nbuckets * 2;
-            let slots = new_n * self.cfg.slots;
-            let old = (
-                std::mem::replace(&mut self.fps, vec![0; slots]),
-                std::mem::replace(&mut self.keys, vec![0; slots]),
-                std::mem::replace(&mut self.temps, vec![0; slots]),
-                std::mem::replace(&mut self.heads, vec![NIL; slots]),
-            );
-            self.dirty = vec![false; new_n];
-            self.nbuckets = new_n;
+            self.reset_table(new_n);
             self.stats.expansions += 1;
-
-            let mut ok = true;
-            for s in 0..old.0.len() {
-                if old.0[s] != 0
-                    && !self.try_place_no_expand(old.1[s], old.2[s], old.3[s])
-                {
-                    ok = false;
-                    break;
-                }
-            }
+            let ok = live
+                .iter()
+                .all(|&(k, t, h)| self.try_place_no_expand(k, t, h).is_ok());
             if ok {
                 return;
             }
-            // Migration collision storm (vanishingly rare): double again.
+            new_n *= 2;
         }
     }
 
-    /// `try_place` without the recursive expansion fallback (used during
-    /// migration, where failure triggers another doubling of the target).
-    fn try_place_no_expand(&mut self, key: u64, temp: u32, head: u32) -> bool {
+    /// Place without expanding. On a failed kick chain the input entry is
+    /// already in the table (the first write of the chain) and the final
+    /// displaced victim is handed back as `Err` for the caller to re-home
+    /// — nothing is silently dropped.
+    fn try_place_no_expand(
+        &mut self,
+        key: u64,
+        temp: u32,
+        head: u32,
+    ) -> Result<(), Entry> {
         let fp = fingerprint(key, self.cfg.fingerprint_bits);
         let i1 = primary_index(key, self.nbuckets);
         let i2 = alt_index(i1, fp, self.nbuckets);
-        for b in [i1, i2] {
+        for b in bucket_pair(i1, i2) {
             if let Some(s) = self.empty_slot(b) {
                 self.write_slot(s, fp, key, temp, head);
-                return true;
+                return Ok(());
             }
         }
         let mut i = if self.rng.chance(0.5) { i1 } else { i2 };
         let mut cur = (fp, key, temp, head);
         for _ in 0..self.cfg.max_kicks {
+            // evict a random resident entry
             let s = i * self.cfg.slots + self.rng.range(0, self.cfg.slots);
-            let victim = (self.fps[s], self.keys[s], self.temps[s], self.heads[s]);
+            let victim = (
+                self.fps[s],
+                self.keys[s],
+                self.temps[s].load(Relaxed),
+                self.heads[s],
+            );
             self.write_slot(s, cur.0, cur.1, cur.2, cur.3);
             cur = victim;
             self.stats.kicks += 1;
+
             i = alt_index(i, cur.0, self.nbuckets);
             if let Some(s2) = self.empty_slot(i) {
                 self.write_slot(s2, cur.0, cur.1, cur.2, cur.3);
-                return true;
+                return Ok(());
             }
         }
-        false
+        Err((cur.1, cur.2, cur.3))
     }
 
     /// Temperature of a key (exact match), if present. Test/bench helper.
     pub fn temperature(&self, key: u64) -> Option<u32> {
-        let (fp, i1, i2) = self.probe(key);
-        for b in [i1, i2] {
-            for s in self.slot_range(b) {
-                if self.fps[s] == fp && self.keys[s] == key {
-                    return Some(self.temps[s]);
-                }
-            }
-        }
-        None
+        self.find_exact(key).map(|s| self.temps[s].load(Relaxed))
     }
 
     /// Position (0-based) of the key's slot within its bucket — lower is
     /// cheaper to find. Exposes the effect of temperature sorting.
     pub fn bucket_position(&self, key: u64) -> Option<usize> {
-        let (fp, i1, i2) = self.probe(key);
-        for b in [i1, i2] {
-            for (off, s) in self.slot_range(b).enumerate() {
-                if self.fps[s] == fp && self.keys[s] == key {
-                    return Some(off);
-                }
-            }
-        }
-        None
+        self.find_exact(key).map(|s| s % self.cfg.slots)
     }
 }
 
@@ -675,6 +739,44 @@ mod tests {
     }
 
     #[test]
+    fn delete_reclaims_arena_blocks() {
+        let mut cf = CuckooFilter::default();
+        cf.insert(key(1), &addrs(40)); // 3 blocks at BLOCK_CAP = 14
+        let high_water = cf.arena().blocks_allocated();
+        assert!(cf.delete(key(1)));
+        assert_eq!(cf.arena().blocks_in_use(), 0, "blocks reclaimed");
+        cf.insert(key(2), &addrs(40));
+        assert_eq!(
+            cf.arena().blocks_allocated(),
+            high_water,
+            "reinsert reuses freed blocks"
+        );
+    }
+
+    #[test]
+    fn insert_delete_churn_keeps_arena_bounded() {
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 64,
+            ..CuckooConfig::default()
+        });
+        for cycle in 0..200u64 {
+            for i in 0..50 {
+                assert!(cf.insert(key(cycle * 50 + i), &addrs(3)));
+            }
+            for i in 0..50 {
+                assert!(cf.delete(key(cycle * 50 + i)));
+            }
+        }
+        assert_eq!(cf.len(), 0);
+        assert_eq!(cf.arena().blocks_in_use(), 0);
+        assert!(
+            cf.arena().blocks_allocated() <= 64,
+            "arena grew without bound: {}",
+            cf.arena().blocks_allocated()
+        );
+    }
+
+    #[test]
     fn temperature_bumps_on_lookup() {
         let mut cf = CuckooFilter::default();
         cf.insert(key(1), &addrs(1));
@@ -682,6 +784,17 @@ mod tests {
         cf.lookup(key(1));
         cf.lookup(key(1));
         assert_eq!(cf.temperature(key(1)), Some(2));
+    }
+
+    #[test]
+    fn lookup_shared_matches_lookup() {
+        let mut cf = CuckooFilter::default();
+        cf.insert(key(1), &addrs(4));
+        let via_shared = cf.lookup_shared(key(1)).expect("hit");
+        assert_eq!(cf.addresses(via_shared), addrs(4));
+        assert_eq!(cf.temperature(key(1)), Some(1), "shared lookup bumps temp");
+        assert!(cf.lookup_shared(key(9)).is_none());
+        assert_eq!(cf.stats().lookups, 2);
     }
 
     #[test]
@@ -718,6 +831,33 @@ mod tests {
         let hit = cf.lookup(key(0)).unwrap();
         assert_eq!(cf.addresses(hit).len(), 7);
         assert_eq!(cf.temperature(key(0)), Some(6));
+    }
+
+    #[test]
+    fn interleaved_churn_survives_expansions() {
+        // Regression for the expand() migration-retry entry loss: grow
+        // through several expansions while deleting, then verify every
+        // surviving key. Tiny table + deletes maximize retry pressure.
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 2,
+            ..CuckooConfig::default()
+        });
+        let mut live = Vec::new();
+        for i in 0..4000u64 {
+            assert!(cf.insert(key(i), &addrs(1)), "insert {i}");
+            live.push(i);
+            if i % 3 == 0 {
+                let victim = live.remove((i as usize / 3) % live.len());
+                assert!(cf.delete(key(victim)), "delete {victim}");
+            }
+        }
+        assert!(cf.stats().expansions >= 3, "not enough expansions");
+        for &i in &live {
+            let hit = cf.lookup(key(i));
+            assert!(hit.is_some(), "entry {i} lost in migration");
+            assert_eq!(cf.addresses(hit.unwrap()), addrs(1));
+        }
+        assert_eq!(cf.len(), live.len());
     }
 
     #[test]
@@ -829,6 +969,16 @@ mod tests {
             cf.insert(key(i), &addrs(2));
         }
         assert!(cf.hot_bytes() * 4 < cf.memory_bytes());
+    }
+
+    #[test]
+    fn clone_is_independent() {
+        let mut cf = CuckooFilter::default();
+        cf.insert(key(1), &addrs(2));
+        let mut copy = cf.clone();
+        copy.delete(key(1));
+        assert!(cf.contains_exact(key(1)), "original unaffected by clone ops");
+        assert!(!copy.contains_exact(key(1)));
     }
 
     #[test]

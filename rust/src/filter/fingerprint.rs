@@ -40,6 +40,16 @@ pub fn primary_index(key: u64, nbuckets: usize) -> usize {
     (key as usize) & (nbuckets - 1)
 }
 
+/// Shard index for a key in a table partitioned `nshards` ways (power of
+/// two). Uses the *high* bits of the secondary mix so it is independent
+/// of both the in-shard bucket index (low key bits) and the fingerprint
+/// (low mix bits) — a shard sees a uniform slice of the key space.
+#[inline]
+pub fn shard_index(key: u64, nshards: usize) -> usize {
+    debug_assert!(nshards.is_power_of_two());
+    ((mix(key) >> 48) as usize) & (nshards - 1)
+}
+
 /// Alternate bucket index `i XOR h(f)` — involutive for fixed `nbuckets`.
 #[inline]
 pub fn alt_index(index: usize, fp: u16, nbuckets: usize) -> usize {
@@ -97,6 +107,20 @@ mod tests {
         let max = *counts.iter().max().unwrap();
         let min = *counts.iter().min().unwrap();
         assert!(min > 10 && max < 100, "skewed: min={min} max={max}");
+    }
+
+    #[test]
+    fn shard_index_spreads_and_bounds() {
+        let n = 8;
+        let mut counts = vec![0usize; n];
+        for k in 0..8_000u64 {
+            let s = shard_index(fnv1a(&k.to_le_bytes()), n);
+            assert!(s < n);
+            counts[s] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(min > 700 && max < 1300, "skewed: min={min} max={max}");
     }
 
     #[test]

@@ -6,10 +6,12 @@ pub mod blocklist;
 pub mod bloom;
 pub mod cuckoo;
 pub mod fingerprint;
+pub mod sharded;
 pub mod tree_bloom;
 
 pub use blocklist::{BlockArena, BLOCK_CAP, NIL};
 pub use bloom::BloomFilter;
 pub use cuckoo::{CuckooConfig, CuckooFilter, CuckooStats, LookupHit};
 pub use fingerprint::entity_key;
+pub use sharded::ShardedCuckooFilter;
 pub use tree_bloom::BloomForest;

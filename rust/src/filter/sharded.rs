@@ -1,0 +1,304 @@
+//! Sharded Cuckoo Filter: the key space partitioned across N independent
+//! [`CuckooFilter`] shards so retrieval scales with reader threads.
+//!
+//! # Design
+//!
+//! Each shard owns a full filter — buckets, temperatures, block arena —
+//! behind its own [`std::sync::RwLock`]. A key's shard is chosen by the
+//! *high* bits of the secondary hash ([`shard_index`]), independent of
+//! the bits that pick the in-shard bucket and the fingerprint, so load
+//! spreads uniformly and shards never need to coordinate: an operation
+//! touches exactly one shard.
+//!
+//! # Locking invariants
+//!
+//! * **Lookups take only the shard read lock.** The underlying filter's
+//!   [`CuckooFilter::lookup_shared`] works through `&self`: temperature
+//!   bumps are relaxed `AtomicU32` increments and dirty-bucket flags
+//!   relaxed `AtomicBool` stores, so any number of readers proceed in
+//!   parallel (per shard and across shards).
+//! * **Structural mutations take the shard write lock**: insert, delete,
+//!   push_address, and `maintain` (per-shard bucket re-sort). A write
+//!   lock on one shard never blocks readers of another.
+//! * **Block-list reads happen under the same read-lock hold** as the
+//!   lookup that produced the head — addresses are copied out before the
+//!   guard drops, so a concurrent delete/expand on the shard can never
+//!   invalidate a head the caller still holds.
+//! * Lock poisoning (a writer panicking mid-mutation) propagates to all
+//!   later accessors via `unwrap`, which is the safe failure mode: the
+//!   shard's invariants can no longer be trusted.
+//!
+//! Aggregate accessors (`len`, `stats`, `memory_bytes`) lock shards one
+//! at a time; they are monitoring APIs and make no cross-shard atomicity
+//! promise.
+
+use std::sync::RwLock;
+
+use crate::filter::cuckoo::{CuckooConfig, CuckooFilter, CuckooStats};
+use crate::filter::fingerprint::shard_index;
+use crate::forest::EntityAddress;
+
+/// A Cuckoo Filter partitioned across independent, individually locked
+/// shards. All operations take `&self`; see the module docs for which
+/// take read vs write locks.
+#[derive(Debug)]
+pub struct ShardedCuckooFilter {
+    shards: Vec<RwLock<CuckooFilter>>,
+}
+
+impl ShardedCuckooFilter {
+    /// Build with `nshards` shards (rounded up to a power of two). The
+    /// configured `initial_buckets` is the *total* across shards, so a
+    /// sharded and an unsharded filter of the same config start at the
+    /// same capacity.
+    pub fn new(cfg: CuckooConfig, nshards: usize) -> Self {
+        let n = nshards.max(1).next_power_of_two();
+        let shards = (0..n)
+            .map(|i| {
+                RwLock::new(CuckooFilter::new(CuckooConfig {
+                    initial_buckets: (cfg.initial_buckets / n).max(1),
+                    // decorrelate eviction choices across shards
+                    seed: cfg.seed ^ (0x9E37_79B9_7F4A_7C15u64
+                        .wrapping_mul(i as u64 + 1)),
+                    ..cfg
+                }))
+            })
+            .collect();
+        ShardedCuckooFilter { shards }
+    }
+
+    /// Number of shards (power of two).
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard(&self, key: u64) -> &RwLock<CuckooFilter> {
+        &self.shards[shard_index(key, self.shards.len())]
+    }
+
+    /// Insert an entity with its addresses (shard write lock). Duplicate
+    /// keys are rejected, matching [`CuckooFilter::insert`].
+    pub fn insert(&self, key: u64, addrs: &[EntityAddress]) -> bool {
+        self.shard(key).write().unwrap().insert(key, addrs)
+    }
+
+    /// Remove an entity (shard write lock); reclaims its block list.
+    pub fn delete(&self, key: u64) -> bool {
+        self.shard(key).write().unwrap().delete(key)
+    }
+
+    /// Append an address to an existing entity (shard write lock).
+    pub fn push_address(&self, key: u64, addr: EntityAddress) -> bool {
+        self.shard(key).write().unwrap().push_address(key, addr)
+    }
+
+    /// Fingerprint membership probe (shard read lock).
+    pub fn contains(&self, key: u64) -> bool {
+        self.shard(key).read().unwrap().contains(key)
+    }
+
+    /// Exact membership (shard read lock).
+    pub fn contains_exact(&self, key: u64) -> bool {
+        self.shard(key).read().unwrap().contains_exact(key)
+    }
+
+    /// Lookup: append all addresses of `key` to `out` and return whether
+    /// the entity was found. Takes only the shard **read** lock — the
+    /// concurrent serving hot path. Addresses are copied out under the
+    /// guard, so the returned data is consistent even if a writer
+    /// reshapes the shard immediately after.
+    pub fn lookup_into(&self, key: u64, out: &mut Vec<EntityAddress>) -> bool {
+        let shard = self.shard(key).read().unwrap();
+        match shard.lookup_shared(key) {
+            Some(hit) => {
+                out.extend(shard.addresses_iter(hit));
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Lookup returning a fresh `Vec` (`None` on miss). Read lock only.
+    pub fn lookup_collect(&self, key: u64) -> Option<Vec<EntityAddress>> {
+        let mut out = Vec::new();
+        self.lookup_into(key, &mut out).then_some(out)
+    }
+
+    /// Temperature of a key, if present (shard read lock; test/bench).
+    pub fn temperature(&self, key: u64) -> Option<u32> {
+        self.shard(key).read().unwrap().temperature(key)
+    }
+
+    /// Re-sort dirty buckets by temperature, one shard at a time (shard
+    /// write lock). Readers of other shards are never blocked, and each
+    /// shard is writer-locked only for its own sort.
+    pub fn maintain(&self) {
+        for shard in &self.shards {
+            shard.write().unwrap().maintain();
+        }
+    }
+
+    /// Entries stored across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// True if no shard holds entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Aggregate load factor: total entries / total slots.
+    pub fn load_factor(&self) -> f64 {
+        let (len, slots) = self.shards.iter().fold((0usize, 0usize), |acc, s| {
+            let g = s.read().unwrap();
+            (acc.0 + g.len(), acc.1 + g.buckets() * g.slots_per_bucket())
+        });
+        if slots == 0 {
+            0.0
+        } else {
+            len as f64 / slots as f64
+        }
+    }
+
+    /// Counters summed across shards.
+    pub fn stats(&self) -> CuckooStats {
+        let mut total = CuckooStats::default();
+        for shard in &self.shards {
+            total.merge(shard.read().unwrap().stats());
+        }
+        total
+    }
+
+    /// Approximate heap bytes across all shards.
+    pub fn memory_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().memory_bytes())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::fingerprint::entity_key;
+
+    fn key(i: u64) -> u64 {
+        entity_key(&format!("sharded-{i}"))
+    }
+
+    fn addrs(n: u32) -> Vec<EntityAddress> {
+        (0..n).map(|i| EntityAddress::new(i, i)).collect()
+    }
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two() {
+        let cf = ShardedCuckooFilter::new(CuckooConfig::default(), 3);
+        assert_eq!(cf.num_shards(), 4);
+        let cf = ShardedCuckooFilter::new(CuckooConfig::default(), 0);
+        assert_eq!(cf.num_shards(), 1);
+    }
+
+    #[test]
+    fn insert_lookup_delete_roundtrip() {
+        let cf = ShardedCuckooFilter::new(CuckooConfig::default(), 8);
+        for i in 0..2000 {
+            assert!(cf.insert(key(i), &addrs(2)), "insert {i}");
+        }
+        assert_eq!(cf.len(), 2000);
+        for i in 0..2000 {
+            assert_eq!(cf.lookup_collect(key(i)).as_deref(), Some(&addrs(2)[..]));
+        }
+        for i in 0..2000 {
+            assert!(cf.delete(key(i)), "delete {i}");
+        }
+        assert!(cf.is_empty());
+    }
+
+    #[test]
+    fn duplicate_and_missing_semantics_match_unsharded() {
+        let cf = ShardedCuckooFilter::new(CuckooConfig::default(), 4);
+        assert!(cf.insert(key(1), &addrs(1)));
+        assert!(!cf.insert(key(1), &addrs(3)), "duplicate rejected");
+        assert!(!cf.delete(key(2)));
+        assert!(!cf.push_address(key(2), EntityAddress::new(0, 0)));
+        assert!(cf.push_address(key(1), EntityAddress::new(7, 7)));
+        assert_eq!(cf.lookup_collect(key(1)).unwrap().len(), 2);
+        assert!(cf.lookup_collect(key(2)).is_none());
+    }
+
+    #[test]
+    fn agrees_with_unsharded_filter() {
+        let mut plain = CuckooFilter::new(CuckooConfig::default());
+        let sharded = ShardedCuckooFilter::new(CuckooConfig::default(), 8);
+        for i in 0..3000 {
+            let a = addrs((i % 5) as u32);
+            assert_eq!(plain.insert(key(i), &a), sharded.insert(key(i), &a));
+        }
+        // Neither design may produce a false negative; address lists may
+        // differ only at the paper's near-zero fingerprint-shadowing
+        // rate (§4.5.1), which is layout- and therefore design-dependent.
+        let mut mismatches = 0usize;
+        for i in 0..3000 {
+            let want = plain.lookup(key(i)).map(|h| plain.addresses(h));
+            let got = sharded.lookup_collect(key(i));
+            assert!(want.is_some(), "plain false negative for {i}");
+            assert!(got.is_some(), "sharded false negative for {i}");
+            if got != want {
+                mismatches += 1;
+            }
+        }
+        assert!(mismatches <= 10, "shadow rate too high: {mismatches}/3000");
+    }
+
+    #[test]
+    fn temperature_bumps_through_read_path() {
+        let cf = ShardedCuckooFilter::new(CuckooConfig::default(), 4);
+        cf.insert(key(1), &addrs(1));
+        let mut out = Vec::new();
+        for _ in 0..5 {
+            out.clear();
+            assert!(cf.lookup_into(key(1), &mut out));
+        }
+        assert_eq!(cf.temperature(key(1)), Some(5));
+        cf.maintain(); // must not deadlock or lose the entry
+        assert!(cf.contains_exact(key(1)));
+    }
+
+    #[test]
+    fn stats_aggregate_across_shards() {
+        let cf = ShardedCuckooFilter::new(CuckooConfig::default(), 4);
+        for i in 0..100 {
+            cf.insert(key(i), &addrs(1));
+        }
+        let mut out = Vec::new();
+        for i in 0..100 {
+            out.clear();
+            cf.lookup_into(key(i), &mut out);
+        }
+        let s = cf.stats();
+        assert_eq!(s.inserts, 100);
+        assert_eq!(s.lookups, 100);
+        assert!(s.slots_probed >= 100);
+        assert!(cf.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn expansion_inside_a_shard_preserves_entries() {
+        // total capacity 8 buckets over 4 shards -> 2 buckets/shard;
+        // thousands of inserts force many per-shard expansions.
+        let cf = ShardedCuckooFilter::new(
+            CuckooConfig { initial_buckets: 8, ..CuckooConfig::default() },
+            4,
+        );
+        for i in 0..5000 {
+            assert!(cf.insert(key(i), &addrs(1)), "insert {i}");
+        }
+        assert!(cf.stats().expansions >= 4, "each shard should have grown");
+        for i in 0..5000 {
+            assert!(cf.lookup_collect(key(i)).is_some(), "lost {i}");
+        }
+    }
+}

@@ -55,6 +55,14 @@ pub struct RagConfig {
     pub bloom_fp_rate: f64,
     /// Cuckoo filter tuning.
     pub cuckoo: CuckooConfig,
+    /// Cuckoo filter shards (rounded up to a power of two). On the
+    /// concurrent serving path (`make_concurrent_retriever`), `0` =
+    /// auto (one shard per available core). The single-threaded
+    /// `make_retriever` has no parallelism to win, so there `0` and `1`
+    /// both select the classic unsharded filter (whose probe statistics
+    /// the Figure-5 bench reads); only `shards > 1` shards it. Ignored
+    /// by the non-Cuckoo baselines.
+    pub shards: usize,
 }
 
 impl Default for RagConfig {
@@ -65,6 +73,22 @@ impl Default for RagConfig {
             topk_docs: 3,
             bloom_fp_rate: 0.01,
             cuckoo: CuckooConfig::default(),
+            shards: 0,
+        }
+    }
+}
+
+impl RagConfig {
+    /// Resolve the configured shard count: `0` maps to the number of
+    /// available cores (so coordinator read throughput scales with the
+    /// worker pool by default), anything else passes through.
+    pub fn resolved_shards(&self) -> usize {
+        if self.shards == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            self.shards
         }
     }
 }
@@ -85,5 +109,14 @@ mod tests {
     fn labels_match_paper() {
         assert_eq!(Algorithm::Cuckoo.label(), "CF T-RAG");
         assert_eq!(Algorithm::ALL.len(), 4);
+    }
+
+    #[test]
+    fn shards_resolve() {
+        let auto = RagConfig::default();
+        assert_eq!(auto.shards, 0, "default is auto");
+        assert!(auto.resolved_shards() >= 1);
+        let fixed = RagConfig { shards: 8, ..RagConfig::default() };
+        assert_eq!(fixed.resolved_shards(), 8);
     }
 }

@@ -4,4 +4,6 @@ pub mod config;
 pub mod pipeline;
 
 pub use config::{Algorithm, RagConfig};
-pub use pipeline::{make_retriever, RagPipeline, RagResponse};
+pub use pipeline::{
+    make_concurrent_retriever, make_retriever, RagPipeline, RagResponse,
+};

@@ -20,13 +20,17 @@ use crate::retrieval::bloom_rag::BloomTRag;
 use crate::retrieval::context::{generate_context, Context};
 use crate::retrieval::cuckoo_rag::CuckooTRag;
 use crate::retrieval::naive::NaiveTRag;
-use crate::retrieval::Retriever;
+use crate::retrieval::sharded_rag::ShardedCuckooTRag;
+use crate::retrieval::{ConcurrentRetriever, MutexRetriever, Retriever};
 use crate::runtime::engine::Engine;
 use crate::text::tokenizer::tokenize_padded;
 use crate::util::stats::Timer;
 use crate::vector::{search_topk, VectorStore};
 
-/// Build the configured retriever for a forest.
+/// Build the configured retriever for a forest (single-threaded use:
+/// benches and the in-process pipeline). `cfg.shards > 1` selects the
+/// shard-partitioned Cuckoo filter; 0/1 keep the classic unsharded one,
+/// whose probe statistics the Figure-5 reproduction reads.
 pub fn make_retriever(
     forest: Arc<Forest>,
     cfg: &RagConfig,
@@ -35,7 +39,29 @@ pub fn make_retriever(
         Algorithm::Naive => Box::new(NaiveTRag::new(forest)),
         Algorithm::Bloom => Box::new(BloomTRag::new(forest, cfg.bloom_fp_rate)),
         Algorithm::Bloom2 => Box::new(Bloom2TRag::new(forest, cfg.bloom_fp_rate)),
+        Algorithm::Cuckoo if cfg.shards > 1 => Box::new(
+            ShardedCuckooTRag::with_config(forest, cfg.cuckoo, cfg.shards),
+        ),
         Algorithm::Cuckoo => Box::new(CuckooTRag::with_config(forest, cfg.cuckoo)),
+    }
+}
+
+/// Build the configured retriever for the **concurrent** serving path
+/// (the coordinator's worker pool). The Cuckoo algorithm gets the
+/// shard-parallel retriever — `cfg.shards == 0` auto-sizes to the
+/// machine — so worker threads retrieve under per-shard read locks; the
+/// baselines fall back to a mutex adapter (correct, but serialized).
+pub fn make_concurrent_retriever(
+    forest: Arc<Forest>,
+    cfg: &RagConfig,
+) -> Arc<dyn ConcurrentRetriever> {
+    match cfg.algorithm {
+        Algorithm::Cuckoo => Arc::new(ShardedCuckooTRag::with_config(
+            forest,
+            cfg.cuckoo,
+            cfg.resolved_shards(),
+        )),
+        _ => Arc::new(MutexRetriever::new(make_retriever(forest, cfg))),
     }
 }
 
@@ -311,6 +337,69 @@ mod tests {
             b.sort();
             assert_eq!(a, b, "{name}");
         }
+    }
+
+    #[test]
+    fn sharded_pipeline_matches_unsharded_context() {
+        let ds = HospitalDataset::generate(HospitalConfig {
+            trees: 8,
+            ..HospitalConfig::default()
+        });
+        let forest = Arc::new(ds.build_forest());
+        let docs = corpus_from_texts(&ds.documents());
+        let mut contexts = Vec::new();
+        for shards in [1usize, 4] {
+            let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+            let cfg = RagConfig { shards, ..RagConfig::default() };
+            let mut p =
+                RagPipeline::build(forest.clone(), docs.clone(), engine, cfg)
+                    .unwrap();
+            let resp = p.answer("describe the hierarchy around cardiology").unwrap();
+            let mut rel: Vec<String> =
+                resp.context.related_set().into_iter().collect();
+            rel.sort();
+            contexts.push(rel);
+        }
+        assert_eq!(contexts[0], contexts[1], "sharding must not change results");
+    }
+
+    #[test]
+    fn concurrent_retriever_finds_and_reindexes() {
+        use crate::retrieval::sharded_rag::ShardedCuckooTRag;
+        let ds = HospitalDataset::generate(HospitalConfig {
+            trees: 6,
+            ..HospitalConfig::default()
+        });
+        let base = Arc::new(ds.build_forest());
+        let r = make_concurrent_retriever(base.clone(), &RagConfig::default());
+        let mut out = Vec::new();
+        r.find_concurrent("cardiology", &mut out);
+        assert!(!out.is_empty());
+
+        // incremental reindex through the concurrent interface
+        let mut grown = (*base).clone();
+        let new_trees = crate::forest::builder::build_trees(
+            &mut grown,
+            &[("flux ward".into(), "nova hospital".into())],
+        );
+        let grown = Arc::new(grown);
+        r.reindex_concurrent(grown.clone(), &new_trees);
+        out.clear();
+        r.find_concurrent("flux ward", &mut out);
+        assert_eq!(out.len(), 1);
+
+        // matches a fresh sharded build over the grown forest
+        let fresh = ShardedCuckooTRag::new(grown.clone(), 4);
+        for (_, name) in grown.interner().iter() {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            r.find_concurrent(name, &mut a);
+            fresh.find_concurrent(name, &mut b);
+            a.sort();
+            b.sort();
+            assert_eq!(a, b, "{name}");
+        }
+        assert!(r.index_bytes() > 0);
     }
 
     #[test]

@@ -19,8 +19,11 @@ pub mod bloom_rag;
 pub mod context;
 pub mod cuckoo_rag;
 pub mod naive;
+pub mod sharded_rag;
 
-use crate::forest::EntityAddress;
+use std::sync::{Arc, Mutex};
+
+use crate::forest::{EntityAddress, Forest};
 
 /// A Tree-RAG entity retriever.
 pub trait Retriever {
@@ -55,6 +58,72 @@ pub trait Retriever {
     /// (0 for index-free retrievers).
     fn index_bytes(&self) -> usize {
         0
+    }
+}
+
+/// A retriever shared across serving threads: all operations take
+/// `&self`, so worker threads retrieve **in parallel** without an
+/// exclusive lock around the whole index.
+///
+/// [`sharded_rag::ShardedCuckooTRag`] implements this natively (per-key
+/// shard read locks, atomic temperature bumps); the baselines are
+/// adapted via [`MutexRetriever`], which serializes — the coordinator's
+/// throughput comparison between the two is exactly the paper's
+/// concurrency story.
+pub trait ConcurrentRetriever: Send + Sync {
+    /// Algorithm name as printed in result tables.
+    fn name(&self) -> &'static str;
+
+    /// Append all addresses of `entity` to `out` (caller clears/reuses).
+    fn find_concurrent(&self, entity: &str, out: &mut Vec<EntityAddress>);
+
+    /// End-of-round maintenance (CF temperature re-sort; others no-op).
+    fn maintain_concurrent(&self) {}
+
+    /// Knowledge update: the forest grew by `new_trees`.
+    fn reindex_concurrent(&self, forest: Arc<Forest>, new_trees: &[u32]);
+
+    /// Approximate heap bytes of the retriever's index structures.
+    fn index_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Adapts any [`Retriever`] to [`ConcurrentRetriever`] by serializing
+/// every call through a mutex — correctness fallback for the index-free
+/// and Bloom baselines (and the unsharded-coordinator comparison arm in
+/// `benches/concurrent.rs`). Throughput does not scale with threads.
+pub struct MutexRetriever {
+    name: &'static str,
+    inner: Mutex<Box<dyn Retriever + Send>>,
+}
+
+impl MutexRetriever {
+    /// Wrap a boxed retriever.
+    pub fn new(retriever: Box<dyn Retriever + Send>) -> Self {
+        MutexRetriever { name: retriever.name(), inner: Mutex::new(retriever) }
+    }
+}
+
+impl ConcurrentRetriever for MutexRetriever {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn find_concurrent(&self, entity: &str, out: &mut Vec<EntityAddress>) {
+        self.inner.lock().unwrap().find_into(entity, out);
+    }
+
+    fn maintain_concurrent(&self) {
+        self.inner.lock().unwrap().maintain();
+    }
+
+    fn reindex_concurrent(&self, forest: Arc<Forest>, new_trees: &[u32]) {
+        self.inner.lock().unwrap().reindex(forest, new_trees);
+    }
+
+    fn index_bytes(&self) -> usize {
+        self.inner.lock().unwrap().index_bytes()
     }
 }
 

@@ -1,0 +1,214 @@
+//! Sharded Cuckoo Filter T-RAG — the paper's system behind a
+//! [`ShardedCuckooFilter`], so the serving coordinator's worker threads
+//! retrieve **in parallel**: a lookup takes only the read lock of the
+//! one shard that owns the key, and temperature bumps are atomic.
+//!
+//! Semantics are identical to [`CuckooTRag`](crate::retrieval::cuckoo_rag::CuckooTRag)
+//! (asserted by `rust/tests/sharded_concurrent.rs`); only the locking
+//! granularity differs. See `filter::sharded` for the invariants.
+
+use std::sync::{Arc, RwLock};
+
+use crate::filter::cuckoo::CuckooConfig;
+use crate::filter::fingerprint::entity_key;
+use crate::filter::sharded::ShardedCuckooFilter;
+use crate::forest::{EntityAddress, Forest};
+use crate::retrieval::{ConcurrentRetriever, Retriever};
+
+/// The shard-parallel Cuckoo-Filter-indexed retriever.
+pub struct ShardedCuckooTRag {
+    /// Swapped wholesale on reindex; reads are momentary clones of the Arc.
+    forest: RwLock<Arc<Forest>>,
+    cf: ShardedCuckooFilter,
+}
+
+impl ShardedCuckooTRag {
+    /// Index a forest with the paper's default filter parameters.
+    pub fn new(forest: Arc<Forest>, shards: usize) -> Self {
+        Self::with_config(forest, CuckooConfig::default(), shards)
+    }
+
+    /// Index with custom filter parameters and shard count.
+    pub fn with_config(
+        forest: Arc<Forest>,
+        cfg: CuckooConfig,
+        shards: usize,
+    ) -> Self {
+        let cf = ShardedCuckooFilter::new(cfg, shards);
+        let table = forest.address_table();
+        for (id, addrs) in table {
+            let key = entity_key(forest.entity_name(id));
+            cf.insert(key, &addrs);
+        }
+        ShardedCuckooTRag { forest: RwLock::new(forest), cf }
+    }
+
+    /// Access the underlying sharded filter (benches/inspection).
+    pub fn filter(&self) -> &ShardedCuckooFilter {
+        &self.cf
+    }
+
+    /// The forest this retriever currently indexes.
+    pub fn forest(&self) -> Arc<Forest> {
+        self.forest.read().unwrap().clone()
+    }
+
+    /// Dynamic update: register a newly added occurrence of an entity
+    /// (inserts the entity if unknown). Shard write lock only.
+    ///
+    /// push/insert take the shard lock separately, so a concurrent
+    /// writer may insert the entity between our miss and our insert —
+    /// the duplicate-rejected insert then loops back to `push_address`,
+    /// which now succeeds. No occurrence is ever dropped.
+    pub fn add_occurrence(&self, entity: &str, addr: EntityAddress) {
+        let key = entity_key(entity);
+        loop {
+            if self.cf.push_address(key, addr) || self.cf.insert(key, &[addr]) {
+                return;
+            }
+        }
+    }
+
+    /// Dynamic update: remove an entity entirely (paper Algorithm 2).
+    pub fn remove_entity(&self, entity: &str) -> bool {
+        self.cf.delete(entity_key(entity))
+    }
+}
+
+impl ConcurrentRetriever for ShardedCuckooTRag {
+    fn name(&self) -> &'static str {
+        "CF T-RAG (sharded)"
+    }
+
+    fn find_concurrent(&self, entity: &str, out: &mut Vec<EntityAddress>) {
+        self.cf.lookup_into(entity_key(entity), out);
+    }
+
+    fn maintain_concurrent(&self) {
+        self.cf.maintain();
+    }
+
+    fn reindex_concurrent(&self, forest: Arc<Forest>, new_trees: &[u32]) {
+        // Incremental (the paper's dynamic-update story): only the new
+        // trees' addresses are inserted/appended; existing filter state —
+        // including temperatures — is untouched. Shards lock per key.
+        for &t in new_trees {
+            let tree = forest.tree(t);
+            for idx in tree.indices() {
+                let name = forest.entity_name(tree.entity(idx));
+                let addr = EntityAddress::new(t, idx);
+                self.add_occurrence(name, addr);
+            }
+        }
+        *self.forest.write().unwrap() = forest;
+    }
+
+    fn index_bytes(&self) -> usize {
+        self.cf.memory_bytes()
+    }
+}
+
+/// The sharded retriever also fits the classic single-threaded trait, so
+/// `make_retriever` can hand it to existing pipelines and benches.
+impl Retriever for ShardedCuckooTRag {
+    fn name(&self) -> &'static str {
+        ConcurrentRetriever::name(self)
+    }
+
+    fn find(&mut self, entity: &str) -> Vec<EntityAddress> {
+        let mut out = Vec::new();
+        self.find_concurrent(entity, &mut out);
+        out
+    }
+
+    fn find_into(&mut self, entity: &str, out: &mut Vec<EntityAddress>) {
+        self.find_concurrent(entity, out);
+    }
+
+    fn maintain(&mut self) {
+        self.maintain_concurrent();
+    }
+
+    fn reindex(&mut self, forest: Arc<Forest>, new_trees: &[u32]) {
+        self.reindex_concurrent(forest, new_trees);
+    }
+
+    fn index_bytes(&self) -> usize {
+        ConcurrentRetriever::index_bytes(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::Tree;
+
+    fn forest() -> Arc<Forest> {
+        let mut f = Forest::new();
+        let a = f.intern("alpha");
+        let b = f.intern("beta");
+        let c = f.intern("gamma");
+        let mut t0 = Tree::with_root(a);
+        t0.add_child(0, b);
+        t0.add_child(0, c);
+        f.add_tree(t0);
+        let mut t1 = Tree::with_root(b);
+        t1.add_child(0, a);
+        f.add_tree(t1);
+        Arc::new(f)
+    }
+
+    #[test]
+    fn agrees_with_scan() {
+        let f = forest();
+        let r = ShardedCuckooTRag::new(f.clone(), 4);
+        for name in ["alpha", "beta", "gamma", "missing"] {
+            let mut got = Vec::new();
+            r.find_concurrent(name, &mut got);
+            got.sort();
+            let mut want = f
+                .entity_id(name)
+                .map(|id| f.scan_addresses(id))
+                .unwrap_or_default();
+            want.sort();
+            assert_eq!(got, want, "{name}");
+        }
+    }
+
+    #[test]
+    fn temperatures_rise_through_shared_path() {
+        let r = ShardedCuckooTRag::new(forest(), 4);
+        let mut out = Vec::new();
+        for _ in 0..5 {
+            out.clear();
+            r.find_concurrent("alpha", &mut out);
+        }
+        r.maintain_concurrent();
+        assert_eq!(r.filter().temperature(entity_key("alpha")), Some(5));
+    }
+
+    #[test]
+    fn dynamic_add_and_remove() {
+        let r = ShardedCuckooTRag::new(forest(), 4);
+        r.add_occurrence("delta", EntityAddress::new(5, 0));
+        let mut out = Vec::new();
+        r.find_concurrent("delta", &mut out);
+        assert_eq!(out.len(), 1);
+        r.add_occurrence("delta", EntityAddress::new(6, 3));
+        out.clear();
+        r.find_concurrent("delta", &mut out);
+        assert_eq!(out.len(), 2);
+        assert!(r.remove_entity("delta"));
+        out.clear();
+        r.find_concurrent("delta", &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn retriever_trait_delegates() {
+        let mut r = ShardedCuckooTRag::new(forest(), 2);
+        assert_eq!(Retriever::name(&r), "CF T-RAG (sharded)");
+        assert_eq!(r.find("alpha").len(), 2);
+        assert!(Retriever::index_bytes(&r) > 0);
+    }
+}

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 verify + lint gate. Run from the repository root:
+#
+#   scripts/check.sh           # fmt + clippy + build + test
+#   scripts/check.sh --fast    # skip the release build
+#
+# CI runs exactly this script; keep it in sync with
+# .github/workflows/ci.yml and ROADMAP.md ("Tier-1 verify").
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fast=0
+[[ "${1:-}" == "--fast" ]] && fast=1
+
+echo "==> cargo fmt --check"
+cargo fmt --all --check
+
+echo "==> cargo clippy -D warnings"
+cargo clippy --workspace --all-targets -- -D warnings
+
+if [[ "$fast" == 0 ]]; then
+  echo "==> cargo build --release"
+  cargo build --release
+fi
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "OK"
