@@ -156,6 +156,17 @@ fn main() {
     let mut judgement = Judgement::default();
     let mut failures = 0usize;
     for (rx, q) in rxs {
+        // a rejected submission (queue full past the bounded wait, or
+        // coordinator stopped) is a per-request failure, not a reason
+        // to abort the whole replay
+        let rx = match rx {
+            Ok(rx) => rx,
+            Err(e) => {
+                failures += 1;
+                eprintln!("submit failed: {e}");
+                continue;
+            }
+        };
         match rx.recv().expect("response") {
             Ok(resp) => {
                 latencies.push(resp.total_time.as_secs_f64());

@@ -10,20 +10,32 @@
 //!   the key's shard, so throughput scales with threads.
 //!
 //! Also reports single-thread lookup latency for the unsharded filter vs
-//! the sharded one (the sharding overhead on an uncontended path).
+//! the sharded one (the sharding overhead on an uncontended path), and —
+//! the PR-2 scenario — **reader latency during shard expansion**:
+//! readers time every `lookup_into` while a writer pushes the filter
+//! through doubling migrations, once with monolithic migration
+//! (`migration_step_buckets = 0`, the pre-PR-2 behavior: a reader can
+//! stall behind a whole-table rebuild) and once with incremental
+//! migration (every reader wait bounded by one small step).
 //!
-//! Run: `cargo bench --bench concurrent`. Writes `results/concurrent.csv`.
+//! Run: `cargo bench --bench concurrent`. Writes `results/concurrent.csv`
+//! and `results/concurrent_expansion.csv`.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use cft_rag::bench::experiments::experiment_forest;
 use cft_rag::bench::harness::{bench, print_table};
+use cft_rag::filter::cuckoo::CuckooConfig;
+use cft_rag::filter::sharded::ShardedCuckooFilter;
+use cft_rag::forest::EntityAddress;
 use cft_rag::retrieval::cuckoo_rag::CuckooTRag;
 use cft_rag::retrieval::sharded_rag::ShardedCuckooTRag;
 use cft_rag::retrieval::{ConcurrentRetriever, Retriever};
 use cft_rag::util::cli::{spec, Args};
 use cft_rag::util::csv::CsvTable;
-use cft_rag::util::rng::Rng;
+use cft_rag::util::rng::{fnv1a, Rng};
 
 fn main() {
     let args = Args::from_env(vec![
@@ -173,4 +185,92 @@ fn main() {
     let out = args.str_or("out", "results/concurrent.csv");
     csv.write_to(&out).expect("write csv");
     println!("\nwrote {out}");
+
+    // ---- reader tail latency during shard expansion (PR-2 scenario) ----
+    // Preload each arm to ~90% of the load threshold, then let a writer
+    // push every shard through a doubling while 4 reader threads time
+    // each individual lookup. The acceptance claim: with incremental
+    // migration no lookup_into ever waits behind a full-table migration
+    // — its worst case is one bounded step — where the monolithic arm's
+    // tail is the whole rebuild.
+    println!("\nreader latency during shard expansion (4 readers, 2 shards):");
+    let mut exp_csv = CsvTable::new(&[
+        "migration",
+        "p50_ns",
+        "p99_ns",
+        "max_us",
+        "lookups",
+        "expansions",
+    ]);
+    let exp_key = |i: u64| fnv1a(&i.to_le_bytes());
+    for (label, step) in [("monolithic", 0usize), ("incremental", 64)] {
+        let cf = Arc::new(ShardedCuckooFilter::new(
+            CuckooConfig {
+                initial_buckets: 1 << 14,
+                migration_step_buckets: step,
+                ..CuckooConfig::default()
+            },
+            2,
+        ));
+        let preload = (cf.capacity_slots() as f64 * 0.90) as u64;
+        for i in 0..preload {
+            let _ = cf.insert(exp_key(i), &[EntityAddress::new(i as u32, 0)]);
+        }
+        let stop = AtomicBool::new(false);
+        let per_thread: Vec<Vec<u64>> = std::thread::scope(|s| {
+            let readers: Vec<_> = (0..4u64)
+                .map(|t| {
+                    let cf = &cf;
+                    let stop = &stop;
+                    s.spawn(move || {
+                        let mut rng = Rng::new(0xA11C_E5ED ^ t);
+                        let mut out = Vec::with_capacity(4);
+                        let mut lat = Vec::with_capacity(1 << 18);
+                        while !stop.load(Ordering::Relaxed) {
+                            let k = exp_key(rng.below(preload));
+                            out.clear();
+                            let t0 = Instant::now();
+                            cf.lookup_into(k, &mut out);
+                            lat.push(t0.elapsed().as_nanos() as u64);
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            // writer: +40% of capacity forces ≥1 doubling per shard
+            let extra = (cf.capacity_slots() as f64 * 0.40) as u64;
+            for i in 0..extra {
+                let _ = cf
+                    .insert(exp_key(preload + i), &[EntityAddress::new(0, 0)]);
+            }
+            stop.store(true, Ordering::Relaxed);
+            readers.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut lat: Vec<u64> = per_thread.into_iter().flatten().collect();
+        lat.sort_unstable();
+        let pick = |q: f64| lat[((lat.len() - 1) as f64 * q) as usize];
+        let (p50, p99) = (pick(0.50), pick(0.99));
+        let max_us = *lat.last().unwrap() as f64 / 1000.0;
+        let expansions = cf.stats().expansions;
+        println!(
+            "  {label:<12} p50 {p50:>6} ns   p99 {p99:>8} ns   \
+             max {max_us:>10.1} us   ({} lookups, {expansions} expansions)",
+            lat.len(),
+        );
+        exp_csv.push(&[
+            label.to_string(),
+            p50.to_string(),
+            p99.to_string(),
+            format!("{max_us}"),
+            lat.len().to_string(),
+            expansions.to_string(),
+        ]);
+    }
+    // derive from `out` without clobbering it when --out lacks ".csv"
+    let exp_out = match out.strip_suffix(".csv") {
+        Some(stem) => format!("{stem}_expansion.csv"),
+        None => format!("{out}_expansion.csv"),
+    };
+    exp_csv.write_to(&exp_out).expect("write expansion csv");
+    println!("wrote {exp_out}");
 }

@@ -11,11 +11,19 @@
 //!
 //! ```text
 //!  submit() ─► [queue] ─► batcher thread ── embed+search (batch B) ──┐
-//!                                                                    ▼
-//!  response ◄── worker pool (N threads): NER → retrieve → context → generate
+//!                             │ (tick)                               ▼
+//!                             ▼              worker pool (N threads):
+//!                      maintainer thread     NER → retrieve → context
+//!                      (retriever upkeep)     → generate ──► response
 //! ```
+//!
+//! Retriever maintenance runs on its **own thread**: the batcher only
+//! drops a non-blocking tick every `maintain_every` batches, so a slow
+//! maintenance pass (bucket re-sorts, expansion draining) can never
+//! stall embedding dispatch — pre-PR-2 it ran inline on the batcher and
+//! did exactly that.
 
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -38,6 +46,13 @@ use crate::text::tokenizer::tokenize_padded;
 use crate::util::stats::Timer;
 use crate::vector::{search_topk, VectorStore};
 
+/// Depth of the submit queue (jobs admitted but not yet batched).
+const SUBMIT_QUEUE_DEPTH: usize = 1024;
+
+/// How long [`Coordinator::submit`] may wait for queue space before
+/// giving up with an explicit queue-full error.
+const SUBMIT_FULL_TIMEOUT: Duration = Duration::from_secs(5);
+
 /// Coordinator tuning.
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
@@ -45,7 +60,8 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     /// Batching policy for the embed/search stage.
     pub batch: BatchPolicy,
-    /// Run retriever maintenance every this many batches (0 = never).
+    /// Signal retriever maintenance every this many batches (0 = never).
+    /// Maintenance itself runs on a dedicated thread, off the batcher.
     pub maintain_every: usize,
 }
 
@@ -106,18 +122,35 @@ impl Coordinator {
         let metrics = Metrics::new();
         let cache = EmbedCache::new();
 
-        let (submit_tx, submit_rx) = sync_channel::<Job>(1024);
+        let (submit_tx, submit_rx) = sync_channel::<Job>(SUBMIT_QUEUE_DEPTH);
         let (work_tx, work_rx) = sync_channel::<WorkItem>(1024);
         let work_rx = Arc::new(Mutex::new(work_rx));
+        // capacity 1: a busy maintainer coalesces pending ticks
+        let (maint_tx, maint_rx) = sync_channel::<()>(1);
 
         let mut threads = Vec::new();
+
+        // ---- maintainer thread: retriever upkeep, off the batcher ----
+        // Exits when the batcher drops its tick sender at shutdown.
+        {
+            let retriever = retriever.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("cft-maintainer".into())
+                    .spawn(move || {
+                        while maint_rx.recv().is_ok() {
+                            retriever.maintain_concurrent();
+                        }
+                    })
+                    .expect("spawn maintainer"),
+            );
+        }
 
         // ---- batcher thread: embed + vector search at batch size ----
         {
             let engine = engine.clone();
             let store = store.clone();
             let metrics = metrics.clone();
-            let retriever = retriever.clone();
             let topk = rag_cfg.topk_docs;
             threads.push(
                 std::thread::Builder::new()
@@ -134,11 +167,15 @@ impl Coordinator {
                             if cfg.maintain_every > 0
                                 && batches % cfg.maintain_every == 0
                             {
-                                retriever.maintain_concurrent();
+                                // non-blocking tick: maintenance happens
+                                // on its own thread, never stalling the
+                                // embed/search dispatch below
+                                let _ = maint_tx.try_send(());
                             }
                             dispatch_batch(jobs, &engine, &store, topk, &work_tx);
                         }
-                        // dropping work_tx closes the worker queue
+                        // dropping work_tx closes the worker queue, and
+                        // dropping maint_tx retires the maintainer
                     })
                     .expect("spawn batcher"),
             );
@@ -183,22 +220,30 @@ impl Coordinator {
     }
 
     /// Submit a query; returns the channel the response will arrive on.
-    pub fn submit(&self, query: &str) -> Receiver<Result<ServeResponse>> {
-        let (tx, rx) = std::sync::mpsc::channel();
+    ///
+    /// Backpressure and lifecycle are explicit: a full request queue
+    /// blocks for at most [`SUBMIT_FULL_TIMEOUT`] before failing with a
+    /// queue-full error, and submitting to a stopped coordinator (or one
+    /// whose batcher died) fails immediately — the pre-PR-2 behavior
+    /// silently discarded the job on a closed queue and blocked forever
+    /// on a full one.
+    pub fn submit(&self, query: &str) -> Result<Receiver<Result<ServeResponse>>> {
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
         let job = Job {
             query: query.to_string(),
             enqueued: Instant::now(),
-            resp: tx,
+            resp: resp_tx,
         };
-        if let Some(s) = &self.submit_tx {
-            let _ = s.send(job); // on closed queue rx yields RecvError
-        }
-        rx
+        let queue = self.submit_tx.as_ref().ok_or_else(|| {
+            CftError::Coordinator("coordinator stopped".into())
+        })?;
+        enqueue(queue, job, SUBMIT_FULL_TIMEOUT)?;
+        Ok(resp_rx)
     }
 
     /// Submit and wait.
     pub fn query_blocking(&self, query: &str) -> Result<ServeResponse> {
-        self.submit(query)
+        self.submit(query)?
             .recv()
             .map_err(|_| CftError::Coordinator("coordinator stopped".into()))?
     }
@@ -213,6 +258,34 @@ impl Coordinator {
         self.submit_tx.take(); // close the queue; batcher exits, then workers
         for t in self.threads.drain(..) {
             let _ = t.join();
+        }
+    }
+}
+
+/// Enqueue one job with explicit full-queue and closed-queue behavior:
+/// bounded blocking (poll + back off, up to `timeout`) while the queue
+/// is full, then a queue-full error; an immediate queue-closed error
+/// once the receiving side is gone. Nothing is ever silently dropped.
+fn enqueue(queue: &SyncSender<Job>, job: Job, timeout: Duration) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    let mut job = job;
+    loop {
+        match queue.try_send(job) {
+            Ok(()) => return Ok(()),
+            Err(TrySendError::Disconnected(_)) => {
+                return Err(CftError::Coordinator(
+                    "request queue closed (batcher gone)".into(),
+                ));
+            }
+            Err(TrySendError::Full(rejected)) => {
+                if Instant::now() >= deadline {
+                    return Err(CftError::Coordinator(format!(
+                        "request queue full ({SUBMIT_QUEUE_DEPTH} pending)"
+                    )));
+                }
+                job = rejected;
+                std::thread::sleep(Duration::from_millis(1));
+            }
         }
     }
 }
@@ -359,7 +432,8 @@ mod tests {
             "which units report to pediatrics and who oversees it",
             "describe the hierarchy around pathology",
         ];
-        let rxs: Vec<_> = queries.iter().map(|q| c.submit(q)).collect();
+        let rxs: Vec<_> =
+            queries.iter().map(|q| c.submit(q).expect("submit")).collect();
         for rx in rxs {
             let r = rx.recv().unwrap().unwrap();
             assert!(!r.answer.is_empty());
@@ -376,6 +450,46 @@ mod tests {
         let c = start_coordinator();
         let _ = c.query_blocking("describe the hierarchy around cardiology");
         c.shutdown(); // must not hang
+    }
+
+    fn test_job(query: &str) -> Job {
+        let (resp, _rx) = std::sync::mpsc::channel();
+        Job { query: query.into(), enqueued: Instant::now(), resp }
+    }
+
+    #[test]
+    fn enqueue_errors_when_queue_closed() {
+        let (tx, rx) = sync_channel::<Job>(1);
+        drop(rx); // batcher gone
+        let err = enqueue(&tx, test_job("q"), Duration::from_millis(50))
+            .expect_err("closed queue must error, not drop the job");
+        assert!(err.to_string().contains("closed"), "{err}");
+    }
+
+    #[test]
+    fn enqueue_errors_when_queue_stays_full() {
+        let (tx, _rx) = sync_channel::<Job>(1);
+        enqueue(&tx, test_job("first"), Duration::from_millis(50))
+            .expect("first job fits");
+        let err = enqueue(&tx, test_job("second"), Duration::from_millis(50))
+            .expect_err("full queue must error after the bounded wait");
+        assert!(err.to_string().contains("full"), "{err}");
+    }
+
+    #[test]
+    fn enqueue_succeeds_once_space_frees_up() {
+        let (tx, rx) = sync_channel::<Job>(1);
+        enqueue(&tx, test_job("first"), Duration::from_millis(50)).unwrap();
+        let drainer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            let drained = rx.recv().expect("job present");
+            drained.query
+        });
+        // blocks briefly (bounded), then lands once the drainer empties
+        // the queue — the explicit-backpressure happy path
+        enqueue(&tx, test_job("second"), Duration::from_secs(2))
+            .expect("frees up within the deadline");
+        assert_eq!(drainer.join().unwrap(), "first");
     }
 
     #[test]

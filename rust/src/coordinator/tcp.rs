@@ -15,13 +15,36 @@ pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     log::info!("cft-rag listening on {addr}");
     for stream in listener.incoming() {
-        let stream = stream?;
-        let c = coordinator.clone();
-        std::thread::spawn(move || {
-            let _ = handle_conn(c, stream);
-        });
+        accept_one(&coordinator, stream);
     }
     Ok(())
+}
+
+/// Handle one `accept()` outcome. Accept failures are *transient* from
+/// the listener's point of view — a reset half-open connection
+/// (`ECONNABORTED`), fd exhaustion (`EMFILE`), an interrupted syscall —
+/// so they are logged and survived; the pre-PR-2 `stream?` turned any
+/// one of them into the death of the whole listener.
+fn accept_one(coordinator: &Arc<Coordinator>, stream: std::io::Result<TcpStream>) {
+    match stream {
+        Ok(stream) => {
+            let c = coordinator.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(c, stream);
+            });
+        }
+        Err(e) => {
+            log::warn!("accept failed (transient; listener continues): {e}");
+            // A *persistent* failure (e.g. EMFILE under fd exhaustion)
+            // would otherwise hot-spin the accept loop at 100% CPU and
+            // flood the log; a short pause bounds the retry rate while
+            // still recovering as soon as the condition clears. EINTR
+            // is the one kind where an immediate retry is always right.
+            if e.kind() != std::io::ErrorKind::Interrupted {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+        }
+    }
 }
 
 fn handle_conn(coordinator: Arc<Coordinator>, stream: TcpStream) -> std::io::Result<()> {
@@ -105,6 +128,38 @@ mod tests {
         let json = respond(&c, "describe the hierarchy around cardiology");
         assert_eq!(json.get("ok"), Some(&Json::Bool(true)));
         assert!(json.get("answer").unwrap().as_str().unwrap().len() > 10);
+    }
+
+    #[test]
+    fn accept_error_does_not_kill_listener() {
+        let c = coordinator();
+        // a transient accept failure is absorbed (pre-PR-2 this bubbled
+        // out of serve() and killed the listener)...
+        for kind in [
+            std::io::ErrorKind::ConnectionAborted,
+            std::io::ErrorKind::Interrupted,
+            std::io::ErrorKind::Other, // e.g. EMFILE surfaces as Other/Uncategorized
+        ] {
+            accept_one(&c, Err(std::io::Error::from(kind)));
+        }
+        // ...and the very same accept path still serves a real
+        // connection afterwards.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut client = TcpStream::connect(addr).unwrap();
+            client
+                .write_all(b"what is the parent unit of cardiology\n:quit\n")
+                .unwrap();
+            let mut reader = BufReader::new(client);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            line
+        });
+        let (stream, _) = listener.accept().unwrap();
+        accept_one(&c, Ok(stream));
+        let line = client.join().unwrap();
+        assert!(line.contains("\"ok\":true"), "{line}");
     }
 
     #[test]

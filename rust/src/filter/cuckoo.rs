@@ -12,18 +12,39 @@
 //! Layout is struct-of-arrays: the hot fingerprint array is scanned on
 //! lookup; temperatures, list heads and the (cold) original keys live in
 //! parallel arrays touched only on hits, maintenance, and expansion.
+//!
+//! # Incremental expansion (the §1 "double expansion" path)
+//!
 //! Expansion doubles the bucket count and re-inserts every live entry
-//! from its stored key — mirroring the paper's "original elements are
-//! re-hashed and migrated" description (the C++ original equally retains
-//! entities to re-hash; the key array is the cold-path cost of dynamic
-//! growth).
+//! from its stored key — the paper's "original elements are re-hashed
+//! and migrated". Since PR 2 that migration is **incremental**: crossing
+//! the load threshold allocates the doubled table *aside* as a migration
+//! target, and live entries move old-bucket-range by old-bucket-range in
+//! steps of [`CuckooConfig::migration_step_buckets`] buckets. Between
+//! steps the filter serves from **both generations** — an entry lives in
+//! exactly one of them at any instant (a bucket range is drained and
+//! re-placed within a single step, under the same exclusive borrow) —
+//! so lookups stay exact mid-migration and no caller ever waits for a
+//! whole-table rebuild: the longest exclusive hold is one step. Every
+//! mutating operation (insert / delete / push_address) drives one step,
+//! [`CuckooFilter::maintain`] drains to completion, and the sharded
+//! wrapper ([`crate::filter::sharded`]) interleaves explicit
+//! [`CuckooFilter::migrate_step`] calls with its readers. A migration
+//! collision storm (vanishingly rare) discards only the partial target
+//! and retries at double the size — the snapshot-and-replay guarantee of
+//! the PR-1 fix is preserved per target generation, so no entry is ever
+//! dropped or double-placed.
 //!
 //! **Concurrency:** temperatures and per-bucket dirty flags are atomics,
 //! so [`CuckooFilter::lookup_shared`] works through `&self` — many
 //! readers can probe in parallel under a shard *read* lock (see
 //! `filter::sharded`), with temperature bumps as relaxed increments.
-//! Every structural mutation (insert / delete / maintain / expansion)
-//! still takes `&mut self` and therefore an exclusive lock.
+//! Every structural mutation (insert / delete / migration step) still
+//! takes `&mut self` and therefore an exclusive lock, but since PR 2 the
+//! exclusive holds are *bounded*: migration moves one bucket range per
+//! step, and maintenance is split into a read-only planning pass
+//! ([`CuckooFilter::plan_maintenance`]) and per-bucket validated swaps
+//! ([`CuckooFilter::apply_bucket_plan`]).
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering::Relaxed};
 
@@ -47,6 +68,12 @@ pub struct CuckooConfig {
     pub load_threshold: f64,
     /// Adaptive temperature sorting (§3.1) — ablation switch.
     pub sort_by_temperature: bool,
+    /// Old buckets migrated per incremental expansion step. `0` = the
+    /// whole table in one step (the pre-PR-2 monolithic behavior, kept
+    /// as the comparison arm of `benches/concurrent.rs`). Smaller steps
+    /// bound reader stalls during growth more tightly at the cost of
+    /// serving from two generations for longer.
+    pub migration_step_buckets: usize,
     /// RNG seed for eviction victim choice.
     pub seed: u64,
 }
@@ -60,6 +87,7 @@ impl Default for CuckooConfig {
             max_kicks: 500,
             load_threshold: 0.94,
             sort_by_temperature: true,
+            migration_step_buckets: 64,
             seed: 0xCF17_4A06,
         }
     }
@@ -71,6 +99,8 @@ pub struct CuckooStats {
     pub inserts: u64,
     pub kicks: u64,
     pub expansions: u64,
+    /// incremental migration steps driven (several per expansion)
+    pub migration_steps: u64,
     pub lookups: u64,
     /// slots probed across all lookups (the metric temperature sorting improves)
     pub slots_probed: u64,
@@ -82,6 +112,7 @@ impl CuckooStats {
         self.inserts += other.inserts;
         self.kicks += other.kicks;
         self.expansions += other.expansions;
+        self.migration_steps += other.migration_steps;
         self.lookups += other.lookups;
         self.slots_probed += other.slots_probed;
     }
@@ -106,25 +137,373 @@ fn bucket_pair(i1: usize, i2: usize) -> impl Iterator<Item = usize> {
     std::iter::once(i1).chain((i2 != i1).then_some(i2))
 }
 
-/// The improved Cuckoo Filter.
+/// SWAR scan of one 4-lane fingerprint word: returns the first slot
+/// holding `fp` (if any before the first empty lane) and the number
+/// of slots a linear scan would have probed — so temperature-sorting
+/// statistics stay exact while the scan itself is branch-light.
+///
+/// Buckets are left-packed (inserts fill the first hole, deletes
+/// compact), so lanes at/after the first empty lane are all zero.
+#[inline]
+fn scan4(word: u64, fp: u16) -> (Option<usize>, u64) {
+    const LO: u64 = 0x0001_0001_0001_0001;
+    const HI: u64 = 0x8000_8000_8000_8000;
+    let pat = (fp as u64).wrapping_mul(LO); // broadcast fp to 4 lanes
+    let x = word ^ pat; // zero lane <=> fingerprint match
+    // first-zero-lane detection; the lowest flagged lane is exact
+    let hit = x.wrapping_sub(LO) & !x & HI;
+    let empty = word.wrapping_sub(LO) & !word & HI;
+    let hit_pos = (hit.trailing_zeros() / 16) as usize; // 4 if none
+    let empty_pos = (empty.trailing_zeros() / 16) as usize; // 4 if none
+    if hit != 0 && hit_pos < empty_pos {
+        (Some(hit_pos), hit_pos as u64 + 1)
+    } else {
+        // linear scan would probe up to and including the first
+        // empty slot, or the whole bucket
+        (None, (empty_pos + 1).min(4) as u64)
+    }
+}
+
+/// The one slot-ordering policy within a bucket — occupied before empty
+/// (empty slots always carry temperature 0), then hotter first —
+/// expressed as an ascending sort key. Shared by the in-place insertion
+/// sort (`Table::sort_bucket`, via `slot_less`) and the epoch-style
+/// planner ([`CuckooFilter::plan_maintenance`]) so the two maintenance
+/// paths can never drift apart.
+#[inline]
+fn slot_rank(fp: u16, temp: u32) -> (bool, std::cmp::Reverse<u32>) {
+    (fp == 0, std::cmp::Reverse(temp))
+}
+
+/// One table generation: the bucket/slot arrays of a (possibly
+/// in-migration) cuckoo table. The filter owns one primary `Table` plus,
+/// while an expansion is in flight, a doubled migration target.
 #[derive(Debug)]
-pub struct CuckooFilter {
-    cfg: CuckooConfig,
+struct Table {
     nbuckets: usize,
+    slots: usize,
     /// hot path: fingerprints, 0 = empty slot; len = nbuckets * slots
     fps: Vec<u16>,
     /// temperature per slot (atomic: bumped by shared-borrow lookups)
     temps: Vec<AtomicU32>,
     /// block-list head per slot (NIL when none)
     heads: Vec<u32>,
-    /// cold path: original keys, used for expansion & exact-match checks
+    /// cold path: original keys, used for migration & exact-match checks
     keys: Vec<u64>,
     /// buckets whose temperature order may be stale
     dirty: Vec<AtomicBool>,
+}
+
+impl Clone for Table {
+    fn clone(&self) -> Self {
+        Table {
+            nbuckets: self.nbuckets,
+            slots: self.slots,
+            fps: self.fps.clone(),
+            temps: self
+                .temps
+                .iter()
+                .map(|t| AtomicU32::new(t.load(Relaxed)))
+                .collect(),
+            heads: self.heads.clone(),
+            keys: self.keys.clone(),
+            dirty: self
+                .dirty
+                .iter()
+                .map(|d| AtomicBool::new(d.load(Relaxed)))
+                .collect(),
+        }
+    }
+}
+
+impl Table {
+    fn new(nbuckets: usize, slots: usize) -> Self {
+        let n = nbuckets * slots;
+        Table {
+            nbuckets,
+            slots,
+            fps: vec![0; n],
+            temps: std::iter::repeat_with(|| AtomicU32::new(0))
+                .take(n)
+                .collect(),
+            heads: vec![NIL; n],
+            keys: vec![0; n],
+            dirty: std::iter::repeat_with(|| AtomicBool::new(false))
+                .take(nbuckets)
+                .collect(),
+        }
+    }
+
+    #[inline]
+    fn capacity(&self) -> usize {
+        self.nbuckets * self.slots
+    }
+
+    #[inline]
+    fn slot_range(&self, bucket: usize) -> std::ops::Range<usize> {
+        bucket * self.slots..(bucket + 1) * self.slots
+    }
+
+    /// Fingerprint and candidate buckets of `key` in *this* generation
+    /// (the two generations differ in `nbuckets`, so indices differ too).
+    #[inline]
+    fn probe(&self, key: u64, fingerprint_bits: u32) -> (u16, usize, usize) {
+        let fp = fingerprint(key, fingerprint_bits);
+        let i1 = primary_index(key, self.nbuckets);
+        let i2 = alt_index(i1, fp, self.nbuckets);
+        (fp, i1, i2)
+    }
+
+    fn empty_slot(&self, bucket: usize) -> Option<usize> {
+        self.slot_range(bucket).find(|&s| self.fps[s] == 0)
+    }
+
+    fn write_slot(&mut self, s: usize, fp: u16, key: u64, temp: u32, head: u32) {
+        self.fps[s] = fp;
+        self.keys[s] = key;
+        *self.temps[s].get_mut() = temp;
+        self.heads[s] = head;
+        *self.dirty[s / self.slots].get_mut() = true;
+    }
+
+    fn clear_slot(&mut self, s: usize) {
+        self.fps[s] = 0;
+        self.keys[s] = 0;
+        *self.temps[s].get_mut() = 0;
+        self.heads[s] = NIL;
+    }
+
+    /// One 64-bit load of a 4-slot bucket's fingerprints (the default
+    /// layout: 4 × u16 = one word). Requires `slots == 4`.
+    #[inline]
+    fn bucket_word(&self, bucket: usize) -> u64 {
+        debug_assert_eq!(self.slots, 4);
+        let base = bucket * 4;
+        debug_assert!(base + 4 <= self.fps.len());
+        // SAFETY: fps holds nbuckets*4 contiguous u16s; base+4 <= len.
+        unsafe { (self.fps.as_ptr().add(base) as *const u64).read_unaligned() }
+    }
+
+    #[inline]
+    fn find_fp(&self, bucket: usize, fp: u16) -> Option<usize> {
+        if self.slots == 4 {
+            let (pos, _) = scan4(self.bucket_word(bucket), fp);
+            return pos.map(|p| bucket * 4 + p);
+        }
+        for s in self.slot_range(bucket) {
+            if self.fps[s] == fp {
+                return Some(s);
+            }
+            if self.fps[s] == 0 {
+                return None; // left-packed: rest of the bucket is empty
+            }
+        }
+        None
+    }
+
+    /// Like `find_fp` but records how many slots were probed (the
+    /// quantity temperature sorting minimizes). Buckets are kept
+    /// left-packed (inserts fill the first empty slot, deletes compact),
+    /// so the scan terminates at the first empty slot.
+    #[inline]
+    fn find_fp_counting(
+        &self,
+        bucket: usize,
+        fp: u16,
+        probed: &AtomicU64,
+    ) -> Option<usize> {
+        if self.slots == 4 {
+            let (pos, n) = scan4(self.bucket_word(bucket), fp);
+            probed.fetch_add(n, Relaxed);
+            return pos.map(|p| bucket * 4 + p);
+        }
+        let base = bucket * self.slots;
+        for off in 0..self.slots {
+            probed.fetch_add(1, Relaxed);
+            let cur = self.fps[base + off];
+            if cur == fp {
+                return Some(base + off);
+            }
+            if cur == 0 {
+                return None; // left-packed: rest of the bucket is empty
+            }
+        }
+        None
+    }
+
+    /// Slot index of the exact key in this generation, if present.
+    fn find_exact(&self, key: u64, fingerprint_bits: u32) -> Option<usize> {
+        let (fp, i1, i2) = self.probe(key, fingerprint_bits);
+        for b in bucket_pair(i1, i2) {
+            for s in self.slot_range(b) {
+                if self.fps[s] == fp && self.keys[s] == key {
+                    return Some(s);
+                }
+            }
+        }
+        None
+    }
+
+    /// Restore the left-packed invariant after clearing slot `hole`:
+    /// shift the occupied suffix of the bucket one slot left (order of
+    /// survivors — and thus temperature order — is preserved).
+    fn compact_bucket(&mut self, bucket: usize, hole: usize) {
+        let end = (bucket + 1) * self.slots;
+        let mut dst = hole;
+        for src in hole + 1..end {
+            if self.fps[src] == 0 {
+                break;
+            }
+            self.swap_slots(dst, src);
+            dst += 1;
+        }
+    }
+
+    #[inline]
+    fn swap_slots(&mut self, a: usize, b: usize) {
+        self.fps.swap(a, b);
+        self.keys.swap(a, b);
+        self.temps.swap(a, b);
+        self.heads.swap(a, b);
+    }
+
+    /// Insertion-sort one bucket's slots: occupied before empty, higher
+    /// temperature first. Buckets have ≤ 8 slots, so insertion sort wins.
+    fn sort_bucket(&mut self, bucket: usize) {
+        let base = bucket * self.slots;
+        let n = self.slots;
+        for i in 1..n {
+            let mut j = i;
+            while j > 0 && self.slot_less(base + j - 1, base + j) {
+                self.swap_slots(base + j - 1, base + j);
+                j -= 1;
+            }
+        }
+    }
+
+    /// True when slot `a` must sort after slot `b` (see [`slot_rank`]).
+    #[inline]
+    fn slot_less(&self, a: usize, b: usize) -> bool {
+        slot_rank(self.fps[a], self.temps[a].load(Relaxed))
+            > slot_rank(self.fps[b], self.temps[b].load(Relaxed))
+    }
+
+    /// Every live entry currently in this generation.
+    fn collect_live(&self) -> Vec<Entry> {
+        let mut live = Vec::new();
+        for s in 0..self.fps.len() {
+            if self.fps[s] != 0 {
+                live.push((
+                    self.keys[s],
+                    self.temps[s].load(Relaxed),
+                    self.heads[s],
+                ));
+            }
+        }
+        live
+    }
+
+    /// Place without expanding. On a failed kick chain the input entry is
+    /// already in the table (the first write of the chain) and the final
+    /// displaced victim is handed back as `Err` for the caller to re-home
+    /// — nothing is silently dropped.
+    fn try_place(
+        &mut self,
+        cfg: &CuckooConfig,
+        rng: &mut Rng,
+        stats: &mut CuckooStats,
+        key: u64,
+        temp: u32,
+        head: u32,
+    ) -> Result<(), Entry> {
+        let fp = fingerprint(key, cfg.fingerprint_bits);
+        let i1 = primary_index(key, self.nbuckets);
+        let i2 = alt_index(i1, fp, self.nbuckets);
+        for b in bucket_pair(i1, i2) {
+            if let Some(s) = self.empty_slot(b) {
+                self.write_slot(s, fp, key, temp, head);
+                return Ok(());
+            }
+        }
+        let mut i = if rng.chance(0.5) { i1 } else { i2 };
+        let mut cur = (fp, key, temp, head);
+        for _ in 0..cfg.max_kicks {
+            // evict a random resident entry
+            let s = i * self.slots + rng.range(0, self.slots);
+            let victim = (
+                self.fps[s],
+                self.keys[s],
+                self.temps[s].load(Relaxed),
+                self.heads[s],
+            );
+            self.write_slot(s, cur.0, cur.1, cur.2, cur.3);
+            cur = victim;
+            stats.kicks += 1;
+
+            i = alt_index(i, cur.0, self.nbuckets);
+            if let Some(s2) = self.empty_slot(i) {
+                self.write_slot(s2, cur.0, cur.1, cur.2, cur.3);
+                return Ok(());
+            }
+        }
+        Err((cur.1, cur.2, cur.3))
+    }
+
+    /// Approximate heap usage of this generation's arrays.
+    fn memory_bytes(&self) -> usize {
+        self.fps.capacity() * 2
+            + self.temps.capacity() * 4
+            + self.heads.capacity() * 4
+            + self.keys.capacity() * 8
+            + self.dirty.capacity()
+    }
+}
+
+/// An in-flight doubling: the target generation plus the cursor into the
+/// old (primary) table marking the first not-yet-drained bucket.
+#[derive(Clone, Debug)]
+struct Migration {
+    target: Table,
+    next_bucket: usize,
+}
+
+/// Which generation a key was found in (internal addressing for the
+/// mutating exact-match paths while a migration is in flight).
+enum Loc {
+    Main(usize),
+    Target(usize),
+}
+
+/// A planned, temperature-sorted rebuild of one bucket: computed under a
+/// shared borrow ([`CuckooFilter::plan_maintenance`]), applied under a
+/// brief exclusive borrow ([`CuckooFilter::apply_bucket_plan`]). The
+/// `seen` snapshot doubles as a validation token — if the bucket changed
+/// structurally between the two phases the plan is stale and rejected.
+#[derive(Clone, Debug)]
+pub struct BucketPlan {
+    bucket: usize,
+    /// (fp, key, head) per slot at plan time; temperatures are excluded
+    /// on purpose — concurrent readers bump them, and a bump must not
+    /// invalidate the plan.
+    seen: Vec<(u16, u64, u32)>,
+    /// Permutation to apply: new slot `j` receives old slot `order[j]`.
+    order: Vec<usize>,
+}
+
+/// The improved Cuckoo Filter.
+#[derive(Debug)]
+pub struct CuckooFilter {
+    cfg: CuckooConfig,
+    /// Primary generation. While a migration is in flight this is the
+    /// *old* table, progressively drained front-to-back.
+    table: Table,
+    /// In-flight doubling, if any. Boxed: inert (a fat pointer) on the
+    /// common no-migration path.
+    migration: Option<Box<Migration>>,
     arena: BlockArena,
     len: usize,
     rng: Rng,
-    /// write-path counters (inserts / kicks / expansions)
+    /// write-path counters (inserts / kicks / expansions / steps)
     stats: CuckooStats,
     /// read-path counters, atomic so `lookup_shared` can record them
     lookups: AtomicU64,
@@ -141,20 +520,8 @@ impl Clone for CuckooFilter {
     fn clone(&self) -> Self {
         CuckooFilter {
             cfg: self.cfg,
-            nbuckets: self.nbuckets,
-            fps: self.fps.clone(),
-            temps: self
-                .temps
-                .iter()
-                .map(|t| AtomicU32::new(t.load(Relaxed)))
-                .collect(),
-            heads: self.heads.clone(),
-            keys: self.keys.clone(),
-            dirty: self
-                .dirty
-                .iter()
-                .map(|d| AtomicBool::new(d.load(Relaxed)))
-                .collect(),
+            table: self.table.clone(),
+            migration: self.migration.clone(),
             arena: self.arena.clone(),
             len: self.len,
             rng: self.rng.clone(),
@@ -169,18 +536,9 @@ impl CuckooFilter {
     /// New filter with the given configuration.
     pub fn new(cfg: CuckooConfig) -> Self {
         let nbuckets = cfg.initial_buckets.next_power_of_two().max(1);
-        let slots = nbuckets * cfg.slots;
         CuckooFilter {
-            nbuckets,
-            fps: vec![0; slots],
-            temps: std::iter::repeat_with(|| AtomicU32::new(0))
-                .take(slots)
-                .collect(),
-            heads: vec![NIL; slots],
-            keys: vec![0; slots],
-            dirty: std::iter::repeat_with(|| AtomicBool::new(false))
-                .take(nbuckets)
-                .collect(),
+            table: Table::new(nbuckets, cfg.slots),
+            migration: None,
             arena: BlockArena::new(),
             len: 0,
             rng: Rng::new(cfg.seed),
@@ -201,9 +559,10 @@ impl CuckooFilter {
         self.len == 0
     }
 
-    /// Current bucket count.
+    /// Bucket count of the primary table. An in-flight doubling's target
+    /// is reported here only once its migration completes.
     pub fn buckets(&self) -> usize {
-        self.nbuckets
+        self.table.nbuckets
     }
 
     /// Slots per bucket (configuration).
@@ -211,9 +570,21 @@ impl CuckooFilter {
         self.cfg.slots
     }
 
-    /// Load factor: occupied slots / total slots.
+    /// Slots in the generation entries are being placed into — the
+    /// doubled target while a migration is in flight, the primary table
+    /// otherwise. This is the denominator of [`load_factor`].
+    ///
+    /// [`load_factor`]: CuckooFilter::load_factor
+    pub fn capacity_slots(&self) -> usize {
+        match &self.migration {
+            Some(m) => m.target.capacity(),
+            None => self.table.capacity(),
+        }
+    }
+
+    /// Load factor: occupied slots / capacity slots.
     pub fn load_factor(&self) -> f64 {
-        self.len as f64 / (self.nbuckets * self.cfg.slots) as f64
+        self.len as f64 / self.capacity_slots() as f64
     }
 
     /// Counters (snapshot; read-path counters are atomics).
@@ -229,24 +600,23 @@ impl CuckooFilter {
         &self.arena
     }
 
-    /// Approximate heap usage in bytes (hot + cold + arena).
+    /// Approximate heap usage in bytes (both generations + arena).
     pub fn memory_bytes(&self) -> usize {
-        self.fps.capacity() * 2
-            + self.temps.capacity() * 4
-            + self.heads.capacity() * 4
-            + self.keys.capacity() * 8
-            + self.dirty.capacity()
+        self.table.memory_bytes()
+            + self
+                .migration
+                .as_ref()
+                .map_or(0, |m| m.target.memory_bytes())
             + self.arena.memory_bytes()
     }
 
-    /// Bytes on the lookup-critical path only (fingerprint array).
+    /// Bytes on the lookup-critical path only (fingerprint arrays).
     pub fn hot_bytes(&self) -> usize {
-        self.fps.capacity() * 2
-    }
-
-    #[inline]
-    fn slot_range(&self, bucket: usize) -> std::ops::Range<usize> {
-        bucket * self.cfg.slots..(bucket + 1) * self.cfg.slots
+        self.table.fps.capacity() * 2
+            + self
+                .migration
+                .as_ref()
+                .map_or(0, |m| m.target.fps.capacity() * 2)
     }
 
     // ---------------------------------------------------------------
@@ -256,58 +626,81 @@ impl CuckooFilter {
     /// Insert an entity (by key) with all its forest addresses.
     ///
     /// Duplicate keys are rejected (`false`); use [`push_address`] to grow
-    /// an existing entry. Expands automatically, so insertion of a fresh
-    /// key always succeeds.
+    /// an existing entry. Crossing the load threshold starts an
+    /// *incremental* doubling migration (see the module docs); insertion
+    /// of a fresh key always succeeds, and every insert also drives one
+    /// bounded migration step so growth amortizes across the write load.
     ///
     /// [`push_address`]: CuckooFilter::push_address
     pub fn insert(&mut self, key: u64, addrs: &[EntityAddress]) -> bool {
         // Exact duplicate check on the cold keys — a fingerprint-only
         // check would misreject fresh keys on fingerprint collisions.
+        // Rejected duplicates still drive a step, keeping the "every
+        // mutating call advances a pending migration" contract.
         if self.contains_exact(key) {
+            self.migrate_buckets(self.step_buckets());
             return false;
         }
         if self.load_factor_after_insert() > self.cfg.load_threshold {
-            self.expand();
+            if self.migration.is_some() {
+                // Inserts outran the incremental steps (possible only
+                // when the write burst exceeds step_size × old buckets):
+                // finish this doubling before starting the next.
+                self.migrate_buckets(usize::MAX);
+            }
+            self.start_migration();
         }
         let head = self.arena.build(addrs);
         self.place(key, 0, head);
         self.len += 1;
         self.stats.inserts += 1;
+        self.migrate_buckets(self.step_buckets());
         true
     }
 
     fn load_factor_after_insert(&self) -> f64 {
-        (self.len + 1) as f64 / (self.nbuckets * self.cfg.slots) as f64
+        (self.len + 1) as f64 / self.capacity_slots() as f64
     }
 
-    /// Place an entry, expanding until it fits. A failed kick chain
-    /// leaves the new entry placed and one displaced *victim* homeless
-    /// (`try_place_no_expand` hands it back); the victim — never the
-    /// table — is what gets re-placed after the doubling, so no entry is
-    /// ever dropped and no key is ever placed twice.
+    /// Place an entry into the active generation (the migration target
+    /// while one is in flight), growing until it fits. A failed kick
+    /// chain leaves the new entry placed and one displaced *victim*
+    /// homeless (`Table::try_place` hands it back); the victim — never
+    /// the table — is what gets re-placed after the growth, so no entry
+    /// is ever dropped and no key is ever placed twice.
     fn place(&mut self, key: u64, temp: u32, head: u32) {
         let mut cur = (key, temp, head);
         loop {
-            match self.try_place_no_expand(cur.0, cur.1, cur.2) {
+            let res = match &mut self.migration {
+                Some(m) => m.target.try_place(
+                    &self.cfg,
+                    &mut self.rng,
+                    &mut self.stats,
+                    cur.0,
+                    cur.1,
+                    cur.2,
+                ),
+                None => self.table.try_place(
+                    &self.cfg,
+                    &mut self.rng,
+                    &mut self.stats,
+                    cur.0,
+                    cur.1,
+                    cur.2,
+                ),
+            };
+            match res {
                 Ok(()) => return,
-                Err(homeless) => {
-                    cur = homeless;
-                    self.expand();
+                Err(victim) => {
+                    cur = victim;
+                    if self.migration.is_some() {
+                        self.grow_target();
+                    } else {
+                        self.start_migration();
+                    }
                 }
             }
         }
-    }
-
-    fn empty_slot(&self, bucket: usize) -> Option<usize> {
-        self.slot_range(bucket).find(|&s| self.fps[s] == 0)
-    }
-
-    fn write_slot(&mut self, s: usize, fp: u16, key: u64, temp: u32, head: u32) {
-        self.fps[s] = fp;
-        self.keys[s] = key;
-        *self.temps[s].get_mut() = temp;
-        self.heads[s] = head;
-        *self.dirty[s / self.cfg.slots].get_mut() = true;
     }
 
     // ---------------------------------------------------------------
@@ -315,36 +708,46 @@ impl CuckooFilter {
     // ---------------------------------------------------------------
 
     /// Membership probe by fingerprint only — the classic cuckoo-filter
-    /// query, subject to fingerprint false positives.
+    /// query, subject to fingerprint false positives. Checks both
+    /// generations while a migration is in flight.
     pub fn contains(&self, key: u64) -> bool {
-        let (fp, i1, i2) = self.probe(key);
-        bucket_pair(i1, i2).any(|b| self.find_fp(b, fp).is_some())
+        let in_table = |t: &Table| {
+            let (fp, i1, i2) = t.probe(key, self.cfg.fingerprint_bits);
+            bucket_pair(i1, i2).any(|b| t.find_fp(b, fp).is_some())
+        };
+        if let Some(m) = &self.migration {
+            if in_table(&m.target) {
+                return true;
+            }
+        }
+        in_table(&self.table)
     }
 
     /// Exact membership: fingerprint match confirmed against the stored
     /// key (cold path; used by insert's duplicate check and tests).
     pub fn contains_exact(&self, key: u64) -> bool {
-        self.find_exact(key).is_some()
+        self.find_exact_loc(key).is_some()
     }
 
-    /// Slot index of the exact key, if present.
-    #[inline]
-    fn find_exact(&self, key: u64) -> Option<usize> {
-        let (fp, i1, i2) = self.probe(key);
-        for b in bucket_pair(i1, i2) {
-            for s in self.slot_range(b) {
-                if self.fps[s] == fp && self.keys[s] == key {
-                    return Some(s);
-                }
+    /// Location of the exact key across both generations, if present.
+    /// An entry lives in exactly one generation at any instant (a
+    /// migration step drains and re-places atomically under `&mut`).
+    fn find_exact_loc(&self, key: u64) -> Option<Loc> {
+        if let Some(m) = &self.migration {
+            if let Some(s) = m.target.find_exact(key, self.cfg.fingerprint_bits)
+            {
+                return Some(Loc::Target(s));
             }
         }
-        None
+        self.table
+            .find_exact(key, self.cfg.fingerprint_bits)
+            .map(Loc::Main)
     }
 
     /// Lookup: on a fingerprint hit, bump the entity's temperature and
     /// return its block-list head (paper §3.4). Probes at most two
-    /// buckets; within a bucket the scan is linear, which is what the
-    /// temperature ordering accelerates.
+    /// buckets per generation; within a bucket the scan is linear, which
+    /// is what the temperature ordering accelerates.
     pub fn lookup(&mut self, key: u64) -> Option<LookupHit> {
         self.lookup_shared(key)
     }
@@ -353,17 +756,29 @@ impl CuckooFilter {
     /// concurrent read path. The structure is not mutated: the
     /// temperature bump is a relaxed atomic increment and the bucket's
     /// dirty flag a relaxed store, so any number of threads may call this
-    /// concurrently (each under a shard read lock when sharded).
+    /// concurrently (each under a shard read lock when sharded). While a
+    /// migration is in flight the target generation is probed first,
+    /// then the un-drained remainder of the old table — a reader never
+    /// waits on migration progress.
     pub fn lookup_shared(&self, key: u64) -> Option<LookupHit> {
         self.lookups.fetch_add(1, Relaxed);
-        let (fp, i1, i2) = self.probe(key);
+        if let Some(m) = &self.migration {
+            if let Some(hit) = self.lookup_in(&m.target, key) {
+                return Some(hit);
+            }
+        }
+        self.lookup_in(&self.table, key)
+    }
+
+    fn lookup_in(&self, t: &Table, key: u64) -> Option<LookupHit> {
+        let (fp, i1, i2) = t.probe(key, self.cfg.fingerprint_bits);
         for b in bucket_pair(i1, i2) {
-            if let Some(s) = self.find_fp_counting(b, fp) {
+            if let Some(s) = t.find_fp_counting(b, fp, &self.slots_probed) {
                 // saturating atomic bump: never wraps hot counters to 0
-                let _ = self.temps[s]
-                    .fetch_update(Relaxed, Relaxed, |t| t.checked_add(1));
-                self.dirty[b].store(true, Relaxed);
-                return Some(LookupHit { head: self.heads[s] });
+                let _ =
+                    t.temps[s].fetch_update(Relaxed, Relaxed, |x| x.checked_add(1));
+                t.dirty[b].store(true, Relaxed);
+                return Some(LookupHit { head: t.heads[s] });
             }
         }
         None
@@ -382,309 +797,332 @@ impl CuckooFilter {
         self.arena.iter(hit.head)
     }
 
-    #[inline]
-    fn probe(&self, key: u64) -> (u16, usize, usize) {
-        let fp = fingerprint(key, self.cfg.fingerprint_bits);
-        let i1 = primary_index(key, self.nbuckets);
-        let i2 = alt_index(i1, fp, self.nbuckets);
-        (fp, i1, i2)
-    }
-
-    /// One 64-bit load of a 4-slot bucket's fingerprints (the default
-    /// layout: 4 × u16 = one word). Requires `cfg.slots == 4`.
-    #[inline]
-    fn bucket_word(&self, bucket: usize) -> u64 {
-        debug_assert_eq!(self.cfg.slots, 4);
-        let base = bucket * 4;
-        debug_assert!(base + 4 <= self.fps.len());
-        // SAFETY: fps holds nbuckets*4 contiguous u16s; base+4 <= len.
-        unsafe { (self.fps.as_ptr().add(base) as *const u64).read_unaligned() }
-    }
-
-    /// SWAR scan of one 4-lane fingerprint word: returns the first slot
-    /// holding `fp` (if any before the first empty lane) and the number
-    /// of slots a linear scan would have probed — so temperature-sorting
-    /// statistics stay exact while the scan itself is branch-light.
-    ///
-    /// Buckets are left-packed (inserts fill the first hole, deletes
-    /// compact), so lanes at/after the first empty lane are all zero.
-    #[inline]
-    fn scan4(word: u64, fp: u16) -> (Option<usize>, u64) {
-        const LO: u64 = 0x0001_0001_0001_0001;
-        const HI: u64 = 0x8000_8000_8000_8000;
-        let pat = (fp as u64).wrapping_mul(LO); // broadcast fp to 4 lanes
-        let x = word ^ pat; // zero lane <=> fingerprint match
-        // first-zero-lane detection; the lowest flagged lane is exact
-        let hit = x.wrapping_sub(LO) & !x & HI;
-        let empty = word.wrapping_sub(LO) & !word & HI;
-        let hit_pos = (hit.trailing_zeros() / 16) as usize; // 4 if none
-        let empty_pos = (empty.trailing_zeros() / 16) as usize; // 4 if none
-        if hit != 0 && hit_pos < empty_pos {
-            (Some(hit_pos), hit_pos as u64 + 1)
-        } else {
-            // linear scan would probe up to and including the first
-            // empty slot, or the whole bucket
-            (None, (empty_pos + 1).min(4) as u64)
-        }
-    }
-
-    #[inline]
-    fn find_fp(&self, bucket: usize, fp: u16) -> Option<usize> {
-        if self.cfg.slots == 4 {
-            let (pos, _) = Self::scan4(self.bucket_word(bucket), fp);
-            return pos.map(|p| bucket * 4 + p);
-        }
-        for s in self.slot_range(bucket) {
-            if self.fps[s] == fp {
-                return Some(s);
-            }
-            if self.fps[s] == 0 {
-                return None; // left-packed: rest of the bucket is empty
-            }
-        }
-        None
-    }
-
-    /// Like `find_fp` but records how many slots were probed (the
-    /// quantity temperature sorting minimizes). Buckets are kept
-    /// left-packed (inserts fill the first empty slot, deletes compact),
-    /// so the scan terminates at the first empty slot.
-    #[inline]
-    fn find_fp_counting(&self, bucket: usize, fp: u16) -> Option<usize> {
-        if self.cfg.slots == 4 {
-            let (pos, probes) = Self::scan4(self.bucket_word(bucket), fp);
-            self.slots_probed.fetch_add(probes, Relaxed);
-            return pos.map(|p| bucket * 4 + p);
-        }
-        let base = bucket * self.cfg.slots;
-        for off in 0..self.cfg.slots {
-            self.slots_probed.fetch_add(1, Relaxed);
-            let cur = self.fps[base + off];
-            if cur == fp {
-                return Some(base + off);
-            }
-            if cur == 0 {
-                return None; // left-packed: rest of the bucket is empty
-            }
-        }
-        None
-    }
-
     // ---------------------------------------------------------------
     // Deletion (paper Algorithm 2)
     // ---------------------------------------------------------------
 
     /// Remove an entity by key. Exact (keys compared on the cold path to
-    /// avoid deleting a fingerprint-colliding neighbour). The entity's
-    /// block list is returned to the arena free list, so insert/delete
-    /// churn does not grow the arena. Returns whether an entry was
-    /// removed.
+    /// avoid deleting a fingerprint-colliding neighbour), in whichever
+    /// generation currently holds the entry. The entity's block list is
+    /// returned to the arena free list, so insert/delete churn does not
+    /// grow the arena. Also drives one bounded migration step. Returns
+    /// whether an entry was removed.
     pub fn delete(&mut self, key: u64) -> bool {
-        let Some(s) = self.find_exact(key) else {
+        let Some(loc) = self.find_exact_loc(key) else {
             return false;
         };
-        let b = s / self.cfg.slots;
-        self.arena.free_chain(self.heads[s]);
-        self.fps[s] = 0;
-        self.keys[s] = 0;
-        *self.temps[s].get_mut() = 0;
-        self.heads[s] = NIL;
-        self.compact_bucket(b, s);
-        *self.dirty[b].get_mut() = true;
-        self.len -= 1;
-        true
-    }
-
-    /// Restore the left-packed invariant after clearing slot `hole`:
-    /// shift the occupied suffix of the bucket one slot left (order of
-    /// survivors — and thus temperature order — is preserved).
-    fn compact_bucket(&mut self, bucket: usize, hole: usize) {
-        let end = (bucket + 1) * self.cfg.slots;
-        let mut dst = hole;
-        for src in hole + 1..end {
-            if self.fps[src] == 0 {
-                break;
+        let (t, s): (&mut Table, usize) = match loc {
+            Loc::Main(s) => (&mut self.table, s),
+            Loc::Target(s) => {
+                (&mut self.migration.as_mut().expect("migration").target, s)
             }
-            self.swap_slots(dst, src);
-            dst += 1;
-        }
+        };
+        let b = s / t.slots;
+        let head = t.heads[s];
+        t.clear_slot(s);
+        t.compact_bucket(b, s);
+        *t.dirty[b].get_mut() = true;
+        self.arena.free_chain(head);
+        self.len -= 1;
+        self.migrate_buckets(self.step_buckets());
+        true
     }
 
     /// Append a new forest address to an existing entity (dynamic update
-    /// path: a new tree mentions a known entity). Exact-match on key.
+    /// path: a new tree mentions a known entity). Exact-match on key;
+    /// also drives one bounded migration step.
     pub fn push_address(&mut self, key: u64, addr: EntityAddress) -> bool {
-        let Some(s) = self.find_exact(key) else {
+        let Some(loc) = self.find_exact_loc(key) else {
             return false;
         };
-        self.heads[s] = self.arena.push(self.heads[s], addr);
+        match loc {
+            Loc::Main(s) => {
+                self.table.heads[s] = self.arena.push(self.table.heads[s], addr);
+            }
+            Loc::Target(s) => {
+                let m = self.migration.as_mut().expect("migration");
+                m.target.heads[s] = self.arena.push(m.target.heads[s], addr);
+            }
+        }
+        self.migrate_buckets(self.step_buckets());
         true
     }
 
     // ---------------------------------------------------------------
-    // Maintenance: adaptive temperature sorting (§3.1) + expansion
+    // Incremental expansion (paper §1 "double expansion", PR-2 stepwise)
+    // ---------------------------------------------------------------
+
+    /// True while a doubling migration is in flight.
+    pub fn migration_pending(&self) -> bool {
+        self.migration.is_some()
+    }
+
+    /// Drive a pending migration forward by one bounded step (up to
+    /// [`CuckooConfig::migration_step_buckets`] old buckets; `0` = all of
+    /// them). Returns `true` while a migration remains pending. The
+    /// sharded wrapper calls this between reader turns so no reader ever
+    /// waits behind more than one step.
+    pub fn migrate_step(&mut self) -> bool {
+        self.migrate_buckets(self.step_buckets())
+    }
+
+    #[inline]
+    fn step_buckets(&self) -> usize {
+        if self.cfg.migration_step_buckets == 0 {
+            usize::MAX
+        } else {
+            self.cfg.migration_step_buckets
+        }
+    }
+
+    /// Begin a doubling: allocate the target generation aside. Entries
+    /// move later, in bounded steps.
+    fn start_migration(&mut self) {
+        debug_assert!(self.migration.is_none(), "doubling already in flight");
+        self.stats.expansions += 1;
+        self.migration = Some(Box::new(Migration {
+            target: Table::new(self.table.nbuckets * 2, self.cfg.slots),
+            next_bucket: 0,
+        }));
+    }
+
+    /// Drain up to `max` not-yet-migrated old buckets into the target,
+    /// re-hashing each live entry from its stored key (paper §1:
+    /// "original elements are re-hashed and migrated"). Temperatures and
+    /// block-list heads move with their entries; the arena is shared and
+    /// untouched. Each bucket is drained and re-placed within this one
+    /// exclusive borrow, so an entry is in exactly one generation at
+    /// every observable instant. Returns `true` while the migration
+    /// remains pending afterwards.
+    fn migrate_buckets(&mut self, max: usize) -> bool {
+        let Some(m) = self.migration.as_ref() else {
+            return false;
+        };
+        let total = self.table.nbuckets;
+        let start = m.next_bucket;
+        let end = start.saturating_add(max.max(1)).min(total);
+        self.stats.migration_steps += 1;
+        let mut moved: Vec<Entry> = Vec::new();
+        for s in start * self.table.slots..end * self.table.slots {
+            if self.table.fps[s] != 0 {
+                moved.push((
+                    self.table.keys[s],
+                    self.table.temps[s].load(Relaxed),
+                    self.table.heads[s],
+                ));
+                self.table.clear_slot(s);
+            }
+        }
+        for e in moved {
+            self.place_in_target(e);
+        }
+        let m = self.migration.as_mut().expect("migration");
+        m.next_bucket = end;
+        if end == total {
+            let done = *self.migration.take().expect("migration");
+            self.table = done.target;
+            return false;
+        }
+        true
+    }
+
+    /// Re-home one drained entry into the migration target, growing the
+    /// target on a (vanishingly rare) kick storm.
+    fn place_in_target(&mut self, mut cur: Entry) {
+        loop {
+            let m = self.migration.as_mut().expect("migration");
+            match m.target.try_place(
+                &self.cfg,
+                &mut self.rng,
+                &mut self.stats,
+                cur.0,
+                cur.1,
+                cur.2,
+            ) {
+                Ok(()) => return,
+                Err(victim) => {
+                    cur = victim;
+                    self.grow_target();
+                }
+            }
+        }
+    }
+
+    /// Replace the migration target with one twice its size, replaying
+    /// the target's live set (snapshotted once, up front) into the fresh
+    /// table — the PR-1 snapshot-and-replay guarantee, per generation: a
+    /// collision storm discards only the partial target, never an entry.
+    /// The old table and its drain cursor are untouched.
+    fn grow_target(&mut self) {
+        let (live, mut nbuckets) = {
+            let t = &self.migration.as_ref().expect("migration").target;
+            (t.collect_live(), t.nbuckets * 2)
+        };
+        loop {
+            self.stats.expansions += 1;
+            let mut fresh = Table::new(nbuckets, self.cfg.slots);
+            let mut ok = true;
+            for &(key, temp, head) in &live {
+                if fresh
+                    .try_place(
+                        &self.cfg,
+                        &mut self.rng,
+                        &mut self.stats,
+                        key,
+                        temp,
+                        head,
+                    )
+                    .is_err()
+                {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                self.migration.as_mut().expect("migration").target = fresh;
+                return;
+            }
+            nbuckets *= 2;
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Maintenance: adaptive temperature sorting (§3.1), epoch-style
     // ---------------------------------------------------------------
 
     /// Re-sort dirty buckets by descending temperature ("for each bucket,
-    /// if it is free, sort" — we run it between query rounds, exactly how
-    /// the paper's experiment uses idle time). No-op when the ablation
-    /// switch `sort_by_temperature` is off.
+    /// if it is free, sort" — run between query rounds, exactly how the
+    /// paper's experiment uses idle time), first draining any pending
+    /// migration. This is the monolithic single-owner path; concurrent
+    /// callers should prefer the bounded-hold pair
+    /// [`plan_maintenance`](CuckooFilter::plan_maintenance) /
+    /// [`apply_bucket_plan`](CuckooFilter::apply_bucket_plan), which is
+    /// what [`crate::filter::sharded::ShardedCuckooFilter::maintain`]
+    /// uses. Sorting is a no-op when the ablation switch
+    /// `sort_by_temperature` is off (migration still drains).
     pub fn maintain(&mut self) {
+        self.migrate_buckets(usize::MAX);
         if !self.cfg.sort_by_temperature {
             return;
         }
-        for b in 0..self.nbuckets {
-            if *self.dirty[b].get_mut() {
-                self.sort_bucket(b);
-                *self.dirty[b].get_mut() = false;
+        for b in 0..self.table.nbuckets {
+            if *self.table.dirty[b].get_mut() {
+                self.table.sort_bucket(b);
+                *self.table.dirty[b].get_mut() = false;
             }
         }
     }
 
-    /// Insertion-sort one bucket's slots: occupied before empty, higher
-    /// temperature first. Buckets have ≤ 8 slots, so insertion sort wins.
-    fn sort_bucket(&mut self, bucket: usize) {
-        let base = bucket * self.cfg.slots;
-        let n = self.cfg.slots;
-        for i in 1..n {
-            let mut j = i;
-            while j > 0 && self.slot_less(base + j - 1, base + j) {
-                self.swap_slots(base + j - 1, base + j);
-                j -= 1;
+    /// Epoch-style maintenance, read phase: for every dirty bucket of the
+    /// primary table, snapshot its content and compute the
+    /// temperature-sorted slot order — entirely through `&self`, so it
+    /// runs under a shard *read* lock with lookups proceeding in
+    /// parallel. Returns no plans while a migration is in flight
+    /// (migration steps take priority; buckets stay dirty and are planned
+    /// on the next round) or when sorting is ablated off.
+    pub fn plan_maintenance(&self) -> Vec<BucketPlan> {
+        if !self.cfg.sort_by_temperature || self.migration.is_some() {
+            return Vec::new();
+        }
+        let t = &self.table;
+        let mut plans = Vec::new();
+        for b in 0..t.nbuckets {
+            if !t.dirty[b].load(Relaxed) {
+                continue;
+            }
+            let seen: Vec<(u16, u64, u32)> = t
+                .slot_range(b)
+                .map(|s| (t.fps[s], t.keys[s], t.heads[s]))
+                .collect();
+            let temps: Vec<u32> =
+                t.slot_range(b).map(|s| t.temps[s].load(Relaxed)).collect();
+            let mut order: Vec<usize> = (0..seen.len()).collect();
+            // stable ascending sort on the shared key = occupied first,
+            // hotter first, plan-time order on ties
+            order.sort_by_key(|&i| slot_rank(seen[i].0, temps[i]));
+            plans.push(BucketPlan { bucket: b, seen, order });
+        }
+        plans
+    }
+
+    /// Epoch-style maintenance, write phase: swap one planned bucket in.
+    /// Validates that the bucket still matches the plan's structural
+    /// snapshot (fingerprints, keys, heads — temperatures are allowed to
+    /// have drifted and are carried over at their *current* values); a
+    /// bucket mutated since planning is left untouched **and dirty**, so
+    /// the next round re-plans it. Returns whether the swap was applied.
+    pub fn apply_bucket_plan(&mut self, plan: &BucketPlan) -> bool {
+        if self.migration.is_some() {
+            return false; // table generations changed; plan is stale
+        }
+        let t = &mut self.table;
+        if plan.bucket >= t.nbuckets
+            || plan.seen.len() != t.slots
+            || plan.order.len() != t.slots
+        {
+            return false;
+        }
+        let base = plan.bucket * t.slots;
+        for (off, &(fp, key, head)) in plan.seen.iter().enumerate() {
+            if t.fps[base + off] != fp
+                || t.keys[base + off] != key
+                || t.heads[base + off] != head
+            {
+                return false; // stale: bucket mutated since the plan
             }
         }
-    }
-
-    /// Ordering: occupied (fp != 0) outranks empty; then temperature desc.
-    #[inline]
-    fn slot_less(&self, a: usize, b: usize) -> bool {
-        let occ_a = self.fps[a] != 0;
-        let occ_b = self.fps[b] != 0;
-        match (occ_a, occ_b) {
-            (false, true) => true,
-            (true, true) => {
-                self.temps[a].load(Relaxed) < self.temps[b].load(Relaxed)
-            }
-            _ => false,
-        }
-    }
-
-    #[inline]
-    fn swap_slots(&mut self, a: usize, b: usize) {
-        self.fps.swap(a, b);
-        self.keys.swap(a, b);
-        self.temps.swap(a, b);
-        self.heads.swap(a, b);
-    }
-
-    /// Every live entry currently in the table.
-    fn collect_live(&self) -> Vec<Entry> {
-        let mut live = Vec::with_capacity(self.len);
-        for s in 0..self.fps.len() {
-            if self.fps[s] != 0 {
-                live.push((
-                    self.keys[s],
-                    self.temps[s].load(Relaxed),
-                    self.heads[s],
-                ));
-            }
-        }
-        live
-    }
-
-    /// Replace the table arrays with empty ones of `nbuckets` buckets.
-    fn reset_table(&mut self, nbuckets: usize) {
-        let slots = nbuckets * self.cfg.slots;
-        self.fps = vec![0; slots];
-        self.keys = vec![0; slots];
-        self.temps = std::iter::repeat_with(|| AtomicU32::new(0))
-            .take(slots)
+        let temps: Vec<u32> = (0..t.slots)
+            .map(|off| t.temps[base + off].load(Relaxed))
             .collect();
-        self.heads = vec![NIL; slots];
-        self.dirty = std::iter::repeat_with(|| AtomicBool::new(false))
-            .take(nbuckets)
-            .collect();
-        self.nbuckets = nbuckets;
+        for (j, &o) in plan.order.iter().enumerate() {
+            let (fp, key, head) = plan.seen[o];
+            t.fps[base + j] = fp;
+            t.keys[base + j] = key;
+            t.heads[base + j] = head;
+            *t.temps[base + j].get_mut() = temps[o];
+        }
+        *t.dirty[plan.bucket].get_mut() = false;
+        true
     }
 
-    /// Double the bucket count and migrate every live entry by re-hashing
-    /// its stored key (paper §1: "double expansion ... re-hashed and
-    /// migrated"). Temperatures and block lists move with their entries;
-    /// the arena is shared and untouched.
-    ///
-    /// The live set is snapshotted **once**, up front, and each doubling
-    /// attempt replays it into a fresh table. A migration collision storm
-    /// (vanishingly rare) therefore discards only the partial target
-    /// table and retries at double the size — it can never drop the
-    /// unmigrated suffix or an in-flight kick victim, which the previous
-    /// in-place retry loop did.
-    fn expand(&mut self) {
-        let live = self.collect_live();
-        let mut new_n = self.nbuckets * 2;
-        loop {
-            self.reset_table(new_n);
-            self.stats.expansions += 1;
-            let ok = live
-                .iter()
-                .all(|&(k, t, h)| self.try_place_no_expand(k, t, h).is_ok());
-            if ok {
-                return;
-            }
-            new_n *= 2;
-        }
-    }
-
-    /// Place without expanding. On a failed kick chain the input entry is
-    /// already in the table (the first write of the chain) and the final
-    /// displaced victim is handed back as `Err` for the caller to re-home
-    /// — nothing is silently dropped.
-    fn try_place_no_expand(
-        &mut self,
-        key: u64,
-        temp: u32,
-        head: u32,
-    ) -> Result<(), Entry> {
-        let fp = fingerprint(key, self.cfg.fingerprint_bits);
-        let i1 = primary_index(key, self.nbuckets);
-        let i2 = alt_index(i1, fp, self.nbuckets);
-        for b in bucket_pair(i1, i2) {
-            if let Some(s) = self.empty_slot(b) {
-                self.write_slot(s, fp, key, temp, head);
-                return Ok(());
-            }
-        }
-        let mut i = if self.rng.chance(0.5) { i1 } else { i2 };
-        let mut cur = (fp, key, temp, head);
-        for _ in 0..self.cfg.max_kicks {
-            // evict a random resident entry
-            let s = i * self.cfg.slots + self.rng.range(0, self.cfg.slots);
-            let victim = (
-                self.fps[s],
-                self.keys[s],
-                self.temps[s].load(Relaxed),
-                self.heads[s],
-            );
-            self.write_slot(s, cur.0, cur.1, cur.2, cur.3);
-            cur = victim;
-            self.stats.kicks += 1;
-
-            i = alt_index(i, cur.0, self.nbuckets);
-            if let Some(s2) = self.empty_slot(i) {
-                self.write_slot(s2, cur.0, cur.1, cur.2, cur.3);
-                return Ok(());
-            }
-        }
-        Err((cur.1, cur.2, cur.3))
-    }
+    // ---------------------------------------------------------------
+    // Test / bench helpers
+    // ---------------------------------------------------------------
 
     /// Temperature of a key (exact match), if present. Test/bench helper.
     pub fn temperature(&self, key: u64) -> Option<u32> {
-        self.find_exact(key).map(|s| self.temps[s].load(Relaxed))
+        self.find_exact_loc(key).map(|loc| {
+            let (t, s) = match loc {
+                Loc::Main(s) => (&self.table, s),
+                Loc::Target(s) => {
+                    (&self.migration.as_ref().expect("migration").target, s)
+                }
+            };
+            t.temps[s].load(Relaxed)
+        })
     }
 
     /// Position (0-based) of the key's slot within its bucket — lower is
     /// cheaper to find. Exposes the effect of temperature sorting.
     pub fn bucket_position(&self, key: u64) -> Option<usize> {
-        self.find_exact(key).map(|s| s % self.cfg.slots)
+        self.find_exact_loc(key).map(|loc| match loc {
+            Loc::Main(s) | Loc::Target(s) => s % self.cfg.slots,
+        })
+    }
+
+    /// Number of slots, across both generations, whose stored key is
+    /// exactly `key` — 1 for any present entity. The migration proptests
+    /// use this to prove a step boundary never double-places an entry.
+    pub fn occurrences(&self, key: u64) -> usize {
+        let count = |t: &Table| {
+            t.fps
+                .iter()
+                .zip(&t.keys)
+                .filter(|&(&fp, &k)| fp != 0 && k == key)
+                .count()
+        };
+        count(&self.table)
+            + self.migration.as_ref().map_or(0, |m| count(&m.target))
     }
 }
 
@@ -861,6 +1299,98 @@ mod tests {
     }
 
     #[test]
+    fn incremental_expansion_is_stepwise_and_lossless() {
+        // 64 buckets × 4 slots = 256 slots: the 242nd insert crosses the
+        // 0.94 threshold and starts a doubling. At one bucket per step
+        // the remaining ~59 inserts cannot finish draining 64 buckets,
+        // so the filter provably serves from both generations.
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 64,
+            migration_step_buckets: 1,
+            ..CuckooConfig::default()
+        });
+        let n = 300u64;
+        for i in 0..n {
+            assert!(cf.insert(key(i), &addrs(1)), "insert {i}");
+        }
+        assert!(cf.migration_pending(), "migration should still be in flight");
+        for i in 0..n {
+            assert!(cf.lookup(key(i)).is_some(), "{i} invisible mid-migration");
+            assert_eq!(cf.occurrences(key(i)), 1, "{i} double-placed mid-migration");
+        }
+        // drive to completion in bounded steps; must terminate
+        let mut steps = 0;
+        while cf.migrate_step() {
+            steps += 1;
+            assert!(steps <= 65, "migration did not terminate");
+        }
+        assert!(!cf.migration_pending());
+        for i in 0..n {
+            assert!(cf.lookup(key(i)).is_some(), "{i} lost after migration");
+            assert_eq!(cf.occurrences(key(i)), 1, "{i} double-placed");
+        }
+        assert_eq!(cf.len(), n as usize);
+    }
+
+    #[test]
+    fn step_zero_migrates_monolithically() {
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 16,
+            migration_step_buckets: 0,
+            ..CuckooConfig::default()
+        });
+        for i in 0..1000u64 {
+            assert!(cf.insert(key(i), &addrs(1)));
+            assert!(
+                !cf.migration_pending(),
+                "step 0 must complete the doubling within the insert"
+            );
+        }
+        assert!(cf.stats().expansions >= 1);
+    }
+
+    #[test]
+    fn maintain_completes_pending_migration() {
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 64,
+            migration_step_buckets: 1,
+            ..CuckooConfig::default()
+        });
+        for i in 0..300u64 {
+            assert!(cf.insert(key(i), &addrs(1)));
+        }
+        assert!(cf.migration_pending());
+        cf.maintain();
+        assert!(!cf.migration_pending(), "maintain drains the migration");
+        for i in 0..300u64 {
+            assert!(cf.lookup(key(i)).is_some(), "{i} lost");
+        }
+    }
+
+    #[test]
+    fn delete_and_push_work_mid_migration() {
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 64,
+            migration_step_buckets: 1,
+            ..CuckooConfig::default()
+        });
+        for i in 0..300u64 {
+            assert!(cf.insert(key(i), &addrs(1)));
+        }
+        assert!(cf.migration_pending());
+        // key(0) was inserted long before the doubling started, key(299)
+        // after — between them the two generations are both exercised.
+        assert!(cf.delete(key(0)));
+        assert!(!cf.contains_exact(key(0)));
+        assert!(cf.push_address(key(299), EntityAddress::new(9, 9)));
+        cf.maintain();
+        assert!(!cf.contains_exact(key(0)), "delete survives the drain");
+        let hit = cf.lookup(key(299)).unwrap();
+        assert_eq!(cf.addresses(hit).len(), 2, "pushed address survives");
+        assert_eq!(cf.len(), 299);
+    }
+
+    #[test]
     fn push_address_grows_list() {
         let mut cf = CuckooFilter::default();
         cf.insert(key(1), &addrs(2));
@@ -895,6 +1425,65 @@ mod tests {
     }
 
     #[test]
+    fn plan_apply_sorts_hot_bucket() {
+        // The epoch-style pair must reproduce maintain()'s result: plan
+        // through &self, swap through a brief &mut.
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 1,
+            slots: 4,
+            load_threshold: 1.0,
+            ..CuckooConfig::default()
+        });
+        let (a, b, c) = (key(10), key(20), key(30));
+        cf.insert(a, &addrs(1));
+        cf.insert(b, &addrs(1));
+        cf.insert(c, &addrs(1));
+        for _ in 0..10 {
+            cf.lookup(c);
+        }
+        let plans = cf.plan_maintenance();
+        assert_eq!(plans.len(), 1, "one dirty bucket planned");
+        assert!(cf.apply_bucket_plan(&plans[0]), "fresh plan applies");
+        assert_eq!(cf.bucket_position(c), Some(0), "hottest first");
+        assert!(cf.contains_exact(a) && cf.contains_exact(b));
+        assert!(
+            cf.plan_maintenance().is_empty(),
+            "apply cleared the dirty flag"
+        );
+    }
+
+    #[test]
+    fn stale_bucket_plan_is_rejected() {
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 1,
+            slots: 4,
+            load_threshold: 1.0,
+            ..CuckooConfig::default()
+        });
+        cf.insert(key(10), &addrs(1));
+        cf.insert(key(20), &addrs(1));
+        for _ in 0..5 {
+            cf.lookup(key(20));
+        }
+        let plans = cf.plan_maintenance();
+        assert_eq!(plans.len(), 1);
+        // a writer mutates the bucket between plan and apply
+        cf.insert(key(30), &addrs(1));
+        assert!(
+            !cf.apply_bucket_plan(&plans[0]),
+            "structurally stale plan must be rejected"
+        );
+        assert!(
+            !cf.plan_maintenance().is_empty(),
+            "rejected bucket stays dirty for the next round"
+        );
+        // nothing was corrupted by the rejected swap
+        for k in [key(10), key(20), key(30)] {
+            assert!(cf.contains_exact(k));
+        }
+    }
+
+    #[test]
     fn sorting_disabled_is_a_noop() {
         let mut cf = CuckooFilter::new(CuckooConfig {
             initial_buckets: 1,
@@ -912,6 +1501,7 @@ mod tests {
         }
         cf.maintain();
         assert_eq!(cf.bucket_position(b), before, "no reorder when disabled");
+        assert!(cf.plan_maintenance().is_empty(), "no plans when disabled");
     }
 
     #[test]
@@ -982,7 +1572,11 @@ mod tests {
     }
 
     #[test]
-    fn block_cap_constant_sane() {
+    fn default_config_is_incremental() {
+        assert!(
+            CuckooConfig::default().migration_step_buckets > 0,
+            "incremental migration is the default; 0 is the monolithic opt-out"
+        );
         assert!(crate::filter::blocklist::BLOCK_CAP >= 4);
     }
 }

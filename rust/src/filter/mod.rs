@@ -11,7 +11,7 @@ pub mod tree_bloom;
 
 pub use blocklist::{BlockArena, BLOCK_CAP, NIL};
 pub use bloom::BloomFilter;
-pub use cuckoo::{CuckooConfig, CuckooFilter, CuckooStats, LookupHit};
+pub use cuckoo::{BucketPlan, CuckooConfig, CuckooFilter, CuckooStats, LookupHit};
 pub use fingerprint::entity_key;
 pub use sharded::ShardedCuckooFilter;
 pub use tree_bloom::BloomForest;

@@ -8,7 +8,9 @@
 //! *high* bits of the secondary hash ([`shard_index`]), independent of
 //! the bits that pick the in-shard bucket and the fingerprint, so load
 //! spreads uniformly and shards never need to coordinate: an operation
-//! touches exactly one shard.
+//! touches exactly one shard. The configured `initial_buckets` is split
+//! across shards with *ceiling* division, so total capacity is never
+//! below what was configured.
 //!
 //! # Locking invariants
 //!
@@ -16,10 +18,33 @@
 //!   [`CuckooFilter::lookup_shared`] works through `&self`: temperature
 //!   bumps are relaxed `AtomicU32` increments and dirty-bucket flags
 //!   relaxed `AtomicBool` stores, so any number of readers proceed in
-//!   parallel (per shard and across shards).
-//! * **Structural mutations take the shard write lock**: insert, delete,
-//!   push_address, and `maintain` (per-shard bucket re-sort). A write
-//!   lock on one shard never blocks readers of another.
+//!   parallel (per shard and across shards). This holds **during
+//!   expansion too**: a shard mid-doubling serves reads from both table
+//!   generations through the same read lock.
+//! * **Structural mutations take the shard write lock, but only for
+//!   bounded holds.** Insert, delete and push_address each do one
+//!   key's work plus at most one migration step
+//!   ([`CuckooConfig::migration_step_buckets`] buckets). A shard
+//!   expansion is *never* executed as one long write-locked rebuild:
+//!   the doubled table is built aside and live entries migrate
+//!   range-by-range, so a reader arriving mid-growth waits for at most
+//!   one step, not a full-table migration. A write lock on one shard
+//!   never blocks readers of another.
+//! * **Maintenance never holds a write lock across the shard.**
+//!   [`maintain`](ShardedCuckooFilter::maintain) first drains any
+//!   pending migration one step per write-lock acquisition, then runs
+//!   the temperature re-sort epoch-style: dirty buckets are snapshotted
+//!   and their sorted orders computed under a *read* lock
+//!   ([`CuckooFilter::plan_maintenance`]), and each rebuilt bucket is
+//!   swapped in under a short write lock that validates the bucket is
+//!   structurally unchanged ([`CuckooFilter::apply_bucket_plan`]); a
+//!   bucket that changed in between simply stays dirty for the next
+//!   round. Readers therefore interleave with maintenance at bucket
+//!   granularity.
+//! * **Readers help migrations finish, without ever blocking.** After a
+//!   lookup observes a pending migration, it opportunistically
+//!   `try_write`s one bounded step; if the lock is contended the attempt
+//!   is abandoned — whoever holds it is making progress already.
 //! * **Block-list reads happen under the same read-lock hold** as the
 //!   lookup that produced the head — addresses are copied out before the
 //!   guard drops, so a concurrent delete/expand on the shard can never
@@ -38,6 +63,10 @@ use crate::filter::cuckoo::{CuckooConfig, CuckooFilter, CuckooStats};
 use crate::filter::fingerprint::shard_index;
 use crate::forest::EntityAddress;
 
+/// Planned bucket swaps applied per write-lock acquisition during
+/// [`ShardedCuckooFilter::maintain`] — the bound on a maintenance hold.
+const MAINTAIN_SWAP_BATCH: usize = 32;
+
 /// A Cuckoo Filter partitioned across independent, individually locked
 /// shards. All operations take `&self`; see the module docs for which
 /// take read vs write locks.
@@ -48,15 +77,16 @@ pub struct ShardedCuckooFilter {
 
 impl ShardedCuckooFilter {
     /// Build with `nshards` shards (rounded up to a power of two). The
-    /// configured `initial_buckets` is the *total* across shards, so a
-    /// sharded and an unsharded filter of the same config start at the
-    /// same capacity.
+    /// configured `initial_buckets` is the *total* across shards, split
+    /// with ceiling division so the sharded filter never starts with
+    /// less capacity than configured (floor division used to shrink
+    /// e.g. 10 buckets over 4 shards to 8 and force earlier expansions).
     pub fn new(cfg: CuckooConfig, nshards: usize) -> Self {
         let n = nshards.max(1).next_power_of_two();
         let shards = (0..n)
             .map(|i| {
                 RwLock::new(CuckooFilter::new(CuckooConfig {
-                    initial_buckets: (cfg.initial_buckets / n).max(1),
+                    initial_buckets: cfg.initial_buckets.div_ceil(n).max(1),
                     // decorrelate eviction choices across shards
                     seed: cfg.seed ^ (0x9E37_79B9_7F4A_7C15u64
                         .wrapping_mul(i as u64 + 1)),
@@ -77,8 +107,9 @@ impl ShardedCuckooFilter {
         &self.shards[shard_index(key, self.shards.len())]
     }
 
-    /// Insert an entity with its addresses (shard write lock). Duplicate
-    /// keys are rejected, matching [`CuckooFilter::insert`].
+    /// Insert an entity with its addresses (shard write lock; bounded —
+    /// one placement plus at most one migration step). Duplicate keys
+    /// are rejected, matching [`CuckooFilter::insert`].
     pub fn insert(&self, key: u64, addrs: &[EntityAddress]) -> bool {
         self.shard(key).write().unwrap().insert(key, addrs)
     }
@@ -105,18 +136,34 @@ impl ShardedCuckooFilter {
 
     /// Lookup: append all addresses of `key` to `out` and return whether
     /// the entity was found. Takes only the shard **read** lock — the
-    /// concurrent serving hot path. Addresses are copied out under the
-    /// guard, so the returned data is consistent even if a writer
-    /// reshapes the shard immediately after.
+    /// concurrent serving hot path — even while the shard is mid-
+    /// expansion (both table generations are probed under the same
+    /// guard). Addresses are copied out under the guard, so the returned
+    /// data is consistent even if a writer reshapes the shard
+    /// immediately after. If a migration is pending, one bounded step is
+    /// driven opportunistically through `try_write` after the guard
+    /// drops — never blocking this or any other reader.
     pub fn lookup_into(&self, key: u64, out: &mut Vec<EntityAddress>) -> bool {
-        let shard = self.shard(key).read().unwrap();
-        match shard.lookup_shared(key) {
-            Some(hit) => {
-                out.extend(shard.addresses_iter(hit));
-                true
+        let lock = self.shard(key);
+        let (found, migrating) = {
+            let shard = lock.read().unwrap();
+            let found = match shard.lookup_shared(key) {
+                Some(hit) => {
+                    out.extend(shard.addresses_iter(hit));
+                    true
+                }
+                None => false,
+            };
+            (found, shard.migration_pending())
+        };
+        if migrating {
+            // Non-blocking help: a failed try_write means another thread
+            // holds the lock and is therefore already making progress.
+            if let Ok(mut shard) = lock.try_write() {
+                shard.migrate_step();
             }
-            None => false,
         }
+        found
     }
 
     /// Lookup returning a fresh `Vec` (`None` on miss). Read lock only.
@@ -130,12 +177,43 @@ impl ShardedCuckooFilter {
         self.shard(key).read().unwrap().temperature(key)
     }
 
-    /// Re-sort dirty buckets by temperature, one shard at a time (shard
-    /// write lock). Readers of other shards are never blocked, and each
-    /// shard is writer-locked only for its own sort.
+    /// Position of the key's slot within its bucket (test/bench helper;
+    /// shard read lock).
+    pub fn bucket_position(&self, key: u64) -> Option<usize> {
+        self.shard(key).read().unwrap().bucket_position(key)
+    }
+
+    /// True while any shard has a doubling migration in flight
+    /// (bench/test observability).
+    pub fn any_migration_pending(&self) -> bool {
+        self.shards
+            .iter()
+            .any(|s| s.read().unwrap().migration_pending())
+    }
+
+    /// Maintenance, epoch-style: per shard, first drain any pending
+    /// expansion migration one bounded step per write-lock acquisition,
+    /// then re-sort dirty buckets by temperature — planned under the
+    /// shard *read* lock, swapped in validated-bucket-by-bucket under
+    /// short write locks ([`MAINTAIN_SWAP_BATCH`] buckets per hold).
+    /// Readers of the same shard interleave with every step, and
+    /// readers of other shards are never touched at all.
     pub fn maintain(&self) {
-        for shard in &self.shards {
-            shard.write().unwrap().maintain();
+        for lock in &self.shards {
+            // one read-locked check for the common no-migration case;
+            // the write-locked step loop releases the lock between
+            // steps (the guard is a temporary of the loop condition)
+            // and terminates via migrate_step's own pending signal
+            if lock.read().unwrap().migration_pending() {
+                while lock.write().unwrap().migrate_step() {}
+            }
+            let plans = lock.read().unwrap().plan_maintenance();
+            for chunk in plans.chunks(MAINTAIN_SWAP_BATCH) {
+                let mut shard = lock.write().unwrap();
+                for plan in chunk {
+                    shard.apply_bucket_plan(plan);
+                }
+            }
         }
     }
 
@@ -149,11 +227,20 @@ impl ShardedCuckooFilter {
         self.len() == 0
     }
 
+    /// Total capacity in slots across all shards (each shard reports its
+    /// active generation — the doubled target while migrating).
+    pub fn capacity_slots(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().capacity_slots())
+            .sum()
+    }
+
     /// Aggregate load factor: total entries / total slots.
     pub fn load_factor(&self) -> f64 {
         let (len, slots) = self.shards.iter().fold((0usize, 0usize), |acc, s| {
             let g = s.read().unwrap();
-            (acc.0 + g.len(), acc.1 + g.buckets() * g.slots_per_bucket())
+            (acc.0 + g.len(), acc.1 + g.capacity_slots())
         });
         if slots == 0 {
             0.0
@@ -199,6 +286,26 @@ mod tests {
         assert_eq!(cf.num_shards(), 4);
         let cf = ShardedCuckooFilter::new(CuckooConfig::default(), 0);
         assert_eq!(cf.num_shards(), 1);
+    }
+
+    #[test]
+    fn capacity_never_below_configured() {
+        // Regression for the floor-division sizing bug: 10 buckets over
+        // 4 shards used to yield 2 buckets/shard = 32 slots, below the
+        // configured 40. Ceiling division (then per-shard power-of-two
+        // rounding) must always reach at least the configured capacity.
+        for (buckets, shards) in [(10usize, 4usize), (1, 8), (1000, 16), (7, 2)]
+        {
+            let cfg =
+                CuckooConfig { initial_buckets: buckets, ..CuckooConfig::default() };
+            let cf = ShardedCuckooFilter::new(cfg, shards);
+            assert!(
+                cf.capacity_slots() >= buckets * cfg.slots,
+                "{buckets} buckets over {shards} shards: {} slots < {}",
+                cf.capacity_slots(),
+                buckets * cfg.slots
+            );
+        }
     }
 
     #[test]
@@ -268,6 +375,33 @@ mod tests {
     }
 
     #[test]
+    fn epoch_maintain_sorts_hot_entities_front() {
+        // Single shard, single bucket: the epoch-style plan/swap pass
+        // must produce the same ordering the monolithic sort did.
+        let cf = ShardedCuckooFilter::new(
+            CuckooConfig {
+                initial_buckets: 1,
+                slots: 4,
+                load_threshold: 1.0,
+                ..CuckooConfig::default()
+            },
+            1,
+        );
+        let (a, b, c) = (key(10), key(20), key(30));
+        cf.insert(a, &addrs(1));
+        cf.insert(b, &addrs(1));
+        cf.insert(c, &addrs(1));
+        let mut out = Vec::new();
+        for _ in 0..10 {
+            out.clear();
+            cf.lookup_into(c, &mut out);
+        }
+        cf.maintain();
+        assert_eq!(cf.bucket_position(c), Some(0), "hottest first");
+        assert!(cf.contains_exact(a) && cf.contains_exact(b));
+    }
+
+    #[test]
     fn stats_aggregate_across_shards() {
         let cf = ShardedCuckooFilter::new(CuckooConfig::default(), 4);
         for i in 0..100 {
@@ -300,5 +434,36 @@ mod tests {
         for i in 0..5000 {
             assert!(cf.lookup_collect(key(i)).is_some(), "lost {i}");
         }
+    }
+
+    #[test]
+    fn lookups_exact_while_migration_pending() {
+        // Tiny steps + no maintain: inserts leave a migration visibly in
+        // flight, and every key must stay exactly addressable through
+        // the read path while the shard serves from both generations.
+        let cf = ShardedCuckooFilter::new(
+            CuckooConfig {
+                initial_buckets: 64,
+                migration_step_buckets: 1,
+                ..CuckooConfig::default()
+            },
+            1,
+        );
+        let n = 300u64;
+        for i in 0..n {
+            assert!(cf.insert(key(i), &addrs(1)), "insert {i}");
+        }
+        assert!(cf.any_migration_pending(), "migration should be in flight");
+        for i in 0..n {
+            assert_eq!(
+                cf.lookup_collect(key(i)).as_deref(),
+                Some(&addrs(1)[..]),
+                "key {i} mid-migration"
+            );
+        }
+        // lookups opportunistically drove steps; drain the rest
+        cf.maintain();
+        assert!(!cf.any_migration_pending());
+        assert_eq!(cf.len(), n as usize);
     }
 }

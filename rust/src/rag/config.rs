@@ -53,7 +53,11 @@ pub struct RagConfig {
     pub topk_docs: usize,
     /// Bloom baselines: per-node filter FP rate.
     pub bloom_fp_rate: f64,
-    /// Cuckoo filter tuning.
+    /// Cuckoo filter tuning. Of serving interest:
+    /// `cuckoo.migration_step_buckets` bounds how long a shard write
+    /// lock is held while the filter doubles under load — smaller steps
+    /// mean tighter reader tail latency during growth; `0` opts back
+    /// into the monolithic single-hold migration (bench comparison arm).
     pub cuckoo: CuckooConfig,
     /// Cuckoo filter shards (rounded up to a power of two). On the
     /// concurrent serving path (`make_concurrent_retriever`), `0` =
@@ -109,6 +113,38 @@ mod tests {
     fn labels_match_paper() {
         assert_eq!(Algorithm::Cuckoo.label(), "CF T-RAG");
         assert_eq!(Algorithm::ALL.len(), 4);
+    }
+
+    #[test]
+    fn migration_step_knob_flows_through() {
+        use crate::filter::cuckoo::CuckooFilter;
+        use crate::filter::fingerprint::entity_key;
+
+        let mut cfg = RagConfig::default();
+        assert!(
+            cfg.cuckoo.migration_step_buckets > 0,
+            "serving config must default to incremental expansion"
+        );
+        // The knob must change actual filter behavior, not just sit in
+        // the struct: with 1-bucket steps a threshold crossing leaves
+        // the doubling observably in flight after an insert burst...
+        cfg.cuckoo.initial_buckets = 64;
+        cfg.cuckoo.migration_step_buckets = 1;
+        let mut incremental = CuckooFilter::new(cfg.cuckoo);
+        for i in 0..300u64 {
+            incremental.insert(entity_key(&format!("knob-{i}")), &[]);
+        }
+        assert!(
+            incremental.migration_pending(),
+            "1-bucket steps leave the doubling in flight"
+        );
+        // ...while 0 (monolithic opt-out) completes inside the insert.
+        cfg.cuckoo.migration_step_buckets = 0;
+        let mut monolithic = CuckooFilter::new(cfg.cuckoo);
+        for i in 0..300u64 {
+            monolithic.insert(entity_key(&format!("knob-{i}")), &[]);
+        }
+        assert!(!monolithic.migration_pending(), "0 = whole-table migration");
     }
 
     #[test]

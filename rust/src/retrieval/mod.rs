@@ -78,6 +78,10 @@ pub trait ConcurrentRetriever: Send + Sync {
     fn find_concurrent(&self, entity: &str, out: &mut Vec<EntityAddress>);
 
     /// End-of-round maintenance (CF temperature re-sort; others no-op).
+    /// Implementations must keep `find_concurrent` flowing while this
+    /// runs — the sharded retriever drains expansion migrations in
+    /// bounded steps and swaps re-sorted buckets in epoch-style, never
+    /// holding a shard write lock for a whole table.
     fn maintain_concurrent(&self) {}
 
     /// Knowledge update: the forest grew by `new_trees`.

@@ -1,7 +1,10 @@
 //! Sharded Cuckoo Filter T-RAG — the paper's system behind a
 //! [`ShardedCuckooFilter`], so the serving coordinator's worker threads
 //! retrieve **in parallel**: a lookup takes only the read lock of the
-//! one shard that owns the key, and temperature bumps are atomic.
+//! one shard that owns the key, and temperature bumps are atomic. Writer
+//! holds are bounded too: a shard doubling migrates incrementally and
+//! maintenance swaps re-sorted buckets in epoch-style, so no retrieval
+//! ever stalls behind a full-table migration or a whole-shard re-sort.
 //!
 //! Semantics are identical to [`CuckooTRag`](crate::retrieval::cuckoo_rag::CuckooTRag)
 //! (asserted by `rust/tests/sharded_concurrent.rs`); only the locking
@@ -84,6 +87,9 @@ impl ConcurrentRetriever for ShardedCuckooTRag {
         self.cf.lookup_into(entity_key(entity), out);
     }
 
+    /// Epoch-style: drains pending shard migrations in bounded steps and
+    /// swaps re-sorted buckets in under short validated write locks —
+    /// concurrent `find_concurrent` calls keep flowing throughout.
     fn maintain_concurrent(&self) {
         self.cf.maintain();
     }

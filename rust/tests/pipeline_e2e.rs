@@ -112,7 +112,7 @@ fn coordinator_under_concurrent_load() {
     let rxs: Vec<_> = workload
         .queries
         .iter()
-        .map(|q| coordinator.submit(&q.text))
+        .map(|q| coordinator.submit(&q.text).expect("submit"))
         .collect();
     let mut ok = 0;
     for rx in rxs {

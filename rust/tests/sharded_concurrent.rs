@@ -136,6 +136,80 @@ fn writer_churn_does_not_disturb_readers() {
     assert_eq!(cf.len(), stable as usize, "only stable keys remain");
 }
 
+/// Readers keep verifying a stable key range while a writer drives every
+/// shard through incremental doubling migrations (tiny 2-bucket steps,
+/// so shards spend most of the race serving from two table generations).
+/// Every lookup during migration must succeed and return an untorn list
+/// — the correctness half of the PR-2 reader-stall scenario; the latency
+/// half (no reader waits for a full-table migration) is measured by
+/// `benches/concurrent.rs`.
+#[test]
+fn readers_race_incremental_expansion_without_loss() {
+    let cf = Arc::new(ShardedCuckooFilter::new(
+        CuckooConfig {
+            initial_buckets: 64,
+            migration_step_buckets: 2,
+            ..CuckooConfig::default()
+        },
+        4,
+    ));
+    let stable = 200u64;
+    for i in 0..stable {
+        assert!(cf.insert(key(i), &addrs(i)));
+    }
+
+    let done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for t in 0..3u64 {
+            let cf = &cf;
+            let done = &done;
+            s.spawn(move || {
+                let mut rng = Rng::new(0x0E5C_A1A7 ^ t);
+                let mut out = Vec::with_capacity(8);
+                while !done.load(Ordering::Relaxed) {
+                    let i = rng.below(stable);
+                    out.clear();
+                    assert!(
+                        cf.lookup_into(key(i), &mut out),
+                        "stable key {i} lost during incremental expansion"
+                    );
+                    assert!(valid_list(i, &out), "torn read for {i}: {out:?}");
+                }
+            });
+        }
+        // writer: fresh volatile keys every round force doublings in
+        // every shard on the first round; later rounds churn the grown
+        // tables (deletes mid-migration included)
+        for round in 0..10u64 {
+            for i in 0..500u64 {
+                let id = 2_000_000 + round * 500 + i;
+                assert!(cf.insert(key(id), &addrs(id)));
+            }
+            for i in 0..500u64 {
+                let id = 2_000_000 + round * 500 + i;
+                assert!(cf.delete(key(id)));
+            }
+        }
+        done.store(true, Ordering::Relaxed);
+    });
+
+    assert!(
+        cf.stats().expansions >= 4,
+        "every shard should have grown: {} expansions",
+        cf.stats().expansions
+    );
+    // drain any still-pending migrations, then the full sweep
+    cf.maintain();
+    assert!(!cf.any_migration_pending());
+    let mut out = Vec::with_capacity(8);
+    for i in 0..stable {
+        out.clear();
+        assert!(cf.lookup_into(key(i), &mut out), "lost {i} after the race");
+        assert!(valid_list(i, &out), "corrupted {i} after the race");
+    }
+    assert_eq!(cf.len(), stable as usize, "only stable keys remain");
+}
+
 /// Concurrent retrieval through the retriever layer agrees exactly with
 /// the single-threaded unsharded retriever.
 #[test]

@@ -21,6 +21,12 @@ cargo clippy --workspace --all-targets -- -D warnings
 if [[ "$fast" == 0 ]]; then
   echo "==> cargo build --release"
   cargo build --release
+
+  # The harness=false benches are not part of the test build, so without
+  # this they can bit-rot silently; --no-run compiles them without
+  # running (benches/* are long-running and not pass/fail gates).
+  echo "==> cargo bench --no-run"
+  cargo bench --no-run
 fi
 
 echo "==> cargo test -q"
