@@ -8,24 +8,33 @@
 //! Run: `make artifacts && cargo run --release --example serve_requests`
 //! Flags: --trees N --requests N --workers N --shards N
 //!        --native (skip artifacts)
+//!        --router N (serve through the shard router over N in-process
+//!        TCP backends; 0 = direct coordinator) --clients N
 //!
 //! Retrieval runs on the sharded Cuckoo filter (`--shards`, default one
 //! shard per core), so worker threads retrieve in parallel instead of
 //! serializing on a global retriever lock — compare `--workers 1` vs
-//! `--workers 8` throughput to see the scaling.
+//! `--workers 8` throughput to see the scaling. With `--router N`, each
+//! backend is a full coordinator behind `coordinator/tcp.rs` and the
+//! router scatter-gathers by entity-key ownership (`router/`); compare
+//! `--router 1` vs `--router 4` for the scale-out story.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use cft_rag::coordinator::tcp::serve_with_shutdown;
 use cft_rag::coordinator::{Coordinator, CoordinatorConfig};
 use cft_rag::data::corpus::corpus_from_texts;
 use cft_rag::data::hospital::{HospitalConfig, HospitalDataset};
 use cft_rag::data::workload::{Workload, WorkloadConfig};
+use cft_rag::forest::Forest;
 use cft_rag::llm::judge::{judge, Judgement};
-use cft_rag::rag::config::RagConfig;
+use cft_rag::rag::config::{RagConfig, RouterConfig};
+use cft_rag::router::Router;
 use cft_rag::runtime::engine::{Engine, NativeEngine, PjrtEngine};
 use cft_rag::runtime::default_dir;
 use cft_rag::util::cli::{spec, Args};
+use cft_rag::util::json::Json;
 use cft_rag::util::stats::Summary;
 
 fn main() {
@@ -36,6 +45,8 @@ fn main() {
         spec("shards", "cuckoo filter shards (0 = one per core)", Some("0"), false),
         spec("pool", "PJRT runtime pool size", Some("1"), false),
         spec("native", "use the native engine instead of PJRT", None, true),
+        spec("router", "route over N in-process TCP backends (0 = direct)", Some("0"), false),
+        spec("clients", "concurrent router clients (router mode)", Some("8"), false),
         spec("trace-out", "record the workload to a JSON trace file", None, false),
         spec("trace-in", "replay a recorded JSON trace (paced by offsets)", None, false),
     ])
@@ -61,26 +72,14 @@ fn main() {
         stats.trees, stats.nodes, stats.distinct_entities, stats.max_depth
     );
 
-    // ---- engine: PJRT artifacts (the real path) or native fallback ----
-    // Pool default 1: the PJRT CPU client parallelizes executions
-    // internally; extra clients oversubscribe cores (§Perf iteration 3,
-    // measured slower at pool=4).
-    let pool = args.num_or("pool", 1usize);
-    let engine: Arc<dyn Engine> = if args.flag("native") {
-        println!("engine: native-rust (requested)");
-        Arc::new(NativeEngine::new())
-    } else {
-        match PjrtEngine::with_pool(default_dir(), pool) {
-            Ok(e) => {
-                println!("engine: pjrt-cpu (pool of {})", e.pool_size());
-                Arc::new(e)
-            }
-            Err(e) => {
-                println!("engine: native-rust (PJRT unavailable: {e})");
-                Arc::new(NativeEngine::new())
-            }
-        }
-    };
+    // ---- router mode: N in-process TCP backends behind the router ----
+    let n_router = args.num_or("router", 0usize);
+    if n_router > 0 {
+        router_mode(&args, &ds, &forest, n_router);
+        return;
+    }
+
+    let engine = build_engine(&args);
     let backend = engine.backend();
 
     // ---- coordinator ----
@@ -217,4 +216,170 @@ fn main() {
     );
 
     coordinator.shutdown();
+}
+
+/// Build the engine once per caller: PJRT artifacts (the real path) or
+/// native fallback. Pool default 1: the PJRT CPU client parallelizes
+/// executions internally; extra clients oversubscribe cores (§Perf
+/// iteration 3, measured slower at pool=4).
+fn build_engine(args: &Args) -> Arc<dyn Engine> {
+    let pool = args.num_or("pool", 1usize);
+    if args.flag("native") {
+        println!("engine: native-rust (requested)");
+        return Arc::new(NativeEngine::new());
+    }
+    match PjrtEngine::with_pool(default_dir(), pool) {
+        Ok(e) => {
+            println!("engine: pjrt-cpu (pool of {})", e.pool_size());
+            Arc::new(e)
+        }
+        Err(e) => {
+            println!("engine: native-rust (PJRT unavailable: {e})");
+            Arc::new(NativeEngine::new())
+        }
+    }
+}
+
+/// `--router N`: start N full coordinators behind real TCP listeners,
+/// front them with the shard router, and drive the workload from
+/// `--clients` concurrent client threads — the multi-backend
+/// scatter-gather path end to end, in one process.
+fn router_mode(args: &Args, ds: &HospitalDataset, forest: &Arc<Forest>, n: usize) {
+    let n_requests = args.num_or("requests", 256usize);
+    let clients = args.num_or("clients", 8usize).max(1);
+    let workers = args.num_or("workers", 4usize);
+    let rag_cfg = RagConfig {
+        shards: args.num_or("shards", 0),
+        ..RagConfig::default()
+    };
+
+    // each backend gets its own engine (sharing one PJRT pool across
+    // backends would serialize their neural stages on its mutexes)
+    let mut backends = Vec::with_capacity(n);
+    for _ in 0..n {
+        let coordinator = Arc::new(
+            Coordinator::start(
+                forest.clone(),
+                corpus_from_texts(&ds.documents()),
+                build_engine(args),
+                rag_cfg.clone(),
+                CoordinatorConfig { workers, ..Default::default() },
+            )
+            .expect("backend coordinator"),
+        );
+        let handle = serve_with_shutdown(coordinator.clone(), "127.0.0.1:0")
+            .expect("backend listener");
+        backends.push((coordinator, handle));
+    }
+    let addrs: Vec<String> =
+        backends.iter().map(|(_, h)| h.addr().to_string()).collect();
+    println!("router: {n} backends ({}), {clients} clients", addrs.join(", "));
+
+    let names: Vec<String> = forest
+        .interner()
+        .iter()
+        .map(|(_, name)| name.to_string())
+        .collect();
+    let router = Arc::new(
+        Router::connect(
+            names.iter().map(String::as_str),
+            &RouterConfig::for_backends(addrs),
+        )
+        .expect("router"),
+    );
+
+    let workload = Workload::generate(
+        forest,
+        WorkloadConfig {
+            entities_per_query: 5,
+            queries: n_requests,
+            ..Default::default()
+        },
+    );
+
+    // ---- drive: round-robin the workload across client threads ----
+    println!("\nserving {n_requests} requests through the router...");
+    let judgement = Mutex::new(Judgement::default());
+    let t0 = Instant::now();
+    let per_client: Vec<(Vec<f64>, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let router = router.clone();
+                let workload = &workload;
+                let judgement = &judgement;
+                s.spawn(move || {
+                    let mut latencies = Vec::new();
+                    let mut failures = 0usize;
+                    for q in workload.queries.iter().skip(c).step_by(clients) {
+                        let t = Instant::now();
+                        let reply = router.query(&q.text);
+                        latencies.push(t.elapsed().as_secs_f64());
+                        if reply.get("ok") == Some(&Json::Bool(true)) {
+                            let answer = reply
+                                .get("answer")
+                                .and_then(Json::as_str)
+                                .unwrap_or("");
+                            judgement
+                                .lock()
+                                .unwrap()
+                                .merge(judge(answer, &q.gold));
+                        } else {
+                            failures += 1;
+                        }
+                    }
+                    (latencies, failures)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed();
+
+    // ---- report ----
+    let latencies: Vec<f64> =
+        per_client.iter().flat_map(|(l, _)| l.iter().copied()).collect();
+    let failures: usize = per_client.iter().map(|(_, f)| f).sum();
+    let lat = Summary::of(&latencies);
+    let snap = router.snapshot();
+    let judgement = judgement.into_inner().unwrap();
+    println!("\n== E2E routed serving report ({n} backends) ==");
+    println!("requests:        {n_requests} ({failures} failures)");
+    println!("wall time:       {:.3}s", wall.as_secs_f64());
+    println!(
+        "throughput:      {:.1} req/s",
+        n_requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency (ms):    mean {:.2}  p50 {:.2}  p90 {:.2}  p99 {:.2}",
+        lat.mean * 1e3,
+        lat.p50 * 1e3,
+        lat.p90 * 1e3,
+        lat.p99 * 1e3
+    );
+    println!(
+        "router:          {} fanouts, {} failovers, {} degraded",
+        snap.fanouts, snap.failovers, snap.degraded
+    );
+    for b in &snap.backends {
+        println!(
+            "  backend {:<21} {} reqs, {} failures, p99 {:.2} ms{}",
+            b.addr,
+            b.requests,
+            b.failures,
+            b.latency_p99_s * 1e3,
+            if b.healthy { "" } else { "  [down]" }
+        );
+    }
+    println!(
+        "answer accuracy: {:.2}% ({}/{} gold facts)",
+        judgement.accuracy() * 100.0,
+        judgement.gold_recalled,
+        judgement.gold_total
+    );
+
+    drop(router); // stops the prober before the backends go away
+    for (coordinator, handle) in backends {
+        handle.shutdown();
+        coordinator.stop();
+    }
 }

@@ -18,8 +18,21 @@
 //! stall behind a whole-table rebuild) and once with incremental
 //! migration (every reader wait bounded by one small step).
 //!
-//! Run: `cargo bench --bench concurrent`. Writes `results/concurrent.csv`
-//! and `results/concurrent_expansion.csv`.
+//! Two PR-3 scenarios ride along:
+//!
+//! * **Concurrent Bloom baseline** — the tree-Bloom annotations are
+//!   read-only after build, so `ArcRetriever<BloomTRag>` shares them
+//!   lock-free; measured against the old `MutexRetriever` funnel at 1
+//!   and max threads (the honest-concurrent-baselines ROADMAP item).
+//! * **Shard router scatter-gather** — real TCP backends (each a full
+//!   coordinator) behind the `router/` subsystem, 1-backend vs
+//!   N-backend aggregate throughput under the same client load. The
+//!   single-backend arm is bottlenecked on its one serialized
+//!   embed/search batcher; N backends run N batchers.
+//!
+//! Run: `cargo bench --bench concurrent`. Writes `results/concurrent.csv`,
+//! `results/concurrent_expansion.csv`, `results/concurrent_bloom.csv`
+//! and `results/concurrent_router.csv`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -27,14 +40,26 @@ use std::time::Instant;
 
 use cft_rag::bench::experiments::experiment_forest;
 use cft_rag::bench::harness::{bench, print_table};
+use cft_rag::coordinator::tcp::serve_with_shutdown;
+use cft_rag::coordinator::{Coordinator, CoordinatorConfig};
+use cft_rag::data::corpus::corpus_from_texts;
+use cft_rag::data::hospital::{HospitalConfig, HospitalDataset};
+use cft_rag::data::workload::{Workload, WorkloadConfig};
 use cft_rag::filter::cuckoo::CuckooConfig;
 use cft_rag::filter::sharded::ShardedCuckooFilter;
 use cft_rag::forest::EntityAddress;
+use cft_rag::rag::config::{RagConfig, RouterConfig};
+use cft_rag::retrieval::bloom_rag::BloomTRag;
 use cft_rag::retrieval::cuckoo_rag::CuckooTRag;
 use cft_rag::retrieval::sharded_rag::ShardedCuckooTRag;
-use cft_rag::retrieval::{ConcurrentRetriever, Retriever};
+use cft_rag::retrieval::{
+    ArcRetriever, ConcurrentRetriever, MutexRetriever, Retriever,
+};
+use cft_rag::router::Router;
+use cft_rag::runtime::engine::{Engine, NativeEngine};
 use cft_rag::util::cli::{spec, Args};
 use cft_rag::util::csv::CsvTable;
+use cft_rag::util::json::Json;
 use cft_rag::util::rng::{fnv1a, Rng};
 
 fn main() {
@@ -45,6 +70,16 @@ fn main() {
         spec("lookups", "lookups per thread per repeat", Some("200000"), false),
         spec("repeats", "timed repeats", Some("5"), false),
         spec("out", "CSV output path", Some("results/concurrent.csv"), false),
+        spec(
+            "router-backends",
+            "comma-separated backend counts for the router scenario",
+            Some("1,4"),
+            false,
+        ),
+        spec("router-queries", "queries per router arm", Some("384"), false),
+        spec("router-clients", "concurrent router clients", Some("8"), false),
+        spec("router-workers", "workers per routed backend", Some("2"), false),
+        spec("router-trees", "forest size for the router scenario", Some("60"), false),
         spec("bench", "ignored (cargo bench passes it)", None, true),
     ])
     .unwrap_or_else(|e| {
@@ -273,4 +308,220 @@ fn main() {
     };
     exp_csv.write_to(&exp_out).expect("write expansion csv");
     println!("wrote {exp_out}");
+
+    // ---- concurrent Bloom baseline: ArcRetriever vs MutexRetriever ----
+    // The tree-Bloom annotations are immutable after build; sharing them
+    // as Arcs must scale with reader threads where the mutex funnel
+    // cannot. Fewer lookups than the CF arms: a Bloom lookup walks trees.
+    let bloom_threads = *thread_counts.iter().max().unwrap_or(&4);
+    let bloom_lookups = (lookups / 10).max(1_000);
+    println!(
+        "\nconcurrent Bloom baseline ({bloom_lookups} lookups/thread, \
+         1 vs {bloom_threads} threads):"
+    );
+    let bloom_mutex: Arc<dyn ConcurrentRetriever> = Arc::new(
+        MutexRetriever::new(Box::new(BloomTRag::new(forest.clone(), 0.01))),
+    );
+    let bloom_arc: Arc<dyn ConcurrentRetriever> =
+        Arc::new(ArcRetriever::new(BloomTRag::new(forest.clone(), 0.01)));
+    let mut bloom_csv =
+        CsvTable::new(&["design", "threads", "mops_per_s", "scaling"]);
+    for (label, r) in [("bloom-mutex", &bloom_mutex), ("bloom-arc", &bloom_arc)]
+    {
+        let mut one_thread = 0.0f64;
+        for threads in [1usize, bloom_threads] {
+            let result = bench(label, 1, repeats, || {
+                std::thread::scope(|s| {
+                    for t in 0..threads {
+                        let r = r.clone();
+                        let names = &names;
+                        s.spawn(move || {
+                            let mut rng = Rng::new(0xB100 ^ t as u64);
+                            let mut out = Vec::with_capacity(64);
+                            for _ in 0..bloom_lookups {
+                                let name = &names[rng.range(0, names.len())];
+                                out.clear();
+                                r.find_concurrent(name, &mut out);
+                            }
+                        });
+                    }
+                });
+            });
+            let mops = (threads * bloom_lookups) as f64
+                / result.summary().p50
+                / 1e6;
+            if threads == 1 {
+                one_thread = mops;
+            }
+            let scaling = mops / one_thread;
+            println!(
+                "  {label:<12} {threads:>2} threads  {mops:>7.3} Mops/s  \
+                 ({scaling:.2}x vs 1 thread)"
+            );
+            bloom_csv.push(&[
+                label.to_string(),
+                threads.to_string(),
+                format!("{mops}"),
+                format!("{scaling}"),
+            ]);
+        }
+    }
+    let bloom_out = match out.strip_suffix(".csv") {
+        Some(stem) => format!("{stem}_bloom.csv"),
+        None => format!("{out}_bloom.csv"),
+    };
+    bloom_csv.write_to(&bloom_out).expect("write bloom csv");
+    println!("wrote {bloom_out}");
+
+    // ---- shard router: 1-backend vs N-backend scatter-gather ----
+    router_scenario(&args, &out);
+}
+
+/// The PR-3 acceptance scenario: the same client load against the
+/// router fronting 1 backend and N backends (real TCP coordinators,
+/// each with its own engine and its own serialized embed/search
+/// batcher), reporting aggregate throughput and the speedup of the
+/// N-backend arm over the single-backend arm.
+fn router_scenario(args: &Args, out: &str) {
+    let arms: Vec<usize> = args.list_or("router-backends", &[1, 4]);
+    let queries: usize = args.num_or("router-queries", 384);
+    let clients: usize = args.num_or("router-clients", 8).max(1);
+    let workers: usize = args.num_or("router-workers", 2);
+    let trees: usize = args.num_or("router-trees", 60);
+
+    let ds = HospitalDataset::generate(HospitalConfig {
+        trees,
+        ..HospitalConfig::default()
+    });
+    let forest = Arc::new(ds.build_forest());
+    let names: Vec<String> = forest
+        .interner()
+        .iter()
+        .map(|(_, n)| n.to_string())
+        .collect();
+    // Single-entity, uniformly drawn queries: each query has exactly one
+    // owner, so the load spreads across backends by key ownership — the
+    // scaling this scenario measures. (A fanned-out multi-entity query
+    // pays the per-line embed/search fixed cost once *per owner*, which
+    // measures merge overhead, not scale-out; the integration tests and
+    // `serve_requests --router N` cover that path.)
+    let workload = Workload::generate(
+        &forest,
+        WorkloadConfig {
+            entities_per_query: 1,
+            queries: 64,
+            zipf_s: 0.0,
+            deep_bias: 0.0,
+            ..Default::default()
+        },
+    );
+
+    println!(
+        "\nshard router scatter-gather ({queries} queries, {clients} clients, \
+         {workers} workers/backend, {trees} trees):"
+    );
+    let mut csv = CsvTable::new(&[
+        "backends",
+        "clients",
+        "queries",
+        "wall_s",
+        "qps",
+        "speedup_vs_1",
+        "fanouts",
+        "failures",
+    ]);
+    let mut base_qps = 0.0f64;
+    for &n in &arms {
+        // real TCP backends, each a full coordinator with its own engine
+        let mut backends = Vec::with_capacity(n);
+        for _ in 0..n.max(1) {
+            let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+            let coordinator = Arc::new(
+                Coordinator::start(
+                    forest.clone(),
+                    corpus_from_texts(&ds.documents()),
+                    engine,
+                    RagConfig::default(),
+                    CoordinatorConfig { workers, ..Default::default() },
+                )
+                .expect("backend coordinator"),
+            );
+            let handle = serve_with_shutdown(coordinator.clone(), "127.0.0.1:0")
+                .expect("backend listener");
+            backends.push((coordinator, handle));
+        }
+        let addrs: Vec<String> =
+            backends.iter().map(|(_, h)| h.addr().to_string()).collect();
+        let router = Arc::new(
+            Router::connect(
+                names.iter().map(String::as_str),
+                &RouterConfig::for_backends(addrs),
+            )
+            .expect("router"),
+        );
+
+        // warmup: touch every backend's pools and caches
+        for q in workload.queries.iter().take(8) {
+            let _ = router.query(&q.text);
+        }
+
+        let t0 = Instant::now();
+        let failures: usize = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let router = router.clone();
+                    let workload = &workload;
+                    let share = queries / clients
+                        + usize::from(c < queries % clients);
+                    s.spawn(move || {
+                        let mut failures = 0usize;
+                        for i in 0..share {
+                            let q = &workload.queries
+                                [(c + i * clients) % workload.queries.len()];
+                            let reply = router.query(&q.text);
+                            if reply.get("ok") != Some(&Json::Bool(true)) {
+                                failures += 1;
+                            }
+                        }
+                        failures
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let qps = queries as f64 / wall;
+        if base_qps == 0.0 {
+            base_qps = qps;
+        }
+        let speedup = qps / base_qps;
+        let snap = router.snapshot();
+        println!(
+            "  {n:>2} backends  {qps:>8.1} q/s  ({speedup:.2}x vs {} backend)  \
+             wall {wall:.2}s  {} fanouts  {failures} failures",
+            arms[0], snap.fanouts,
+        );
+        csv.push(&[
+            n.to_string(),
+            clients.to_string(),
+            queries.to_string(),
+            format!("{wall}"),
+            format!("{qps}"),
+            format!("{speedup}"),
+            snap.fanouts.to_string(),
+            failures.to_string(),
+        ]);
+
+        drop(router); // prober stops before its backends vanish
+        for (coordinator, handle) in backends {
+            handle.shutdown();
+            coordinator.stop();
+        }
+    }
+    let router_out = match out.strip_suffix(".csv") {
+        Some(stem) => format!("{stem}_router.csv"),
+        None => format!("{out}_router.csv"),
+    };
+    csv.write_to(&router_out).expect("write router csv");
+    println!("wrote {router_out}");
 }

@@ -5,6 +5,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
 
 /// Snapshot of the counters at one instant.
@@ -29,6 +30,23 @@ impl MetricsSnapshot {
         } else {
             self.requests as f64 / elapsed.as_secs_f64()
         }
+    }
+
+    /// JSON form — the payload of the TCP protocol's `\x01stats`
+    /// control line (`coordinator/tcp.rs`), which the shard router's
+    /// health prober reads to see backend *load*, not just liveness.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("failures", Json::Num(self.failures as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("mean_batch_fill", Json::Num(self.mean_batch_fill)),
+            ("total_mean_s", Json::Num(self.total_mean_s)),
+            ("total_p50_s", Json::Num(self.total_p50_s)),
+            ("total_p99_s", Json::Num(self.total_p99_s)),
+            ("retrieval_mean_s", Json::Num(self.retrieval_mean_s)),
+            ("retrieval_p99_s", Json::Num(self.retrieval_p99_s)),
+        ])
     }
 }
 
@@ -124,6 +142,18 @@ mod tests {
         }
         let s = m.snapshot();
         assert!((s.throughput(Duration::from_secs(10)) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrips() {
+        let m = Metrics::new();
+        m.record_request(Duration::from_millis(10), Duration::from_micros(50));
+        m.record_failure();
+        let json = m.snapshot().to_json();
+        let back = Json::parse(&json.to_string()).unwrap();
+        assert_eq!(back.get("requests").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(back.get("failures").and_then(Json::as_f64), Some(1.0));
+        assert!(back.get("total_mean_s").and_then(Json::as_f64).unwrap() > 0.0);
     }
 
     #[test]

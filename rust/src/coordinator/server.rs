@@ -98,10 +98,16 @@ struct WorkItem {
 }
 
 /// The running coordinator.
+///
+/// `submit_tx`/`threads` sit behind mutexes so the coordinator can be
+/// stopped through a shared reference ([`Coordinator::stop`]) — the
+/// TCP layer and the shard router's tests hold it as `Arc<Coordinator>`
+/// and need to tear down real in-process backends. The submit-path cost
+/// is one uncontended lock to clone the sender.
 pub struct Coordinator {
-    submit_tx: Option<SyncSender<Job>>,
+    submit_tx: Mutex<Option<SyncSender<Job>>>,
     metrics: Metrics,
-    threads: Vec<JoinHandle<()>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Coordinator {
@@ -216,7 +222,11 @@ impl Coordinator {
             );
         }
 
-        Ok(Coordinator { submit_tx: Some(submit_tx), metrics, threads })
+        Ok(Coordinator {
+            submit_tx: Mutex::new(Some(submit_tx)),
+            metrics,
+            threads: Mutex::new(threads),
+        })
     }
 
     /// Submit a query; returns the channel the response will arrive on.
@@ -234,10 +244,15 @@ impl Coordinator {
             enqueued: Instant::now(),
             resp: resp_tx,
         };
-        let queue = self.submit_tx.as_ref().ok_or_else(|| {
-            CftError::Coordinator("coordinator stopped".into())
-        })?;
-        enqueue(queue, job, SUBMIT_FULL_TIMEOUT)?;
+        // clone the sender under the lock, enqueue outside it: the
+        // bounded full-queue wait must not serialize other submitters
+        let queue = self
+            .submit_tx
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| CftError::Coordinator("coordinator stopped".into()))?;
+        enqueue(&queue, job, SUBMIT_FULL_TIMEOUT)?;
         Ok(resp_rx)
     }
 
@@ -253,12 +268,36 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Stop accepting work and join all threads.
-    pub fn shutdown(mut self) {
-        self.submit_tx.take(); // close the queue; batcher exits, then workers
-        for t in self.threads.drain(..) {
+    /// True once [`stop`](Coordinator::stop) has closed the submit
+    /// queue. The TCP layer checks this per request line so that a
+    /// stopped coordinator *drops* its open connections like a dead
+    /// process would — keeping them alive would let control lines
+    /// (`\x01stats`) keep succeeding on a backend that can no longer
+    /// serve, masking its death from the router's health prober.
+    pub fn is_stopped(&self) -> bool {
+        self.submit_tx.lock().unwrap().is_none()
+    }
+
+    /// Stop accepting work and join all threads — callable through a
+    /// shared reference, so an `Arc<Coordinator>` held by TCP handler
+    /// threads (or the router's in-process backend tests) can be torn
+    /// down. Idempotent: later calls find the queue already closed and
+    /// no threads left to join. In-flight jobs drain first (closing the
+    /// queue lets the batcher finish what was admitted, then exit).
+    pub fn stop(&self) {
+        // close the queue; batcher exits, then workers, then maintainer
+        self.submit_tx.lock().unwrap().take();
+        let mut threads = self.threads.lock().unwrap();
+        for t in threads.drain(..) {
             let _ = t.join();
         }
+    }
+
+    /// Stop and consume (the owned-coordinator form of [`stop`]).
+    ///
+    /// [`stop`]: Coordinator::stop
+    pub fn shutdown(self) {
+        self.stop();
     }
 }
 
@@ -450,6 +489,19 @@ mod tests {
         let c = start_coordinator();
         let _ = c.query_blocking("describe the hierarchy around cardiology");
         c.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn stop_works_through_shared_reference() {
+        // the TCP layer and the shard router hold Arc<Coordinator>; a
+        // backend must be stoppable without unwrapping the Arc
+        let c = Arc::new(start_coordinator());
+        let c2 = c.clone();
+        let _ = c.query_blocking("describe the hierarchy around cardiology");
+        c2.stop();
+        let err = c.submit("anything").expect_err("stopped must reject");
+        assert!(err.to_string().contains("stopped"), "{err}");
+        c.stop(); // idempotent
     }
 
     fn test_job(query: &str) -> Job {

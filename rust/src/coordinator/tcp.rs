@@ -1,23 +1,121 @@
 //! Minimal TCP line protocol in front of the coordinator: one query per
 //! line in, one JSON object per line out. `cft-rag serve --port N`.
+//!
+//! Two protocol extras beyond plain queries:
+//!
+//! * `:quit` closes the connection.
+//! * [`STATS_REQUEST`] (`\x01stats`) returns the coordinator's
+//!   [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot) as one
+//!   JSON line — the shard router's health prober uses it to observe
+//!   backend *load*, and it is handy for single-node ops too. The
+//!   `\x01` prefix keeps the control line out of the natural-language
+//!   query space.
+//!
+//! Serving comes in two lifetimes: [`serve`] (runs until the process
+//! dies — the CLI path) and [`serve_with_shutdown`], which returns a
+//! [`ServeHandle`] whose `shutdown()` stops the accept loop and joins
+//! it — so tests (the router's especially) can start and stop real TCP
+//! backends in-process without leaking listeners.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 
 use crate::coordinator::server::Coordinator;
 use crate::error::Result;
 use crate::util::json::Json;
+use crate::util::log;
+
+/// Reserved control line: a client sending exactly this line receives
+/// the coordinator's metrics snapshot as a JSON line instead of a query
+/// reply.
+pub const STATS_REQUEST: &str = "\x01stats";
 
 /// Serve until the process is killed. Each connection gets a thread;
 /// queries are newline-delimited; responses are JSON lines.
 pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     log::info!("cft-rag listening on {addr}");
+    accept_loop(coordinator, listener, &AtomicBool::new(false));
+    Ok(())
+}
+
+/// Bind `addr` and serve on a background thread; the returned handle
+/// stops the listener on demand. Bind to port 0 for an ephemeral port
+/// (the handle reports the resolved address).
+pub fn serve_with_shutdown(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+) -> Result<ServeHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let thread = {
+        let stop = stop.clone();
+        std::thread::Builder::new()
+            .name("cft-tcp-accept".into())
+            .spawn(move || accept_loop(coordinator, listener, &stop))
+            .expect("spawn accept loop")
+    };
+    log::info!("cft-rag listening on {local} (with shutdown handle)");
+    Ok(ServeHandle { addr: local, stop, thread: Some(thread) })
+}
+
+/// Accept until `stop` is raised (checked after every accept outcome;
+/// [`ServeHandle::shutdown`] raises it and then connects-to-self so a
+/// blocked `accept()` wakes immediately).
+fn accept_loop(
+    coordinator: Arc<Coordinator>,
+    listener: TcpListener,
+    stop: &AtomicBool,
+) {
     for stream in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            // the wakeup (or a late client) connection is dropped
+            // unserved; the listener closes when this frame returns
+            break;
+        }
         accept_one(&coordinator, stream);
     }
-    Ok(())
+}
+
+/// A running TCP front end that can be stopped.
+pub struct ServeHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ServeHandle {
+    /// The bound address (resolved — useful after binding port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread. Connections already
+    /// handed to handler threads drain on their own (they exit when the
+    /// peer closes or `:quit`s); the listener socket itself is released
+    /// before this returns, so the port can be rebound.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        let Some(thread) = self.thread.take() else { return };
+        self.stop.store(true, Ordering::Release);
+        // connect-to-self: unblocks an accept() with nothing inbound
+        let _ = TcpStream::connect(self.addr);
+        let _ = thread.join();
+    }
+}
+
+impl Drop for ServeHandle {
+    fn drop(&mut self) {
+        // dropping the handle must not leak the listener thread
+        self.stop_and_join();
+    }
 }
 
 /// Handle one `accept()` outcome. Accept failures are *transient* from
@@ -54,6 +152,12 @@ fn handle_conn(coordinator: Arc<Coordinator>, stream: TcpStream) -> std::io::Res
     let mut writer = stream;
     for line in reader.lines() {
         let line = line?;
+        if coordinator.is_stopped() {
+            // behave like a dead process: close instead of answering —
+            // a live `\x01stats` on a stopped backend would hide its
+            // death from the router's health prober
+            break;
+        }
         let query = line.trim();
         if query.is_empty() {
             continue;
@@ -61,7 +165,11 @@ fn handle_conn(coordinator: Arc<Coordinator>, stream: TcpStream) -> std::io::Res
         if query == ":quit" {
             break;
         }
-        let reply = respond(&coordinator, query);
+        let reply = if query == STATS_REQUEST {
+            coordinator.metrics().snapshot().to_json()
+        } else {
+            respond(&coordinator, query)
+        };
         writer.write_all(reply.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
     }
@@ -160,6 +268,80 @@ mod tests {
         accept_one(&c, Ok(stream));
         let line = client.join().unwrap();
         assert!(line.contains("\"ok\":true"), "{line}");
+    }
+
+    #[test]
+    fn stats_control_line_returns_metrics_json() {
+        let c = coordinator();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                let (stream, _) = listener.accept().unwrap();
+                handle_conn(c, stream).unwrap();
+            })
+        };
+        let mut client = TcpStream::connect(addr).unwrap();
+        // one real query, then the stats line: the snapshot must count it
+        client
+            .write_all(b"what is the parent unit of cardiology\n\x01stats\n:quit\n")
+            .unwrap();
+        let mut reader = BufReader::new(client.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "{line}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let snap = Json::parse(line.trim()).expect("stats reply is JSON");
+        assert_eq!(snap.get("requests").and_then(Json::as_f64), Some(1.0));
+        assert!(snap.get("total_mean_s").is_some());
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn stopped_coordinator_drops_connections_instead_of_answering() {
+        let c = coordinator();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                let (stream, _) = listener.accept().unwrap();
+                let _ = handle_conn(c, stream);
+            })
+        };
+        let mut client = TcpStream::connect(addr).unwrap();
+        c.stop();
+        // even the stats control line must NOT be answered once the
+        // coordinator is stopped — the router's prober relies on a dead
+        // backend going silent, not serving stale control replies
+        client.write_all(b"\x01stats\n").unwrap();
+        let mut reader = BufReader::new(client);
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap();
+        assert_eq!(n, 0, "expected EOF, got {line:?}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn serve_with_shutdown_stops_and_releases_port() {
+        let c = coordinator();
+        let handle = serve_with_shutdown(c, "127.0.0.1:0").unwrap();
+        let addr = handle.addr();
+        // served while up
+        let mut client = TcpStream::connect(addr).unwrap();
+        client
+            .write_all(b"what is the parent unit of cardiology\n:quit\n")
+            .unwrap();
+        let mut reader = BufReader::new(client);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "{line}");
+        // stops without hanging, and the port is rebindable — the
+        // listener did not leak
+        handle.shutdown();
+        TcpListener::bind(addr).expect("port released after shutdown");
     }
 
     #[test]

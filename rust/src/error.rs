@@ -1,31 +1,60 @@
 //! Crate-wide error type.
+//!
+//! The `Display`/`Error` impls are hand-rolled: the crate is
+//! deliberately dependency-free (see `Cargo.toml`), so `thiserror` is
+//! not available. Semantics match the previous derive exactly —
+//! prefixed messages per variant, transparent passthrough for `Io`.
 
-use thiserror::Error;
+use std::fmt;
 
 /// All failure modes of the CFT-RAG stack.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CftError {
     /// Artifact loading / manifest problems (run `make artifacts`).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT / XLA runtime failures.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Bad request or configuration.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Coordinator lifecycle problems (channel closed, worker died).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// I/O.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for CftError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CftError::Artifact(m) => write!(f, "artifact error: {m}"),
+            CftError::Runtime(m) => write!(f, "runtime error: {m}"),
+            CftError::Config(m) => write!(f, "config error: {m}"),
+            CftError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            // transparent: the io::Error's own message, no prefix
+            CftError::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for CftError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CftError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CftError {
+    fn from(e: std::io::Error) -> Self {
+        CftError::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for CftError {
     fn from(e: xla::Error) -> Self {
         CftError::Runtime(e.to_string())
@@ -34,3 +63,27 @@ impl From<xla::Error> for CftError {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, CftError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_derive() {
+        assert_eq!(
+            CftError::Coordinator("queue closed".into()).to_string(),
+            "coordinator error: queue closed"
+        );
+        assert_eq!(
+            CftError::Artifact("missing".into()).to_string(),
+            "artifact error: missing"
+        );
+        // Io is transparent: no prefix, source() exposes the inner error
+        let io = CftError::from(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        assert_eq!(io.to_string(), "gone");
+        assert!(std::error::Error::source(&io).is_some());
+    }
+}

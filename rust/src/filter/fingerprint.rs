@@ -50,6 +50,20 @@ pub fn shard_index(key: u64, nshards: usize) -> usize {
     ((mix(key) >> 48) as usize) & (nshards - 1)
 }
 
+/// Rendezvous (highest-random-weight) score of `key` on the backend
+/// identified by `seed` — the cross-process extension of the same hash
+/// family: the router's `ShardRing` ranks backends by this score exactly
+/// as [`shard_index`] picks an in-process shard. Mixing `key` with an
+/// already-mixed `seed` keeps the score independent of the bits consumed
+/// by [`primary_index`] (low key bits), [`fingerprint`] (low mix bits)
+/// and [`shard_index`] (high mix bits), so routing a key to a backend
+/// and then sharding it inside that backend never correlate: both
+/// levels of sharding compose without load skew.
+#[inline]
+pub fn rendezvous_score(key: u64, seed: u64) -> u64 {
+    mix(key ^ mix(seed))
+}
+
 /// Alternate bucket index `i XOR h(f)` — involutive for fixed `nbuckets`.
 #[inline]
 pub fn alt_index(index: usize, fp: u16, nbuckets: usize) -> usize {
@@ -121,6 +135,37 @@ mod tests {
         let max = *counts.iter().max().unwrap();
         let min = *counts.iter().min().unwrap();
         assert!(min > 700 && max < 1300, "skewed: min={min} max={max}");
+    }
+
+    #[test]
+    fn rendezvous_scores_spread_and_decorrelate() {
+        // Two backends: roughly half the keys prefer each, and the
+        // winner is independent of the key's in-process shard.
+        let (seed_a, seed_b) = (fnv1a(b"backend-a"), fnv1a(b"backend-b"));
+        let mut a_wins = 0usize;
+        let mut joint = [[0usize; 2]; 2];
+        let n = 8_000u64;
+        for k in 0..n {
+            let key = fnv1a(&k.to_le_bytes());
+            let a = rendezvous_score(key, seed_a) > rendezvous_score(key, seed_b);
+            if a {
+                a_wins += 1;
+            }
+            joint[a as usize][shard_index(key, 2)] += 1;
+        }
+        assert!(
+            a_wins > 3_500 && a_wins < 4_500,
+            "skewed backend choice: {a_wins}/{n}"
+        );
+        // every (backend winner, shard) cell near n/4: no correlation
+        for row in joint {
+            for cell in row {
+                assert!(
+                    cell > 1_700 && cell < 2_300,
+                    "backend/shard correlated: {joint:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //!
 //! * Layer 3 (this crate): the improved Cuckoo Filter, the entity forest,
 //!   all baseline retrievers, the pre-processing pipeline, the serving
-//!   coordinator and the benchmark harness.
+//!   coordinator, the distributed shard router (`router/`) and the
+//!   benchmark harness.
 //! * Layer 2/1 (build-time Python, `python/compile/`): the embedder /
 //!   scorer / ranker JAX graphs and their Pallas kernels, AOT-lowered to
 //!   `artifacts/*.hlo.txt` and executed here via the PJRT CPU client.
@@ -26,4 +27,5 @@ pub mod vector;
 pub mod llm;
 pub mod rag;
 pub mod coordinator;
+pub mod router;
 pub mod bench;

@@ -1,5 +1,7 @@
 //! Pipeline configuration.
 
+use std::time::Duration;
+
 use crate::filter::cuckoo::CuckooConfig;
 
 /// Which retrieval algorithm backs the pipeline (paper §4.1–4.2).
@@ -97,6 +99,61 @@ impl RagConfig {
     }
 }
 
+/// Configuration of the distributed shard router (`router/`): which
+/// coordinator backends to front, and the timeouts/health policy of the
+/// scatter-gather query path. See `router/mod.rs` for the topology.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Backend addresses (`host:port`), each a TCP coordinator speaking
+    /// the newline-delimited JSON protocol of `coordinator/tcp.rs`.
+    /// Order matters only for deterministic tie-breaks in the ring.
+    pub backends: Vec<String>,
+    /// TCP connect timeout per backend attempt.
+    pub connect_timeout: Duration,
+    /// Per-backend request timeout (socket read/write): one slow
+    /// backend degrades its portion of a fanned-out reply instead of
+    /// stalling the whole merge.
+    pub request_timeout: Duration,
+    /// Active health-probe period (`\x01stats` round trip per backend);
+    /// zero disables the prober thread (tests that want deterministic
+    /// backend traffic, or ops setups with external health checking).
+    pub probe_interval: Duration,
+    /// Consecutive request failures before a backend is passively
+    /// marked unhealthy (probes re-admit it on the next success).
+    pub failure_threshold: u32,
+    /// Backends tried per sub-request before giving up: the owner
+    /// first, then the ring's failover order.
+    pub max_attempts: usize,
+    /// Idle pooled connections kept per backend.
+    pub max_idle_conns: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            backends: Vec::new(),
+            connect_timeout: Duration::from_secs(1),
+            request_timeout: Duration::from_secs(5),
+            probe_interval: Duration::from_millis(500),
+            failure_threshold: 1,
+            max_attempts: 3,
+            max_idle_conns: 4,
+        }
+    }
+}
+
+impl RouterConfig {
+    /// Convenience: a config fronting `backends` with default policy.
+    pub fn for_backends<S: Into<String>>(
+        backends: impl IntoIterator<Item = S>,
+    ) -> Self {
+        RouterConfig {
+            backends: backends.into_iter().map(Into::into).collect(),
+            ..RouterConfig::default()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +202,17 @@ mod tests {
             monolithic.insert(entity_key(&format!("knob-{i}")), &[]);
         }
         assert!(!monolithic.migration_pending(), "0 = whole-table migration");
+    }
+
+    #[test]
+    fn router_config_defaults_sane() {
+        let cfg = RouterConfig::default();
+        assert!(cfg.backends.is_empty());
+        assert!(cfg.max_attempts >= 1);
+        assert!(cfg.failure_threshold >= 1);
+        assert!(!cfg.request_timeout.is_zero());
+        let cfg = RouterConfig::for_backends(["a:1", "b:2"]);
+        assert_eq!(cfg.backends, vec!["a:1".to_string(), "b:2".to_string()]);
     }
 
     #[test]

@@ -21,7 +21,9 @@ use crate::retrieval::context::{generate_context, Context};
 use crate::retrieval::cuckoo_rag::CuckooTRag;
 use crate::retrieval::naive::NaiveTRag;
 use crate::retrieval::sharded_rag::ShardedCuckooTRag;
-use crate::retrieval::{ConcurrentRetriever, MutexRetriever, Retriever};
+use crate::retrieval::{
+    ArcRetriever, ConcurrentRetriever, MutexRetriever, Retriever,
+};
 use crate::runtime::engine::Engine;
 use crate::text::tokenizer::tokenize_padded;
 use crate::util::stats::Timer;
@@ -49,8 +51,11 @@ pub fn make_retriever(
 /// Build the configured retriever for the **concurrent** serving path
 /// (the coordinator's worker pool). The Cuckoo algorithm gets the
 /// shard-parallel retriever — `cfg.shards == 0` auto-sizes to the
-/// machine — so worker threads retrieve under per-shard read locks; the
-/// baselines fall back to a mutex adapter (correct, but serialized).
+/// machine — so worker threads retrieve under per-shard read locks. The
+/// Bloom baselines' annotations are read-only after build, so they are
+/// shared lock-free as `Arc`s ([`ArcRetriever`]) — honest concurrent
+/// baselines for the router/coordinator throughput comparisons — and
+/// only the index-free naive scan still serializes through a mutex.
 pub fn make_concurrent_retriever(
     forest: Arc<Forest>,
     cfg: &RagConfig,
@@ -61,7 +66,17 @@ pub fn make_concurrent_retriever(
             cfg.cuckoo,
             cfg.resolved_shards(),
         )),
-        _ => Arc::new(MutexRetriever::new(make_retriever(forest, cfg))),
+        Algorithm::Bloom => Arc::new(ArcRetriever::new(BloomTRag::new(
+            forest,
+            cfg.bloom_fp_rate,
+        ))),
+        Algorithm::Bloom2 => Arc::new(ArcRetriever::new(Bloom2TRag::new(
+            forest,
+            cfg.bloom_fp_rate,
+        ))),
+        Algorithm::Naive => {
+            Arc::new(MutexRetriever::new(make_retriever(forest, cfg)))
+        }
     }
 }
 

@@ -10,7 +10,7 @@ use std::sync::Arc;
 use crate::filter::fingerprint::entity_key;
 use crate::filter::tree_bloom::BloomForest;
 use crate::forest::{EntityAddress, Forest, NodeIdx};
-use crate::retrieval::Retriever;
+use crate::retrieval::{Retriever, SharedRetriever};
 
 /// BF2 retriever: Bloom-pruned descent with near-leaf check skipping.
 pub struct Bloom2TRag {
@@ -73,28 +73,52 @@ impl Bloom2TRag {
     }
 }
 
-impl Retriever for Bloom2TRag {
+impl SharedRetriever for Bloom2TRag {
     fn name(&self) -> &'static str {
         "BF2 T-RAG"
     }
 
-    fn find(&mut self, entity: &str) -> Vec<EntityAddress> {
+    /// Lock-free read path: blooms and the height table are immutable
+    /// after build (shared across threads via `ArcRetriever`).
+    fn find_shared(&self, entity: &str, out: &mut Vec<EntityAddress>) {
         let Some(id) = self.forest.entity_id(entity) else {
-            return Vec::new();
+            return;
         };
         let key = entity_key(entity);
-        let mut out = Vec::new();
         for t in 0..self.forest.len() as u32 {
             if self.blooms.might_contain(t, 0, key) {
-                self.descend(t, 0, id, key, &mut out);
+                self.descend(t, 0, id, key, out);
             }
         }
+    }
+
+    fn rebuild(&self, forest: Arc<Forest>) -> Self {
+        Self::new(forest, self.fp_rate)
+    }
+
+    fn index_bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Retriever for Bloom2TRag {
+    fn name(&self) -> &'static str {
+        SharedRetriever::name(self)
+    }
+
+    fn find(&mut self, entity: &str) -> Vec<EntityAddress> {
+        let mut out = Vec::new();
+        self.find_shared(entity, &mut out);
         out
+    }
+
+    fn find_into(&mut self, entity: &str, out: &mut Vec<EntityAddress>) {
+        self.find_shared(entity, out);
     }
 
     fn reindex(&mut self, forest: Arc<Forest>, _new_trees: &[u32]) {
         // blooms + height table are whole-forest: rebuild
-        *self = Self::new(forest, self.fp_rate);
+        *self = self.rebuild(forest);
     }
 
     fn index_bytes(&self) -> usize {

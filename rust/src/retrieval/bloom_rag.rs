@@ -7,7 +7,7 @@ use std::sync::Arc;
 use crate::filter::fingerprint::entity_key;
 use crate::filter::tree_bloom::BloomForest;
 use crate::forest::{EntityAddress, Forest, NodeIdx};
-use crate::retrieval::Retriever;
+use crate::retrieval::{Retriever, SharedRetriever};
 
 /// Bloom-pruned retriever.
 pub struct BloomTRag {
@@ -46,23 +46,48 @@ impl BloomTRag {
     }
 }
 
-impl Retriever for BloomTRag {
+impl SharedRetriever for BloomTRag {
     fn name(&self) -> &'static str {
         "BF T-RAG"
     }
 
-    fn find(&mut self, entity: &str) -> Vec<EntityAddress> {
+    /// The whole search through `&self`: blooms and heights are
+    /// written once at build time, so any number of threads descend in
+    /// parallel with no synchronization (shared via `ArcRetriever`).
+    fn find_shared(&self, entity: &str, out: &mut Vec<EntityAddress>) {
         let Some(id) = self.forest.entity_id(entity) else {
-            return Vec::new();
+            return;
         };
         let key = entity_key(entity);
-        let mut out = Vec::new();
         for t in 0..self.forest.len() as u32 {
             if self.blooms.might_contain(t, 0, key) {
-                self.descend(t, 0, id, key, &mut out);
+                self.descend(t, 0, id, key, out);
             }
         }
+    }
+
+    fn rebuild(&self, forest: Arc<Forest>) -> Self {
+        Self::new(forest, self.fp_rate)
+    }
+
+    fn index_bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Retriever for BloomTRag {
+    fn name(&self) -> &'static str {
+        SharedRetriever::name(self)
+    }
+
+    fn find(&mut self, entity: &str) -> Vec<EntityAddress> {
+        let mut out = Vec::new();
+        self.find_shared(entity, &mut out);
         out
+    }
+
+    fn find_into(&mut self, entity: &str, out: &mut Vec<EntityAddress>) {
+        self.find_shared(entity, out);
     }
 
     fn reindex(&mut self, forest: Arc<Forest>, _new_trees: &[u32]) {
@@ -79,11 +104,44 @@ impl Retriever for BloomTRag {
 }
 
 #[cfg(test)]
+mod shared_tests {
+    use super::*;
+    use crate::retrieval::{ArcRetriever, ConcurrentRetriever};
+    use std::sync::Arc;
+
+    #[test]
+    fn shared_find_agrees_across_threads() {
+        let f = super::tests::forest();
+        let shared = Arc::new(ArcRetriever::new(BloomTRag::new(f.clone(), 0.01)));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let shared = shared.clone();
+                let f = f.clone();
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    for name in ["h", "a", "b", "c", "d", "zzz"] {
+                        out.clear();
+                        shared.find_concurrent(name, &mut out);
+                        let want = f
+                            .entity_id(name)
+                            .map(|id| f.scan_addresses(id))
+                            .unwrap_or_default();
+                        assert_eq!(out, want, "{name}");
+                    }
+                });
+            }
+        });
+        assert!(shared.index_bytes() > 0);
+        assert_eq!(ConcurrentRetriever::name(shared.as_ref()), "BF T-RAG");
+    }
+}
+
+#[cfg(test)]
 mod tests {
     use super::*;
     use crate::forest::Tree;
 
-    fn forest() -> Arc<Forest> {
+    pub(super) fn forest() -> Arc<Forest> {
         let mut f = Forest::new();
         let names: Vec<_> = ["h", "a", "b", "c", "d"]
             .iter()
@@ -118,6 +176,9 @@ mod tests {
     #[test]
     fn reports_index_memory() {
         let r = BloomTRag::new(forest(), 0.01);
-        assert!(r.index_bytes() > 0);
+        // qualified: BloomTRag reports the same bytes through both the
+        // owned and the shared retriever traits
+        assert!(Retriever::index_bytes(&r) > 0);
+        assert_eq!(Retriever::index_bytes(&r), SharedRetriever::index_bytes(&r));
     }
 }

@@ -21,7 +21,7 @@ pub mod cuckoo_rag;
 pub mod naive;
 pub mod sharded_rag;
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::forest::{EntityAddress, Forest};
 
@@ -128,6 +128,72 @@ impl ConcurrentRetriever for MutexRetriever {
 
     fn index_bytes(&self) -> usize {
         self.inner.lock().unwrap().index_bytes()
+    }
+}
+
+/// The read path of a retriever whose index is **immutable after
+/// build** — the Bloom baselines' per-node annotations are written once
+/// and only ever read, so sharing them across serving threads needs no
+/// lock at all. `rebuild` produces a replacement index for knowledge
+/// updates (the whole-annotation rebuild cost the CF design avoids).
+pub trait SharedRetriever: Send + Sync {
+    /// Algorithm name as printed in result tables.
+    fn name(&self) -> &'static str;
+
+    /// Append all addresses of `entity` to `out` through `&self`.
+    fn find_shared(&self, entity: &str, out: &mut Vec<EntityAddress>);
+
+    /// Build a replacement index over the grown forest.
+    fn rebuild(&self, forest: Arc<Forest>) -> Self
+    where
+        Self: Sized;
+
+    /// Approximate heap bytes of the index structures.
+    fn index_bytes(&self) -> usize;
+}
+
+/// Adapts a [`SharedRetriever`] to [`ConcurrentRetriever`] by sharing
+/// the immutable index as an `Arc`: readers clone the `Arc` under a
+/// momentary read lock and then search with **no lock held**, so — in
+/// contrast to [`MutexRetriever`] — throughput scales with reader
+/// threads (the ROADMAP's "Concurrent Bloom baselines" item, measured
+/// by `benches/concurrent.rs`). Reindexing builds the new annotations
+/// off to the side and swaps the `Arc`; in-flight readers finish on the
+/// generation they started with.
+pub struct ArcRetriever<R: SharedRetriever> {
+    inner: RwLock<Arc<R>>,
+}
+
+impl<R: SharedRetriever> ArcRetriever<R> {
+    /// Share a built index.
+    pub fn new(retriever: R) -> Self {
+        ArcRetriever { inner: RwLock::new(Arc::new(retriever)) }
+    }
+
+    /// The current index generation (momentary read lock).
+    pub fn current(&self) -> Arc<R> {
+        self.inner.read().unwrap().clone()
+    }
+}
+
+impl<R: SharedRetriever> ConcurrentRetriever for ArcRetriever<R> {
+    fn name(&self) -> &'static str {
+        self.current().name()
+    }
+
+    fn find_concurrent(&self, entity: &str, out: &mut Vec<EntityAddress>) {
+        // lock held only for the Arc clone; the search itself is free
+        self.current().find_shared(entity, out);
+    }
+
+    fn reindex_concurrent(&self, forest: Arc<Forest>, _new_trees: &[u32]) {
+        // build outside any lock, swap under a short write lock
+        let rebuilt = Arc::new(self.current().rebuild(forest));
+        *self.inner.write().unwrap() = rebuilt;
+    }
+
+    fn index_bytes(&self) -> usize {
+        self.current().index_bytes()
     }
 }
 

@@ -1,0 +1,228 @@
+//! One routed backend: a TCP coordinator address plus its connection
+//! pool and health state. A backend owns the single-request round trip
+//! (`line out, JSON line back`) including the stale-pooled-connection
+//! retry policy; the scatter layer composes these into fan-outs and
+//! failover.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::coordinator::tcp::STATS_REQUEST;
+use crate::rag::config::RouterConfig;
+use crate::router::health::HealthState;
+use crate::router::pool::ConnPool;
+use crate::util::json::Json;
+use crate::util::log;
+
+/// A backend coordinator behind the router.
+#[derive(Debug)]
+pub struct Backend {
+    index: usize,
+    pool: ConnPool,
+    health: HealthState,
+}
+
+impl Backend {
+    /// Backend `index` at `addr`, with the router config's timeouts.
+    pub fn new(index: usize, addr: &str, cfg: &RouterConfig) -> Backend {
+        Backend {
+            index,
+            pool: ConnPool::new(
+                addr,
+                cfg.max_idle_conns,
+                cfg.connect_timeout,
+                cfg.request_timeout,
+            ),
+            health: HealthState::new(cfg.failure_threshold),
+        }
+    }
+
+    /// Position in the router's backend list (= ring index).
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Backend address.
+    pub fn addr(&self) -> &str {
+        self.pool.addr()
+    }
+
+    /// Health state (shared with the prober and the scatter path).
+    pub fn health(&self) -> &HealthState {
+        &self.health
+    }
+
+    /// One request/reply round trip.
+    ///
+    /// At most **one** pooled connection is tried before falling
+    /// through to a *fresh* connection — so a hung backend costs this
+    /// attempt at most 2× the request timeout, never timeout-per-idle-
+    /// socket — and a pooled failure discards the whole idle pool (its
+    /// siblings are from the same era and equally suspect). The fresh
+    /// connection's outcome is authoritative: success resets the health
+    /// failure streak (re-admitting a marked-down backend), failure
+    /// counts toward demotion. The reply being parseable JSON is part
+    /// of "success" — a backend speaking garbage is as unusable as a
+    /// dead one.
+    pub fn request(&self, line: &str) -> io::Result<Json> {
+        debug_assert!(!line.contains('\n'), "protocol is one line per request");
+        if let Some(conn) = self.pool.take_idle() {
+            match self.roundtrip(conn, line) {
+                Ok(json) => {
+                    self.on_success();
+                    return Ok(json);
+                }
+                Err(e) => {
+                    log::debug!(
+                        "stale pooled connection to {}: {e}",
+                        self.addr()
+                    );
+                    self.pool.clear();
+                }
+            }
+        }
+        match self.pool.connect().and_then(|conn| self.roundtrip(conn, line)) {
+            Ok(json) => {
+                self.on_success();
+                Ok(json)
+            }
+            Err(e) => {
+                if self.health.mark_failure() {
+                    log::warn!("backend {} marked unhealthy: {e}", self.addr());
+                    // a down backend's idle sockets are suspect too
+                    self.pool.clear();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Health probe: a `\x01stats` round trip. On success the reply's
+    /// `requests` gauge is recorded as the backend's observed load.
+    pub fn probe(&self) -> io::Result<Json> {
+        self.health.record_probe();
+        let json = self.request(STATS_REQUEST)?;
+        if let Some(r) = json.get("requests").and_then(Json::as_f64) {
+            self.health.record_load(r as u64);
+        }
+        Ok(json)
+    }
+
+    fn on_success(&self) {
+        if self.health.mark_success() {
+            self.health.record_readmission();
+            log::info!("backend {} re-admitted", self.addr());
+        }
+    }
+
+    /// Write `line`, read one reply line, parse it; the connection goes
+    /// back to the pool only after a fully clean round trip.
+    fn roundtrip(&self, mut conn: TcpStream, line: &str) -> io::Result<Json> {
+        conn.write_all(line.as_bytes())?;
+        conn.write_all(b"\n")?;
+        let mut reply = String::new();
+        {
+            let mut reader = BufReader::new(&conn);
+            if reader.read_line(&mut reply)? == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("{} closed before replying", self.addr()),
+                ));
+            }
+        }
+        let json = Json::parse(reply.trim()).map_err(|e| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bad reply from {}: {e}", self.addr()),
+            )
+        })?;
+        self.pool.put_back(conn);
+        Ok(json)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    fn cfg() -> RouterConfig {
+        RouterConfig {
+            connect_timeout: Duration::from_millis(300),
+            request_timeout: Duration::from_millis(500),
+            ..RouterConfig::default()
+        }
+    }
+
+    /// One-shot echo server speaking the line protocol with a fixed
+    /// JSON reply per line received.
+    fn fake_backend(reply: &'static str, conns: usize) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            for _ in 0..conns {
+                let Ok((stream, _)) = listener.accept() else { return };
+                std::thread::spawn(move || {
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    let mut writer = stream;
+                    let mut line = String::new();
+                    while reader.read_line(&mut line).unwrap_or(0) > 0 {
+                        writer.write_all(reply.as_bytes()).unwrap();
+                        writer.write_all(b"\n").unwrap();
+                        line.clear();
+                    }
+                });
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn request_roundtrips_and_pools() {
+        let addr = fake_backend(r#"{"ok":true,"answer":"x"}"#, 1);
+        let b = Backend::new(0, &addr, &cfg());
+        let json = b.request("hello").unwrap();
+        assert_eq!(json.get("ok"), Some(&Json::Bool(true)));
+        // second request reuses the pooled connection (the fake server
+        // accepts exactly one)
+        let json = b.request("again").unwrap();
+        assert_eq!(json.get("answer").and_then(Json::as_str), Some("x"));
+        assert!(b.health().is_healthy());
+    }
+
+    #[test]
+    fn garbage_reply_is_a_failure() {
+        let addr = fake_backend("not json at all", 2);
+        let b = Backend::new(0, &addr, &cfg());
+        let err = b.request("q").expect_err("unparseable reply");
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(!b.health().is_healthy(), "threshold 1: marked down");
+    }
+
+    #[test]
+    fn dead_backend_fails_and_stays_down() {
+        // a port with nothing listening
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let b = Backend::new(0, &addr, &cfg());
+        assert!(b.request("q").is_err());
+        assert!(!b.health().is_healthy());
+        // nothing came back up: stays down
+        assert!(b.request("q").is_err());
+        assert!(!b.health().is_healthy());
+        assert_eq!(b.health().readmissions(), 0);
+    }
+
+    #[test]
+    fn probe_records_backend_load() {
+        let addr = fake_backend(r#"{"requests":7,"failures":0}"#, 1);
+        let b = Backend::new(0, &addr, &cfg());
+        let json = b.probe().unwrap();
+        assert_eq!(json.get("requests").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(b.health().observed_load(), 7);
+        assert_eq!(b.health().probes(), 1);
+    }
+}

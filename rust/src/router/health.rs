@@ -1,0 +1,200 @@
+//! Per-backend health: passive failure marking on the query path,
+//! active probing (the TCP protocol's `\x01stats` control line) with
+//! automatic re-admission, all on lock-free atomics so the scatter path
+//! can consult health without synchronizing with the prober.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::router::backend::Backend;
+use crate::util::log;
+
+/// Health and load observations for one backend. All methods are
+/// `&self` and atomic; counters are monitoring-grade (relaxed).
+#[derive(Debug)]
+pub struct HealthState {
+    healthy: AtomicBool,
+    consecutive_failures: AtomicU32,
+    failure_threshold: u32,
+    probes: AtomicU64,
+    readmissions: AtomicU64,
+    /// Last `requests` gauge read from the backend's `\x01stats` reply
+    /// — backend *load*, not just connectivity.
+    observed_requests: AtomicU64,
+}
+
+impl HealthState {
+    /// New state, initially healthy (a backend must fail to be demoted;
+    /// starting pessimistic would force every cold start through the
+    /// failover path).
+    pub fn new(failure_threshold: u32) -> Self {
+        HealthState {
+            healthy: AtomicBool::new(true),
+            consecutive_failures: AtomicU32::new(0),
+            failure_threshold: failure_threshold.max(1),
+            probes: AtomicU64::new(0),
+            readmissions: AtomicU64::new(0),
+            observed_requests: AtomicU64::new(0),
+        }
+    }
+
+    /// Current serving eligibility.
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::Acquire)
+    }
+
+    /// Record a successful round trip; returns `true` when this
+    /// *re-admitted* a backend that was marked down.
+    pub fn mark_success(&self) -> bool {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        !self.healthy.swap(true, Ordering::AcqRel)
+    }
+
+    /// Record a failed round trip; returns `true` when this crossing of
+    /// the failure threshold marked the backend down.
+    pub fn mark_failure(&self) -> bool {
+        let failures =
+            self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        if failures >= self.failure_threshold {
+            self.healthy.swap(false, Ordering::AcqRel)
+        } else {
+            false
+        }
+    }
+
+    /// Record one active probe round (attempted, regardless of outcome).
+    pub fn record_probe(&self) {
+        self.probes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a re-admission (for the metrics snapshot).
+    pub fn record_readmission(&self) {
+        self.readmissions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the backend's `requests` gauge from a stats probe.
+    pub fn record_load(&self, requests: u64) {
+        self.observed_requests.store(requests, Ordering::Relaxed);
+    }
+
+    /// Last observed backend request counter (0 before any probe).
+    pub fn observed_load(&self) -> u64 {
+        self.observed_requests.load(Ordering::Relaxed)
+    }
+
+    /// Probes attempted so far.
+    pub fn probes(&self) -> u64 {
+        self.probes.load(Ordering::Relaxed)
+    }
+
+    /// Times this backend was re-admitted after being marked down.
+    pub fn readmissions(&self) -> u64 {
+        self.readmissions.load(Ordering::Relaxed)
+    }
+}
+
+/// Background prober: every `interval`, one `\x01stats` round trip per
+/// backend. Success re-admits a down backend (and refreshes its load
+/// gauge); failure demotes it — so a killed backend stops attracting
+/// first-attempt traffic within one probe period even with no queries
+/// flowing, and rejoins automatically when it comes back.
+#[derive(Debug)]
+pub struct HealthProber {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl HealthProber {
+    /// Start probing `backends`; a zero `interval` disables probing
+    /// entirely (no thread — deterministic tests, external checkers).
+    pub fn start(backends: Vec<Arc<Backend>>, interval: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        if interval.is_zero() || backends.is_empty() {
+            return HealthProber { stop, thread: None };
+        }
+        let thread = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("cft-router-prober".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        for b in &backends {
+                            // outcome lands in the backend's HealthState;
+                            // a failed probe is the demotion signal itself
+                            let _ = b.probe();
+                        }
+                        // sleep in short slices so shutdown is prompt
+                        // even with a long probe interval
+                        let mut left = interval;
+                        while !left.is_zero() && !stop.load(Ordering::Acquire)
+                        {
+                            let nap = left.min(Duration::from_millis(25));
+                            std::thread::sleep(nap);
+                            left -= nap;
+                        }
+                    }
+                })
+                .expect("spawn health prober")
+        };
+        HealthProber { stop, thread: Some(thread) }
+    }
+
+    /// Stop and join the prober thread (no-op when probing is off).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            if t.join().is_err() {
+                log::warn!("health prober panicked");
+            }
+        }
+    }
+}
+
+impl Drop for HealthProber {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_and_readmission_transitions() {
+        let h = HealthState::new(2);
+        assert!(h.is_healthy());
+        assert!(!h.mark_failure(), "below threshold: still healthy");
+        assert!(h.is_healthy());
+        assert!(h.mark_failure(), "threshold crossed: marked down");
+        assert!(!h.is_healthy());
+        assert!(!h.mark_failure(), "already down: no new transition");
+        assert!(h.mark_success(), "success re-admits");
+        assert!(h.is_healthy());
+        assert!(!h.mark_success(), "already healthy: no transition");
+        // one success resets the failure streak
+        assert!(!h.mark_failure());
+        assert!(h.is_healthy());
+    }
+
+    #[test]
+    fn load_and_counters() {
+        let h = HealthState::new(1);
+        assert_eq!(h.observed_load(), 0);
+        h.record_load(42);
+        h.record_probe();
+        h.record_readmission();
+        assert_eq!(h.observed_load(), 42);
+        assert_eq!(h.probes(), 1);
+        assert_eq!(h.readmissions(), 1);
+    }
+
+    #[test]
+    fn disabled_prober_spawns_nothing_and_shuts_down() {
+        let mut p = HealthProber::start(Vec::new(), Duration::ZERO);
+        p.shutdown();
+        p.shutdown(); // idempotent
+    }
+}

@@ -1,0 +1,233 @@
+//! Router-level metrics, in the same shape as `coordinator/metrics.rs`:
+//! a cheap mutex-guarded sink, cloneable across threads, snapshotted on
+//! demand. Per-backend latency uses the shared [`LatencyHistogram`].
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+
+/// Snapshot of one backend's counters at an instant.
+#[derive(Clone, Debug)]
+pub struct BackendMetricsSnapshot {
+    pub addr: String,
+    /// Health at snapshot time (from the backend's [`HealthState`]).
+    ///
+    /// [`HealthState`]: crate::router::health::HealthState
+    pub healthy: bool,
+    pub requests: u64,
+    pub failures: u64,
+    pub latency_mean_s: f64,
+    pub latency_p99_s: f64,
+}
+
+/// Snapshot of the router's counters at an instant.
+#[derive(Clone, Debug)]
+pub struct RouterMetricsSnapshot {
+    /// Queries answered (one per `Router::query`, merged or not).
+    pub requests: u64,
+    /// Queries that could not produce an `ok` reply at all.
+    pub failures: u64,
+    /// Queries fanned out to more than one backend.
+    pub fanouts: u64,
+    /// Sub-requests served by a backend other than the key's owner.
+    pub failovers: u64,
+    /// Merged replies missing at least one owner's portion.
+    pub degraded: u64,
+    pub backends: Vec<BackendMetricsSnapshot>,
+}
+
+impl RouterMetricsSnapshot {
+    /// Queries per second over an elapsed window.
+    pub fn throughput(&self, elapsed: Duration) -> f64 {
+        if elapsed.as_secs_f64() == 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / elapsed.as_secs_f64()
+        }
+    }
+
+    /// JSON form (the router front door's `\x01stats` payload).
+    pub fn to_json(&self) -> Json {
+        let backends = self
+            .backends
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("addr", Json::Str(b.addr.clone())),
+                    ("healthy", Json::Bool(b.healthy)),
+                    ("requests", Json::Num(b.requests as f64)),
+                    ("failures", Json::Num(b.failures as f64)),
+                    ("latency_mean_s", Json::Num(b.latency_mean_s)),
+                    ("latency_p99_s", Json::Num(b.latency_p99_s)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("failures", Json::Num(self.failures as f64)),
+            ("fanouts", Json::Num(self.fanouts as f64)),
+            ("failovers", Json::Num(self.failovers as f64)),
+            ("degraded", Json::Num(self.degraded as f64)),
+            ("backends", Json::Arr(backends)),
+        ])
+    }
+}
+
+#[derive(Debug, Default)]
+struct BackendInner {
+    requests: u64,
+    failures: u64,
+    latency: LatencyHistogram,
+}
+
+#[derive(Debug)]
+struct Inner {
+    requests: u64,
+    failures: u64,
+    fanouts: u64,
+    failovers: u64,
+    degraded: u64,
+    backends: Vec<BackendInner>,
+}
+
+/// Thread-shared router metrics sink.
+#[derive(Clone, Debug)]
+pub struct RouterMetrics {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl RouterMetrics {
+    /// New sink for `nbackends` backends.
+    pub fn new(nbackends: usize) -> Self {
+        RouterMetrics {
+            inner: Arc::new(Mutex::new(Inner {
+                requests: 0,
+                failures: 0,
+                fanouts: 0,
+                failovers: 0,
+                degraded: 0,
+                backends: (0..nbackends)
+                    .map(|_| BackendInner::default())
+                    .collect(),
+            })),
+        }
+    }
+
+    /// Record one completed `Router::query` (ok or not).
+    pub fn record_query(&self, ok: bool) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        if !ok {
+            m.failures += 1;
+        }
+    }
+
+    /// Record a multi-backend fanned-out query.
+    pub fn record_fanout(&self) {
+        self.inner.lock().unwrap().fanouts += 1;
+    }
+
+    /// Record a sub-request served off-owner.
+    pub fn record_failover(&self) {
+        self.inner.lock().unwrap().failovers += 1;
+    }
+
+    /// Record a merged reply with a missing portion.
+    pub fn record_degraded(&self) {
+        self.inner.lock().unwrap().degraded += 1;
+    }
+
+    /// Record one backend round trip.
+    pub fn record_backend(&self, idx: usize, ok: bool, latency: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        let b = &mut m.backends[idx];
+        b.requests += 1;
+        if !ok {
+            b.failures += 1;
+        }
+        b.latency.record(latency.as_secs_f64());
+    }
+
+    /// Snapshot against backend identities: `info[i]` is backend `i`'s
+    /// `(addr, healthy-now)` — health lives with the backends, not in
+    /// this sink, so the caller (the router) joins the two.
+    pub fn snapshot(&self, info: &[(String, bool)]) -> RouterMetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        assert_eq!(m.backends.len(), info.len(), "backend count mismatch");
+        RouterMetricsSnapshot {
+            requests: m.requests,
+            failures: m.failures,
+            fanouts: m.fanouts,
+            failovers: m.failovers,
+            degraded: m.degraded,
+            backends: m
+                .backends
+                .iter()
+                .zip(info)
+                .map(|(b, (addr, healthy))| BackendMetricsSnapshot {
+                    addr: addr.clone(),
+                    healthy: *healthy,
+                    requests: b.requests,
+                    failures: b.failures,
+                    latency_mean_s: b.latency.mean(),
+                    latency_p99_s: b.latency.quantile(0.99),
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots_per_backend() {
+        let m = RouterMetrics::new(2);
+        m.record_query(true);
+        m.record_query(false);
+        m.record_fanout();
+        m.record_failover();
+        m.record_degraded();
+        m.record_backend(0, true, Duration::from_millis(2));
+        m.record_backend(1, false, Duration::from_millis(4));
+        let info = vec![("a:1".to_string(), true), ("b:2".to_string(), false)];
+        let s = m.snapshot(&info);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.failures, 1);
+        assert_eq!(s.fanouts, 1);
+        assert_eq!(s.failovers, 1);
+        assert_eq!(s.degraded, 1);
+        assert_eq!(s.backends[0].requests, 1);
+        assert_eq!(s.backends[0].failures, 0);
+        assert!(s.backends[0].healthy);
+        assert_eq!(s.backends[1].failures, 1);
+        assert!(!s.backends[1].healthy);
+        assert!(s.backends[1].latency_mean_s > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let m = RouterMetrics::new(1);
+        m.record_query(true);
+        m.record_backend(0, true, Duration::from_micros(500));
+        let s = m.snapshot(&[("x:1".to_string(), true)]);
+        let back = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.get("requests").and_then(Json::as_f64), Some(1.0));
+        let backends = back.get("backends").unwrap().as_arr().unwrap();
+        assert_eq!(backends[0].get("addr").and_then(Json::as_str), Some("x:1"));
+        assert_eq!(backends[0].get("healthy"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = RouterMetrics::new(0);
+        for _ in 0..50 {
+            m.record_query(true);
+        }
+        let s = m.snapshot(&[]);
+        assert!((s.throughput(Duration::from_secs(5)) - 10.0).abs() < 1e-9);
+    }
+}

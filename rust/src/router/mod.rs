@@ -1,0 +1,121 @@
+//! Distributed shard router: scatter-gather serving over N independent
+//! TCP coordinators (PR 3 — the ROADMAP's "Distributed shards" item).
+//!
+//! The per-shard independence of the in-process
+//! [`ShardedCuckooFilter`](crate::filter::sharded::ShardedCuckooFilter)
+//! — no operation ever coordinates across shards — maps 1:1 onto
+//! multi-process sharding. This subsystem is that map: a thin,
+//! dependency-free L4 in front of any number of `cft-rag serve`
+//! processes, routing by **entity-key ownership** with the same hash
+//! family the filter shards with
+//! ([`rendezvous_score`](crate::filter::fingerprint::rendezvous_score)),
+//! so routing a key to a backend and sharding it inside that backend
+//! never correlate.
+//!
+//! ```text
+//!            clients (newline-delimited queries, JSON-line replies)
+//!                │
+//!                ▼
+//!        ┌──────────────────┐   cft-rag route --backends a,b,c
+//!        │      Router      │   (or embed Router in-process)
+//!        │  ┌────────────┐  │
+//!        │  │ Gazetteer  │  │  query → entity mentions
+//!        │  └─────┬──────┘  │
+//!        │  ┌─────▼──────┐  │
+//!        │  │ ShardRing  │  │  mention → owning backend (rendezvous)
+//!        │  └─────┬──────┘  │
+//!        │  ┌─────▼──────┐  │  single owner: route whole query
+//!        │  │  scatter   │  │  multi owner: fan out owned mentions,
+//!        │  └─┬───┬───┬──┘  │  merge deterministically
+//!        │ ┌──▼┐┌─▼─┐┌▼──┐  │
+//!        │ │CP ││CP ││CP │◄─┼── ConnPool + HealthState per backend
+//!        │ └─┬─┘└─┬─┘└─┬─┘  │    (prober: \x01stats every interval)
+//!        └───┼────┼────┼────┘
+//!            ▼    ▼    ▼
+//!        ┌─────┐┌─────┐┌─────┐
+//!        │coord││coord││coord│   coordinator/tcp.rs processes, each
+//!        │  A  ││  B  ││  C  │   with its own sharded Cuckoo filter
+//!        └─────┘└─────┘└─────┘   (in-process shards ⊂ process shards)
+//! ```
+//!
+//! Failure model: per-backend request timeouts bound the damage of a
+//! slow backend to its own portion of a fan-out; transport errors and
+//! coordinator refusals walk the ring's deterministic failover order
+//! (minimal disruption: only the dead backend's keys move — property-
+//! tested in `ring.rs`); a prober re-admits recovered backends. The
+//! integration tests (`tests/router_integration.rs`) kill a live
+//! backend mid-load and assert zero failed queries.
+
+pub mod backend;
+pub mod health;
+pub mod metrics;
+pub mod pool;
+pub mod ring;
+pub mod scatter;
+
+pub use backend::Backend;
+pub use health::{HealthProber, HealthState};
+pub use metrics::{
+    BackendMetricsSnapshot, RouterMetrics, RouterMetricsSnapshot,
+};
+pub use pool::ConnPool;
+pub use ring::ShardRing;
+pub use scatter::Router;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::coordinator::tcp::STATS_REQUEST;
+use crate::error::Result;
+use crate::util::log;
+
+/// Front-door TCP loop: the router speaks the *same* line protocol as
+/// a single coordinator (`coordinator/tcp.rs`), so clients cannot tell
+/// one node from a fleet. `\x01stats` returns the router-level
+/// snapshot (per-backend health/latency included). Serves until the
+/// process dies — the `cft-rag route` CLI path.
+pub fn serve(router: Arc<Router>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    log::info!("cft-rag router listening on {addr}");
+    for stream in listener.incoming() {
+        match stream {
+            Ok(stream) => {
+                let r = router.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(r, stream);
+                });
+            }
+            Err(e) => {
+                log::warn!("router accept failed (transient): {e}");
+                if e.kind() != std::io::ErrorKind::Interrupted {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(router: Arc<Router>, stream: TcpStream) -> std::io::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        let query = line.trim();
+        if query.is_empty() {
+            continue;
+        }
+        if query == ":quit" {
+            break;
+        }
+        let reply = if query == STATS_REQUEST {
+            router.snapshot().to_json()
+        } else {
+            router.query(query)
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Pooled TCP connections to one backend.
+//!
+//! The router keeps a small free list of idle connections per backend
+//! so the steady-state query path pays no TCP handshake. Freshly opened
+//! sockets get `TCP_NODELAY` (the protocol is one short line each way)
+//! and the router's per-backend IO timeouts, which is what turns a slow
+//! backend into a bounded, degradable failure instead of a stall.
+//!
+//! The pool makes no liveness promise for idle connections — a backend
+//! restart leaves stale sockets behind — so the consumer
+//! (`router/backend.rs`) retries idle-connection failures against a
+//! fresh connection before counting the backend as unhealthy.
+
+use std::io;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Idle-connection pool for one backend address.
+#[derive(Debug)]
+pub struct ConnPool {
+    addr: String,
+    idle: Mutex<Vec<TcpStream>>,
+    max_idle: usize,
+    connect_timeout: Duration,
+    io_timeout: Duration,
+}
+
+impl ConnPool {
+    /// New pool for `addr`, keeping at most `max_idle` idle sockets.
+    /// Zero timeouts mean "no timeout" (blocking IO).
+    pub fn new(
+        addr: impl Into<String>,
+        max_idle: usize,
+        connect_timeout: Duration,
+        io_timeout: Duration,
+    ) -> Self {
+        ConnPool {
+            addr: addr.into(),
+            idle: Mutex::new(Vec::new()),
+            max_idle,
+            connect_timeout,
+            io_timeout,
+        }
+    }
+
+    /// The backend address this pool dials.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Pop one idle connection, if any (freshness not guaranteed).
+    pub fn take_idle(&self) -> Option<TcpStream> {
+        self.idle.lock().unwrap().pop()
+    }
+
+    /// Open a fresh connection with the pool's timeouts applied.
+    pub fn connect(&self) -> io::Result<TcpStream> {
+        let mut last = io::Error::new(
+            io::ErrorKind::AddrNotAvailable,
+            format!("no addresses resolved for {}", self.addr),
+        );
+        for sa in self.addr.to_socket_addrs()? {
+            match if self.connect_timeout.is_zero() {
+                TcpStream::connect(sa)
+            } else {
+                TcpStream::connect_timeout(&sa, self.connect_timeout)
+            } {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    let t = (!self.io_timeout.is_zero()).then_some(self.io_timeout);
+                    stream.set_read_timeout(t)?;
+                    stream.set_write_timeout(t)?;
+                    return Ok(stream);
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    /// Return a connection after a clean round trip (dropped — i.e.
+    /// closed — when the pool is already full).
+    pub fn put_back(&self, stream: TcpStream) {
+        let mut idle = self.idle.lock().unwrap();
+        if idle.len() < self.max_idle {
+            idle.push(stream);
+        }
+    }
+
+    /// Drop every idle connection (e.g. after the backend was marked
+    /// down, so a recovered backend starts from fresh sockets).
+    pub fn clear(&self) {
+        self.idle.lock().unwrap().clear();
+    }
+
+    /// Idle connections currently pooled.
+    pub fn idle_count(&self) -> usize {
+        self.idle.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pool_for(listener: &TcpListener, max_idle: usize) -> ConnPool {
+        ConnPool::new(
+            listener.local_addr().unwrap().to_string(),
+            max_idle,
+            Duration::from_millis(500),
+            Duration::from_millis(500),
+        )
+    }
+
+    #[test]
+    fn connect_checkin_checkout_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let pool = pool_for(&listener, 2);
+        assert!(pool.take_idle().is_none());
+        let c = pool.connect().expect("listener is up");
+        pool.put_back(c);
+        assert_eq!(pool.idle_count(), 1);
+        assert!(pool.take_idle().is_some());
+        assert_eq!(pool.idle_count(), 0);
+    }
+
+    #[test]
+    fn pool_caps_idle_and_clears() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let pool = pool_for(&listener, 2);
+        for _ in 0..4 {
+            let c = pool.connect().unwrap();
+            pool.put_back(c);
+        }
+        assert_eq!(pool.idle_count(), 2, "excess connections dropped");
+        pool.clear();
+        assert_eq!(pool.idle_count(), 0);
+    }
+
+    #[test]
+    fn connect_to_dead_backend_errors() {
+        // bind then drop to get a port that refuses connections
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let pool = ConnPool::new(
+            addr,
+            1,
+            Duration::from_millis(200),
+            Duration::from_millis(200),
+        );
+        assert!(pool.connect().is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Rendezvous (highest-random-weight) backend ring: entity-key →
+//! backend ownership for the shard router.
+//!
+//! Every backend gets a stable seed (FNV-1a of its address); a key's
+//! owner is the backend with the highest
+//! [`rendezvous_score`](crate::filter::fingerprint::rendezvous_score)
+//! — the same mix family that picks in-process shards, so the two
+//! levels of sharding compose without correlation (see
+//! `filter/fingerprint.rs`).
+//!
+//! Rendezvous hashing gives the minimal-disruption property by
+//! construction: removing a backend from consideration only moves the
+//! keys that backend owned (the argmax over a subset is unchanged when
+//! a non-maximal element is dropped), and the full score ranking *is*
+//! the failover order. `tests/router_integration.rs` property-tests
+//! both.
+
+use crate::filter::fingerprint::rendezvous_score;
+use crate::util::rng::fnv1a;
+
+/// Ownership ring over the router's backends. Index-stable: backend `i`
+/// is always `names[i]`; health is tracked elsewhere and passed in as a
+/// predicate, so the ring itself is immutable and lock-free to read.
+#[derive(Clone, Debug)]
+pub struct ShardRing {
+    names: Vec<String>,
+    seeds: Vec<u64>,
+}
+
+impl ShardRing {
+    /// Build over backend addresses (order fixes tie-breaks; duplicate
+    /// addresses are tolerated and tie-break by index).
+    pub fn new<S: Into<String>>(backends: impl IntoIterator<Item = S>) -> Self {
+        let names: Vec<String> = backends.into_iter().map(Into::into).collect();
+        let seeds = names.iter().map(|n| fnv1a(n.as_bytes())).collect();
+        ShardRing { names, seeds }
+    }
+
+    /// Number of backends.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True if the ring fronts no backends.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Address of backend `i`.
+    pub fn name(&self, i: usize) -> &str {
+        &self.names[i]
+    }
+
+    /// Rendezvous score of `key` on backend `i` (test/bench hook).
+    pub fn score(&self, key: u64, i: usize) -> u64 {
+        rendezvous_score(key, self.seeds[i])
+    }
+
+    /// Owner of `key` among the backends where `eligible(i)` holds:
+    /// highest score wins, ties broken by lowest index. `None` when no
+    /// backend is eligible.
+    pub fn owner_where(
+        &self,
+        key: u64,
+        mut eligible: impl FnMut(usize) -> bool,
+    ) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for i in 0..self.names.len() {
+            if !eligible(i) {
+                continue;
+            }
+            let s = self.score(key, i);
+            // strictly-greater keeps the lowest index on score ties
+            match best {
+                Some((bs, _)) if s <= bs => {}
+                _ => best = Some((s, i)),
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Owner of `key` over the whole ring.
+    pub fn owner(&self, key: u64) -> Option<usize> {
+        self.owner_where(key, |_| true)
+    }
+
+    /// All backends ranked by descending score for `key` — element 0 is
+    /// the owner, the rest is the deterministic failover order.
+    pub fn ranked(&self, key: u64) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.names.len()).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(self.score(key, i)), i));
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::fingerprint::entity_key;
+    use crate::util::proptest::forall_simple;
+    use crate::util::rng::Rng;
+
+    fn ring(n: usize) -> ShardRing {
+        ShardRing::new((0..n).map(|i| format!("127.0.0.1:{}", 9000 + i)))
+    }
+
+    #[test]
+    fn ownership_spreads_across_backends() {
+        let r = ring(4);
+        let mut counts = [0usize; 4];
+        for i in 0..8_000u64 {
+            counts[r.owner(fnv1a(&i.to_le_bytes())).unwrap()] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert!(
+                (1_400..2_600).contains(c),
+                "backend {i} owns {c}/8000: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn ranked_head_is_owner_and_covers_all() {
+        let r = ring(5);
+        for name in ["cardiology", "oncology", "ward 3"] {
+            let key = entity_key(name);
+            let ranked = r.ranked(key);
+            assert_eq!(ranked[0], r.owner(key).unwrap());
+            let mut sorted = ranked.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3, 4], "permutation");
+        }
+    }
+
+    #[test]
+    fn owner_where_respects_eligibility() {
+        let r = ring(3);
+        let key = entity_key("cardiology");
+        let owner = r.owner(key).unwrap();
+        // excluding the owner yields the next-ranked backend
+        let fallback = r.owner_where(key, |i| i != owner).unwrap();
+        assert_ne!(fallback, owner);
+        assert_eq!(fallback, r.ranked(key)[1]);
+        // nothing eligible -> None
+        assert_eq!(r.owner_where(key, |_| false), None);
+    }
+
+    #[test]
+    fn minimal_disruption_under_backend_removal() {
+        // Property (the routing invariant of ISSUE 3): removing one
+        // backend reassigns exactly the keys it owned — every other
+        // key keeps its owner. Rendezvous hashing guarantees this;
+        // the test guards against regressions to modulo-style hashing.
+        forall_simple(
+            128,
+            |rng: &mut Rng| {
+                let backends = 2 + rng.range(0, 7); // 2..=8
+                let removed = rng.range(0, backends);
+                let keys: Vec<u64> =
+                    (0..64).map(|_| rng.next_u64()).collect();
+                (backends, removed, keys)
+            },
+            |(backends, removed, keys)| {
+                let r = ring(*backends);
+                for &key in keys {
+                    let before = r.owner(key).unwrap();
+                    let after =
+                        r.owner_where(key, |i| i != *removed).unwrap();
+                    if before == *removed {
+                        if after == *removed {
+                            return Err(format!(
+                                "key {key:#x} still routed to removed \
+                                 backend {removed}"
+                            ));
+                        }
+                    } else if after != before {
+                        return Err(format!(
+                            "key {key:#x} moved {before} -> {after} though \
+                             backend {removed} (not its owner) was removed"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,399 @@
+//! The scatter-gather query path.
+//!
+//! `Router::query` is the distributed analogue of one coordinator
+//! round trip:
+//!
+//! 1. **Localize** — recognize the query's entity mentions (the same
+//!    gazetteer the backends use) and map each to its owning backend
+//!    via the rendezvous ring.
+//! 2. **Route** — a query whose entities all land on one backend (or
+//!    that mentions none) goes there directly, whole. A multi-owner
+//!    query *scatters*: each owning backend receives only its owned
+//!    mentions, so the per-backend retrieval + generation work is the
+//!    owned share, not the whole query repeated N times.
+//! 3. **Gather** — sub-replies merge deterministically (owner order):
+//!    entity union sorted, fact counts summed, answers concatenated in
+//!    owner order, stage times `max`ed (the fan-out ran in parallel).
+//!
+//! Failure containment: each sub-request walks the ring's failover
+//! order (healthy candidates first) for up to `max_attempts` backends;
+//! socket-level errors *and* `ok:false` coordinator replies (queue
+//! closed, backend stopping) both trigger the next candidate. Because
+//! every backend request carries the per-backend IO timeout, one slow
+//! backend can only delay its own portion; if every candidate for a
+//! portion fails, the merged reply is flagged `degraded` rather than
+//! failing the query — unless *no* portion succeeded, which is the only
+//! path to an `ok:false` reply from the router.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{CftError, Result};
+use crate::filter::fingerprint::entity_key;
+use crate::nlp::ner::GazetteerNer;
+use crate::rag::config::RouterConfig;
+use crate::router::backend::Backend;
+use crate::router::health::HealthProber;
+use crate::router::metrics::{RouterMetrics, RouterMetricsSnapshot};
+use crate::router::ring::ShardRing;
+use crate::util::json::Json;
+use crate::util::log;
+use crate::util::rng::fnv1a;
+
+/// One fan-out portion: the mentions routed to one owner, and the
+/// outcome (serving backend index + its reply).
+type Portion = (Vec<String>, io::Result<(usize, Json)>);
+
+/// The shard router: entity-aware scatter-gather over N coordinator
+/// backends. All methods take `&self`; clients query from any number of
+/// threads concurrently.
+pub struct Router {
+    ring: ShardRing,
+    backends: Vec<Arc<Backend>>,
+    ner: GazetteerNer,
+    metrics: RouterMetrics,
+    max_attempts: usize,
+    _prober: HealthProber,
+}
+
+impl Router {
+    /// Build a router over `cfg.backends`, recognizing the entity
+    /// vocabulary in `entity_names` (normally the forest's interner —
+    /// the same names the backends index, so a mention localizes to the
+    /// same key on both sides of the wire).
+    pub fn connect<'a>(
+        entity_names: impl IntoIterator<Item = &'a str>,
+        cfg: &RouterConfig,
+    ) -> Result<Router> {
+        if cfg.backends.is_empty() {
+            return Err(CftError::Config(
+                "router needs at least one backend address".into(),
+            ));
+        }
+        let ring = ShardRing::new(cfg.backends.iter().cloned());
+        let backends: Vec<Arc<Backend>> = cfg
+            .backends
+            .iter()
+            .enumerate()
+            .map(|(i, addr)| Arc::new(Backend::new(i, addr, cfg)))
+            .collect();
+        let prober =
+            HealthProber::start(backends.clone(), cfg.probe_interval);
+        Ok(Router {
+            ring,
+            metrics: RouterMetrics::new(backends.len()),
+            ner: GazetteerNer::new(entity_names),
+            backends,
+            max_attempts: cfg.max_attempts.max(1),
+            _prober: prober,
+        })
+    }
+
+    /// Number of fronted backends.
+    pub fn num_backends(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// The routed backends (health inspection, tests).
+    pub fn backends(&self) -> &[Arc<Backend>] {
+        &self.backends
+    }
+
+    /// The ownership ring (tests, ops tooling).
+    pub fn ring(&self) -> &ShardRing {
+        &self.ring
+    }
+
+    /// Metrics sink handle.
+    pub fn metrics(&self) -> &RouterMetrics {
+        &self.metrics
+    }
+
+    /// Counters joined with live per-backend health.
+    pub fn snapshot(&self) -> RouterMetricsSnapshot {
+        let info: Vec<(String, bool)> = self
+            .backends
+            .iter()
+            .map(|b| (b.addr().to_string(), b.health().is_healthy()))
+            .collect();
+        self.metrics.snapshot(&info)
+    }
+
+    /// Serve one query through the ring; always returns a reply object
+    /// (`ok:false` only when every candidate backend for every portion
+    /// failed).
+    pub fn query(&self, query: &str) -> Json {
+        let query = query.trim();
+        let entities = self.ner.recognize(query);
+
+        // group mentions by owning backend (healthy owners preferred;
+        // BTreeMap fixes the merge order deterministically)
+        let mut groups: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+        for e in entities {
+            let owner = self.owner_of(entity_key(&e));
+            groups.entry(owner).or_default().push(e);
+        }
+
+        let reply = if groups.len() <= 1 {
+            // single-owner fast path: the whole query travels as-is
+            let key = match groups.values().next() {
+                Some(ents) => entity_key(&ents[0]),
+                // no recognized entities: spread by query text so
+                // entity-free traffic still load-balances
+                None => fnv1a(query.as_bytes()),
+            };
+            match self.send_with_failover(key, query) {
+                Ok((_, json)) => annotate(json, 1, false),
+                Err(e) => error_reply(&e),
+            }
+        } else {
+            self.metrics.record_fanout();
+            self.scatter(query, &groups)
+        };
+        self.metrics
+            .record_query(reply.get("ok") == Some(&Json::Bool(true)));
+        reply
+    }
+
+    /// Owner of `key`: highest-ranked healthy backend, or the overall
+    /// owner when nothing is currently healthy (the failover walk will
+    /// try everything anyway).
+    fn owner_of(&self, key: u64) -> usize {
+        self.ring
+            .owner_where(key, |i| self.backends[i].health().is_healthy())
+            .or_else(|| self.ring.owner(key))
+            .expect("ring is non-empty by construction")
+    }
+
+    /// Fan the owned mention groups out in parallel and merge.
+    fn scatter(&self, query: &str, groups: &BTreeMap<usize, Vec<String>>) -> Json {
+        let parts: Vec<Portion> = std::thread::scope(|s| {
+            let handles: Vec<_> = groups
+                .values()
+                .map(|ents| {
+                    s.spawn(move || {
+                        // The sub-request carries only this owner's
+                        // mentions; its first mention keys the failover
+                        // walk. Joined with " and ": the backend
+                        // normalizes punctuation away, so the separator
+                        // must be a word no entity name contains, or
+                        // adjacent mentions could bridge into a
+                        // spurious longer match.
+                        let line = ents.join(" and ");
+                        let key = entity_key(&ents[0]);
+                        (ents.clone(), self.send_with_failover(key, &line))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("scatter worker panicked"))
+                .collect()
+        });
+        self.merge(query, parts)
+    }
+
+    /// Try `line` against the ring's candidates for `key`: healthy
+    /// backends in rank order first, then (still within `max_attempts`)
+    /// the unhealthy ones — a marked-down backend may have just come
+    /// back, and trying it last costs nothing when everything else is
+    /// gone. An `ok:false` protocol reply is treated like a transport
+    /// failure for candidate-walking purposes, but does *not* demote
+    /// the backend's health (it answered; the coordinator refused).
+    fn send_with_failover(
+        &self,
+        key: u64,
+        line: &str,
+    ) -> io::Result<(usize, Json)> {
+        let ranked = self.ring.ranked(key);
+        // one health read per candidate: reading twice (a healthy pass
+        // then an unhealthy pass) would let a concurrent health flip
+        // duplicate a candidate and crowd a live one out of the
+        // max_attempts window
+        let (mut order, unhealthy): (Vec<usize>, Vec<usize>) = ranked
+            .iter()
+            .copied()
+            .partition(|&i| self.backends[i].health().is_healthy());
+        order.extend(unhealthy);
+        order.truncate(self.max_attempts);
+        let owner = ranked[0];
+        let mut last_err = io::Error::new(
+            io::ErrorKind::NotConnected,
+            "no backend candidates",
+        );
+        for idx in order {
+            let t0 = Instant::now();
+            match self.backends[idx].request(line) {
+                Ok(json) => {
+                    let ok = json.get("ok") != Some(&Json::Bool(false));
+                    self.metrics.record_backend(idx, ok, t0.elapsed());
+                    if !ok {
+                        let msg = json
+                            .get("error")
+                            .and_then(Json::as_str)
+                            .unwrap_or("backend refused")
+                            .to_string();
+                        last_err = io::Error::other(msg);
+                        continue;
+                    }
+                    if idx != owner {
+                        self.metrics.record_failover();
+                    }
+                    return Ok((idx, json));
+                }
+                Err(e) => {
+                    self.metrics.record_backend(idx, false, t0.elapsed());
+                    last_err = e;
+                }
+            }
+        }
+        Err(last_err)
+    }
+
+    /// Deterministic merge of the fan-out's portions (already in owner
+    /// order — `scatter` walks a `BTreeMap`).
+    fn merge(
+        &self,
+        query: &str,
+        parts: Vec<Portion>,
+    ) -> Json {
+        let mut entities: BTreeSet<String> = BTreeSet::new();
+        let mut answers: Vec<String> = Vec::new();
+        let mut facts = 0.0;
+        let mut retrieval_us: f64 = 0.0;
+        let mut total_ms: f64 = 0.0;
+        let mut served = 0usize;
+        let mut missing: Vec<String> = Vec::new();
+        let mut last_err = String::new();
+
+        for (ents, outcome) in parts {
+            match outcome {
+                Ok((_, json)) => {
+                    served += 1;
+                    if let Some(arr) =
+                        json.get("entities").and_then(Json::as_arr)
+                    {
+                        entities.extend(
+                            arr.iter()
+                                .filter_map(Json::as_str)
+                                .map(str::to_string),
+                        );
+                    }
+                    if let Some(a) = json.get("answer").and_then(Json::as_str)
+                    {
+                        if !a.is_empty() {
+                            answers.push(a.to_string());
+                        }
+                    }
+                    facts +=
+                        json.get("facts").and_then(Json::as_f64).unwrap_or(0.0);
+                    retrieval_us = retrieval_us.max(
+                        json.get("retrieval_us")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0),
+                    );
+                    total_ms = total_ms.max(
+                        json.get("total_ms")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0),
+                    );
+                }
+                Err(e) => {
+                    missing.extend(ents);
+                    last_err = e.to_string();
+                }
+            }
+        }
+
+        if served == 0 {
+            log::error!("query {query:?}: every portion failed ({last_err})");
+            return error_reply(&io::Error::other(last_err));
+        }
+        let degraded = !missing.is_empty();
+        if degraded {
+            self.metrics.record_degraded();
+            log::warn!(
+                "degraded reply for {query:?}: no backend served {missing:?} \
+                 ({last_err})"
+            );
+        }
+        let mut reply = annotate(
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("answer", Json::Str(answers.join("\n"))),
+                (
+                    "entities",
+                    Json::Arr(
+                        entities.into_iter().map(Json::Str).collect(),
+                    ),
+                ),
+                ("facts", Json::Num(facts)),
+                ("retrieval_us", Json::Num(retrieval_us)),
+                ("total_ms", Json::Num(total_ms)),
+            ]),
+            served,
+            degraded,
+        );
+        if degraded {
+            if let Json::Obj(m) = &mut reply {
+                m.insert(
+                    "missing_entities".into(),
+                    Json::Arr(missing.into_iter().map(Json::Str).collect()),
+                );
+            }
+        }
+        reply
+    }
+}
+
+/// Stamp the router fields onto a backend (or merged) reply.
+fn annotate(reply: Json, backends: usize, degraded: bool) -> Json {
+    match reply {
+        Json::Obj(mut m) => {
+            m.insert("backends".into(), Json::Num(backends as f64));
+            m.insert("degraded".into(), Json::Bool(degraded));
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+/// The router's terminal failure reply.
+fn error_reply(e: &io::Error) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(format!("all backends failed: {e}"))),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connect_requires_backends() {
+        let err = Router::connect(["cardiology"], &RouterConfig::default())
+            .expect_err("no backends configured");
+        assert!(err.to_string().contains("backend"), "{err}");
+    }
+
+    #[test]
+    fn annotate_and_error_shapes() {
+        let r = annotate(
+            Json::obj(vec![("ok", Json::Bool(true))]),
+            3,
+            true,
+        );
+        assert_eq!(r.get("backends").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(r.get("degraded"), Some(&Json::Bool(true)));
+        let e = error_reply(&io::Error::other("boom"));
+        assert_eq!(e.get("ok"), Some(&Json::Bool(false)));
+        assert!(e
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("boom"));
+    }
+}

@@ -5,6 +5,11 @@
 //! Interchange is HLO *text* (see `python/compile/aot.py` and
 //! DESIGN.md): jax >= 0.5 emits protos with 64-bit instruction ids that
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Compiled only with the `xla` feature (a vendored `xla` crate /
+//! xla_extension build): the default dependency-free build substitutes
+//! a stub whose `load` always errs, so callers take their documented
+//! `NativeEngine` fallback path instead of failing to link.
 
 use std::path::Path;
 
@@ -12,6 +17,7 @@ use crate::error::{CftError, Result};
 use crate::runtime::artifact::Manifest;
 
 /// Compiled artifacts + the PJRT client that runs them.
+#[cfg(feature = "xla")]
 pub struct Runtime {
     client: xla::PjRtClient,
     embed_exe: xla::PjRtLoadedExecutable,
@@ -20,6 +26,7 @@ pub struct Runtime {
     manifest: Manifest,
 }
 
+#[cfg(feature = "xla")]
 impl Runtime {
     /// Load every artifact from `dir` and compile it on the CPU client.
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
@@ -147,4 +154,56 @@ impl Runtime {
 // The runtime is used behind a dedicated executor thread by the
 // coordinator; it is Send (raw PJRT handles are plain pointers owned
 // exclusively by the wrapper).
+#[cfg(feature = "xla")]
 unsafe impl Send for Runtime {}
+
+// ---------------------------------------------------------------------
+// Dependency-free stub (default build)
+// ---------------------------------------------------------------------
+
+/// Stub runtime for builds without the `xla` feature. [`Runtime::load`]
+/// still validates the artifact directory (so missing-artifact errors
+/// read the same), then reports that PJRT execution is unavailable;
+/// every caller already falls back to `NativeEngine` on that error.
+#[cfg(not(feature = "xla"))]
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "xla"))]
+impl Runtime {
+    /// Always errs (after manifest validation): PJRT is not compiled in.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let _ = Manifest::load(&dir)?;
+        Err(CftError::Runtime(
+            "PJRT execution not compiled in (build with the `xla` feature \
+             and a vendored xla crate); falling back to the native engine"
+                .into(),
+        ))
+    }
+
+    /// The artifact manifest (shapes).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    /// Embed a padded token batch (unreachable: see [`Runtime::load`]).
+    pub fn embed(&self, _tokens: &[i32]) -> Result<Vec<f32>> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    /// Score a query batch (unreachable: see [`Runtime::load`]).
+    pub fn score(&self, _q: &[f32], _docs: &[f32]) -> Result<Vec<f32>> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    /// Rank facts (unreachable: see [`Runtime::load`]).
+    pub fn rank(&self, _q: &[f32], _facts: &[f32], _lens: &[i32]) -> Result<Vec<f32>> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+}

@@ -144,6 +144,20 @@ impl Args {
             None => default.to_vec(),
         }
     }
+
+    /// Comma-separated string-list flag (e.g. `--backends a:1,b:2` for
+    /// the router); entries are trimmed, empties dropped.
+    pub fn strs_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
 }
 
 /// Convenience macro-free spec builder.
@@ -218,6 +232,20 @@ mod tests {
         let a = parse(&["--sizes", "50,300,600"], vec![spec("sizes", "", None, false)]);
         assert_eq!(a.list_or("sizes", &[1usize]), vec![50, 300, 600]);
         assert_eq!(a.list_or("other", &[1usize, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn string_list_flag() {
+        let a = parse(
+            &["--backends", "127.0.0.1:7171, 127.0.0.1:7172,"],
+            vec![spec("backends", "", None, false)],
+        );
+        assert_eq!(
+            a.strs_or("backends", &[]),
+            vec!["127.0.0.1:7171".to_string(), "127.0.0.1:7172".to_string()]
+        );
+        assert_eq!(a.strs_or("missing", &["x"]), vec!["x".to_string()]);
+        assert!(a.strs_or("missing", &[]).is_empty());
     }
 
     #[test]

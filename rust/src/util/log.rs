@@ -1,0 +1,104 @@
+//! Minimal leveled logging (offline replacement for the `log` facade):
+//! one line per event to stderr, gated by the `CFT_LOG` env var
+//! (`error|warn|info|debug`; default `warn`). Call sites keep the
+//! familiar shape — `use crate::util::log;` then `log::info!(...)`.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+}
+
+fn threshold() -> Level {
+    static THRESHOLD: OnceLock<Level> = OnceLock::new();
+    *THRESHOLD.get_or_init(|| {
+        match std::env::var("CFT_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("info") => Level::Info,
+            Ok("debug") => Level::Debug,
+            // "warn", unset, or unparseable: the quiet-but-audible default
+            _ => Level::Warn,
+        }
+    })
+}
+
+/// True if `level` passes the configured threshold.
+pub fn enabled(level: Level) -> bool {
+    level <= threshold()
+}
+
+/// Emit one log line (used via the level macros, not directly).
+pub fn emit(level: Level, args: fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {}", level.label(), args);
+    }
+}
+
+macro_rules! error {
+    ($($t:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Error, format_args!($($t)*))
+    };
+}
+macro_rules! warn {
+    ($($t:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Warn, format_args!($($t)*))
+    };
+}
+macro_rules! info {
+    ($($t:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Info, format_args!($($t)*))
+    };
+}
+macro_rules! debug {
+    ($($t:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Debug, format_args!($($t)*))
+    };
+}
+
+// Path-invocable macro re-exports: `log::warn!(...)` after
+// `use crate::util::log;`.
+pub(crate) use {debug, error, info, warn};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_most_severe_first() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn emit_respects_threshold() {
+        // default threshold is warn (CFT_LOG unset in tests): error and
+        // warn pass, info and debug are suppressed
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Debug));
+        // every level macro compiles and runs through the emit path,
+        // invoked by path exactly as call sites do (`log::warn!`)
+        crate::util::log::error!("e {}", 1);
+        crate::util::log::warn!("w {}", 2);
+        crate::util::log::info!("i {}", 3);
+        crate::util::log::debug!("d {}", 4);
+    }
+}

@@ -5,6 +5,7 @@
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod log;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

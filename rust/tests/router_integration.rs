@@ -1,0 +1,294 @@
+//! Shard-router integration over REAL in-process TCP backends: each
+//! backend is a full coordinator (batcher, workers, maintainer) behind
+//! `coordinator/tcp.rs`, started with `serve_with_shutdown` so tests
+//! can kill and restart backends without leaking listeners — the
+//! graceful-shutdown satellite of PR 3 exercised end to end.
+
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use cft_rag::coordinator::tcp::{serve_with_shutdown, ServeHandle};
+use cft_rag::coordinator::{Coordinator, CoordinatorConfig};
+use cft_rag::data::corpus::corpus_from_texts;
+use cft_rag::data::hospital::{HospitalConfig, HospitalDataset};
+use cft_rag::filter::fingerprint::entity_key;
+use cft_rag::rag::config::{RagConfig, RouterConfig};
+use cft_rag::router::Router;
+use cft_rag::runtime::engine::{Engine, NativeEngine};
+use cft_rag::util::json::Json;
+
+/// One in-process backend: a coordinator behind a real TCP listener.
+struct TestBackend {
+    coordinator: Arc<Coordinator>,
+    handle: Option<ServeHandle>,
+    addr: String,
+}
+
+impl TestBackend {
+    fn start(ds: &HospitalDataset, addr: &str) -> TestBackend {
+        let forest = Arc::new(ds.build_forest());
+        let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+        let coordinator = Arc::new(
+            Coordinator::start(
+                forest,
+                corpus_from_texts(&ds.documents()),
+                engine,
+                RagConfig::default(),
+                CoordinatorConfig { workers: 2, ..Default::default() },
+            )
+            .expect("backend coordinator"),
+        );
+        let handle = serve_with_shutdown(coordinator.clone(), addr)
+            .expect("backend listener");
+        let addr = handle.addr().to_string();
+        TestBackend { coordinator, handle: Some(handle), addr }
+    }
+
+    /// Hard stop: listener down, coordinator drained and joined.
+    fn kill(&mut self) {
+        if let Some(h) = self.handle.take() {
+            h.shutdown();
+        }
+        self.coordinator.stop();
+    }
+}
+
+impl Drop for TestBackend {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+fn dataset(trees: usize) -> HospitalDataset {
+    HospitalDataset::generate(HospitalConfig {
+        trees,
+        ..HospitalConfig::default()
+    })
+}
+
+fn entity_names(ds: &HospitalDataset) -> Vec<String> {
+    ds.build_forest()
+        .interner()
+        .iter()
+        .map(|(_, n)| n.to_string())
+        .collect()
+}
+
+fn cluster(
+    ds: &HospitalDataset,
+    n: usize,
+    cfg: &RouterConfig,
+) -> (Vec<TestBackend>, Arc<Router>) {
+    let backends: Vec<TestBackend> =
+        (0..n).map(|_| TestBackend::start(ds, "127.0.0.1:0")).collect();
+    let cfg = RouterConfig {
+        backends: backends.iter().map(|b| b.addr.clone()).collect(),
+        ..cfg.clone()
+    };
+    let names = entity_names(ds);
+    let router = Arc::new(
+        Router::connect(names.iter().map(String::as_str), &cfg)
+            .expect("router"),
+    );
+    (backends, router)
+}
+
+/// Deterministic-traffic config: no background prober.
+fn quiet_cfg() -> RouterConfig {
+    RouterConfig {
+        probe_interval: Duration::ZERO,
+        connect_timeout: Duration::from_secs(2),
+        request_timeout: Duration::from_secs(10),
+        ..RouterConfig::default()
+    }
+}
+
+fn is_ok(reply: &Json) -> bool {
+    reply.get("ok") == Some(&Json::Bool(true))
+}
+
+#[test]
+fn single_entity_queries_route_deterministically() {
+    let ds = dataset(4);
+    let (_backends, router) = cluster(&ds, 4, &quiet_cfg());
+    for _ in 0..3 {
+        let reply = router.query("what is the parent unit of cardiology");
+        assert!(is_ok(&reply), "{reply}");
+        assert_eq!(reply.get("backends").and_then(Json::as_f64), Some(1.0));
+        assert!(reply
+            .get("entities")
+            .and_then(Json::as_arr)
+            .is_some_and(|e| !e.is_empty()));
+    }
+    // all three identical queries landed on the one owning backend
+    let snap = router.snapshot();
+    let loads: Vec<u64> = snap.backends.iter().map(|b| b.requests).collect();
+    assert_eq!(loads.iter().sum::<u64>(), 3, "{loads:?}");
+    assert_eq!(loads.iter().filter(|&&r| r > 0).count(), 1, "{loads:?}");
+    let owner = router.ring().owner(entity_key("cardiology")).unwrap();
+    assert!(loads[owner] == 3, "owner {owner} should serve all: {loads:?}");
+}
+
+#[test]
+fn multi_owner_queries_scatter_and_merge() {
+    let ds = dataset(6);
+    let (_backends, router) = cluster(&ds, 4, &quiet_cfg());
+    // pick entities until they span at least two owners (which exact
+    // names spread where depends only on stable hashes, so walk the
+    // vocabulary instead of hard-coding hash outcomes)
+    let names = entity_names(&ds);
+    let mut picked: Vec<&str> = Vec::new();
+    let mut owners = std::collections::BTreeSet::new();
+    for n in &names {
+        picked.push(n);
+        owners.insert(router.ring().owner(entity_key(n)).unwrap());
+        if owners.len() >= 2 && picked.len() >= 3 {
+            break;
+        }
+    }
+    assert!(owners.len() >= 2, "vocabulary spans one owner only?");
+    let query = format!("describe the hierarchy around {}", picked.join(" and "));
+    let reply = router.query(&query);
+    assert!(is_ok(&reply), "{reply}");
+    assert_eq!(
+        reply.get("backends").and_then(Json::as_f64),
+        Some(owners.len() as f64),
+        "one portion per owner: {reply}"
+    );
+    assert_eq!(reply.get("degraded"), Some(&Json::Bool(false)));
+    let merged: Vec<&str> = reply
+        .get("entities")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    for p in &picked {
+        assert!(merged.contains(p), "{p} missing from merged {merged:?}");
+    }
+    assert!(router.snapshot().fanouts >= 1);
+}
+
+#[test]
+fn killing_one_backend_mid_load_fails_zero_queries() {
+    let ds = dataset(6);
+    let (mut backends, router) = cluster(&ds, 3, &quiet_cfg());
+    let names = entity_names(&ds);
+    let queries: Vec<String> = names
+        .iter()
+        .take(24)
+        .map(|n| format!("where does {n} sit in the organization"))
+        .collect();
+
+    const CLIENTS: usize = 4;
+    const PHASE1: usize = 5;
+    const PHASE2: usize = 20;
+    let mid_load = Arc::new(Barrier::new(CLIENTS + 1));
+    let failures = Mutex::new(Vec::<String>::new());
+
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let router = router.clone();
+            let mid_load = mid_load.clone();
+            let queries = &queries;
+            let failures = &failures;
+            s.spawn(move || {
+                let mut serve = |i: usize| {
+                    let q = &queries[(c * 7 + i) % queries.len()];
+                    let reply = router.query(q);
+                    if !is_ok(&reply) {
+                        failures.lock().unwrap().push(reply.to_string());
+                    }
+                };
+                for i in 0..PHASE1 {
+                    serve(i);
+                }
+                // all clients are mid-load when the kill happens; they
+                // keep querying while backend 0 goes down
+                mid_load.wait();
+                for i in PHASE1..PHASE1 + PHASE2 {
+                    serve(i);
+                }
+            });
+        }
+        mid_load.wait();
+        backends[0].kill();
+    });
+
+    let failed = failures.into_inner().unwrap();
+    assert!(
+        failed.is_empty(),
+        "{} queries failed despite failover: {:?}",
+        failed.len(),
+        failed.first()
+    );
+    let snap = router.snapshot();
+    assert_eq!(snap.requests, (CLIENTS * (PHASE1 + PHASE2)) as u64);
+    assert_eq!(snap.failures, 0);
+
+    // a key owned by the dead backend must still get a non-error reply,
+    // served by a failover candidate
+    if let Some(victim) = names
+        .iter()
+        .find(|n| router.ring().owner(entity_key(n.as_str())) == Some(0))
+    {
+        let before = router.snapshot().failovers;
+        let reply = router.query(&format!("tell me about {victim}"));
+        assert!(is_ok(&reply), "{reply}");
+        assert!(
+            router.snapshot().failovers > before,
+            "dead owner must be failed over"
+        );
+    }
+}
+
+#[test]
+fn prober_observes_load_and_readmits_restarted_backend() {
+    let ds = dataset(4);
+    let cfg = RouterConfig {
+        probe_interval: Duration::from_millis(40),
+        connect_timeout: Duration::from_secs(2),
+        request_timeout: Duration::from_secs(10),
+        ..RouterConfig::default()
+    };
+    let (mut backends, router) = cluster(&ds, 2, &cfg);
+
+    // real queries raise the backend-side request counters; the prober
+    // reads them through the \x01stats control line
+    for _ in 0..3 {
+        assert!(is_ok(&router.query("describe the hierarchy around cardiology")));
+    }
+    // poll-wait with a fresh deadline per phase (CI can be slow)
+    fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting: {what}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+    let observed = |router: &Router| -> u64 {
+        router
+            .backends()
+            .iter()
+            .map(|b| b.health().observed_load())
+            .sum()
+    };
+    wait_until("prober sees the backend load", || observed(&router) >= 3);
+    assert!(router.backends().iter().all(|b| b.health().probes() > 0));
+
+    // kill backend 0: the prober demotes it without any query traffic
+    let addr = backends[0].addr.clone();
+    backends[0].kill();
+    wait_until("prober demotes the dead backend", || {
+        !router.backends()[0].health().is_healthy()
+    });
+
+    // restart on the same port: the prober re-admits automatically
+    backends[0] = TestBackend::start(&ds, &addr);
+    wait_until("prober re-admits the recovered backend", || {
+        router.backends()[0].health().is_healthy()
+    });
+    assert!(router.backends()[0].health().readmissions() >= 1);
+    // and the fleet serves as before
+    assert!(is_ok(&router.query("what is the parent unit of oncology")));
+}

@@ -22,6 +22,12 @@ if [[ "$fast" == 0 ]]; then
   echo "==> cargo build --release"
   cargo build --release
 
+  # Examples are the documented entry points (serve_requests drives the
+  # router mode); build them all so the multi-process serving path can't
+  # silently rot out of the default build graph.
+  echo "==> cargo build --release --examples"
+  cargo build --release --examples
+
   # The harness=false benches are not part of the test build, so without
   # this they can bit-rot silently; --no-run compiles them without
   # running (benches/* are long-running and not pass/fail gates).
@@ -29,6 +35,9 @@ if [[ "$fast" == 0 ]]; then
   cargo bench --no-run
 fi
 
+# The full suite includes tests/router_integration.rs (real TCP
+# backends in-process — the multi-process serving path); cargo reports
+# failing test names, so no separate named run is needed.
 echo "==> cargo test -q"
 cargo test -q
 
