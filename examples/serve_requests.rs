@@ -10,6 +10,8 @@
 //!        --native (skip artifacts)
 //!        --router N (serve through the shard router over N in-process
 //!        TCP backends; 0 = direct coordinator) --clients N
+//!        --replicas R (router mode: key-partitioned backends with
+//!        R-way replication; 0 = full-index backends)
 //!
 //! Retrieval runs on the sharded Cuckoo filter (`--shards`, default one
 //! shard per core), so worker threads retrieve in parallel instead of
@@ -19,17 +21,18 @@
 //! router scatter-gathers by entity-key ownership (`router/`); compare
 //! `--router 1` vs `--router 4` for the scale-out story.
 
+use std::net::TcpListener;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use cft_rag::coordinator::tcp::serve_with_shutdown;
+use cft_rag::coordinator::tcp::serve_listener;
 use cft_rag::coordinator::{Coordinator, CoordinatorConfig};
 use cft_rag::data::corpus::corpus_from_texts;
 use cft_rag::data::hospital::{HospitalConfig, HospitalDataset};
 use cft_rag::data::workload::{Workload, WorkloadConfig};
 use cft_rag::forest::Forest;
 use cft_rag::llm::judge::{judge, Judgement};
-use cft_rag::rag::config::{RagConfig, RouterConfig};
+use cft_rag::rag::config::{KeyPartition, RagConfig, RouterConfig};
 use cft_rag::router::Router;
 use cft_rag::runtime::engine::{Engine, NativeEngine, PjrtEngine};
 use cft_rag::runtime::default_dir;
@@ -47,6 +50,12 @@ fn main() {
         spec("native", "use the native engine instead of PJRT", None, true),
         spec("router", "route over N in-process TCP backends (0 = direct)", Some("0"), false),
         spec("clients", "concurrent router clients (router mode)", Some("8"), false),
+        spec(
+            "replicas",
+            "key-partition the backends with R-way replication (router mode; 0 = full-index)",
+            Some("0"),
+            false,
+        ),
         spec("trace-out", "record the workload to a JSON trace file", None, false),
         spec("trace-in", "replay a recorded JSON trace (paced by offsets)", None, false),
     ])
@@ -248,32 +257,56 @@ fn router_mode(args: &Args, ds: &HospitalDataset, forest: &Arc<Forest>, n: usize
     let n_requests = args.num_or("requests", 256usize);
     let clients = args.num_or("clients", 8usize).max(1);
     let workers = args.num_or("workers", 4usize);
+    let replicas = args.num_or("replicas", 0usize).min(n);
     let rag_cfg = RagConfig {
         shards: args.num_or("shards", 0),
         ..RagConfig::default()
     };
 
+    // Bind every listener first: a key-partitioned backend needs the
+    // full fleet address list before its index is built.
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind backend"))
+        .collect();
+    let addrs: Vec<String> = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect();
+
     // each backend gets its own engine (sharing one PJRT pool across
     // backends would serialize their neural stages on its mutexes)
     let mut backends = Vec::with_capacity(n);
-    for _ in 0..n {
+    for (i, listener) in listeners.into_iter().enumerate() {
+        let mut cfg = rag_cfg.clone();
+        if replicas > 0 {
+            cfg.replication_factor = replicas;
+            cfg.key_partition = Some(
+                KeyPartition::new(addrs.clone(), i, replicas)
+                    .expect("partition"),
+            );
+        }
         let coordinator = Arc::new(
             Coordinator::start(
                 forest.clone(),
                 corpus_from_texts(&ds.documents()),
                 build_engine(args),
-                rag_cfg.clone(),
+                cfg,
                 CoordinatorConfig { workers, ..Default::default() },
             )
             .expect("backend coordinator"),
         );
-        let handle = serve_with_shutdown(coordinator.clone(), "127.0.0.1:0")
+        let handle = serve_listener(coordinator.clone(), listener)
             .expect("backend listener");
         backends.push((coordinator, handle));
     }
-    let addrs: Vec<String> =
-        backends.iter().map(|(_, h)| h.addr().to_string()).collect();
-    println!("router: {n} backends ({}), {clients} clients", addrs.join(", "));
+    println!(
+        "router: {n} backends ({}), {clients} clients{}",
+        addrs.join(", "),
+        match replicas {
+            0 => " [full-index]".to_string(),
+            r => format!(" [partitioned, R={r}]"),
+        }
+    );
 
     let names: Vec<String> = forest
         .interner()
@@ -283,7 +316,10 @@ fn router_mode(args: &Args, ds: &HospitalDataset, forest: &Arc<Forest>, n: usize
     let router = Arc::new(
         Router::connect(
             names.iter().map(String::as_str),
-            &RouterConfig::for_backends(addrs),
+            &RouterConfig {
+                replication_factor: replicas,
+                ..RouterConfig::for_backends(addrs)
+            },
         )
         .expect("router"),
     );
@@ -357,16 +393,19 @@ fn router_mode(args: &Args, ds: &HospitalDataset, forest: &Arc<Forest>, n: usize
         lat.p99 * 1e3
     );
     println!(
-        "router:          {} fanouts, {} failovers, {} degraded",
-        snap.fanouts, snap.failovers, snap.degraded
+        "router:          {} fanouts, {} failovers, {} replica hits, \
+         {} degraded",
+        snap.fanouts, snap.failovers, snap.replica_hits, snap.degraded
     );
-    for b in &snap.backends {
+    for ((coordinator, _), b) in backends.iter().zip(&snap.backends) {
         println!(
-            "  backend {:<21} {} reqs, {} failures, p99 {:.2} ms{}",
+            "  backend {:<21} {} reqs, {} failures, p99 {:.2} ms, \
+             index {:.1} KiB{}",
             b.addr,
             b.requests,
             b.failures,
             b.latency_p99_s * 1e3,
+            coordinator.index_bytes() as f64 / 1024.0,
             if b.healthy { "" } else { "  [down]" }
         );
     }

@@ -30,17 +30,25 @@
 //!   single-backend arm is bottlenecked on its one serialized
 //!   embed/search batcher; N backends run N batchers.
 //!
+//! And the PR-4 scenario: **R-way replicated partitioned serving** —
+//! 3 key-partitioned backends under a *skewed* (Zipf) single-entity
+//! mention load, R=1 vs R=2. R=1 pins every hot key to one backend;
+//! R=2 lets the least-loaded-replica read path spread each hot key
+//! over two backends, at 2× the per-key index memory — both axes
+//! (throughput and per-backend index bytes) are reported.
+//!
 //! Run: `cargo bench --bench concurrent`. Writes `results/concurrent.csv`,
-//! `results/concurrent_expansion.csv`, `results/concurrent_bloom.csv`
-//! and `results/concurrent_router.csv`.
+//! `results/concurrent_expansion.csv`, `results/concurrent_bloom.csv`,
+//! `results/concurrent_router.csv` and `results/concurrent_replication.csv`.
 
+use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use cft_rag::bench::experiments::experiment_forest;
 use cft_rag::bench::harness::{bench, print_table};
-use cft_rag::coordinator::tcp::serve_with_shutdown;
+use cft_rag::coordinator::tcp::{serve_listener, serve_with_shutdown};
 use cft_rag::coordinator::{Coordinator, CoordinatorConfig};
 use cft_rag::data::corpus::corpus_from_texts;
 use cft_rag::data::hospital::{HospitalConfig, HospitalDataset};
@@ -48,7 +56,7 @@ use cft_rag::data::workload::{Workload, WorkloadConfig};
 use cft_rag::filter::cuckoo::CuckooConfig;
 use cft_rag::filter::sharded::ShardedCuckooFilter;
 use cft_rag::forest::EntityAddress;
-use cft_rag::rag::config::{RagConfig, RouterConfig};
+use cft_rag::rag::config::{KeyPartition, RagConfig, RouterConfig};
 use cft_rag::retrieval::bloom_rag::BloomTRag;
 use cft_rag::retrieval::cuckoo_rag::CuckooTRag;
 use cft_rag::retrieval::sharded_rag::ShardedCuckooTRag;
@@ -375,6 +383,9 @@ fn main() {
 
     // ---- shard router: 1-backend vs N-backend scatter-gather ----
     router_scenario(&args, &out);
+
+    // ---- replication: R=1 vs R=2 partitioned backends, skewed load ----
+    replication_scenario(&args, &out);
 }
 
 /// The PR-3 acceptance scenario: the same client load against the
@@ -524,4 +535,179 @@ fn router_scenario(args: &Args, out: &str) {
     };
     csv.write_to(&router_out).expect("write router csv");
     println!("wrote {router_out}");
+}
+
+/// The ISSUE-4 acceptance scenario: 3 key-partitioned backends under a
+/// skewed (Zipf) single-entity mention load, once with R=1 (every key
+/// pinned to one backend — hot keys hammer their owner) and once with
+/// R=2 (the least-loaded-replica read path spreads each hot key over
+/// two backends). Reports aggregate throughput *and* per-backend index
+/// memory — replication buys read capacity at exactly R× the per-key
+/// index bytes, and this arm makes both sides of that trade visible.
+fn replication_scenario(args: &Args, out: &str) {
+    let queries: usize = args.num_or("router-queries", 384);
+    let clients: usize = args.num_or("router-clients", 8).max(1);
+    let workers: usize = args.num_or("router-workers", 2);
+    let trees: usize = args.num_or("router-trees", 60);
+    const N: usize = 3;
+
+    let ds = HospitalDataset::generate(HospitalConfig {
+        trees,
+        ..HospitalConfig::default()
+    });
+    let forest = Arc::new(ds.build_forest());
+    let names: Vec<String> = forest
+        .interner()
+        .iter()
+        .map(|(_, n)| n.to_string())
+        .collect();
+    // Skewed single-entity mentions: Zipf-drawn, so a handful of hot
+    // keys dominate — the load shape replica-spreading exists for.
+    let workload = Workload::generate(
+        &forest,
+        WorkloadConfig {
+            entities_per_query: 1,
+            queries: 64,
+            zipf_s: 1.2,
+            deep_bias: 0.0,
+            ..Default::default()
+        },
+    );
+
+    println!(
+        "\nreplicated partitioned serving ({N} backends, Zipf mention \
+         load, {queries} queries, {clients} clients):"
+    );
+    let mut csv = CsvTable::new(&[
+        "replicas",
+        "qps",
+        "speedup_vs_r1",
+        "replica_hits",
+        "failovers",
+        "degraded",
+        "failures",
+        "index_kib_mean_per_backend",
+        "index_kib_total",
+    ]);
+    let mut base_qps = 0.0f64;
+    for r in [1usize, 2] {
+        // bind first: partitioned indexes need the final address list
+        let listeners: Vec<TcpListener> = (0..N)
+            .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind"))
+            .collect();
+        let addrs: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        let mut backends = Vec::with_capacity(N);
+        for (i, listener) in listeners.into_iter().enumerate() {
+            let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+            let cfg = RagConfig {
+                replication_factor: r,
+                key_partition: Some(
+                    KeyPartition::new(addrs.clone(), i, r)
+                        .expect("partition"),
+                ),
+                ..RagConfig::default()
+            };
+            let coordinator = Arc::new(
+                Coordinator::start(
+                    forest.clone(),
+                    corpus_from_texts(&ds.documents()),
+                    engine,
+                    cfg,
+                    CoordinatorConfig { workers, ..Default::default() },
+                )
+                .expect("backend coordinator"),
+            );
+            let handle = serve_listener(coordinator.clone(), listener)
+                .expect("backend listener");
+            backends.push((coordinator, handle));
+        }
+        let router = Arc::new(
+            Router::connect(
+                names.iter().map(String::as_str),
+                &RouterConfig {
+                    replication_factor: r,
+                    // fast probe cadence so the least-loaded gauge
+                    // tracks the skew within the short bench window
+                    probe_interval: Duration::from_millis(25),
+                    ..RouterConfig::for_backends(addrs)
+                },
+            )
+            .expect("router"),
+        );
+
+        for q in workload.queries.iter().take(8) {
+            let _ = router.query(&q.text);
+        }
+
+        let t0 = Instant::now();
+        let failures: usize = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let router = router.clone();
+                    let workload = &workload;
+                    let share = queries / clients
+                        + usize::from(c < queries % clients);
+                    s.spawn(move || {
+                        let mut failures = 0usize;
+                        for i in 0..share {
+                            let q = &workload.queries
+                                [(c + i * clients) % workload.queries.len()];
+                            let reply = router.query(&q.text);
+                            if reply.get("ok") != Some(&Json::Bool(true)) {
+                                failures += 1;
+                            }
+                        }
+                        failures
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let qps = queries as f64 / wall;
+        if base_qps == 0.0 {
+            base_qps = qps;
+        }
+        let speedup = qps / base_qps;
+        let snap = router.snapshot();
+        let per_backend: Vec<f64> = backends
+            .iter()
+            .map(|(c, _)| c.index_bytes() as f64 / 1024.0)
+            .collect();
+        let total_kib: f64 = per_backend.iter().sum();
+        let mean_kib = total_kib / N as f64;
+        println!(
+            "  R={r}  {qps:>8.1} q/s ({speedup:.2}x vs R=1)  \
+             {} replica hits  {} failovers  {} degraded  {failures} \
+             failures  index {mean_kib:.1} KiB/backend ({total_kib:.1} \
+             KiB fleet)",
+            snap.replica_hits, snap.failovers, snap.degraded,
+        );
+        csv.push(&[
+            r.to_string(),
+            format!("{qps}"),
+            format!("{speedup}"),
+            snap.replica_hits.to_string(),
+            snap.failovers.to_string(),
+            snap.degraded.to_string(),
+            failures.to_string(),
+            format!("{mean_kib}"),
+            format!("{total_kib}"),
+        ]);
+
+        drop(router); // prober stops before its backends vanish
+        for (coordinator, handle) in backends {
+            handle.shutdown();
+            coordinator.stop();
+        }
+    }
+    let rep_out = match out.strip_suffix(".csv") {
+        Some(stem) => format!("{stem}_replication.csv"),
+        None => format!("{out}_replication.csv"),
+    };
+    csv.write_to(&rep_out).expect("write replication csv");
+    println!("wrote {rep_out}");
 }

@@ -1,5 +1,24 @@
-//! L3 serving coordinator: dynamic batcher, worker pool, metrics, and a
-//! TCP front end. See `server.rs` for the stage diagram.
+//! L3 serving coordinator: one process that turns the single-threaded
+//! pipeline into a multi-client server.
+//!
+//! A coordinator owns four cooperating stages (diagram in `server.rs`):
+//! a bounded **submit queue** with explicit backpressure, a **dynamic
+//! batcher** that embeds and vector-searches admitted queries at the
+//! engine's batch size, a **worker pool** that runs NER → tree
+//! retrieval → context → generation per query against a shared
+//! [`ConcurrentRetriever`](crate::retrieval::ConcurrentRetriever)
+//! (per-shard read locks, no global retriever mutex), and a
+//! **maintainer thread** that drains filter migrations and temperature
+//! re-sorts off the hot path.
+//!
+//! The TCP front end (`tcp.rs`) exposes all of it over the
+//! newline-delimited line protocol specified in `docs/PROTOCOL.md`:
+//! query lines, the `\x01stats` load/health snapshot, and the
+//! `\x01insert` / `\x01delete` dynamic index updates that the L4 shard
+//! router (`router/`) broadcasts to a key's replica set. A coordinator
+//! started with a [`KeyPartition`](crate::rag::config::KeyPartition)
+//! indexes only its owned slice of the entity-key space — the
+//! partitioned-backend half of the router's R-way replication story.
 
 pub mod batcher;
 pub mod metrics;

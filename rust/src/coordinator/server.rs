@@ -108,10 +108,26 @@ pub struct Coordinator {
     submit_tx: Mutex<Option<SyncSender<Job>>>,
     metrics: Metrics,
     threads: Mutex<Vec<JoinHandle<()>>>,
+    /// Kept for the dynamic-update path: `\x01insert` addresses are
+    /// validated against this forest before touching the index.
+    forest: Arc<Forest>,
+    /// The serving index, shared with the worker pool — the
+    /// `\x01insert`/`\x01delete` control lines mutate it through the
+    /// concurrent point-update methods (shard write locks only).
+    retriever: Arc<dyn ConcurrentRetriever>,
+    /// This backend's key partition, if the fleet is partitioned —
+    /// consulted so a misrouted `\x01insert` NACKs instead of being
+    /// indistinguishable from an idempotent retry.
+    partition: Option<crate::rag::config::KeyPartition>,
 }
 
 impl Coordinator {
     /// Build all stages and spawn the batcher + worker threads.
+    ///
+    /// Validates `rag_cfg` first ([`RagConfig::validate`]): a backend
+    /// started with a key partition that contradicts its replication
+    /// factor or algorithm fails here instead of silently serving the
+    /// wrong slice of the key space.
     pub fn start(
         forest: Arc<Forest>,
         documents: Vec<Document>,
@@ -119,6 +135,7 @@ impl Coordinator {
         rag_cfg: RagConfig,
         cfg: CoordinatorConfig,
     ) -> Result<Coordinator> {
+        rag_cfg.validate()?;
         let store = Arc::new(VectorStore::build(engine.as_ref(), documents)?);
         let ner = Arc::new(GazetteerNer::new(
             forest.interner().iter().map(|(_, n)| n),
@@ -226,6 +243,9 @@ impl Coordinator {
             submit_tx: Mutex::new(Some(submit_tx)),
             metrics,
             threads: Mutex::new(threads),
+            forest,
+            retriever,
+            partition: rag_cfg.key_partition,
         })
     }
 
@@ -266,6 +286,71 @@ impl Coordinator {
     /// Metrics handle.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Apply a dynamic entity-index **insert** (the `\x01insert` control
+    /// line, `docs/PROTOCOL.md`): register one occurrence of `entity` at
+    /// `(tree, node)`. The address is validated against this backend's
+    /// forest — an occurrence pointing at a tree or node that does not
+    /// exist would panic a later retrieval, so it is rejected here.
+    /// Returns whether the index changed: an occurrence that is already
+    /// indexed (a retried broadcast) is an idempotent `Ok(false)`.
+    /// Errors when the address is invalid, the retriever cannot apply
+    /// point updates, or this backend's key partition assigns the key
+    /// elsewhere (a misrouted write must not ack).
+    pub fn update_entity(&self, entity: &str, tree: u32, node: u32) -> Result<bool> {
+        let t = self.forest.trees().get(tree as usize).ok_or_else(|| {
+            CftError::Config(format!(
+                "tree {tree} out of range ({} trees)",
+                self.forest.len()
+            ))
+        })?;
+        if (node as usize) >= t.len() {
+            return Err(CftError::Config(format!(
+                "node {node} out of range ({} nodes in tree {tree})",
+                t.len()
+            )));
+        }
+        if let Some(p) = &self.partition {
+            if !p.owns(crate::filter::fingerprint::entity_key(entity)) {
+                return Err(CftError::Config(format!(
+                    "key {entity:?} is not in this backend's partition"
+                )));
+            }
+        }
+        match self
+            .retriever
+            .insert_occurrence(entity, crate::forest::EntityAddress::new(tree, node))
+        {
+            Some(applied) => Ok(applied),
+            None => Err(CftError::Config(format!(
+                "{} does not support dynamic point updates",
+                self.retriever.name()
+            ))),
+        }
+    }
+
+    /// Apply a dynamic entity-index **delete** (the `\x01delete` control
+    /// line, paper Algorithm 2): drop `entity` from the index entirely.
+    /// Returns whether the entity was present — removing an absent (or,
+    /// on a partitioned backend, un-owned) key is an idempotent
+    /// `Ok(false)`. Errors only when the retriever cannot apply point
+    /// updates at all.
+    pub fn remove_entity(&self, entity: &str) -> Result<bool> {
+        match self.retriever.remove_entity_concurrent(entity) {
+            Some(existed) => Ok(existed),
+            None => Err(CftError::Config(format!(
+                "{} does not support dynamic point updates",
+                self.retriever.name()
+            ))),
+        }
+    }
+
+    /// Approximate heap bytes of the serving index — a key-partitioned
+    /// backend reports roughly `R/N` of a full-index backend (the memory
+    /// axis of the replication bench in `benches/concurrent.rs`).
+    pub fn index_bytes(&self) -> usize {
+        self.retriever.index_bytes()
     }
 
     /// True once [`stop`](Coordinator::stop) has closed the submit
@@ -542,6 +627,78 @@ mod tests {
         enqueue(&tx, test_job("second"), Duration::from_secs(2))
             .expect("frees up within the deadline");
         assert_eq!(drainer.join().unwrap(), "first");
+    }
+
+    #[test]
+    fn dynamic_update_validates_and_applies() {
+        let ds = HospitalDataset::generate(HospitalConfig {
+            trees: 6,
+            ..HospitalConfig::default()
+        });
+        let forest = Arc::new(ds.build_forest());
+        let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+        let c = Coordinator::start(
+            forest.clone(),
+            corpus_from_texts(&ds.documents()),
+            engine,
+            RagConfig::default(),
+            CoordinatorConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+
+        // out-of-forest addresses are rejected before touching the index
+        assert!(c.update_entity("cardiology", 9999, 0).is_err());
+        assert!(c.update_entity("cardiology", 0, 9999).is_err());
+
+        // delete a known entity: retrieval for it goes dark, idempotently
+        let addr = forest
+            .entity_id("cardiology")
+            .map(|id| forest.scan_addresses(id)[0])
+            .expect("cardiology in the hospital forest");
+        let before = c.query_blocking("tell me about cardiology").unwrap();
+        assert!(before.fact_count > 0);
+        assert!(c.remove_entity("cardiology").unwrap());
+        assert!(!c.remove_entity("cardiology").unwrap(), "idempotent");
+        let gone = c.query_blocking("tell me about cardiology").unwrap();
+        assert_eq!(gone.fact_count, 0, "deleted entity must stop retrieving");
+
+        // re-inserting one of its real occurrences brings it back; a
+        // retried identical insert is an idempotent no-op, not a dup
+        assert!(c.update_entity("cardiology", addr.tree, addr.node).unwrap());
+        assert!(
+            !c.update_entity("cardiology", addr.tree, addr.node).unwrap(),
+            "retried insert must not duplicate the occurrence"
+        );
+        let back = c.query_blocking("tell me about cardiology").unwrap();
+        assert!(back.fact_count > 0, "re-inserted entity must retrieve");
+        c.shutdown();
+    }
+
+    #[test]
+    fn start_rejects_invalid_partition_config() {
+        use crate::rag::config::KeyPartition;
+        let ds = HospitalDataset::generate(HospitalConfig {
+            trees: 2,
+            ..HospitalConfig::default()
+        });
+        let forest = Arc::new(ds.build_forest());
+        let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+        let cfg = RagConfig {
+            replication_factor: 1, // contradicts the R=2 partition below
+            key_partition: Some(
+                KeyPartition::new(["a:1", "b:2"], 0, 2).unwrap(),
+            ),
+            ..RagConfig::default()
+        };
+        let err = Coordinator::start(
+            forest,
+            corpus_from_texts(&ds.documents()),
+            engine,
+            cfg,
+            CoordinatorConfig { workers: 1, ..Default::default() },
+        )
+        .expect_err("mismatched partition must fail fast");
+        assert!(err.to_string().contains("replication"), "{err}");
     }
 
     #[test]

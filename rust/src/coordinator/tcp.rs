@@ -1,21 +1,35 @@
 //! Minimal TCP line protocol in front of the coordinator: one query per
 //! line in, one JSON object per line out. `cft-rag serve --port N`.
+//! The full wire format — request lines, control lines, and every reply
+//! field — is specified in `docs/PROTOCOL.md`; this module is its
+//! backend-side implementation (the router front door in `router/`
+//! speaks the same lines).
 //!
-//! Two protocol extras beyond plain queries:
+//! Protocol extras beyond plain queries (all parsed by
+//! [`parse_control`]; the `\x01` prefix keeps control lines out of the
+//! natural-language query space):
 //!
 //! * `:quit` closes the connection.
 //! * [`STATS_REQUEST`] (`\x01stats`) returns the coordinator's
 //!   [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot) as one
 //!   JSON line — the shard router's health prober uses it to observe
-//!   backend *load*, and it is handy for single-node ops too. The
-//!   `\x01` prefix keeps the control line out of the natural-language
-//!   query space.
+//!   backend *load*, and it is handy for single-node ops too.
+//! * [`INSERT_REQUEST`] (`\x01insert <tree> <node> <entity…>`) and
+//!   [`DELETE_REQUEST`] (`\x01delete <entity…>`) apply dynamic
+//!   entity-index point updates (paper §5 / Algorithm 2) through
+//!   [`Coordinator::update_entity`] / [`Coordinator::remove_entity`],
+//!   replying `{"ok":…,"applied":…}` — the ack the router's replicated
+//!   write path counts against its quorum.
 //!
-//! Serving comes in two lifetimes: [`serve`] (runs until the process
-//! dies — the CLI path) and [`serve_with_shutdown`], which returns a
+//! Serving comes in three lifetimes: [`serve`] (runs until the process
+//! dies — the CLI path), [`serve_with_shutdown`], which returns a
 //! [`ServeHandle`] whose `shutdown()` stops the accept loop and joins
 //! it — so tests (the router's especially) can start and stop real TCP
-//! backends in-process without leaking listeners.
+//! backends in-process without leaking listeners — and
+//! [`serve_listener`], the pre-bound-listener form: a key-partitioned
+//! fleet must fix every backend's address *before* any index is built,
+//! so callers bind all listeners first, build each coordinator with its
+//! [`KeyPartition`](crate::rag::config::KeyPartition), then serve.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -33,6 +47,64 @@ use crate::util::log;
 /// reply.
 pub const STATS_REQUEST: &str = "\x01stats";
 
+/// Control-line verb for dynamic entity-index inserts:
+/// `\x01insert <tree> <node> <entity…>` (the entity name is the greedy
+/// tail — names contain spaces). See `docs/PROTOCOL.md`.
+pub const INSERT_REQUEST: &str = "\x01insert";
+
+/// Control-line verb for dynamic entity-index deletes:
+/// `\x01delete <entity…>`. See `docs/PROTOCOL.md`.
+pub const DELETE_REQUEST: &str = "\x01delete";
+
+/// A parsed `\x01` control line (`docs/PROTOCOL.md` §Control lines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ControlLine<'a> {
+    /// `\x01stats` — metrics snapshot.
+    Stats,
+    /// `\x01insert <tree> <node> <entity…>` — register one occurrence.
+    Insert { tree: u32, node: u32, entity: &'a str },
+    /// `\x01delete <entity…>` — drop an entity from the index.
+    Delete { entity: &'a str },
+}
+
+/// Parse a control line. Returns `None` when `line` is not a control
+/// line at all (a plain query), and `Some(Err(reason))` for a malformed
+/// or unknown one — the server answers those with `ok:false` rather
+/// than treating binary junk as a natural-language query.
+#[allow(clippy::type_complexity)]
+pub fn parse_control(
+    line: &str,
+) -> Option<std::result::Result<ControlLine<'_>, String>> {
+    let body = line.strip_prefix('\x01')?;
+    let (verb, rest) = match body.split_once(' ') {
+        Some((v, r)) => (v, r.trim()),
+        None => (body, ""),
+    };
+    Some(match verb {
+        "stats" if rest.is_empty() => Ok(ControlLine::Stats),
+        "stats" => Err("\\x01stats takes no arguments".into()),
+        "insert" => {
+            let mut it = rest.splitn(3, ' ');
+            let tree = it.next().unwrap_or("").parse::<u32>();
+            let node = it.next().unwrap_or("").parse::<u32>();
+            let entity = it.next().unwrap_or("").trim();
+            match (tree, node) {
+                (Ok(tree), Ok(node)) if !entity.is_empty() => {
+                    Ok(ControlLine::Insert { tree, node, entity })
+                }
+                _ => Err(
+                    "\\x01insert wants: <tree> <node> <entity...>".into()
+                ),
+            }
+        }
+        "delete" if !rest.is_empty() => {
+            Ok(ControlLine::Delete { entity: rest })
+        }
+        "delete" => Err("\\x01delete wants: <entity...>".into()),
+        other => Err(format!("unknown control line {other:?}")),
+    })
+}
+
 /// Serve until the process is killed. Each connection gets a thread;
 /// queries are newline-delimited; responses are JSON lines.
 pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<()> {
@@ -49,7 +121,18 @@ pub fn serve_with_shutdown(
     coordinator: Arc<Coordinator>,
     addr: &str,
 ) -> Result<ServeHandle> {
-    let listener = TcpListener::bind(addr)?;
+    serve_listener(coordinator, TcpListener::bind(addr)?)
+}
+
+/// [`serve_with_shutdown`] over an **already-bound** listener. This is
+/// how a key-partitioned fleet starts: every backend's address must be
+/// known before any index is built (the partition hashes the address
+/// list), so callers bind all N listeners first, then build each
+/// coordinator with its partition, then hand the listeners here.
+pub fn serve_listener(
+    coordinator: Arc<Coordinator>,
+    listener: TcpListener,
+) -> Result<ServeHandle> {
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let thread = {
@@ -165,15 +248,43 @@ fn handle_conn(coordinator: Arc<Coordinator>, stream: TcpStream) -> std::io::Res
         if query == ":quit" {
             break;
         }
-        let reply = if query == STATS_REQUEST {
-            coordinator.metrics().snapshot().to_json()
-        } else {
-            respond(&coordinator, query)
+        let reply = match parse_control(query) {
+            Some(Ok(ControlLine::Stats)) => {
+                coordinator.metrics().snapshot().to_json()
+            }
+            Some(Ok(ControlLine::Insert { tree, node, entity })) => {
+                update_ack(coordinator.update_entity(entity, tree, node))
+            }
+            Some(Ok(ControlLine::Delete { entity })) => {
+                update_ack(coordinator.remove_entity(entity))
+            }
+            Some(Err(reason)) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(reason)),
+            ]),
+            None => respond(&coordinator, query),
         };
         writer.write_all(reply.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
     }
     Ok(())
+}
+
+/// The one-line ack for a dynamic-update control line: `ok` is whether
+/// the backend processed the request, `applied` whether the index
+/// actually changed (a deleted-but-absent key acks `applied:false`).
+fn update_ack(outcome: Result<bool>) -> Json {
+    match outcome {
+        Ok(applied) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("applied", Json::Bool(applied)),
+        ]),
+        Err(e) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("applied", Json::Bool(false)),
+            ("error", Json::Str(e.to_string())),
+        ]),
+    }
 }
 
 /// Build the JSON reply for one query (exposed for tests).
@@ -342,6 +453,71 @@ mod tests {
         // listener did not leak
         handle.shutdown();
         TcpListener::bind(addr).expect("port released after shutdown");
+    }
+
+    #[test]
+    fn parse_control_lines() {
+        assert_eq!(parse_control("plain query"), None);
+        assert_eq!(parse_control("\x01stats"), Some(Ok(ControlLine::Stats)));
+        assert_eq!(
+            parse_control("\x01insert 3 14 ward 9"),
+            Some(Ok(ControlLine::Insert { tree: 3, node: 14, entity: "ward 9" }))
+        );
+        assert_eq!(
+            parse_control("\x01delete intensive care"),
+            Some(Ok(ControlLine::Delete { entity: "intensive care" }))
+        );
+        for bad in [
+            "\x01stats now",
+            "\x01insert",
+            "\x01insert x y z",
+            "\x01insert 1 2",
+            "\x01delete",
+            "\x01launch missiles",
+        ] {
+            assert!(
+                matches!(parse_control(bad), Some(Err(_))),
+                "{bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn update_control_lines_ack_over_tcp() {
+        let c = coordinator();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                let (stream, _) = listener.accept().unwrap();
+                handle_conn(c, stream).unwrap();
+            })
+        };
+        let mut client = TcpStream::connect(addr).unwrap();
+        // delete a known entity, idempotently re-delete, reject garbage
+        client
+            .write_all(
+                b"\x01delete cardiology\n\x01delete cardiology\n\
+                  \x01insert 0 99999 cardiology\n:quit\n",
+            )
+            .unwrap();
+        let mut reader = BufReader::new(client);
+        let mut expect = |ok: bool, applied: bool| {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let json = Json::parse(line.trim()).expect("ack is JSON");
+            assert_eq!(json.get("ok"), Some(&Json::Bool(ok)), "{line}");
+            assert_eq!(
+                json.get("applied"),
+                Some(&Json::Bool(applied)),
+                "{line}"
+            );
+        };
+        expect(true, true); // first delete applied
+        expect(true, false); // second is an idempotent no-op
+        expect(false, false); // out-of-range node rejected
+        server.join().unwrap();
     }
 
     #[test]

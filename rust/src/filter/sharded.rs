@@ -56,6 +56,14 @@
 //! Aggregate accessors (`len`, `stats`, `memory_bytes`) lock shards one
 //! at a time; they are monitoring APIs and make no cross-shard atomicity
 //! promise.
+//!
+//! The same partition-by-key idea repeats one level up: the router's
+//! [`ShardRing`](crate::router::ring::ShardRing) splits the key space
+//! across *processes* with an independent slice of the same hash family
+//! ([`rendezvous_score`](crate::filter::fingerprint::rendezvous_score)),
+//! and a [`KeyPartition`](crate::rag::config::KeyPartition) restricts a
+//! backend's filter to its owned keys — so in-process shards and
+//! cross-process replicas compose without correlation.
 
 use std::sync::RwLock;
 

@@ -6,13 +6,17 @@
 //!
 //! * Layer 3 (this crate): the improved Cuckoo Filter, the entity forest,
 //!   all baseline retrievers, the pre-processing pipeline, the serving
-//!   coordinator, the distributed shard router (`router/`) and the
-//!   benchmark harness.
+//!   coordinator, and the distributed shard router (`router/`) with
+//!   R-way replicated, key-partitioned backends — plus the benchmark
+//!   harness.
 //! * Layer 2/1 (build-time Python, `python/compile/`): the embedder /
 //!   scorer / ranker JAX graphs and their Pallas kernels, AOT-lowered to
 //!   `artifacts/*.hlo.txt` and executed here via the PJRT CPU client.
 //!
-//! Quick start: see `examples/quickstart.rs`; architecture: `DESIGN.md`.
+//! Start at the repo-level `README.md` for the architecture map and
+//! quickstart commands; the coordinator/router wire protocol is
+//! specified in `docs/PROTOCOL.md`. `examples/quickstart.rs` is the
+//! smallest end-to-end program.
 
 pub mod util;
 pub mod text;

@@ -2,7 +2,9 @@
 
 use std::time::Duration;
 
+use crate::error::{CftError, Result};
 use crate::filter::cuckoo::CuckooConfig;
+use crate::router::ring::ShardRing;
 
 /// Which retrieval algorithm backs the pipeline (paper §4.1–4.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,6 +46,77 @@ impl Algorithm {
     }
 }
 
+/// Key-partition membership of one serving backend in an R-way
+/// replicated fleet: which slice of the entity-key space this backend
+/// must index.
+///
+/// Built over the **same address list** (same strings, same order) that
+/// the router's [`ShardRing`] fronts — the partition embeds its own ring
+/// so that "the keys backend `i` owns" is computed with exactly the
+/// rendezvous ranking the router routes by. A key belongs to the
+/// backends in `ring.replicas(key, replicas)`; everything else is
+/// skipped at index-build time, cutting per-backend filter/annotation
+/// memory to roughly `R/N` of a full index.
+#[derive(Clone, Debug)]
+pub struct KeyPartition {
+    ring: ShardRing,
+    backend_index: usize,
+    replicas: usize,
+}
+
+impl KeyPartition {
+    /// Partition for backend `backend_index` of `backends`, replicating
+    /// every key across its top-`replicas` ranked backends. Errors on an
+    /// empty fleet, an out-of-range index, or `replicas` outside
+    /// `1..=backends.len()`.
+    pub fn new<S: Into<String>>(
+        backends: impl IntoIterator<Item = S>,
+        backend_index: usize,
+        replicas: usize,
+    ) -> Result<KeyPartition> {
+        let ring = ShardRing::new(backends);
+        if ring.is_empty() {
+            return Err(CftError::Config(
+                "key partition needs at least one backend".into(),
+            ));
+        }
+        if backend_index >= ring.len() {
+            return Err(CftError::Config(format!(
+                "backend index {backend_index} out of range ({} backends)",
+                ring.len()
+            )));
+        }
+        if replicas == 0 || replicas > ring.len() {
+            return Err(CftError::Config(format!(
+                "replication factor {replicas} outside 1..={}",
+                ring.len()
+            )));
+        }
+        Ok(KeyPartition { ring, backend_index, replicas })
+    }
+
+    /// True when `key`'s replica set contains this backend — i.e. this
+    /// backend must index the key.
+    pub fn owns(&self, key: u64) -> bool {
+        self.ring.replicas(key, self.replicas).contains(&self.backend_index)
+    }
+
+    /// This backend's position in the fleet's address list.
+    pub fn backend_index(&self) -> usize {
+        self.backend_index
+    }
+
+    /// The replication factor R the partition was built for.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Number of backends in the fleet.
+    pub fn num_backends(&self) -> usize {
+        self.ring.len()
+    }
+}
+
 /// End-to-end pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct RagConfig {
@@ -69,6 +142,19 @@ pub struct RagConfig {
     /// the Figure-5 bench reads); only `shards > 1` shards it. Ignored
     /// by the non-Cuckoo baselines.
     pub shards: usize,
+    /// R-way replication factor of the fleet this backend belongs to
+    /// (how many backends index each entity key). Only meaningful
+    /// together with [`key_partition`](RagConfig::key_partition) — a
+    /// standalone backend (partition `None`) indexes everything
+    /// regardless. Must match the partition's own factor; the
+    /// coordinator validates this at startup.
+    pub replication_factor: usize,
+    /// When set, the Cuckoo retrievers index **only** the keys whose
+    /// replica set contains this backend (enforced at index-build time
+    /// in `make_retriever`/`make_concurrent_retriever`, and on every
+    /// dynamic insert/delete thereafter). `None` = full index (single
+    /// node, or the pre-replication full-index fleet).
+    pub key_partition: Option<KeyPartition>,
 }
 
 impl Default for RagConfig {
@@ -80,6 +166,8 @@ impl Default for RagConfig {
             bloom_fp_rate: 0.01,
             cuckoo: CuckooConfig::default(),
             shards: 0,
+            replication_factor: 1,
+            key_partition: None,
         }
     }
 }
@@ -96,6 +184,45 @@ impl RagConfig {
         } else {
             self.shards
         }
+    }
+
+    /// Build this backend's [`KeyPartition`] for position `backend_index`
+    /// in `backends`, using the configured replication factor.
+    pub fn partition_for<S: Into<String>>(
+        &self,
+        backends: impl IntoIterator<Item = S>,
+        backend_index: usize,
+    ) -> Result<KeyPartition> {
+        KeyPartition::new(
+            backends,
+            backend_index,
+            self.replication_factor.max(1),
+        )
+    }
+
+    /// Validate the partition/replication knobs (the coordinator calls
+    /// this at startup so a mis-deployed backend fails fast instead of
+    /// silently serving the wrong slice of the key space).
+    pub fn validate(&self) -> Result<()> {
+        if let Some(p) = &self.key_partition {
+            if self.algorithm != Algorithm::Cuckoo {
+                return Err(CftError::Config(format!(
+                    "key-partitioned indexes require the Cuckoo retriever \
+                     (got {}): the Bloom/naive baselines annotate whole \
+                     trees and cannot skip per-key",
+                    self.algorithm.label()
+                )));
+            }
+            if p.replicas() != self.replication_factor.max(1) {
+                return Err(CftError::Config(format!(
+                    "key partition was built for R={} but \
+                     replication_factor is {}",
+                    p.replicas(),
+                    self.replication_factor
+                )));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -126,6 +253,21 @@ pub struct RouterConfig {
     pub max_attempts: usize,
     /// Idle pooled connections kept per backend.
     pub max_idle_conns: usize,
+    /// R-way replication of the fleet's indexes. `0` (default) means
+    /// the backends are **full indexes** — any backend can serve any
+    /// key, reads walk the whole ring on failover, and writes broadcast
+    /// to every backend. `R >= 1` means the backends were started with
+    /// a matching [`KeyPartition`]: only a key's top-R ranked backends
+    /// hold it, so reads are served from the least-loaded healthy
+    /// replica (ranked failover stays **within** the replica set — a
+    /// non-replica would answer with silently missing facts) and writes
+    /// fan out to all R replicas.
+    pub replication_factor: usize,
+    /// Per-replica acks required before a broadcast write
+    /// (`\x01insert`/`\x01delete`) reports `ok:true`. `0` (default)
+    /// requires every targeted replica to ack; otherwise at least this
+    /// many (clamped to the target count).
+    pub write_quorum: usize,
 }
 
 impl Default for RouterConfig {
@@ -138,6 +280,8 @@ impl Default for RouterConfig {
             failure_threshold: 1,
             max_attempts: 3,
             max_idle_conns: 4,
+            replication_factor: 0,
+            write_quorum: 0,
         }
     }
 }
@@ -213,6 +357,73 @@ mod tests {
         assert!(!cfg.request_timeout.is_zero());
         let cfg = RouterConfig::for_backends(["a:1", "b:2"]);
         assert_eq!(cfg.backends, vec!["a:1".to_string(), "b:2".to_string()]);
+    }
+
+    #[test]
+    fn key_partition_validates_and_partitions() {
+        use crate::filter::fingerprint::entity_key;
+
+        assert!(KeyPartition::new(Vec::<String>::new(), 0, 1).is_err());
+        assert!(KeyPartition::new(["a:1", "b:2"], 2, 1).is_err(), "index");
+        assert!(KeyPartition::new(["a:1", "b:2"], 0, 0).is_err(), "R=0");
+        assert!(KeyPartition::new(["a:1", "b:2"], 0, 3).is_err(), "R>N");
+
+        // every key is owned by exactly R of the N partitions
+        let backends = ["a:1", "b:2", "c:3", "d:4"];
+        for r in 1..=backends.len() {
+            let parts: Vec<KeyPartition> = (0..backends.len())
+                .map(|i| KeyPartition::new(backends, i, r).unwrap())
+                .collect();
+            for name in ["cardiology", "oncology", "ward 3", "surgery"] {
+                let key = entity_key(name);
+                let holders =
+                    parts.iter().filter(|p| p.owns(key)).count();
+                assert_eq!(holders, r, "{name} at R={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn rag_config_validation_catches_mismatches() {
+        let partition = KeyPartition::new(["a:1", "b:2", "c:3"], 1, 2).unwrap();
+        assert_eq!(partition.backend_index(), 1);
+        assert_eq!(partition.num_backends(), 3);
+
+        let good = RagConfig {
+            replication_factor: 2,
+            key_partition: Some(partition.clone()),
+            ..RagConfig::default()
+        };
+        good.validate().unwrap();
+
+        let wrong_r = RagConfig {
+            replication_factor: 3,
+            key_partition: Some(partition.clone()),
+            ..RagConfig::default()
+        };
+        assert!(wrong_r.validate().is_err(), "R mismatch must fail");
+
+        let wrong_alg = RagConfig {
+            algorithm: Algorithm::Bloom,
+            replication_factor: 2,
+            key_partition: Some(partition),
+            ..RagConfig::default()
+        };
+        assert!(wrong_alg.validate().is_err(), "non-Cuckoo must fail");
+
+        RagConfig::default().validate().unwrap();
+
+        // partition_for wires the configured R through
+        let cfg = RagConfig { replication_factor: 2, ..RagConfig::default() };
+        let p = cfg.partition_for(["a:1", "b:2"], 0).unwrap();
+        assert_eq!(p.replicas(), 2);
+    }
+
+    #[test]
+    fn router_replication_defaults_to_full_index() {
+        let cfg = RouterConfig::default();
+        assert_eq!(cfg.replication_factor, 0, "0 = full-index backends");
+        assert_eq!(cfg.write_quorum, 0, "0 = all replicas must ack");
     }
 
     #[test]

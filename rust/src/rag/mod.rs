@@ -1,9 +1,26 @@
-//! The CFT-RAG pipeline (Figure 1) and its configuration.
+//! The CFT-RAG pipeline (paper Figure 1) and its configuration.
+//!
+//! [`pipeline::RagPipeline`] assembles the whole single-process flow —
+//! query → vector search → gazetteer NER → tree retrieval (the
+//! configured [`Algorithm`]) → context generation → prompt assembly →
+//! answer generation — and [`config::RagConfig`] is the one knob bag
+//! every layer above reads: algorithm choice, context depth, Cuckoo
+//! filter tuning, in-process shard count, and (for R-way replicated
+//! fleets) the [`config::KeyPartition`] that restricts a backend's
+//! index to its slice of the entity-key space.
+//!
+//! The same config also drives the serving layers: the coordinator
+//! builds its shared retriever through
+//! [`pipeline::make_concurrent_retriever`], and the shard router's
+//! [`config::RouterConfig`] lives here too so one module owns every
+//! deployment decision. See the repo-level `README.md` for how the
+//! layers stack and `docs/PROTOCOL.md` for the wire protocol between
+//! them.
 
 pub mod config;
 pub mod pipeline;
 
-pub use config::{Algorithm, RagConfig};
+pub use config::{Algorithm, KeyPartition, RagConfig, RouterConfig};
 pub use pipeline::{
     make_concurrent_retriever, make_retriever, RagPipeline, RagResponse,
 };

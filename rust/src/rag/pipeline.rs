@@ -33,25 +33,50 @@ use crate::vector::{search_topk, VectorStore};
 /// benches and the in-process pipeline). `cfg.shards > 1` selects the
 /// shard-partitioned Cuckoo filter; 0/1 keep the classic unsharded one,
 /// whose probe statistics the Figure-5 reproduction reads.
+///
+/// A configured [`RagConfig::key_partition`] is enforced here, at
+/// index-build time: the Cuckoo retrievers index only the keys whose
+/// replica set contains this backend. The Bloom/naive baselines cannot
+/// partition (their annotations are whole-tree), which
+/// [`RagConfig::validate`] rejects — reaching them here with a
+/// partition set only logs, for callers that skip validation.
 pub fn make_retriever(
     forest: Arc<Forest>,
     cfg: &RagConfig,
 ) -> Box<dyn Retriever + Send> {
+    if cfg.key_partition.is_some() && cfg.algorithm != Algorithm::Cuckoo {
+        crate::util::log::warn!(
+            "key partition is only enforced by the Cuckoo retrievers; \
+             {} will index the full forest",
+            cfg.algorithm.label()
+        );
+    }
     match cfg.algorithm {
         Algorithm::Naive => Box::new(NaiveTRag::new(forest)),
         Algorithm::Bloom => Box::new(BloomTRag::new(forest, cfg.bloom_fp_rate)),
         Algorithm::Bloom2 => Box::new(Bloom2TRag::new(forest, cfg.bloom_fp_rate)),
-        Algorithm::Cuckoo if cfg.shards > 1 => Box::new(
-            ShardedCuckooTRag::with_config(forest, cfg.cuckoo, cfg.shards),
-        ),
-        Algorithm::Cuckoo => Box::new(CuckooTRag::with_config(forest, cfg.cuckoo)),
+        Algorithm::Cuckoo if cfg.shards > 1 => {
+            Box::new(ShardedCuckooTRag::with_partition(
+                forest,
+                cfg.cuckoo,
+                cfg.shards,
+                cfg.key_partition.clone(),
+            ))
+        }
+        Algorithm::Cuckoo => Box::new(CuckooTRag::with_partition(
+            forest,
+            cfg.cuckoo,
+            cfg.key_partition.clone(),
+        )),
     }
 }
 
 /// Build the configured retriever for the **concurrent** serving path
 /// (the coordinator's worker pool). The Cuckoo algorithm gets the
 /// shard-parallel retriever — `cfg.shards == 0` auto-sizes to the
-/// machine — so worker threads retrieve under per-shard read locks. The
+/// machine — so worker threads retrieve under per-shard read locks,
+/// honoring [`RagConfig::key_partition`] exactly like [`make_retriever`]
+/// (a partitioned serving backend indexes only its owned keys). The
 /// Bloom baselines' annotations are read-only after build, so they are
 /// shared lock-free as `Arc`s ([`ArcRetriever`]) — honest concurrent
 /// baselines for the router/coordinator throughput comparisons — and
@@ -61,10 +86,11 @@ pub fn make_concurrent_retriever(
     cfg: &RagConfig,
 ) -> Arc<dyn ConcurrentRetriever> {
     match cfg.algorithm {
-        Algorithm::Cuckoo => Arc::new(ShardedCuckooTRag::with_config(
+        Algorithm::Cuckoo => Arc::new(ShardedCuckooTRag::with_partition(
             forest,
             cfg.cuckoo,
             cfg.resolved_shards(),
+            cfg.key_partition.clone(),
         )),
         Algorithm::Bloom => Arc::new(ArcRetriever::new(BloomTRag::new(
             forest,
@@ -415,6 +441,76 @@ mod tests {
             assert_eq!(a, b, "{name}");
         }
         assert!(r.index_bytes() > 0);
+    }
+
+    #[test]
+    fn partitioned_retrievers_cover_each_key_exactly_r_times() {
+        use crate::rag::config::KeyPartition;
+
+        let ds = HospitalDataset::generate(HospitalConfig {
+            trees: 6,
+            ..HospitalConfig::default()
+        });
+        let forest = Arc::new(ds.build_forest());
+        let addrs = ["10.0.0.1:7171", "10.0.0.2:7171", "10.0.0.3:7171"];
+        for r in [1usize, 2] {
+            // one partitioned retriever per fleet position, both shard
+            // configurations (unsharded CuckooTRag and the sharded one)
+            for shards in [1usize, 4] {
+                let mut retrievers: Vec<Box<dyn Retriever + Send>> = (0
+                    ..addrs.len())
+                    .map(|i| {
+                        let cfg = RagConfig {
+                            shards,
+                            replication_factor: r,
+                            key_partition: Some(
+                                KeyPartition::new(addrs, i, r).unwrap(),
+                            ),
+                            ..RagConfig::default()
+                        };
+                        cfg.validate().unwrap();
+                        make_retriever(forest.clone(), &cfg)
+                    })
+                    .collect();
+                for (_, name) in forest.interner().iter() {
+                    let holders: usize = retrievers
+                        .iter_mut()
+                        .map(|rt| usize::from(!rt.find(name).is_empty()))
+                        .sum();
+                    assert_eq!(
+                        holders, r,
+                        "{name}: {holders} holders at R={r}, shards={shards}"
+                    );
+                }
+            }
+            // the concurrent serving path enforces the same partition
+            let concurrent: Vec<Arc<dyn ConcurrentRetriever>> = (0
+                ..addrs.len())
+                .map(|i| {
+                    let cfg = RagConfig {
+                        shards: 2,
+                        replication_factor: r,
+                        key_partition: Some(
+                            KeyPartition::new(addrs, i, r).unwrap(),
+                        ),
+                        ..RagConfig::default()
+                    };
+                    make_concurrent_retriever(forest.clone(), &cfg)
+                })
+                .collect();
+            let mut out = Vec::new();
+            for (_, name) in forest.interner().iter() {
+                let holders = concurrent
+                    .iter()
+                    .filter(|rt| {
+                        out.clear();
+                        rt.find_concurrent(name, &mut out);
+                        !out.is_empty()
+                    })
+                    .count();
+                assert_eq!(holders, r, "{name} (concurrent) at R={r}");
+            }
+        }
     }
 
     #[test]

@@ -9,12 +9,16 @@ use std::sync::Arc;
 use crate::filter::cuckoo::{CuckooConfig, CuckooFilter};
 use crate::filter::fingerprint::entity_key;
 use crate::forest::{EntityAddress, Forest};
+use crate::rag::config::KeyPartition;
 use crate::retrieval::Retriever;
 
 /// The Cuckoo-Filter-indexed retriever.
 pub struct CuckooTRag {
     forest: Arc<Forest>,
     cf: CuckooFilter,
+    /// When set, only keys whose replica set contains this backend are
+    /// indexed (and dynamic updates for other keys are rejected).
+    partition: Option<KeyPartition>,
 }
 
 impl CuckooTRag {
@@ -25,15 +29,35 @@ impl CuckooTRag {
 
     /// Index with custom filter parameters (ablations).
     pub fn with_config(forest: Arc<Forest>, cfg: CuckooConfig) -> Self {
+        Self::with_partition(forest, cfg, None)
+    }
+
+    /// Index with custom filter parameters, keeping only the keys the
+    /// given [`KeyPartition`] assigns to this backend (`None` = index
+    /// the whole forest). The skipped keys never touch the filter or
+    /// the block arena, so a partitioned backend's index memory is
+    /// roughly `R/N` of a full one.
+    pub fn with_partition(
+        forest: Arc<Forest>,
+        cfg: CuckooConfig,
+        partition: Option<KeyPartition>,
+    ) -> Self {
         let mut cf = CuckooFilter::new(cfg);
         // One forest pass builds every entity's address list, then each
         // list is inserted behind its fingerprint.
         let table = forest.address_table();
         for (id, addrs) in table {
             let key = entity_key(forest.entity_name(id));
-            cf.insert(key, &addrs);
+            if partition.as_ref().map_or(true, |p| p.owns(key)) {
+                cf.insert(key, &addrs);
+            }
         }
-        CuckooTRag { forest, cf }
+        CuckooTRag { forest, cf, partition }
+    }
+
+    /// True when this retriever must index `key` (no partition = all).
+    fn owns(&self, key: u64) -> bool {
+        self.partition.as_ref().map_or(true, |p| p.owns(key))
     }
 
     /// Access the underlying filter (benches/inspection).
@@ -52,17 +76,26 @@ impl CuckooTRag {
     }
 
     /// Dynamic update: register a newly added occurrence of an entity
-    /// (inserts the entity if unknown).
-    pub fn add_occurrence(&mut self, entity: &str, addr: EntityAddress) {
+    /// (inserts the entity if unknown). Returns `false` when a key
+    /// partition excludes the entity from this backend.
+    pub fn add_occurrence(&mut self, entity: &str, addr: EntityAddress) -> bool {
         let key = entity_key(entity);
+        if !self.owns(key) {
+            return false;
+        }
         if !self.cf.push_address(key, addr) {
             self.cf.insert(key, &[addr]);
         }
+        true
     }
 
     /// Dynamic update: remove an entity entirely (paper Algorithm 2).
+    /// Un-owned keys are a no-op `false` — a partitioned backend never
+    /// stored them, and probing the filter anyway could delete a
+    /// fingerprint-colliding entry it *does* own.
     pub fn remove_entity(&mut self, entity: &str) -> bool {
-        self.cf.delete(entity_key(entity))
+        let key = entity_key(entity);
+        self.owns(key) && self.cf.delete(key)
     }
 }
 
@@ -97,6 +130,9 @@ impl Retriever for CuckooTRag {
             for idx in tree.indices() {
                 let name = forest.entity_name(tree.entity(idx));
                 let key = entity_key(name);
+                if !self.owns(key) {
+                    continue; // another replica set's key
+                }
                 let addr = EntityAddress::new(t, idx);
                 if !self.cf.push_address(key, addr) {
                     self.cf.insert(key, &[addr]);
@@ -175,5 +211,45 @@ mod tests {
     fn index_memory_reported() {
         let r = CuckooTRag::new(forest());
         assert!(r.index_bytes() > 0);
+    }
+
+    #[test]
+    fn partition_excludes_unowned_keys() {
+        use crate::rag::config::KeyPartition;
+
+        let f = forest();
+        let backends = ["a:1", "b:2"];
+        let parts: Vec<CuckooTRag> = (0..backends.len())
+            .map(|i| {
+                CuckooTRag::with_partition(
+                    f.clone(),
+                    CuckooConfig::default(),
+                    Some(KeyPartition::new(backends, i, 1).unwrap()),
+                )
+            })
+            .collect();
+        let mut parts = parts;
+        for name in ["alpha", "beta", "gamma"] {
+            let key = entity_key(name);
+            let holders: usize = parts
+                .iter_mut()
+                .map(|p| usize::from(!p.find(name).is_empty()))
+                .sum();
+            assert_eq!(holders, 1, "{name} held by {holders} backends");
+            // dynamic updates follow the same ownership rule
+            for (i, p) in parts.iter_mut().enumerate() {
+                let owns = KeyPartition::new(backends, i, 1)
+                    .unwrap()
+                    .owns(key);
+                assert_eq!(
+                    p.add_occurrence(name, EntityAddress::new(9, 0)),
+                    owns,
+                    "{name} insert on backend {i}"
+                );
+                if !owns {
+                    assert!(!p.remove_entity(name), "unowned delete no-ops");
+                }
+            }
+        }
     }
 }

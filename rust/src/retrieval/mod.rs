@@ -13,6 +13,17 @@
 //!   above the leaf level.
 //! * [`cuckoo_rag::CuckooTRag`] — the paper's system: one filter lookup
 //!   returns the precomputed block list of addresses.
+//!
+//! Serving wraps the same algorithms in concurrency adapters: the
+//! [`ConcurrentRetriever`] trait is what the coordinator's worker pool
+//! shares ([`sharded_rag::ShardedCuckooTRag`] natively, the read-only
+//! Bloom annotations via [`ArcRetriever`], everything else via
+//! [`MutexRetriever`]). In an R-way replicated fleet the Cuckoo
+//! retrievers additionally accept a
+//! [`KeyPartition`](crate::rag::config::KeyPartition) at build time and
+//! index only the keys whose replica set contains the backend — the
+//! partitioned-backend-index half of the router's replication story
+//! (see `router/` and `docs/PROTOCOL.md`).
 
 pub mod bloom2_rag;
 pub mod bloom_rag;
@@ -86,6 +97,34 @@ pub trait ConcurrentRetriever: Send + Sync {
 
     /// Knowledge update: the forest grew by `new_trees`.
     fn reindex_concurrent(&self, forest: Arc<Forest>, new_trees: &[u32]);
+
+    /// Dynamic point update (the serving-path form of the paper's
+    /// "ongoing data update", driven by the `\x01insert` control line):
+    /// register one new occurrence of `entity`. Returns `None` when the
+    /// retriever cannot apply point updates (the Bloom baselines must
+    /// rebuild their whole-tree annotations), `Some(true)` when the
+    /// occurrence was indexed, and `Some(false)` when nothing changed —
+    /// the occurrence is already indexed (a client retrying a
+    /// quorum-failed broadcast must not duplicate it) or a
+    /// [`KeyPartition`](crate::rag::config::KeyPartition) excludes the
+    /// key from this backend. Distinguishing a misrouted write from an
+    /// idempotent retry is the caller's job (the coordinator checks its
+    /// own partition before calling).
+    fn insert_occurrence(
+        &self,
+        _entity: &str,
+        _addr: EntityAddress,
+    ) -> Option<bool> {
+        None
+    }
+
+    /// Dynamic point removal (paper Algorithm 2, the `\x01delete`
+    /// control line): drop `entity`'s index entry entirely. `None` =
+    /// unsupported; `Some(existed)` otherwise — removing an absent or
+    /// un-owned key is an idempotent `Some(false)`.
+    fn remove_entity_concurrent(&self, _entity: &str) -> Option<bool> {
+        None
+    }
 
     /// Approximate heap bytes of the retriever's index structures.
     fn index_bytes(&self) -> usize {

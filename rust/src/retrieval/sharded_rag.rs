@@ -16,6 +16,7 @@ use crate::filter::cuckoo::CuckooConfig;
 use crate::filter::fingerprint::entity_key;
 use crate::filter::sharded::ShardedCuckooFilter;
 use crate::forest::{EntityAddress, Forest};
+use crate::rag::config::KeyPartition;
 use crate::retrieval::{ConcurrentRetriever, Retriever};
 
 /// The shard-parallel Cuckoo-Filter-indexed retriever.
@@ -23,6 +24,9 @@ pub struct ShardedCuckooTRag {
     /// Swapped wholesale on reindex; reads are momentary clones of the Arc.
     forest: RwLock<Arc<Forest>>,
     cf: ShardedCuckooFilter,
+    /// When set, only keys whose replica set contains this backend are
+    /// indexed (and dynamic updates for other keys are rejected).
+    partition: Option<KeyPartition>,
 }
 
 impl ShardedCuckooTRag {
@@ -37,13 +41,40 @@ impl ShardedCuckooTRag {
         cfg: CuckooConfig,
         shards: usize,
     ) -> Self {
+        Self::with_partition(forest, cfg, shards, None)
+    }
+
+    /// Index with custom filter parameters and shard count, keeping
+    /// only the keys the given [`KeyPartition`] assigns to this backend
+    /// (`None` = index the whole forest). Skipped keys never touch the
+    /// filter or the block arena, so a partitioned backend's index
+    /// memory is roughly `R/N` of a full one — the partitioned half of
+    /// the router's replication story.
+    pub fn with_partition(
+        forest: Arc<Forest>,
+        cfg: CuckooConfig,
+        shards: usize,
+        partition: Option<KeyPartition>,
+    ) -> Self {
         let cf = ShardedCuckooFilter::new(cfg, shards);
         let table = forest.address_table();
         for (id, addrs) in table {
             let key = entity_key(forest.entity_name(id));
-            cf.insert(key, &addrs);
+            if partition.as_ref().map_or(true, |p| p.owns(key)) {
+                cf.insert(key, &addrs);
+            }
         }
-        ShardedCuckooTRag { forest: RwLock::new(forest), cf }
+        ShardedCuckooTRag { forest: RwLock::new(forest), cf, partition }
+    }
+
+    /// True when this retriever must index `key` (no partition = all).
+    fn owns(&self, key: u64) -> bool {
+        self.partition.as_ref().map_or(true, |p| p.owns(key))
+    }
+
+    /// The key partition this retriever was built with, if any.
+    pub fn partition(&self) -> Option<&KeyPartition> {
+        self.partition.as_ref()
     }
 
     /// Access the underlying sharded filter (benches/inspection).
@@ -57,24 +88,33 @@ impl ShardedCuckooTRag {
     }
 
     /// Dynamic update: register a newly added occurrence of an entity
-    /// (inserts the entity if unknown). Shard write lock only.
+    /// (inserts the entity if unknown). Shard write lock only. Returns
+    /// `false` when a key partition excludes the entity from this
+    /// backend.
     ///
     /// push/insert take the shard lock separately, so a concurrent
     /// writer may insert the entity between our miss and our insert —
     /// the duplicate-rejected insert then loops back to `push_address`,
     /// which now succeeds. No occurrence is ever dropped.
-    pub fn add_occurrence(&self, entity: &str, addr: EntityAddress) {
+    pub fn add_occurrence(&self, entity: &str, addr: EntityAddress) -> bool {
         let key = entity_key(entity);
+        if !self.owns(key) {
+            return false;
+        }
         loop {
             if self.cf.push_address(key, addr) || self.cf.insert(key, &[addr]) {
-                return;
+                return true;
             }
         }
     }
 
     /// Dynamic update: remove an entity entirely (paper Algorithm 2).
+    /// Un-owned keys are a no-op `false` — a partitioned backend never
+    /// stored them, and probing the filter anyway could delete a
+    /// fingerprint-colliding entry it *does* own.
     pub fn remove_entity(&self, entity: &str) -> bool {
-        self.cf.delete(entity_key(entity))
+        let key = entity_key(entity);
+        self.owns(key) && self.cf.delete(key)
     }
 }
 
@@ -98,6 +138,7 @@ impl ConcurrentRetriever for ShardedCuckooTRag {
         // Incremental (the paper's dynamic-update story): only the new
         // trees' addresses are inserted/appended; existing filter state —
         // including temperatures — is untouched. Shards lock per key.
+        // add_occurrence skips keys a partition assigns elsewhere.
         for &t in new_trees {
             let tree = forest.tree(t);
             for idx in tree.indices() {
@@ -107,6 +148,37 @@ impl ConcurrentRetriever for ShardedCuckooTRag {
             }
         }
         *self.forest.write().unwrap() = forest;
+    }
+
+    /// Idempotent: re-sending the same occurrence (a client retrying a
+    /// quorum-failed broadcast against replicas that already applied)
+    /// returns `Some(false)` instead of duplicating the address. The
+    /// membership check and the push take the shard lock separately, so
+    /// two *concurrent* identical inserts can still both land — the
+    /// guarantee is retry-idempotence, not concurrent dedup.
+    fn insert_occurrence(
+        &self,
+        entity: &str,
+        addr: EntityAddress,
+    ) -> Option<bool> {
+        let key = entity_key(entity);
+        if !self.owns(key) {
+            return Some(false);
+        }
+        let mut existing = Vec::new();
+        self.cf.lookup_into(key, &mut existing);
+        if existing.contains(&addr) {
+            return Some(false); // already indexed: retried write
+        }
+        Some(self.add_occurrence(entity, addr))
+    }
+
+    fn remove_entity_concurrent(&self, entity: &str) -> Option<bool> {
+        let key = entity_key(entity);
+        if !self.owns(key) {
+            return Some(false); // idempotent: never stored here
+        }
+        Some(self.cf.delete(key))
     }
 
     fn index_bytes(&self) -> usize {
@@ -208,6 +280,59 @@ mod tests {
         out.clear();
         r.find_concurrent("delta", &mut out);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn partition_gates_index_and_dynamic_updates() {
+        use crate::rag::config::KeyPartition;
+
+        let f = forest();
+        let backends = ["a:1", "b:2", "c:3"];
+        let rags: Vec<ShardedCuckooTRag> = (0..backends.len())
+            .map(|i| {
+                ShardedCuckooTRag::with_partition(
+                    f.clone(),
+                    CuckooConfig::default(),
+                    2,
+                    Some(KeyPartition::new(backends, i, 2).unwrap()),
+                )
+            })
+            .collect();
+        let mut out = Vec::new();
+        for name in ["alpha", "beta", "gamma"] {
+            let key = entity_key(name);
+            let holders = rags
+                .iter()
+                .filter(|r| {
+                    out.clear();
+                    r.find_concurrent(name, &mut out);
+                    !out.is_empty()
+                })
+                .count();
+            assert_eq!(holders, 2, "{name} held by {holders} != R=2");
+            for r in &rags {
+                let owns = r.partition().unwrap().owns(key);
+                assert_eq!(
+                    r.insert_occurrence(name, EntityAddress::new(9, 0)),
+                    Some(owns),
+                    "{name} insert"
+                );
+                if owns {
+                    // a retried identical insert must dedup, not append
+                    assert_eq!(
+                        r.insert_occurrence(name, EntityAddress::new(9, 0)),
+                        Some(false),
+                        "{name} retried insert"
+                    );
+                } else {
+                    assert_eq!(
+                        r.remove_entity_concurrent(name),
+                        Some(false),
+                        "unowned delete is an idempotent no-op"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -33,8 +33,16 @@ pub struct RouterMetricsSnapshot {
     pub fanouts: u64,
     /// Sub-requests served by a backend other than the key's owner.
     pub failovers: u64,
-    /// Merged replies missing at least one owner's portion.
+    /// Replicated-mode sub-requests served by a non-owner replica
+    /// *without* any candidate failing first — the least-loaded load
+    /// balancer's choice, not a rescue.
+    pub replica_hits: u64,
+    /// Merged replies missing at least one portion.
     pub degraded: u64,
+    /// Broadcast writes (`\x01insert`/`\x01delete` fan-outs).
+    pub write_fanouts: u64,
+    /// Broadcast writes that missed their ack quorum.
+    pub quorum_fails: u64,
     pub backends: Vec<BackendMetricsSnapshot>,
 }
 
@@ -69,7 +77,10 @@ impl RouterMetricsSnapshot {
             ("failures", Json::Num(self.failures as f64)),
             ("fanouts", Json::Num(self.fanouts as f64)),
             ("failovers", Json::Num(self.failovers as f64)),
+            ("replica_hits", Json::Num(self.replica_hits as f64)),
             ("degraded", Json::Num(self.degraded as f64)),
+            ("write_fanouts", Json::Num(self.write_fanouts as f64)),
+            ("quorum_fails", Json::Num(self.quorum_fails as f64)),
             ("backends", Json::Arr(backends)),
         ])
     }
@@ -88,7 +99,10 @@ struct Inner {
     failures: u64,
     fanouts: u64,
     failovers: u64,
+    replica_hits: u64,
     degraded: u64,
+    write_fanouts: u64,
+    quorum_fails: u64,
     backends: Vec<BackendInner>,
 }
 
@@ -107,7 +121,10 @@ impl RouterMetrics {
                 failures: 0,
                 fanouts: 0,
                 failovers: 0,
+                replica_hits: 0,
                 degraded: 0,
+                write_fanouts: 0,
+                quorum_fails: 0,
                 backends: (0..nbackends)
                     .map(|_| BackendInner::default())
                     .collect(),
@@ -134,9 +151,25 @@ impl RouterMetrics {
         self.inner.lock().unwrap().failovers += 1;
     }
 
+    /// Record a sub-request served by a non-owner replica by load
+    /// choice (replicated mode, nothing failed first).
+    pub fn record_replica_hit(&self) {
+        self.inner.lock().unwrap().replica_hits += 1;
+    }
+
     /// Record a merged reply with a missing portion.
     pub fn record_degraded(&self) {
         self.inner.lock().unwrap().degraded += 1;
+    }
+
+    /// Record one broadcast write fan-out.
+    pub fn record_write_fanout(&self) {
+        self.inner.lock().unwrap().write_fanouts += 1;
+    }
+
+    /// Record a broadcast write that missed its ack quorum.
+    pub fn record_quorum_fail(&self) {
+        self.inner.lock().unwrap().quorum_fails += 1;
     }
 
     /// Record one backend round trip.
@@ -161,7 +194,10 @@ impl RouterMetrics {
             failures: m.failures,
             fanouts: m.fanouts,
             failovers: m.failovers,
+            replica_hits: m.replica_hits,
             degraded: m.degraded,
+            write_fanouts: m.write_fanouts,
+            quorum_fails: m.quorum_fails,
             backends: m
                 .backends
                 .iter()
@@ -190,7 +226,11 @@ mod tests {
         m.record_query(false);
         m.record_fanout();
         m.record_failover();
+        m.record_replica_hit();
+        m.record_replica_hit();
         m.record_degraded();
+        m.record_write_fanout();
+        m.record_quorum_fail();
         m.record_backend(0, true, Duration::from_millis(2));
         m.record_backend(1, false, Duration::from_millis(4));
         let info = vec![("a:1".to_string(), true), ("b:2".to_string(), false)];
@@ -199,7 +239,10 @@ mod tests {
         assert_eq!(s.failures, 1);
         assert_eq!(s.fanouts, 1);
         assert_eq!(s.failovers, 1);
+        assert_eq!(s.replica_hits, 2);
         assert_eq!(s.degraded, 1);
+        assert_eq!(s.write_fanouts, 1);
+        assert_eq!(s.quorum_fails, 1);
         assert_eq!(s.backends[0].requests, 1);
         assert_eq!(s.backends[0].failures, 0);
         assert!(s.backends[0].healthy);
@@ -216,6 +259,13 @@ mod tests {
         let s = m.snapshot(&[("x:1".to_string(), true)]);
         let back = Json::parse(&s.to_json().to_string()).unwrap();
         assert_eq!(back.get("requests").and_then(Json::as_f64), Some(1.0));
+        for field in ["replica_hits", "write_fanouts", "quorum_fails"] {
+            assert_eq!(
+                back.get(field).and_then(Json::as_f64),
+                Some(0.0),
+                "{field} missing from the stats payload"
+            );
+        }
         let backends = back.get("backends").unwrap().as_arr().unwrap();
         assert_eq!(backends[0].get("addr").and_then(Json::as_str), Some("x:1"));
         assert_eq!(backends[0].get("healthy"), Some(&Json::Bool(true)));

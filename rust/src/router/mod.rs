@@ -45,6 +45,19 @@
 //! tested in `ring.rs`); a prober re-admits recovered backends. The
 //! integration tests (`tests/router_integration.rs`) kill a live
 //! backend mid-load and assert zero failed queries.
+//!
+//! **Replication + partitioned indexes**
+//! (`RouterConfig::replication_factor`, ISSUE 4): with `R >= 1`, each
+//! entity key lives
+//! on its top-R ranked backends only — every backend is started with a
+//! matching [`KeyPartition`](crate::rag::config::KeyPartition) and
+//! indexes ~`R/N` of the keys. Reads are served by the least-loaded
+//! healthy replica with ranked failover inside the replica set; the
+//! `\x01insert`/`\x01delete` dynamic updates broadcast to all R
+//! replicas and ack-count against `RouterConfig::write_quorum`. The
+//! kill-one-backend test runs against partitioned R=2 backends and
+//! stays zero-failure *and* zero-degraded. Wire format:
+//! `docs/PROTOCOL.md`.
 
 pub mod backend;
 pub mod health;
@@ -66,15 +79,18 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use crate::coordinator::tcp::STATS_REQUEST;
+use crate::coordinator::tcp::{parse_control, ControlLine};
 use crate::error::Result;
+use crate::util::json::Json;
 use crate::util::log;
 
 /// Front-door TCP loop: the router speaks the *same* line protocol as
-/// a single coordinator (`coordinator/tcp.rs`), so clients cannot tell
-/// one node from a fleet. `\x01stats` returns the router-level
-/// snapshot (per-backend health/latency included). Serves until the
-/// process dies — the `cft-rag route` CLI path.
+/// a single coordinator (`coordinator/tcp.rs`, spec in
+/// `docs/PROTOCOL.md`), so clients cannot tell one node from a fleet.
+/// `\x01stats` returns the router-level snapshot (per-backend
+/// health/latency included); `\x01insert`/`\x01delete` become quorum
+/// broadcasts to the key's replica set. Serves until the process dies —
+/// the `cft-rag route` CLI path.
 pub fn serve(router: Arc<Router>, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     log::info!("cft-rag router listening on {addr}");
@@ -109,10 +125,17 @@ fn handle_conn(router: Arc<Router>, stream: TcpStream) -> std::io::Result<()> {
         if query == ":quit" {
             break;
         }
-        let reply = if query == STATS_REQUEST {
-            router.snapshot().to_json()
-        } else {
-            router.query(query)
+        let reply = match parse_control(query) {
+            Some(Ok(ControlLine::Stats)) => router.snapshot().to_json(),
+            Some(Ok(ControlLine::Insert { tree, node, entity })) => {
+                router.update(entity, tree, node)
+            }
+            Some(Ok(ControlLine::Delete { entity })) => router.remove(entity),
+            Some(Err(reason)) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(reason)),
+            ]),
+            None => router.query(query),
         };
         writer.write_all(reply.to_string().as_bytes())?;
         writer.write_all(b"\n")?;

@@ -91,6 +91,22 @@ impl ShardRing {
         order.sort_by_key(|&i| (std::cmp::Reverse(self.score(key, i)), i));
         order
     }
+
+    /// The key's **replica set**: the first `r` backends of the
+    /// [`ranked`](ShardRing::ranked) order (`r` is clamped to `1..=len`).
+    /// Element 0 is the owner; the rest are the read replicas / write
+    /// fan-out targets of R-way replicated serving.
+    ///
+    /// Because rendezvous scores are per-(key, backend) and never depend
+    /// on the rest of the membership, the replica set inherits minimal
+    /// disruption: a backend joining the ring can only *enter* a key's
+    /// replica set (evicting the previous rank-R holder) — it never
+    /// reorders the survivors. Property-tested below.
+    pub fn replicas(&self, key: u64, r: usize) -> Vec<usize> {
+        let mut order = self.ranked(key);
+        order.truncate(r.max(1));
+        order
+    }
 }
 
 #[cfg(test)]
@@ -143,6 +159,76 @@ mod tests {
         assert_eq!(fallback, r.ranked(key)[1]);
         // nothing eligible -> None
         assert_eq!(r.owner_where(key, |_| false), None);
+    }
+
+    #[test]
+    fn replica_sets_are_ranked_prefixes_and_join_minimally() {
+        // Three properties of `replicas(key, r)` (the replication
+        // invariants of ISSUE 4):
+        //  1. it is exactly the length-r prefix of `ranked(key)`;
+        //  2. it never contains duplicates for r <= N;
+        //  3. a backend *joining* the ring is disruption-minimal: the
+        //     new replica set minus the joined backend is a prefix of
+        //     the old replica set — survivors keep their relative
+        //     order, and at most the rank-R holder is evicted.
+        forall_simple(
+            128,
+            |rng: &mut Rng| {
+                let backends = 2 + rng.range(0, 7); // 2..=8
+                let r = 1 + rng.range(0, backends); // 1..=backends
+                let keys: Vec<u64> =
+                    (0..64).map(|_| rng.next_u64()).collect();
+                (backends, r, keys)
+            },
+            |(backends, r, keys)| {
+                let before = ring(*backends);
+                let after = ring(*backends + 1); // same names + one joined
+                let joined = *backends;
+                for &key in keys {
+                    let reps = before.replicas(key, *r);
+                    if reps.len() != (*r).min(*backends) {
+                        return Err(format!(
+                            "key {key:#x}: {} replicas for r={r}",
+                            reps.len()
+                        ));
+                    }
+                    if reps[..] != before.ranked(key)[..reps.len()] {
+                        return Err(format!(
+                            "key {key:#x}: replicas {reps:?} not a prefix \
+                             of ranked"
+                        ));
+                    }
+                    let mut dedup = reps.clone();
+                    dedup.sort_unstable();
+                    dedup.dedup();
+                    if dedup.len() != reps.len() {
+                        return Err(format!(
+                            "key {key:#x}: duplicate replicas {reps:?}"
+                        ));
+                    }
+                    let survivors: Vec<usize> = after
+                        .replicas(key, *r)
+                        .into_iter()
+                        .filter(|&i| i != joined)
+                        .collect();
+                    if survivors[..] != reps[..survivors.len()] {
+                        return Err(format!(
+                            "key {key:#x}: join reshuffled survivors \
+                             {survivors:?} vs old {reps:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn replicas_clamp_to_ring_size() {
+        let r = ring(3);
+        let key = entity_key("cardiology");
+        assert_eq!(r.replicas(key, 0), r.replicas(key, 1), "0 acts as 1");
+        assert_eq!(r.replicas(key, 99), r.ranked(key), "r > N is whole ring");
     }
 
     #[test]

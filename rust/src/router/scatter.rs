@@ -1,35 +1,50 @@
-//! The scatter-gather query path.
+//! The scatter-gather query path (reply shapes: `docs/PROTOCOL.md`).
 //!
 //! `Router::query` is the distributed analogue of one coordinator
 //! round trip:
 //!
 //! 1. **Localize** — recognize the query's entity mentions (the same
-//!    gazetteer the backends use) and map each to its owning backend
-//!    via the rendezvous ring.
-//! 2. **Route** — a query whose entities all land on one backend (or
-//!    that mentions none) goes there directly, whole. A multi-owner
-//!    query *scatters*: each owning backend receives only its owned
-//!    mentions, so the per-backend retrieval + generation work is the
-//!    owned share, not the whole query repeated N times.
-//! 3. **Gather** — sub-replies merge deterministically (owner order):
-//!    entity union sorted, fact counts summed, answers concatenated in
-//!    owner order, stage times `max`ed (the fan-out ran in parallel).
+//!    gazetteer the backends use) and map each to the backends that can
+//!    serve it: in replicated mode the mention's R-way **replica set**
+//!    (the top-R of the ring's ranked order), otherwise its healthy
+//!    owner.
+//! 2. **Route** — a query whose entities all share one serving set (or
+//!    that mentions none) goes there directly, whole. Otherwise the
+//!    query *scatters*: each group of mentions with the same serving
+//!    set travels as one sub-request, so the per-backend retrieval +
+//!    generation work is the owned share, not the whole query repeated
+//!    N times.
+//! 3. **Gather** — sub-replies merge deterministically (group order):
+//!    entity union sorted, fact counts summed, answers concatenated,
+//!    stage times `max`ed (the fan-out ran in parallel).
 //!
-//! Failure containment: each sub-request walks the ring's failover
-//! order (healthy candidates first) for up to `max_attempts` backends;
-//! socket-level errors *and* `ok:false` coordinator replies (queue
-//! closed, backend stopping) both trigger the next candidate. Because
-//! every backend request carries the per-backend IO timeout, one slow
-//! backend can only delay its own portion; if every candidate for a
-//! portion fails, the merged reply is flagged `degraded` rather than
-//! failing the query — unless *no* portion succeeded, which is the only
-//! path to an `ok:false` reply from the router.
+//! Failure containment: each sub-request walks its candidate order for
+//! up to `max_attempts` backends; socket-level errors *and* `ok:false`
+//! coordinator replies (queue closed, backend stopping) both trigger
+//! the next candidate. In full-index mode (`replication_factor == 0`)
+//! the candidates are the whole ring, healthy first. In replicated
+//! mode the walk stays **within the replica set** — a non-replica would
+//! answer with silently missing facts — and healthy replicas are tried
+//! least-loaded first (the `\x01stats` `requests` gauge the prober
+//! collects), so hot keys spread across their replicas. Because every
+//! backend request carries the per-backend IO timeout, one slow backend
+//! can only delay its own portion; if every candidate for a portion
+//! fails, the merged reply is flagged `degraded` (with the missing
+//! mentions and the failing backends' addresses) rather than failing
+//! the query — unless *no* portion succeeded, which is the only path to
+//! an `ok:false` reply from the router.
+//!
+//! **Writes** (`Router::update` / `Router::remove`) broadcast the
+//! `\x01insert`/`\x01delete` control line to every backend that indexes
+//! the key — the replica set, or the whole fleet in full-index mode —
+//! and count per-replica acks against the configured write quorum.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::io;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::coordinator::tcp::{DELETE_REQUEST, INSERT_REQUEST};
 use crate::error::{CftError, Result};
 use crate::filter::fingerprint::entity_key;
 use crate::nlp::ner::GazetteerNer;
@@ -42,9 +57,18 @@ use crate::util::json::Json;
 use crate::util::log;
 use crate::util::rng::fnv1a;
 
-/// One fan-out portion: the mentions routed to one owner, and the
+/// A failed candidate walk: the terminal error plus the backend that
+/// produced it, so error and degraded replies are debuggable from the
+/// client side (`None` only when there were no candidates at all).
+#[derive(Debug)]
+struct SendFailure {
+    err: io::Error,
+    backend: Option<String>,
+}
+
+/// One fan-out portion: the mentions routed to one serving set, and the
 /// outcome (serving backend index + its reply).
-type Portion = (Vec<String>, io::Result<(usize, Json)>);
+type Portion = (Vec<String>, std::result::Result<(usize, Json), SendFailure>);
 
 /// The shard router: entity-aware scatter-gather over N coordinator
 /// backends. All methods take `&self`; clients query from any number of
@@ -55,6 +79,11 @@ pub struct Router {
     ner: GazetteerNer,
     metrics: RouterMetrics,
     max_attempts: usize,
+    /// R-way replication (0 = full-index backends; see `RouterConfig`).
+    replication: usize,
+    /// Acks required per broadcast write (already resolved: `0` in the
+    /// config means "all targets", resolved per write).
+    write_quorum: usize,
     _prober: HealthProber,
 }
 
@@ -72,6 +101,13 @@ impl Router {
                 "router needs at least one backend address".into(),
             ));
         }
+        if cfg.replication_factor > cfg.backends.len() {
+            return Err(CftError::Config(format!(
+                "replication_factor {} exceeds the {} backends",
+                cfg.replication_factor,
+                cfg.backends.len()
+            )));
+        }
         let ring = ShardRing::new(cfg.backends.iter().cloned());
         let backends: Vec<Arc<Backend>> = cfg
             .backends
@@ -87,8 +123,15 @@ impl Router {
             ner: GazetteerNer::new(entity_names),
             backends,
             max_attempts: cfg.max_attempts.max(1),
+            replication: cfg.replication_factor,
+            write_quorum: cfg.write_quorum,
             _prober: prober,
         })
+    }
+
+    /// The configured replication factor (0 = full-index backends).
+    pub fn replication_factor(&self) -> usize {
+        self.replication
     }
 
     /// Number of fronted backends.
@@ -128,16 +171,25 @@ impl Router {
         let query = query.trim();
         let entities = self.ner.recognize(query);
 
-        // group mentions by owning backend (healthy owners preferred;
-        // BTreeMap fixes the merge order deterministically)
-        let mut groups: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+        // Group mentions by the backend set that can serve them: in
+        // replicated mode a mention's replica set (mentions sharing a
+        // replica set travel together — a partitioned backend only
+        // indexes its own keys, so the set, not the owner, is the unit
+        // of co-location), otherwise the healthy owner. BTreeMap fixes
+        // the merge order deterministically.
+        let mut groups: BTreeMap<Vec<usize>, Vec<String>> = BTreeMap::new();
         for e in entities {
-            let owner = self.owner_of(entity_key(&e));
-            groups.entry(owner).or_default().push(e);
+            let key = entity_key(&e);
+            let set = if self.replication > 0 {
+                self.ring.replicas(key, self.replication)
+            } else {
+                vec![self.owner_of(key)]
+            };
+            groups.entry(set).or_default().push(e);
         }
 
         let reply = if groups.len() <= 1 {
-            // single-owner fast path: the whole query travels as-is
+            // single-set fast path: the whole query travels as-is
             let key = match groups.values().next() {
                 Some(ents) => entity_key(&ents[0]),
                 // no recognized entities: spread by query text so
@@ -167,8 +219,12 @@ impl Router {
             .expect("ring is non-empty by construction")
     }
 
-    /// Fan the owned mention groups out in parallel and merge.
-    fn scatter(&self, query: &str, groups: &BTreeMap<usize, Vec<String>>) -> Json {
+    /// Fan the mention groups out in parallel and merge.
+    fn scatter(
+        &self,
+        query: &str,
+        groups: &BTreeMap<Vec<usize>, Vec<String>>,
+    ) -> Json {
         let parts: Vec<Portion> = std::thread::scope(|s| {
             let handles: Vec<_> = groups
                 .values()
@@ -195,19 +251,32 @@ impl Router {
         self.merge(query, parts)
     }
 
-    /// Try `line` against the ring's candidates for `key`: healthy
-    /// backends in rank order first, then (still within `max_attempts`)
-    /// the unhealthy ones — a marked-down backend may have just come
-    /// back, and trying it last costs nothing when everything else is
-    /// gone. An `ok:false` protocol reply is treated like a transport
-    /// failure for candidate-walking purposes, but does *not* demote
-    /// the backend's health (it answered; the coordinator refused).
+    /// Try `line` against the candidates for `key`, in order:
+    ///
+    /// * **Full-index mode** (`replication == 0`): the whole ring,
+    ///   healthy backends in rank order first.
+    /// * **Replicated mode**: only the key's replica set — a
+    ///   non-replica would answer `ok:true` with silently missing facts
+    ///   — with the healthy replicas ordered least-loaded first (the
+    ///   `\x01stats` `requests` gauge; stable sort keeps rank order on
+    ///   ties, so an unprobed fleet behaves like ranked failover).
+    ///
+    /// Unhealthy candidates still follow within `max_attempts` — a
+    /// marked-down backend may have just come back, and trying it last
+    /// costs nothing when everything else is gone. An `ok:false`
+    /// protocol reply is treated like a transport failure for
+    /// candidate-walking purposes, but does *not* demote the backend's
+    /// health (it answered; the coordinator refused).
     fn send_with_failover(
         &self,
         key: u64,
         line: &str,
-    ) -> io::Result<(usize, Json)> {
-        let ranked = self.ring.ranked(key);
+    ) -> std::result::Result<(usize, Json), SendFailure> {
+        let ranked = if self.replication > 0 {
+            self.ring.replicas(key, self.replication)
+        } else {
+            self.ring.ranked(key)
+        };
         // one health read per candidate: reading twice (a healthy pass
         // then an unhealthy pass) would let a concurrent health flip
         // duplicate a candidate and crowd a live one out of the
@@ -216,13 +285,27 @@ impl Router {
             .iter()
             .copied()
             .partition(|&i| self.backends[i].health().is_healthy());
+        if self.replication > 0 {
+            // Load = the backend's cumulative `requests` gauge from the
+            // last `\x01stats` probe. Two knowing trade-offs: it is a
+            // lifetime counter, so a freshly restarted replica looks
+            // idle until it catches up (bounded: it *is* the coldest
+            // node and catches up fast); and with probing disabled it
+            // stays 0 everywhere, degrading to plain rank order — never
+            // to a wrong answer, since every candidate is a replica.
+            order.sort_by_key(|&i| self.backends[i].health().observed_load());
+        }
         order.extend(unhealthy);
         order.truncate(self.max_attempts);
         let owner = ranked[0];
-        let mut last_err = io::Error::new(
-            io::ErrorKind::NotConnected,
-            "no backend candidates",
-        );
+        let mut walk_failed = false;
+        let mut last = SendFailure {
+            err: io::Error::new(
+                io::ErrorKind::NotConnected,
+                "no backend candidates",
+            ),
+            backend: None,
+        };
         for idx in order {
             let t0 = Instant::now();
             match self.backends[idx].request(line) {
@@ -235,24 +318,43 @@ impl Router {
                             .and_then(Json::as_str)
                             .unwrap_or("backend refused")
                             .to_string();
-                        last_err = io::Error::other(msg);
+                        last = SendFailure {
+                            err: io::Error::other(msg),
+                            backend: Some(
+                                self.backends[idx].addr().to_string(),
+                            ),
+                        };
+                        walk_failed = true;
                         continue;
                     }
-                    if idx != owner {
+                    if self.replication > 0 {
+                        // replicated bookkeeping: rescued-after-failure
+                        // is a failover; merely serving off-owner (the
+                        // load balancer's choice) is a replica hit
+                        if walk_failed {
+                            self.metrics.record_failover();
+                        } else if idx != owner {
+                            self.metrics.record_replica_hit();
+                        }
+                    } else if idx != owner {
                         self.metrics.record_failover();
                     }
                     return Ok((idx, json));
                 }
                 Err(e) => {
                     self.metrics.record_backend(idx, false, t0.elapsed());
-                    last_err = e;
+                    last = SendFailure {
+                        err: e,
+                        backend: Some(self.backends[idx].addr().to_string()),
+                    };
+                    walk_failed = true;
                 }
             }
         }
-        Err(last_err)
+        Err(last)
     }
 
-    /// Deterministic merge of the fan-out's portions (already in owner
+    /// Deterministic merge of the fan-out's portions (already in group
     /// order — `scatter` walks a `BTreeMap`).
     fn merge(
         &self,
@@ -266,7 +368,9 @@ impl Router {
         let mut total_ms: f64 = 0.0;
         let mut served = 0usize;
         let mut missing: Vec<String> = Vec::new();
+        let mut failed_backends: BTreeSet<String> = BTreeSet::new();
         let mut last_err = String::new();
+        let mut last_err_backend: Option<String> = None;
 
         for (ents, outcome) in parts {
             match outcome {
@@ -300,23 +404,30 @@ impl Router {
                             .unwrap_or(0.0),
                     );
                 }
-                Err(e) => {
+                Err(f) => {
                     missing.extend(ents);
-                    last_err = e.to_string();
+                    last_err = f.err.to_string();
+                    if let Some(addr) = &f.backend {
+                        failed_backends.insert(addr.clone());
+                    }
+                    last_err_backend = f.backend;
                 }
             }
         }
 
         if served == 0 {
             log::error!("query {query:?}: every portion failed ({last_err})");
-            return error_reply(&io::Error::other(last_err));
+            return error_reply(&SendFailure {
+                err: io::Error::other(last_err),
+                backend: last_err_backend,
+            });
         }
         let degraded = !missing.is_empty();
         if degraded {
             self.metrics.record_degraded();
             log::warn!(
                 "degraded reply for {query:?}: no backend served {missing:?} \
-                 ({last_err})"
+                 (backends {failed_backends:?}: {last_err})"
             );
         }
         let mut reply = annotate(
@@ -342,9 +453,145 @@ impl Router {
                     "missing_entities".into(),
                     Json::Arr(missing.into_iter().map(Json::Str).collect()),
                 );
+                // which backends lost the portions — clients debug a
+                // degraded reply without access to the router's logs
+                m.insert(
+                    "failed_backends".into(),
+                    Json::Arr(
+                        failed_backends.into_iter().map(Json::Str).collect(),
+                    ),
+                );
             }
         }
         reply
+    }
+
+    /// Broadcast a dynamic entity-index **insert** (`\x01insert`, see
+    /// `docs/PROTOCOL.md`): register one occurrence of `entity` at
+    /// `(tree, node)` on every backend that indexes the key — its
+    /// replica set, or the whole fleet in full-index mode — and count
+    /// per-replica acks against the write quorum.
+    pub fn update(&self, entity: &str, tree: u32, node: u32) -> Json {
+        self.broadcast(
+            entity,
+            &format!("{INSERT_REQUEST} {tree} {node} {entity}"),
+        )
+    }
+
+    /// Broadcast a dynamic entity-index **delete** (`\x01delete`, paper
+    /// Algorithm 2) to every backend that indexes the key, counting
+    /// acks against the write quorum.
+    pub fn remove(&self, entity: &str) -> Json {
+        self.broadcast(entity, &format!("{DELETE_REQUEST} {entity}"))
+    }
+
+    /// The replicated write path: send `line` to all of `entity`'s
+    /// index holders in parallel, ack-count, and report quorum. The
+    /// reply carries `ok` (quorum reached), `replicas` (targets),
+    /// `acks`, `applied` (acks that changed state), `quorum`, and a
+    /// per-backend `errors` array when anything failed.
+    fn broadcast(&self, entity: &str, line: &str) -> Json {
+        // The protocol is one line per request: an entity containing a
+        // newline (or the \x01 control prefix) would desynchronize the
+        // pooled backend connections — reject before anything is sent.
+        if entity.is_empty() || entity.contains(['\n', '\r', '\x01']) {
+            return Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    Json::Str(format!(
+                        "invalid entity for a dynamic update: {entity:?}"
+                    )),
+                ),
+            ]);
+        }
+        let key = entity_key(entity);
+        let targets: Vec<usize> = if self.replication > 0 {
+            self.ring.replicas(key, self.replication)
+        } else {
+            (0..self.backends.len()).collect()
+        };
+        self.metrics.record_write_fanout();
+        let quorum = if self.write_quorum == 0 {
+            targets.len()
+        } else {
+            self.write_quorum.min(targets.len())
+        };
+
+        let outcomes: Vec<(usize, io::Result<Json>)> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = targets
+                    .iter()
+                    .map(|&idx| {
+                        s.spawn(move || {
+                            let t0 = Instant::now();
+                            let res = self.backends[idx].request(line);
+                            let ok = matches!(
+                                &res,
+                                Ok(j) if j.get("ok") != Some(&Json::Bool(false))
+                            );
+                            self.metrics.record_backend(idx, ok, t0.elapsed());
+                            (idx, res)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("write fan-out worker panicked"))
+                    .collect()
+            });
+
+        let mut acks = 0usize;
+        let mut applied = 0usize;
+        let mut errors: Vec<Json> = Vec::new();
+        for (idx, res) in outcomes {
+            let addr = self.backends[idx].addr();
+            match res {
+                Ok(json) if json.get("ok") != Some(&Json::Bool(false)) => {
+                    acks += 1;
+                    if json.get("applied") == Some(&Json::Bool(true)) {
+                        applied += 1;
+                    }
+                }
+                Ok(json) => errors.push(Json::obj(vec![
+                    ("backend", Json::Str(addr.to_string())),
+                    (
+                        "error",
+                        Json::Str(
+                            json.get("error")
+                                .and_then(Json::as_str)
+                                .unwrap_or("backend refused")
+                                .to_string(),
+                        ),
+                    ),
+                ])),
+                Err(e) => errors.push(Json::obj(vec![
+                    ("backend", Json::Str(addr.to_string())),
+                    ("error", Json::Str(e.to_string())),
+                ])),
+            }
+        }
+        let ok = acks >= quorum;
+        if !ok {
+            self.metrics.record_quorum_fail();
+            log::warn!(
+                "write for {entity:?} missed quorum: {acks}/{quorum} acks \
+                 across {} targets",
+                targets.len()
+            );
+        }
+        let mut pairs = vec![
+            ("ok", Json::Bool(ok)),
+            ("entity", Json::Str(entity.to_string())),
+            ("replicas", Json::Num(targets.len() as f64)),
+            ("acks", Json::Num(acks as f64)),
+            ("applied", Json::Num(applied as f64)),
+            ("quorum", Json::Num(quorum as f64)),
+        ];
+        if !errors.is_empty() {
+            pairs.push(("errors", Json::Arr(errors)));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -360,12 +607,18 @@ fn annotate(reply: Json, backends: usize, degraded: bool) -> Json {
     }
 }
 
-/// The router's terminal failure reply.
-fn error_reply(e: &io::Error) -> Json {
-    Json::obj(vec![
+/// The router's terminal failure reply. Carries the address of the last
+/// failing backend when one is known, so an `ok:false` is attributable
+/// from the client side without router logs.
+fn error_reply(f: &SendFailure) -> Json {
+    let mut pairs = vec![
         ("ok", Json::Bool(false)),
-        ("error", Json::Str(format!("all backends failed: {e}"))),
-    ])
+        ("error", Json::Str(format!("all backends failed: {}", f.err))),
+    ];
+    if let Some(addr) = &f.backend {
+        pairs.push(("backend", Json::Str(addr.clone())));
+    }
+    Json::obj(pairs)
 }
 
 #[cfg(test)]
@@ -388,12 +641,67 @@ mod tests {
         );
         assert_eq!(r.get("backends").and_then(Json::as_f64), Some(3.0));
         assert_eq!(r.get("degraded"), Some(&Json::Bool(true)));
-        let e = error_reply(&io::Error::other("boom"));
+
+        // the failing backend's address rides along when known...
+        let e = error_reply(&SendFailure {
+            err: io::Error::other("boom"),
+            backend: Some("10.0.0.9:7171".into()),
+        });
         assert_eq!(e.get("ok"), Some(&Json::Bool(false)));
         assert!(e
             .get("error")
             .and_then(Json::as_str)
             .unwrap()
             .contains("boom"));
+        assert_eq!(
+            e.get("backend").and_then(Json::as_str),
+            Some("10.0.0.9:7171"),
+            "error replies must name the failing backend"
+        );
+        // ...and is simply absent when there were no candidates
+        let e = error_reply(&SendFailure {
+            err: io::Error::other("no backend candidates"),
+            backend: None,
+        });
+        assert!(e.get("backend").is_none());
+        // the shape survives a JSON round trip (client-side parsing)
+        let back = Json::parse(&e.to_string()).unwrap();
+        assert_eq!(back.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn broadcast_rejects_protocol_breaking_entities() {
+        let cfg = RouterConfig {
+            probe_interval: std::time::Duration::ZERO,
+            ..RouterConfig::for_backends(["127.0.0.1:9"])
+        };
+        let r = Router::connect(["cardiology"], &cfg).unwrap();
+        // rejected before any backend is contacted (the fake backend
+        // address is never dialed)
+        for bad in ["multi\nline", "carriage\rreturn", "\x01stats", ""] {
+            let reply = r.update(bad, 0, 0);
+            assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{bad:?}");
+            assert!(
+                reply
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap()
+                    .contains("invalid entity"),
+                "{reply}"
+            );
+            let reply = r.remove(bad);
+            assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn connect_rejects_oversized_replication() {
+        let cfg = RouterConfig {
+            replication_factor: 3,
+            ..RouterConfig::for_backends(["a:1", "b:2"])
+        };
+        let err = Router::connect(["cardiology"], &cfg)
+            .expect_err("R > N must be rejected");
+        assert!(err.to_string().contains("replication"), "{err}");
     }
 }

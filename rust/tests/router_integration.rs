@@ -1,18 +1,20 @@
 //! Shard-router integration over REAL in-process TCP backends: each
 //! backend is a full coordinator (batcher, workers, maintainer) behind
-//! `coordinator/tcp.rs`, started with `serve_with_shutdown` so tests
-//! can kill and restart backends without leaking listeners — the
-//! graceful-shutdown satellite of PR 3 exercised end to end.
+//! `coordinator/tcp.rs`, started with `serve_with_shutdown` /
+//! `serve_listener` so tests can kill and restart backends without
+//! leaking listeners — the graceful-shutdown satellite of PR 3 and the
+//! replicated/partitioned serving of ISSUE 4 exercised end to end.
 
+use std::net::TcpListener;
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
-use cft_rag::coordinator::tcp::{serve_with_shutdown, ServeHandle};
+use cft_rag::coordinator::tcp::{serve_listener, ServeHandle};
 use cft_rag::coordinator::{Coordinator, CoordinatorConfig};
 use cft_rag::data::corpus::corpus_from_texts;
 use cft_rag::data::hospital::{HospitalConfig, HospitalDataset};
 use cft_rag::filter::fingerprint::entity_key;
-use cft_rag::rag::config::{RagConfig, RouterConfig};
+use cft_rag::rag::config::{KeyPartition, RagConfig, RouterConfig};
 use cft_rag::router::Router;
 use cft_rag::runtime::engine::{Engine, NativeEngine};
 use cft_rag::util::json::Json;
@@ -26,6 +28,18 @@ struct TestBackend {
 
 impl TestBackend {
     fn start(ds: &HospitalDataset, addr: &str) -> TestBackend {
+        let listener = TcpListener::bind(addr).expect("bind backend");
+        Self::start_on(ds, listener, RagConfig::default())
+    }
+
+    /// Start on an already-bound listener with an explicit `RagConfig`
+    /// — the partitioned-fleet path (every address must exist before
+    /// any index is built).
+    fn start_on(
+        ds: &HospitalDataset,
+        listener: TcpListener,
+        cfg: RagConfig,
+    ) -> TestBackend {
         let forest = Arc::new(ds.build_forest());
         let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
         let coordinator = Arc::new(
@@ -33,12 +47,12 @@ impl TestBackend {
                 forest,
                 corpus_from_texts(&ds.documents()),
                 engine,
-                RagConfig::default(),
+                cfg,
                 CoordinatorConfig { workers: 2, ..Default::default() },
             )
             .expect("backend coordinator"),
         );
-        let handle = serve_with_shutdown(coordinator.clone(), addr)
+        let handle = serve_listener(coordinator.clone(), listener)
             .expect("backend listener");
         let addr = handle.addr().to_string();
         TestBackend { coordinator, handle: Some(handle), addr }
@@ -83,6 +97,51 @@ fn cluster(
         (0..n).map(|_| TestBackend::start(ds, "127.0.0.1:0")).collect();
     let cfg = RouterConfig {
         backends: backends.iter().map(|b| b.addr.clone()).collect(),
+        ..cfg.clone()
+    };
+    let names = entity_names(ds);
+    let router = Arc::new(
+        Router::connect(names.iter().map(String::as_str), &cfg)
+            .expect("router"),
+    );
+    (backends, router)
+}
+
+/// A **key-partitioned** fleet with R-way replication: every backend
+/// indexes only the keys whose replica set contains it (so a backend
+/// serving another backend's key would return nothing — the router must
+/// stay within replica sets), and the router runs in replicated mode.
+fn partitioned_cluster(
+    ds: &HospitalDataset,
+    n: usize,
+    r: usize,
+    cfg: &RouterConfig,
+) -> (Vec<TestBackend>, Arc<Router>) {
+    // bind all listeners first: the partition hashes the address list
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind"))
+        .collect();
+    let addrs: Vec<String> = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect();
+    let backends: Vec<TestBackend> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(i, listener)| {
+            let cfg = RagConfig {
+                replication_factor: r,
+                key_partition: Some(
+                    KeyPartition::new(addrs.clone(), i, r).expect("partition"),
+                ),
+                ..RagConfig::default()
+            };
+            TestBackend::start_on(ds, listener, cfg)
+        })
+        .collect();
+    let cfg = RouterConfig {
+        backends: addrs,
+        replication_factor: r,
         ..cfg.clone()
     };
     let names = entity_names(ds);
@@ -171,8 +230,14 @@ fn multi_owner_queries_scatter_and_merge() {
 
 #[test]
 fn killing_one_backend_mid_load_fails_zero_queries() {
+    // The ISSUE-4 acceptance scenario: the backends are KEY-PARTITIONED
+    // (each indexes only its owned ~R/N of the keys, so failing over to
+    // a non-replica would silently lose facts) with R=2 replication.
+    // Killing one backend mid-load must fail zero queries AND degrade
+    // zero replies — every key still has a live replica.
     let ds = dataset(6);
-    let (mut backends, router) = cluster(&ds, 3, &quiet_cfg());
+    let (mut backends, router) =
+        partitioned_cluster(&ds, 3, 2, &quiet_cfg());
     let names = entity_names(&ds);
     let queries: Vec<String> = names
         .iter()
@@ -218,16 +283,101 @@ fn killing_one_backend_mid_load_fails_zero_queries() {
     let failed = failures.into_inner().unwrap();
     assert!(
         failed.is_empty(),
-        "{} queries failed despite failover: {:?}",
+        "{} queries failed despite replication: {:?}",
         failed.len(),
         failed.first()
     );
     let snap = router.snapshot();
     assert_eq!(snap.requests, (CLIENTS * (PHASE1 + PHASE2)) as u64);
     assert_eq!(snap.failures, 0);
+    // with R=2 and only one backend down, every key keeps a live
+    // replica — no portion may be lost, so nothing degrades
+    assert_eq!(
+        snap.degraded, 0,
+        "one dead replica out of R=2 must not degrade any reply"
+    );
 
-    // a key owned by the dead backend must still get a non-error reply,
-    // served by a failover candidate
+    // a key owned (rank-0) by the dead backend must still get a full
+    // reply with facts, served from its surviving replica — on a
+    // partitioned fleet only a replica can do this
+    if let Some(victim) = names
+        .iter()
+        .find(|n| router.ring().owner(entity_key(n.as_str())) == Some(0))
+    {
+        let reply = router.query(&format!("tell me about {victim}"));
+        assert!(is_ok(&reply), "{reply}");
+        assert_eq!(reply.get("degraded"), Some(&Json::Bool(false)), "{reply}");
+        assert!(
+            reply.get("facts").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+            "surviving replica must actually hold the key: {reply}"
+        );
+        let after = router.snapshot();
+        assert!(
+            after.failovers + after.replica_hits > 0,
+            "dead owner must be served off-owner"
+        );
+    }
+}
+
+#[test]
+fn full_index_mode_still_survives_a_kill_via_ring_wide_failover() {
+    // The PR-3 deployment (replication_factor = 0, every backend a full
+    // index) keeps its own failover branch: candidates are the WHOLE
+    // ring, healthy-first. Guard it with a compact kill-mid-load pass so
+    // a regression in that branch can't hide behind the replicated kill
+    // test above.
+    let ds = dataset(4);
+    let (mut backends, router) = cluster(&ds, 3, &quiet_cfg());
+    let names = entity_names(&ds);
+    let queries: Vec<String> = names
+        .iter()
+        .take(12)
+        .map(|n| format!("tell me about {n}"))
+        .collect();
+
+    const CLIENTS: usize = 2;
+    const PHASE1: usize = 3;
+    const PHASE2: usize = 8;
+    let mid_load = Arc::new(Barrier::new(CLIENTS + 1));
+    let failures = Mutex::new(Vec::<String>::new());
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let router = router.clone();
+            let mid_load = mid_load.clone();
+            let queries = &queries;
+            let failures = &failures;
+            s.spawn(move || {
+                let mut serve = |i: usize| {
+                    let q = &queries[(c * 5 + i) % queries.len()];
+                    let reply = router.query(q);
+                    if !is_ok(&reply) {
+                        failures.lock().unwrap().push(reply.to_string());
+                    }
+                };
+                for i in 0..PHASE1 {
+                    serve(i);
+                }
+                mid_load.wait();
+                for i in PHASE1..PHASE1 + PHASE2 {
+                    serve(i);
+                }
+            });
+        }
+        mid_load.wait();
+        backends[0].kill();
+    });
+
+    let failed = failures.into_inner().unwrap();
+    assert!(
+        failed.is_empty(),
+        "{} full-index queries failed despite ring-wide failover: {:?}",
+        failed.len(),
+        failed.first()
+    );
+    let snap = router.snapshot();
+    assert_eq!(snap.failures, 0);
+    // a key owned by the dead backend is rescued by ANY live backend
+    // (full indexes), counted as a failover
     if let Some(victim) = names
         .iter()
         .find(|n| router.ring().owner(entity_key(n.as_str())) == Some(0))
@@ -237,9 +387,130 @@ fn killing_one_backend_mid_load_fails_zero_queries() {
         assert!(is_ok(&reply), "{reply}");
         assert!(
             router.snapshot().failovers > before,
-            "dead owner must be failed over"
+            "dead owner must be failed over ring-wide"
         );
     }
+}
+
+#[test]
+fn replicated_writes_reach_quorum_and_apply_on_every_replica() {
+    let ds = dataset(6);
+    let (mut backends, router) =
+        partitioned_cluster(&ds, 3, 2, &quiet_cfg());
+
+    // pick a real entity and one of its true occurrences
+    let forest = ds.build_forest();
+    let victim = "cardiology";
+    let addr = forest
+        .entity_id(victim)
+        .map(|id| forest.scan_addresses(id)[0])
+        .expect("cardiology occurs in the hospital forest");
+
+    let probe = format!("tell me about {victim}");
+    let facts_of = |reply: &Json| -> f64 {
+        reply.get("facts").and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    let before = router.query(&probe);
+    assert!(is_ok(&before), "{before}");
+    assert!(facts_of(&before) > 0.0, "{before}");
+
+    // delete broadcasts to BOTH replicas (write fan-out + full quorum):
+    // afterwards no replica can serve the key, from anyone's view
+    let reply = router.remove(victim);
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(reply.get("replicas").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(reply.get("acks").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(reply.get("applied").and_then(Json::as_f64), Some(2.0));
+    let gone = router.query(&probe);
+    assert!(is_ok(&gone), "{gone}");
+    assert_eq!(facts_of(&gone), 0.0, "deleted everywhere: {gone}");
+
+    // re-insert through the router: both replicas index it again
+    let reply = router.update(victim, addr.tree, addr.node);
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(reply.get("acks").and_then(Json::as_f64), Some(2.0));
+    let back = router.query(&probe);
+    assert!(facts_of(&back) > 0.0, "re-inserted: {back}");
+
+    // kill one replica of the key: the write quorum (default = all
+    // targets) can no longer be met, and the reply names the dead
+    // backend so the failure is debuggable client-side
+    let key = entity_key(victim);
+    let second_replica = router.ring().replicas(key, 2)[1];
+    backends[second_replica].kill();
+    let dead_addr = backends[second_replica].addr.clone();
+    let reply = router.remove(victim);
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    assert_eq!(reply.get("acks").and_then(Json::as_f64), Some(1.0));
+    let errors = reply.get("errors").and_then(Json::as_arr).expect("errors");
+    assert!(
+        errors.iter().any(|e| {
+            e.get("backend").and_then(Json::as_str) == Some(dead_addr.as_str())
+        }),
+        "quorum failure must name the dead backend: {reply}"
+    );
+    let snap = router.snapshot();
+    assert!(snap.write_fanouts >= 3, "{snap:?}");
+    assert_eq!(snap.quorum_fails, 1, "{snap:?}");
+}
+
+#[test]
+fn partitioned_r1_degrades_with_backend_attribution() {
+    // Without replication (R=1) a partitioned fleet loses a key's only
+    // holder when its backend dies: the reply degrades — and must say
+    // WHICH mentions were lost and WHICH backend failed. This is the
+    // failure mode the R=2 kill test proves replication eliminates.
+    let ds = dataset(6);
+    let (mut backends, router) =
+        partitioned_cluster(&ds, 3, 1, &quiet_cfg());
+    let names = entity_names(&ds);
+
+    // two mentions owned by two different backends
+    let a = names
+        .iter()
+        .find(|n| router.ring().owner(entity_key(n.as_str())) == Some(0))
+        .expect("some key owned by backend 0");
+    let b = names
+        .iter()
+        .find(|n| router.ring().owner(entity_key(n.as_str())) != Some(0))
+        .expect("some key owned elsewhere");
+
+    backends[0].kill();
+    let dead_addr = backends[0].addr.clone();
+
+    // the scattered query survives, degraded, with full attribution
+    let reply = router.query(&format!(
+        "describe the hierarchy around {a} and {b}"
+    ));
+    assert!(is_ok(&reply), "{reply}");
+    assert_eq!(reply.get("degraded"), Some(&Json::Bool(true)), "{reply}");
+    let missing: Vec<&str> = reply
+        .get("missing_entities")
+        .and_then(Json::as_arr)
+        .expect("missing_entities")
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    assert!(missing.contains(&a.as_str()), "{reply}");
+    let failed: Vec<&str> = reply
+        .get("failed_backends")
+        .and_then(Json::as_arr)
+        .expect("failed_backends")
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    assert_eq!(failed, vec![dead_addr.as_str()], "{reply}");
+    assert!(router.snapshot().degraded >= 1);
+
+    // a single-mention query for the lost key is a terminal failure
+    // that names the backend
+    let reply = router.query(&format!("tell me about {a}"));
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    assert_eq!(
+        reply.get("backend").and_then(Json::as_str),
+        Some(dead_addr.as_str()),
+        "terminal failures must name the failing backend: {reply}"
+    );
 }
 
 #[test]

@@ -18,6 +18,11 @@ cargo fmt --all --check
 echo "==> cargo clippy -D warnings"
 cargo clippy --workspace --all-targets -- -D warnings
 
+# Docs are a first-class deliverable (README.md + docs/PROTOCOL.md +
+# rustdoc): broken intra-doc links or malformed rustdoc fail the gate.
+echo "==> cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace --quiet
+
 if [[ "$fast" == 0 ]]; then
   echo "==> cargo build --release"
   cargo build --release
