@@ -386,6 +386,9 @@ fn main() {
 
     // ---- replication: R=1 vs R=2 partitioned backends, skewed load ----
     replication_scenario(&args, &out);
+
+    // ---- elasticity: join a backend into a live R=2 fleet ----
+    join_scenario(&args, &out);
 }
 
 /// The PR-3 acceptance scenario: the same client load against the
@@ -710,4 +713,240 @@ fn replication_scenario(args: &Args, out: &str) {
     };
     csv.write_to(&rep_out).expect("write replication csv");
     println!("wrote {rep_out}");
+}
+
+/// The ISSUE-5 acceptance scenario: a 4th backend joins a LIVE 3-node
+/// key-partitioned R=2 fleet under Zipf load. Three phases of the same
+/// client load — before the join, concurrent with the warm-up + epoch
+/// roll + admission, and after — plus the memory axis: the joiner
+/// starts with an EMPTY index (warming partition; every key it serves
+/// arrives via the `\x01insert` handoff), and the incumbents' post-drop
+/// live index shrinks from ~R/N toward the ~R/(N+1) bound.
+fn join_scenario(args: &Args, out: &str) {
+    let queries: usize = args.num_or("router-queries", 384);
+    let clients: usize = args.num_or("router-clients", 8).max(1);
+    let workers: usize = args.num_or("router-workers", 2);
+    let trees: usize = args.num_or("router-trees", 60);
+    const N: usize = 3;
+    const R: usize = 2;
+
+    let ds = HospitalDataset::generate(HospitalConfig {
+        trees,
+        ..HospitalConfig::default()
+    });
+    let forest = Arc::new(ds.build_forest());
+    let names: Vec<String> = forest
+        .interner()
+        .iter()
+        .map(|(_, n)| n.to_string())
+        .collect();
+    let workload = Workload::generate(
+        &forest,
+        WorkloadConfig {
+            entities_per_query: 1,
+            queries: 64,
+            zipf_s: 1.2,
+            deep_bias: 0.0,
+            ..Default::default()
+        },
+    );
+
+    // the full fleet's addresses are fixed up front (partitions hash
+    // the address list): the first N serve now, the last one joins
+    let listeners: Vec<TcpListener> = (0..N + 1)
+        .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind"))
+        .collect();
+    let all_addrs: Vec<String> = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect();
+    let old_addrs: Vec<String> = all_addrs[..N].to_vec();
+
+    let mut backends = Vec::with_capacity(N + 1);
+    let mut listeners = listeners.into_iter();
+    for (i, listener) in listeners.by_ref().take(N).enumerate() {
+        let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+        let cfg = RagConfig {
+            replication_factor: R,
+            key_partition: Some(
+                KeyPartition::new(old_addrs.clone(), i, R).expect("partition"),
+            ),
+            ..RagConfig::default()
+        };
+        let coordinator = Arc::new(
+            Coordinator::start(
+                forest.clone(),
+                corpus_from_texts(&ds.documents()),
+                engine,
+                cfg,
+                CoordinatorConfig { workers, ..Default::default() },
+            )
+            .expect("backend coordinator"),
+        );
+        let handle =
+            serve_listener(coordinator.clone(), listener).expect("listener");
+        backends.push((coordinator, handle));
+    }
+    let router = Arc::new(
+        Router::connect(
+            names.iter().map(String::as_str),
+            &RouterConfig {
+                replication_factor: R,
+                probe_interval: Duration::from_millis(25),
+                ..RouterConfig::for_backends(old_addrs)
+            },
+        )
+        .expect("router"),
+    );
+    for q in workload.queries.iter().take(8) {
+        let _ = router.query(&q.text);
+    }
+
+    let run_load = |label: &str| -> (f64, usize) {
+        let t0 = Instant::now();
+        let failures: usize = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let router = router.clone();
+                    let workload = &workload;
+                    let share =
+                        queries / clients + usize::from(c < queries % clients);
+                    s.spawn(move || {
+                        let mut failures = 0usize;
+                        for i in 0..share {
+                            let q = &workload.queries
+                                [(c + i * clients) % workload.queries.len()];
+                            let reply = router.query(&q.text);
+                            if reply.get("ok") != Some(&Json::Bool(true)) {
+                                failures += 1;
+                            }
+                        }
+                        failures
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        let qps = queries as f64 / t0.elapsed().as_secs_f64();
+        let _ = label;
+        (qps, failures)
+    };
+
+    println!(
+        "\nelastic join under Zipf load ({N}+1 backends, R={R}, \
+         {queries} queries/phase, {clients} clients):"
+    );
+    let incumbent_kib = |backends: &[(Arc<Coordinator>, _)]| -> f64 {
+        backends[..N]
+            .iter()
+            .map(|(c, _)| c.live_index_bytes() as f64 / 1024.0)
+            .sum::<f64>()
+            / N as f64
+    };
+    let kib_before = incumbent_kib(&backends);
+    let (qps_before, fail_before) = run_load("before");
+
+    // the joiner: EMPTY index (warming partition over the full list),
+    // filled exclusively by the router's warm-up handoff
+    let joiner_listener = listeners.next().expect("joiner listener");
+    let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+    let cfg = RagConfig {
+        replication_factor: R,
+        key_partition: Some(
+            KeyPartition::joining(all_addrs.clone(), N, R)
+                .expect("joining partition"),
+        ),
+        ..RagConfig::default()
+    };
+    let coordinator = Arc::new(
+        Coordinator::start(
+            forest.clone(),
+            corpus_from_texts(&ds.documents()),
+            engine,
+            cfg,
+            CoordinatorConfig { workers, ..Default::default() },
+        )
+        .expect("joiner coordinator"),
+    );
+    let handle =
+        serve_listener(coordinator.clone(), joiner_listener).expect("listener");
+    backends.push((coordinator, handle));
+
+    // run the same load WHILE the join (warm-up + epoch roll +
+    // admission + drop pass) executes on another thread
+    let (join_reply, (qps_during, fail_during)) = std::thread::scope(|s| {
+        let router = router.clone();
+        let joiner_addr = all_addrs[N].clone();
+        let join = s.spawn(move || router.join(&joiner_addr));
+        let load = run_load("during");
+        (join.join().expect("join thread"), load)
+    });
+    assert_eq!(
+        join_reply.get("ok"),
+        Some(&Json::Bool(true)),
+        "join failed: {join_reply}"
+    );
+    let keys_streamed = join_reply
+        .get("keys_streamed")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    let keys_dropped = join_reply
+        .get("keys_dropped")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+
+    let (qps_after, fail_after) = run_load("after");
+    let kib_after = incumbent_kib(&backends);
+    let joiner_kib =
+        backends[N].0.live_index_bytes() as f64 / 1024.0;
+
+    let mut csv = CsvTable::new(&[
+        "phase",
+        "qps",
+        "failures",
+        "incumbent_live_kib_mean",
+        "joiner_live_kib",
+        "keys_streamed",
+        "keys_dropped",
+        "ring_epoch",
+    ]);
+    for (phase, qps, failures, kib) in [
+        ("before", qps_before, fail_before, kib_before),
+        ("during", qps_during, fail_during, kib_before),
+        ("after", qps_after, fail_after, kib_after),
+    ] {
+        println!(
+            "  {phase:<7} {qps:>8.1} q/s  {failures} failures  \
+             incumbent live index {kib:.1} KiB/backend"
+        );
+        csv.push(&[
+            phase.to_string(),
+            format!("{qps}"),
+            failures.to_string(),
+            format!("{kib}"),
+            format!("{joiner_kib}"),
+            format!("{keys_streamed}"),
+            format!("{keys_dropped}"),
+            router.ring_epoch().to_string(),
+        ]);
+    }
+    println!(
+        "  join: {keys_streamed:.0} keys streamed to the (initially \
+         empty) joiner, {keys_dropped:.0} disowned keys dropped; \
+         incumbents {kib_before:.1} -> {kib_after:.1} KiB (bound \
+         ~{:.1}), joiner {joiner_kib:.1} KiB",
+        kib_before * (N as f64) / (N as f64 + 1.0),
+    );
+
+    drop(router); // prober stops before its backends vanish
+    for (coordinator, handle) in backends {
+        handle.shutdown();
+        coordinator.stop();
+    }
+    let join_out = match out.strip_suffix(".csv") {
+        Some(stem) => format!("{stem}_join.csv"),
+        None => format!("{out}_join.csv"),
+    };
+    csv.write_to(&join_out).expect("write join csv");
+    println!("wrote {join_out}");
 }

@@ -117,8 +117,15 @@ pub struct Coordinator {
     retriever: Arc<dyn ConcurrentRetriever>,
     /// This backend's key partition, if the fleet is partitioned —
     /// consulted so a misrouted `\x01insert` NACKs instead of being
-    /// indistinguishable from an idempotent retry.
-    partition: Option<crate::rag::config::KeyPartition>,
+    /// indistinguishable from an idempotent retry. Behind a lock so an
+    /// elastic membership change (`\x01repartition`) can install the
+    /// next epoch's partition on a live backend.
+    partition: std::sync::RwLock<Option<crate::rag::config::KeyPartition>>,
+    /// The fleet membership epoch this backend currently serves
+    /// (`partition_epoch` in the `\x01stats` payload): the router's
+    /// health prober refuses to admit a backend whose epoch does not
+    /// match the serving ring's.
+    partition_epoch: std::sync::atomic::AtomicU64,
 }
 
 impl Coordinator {
@@ -239,13 +246,20 @@ impl Coordinator {
             );
         }
 
+        let partition_epoch = rag_cfg
+            .key_partition
+            .as_ref()
+            .map_or(0, |p| p.epoch());
         Ok(Coordinator {
             submit_tx: Mutex::new(Some(submit_tx)),
             metrics,
             threads: Mutex::new(threads),
             forest,
             retriever,
-            partition: rag_cfg.key_partition,
+            partition: std::sync::RwLock::new(rag_cfg.key_partition),
+            partition_epoch: std::sync::atomic::AtomicU64::new(
+                partition_epoch,
+            ),
         })
     }
 
@@ -311,7 +325,7 @@ impl Coordinator {
                 t.len()
             )));
         }
-        if let Some(p) = &self.partition {
+        if let Some(p) = self.partition.read().unwrap().as_ref() {
             if !p.owns(crate::filter::fingerprint::entity_key(entity)) {
                 return Err(CftError::Config(format!(
                     "key {entity:?} is not in this backend's partition"
@@ -346,11 +360,81 @@ impl Coordinator {
         }
     }
 
+    /// All indexed addresses of `entity` on this backend (the
+    /// `\x01dump` control line) — the read half of the rebalancer's
+    /// hinted handoff: a current replica dumps a key's address list so
+    /// the router can replay it to a joining backend as `\x01insert`
+    /// lines. Empty when the backend does not hold the key.
+    pub fn dump_entity(&self, entity: &str) -> Vec<crate::forest::EntityAddress> {
+        let mut out = Vec::new();
+        self.retriever.find_concurrent(entity, &mut out);
+        out
+    }
+
+    /// Install the next membership epoch's key partition (`None` =
+    /// full index) — the `\x01repartition` control line. Changes which
+    /// keys dynamic updates accept and the `partition_epoch` the
+    /// backend reports; already-indexed entries keep serving until
+    /// [`drop_disowned`](Coordinator::drop_disowned) reclaims them, so
+    /// a repartitioned backend never answers with missing facts
+    /// mid-rebalance. Errors when the serving retriever cannot
+    /// repartition (Bloom/naive baselines).
+    pub fn set_partition(
+        &self,
+        partition: Option<crate::rag::config::KeyPartition>,
+        epoch: u64,
+    ) -> Result<()> {
+        let had_partition = self.partition.read().unwrap().is_some();
+        if (partition.is_some() || had_partition)
+            && !self.retriever.repartition_concurrent(partition.clone())
+        {
+            return Err(CftError::Config(format!(
+                "{} cannot repartition (whole-tree annotations)",
+                self.retriever.name()
+            )));
+        }
+        *self.partition.write().unwrap() = partition;
+        self.partition_epoch
+            .store(epoch, std::sync::atomic::Ordering::Release);
+        Ok(())
+    }
+
+    /// Drop every indexed key the current partition no longer owns
+    /// (the `\x01purge` control line) — the incumbents' reclamation
+    /// pass after a membership change, run once the router has admitted
+    /// the new ring so no reader still routes the dropped keys here.
+    /// Returns the number of keys removed (0 with no partition).
+    pub fn drop_disowned(&self) -> Result<usize> {
+        match self.retriever.drop_disowned_concurrent() {
+            Some(n) => Ok(n),
+            None if self.partition.read().unwrap().is_none() => Ok(0),
+            None => Err(CftError::Config(format!(
+                "{} cannot drop disowned keys",
+                self.retriever.name()
+            ))),
+        }
+    }
+
+    /// The fleet membership epoch this backend serves (0 = fleet start
+    /// or unpartitioned).
+    pub fn partition_epoch(&self) -> u64 {
+        self.partition_epoch
+            .load(std::sync::atomic::Ordering::Acquire)
+    }
+
     /// Approximate heap bytes of the serving index — a key-partitioned
     /// backend reports roughly `R/N` of a full-index backend (the memory
     /// axis of the replication bench in `benches/concurrent.rs`).
     pub fn index_bytes(&self) -> usize {
         self.retriever.index_bytes()
+    }
+
+    /// Heap bytes backing **live** index entries only: after a
+    /// membership change's drop pass this shrinks toward the
+    /// `~R/N` bound even though freed arena capacity is retained
+    /// (the memory axis of the join bench in `benches/concurrent.rs`).
+    pub fn live_index_bytes(&self) -> usize {
+        self.retriever.live_index_bytes()
     }
 
     /// True once [`stop`](Coordinator::stop) has closed the submit
@@ -671,6 +755,77 @@ mod tests {
         );
         let back = c.query_blocking("tell me about cardiology").unwrap();
         assert!(back.fact_count > 0, "re-inserted entity must retrieve");
+        c.shutdown();
+    }
+
+    #[test]
+    fn repartition_dump_and_drop_pass_roundtrip() {
+        use crate::rag::config::KeyPartition;
+
+        let ds = HospitalDataset::generate(HospitalConfig {
+            trees: 6,
+            ..HospitalConfig::default()
+        });
+        let forest = Arc::new(ds.build_forest());
+        let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+        let c = Coordinator::start(
+            forest.clone(),
+            corpus_from_texts(&ds.documents()),
+            engine,
+            RagConfig::default(),
+            CoordinatorConfig { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(c.partition_epoch(), 0, "unpartitioned start is epoch 0");
+
+        // a full index dumps every entity's true address list
+        let addrs = c.dump_entity("cardiology");
+        let mut want = forest
+            .entity_id("cardiology")
+            .map(|id| forest.scan_addresses(id))
+            .unwrap();
+        let mut got = addrs.clone();
+        got.sort();
+        want.sort();
+        assert_eq!(got, want);
+        assert!(c.dump_entity("no such entity").is_empty());
+
+        // install a 1-of-2 partition at epoch 3: the epoch is reported,
+        // serving is unchanged until the drop pass
+        let p = KeyPartition::new(["a:1", "b:2"], 0, 1)
+            .unwrap()
+            .with_epoch(3);
+        c.set_partition(Some(p.clone()), 3).unwrap();
+        assert_eq!(c.partition_epoch(), 3);
+        let live_before = c.live_index_bytes();
+        let dropped = c.drop_disowned().unwrap();
+        let disowned = forest
+            .interner()
+            .iter()
+            .filter(|(_, n)| {
+                !p.owns(crate::filter::fingerprint::entity_key(n))
+            })
+            .count();
+        assert_eq!(dropped, disowned, "drop pass = exactly the disowned keys");
+        if dropped > 0 {
+            assert!(c.live_index_bytes() < live_before);
+            // a disowned key no longer dumps (and a re-run is a no-op)
+            let lost = forest
+                .interner()
+                .iter()
+                .find(|(_, n)| {
+                    !p.owns(crate::filter::fingerprint::entity_key(n))
+                })
+                .map(|(_, n)| n.to_string())
+                .unwrap();
+            assert!(c.dump_entity(&lost).is_empty(), "{lost}");
+        }
+        assert_eq!(c.drop_disowned().unwrap(), 0, "idempotent");
+
+        // clearing the partition resets to full-index behavior
+        c.set_partition(None, 4).unwrap();
+        assert_eq!(c.partition_epoch(), 4);
+        assert_eq!(c.drop_disowned().unwrap(), 0);
         c.shutdown();
     }
 

@@ -20,6 +20,18 @@
 //!   [`Coordinator::update_entity`] / [`Coordinator::remove_entity`],
 //!   replying `{"ok":…,"applied":…}` — the ack the router's replicated
 //!   write path counts against its quorum.
+//! * Elastic-membership lines (`router/rebalance.rs` drives these):
+//!   [`DUMP_REQUEST`] (`\x01dump <entity…>`) reads a key's indexed
+//!   addresses off a current replica, [`REPARTITION_REQUEST`]
+//!   (`\x01repartition <epoch> <replicas> <index> <addr,…>`) installs
+//!   the next membership epoch's [`KeyPartition`] on a live backend,
+//!   and [`PURGE_REQUEST`] (`\x01purge`) runs the incumbents'
+//!   disowned-key drop pass. [`JOIN_REQUEST`]/[`DRAIN_REQUEST`] are
+//!   **router front-door** verbs; a backend answers them `ok:false`.
+//!   The `\x01stats` payload carries `partition_epoch`, which the
+//!   router's prober matches before (re-)admitting a backend.
+//!
+//! [`KeyPartition`]: crate::rag::config::KeyPartition
 //!
 //! Serving comes in three lifetimes: [`serve`] (runs until the process
 //! dies — the CLI path), [`serve_with_shutdown`], which returns a
@@ -56,6 +68,30 @@ pub const INSERT_REQUEST: &str = "\x01insert";
 /// `\x01delete <entity…>`. See `docs/PROTOCOL.md`.
 pub const DELETE_REQUEST: &str = "\x01delete";
 
+/// Control-line verb dumping an entity's indexed address list:
+/// `\x01dump <entity…>` — the read half of the rebalancer's hinted
+/// handoff (`router/rebalance.rs`). See `docs/PROTOCOL.md`.
+pub const DUMP_REQUEST: &str = "\x01dump";
+
+/// Control-line verb installing the next membership epoch's partition:
+/// `\x01repartition <epoch> <replicas> <index> <addr,addr,…>`
+/// (`replicas` 0 = full index). See `docs/PROTOCOL.md`.
+pub const REPARTITION_REQUEST: &str = "\x01repartition";
+
+/// Control-line verb for the incumbents' post-rebalance drop pass:
+/// `\x01purge` reclaims every key the current partition no longer
+/// owns. See `docs/PROTOCOL.md`.
+pub const PURGE_REQUEST: &str = "\x01purge";
+
+/// Router front-door verb: `\x01join <addr>` rebalances a new backend
+/// into the serving ring. Backends reject it. See `docs/PROTOCOL.md`.
+pub const JOIN_REQUEST: &str = "\x01join";
+
+/// Router front-door verb: `\x01drain <addr>` hands a leaving
+/// backend's keys off and removes it from the serving ring. Backends
+/// reject it. See `docs/PROTOCOL.md`.
+pub const DRAIN_REQUEST: &str = "\x01drain";
+
 /// A parsed `\x01` control line (`docs/PROTOCOL.md` §Control lines).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ControlLine<'a> {
@@ -65,6 +101,23 @@ pub enum ControlLine<'a> {
     Insert { tree: u32, node: u32, entity: &'a str },
     /// `\x01delete <entity…>` — drop an entity from the index.
     Delete { entity: &'a str },
+    /// `\x01dump <entity…>` — the entity's indexed addresses.
+    Dump { entity: &'a str },
+    /// `\x01repartition <epoch> <replicas> <index> <addr,addr,…>` —
+    /// install the next membership epoch's key partition (`replicas`
+    /// 0 clears it: full index).
+    Repartition {
+        epoch: u64,
+        replicas: usize,
+        index: usize,
+        backends: &'a str,
+    },
+    /// `\x01purge` — drop every key the current partition disowns.
+    Purge,
+    /// `\x01join <addr>` — router front door: rebalance a backend in.
+    Join { addr: &'a str },
+    /// `\x01drain <addr>` — router front door: rebalance a backend out.
+    Drain { addr: &'a str },
 }
 
 /// Parse a control line. Returns `None` when `line` is not a control
@@ -101,6 +154,36 @@ pub fn parse_control(
             Ok(ControlLine::Delete { entity: rest })
         }
         "delete" => Err("\\x01delete wants: <entity...>".into()),
+        "dump" if !rest.is_empty() => Ok(ControlLine::Dump { entity: rest }),
+        "dump" => Err("\\x01dump wants: <entity...>".into()),
+        "repartition" => {
+            let mut it = rest.splitn(4, ' ');
+            let epoch = it.next().unwrap_or("").parse::<u64>();
+            let replicas = it.next().unwrap_or("").parse::<usize>();
+            let index = it.next().unwrap_or("").parse::<usize>();
+            let backends = it.next().unwrap_or("").trim();
+            match (epoch, replicas, index) {
+                (Ok(epoch), Ok(replicas), Ok(index))
+                    if !backends.is_empty() =>
+                {
+                    Ok(ControlLine::Repartition {
+                        epoch,
+                        replicas,
+                        index,
+                        backends,
+                    })
+                }
+                _ => Err("\\x01repartition wants: <epoch> <replicas> \
+                          <index> <addr,addr,...>"
+                    .into()),
+            }
+        }
+        "purge" if rest.is_empty() => Ok(ControlLine::Purge),
+        "purge" => Err("\\x01purge takes no arguments".into()),
+        "join" if !rest.is_empty() => Ok(ControlLine::Join { addr: rest }),
+        "join" => Err("\\x01join wants: <addr>".into()),
+        "drain" if !rest.is_empty() => Ok(ControlLine::Drain { addr: rest }),
+        "drain" => Err("\\x01drain wants: <addr>".into()),
         other => Err(format!("unknown control line {other:?}")),
     })
 }
@@ -249,15 +332,52 @@ fn handle_conn(coordinator: Arc<Coordinator>, stream: TcpStream) -> std::io::Res
             break;
         }
         let reply = match parse_control(query) {
-            Some(Ok(ControlLine::Stats)) => {
-                coordinator.metrics().snapshot().to_json()
-            }
+            Some(Ok(ControlLine::Stats)) => stats_reply(&coordinator),
             Some(Ok(ControlLine::Insert { tree, node, entity })) => {
                 update_ack(coordinator.update_entity(entity, tree, node))
             }
             Some(Ok(ControlLine::Delete { entity })) => {
                 update_ack(coordinator.remove_entity(entity))
             }
+            Some(Ok(ControlLine::Dump { entity })) => {
+                dump_reply(&coordinator, entity)
+            }
+            Some(Ok(ControlLine::Repartition {
+                epoch,
+                replicas,
+                index,
+                backends,
+            })) => repartition_reply(
+                &coordinator,
+                epoch,
+                replicas,
+                index,
+                backends,
+            ),
+            Some(Ok(ControlLine::Purge)) => match coordinator.drop_disowned()
+            {
+                Ok(n) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("dropped", Json::Num(n as f64)),
+                ]),
+                Err(e) => Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(e.to_string())),
+                ]),
+            },
+            Some(Ok(
+                ControlLine::Join { .. } | ControlLine::Drain { .. },
+            )) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    Json::Str(
+                        "join/drain are router front-door control lines; \
+                         send them to the router, not a backend"
+                            .into(),
+                    ),
+                ),
+            ]),
             Some(Err(reason)) => Json::obj(vec![
                 ("ok", Json::Bool(false)),
                 ("error", Json::Str(reason)),
@@ -268,6 +388,84 @@ fn handle_conn(coordinator: Arc<Coordinator>, stream: TcpStream) -> std::io::Res
         writer.write_all(b"\n")?;
     }
     Ok(())
+}
+
+/// The `\x01stats` payload: the coordinator's metrics snapshot stamped
+/// with the backend's `partition_epoch` — what the router's health
+/// prober matches against the serving ring's epoch before (re-)admitting
+/// the backend.
+fn stats_reply(coordinator: &Coordinator) -> Json {
+    let mut json = coordinator.metrics().snapshot().to_json();
+    if let Json::Obj(m) = &mut json {
+        m.insert(
+            "partition_epoch".into(),
+            Json::Num(coordinator.partition_epoch() as f64),
+        );
+    }
+    json
+}
+
+/// The `\x01dump` reply: the entity's indexed addresses on this
+/// backend, as `{"tree":…,"node":…}` pairs (empty when not held) — the
+/// source side of the rebalancer's `\x01insert` handoff replay.
+fn dump_reply(coordinator: &Coordinator, entity: &str) -> Json {
+    let addrs = coordinator.dump_entity(entity);
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("entity", Json::Str(entity.to_string())),
+        (
+            "addresses",
+            Json::Arr(
+                addrs
+                    .iter()
+                    .map(|a| {
+                        Json::obj(vec![
+                            ("tree", Json::Num(a.tree as f64)),
+                            ("node", Json::Num(a.node as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// The `\x01repartition` handler: build and install the next epoch's
+/// [`KeyPartition`](crate::rag::config::KeyPartition) (`replicas` 0
+/// clears the partition — full index — while still advancing the
+/// reported epoch, which is how an unpartitioned fleet tracks
+/// membership changes).
+fn repartition_reply(
+    coordinator: &Coordinator,
+    epoch: u64,
+    replicas: usize,
+    index: usize,
+    backends: &str,
+) -> Json {
+    let outcome = if replicas == 0 {
+        coordinator.set_partition(None, epoch)
+    } else {
+        let addrs: Vec<&str> = backends
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .collect();
+        crate::rag::config::KeyPartition::new(addrs, index, replicas)
+            .and_then(|p| {
+                coordinator.set_partition(Some(p.with_epoch(epoch)), epoch)
+            })
+    };
+    match outcome {
+        Ok(()) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("partition_epoch", Json::Num(epoch as f64)),
+            ("replicas", Json::Num(replicas as f64)),
+        ]),
+        Err(e) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str(e.to_string())),
+        ]),
+    }
 }
 
 /// The one-line ack for a dynamic-update control line: `ok` is whether
@@ -467,12 +665,42 @@ mod tests {
             parse_control("\x01delete intensive care"),
             Some(Ok(ControlLine::Delete { entity: "intensive care" }))
         );
+        assert_eq!(
+            parse_control("\x01dump ward 9"),
+            Some(Ok(ControlLine::Dump { entity: "ward 9" }))
+        );
+        assert_eq!(
+            parse_control("\x01repartition 2 1 0 a:1,b:2"),
+            Some(Ok(ControlLine::Repartition {
+                epoch: 2,
+                replicas: 1,
+                index: 0,
+                backends: "a:1,b:2",
+            }))
+        );
+        assert_eq!(parse_control("\x01purge"), Some(Ok(ControlLine::Purge)));
+        assert_eq!(
+            parse_control("\x01join 127.0.0.1:7184"),
+            Some(Ok(ControlLine::Join { addr: "127.0.0.1:7184" }))
+        );
+        assert_eq!(
+            parse_control("\x01drain 127.0.0.1:7184"),
+            Some(Ok(ControlLine::Drain { addr: "127.0.0.1:7184" }))
+        );
         for bad in [
             "\x01stats now",
             "\x01insert",
             "\x01insert x y z",
             "\x01insert 1 2",
             "\x01delete",
+            "\x01dump",
+            "\x01repartition",
+            "\x01repartition 1 2",
+            "\x01repartition x 1 0 a:1",
+            "\x01repartition 1 1 0",
+            "\x01purge now",
+            "\x01join",
+            "\x01drain",
             "\x01launch missiles",
         ] {
             assert!(
@@ -480,6 +708,74 @@ mod tests {
                 "{bad:?} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn rebalance_control_lines_roundtrip_over_tcp() {
+        let c = coordinator();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                let (stream, _) = listener.accept().unwrap();
+                handle_conn(c, stream).unwrap();
+            })
+        };
+        let mut client = TcpStream::connect(addr).unwrap();
+        client
+            .write_all(
+                b"\x01stats\n\
+                  \x01dump cardiology\n\
+                  \x01repartition 1 0 0 x:1\n\
+                  \x01stats\n\
+                  \x01purge\n\
+                  \x01join 10.0.0.9:1\n\
+                  :quit\n",
+            )
+            .unwrap();
+        let mut reader = BufReader::new(client);
+        let mut next = || {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(line.trim()).expect("reply is JSON")
+        };
+        // fresh backend reports epoch 0 in its stats payload
+        let stats = next();
+        assert_eq!(
+            stats.get("partition_epoch").and_then(Json::as_f64),
+            Some(0.0),
+            "{stats}"
+        );
+        // dump returns the entity's address objects
+        let dump = next();
+        assert_eq!(dump.get("ok"), Some(&Json::Bool(true)), "{dump}");
+        let addrs = dump.get("addresses").and_then(Json::as_arr).unwrap();
+        assert!(!addrs.is_empty(), "{dump}");
+        assert!(addrs[0].get("tree").and_then(Json::as_f64).is_some());
+        assert!(addrs[0].get("node").and_then(Json::as_f64).is_some());
+        // repartition with replicas=0 keeps the full index but advances
+        // the reported epoch
+        let rep = next();
+        assert_eq!(rep.get("ok"), Some(&Json::Bool(true)), "{rep}");
+        assert_eq!(
+            rep.get("partition_epoch").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        let stats = next();
+        assert_eq!(
+            stats.get("partition_epoch").and_then(Json::as_f64),
+            Some(1.0),
+            "{stats}"
+        );
+        // purge on a full index drops nothing
+        let purge = next();
+        assert_eq!(purge.get("ok"), Some(&Json::Bool(true)), "{purge}");
+        assert_eq!(purge.get("dropped").and_then(Json::as_f64), Some(0.0));
+        // join is a router verb: backends refuse it
+        let join = next();
+        assert_eq!(join.get("ok"), Some(&Json::Bool(false)), "{join}");
+        server.join().unwrap();
     }
 
     #[test]

@@ -159,6 +159,14 @@ impl BlockArena {
     pub fn memory_bytes(&self) -> usize {
         self.blocks.capacity() * std::mem::size_of::<Block>()
     }
+
+    /// Bytes backing **live** lists only: freed blocks (delete churn,
+    /// the rebalancer's disowned-key drop pass) stop counting here even
+    /// though the arena keeps their capacity for reuse — the measure of
+    /// how much index a backend actually still holds.
+    pub fn live_bytes(&self) -> usize {
+        self.blocks_in_use() * std::mem::size_of::<Block>()
+    }
 }
 
 /// Iterator over one block list.

@@ -610,6 +610,19 @@ impl CuckooFilter {
             + self.arena.memory_bytes()
     }
 
+    /// Like [`memory_bytes`](CuckooFilter::memory_bytes), but counting
+    /// only arena blocks backing **live** address lists — deletes (and
+    /// the rebalancer's disowned-key drop pass) shrink this even though
+    /// the arena retains freed capacity for reuse.
+    pub fn live_memory_bytes(&self) -> usize {
+        self.table.memory_bytes()
+            + self
+                .migration
+                .as_ref()
+                .map_or(0, |m| m.target.memory_bytes())
+            + self.arena.live_bytes()
+    }
+
     /// Bytes on the lookup-critical path only (fingerprint arrays).
     pub fn hot_bytes(&self) -> usize {
         self.table.fps.capacity() * 2

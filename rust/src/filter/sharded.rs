@@ -273,6 +273,16 @@ impl ShardedCuckooFilter {
             .map(|s| s.read().unwrap().memory_bytes())
             .sum()
     }
+
+    /// Heap bytes backing **live** entries across all shards (freed
+    /// block-list capacity excluded) — what a rebalance drop pass
+    /// actually reclaims. See [`CuckooFilter::live_memory_bytes`].
+    pub fn live_memory_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().live_memory_bytes())
+            .sum()
+    }
 }
 
 #[cfg(test)]

@@ -57,18 +57,41 @@ impl Algorithm {
 /// backends in `ring.replicas(key, replicas)`; everything else is
 /// skipped at index-build time, cutting per-backend filter/annotation
 /// memory to roughly `R/N` of a full index.
+///
+/// **Partition epoch**: every membership change of the fleet (a backend
+/// joining or draining, `router/rebalance.rs`) bumps the fleet-wide
+/// epoch. A backend reports its partition's epoch in the `\x01stats`
+/// payload, and the router's health prober refuses to (re-)admit a
+/// backend whose reported epoch does not match the serving ring's — a
+/// backend mid-warm-up or running a stale partition must not attract
+/// traffic. `new` starts at epoch 0 (fleet start); the `\x01repartition`
+/// control line installs later epochs.
+///
+/// **Warming**: a backend started to *join* a running fleet
+/// ([`KeyPartition::joining`], `cft-rag serve --joining`) builds an
+/// **empty** index — its keys arrive exclusively through the router's
+/// warm-up handoff (`\x01insert` replay from the current replicas), so
+/// the joiner's index reflects the fleet's live state, including every
+/// dynamic update since fleet start, rather than a possibly stale
+/// forest snapshot. Dynamic updates are accepted for owned keys
+/// throughout (that is what the handoff rides on).
 #[derive(Clone, Debug)]
 pub struct KeyPartition {
     ring: ShardRing,
     backend_index: usize,
     replicas: usize,
+    /// Fleet-wide membership epoch this partition belongs to.
+    epoch: u64,
+    /// True while the backend awaits its warm-up handoff: nothing is
+    /// indexed at build time.
+    warming: bool,
 }
 
 impl KeyPartition {
     /// Partition for backend `backend_index` of `backends`, replicating
     /// every key across its top-`replicas` ranked backends. Errors on an
     /// empty fleet, an out-of-range index, or `replicas` outside
-    /// `1..=backends.len()`.
+    /// `1..=backends.len()`. Starts at epoch 0, not warming.
     pub fn new<S: Into<String>>(
         backends: impl IntoIterator<Item = S>,
         backend_index: usize,
@@ -92,13 +115,46 @@ impl KeyPartition {
                 ring.len()
             )));
         }
-        Ok(KeyPartition { ring, backend_index, replicas })
+        Ok(KeyPartition {
+            ring,
+            backend_index,
+            replicas,
+            epoch: 0,
+            warming: false,
+        })
+    }
+
+    /// The same partition at a given fleet epoch (builder-style).
+    pub fn with_epoch(mut self, epoch: u64) -> KeyPartition {
+        self.epoch = epoch;
+        self
+    }
+
+    /// Partition for a backend **joining** a running fleet: identical
+    /// ownership, but [`index_at_build`](KeyPartition::index_at_build)
+    /// is false for every key, so the index starts empty and is filled
+    /// by the router's warm-up handoff.
+    pub fn joining<S: Into<String>>(
+        backends: impl IntoIterator<Item = S>,
+        backend_index: usize,
+        replicas: usize,
+    ) -> Result<KeyPartition> {
+        let mut p = KeyPartition::new(backends, backend_index, replicas)?;
+        p.warming = true;
+        Ok(p)
     }
 
     /// True when `key`'s replica set contains this backend — i.e. this
-    /// backend must index the key.
+    /// backend must index (and accept dynamic updates for) the key.
     pub fn owns(&self, key: u64) -> bool {
         self.ring.replicas(key, self.replicas).contains(&self.backend_index)
+    }
+
+    /// True when `key` should be indexed at **build time**: owned, and
+    /// the backend is not warming (a joining backend's keys arrive via
+    /// handoff instead).
+    pub fn index_at_build(&self, key: u64) -> bool {
+        !self.warming && self.owns(key)
     }
 
     /// This backend's position in the fleet's address list.
@@ -114,6 +170,24 @@ impl KeyPartition {
     /// Number of backends in the fleet.
     pub fn num_backends(&self) -> usize {
         self.ring.len()
+    }
+
+    /// The fleet membership epoch this partition was built for
+    /// (reported as `partition_epoch` in the `\x01stats` payload).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// True while the backend awaits its warm-up handoff.
+    pub fn is_warming(&self) -> bool {
+        self.warming
+    }
+
+    /// The fleet address list this partition hashes (ring order).
+    pub fn addresses(&self) -> Vec<String> {
+        (0..self.ring.len())
+            .map(|i| self.ring.name(i).to_string())
+            .collect()
     }
 }
 
@@ -381,6 +455,33 @@ mod tests {
                 assert_eq!(holders, r, "{name} at R={r}");
             }
         }
+    }
+
+    #[test]
+    fn partition_epoch_and_warming() {
+        use crate::filter::fingerprint::entity_key;
+
+        let p = KeyPartition::new(["a:1", "b:2"], 0, 1).unwrap();
+        assert_eq!(p.epoch(), 0, "fleet start is epoch 0");
+        assert!(!p.is_warming());
+        assert_eq!(p.with_epoch(3).epoch(), 3);
+
+        // a joining partition owns its keys but indexes none at build
+        let j = KeyPartition::joining(["a:1", "b:2"], 1, 2).unwrap();
+        assert!(j.is_warming());
+        for name in ["cardiology", "oncology", "ward 3"] {
+            let key = entity_key(name);
+            assert!(j.owns(key), "{name}: R=N partition owns everything");
+            assert!(
+                !j.index_at_build(key),
+                "{name}: warming partitions build empty"
+            );
+        }
+        assert_eq!(
+            j.addresses(),
+            vec!["a:1".to_string(), "b:2".to_string()],
+            "address list round-trips in ring order"
+        );
     }
 
     #[test]

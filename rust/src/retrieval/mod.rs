@@ -126,9 +126,42 @@ pub trait ConcurrentRetriever: Send + Sync {
         None
     }
 
+    /// Install a new [`KeyPartition`](crate::rag::config::KeyPartition)
+    /// (or clear it with `None`) on a live retriever — the backend-side
+    /// half of an elastic-membership change (`\x01repartition`, see
+    /// `router/rebalance.rs`). Changes only which keys *dynamic
+    /// updates* accept from now on; already-indexed entries keep
+    /// serving until a drop pass reclaims them. Returns `false` when
+    /// the retriever cannot repartition at all (the Bloom/naive
+    /// baselines annotate whole trees).
+    fn repartition_concurrent(
+        &self,
+        _partition: Option<crate::rag::config::KeyPartition>,
+    ) -> bool {
+        false
+    }
+
+    /// Bulk-drop every indexed key the **current** partition no longer
+    /// owns — the incumbents' reclamation pass after a membership
+    /// change moved keys away (run *after* `repartition_concurrent`, so
+    /// the drop is computed against the new epoch). `None` =
+    /// unsupported; `Some(n)` = keys actually removed (0 with no
+    /// partition installed — a full index owns everything).
+    fn drop_disowned_concurrent(&self) -> Option<usize> {
+        None
+    }
+
     /// Approximate heap bytes of the retriever's index structures.
     fn index_bytes(&self) -> usize {
         0
+    }
+
+    /// Heap bytes backing live index entries only (defaults to
+    /// [`index_bytes`](ConcurrentRetriever::index_bytes)): retrievers
+    /// with a free-list arena report shrinkage here when entries are
+    /// dropped, even though capacity is retained for reuse.
+    fn live_index_bytes(&self) -> usize {
+        self.index_bytes()
     }
 }
 

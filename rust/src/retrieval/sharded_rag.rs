@@ -26,7 +26,10 @@ pub struct ShardedCuckooTRag {
     cf: ShardedCuckooFilter,
     /// When set, only keys whose replica set contains this backend are
     /// indexed (and dynamic updates for other keys are rejected).
-    partition: Option<KeyPartition>,
+    /// Behind a lock so elastic membership changes can install a new
+    /// epoch's partition on a live retriever (`\x01repartition`); the
+    /// lookup path never touches it.
+    partition: RwLock<Option<KeyPartition>>,
 }
 
 impl ShardedCuckooTRag {
@@ -60,21 +63,32 @@ impl ShardedCuckooTRag {
         let table = forest.address_table();
         for (id, addrs) in table {
             let key = entity_key(forest.entity_name(id));
-            if partition.as_ref().map_or(true, |p| p.owns(key)) {
+            // a *warming* partition (backend joining a live fleet)
+            // indexes nothing here: its keys arrive via handoff
+            if partition.as_ref().map_or(true, |p| p.index_at_build(key)) {
                 cf.insert(key, &addrs);
             }
         }
-        ShardedCuckooTRag { forest: RwLock::new(forest), cf, partition }
+        ShardedCuckooTRag {
+            forest: RwLock::new(forest),
+            cf,
+            partition: RwLock::new(partition),
+        }
     }
 
     /// True when this retriever must index `key` (no partition = all).
     fn owns(&self, key: u64) -> bool {
-        self.partition.as_ref().map_or(true, |p| p.owns(key))
+        self.partition
+            .read()
+            .unwrap()
+            .as_ref()
+            .map_or(true, |p| p.owns(key))
     }
 
-    /// The key partition this retriever was built with, if any.
-    pub fn partition(&self) -> Option<&KeyPartition> {
-        self.partition.as_ref()
+    /// The key partition currently installed, if any (a clone — the
+    /// live partition can be replaced by `repartition_concurrent`).
+    pub fn partition(&self) -> Option<KeyPartition> {
+        self.partition.read().unwrap().clone()
     }
 
     /// Access the underlying sharded filter (benches/inspection).
@@ -181,8 +195,44 @@ impl ConcurrentRetriever for ShardedCuckooTRag {
         Some(self.cf.delete(key))
     }
 
+    /// Installing a new epoch's partition changes only what dynamic
+    /// updates accept; already-indexed entries keep serving until
+    /// [`drop_disowned_concurrent`](ConcurrentRetriever::drop_disowned_concurrent)
+    /// reclaims the ones the new partition disowns — that ordering is
+    /// what lets readers see a full index throughout a membership
+    /// change.
+    fn repartition_concurrent(
+        &self,
+        partition: Option<KeyPartition>,
+    ) -> bool {
+        *self.partition.write().unwrap() = partition;
+        true
+    }
+
+    /// Walks this retriever's own vocabulary (its forest interner) and
+    /// deletes every key the current partition no longer owns.
+    /// `CuckooFilter::delete` matches the exact stored key, so a
+    /// never-indexed key is a no-op rather than a fingerprint-collision
+    /// hazard.
+    fn drop_disowned_concurrent(&self) -> Option<usize> {
+        let Some(p) = self.partition() else { return Some(0) };
+        let forest = self.forest();
+        let mut dropped = 0usize;
+        for (_, name) in forest.interner().iter() {
+            let key = entity_key(name);
+            if !p.owns(key) && self.cf.delete(key) {
+                dropped += 1;
+            }
+        }
+        Some(dropped)
+    }
+
     fn index_bytes(&self) -> usize {
         self.cf.memory_bytes()
+    }
+
+    fn live_index_bytes(&self) -> usize {
+        self.cf.live_memory_bytes()
     }
 }
 
@@ -333,6 +383,95 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn warming_partition_builds_empty_then_fills_by_handoff() {
+        use crate::rag::config::KeyPartition;
+
+        let f = forest();
+        let r = ShardedCuckooTRag::with_partition(
+            f.clone(),
+            CuckooConfig::default(),
+            2,
+            Some(KeyPartition::joining(["a:1"], 0, 1).unwrap()),
+        );
+        let mut out = Vec::new();
+        for name in ["alpha", "beta", "gamma"] {
+            out.clear();
+            r.find_concurrent(name, &mut out);
+            assert!(out.is_empty(), "{name}: warming index must start empty");
+        }
+        // the handoff transport (`\x01insert` → insert_occurrence) fills it
+        assert_eq!(
+            r.insert_occurrence("alpha", EntityAddress::new(0, 0)),
+            Some(true),
+            "warming backends accept owned keys"
+        );
+        out.clear();
+        r.find_concurrent("alpha", &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn repartition_then_drop_pass_reclaims_disowned_keys() {
+        use crate::rag::config::KeyPartition;
+
+        let f = forest();
+        // full index: every key present, no partition
+        let r = ShardedCuckooTRag::new(f.clone(), 2);
+        assert_eq!(
+            ConcurrentRetriever::drop_disowned_concurrent(&r),
+            Some(0),
+            "no partition: nothing is disowned"
+        );
+        let live_before = ConcurrentRetriever::live_index_bytes(&r);
+
+        // install a 1-of-2 partition at a later epoch; serving is
+        // unchanged until the drop pass runs
+        let p = KeyPartition::new(["a:1", "b:2"], 0, 1)
+            .unwrap()
+            .with_epoch(1);
+        let owned: Vec<&str> = ["alpha", "beta", "gamma"]
+            .into_iter()
+            .filter(|n| p.owns(entity_key(n)))
+            .collect();
+        assert!(ConcurrentRetriever::repartition_concurrent(
+            &r,
+            Some(p.clone())
+        ));
+        assert_eq!(r.partition().unwrap().epoch(), 1);
+        let mut out = Vec::new();
+        for name in ["alpha", "beta", "gamma"] {
+            out.clear();
+            r.find_concurrent(name, &mut out);
+            assert!(!out.is_empty(), "{name} still serving pre-drop");
+        }
+
+        // the drop pass reclaims exactly the disowned keys
+        let dropped =
+            ConcurrentRetriever::drop_disowned_concurrent(&r).unwrap();
+        assert_eq!(dropped, 3 - owned.len(), "owned: {owned:?}");
+        for name in ["alpha", "beta", "gamma"] {
+            out.clear();
+            r.find_concurrent(name, &mut out);
+            assert_eq!(
+                !out.is_empty(),
+                owned.contains(&name),
+                "{name} post-drop"
+            );
+        }
+        if dropped > 0 {
+            assert!(
+                ConcurrentRetriever::live_index_bytes(&r) < live_before,
+                "drop pass must shrink live index bytes"
+            );
+        }
+        // idempotent: a second pass finds nothing left to drop
+        assert_eq!(
+            ConcurrentRetriever::drop_disowned_concurrent(&r),
+            Some(0)
+        );
     }
 
     #[test]

@@ -2,14 +2,32 @@
 //! pool and health state. A backend owns the single-request round trip
 //! (`line out, JSON line back`) including the stale-pooled-connection
 //! retry policy; the scatter layer composes these into fan-outs and
-//! failover.
+//! failover. Probes are **epoch-gated**: a `\x01stats` reply whose
+//! `partition_epoch` the router's [`EpochGate`] rejects counts as a
+//! probe *failure*, so a backend mid-warm-up or running a stale
+//! partition is never (re-)admitted early.
+//!
+//! # Examples
+//!
+//! ```
+//! use std::sync::Arc;
+//! use cft_rag::rag::config::RouterConfig;
+//! use cft_rag::router::backend::Backend;
+//! use cft_rag::router::health::EpochGate;
+//!
+//! let cfg = RouterConfig::for_backends(["127.0.0.1:7181"]);
+//! let b = Backend::new(0, "127.0.0.1:7181", &cfg, Arc::new(EpochGate::new(0)));
+//! assert_eq!(b.addr(), "127.0.0.1:7181");
+//! assert!(b.health().is_healthy(), "backends start optimistic");
+//! ```
 
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::Arc;
 
 use crate::coordinator::tcp::STATS_REQUEST;
 use crate::rag::config::RouterConfig;
-use crate::router::health::HealthState;
+use crate::router::health::{EpochGate, HealthState};
 use crate::router::pool::ConnPool;
 use crate::util::json::Json;
 use crate::util::log;
@@ -20,11 +38,26 @@ pub struct Backend {
     index: usize,
     pool: ConnPool,
     health: HealthState,
+    /// The membership epochs the router currently accepts — shared
+    /// fleet-wide, consulted by [`probe`](Backend::probe).
+    epoch_gate: Arc<EpochGate>,
+    /// True when the router runs **without** a prober
+    /// (`probe_interval == 0`): query-path successes then re-admit a
+    /// demoted backend directly — with no prober, nothing else ever
+    /// would, and no prober also means epoch staleness could never
+    /// have been detected, so the gate is vacuous in that deployment.
+    passive_readmit: bool,
 }
 
 impl Backend {
-    /// Backend `index` at `addr`, with the router config's timeouts.
-    pub fn new(index: usize, addr: &str, cfg: &RouterConfig) -> Backend {
+    /// Backend `index` at `addr`, with the router config's timeouts,
+    /// probing against the fleet's shared `epoch_gate`.
+    pub fn new(
+        index: usize,
+        addr: &str,
+        cfg: &RouterConfig,
+        epoch_gate: Arc<EpochGate>,
+    ) -> Backend {
         Backend {
             index,
             pool: ConnPool::new(
@@ -34,6 +67,8 @@ impl Backend {
                 cfg.request_timeout,
             ),
             health: HealthState::new(cfg.failure_threshold),
+            epoch_gate,
+            passive_readmit: cfg.probe_interval.is_zero(),
         }
     }
 
@@ -60,18 +95,42 @@ impl Backend {
     /// socket — and a pooled failure discards the whole idle pool (its
     /// siblings are from the same era and equally suspect). The fresh
     /// connection's outcome is authoritative: success resets the health
-    /// failure streak (re-admitting a marked-down backend), failure
-    /// counts toward demotion. The reply being parseable JSON is part
-    /// of "success" — a backend speaking garbage is as unusable as a
-    /// dead one.
+    /// failure streak, failure counts toward demotion. The reply being
+    /// parseable JSON is part of "success" — a backend speaking garbage
+    /// is as unusable as a dead one. When the router runs a prober, a
+    /// success here does **not** re-admit a marked-down backend: query
+    /// replies carry no partition epoch, so re-admission is reserved
+    /// for the epoch-validating [`probe`](Backend::probe) — otherwise
+    /// one answered query on the failover tail would bypass the
+    /// [`EpochGate`] and route traffic to a backend serving a stale
+    /// key slice. With probing disabled (`probe_interval == 0`) a
+    /// success re-admits directly, as before the gate existed —
+    /// nothing else ever would.
     pub fn request(&self, line: &str) -> io::Result<Json> {
+        match self.exchange(line) {
+            Ok(json) => {
+                if self.passive_readmit {
+                    self.on_success();
+                } else {
+                    self.health.record_success();
+                }
+                Ok(json)
+            }
+            Err(e) => {
+                self.on_failure(&e);
+                Err(e)
+            }
+        }
+    }
+
+    /// The raw round trip of [`request`](Backend::request) without any
+    /// health accounting — the probe path needs to *validate* a reply
+    /// (partition epoch) before deciding whether it counts as success.
+    fn exchange(&self, line: &str) -> io::Result<Json> {
         debug_assert!(!line.contains('\n'), "protocol is one line per request");
         if let Some(conn) = self.pool.take_idle() {
             match self.roundtrip(conn, line) {
-                Ok(json) => {
-                    self.on_success();
-                    return Ok(json);
-                }
+                Ok(json) => return Ok(json),
                 Err(e) => {
                     log::debug!(
                         "stale pooled connection to {}: {e}",
@@ -81,30 +140,45 @@ impl Backend {
                 }
             }
         }
-        match self.pool.connect().and_then(|conn| self.roundtrip(conn, line)) {
-            Ok(json) => {
-                self.on_success();
-                Ok(json)
-            }
-            Err(e) => {
-                if self.health.mark_failure() {
-                    log::warn!("backend {} marked unhealthy: {e}", self.addr());
-                    // a down backend's idle sockets are suspect too
-                    self.pool.clear();
-                }
-                Err(e)
-            }
-        }
+        self.pool.connect().and_then(|conn| self.roundtrip(conn, line))
     }
 
-    /// Health probe: a `\x01stats` round trip. On success the reply's
-    /// `requests` gauge is recorded as the backend's observed load.
+    /// Health probe: a `\x01stats` round trip. A reply only counts as
+    /// healthy when it parses as JSON **and** reports a
+    /// `partition_epoch` the router's [`EpochGate`] accepts (absent =
+    /// epoch 0, the pre-elastic wire format) — a backend mid-warm-up or
+    /// serving a stale partition keeps failing probes and is not
+    /// re-admitted early. On success the reply's `requests` gauge is
+    /// recorded as the backend's observed load.
     pub fn probe(&self) -> io::Result<Json> {
         self.health.record_probe();
-        let json = self.request(STATS_REQUEST)?;
+        let json = match self.exchange(STATS_REQUEST) {
+            Ok(json) => json,
+            Err(e) => {
+                self.on_failure(&e);
+                return Err(e);
+            }
+        };
+        let epoch = json
+            .get("partition_epoch")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as u64;
+        if !self.epoch_gate.accepts(epoch) {
+            let e = io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "{} serves partition epoch {epoch}, ring is at {}",
+                    self.addr(),
+                    self.epoch_gate.current()
+                ),
+            );
+            self.on_failure(&e);
+            return Err(e);
+        }
         if let Some(r) = json.get("requests").and_then(Json::as_f64) {
             self.health.record_load(r as u64);
         }
+        self.on_success();
         Ok(json)
     }
 
@@ -112,6 +186,14 @@ impl Backend {
         if self.health.mark_success() {
             self.health.record_readmission();
             log::info!("backend {} re-admitted", self.addr());
+        }
+    }
+
+    fn on_failure(&self, e: &io::Error) {
+        if self.health.mark_failure() {
+            log::warn!("backend {} marked unhealthy: {e}", self.addr());
+            // a down backend's idle sockets are suspect too
+            self.pool.clear();
         }
     }
 
@@ -155,6 +237,10 @@ mod tests {
         }
     }
 
+    fn backend(addr: &str) -> Backend {
+        Backend::new(0, addr, &cfg(), Arc::new(EpochGate::new(0)))
+    }
+
     /// One-shot echo server speaking the line protocol with a fixed
     /// JSON reply per line received.
     fn fake_backend(reply: &'static str, conns: usize) -> String {
@@ -181,7 +267,7 @@ mod tests {
     #[test]
     fn request_roundtrips_and_pools() {
         let addr = fake_backend(r#"{"ok":true,"answer":"x"}"#, 1);
-        let b = Backend::new(0, &addr, &cfg());
+        let b = backend(&addr);
         let json = b.request("hello").unwrap();
         assert_eq!(json.get("ok"), Some(&Json::Bool(true)));
         // second request reuses the pooled connection (the fake server
@@ -194,7 +280,7 @@ mod tests {
     #[test]
     fn garbage_reply_is_a_failure() {
         let addr = fake_backend("not json at all", 2);
-        let b = Backend::new(0, &addr, &cfg());
+        let b = backend(&addr);
         let err = b.request("q").expect_err("unparseable reply");
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
         assert!(!b.health().is_healthy(), "threshold 1: marked down");
@@ -207,7 +293,7 @@ mod tests {
             let l = TcpListener::bind("127.0.0.1:0").unwrap();
             l.local_addr().unwrap().to_string()
         };
-        let b = Backend::new(0, &addr, &cfg());
+        let b = backend(&addr);
         assert!(b.request("q").is_err());
         assert!(!b.health().is_healthy());
         // nothing came back up: stays down
@@ -219,10 +305,76 @@ mod tests {
     #[test]
     fn probe_records_backend_load() {
         let addr = fake_backend(r#"{"requests":7,"failures":0}"#, 1);
-        let b = Backend::new(0, &addr, &cfg());
+        let b = backend(&addr);
         let json = b.probe().unwrap();
         assert_eq!(json.get("requests").and_then(Json::as_f64), Some(7.0));
         assert_eq!(b.health().observed_load(), 7);
         assert_eq!(b.health().probes(), 1);
+    }
+
+    #[test]
+    fn proberless_router_readmits_on_query_success() {
+        // With probe_interval == 0 there is no prober to ever call
+        // probe(), so the pre-gate behavior must survive: a successful
+        // query re-admits a passively demoted backend.
+        let addr = fake_backend(r#"{"ok":true}"#, 2);
+        let cfg = RouterConfig {
+            probe_interval: Duration::ZERO,
+            ..cfg()
+        };
+        let b = Backend::new(0, &addr, &cfg, Arc::new(EpochGate::new(0)));
+        // demote via a failure against a dead port first
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let down = Backend::new(0, &dead, &cfg, Arc::new(EpochGate::new(0)));
+        assert!(down.request("q").is_err());
+        assert!(!down.health().is_healthy());
+        // the live backend: force a demotion, then one success re-admits
+        b.health().mark_failure();
+        assert!(!b.health().is_healthy());
+        assert!(b.request("q").is_ok());
+        assert!(
+            b.health().is_healthy(),
+            "probe-less routers must re-admit on query success"
+        );
+        assert!(b.health().readmissions() >= 1);
+    }
+
+    #[test]
+    fn probe_rejects_stale_partition_epoch() {
+        // The backend answers stats happily — but for membership epoch
+        // 0 while the ring has moved to 2. The probe must count that as
+        // a FAILURE (no early admission of a stale or mid-warm-up
+        // backend), and must not refresh the load gauge either.
+        let addr = fake_backend(
+            r#"{"requests":9,"failures":0,"partition_epoch":0}"#,
+            4,
+        );
+        let gate = Arc::new(EpochGate::new(2));
+        let b = Backend::new(0, &addr, &cfg(), gate.clone());
+        let err = b.probe().expect_err("stale epoch must fail the probe");
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("epoch"), "{err}");
+        assert!(!b.health().is_healthy(), "threshold 1: marked down");
+        assert_eq!(b.health().observed_load(), 0, "stale load not recorded");
+        // plain requests still work, but an answered query must NOT
+        // re-admit a backend demoted for a stale epoch (query replies
+        // carry no epoch to validate)...
+        assert!(b.request("\u{1}stats").is_ok());
+        assert!(
+            !b.health().is_healthy(),
+            "query-path success must not bypass the epoch gate"
+        );
+        // ...and once the gate accepts the backend's epoch (a rebalance
+        // opened epoch 0→2 coexistence, or the backend caught up), the
+        // probe re-admits it and records load.
+        gate.open(0);
+        let json = b.probe().expect("accepted epoch probes clean");
+        assert_eq!(json.get("partition_epoch").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(b.health().observed_load(), 9);
+        assert!(b.health().is_healthy());
+        assert!(b.health().readmissions() >= 1);
     }
 }

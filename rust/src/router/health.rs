@@ -2,6 +2,34 @@
 //! active probing (the TCP protocol's `\x01stats` control line) with
 //! automatic re-admission, all on lock-free atomics so the scatter path
 //! can consult health without synchronizing with the prober.
+//!
+//! Re-admission is **epoch-gated**: a probe reply must parse as JSON
+//! *and* report a `partition_epoch` the router's [`EpochGate`] accepts
+//! — a backend mid-warm-up, or restarted with a stale partition after
+//! the fleet's membership moved on, keeps failing probes until it
+//! catches up, instead of being re-admitted to serve the wrong slice
+//! of the key space.
+//!
+//! # Examples
+//!
+//! ```
+//! use cft_rag::router::health::{EpochGate, HealthState};
+//!
+//! // threshold 2: one failure leaves the backend serving, two demote it
+//! let h = HealthState::new(2);
+//! h.mark_failure();
+//! assert!(h.is_healthy());
+//! h.mark_failure();
+//! assert!(!h.is_healthy());
+//! assert!(h.mark_success(), "success re-admits (returns true on the flip)");
+//!
+//! // the gate accepts the serving epoch, and the next one mid-rebalance
+//! let gate = EpochGate::new(0);
+//! gate.open(1);
+//! assert!(gate.accepts(0) && gate.accepts(1) && !gate.accepts(7));
+//! gate.commit(1);
+//! assert!(!gate.accepts(0), "pre-rebalance backends are now stale");
+//! ```
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -10,6 +38,67 @@ use std::time::Duration;
 
 use crate::router::backend::Backend;
 use crate::util::log;
+
+/// Which fleet membership epochs the router currently accepts from a
+/// backend's `\x01stats` reply: the **serving** epoch, plus — while a
+/// rebalance is in flight — the epoch being rolled out (backends are
+/// repartitioned one at a time, so both generations coexist briefly).
+/// Lock-free; shared between the router's membership state, the prober,
+/// and every [`Backend`].
+#[derive(Debug)]
+pub struct EpochGate {
+    current: AtomicU64,
+    pending: AtomicU64,
+}
+
+impl EpochGate {
+    /// Gate accepting exactly `epoch` (fleet start: 0).
+    pub fn new(epoch: u64) -> Self {
+        EpochGate {
+            current: AtomicU64::new(epoch),
+            pending: AtomicU64::new(epoch),
+        }
+    }
+
+    /// True when a backend reporting `epoch` may serve.
+    pub fn accepts(&self, epoch: u64) -> bool {
+        epoch == self.current.load(Ordering::Acquire)
+            || epoch == self.pending.load(Ordering::Acquire)
+    }
+
+    /// Start accepting `next` alongside the current epoch (a rebalance
+    /// began rolling the fleet forward).
+    pub fn open(&self, next: u64) {
+        self.pending.store(next, Ordering::Release);
+    }
+
+    /// Move the gate to exactly `epoch` (the rebalance committed; the
+    /// old epoch is now stale and its backends fail probes).
+    pub fn commit(&self, epoch: u64) {
+        self.current.store(epoch, Ordering::Release);
+        self.pending.store(epoch, Ordering::Release);
+    }
+
+    /// The serving epoch.
+    pub fn current(&self) -> u64 {
+        self.current.load(Ordering::Acquire)
+    }
+}
+
+/// Source of the prober's target list. Ring membership is dynamic
+/// (backends join and drain at runtime, `router/rebalance.rs`), so the
+/// prober re-reads its targets every round instead of capturing a fixed
+/// `Vec` at startup.
+pub trait ProbeTargets: Send + Sync {
+    /// The backends to probe this round.
+    fn probe_targets(&self) -> Vec<Arc<Backend>>;
+}
+
+impl ProbeTargets for Vec<Arc<Backend>> {
+    fn probe_targets(&self) -> Vec<Arc<Backend>> {
+        self.clone()
+    }
+}
 
 /// Health and load observations for one backend. All methods are
 /// `&self` and atomic; counters are monitoring-grade (relaxed).
@@ -46,10 +135,25 @@ impl HealthState {
     }
 
     /// Record a successful round trip; returns `true` when this
-    /// *re-admitted* a backend that was marked down.
+    /// *re-admitted* a backend that was marked down. Only the
+    /// epoch-validating probe path may call this — see
+    /// [`record_success`](HealthState::record_success).
     pub fn mark_success(&self) -> bool {
         self.consecutive_failures.store(0, Ordering::Relaxed);
         !self.healthy.swap(true, Ordering::AcqRel)
+    }
+
+    /// Record a successful round trip **without re-admitting**: the
+    /// failure streak resets, but a demoted backend stays demoted.
+    /// The query path uses this — query replies carry no partition
+    /// epoch, so an answered query must not bypass the [`EpochGate`]
+    /// and re-admit a backend the prober demoted for serving a stale
+    /// partition. Re-admission goes through [`mark_success`] from the
+    /// epoch-validated probe only.
+    ///
+    /// [`mark_success`]: HealthState::mark_success
+    pub fn record_success(&self) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
     }
 
     /// Record a failed round trip; returns `true` when this crossing of
@@ -107,11 +211,16 @@ pub struct HealthProber {
 }
 
 impl HealthProber {
-    /// Start probing `backends`; a zero `interval` disables probing
-    /// entirely (no thread — deterministic tests, external checkers).
-    pub fn start(backends: Vec<Arc<Backend>>, interval: Duration) -> Self {
+    /// Start probing the backends `targets` yields (re-read every
+    /// round, so joins and drains take effect immediately); a zero
+    /// `interval` disables probing entirely (no thread — deterministic
+    /// tests, external checkers).
+    pub fn start(
+        targets: Arc<dyn ProbeTargets>,
+        interval: Duration,
+    ) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
-        if interval.is_zero() || backends.is_empty() {
+        if interval.is_zero() {
             return HealthProber { stop, thread: None };
         }
         let thread = {
@@ -120,7 +229,7 @@ impl HealthProber {
                 .name("cft-router-prober".into())
                 .spawn(move || {
                     while !stop.load(Ordering::Acquire) {
-                        for b in &backends {
+                        for b in targets.probe_targets() {
                             // outcome lands in the backend's HealthState;
                             // a failed probe is the demotion signal itself
                             let _ = b.probe();
@@ -193,8 +302,27 @@ mod tests {
 
     #[test]
     fn disabled_prober_spawns_nothing_and_shuts_down() {
-        let mut p = HealthProber::start(Vec::new(), Duration::ZERO);
+        let targets: Arc<dyn ProbeTargets> =
+            Arc::new(Vec::<Arc<Backend>>::new());
+        let mut p = HealthProber::start(targets, Duration::ZERO);
         p.shutdown();
         p.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn epoch_gate_transitions() {
+        let g = EpochGate::new(0);
+        assert_eq!(g.current(), 0);
+        assert!(g.accepts(0));
+        assert!(!g.accepts(1), "future epochs rejected before open()");
+        // a rebalance in flight accepts both generations
+        g.open(1);
+        assert!(g.accepts(0) && g.accepts(1));
+        assert_eq!(g.current(), 0, "open() does not advance serving epoch");
+        // commit retires the old epoch
+        g.commit(1);
+        assert!(!g.accepts(0), "stale epoch rejected after commit");
+        assert!(g.accepts(1));
+        assert_eq!(g.current(), 1);
     }
 }

@@ -1,6 +1,30 @@
 //! Router-level metrics, in the same shape as `coordinator/metrics.rs`:
 //! a cheap mutex-guarded sink, cloneable across threads, snapshotted on
 //! demand. Per-backend latency uses the shared [`LatencyHistogram`].
+//! Ring membership is elastic (`router/rebalance.rs`), so the
+//! per-backend slots grow on join and are remapped on drain, and the
+//! snapshot carries the serving ring's membership epoch plus the
+//! rebalance counters (`joins`/`drains`/keys streamed/keys dropped/
+//! dual writes). `docs/OPERATIONS.md` explains what to do when each
+//! counter moves.
+//!
+//! # Examples
+//!
+//! ```
+//! use std::time::Duration;
+//! use cft_rag::router::metrics::RouterMetrics;
+//!
+//! let m = RouterMetrics::new(2);
+//! m.record_query(true);
+//! m.record_backend(0, true, Duration::from_millis(2));
+//! let info = vec![("a:1".to_string(), true), ("b:2".to_string(), true)];
+//! let snap = m.snapshot(&info, 0);
+//! assert_eq!(snap.requests, 1);
+//! assert_eq!(snap.ring_epoch, 0);
+//! assert_eq!(snap.backends[0].requests, 1);
+//! // the \x01stats payload is this snapshot as one JSON object
+//! assert!(snap.to_json().to_string().contains("\"ring_epoch\""));
+//! ```
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -43,6 +67,19 @@ pub struct RouterMetricsSnapshot {
     pub write_fanouts: u64,
     /// Broadcast writes that missed their ack quorum.
     pub quorum_fails: u64,
+    /// Backends rebalanced into the serving ring (`\x01join`).
+    pub joins: u64,
+    /// Backends rebalanced out of the serving ring (`\x01drain`).
+    pub drains: u64,
+    /// Entity keys streamed during warm-up/handoff rebalances.
+    pub rebalanced_keys: u64,
+    /// Disowned keys reclaimed by post-rebalance drop passes.
+    pub dropped_keys: u64,
+    /// Writes additionally applied to the incoming epoch's replica set
+    /// while a rebalance was in flight (mid-rebalance consistency).
+    pub dual_writes: u64,
+    /// The serving ring's membership epoch at snapshot time.
+    pub ring_epoch: u64,
     pub backends: Vec<BackendMetricsSnapshot>,
 }
 
@@ -81,6 +118,12 @@ impl RouterMetricsSnapshot {
             ("degraded", Json::Num(self.degraded as f64)),
             ("write_fanouts", Json::Num(self.write_fanouts as f64)),
             ("quorum_fails", Json::Num(self.quorum_fails as f64)),
+            ("joins", Json::Num(self.joins as f64)),
+            ("drains", Json::Num(self.drains as f64)),
+            ("rebalanced_keys", Json::Num(self.rebalanced_keys as f64)),
+            ("dropped_keys", Json::Num(self.dropped_keys as f64)),
+            ("dual_writes", Json::Num(self.dual_writes as f64)),
+            ("ring_epoch", Json::Num(self.ring_epoch as f64)),
             ("backends", Json::Arr(backends)),
         ])
     }
@@ -103,6 +146,11 @@ struct Inner {
     degraded: u64,
     write_fanouts: u64,
     quorum_fails: u64,
+    joins: u64,
+    drains: u64,
+    rebalanced_keys: u64,
+    dropped_keys: u64,
+    dual_writes: u64,
     backends: Vec<BackendInner>,
 }
 
@@ -125,6 +173,11 @@ impl RouterMetrics {
                 degraded: 0,
                 write_fanouts: 0,
                 quorum_fails: 0,
+                joins: 0,
+                drains: 0,
+                rebalanced_keys: 0,
+                dropped_keys: 0,
+                dual_writes: 0,
                 backends: (0..nbackends)
                     .map(|_| BackendInner::default())
                     .collect(),
@@ -172,10 +225,68 @@ impl RouterMetrics {
         self.inner.lock().unwrap().quorum_fails += 1;
     }
 
-    /// Record one backend round trip.
+    /// Record a completed `\x01join` rebalance: `keys` streamed to the
+    /// warmed joiner.
+    pub fn record_join(&self, keys: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.joins += 1;
+        m.rebalanced_keys += keys;
+    }
+
+    /// Record a completed `\x01drain` rebalance: `keys` handed off to
+    /// their next-ranked owners.
+    pub fn record_drain(&self, keys: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.drains += 1;
+        m.rebalanced_keys += keys;
+    }
+
+    /// Record disowned keys reclaimed by a post-rebalance drop pass.
+    pub fn record_dropped_keys(&self, keys: u64) {
+        self.inner.lock().unwrap().dropped_keys += keys;
+    }
+
+    /// Record a write dual-applied to the incoming epoch's replica set
+    /// while a rebalance was in flight.
+    pub fn record_dual_write(&self) {
+        self.inner.lock().unwrap().dual_writes += 1;
+    }
+
+    /// Grow the per-backend slots to `n` (a backend joined the ring;
+    /// indexes are append-only on join, so existing slots keep their
+    /// history).
+    pub fn ensure_backends(&self, n: usize) {
+        let mut m = self.inner.lock().unwrap();
+        while m.backends.len() < n {
+            m.backends.push(BackendInner::default());
+        }
+    }
+
+    /// Remove the per-backend slot `idx` (a backend drained out of the
+    /// ring; later slots shift down, matching the new address list).
+    ///
+    /// Known smear: queries in flight across the swap still hold the
+    /// previous membership snapshot and report with *old* indices, so
+    /// for that instant their samples land one slot off (or, past the
+    /// end, are dropped). The counters are monitoring-grade; a
+    /// handful of cross-attributed samples per drain is accepted
+    /// rather than tagging every sample with a membership generation.
+    pub fn remove_backend(&self, idx: usize) {
+        let mut m = self.inner.lock().unwrap();
+        if idx < m.backends.len() {
+            m.backends.remove(idx);
+        }
+    }
+
+    /// Record one backend round trip. `idx` beyond the current slot
+    /// count is ignored — a query thread holding the pre-drain
+    /// membership snapshot may report against a removed slot; dropping
+    /// (or, one slot lower, smearing — see
+    /// [`remove_backend`](RouterMetrics::remove_backend)) that
+    /// monitoring-grade sample beats panicking the query path.
     pub fn record_backend(&self, idx: usize, ok: bool, latency: Duration) {
         let mut m = self.inner.lock().unwrap();
-        let b = &mut m.backends[idx];
+        let Some(b) = m.backends.get_mut(idx) else { return };
         b.requests += 1;
         if !ok {
             b.failures += 1;
@@ -185,10 +296,17 @@ impl RouterMetrics {
 
     /// Snapshot against backend identities: `info[i]` is backend `i`'s
     /// `(addr, healthy-now)` — health lives with the backends, not in
-    /// this sink, so the caller (the router) joins the two.
-    pub fn snapshot(&self, info: &[(String, bool)]) -> RouterMetricsSnapshot {
+    /// this sink, so the caller (the router) joins the two —
+    /// and `ring_epoch` is the serving ring's membership epoch. The
+    /// zip is tolerant of a transient length mismatch (membership can
+    /// change between reading the ring and locking the sink): only the
+    /// common prefix is reported.
+    pub fn snapshot(
+        &self,
+        info: &[(String, bool)],
+        ring_epoch: u64,
+    ) -> RouterMetricsSnapshot {
         let m = self.inner.lock().unwrap();
-        assert_eq!(m.backends.len(), info.len(), "backend count mismatch");
         RouterMetricsSnapshot {
             requests: m.requests,
             failures: m.failures,
@@ -198,6 +316,12 @@ impl RouterMetrics {
             degraded: m.degraded,
             write_fanouts: m.write_fanouts,
             quorum_fails: m.quorum_fails,
+            joins: m.joins,
+            drains: m.drains,
+            rebalanced_keys: m.rebalanced_keys,
+            dropped_keys: m.dropped_keys,
+            dual_writes: m.dual_writes,
+            ring_epoch,
             backends: m
                 .backends
                 .iter()
@@ -231,10 +355,14 @@ mod tests {
         m.record_degraded();
         m.record_write_fanout();
         m.record_quorum_fail();
+        m.record_join(12);
+        m.record_drain(5);
+        m.record_dropped_keys(9);
+        m.record_dual_write();
         m.record_backend(0, true, Duration::from_millis(2));
         m.record_backend(1, false, Duration::from_millis(4));
         let info = vec![("a:1".to_string(), true), ("b:2".to_string(), false)];
-        let s = m.snapshot(&info);
+        let s = m.snapshot(&info, 2);
         assert_eq!(s.requests, 2);
         assert_eq!(s.failures, 1);
         assert_eq!(s.fanouts, 1);
@@ -243,6 +371,12 @@ mod tests {
         assert_eq!(s.degraded, 1);
         assert_eq!(s.write_fanouts, 1);
         assert_eq!(s.quorum_fails, 1);
+        assert_eq!(s.joins, 1);
+        assert_eq!(s.drains, 1);
+        assert_eq!(s.rebalanced_keys, 17, "join keys + drain keys");
+        assert_eq!(s.dropped_keys, 9);
+        assert_eq!(s.dual_writes, 1);
+        assert_eq!(s.ring_epoch, 2);
         assert_eq!(s.backends[0].requests, 1);
         assert_eq!(s.backends[0].failures, 0);
         assert!(s.backends[0].healthy);
@@ -256,10 +390,20 @@ mod tests {
         let m = RouterMetrics::new(1);
         m.record_query(true);
         m.record_backend(0, true, Duration::from_micros(500));
-        let s = m.snapshot(&[("x:1".to_string(), true)]);
+        let s = m.snapshot(&[("x:1".to_string(), true)], 0);
         let back = Json::parse(&s.to_json().to_string()).unwrap();
         assert_eq!(back.get("requests").and_then(Json::as_f64), Some(1.0));
-        for field in ["replica_hits", "write_fanouts", "quorum_fails"] {
+        for field in [
+            "replica_hits",
+            "write_fanouts",
+            "quorum_fails",
+            "joins",
+            "drains",
+            "rebalanced_keys",
+            "dropped_keys",
+            "dual_writes",
+            "ring_epoch",
+        ] {
             assert_eq!(
                 back.get(field).and_then(Json::as_f64),
                 Some(0.0),
@@ -277,7 +421,46 @@ mod tests {
         for _ in 0..50 {
             m.record_query(true);
         }
-        let s = m.snapshot(&[]);
+        let s = m.snapshot(&[], 0);
         assert!((s.throughput(Duration::from_secs(5)) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn membership_changes_grow_and_remap_backend_slots() {
+        let m = RouterMetrics::new(2);
+        m.record_backend(0, true, Duration::from_millis(1));
+        m.record_backend(1, true, Duration::from_millis(1));
+        m.record_backend(1, true, Duration::from_millis(1));
+        // join: slot 2 appears with empty history
+        m.ensure_backends(3);
+        m.record_backend(2, true, Duration::from_millis(1));
+        let info: Vec<(String, bool)> = ["a:1", "b:2", "c:3"]
+            .iter()
+            .map(|a| (a.to_string(), true))
+            .collect();
+        let s = m.snapshot(&info, 1);
+        assert_eq!(
+            [s.backends[0].requests, s.backends[1].requests, s.backends[2].requests],
+            [1, 2, 1]
+        );
+        // drain of slot 0: later slots shift down with their history
+        m.remove_backend(0);
+        let info: Vec<(String, bool)> = ["b:2", "c:3"]
+            .iter()
+            .map(|a| (a.to_string(), true))
+            .collect();
+        let s = m.snapshot(&info, 2);
+        assert_eq!(s.backends.len(), 2);
+        assert_eq!(s.backends[0].requests, 2, "b:2 kept its history");
+        assert_eq!(s.backends[1].requests, 1);
+        // a stale index from the previous membership is dropped, not a
+        // panic — and a transiently longer info list only reports the
+        // common prefix
+        m.record_backend(9, true, Duration::from_millis(1));
+        let longer: Vec<(String, bool)> = ["b:2", "c:3", "ghost:9"]
+            .iter()
+            .map(|a| (a.to_string(), true))
+            .collect();
+        assert_eq!(m.snapshot(&longer, 2).backends.len(), 2);
     }
 }

@@ -58,20 +58,30 @@
 //! kill-one-backend test runs against partitioned R=2 backends and
 //! stays zero-failure *and* zero-degraded. Wire format:
 //! `docs/PROTOCOL.md`.
+//!
+//! **Elastic membership** (ISSUE 5): ring membership is no longer
+//! frozen at fleet start — `\x01join <addr>`/`\x01drain <addr>` (or
+//! `cft-rag route --admit/--drain`) rebalance backends in and out at
+//! runtime with warm-up handoff, partition-epoch rolling, gated
+//! admission, and a disowned-key drop pass. The protocol and its
+//! mid-rebalance correctness argument live in [`rebalance`]; the
+//! operator procedures in `docs/OPERATIONS.md`.
 
 pub mod backend;
 pub mod health;
 pub mod metrics;
 pub mod pool;
+pub mod rebalance;
 pub mod ring;
 pub mod scatter;
 
 pub use backend::Backend;
-pub use health::{HealthProber, HealthState};
+pub use health::{EpochGate, HealthProber, HealthState};
 pub use metrics::{
     BackendMetricsSnapshot, RouterMetrics, RouterMetricsSnapshot,
 };
 pub use pool::ConnPool;
+pub use rebalance::{Membership, RebalanceReport, RingState};
 pub use ring::ShardRing;
 pub use scatter::Router;
 
@@ -88,9 +98,15 @@ use crate::util::log;
 /// a single coordinator (`coordinator/tcp.rs`, spec in
 /// `docs/PROTOCOL.md`), so clients cannot tell one node from a fleet.
 /// `\x01stats` returns the router-level snapshot (per-backend
-/// health/latency included); `\x01insert`/`\x01delete` become quorum
-/// broadcasts to the key's replica set. Serves until the process dies —
-/// the `cft-rag route` CLI path.
+/// health/latency and the serving `ring_epoch` included);
+/// `\x01insert`/`\x01delete` become quorum broadcasts to the key's
+/// replica set; `\x01join <addr>`/`\x01drain <addr>` run an elastic
+/// membership change ([`Router::join`]/[`Router::drain`] — warm-up
+/// rebalancing, `router/rebalance.rs`; runbook in
+/// `docs/OPERATIONS.md`). Backend-side control lines
+/// (`\x01dump`/`\x01repartition`/`\x01purge`) are refused here — the
+/// rebalancer drives those against backends directly. Serves until the
+/// process dies — the `cft-rag route` CLI path.
 pub fn serve(router: Arc<Router>, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     log::info!("cft-rag router listening on {addr}");
@@ -131,6 +147,24 @@ fn handle_conn(router: Arc<Router>, stream: TcpStream) -> std::io::Result<()> {
                 router.update(entity, tree, node)
             }
             Some(Ok(ControlLine::Delete { entity })) => router.remove(entity),
+            Some(Ok(ControlLine::Join { addr })) => router.join(addr),
+            Some(Ok(ControlLine::Drain { addr })) => router.drain(addr),
+            Some(Ok(
+                ControlLine::Dump { .. }
+                | ControlLine::Repartition { .. }
+                | ControlLine::Purge,
+            )) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    Json::Str(
+                        "dump/repartition/purge are backend control \
+                         lines; the rebalancer drives them — send \
+                         \\x01join/\\x01drain here instead"
+                            .into(),
+                    ),
+                ),
+            ]),
             Some(Err(reason)) => Json::obj(vec![
                 ("ok", Json::Bool(false)),
                 ("error", Json::Str(reason)),

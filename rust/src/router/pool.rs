@@ -10,6 +10,30 @@
 //! restart leaves stale sockets behind — so the consumer
 //! (`router/backend.rs`) retries idle-connection failures against a
 //! fresh connection before counting the backend as unhealthy.
+//!
+//! # Examples
+//!
+//! ```
+//! use std::net::TcpListener;
+//! use std::time::Duration;
+//! use cft_rag::router::pool::ConnPool;
+//!
+//! // a listener stands in for a backend
+//! let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+//! let addr = listener.local_addr().unwrap().to_string();
+//!
+//! let pool = ConnPool::new(
+//!     addr,
+//!     2, // keep at most two idle sockets
+//!     Duration::from_millis(500),
+//!     Duration::from_millis(500),
+//! );
+//! assert!(pool.take_idle().is_none(), "nothing pooled yet");
+//! let conn = pool.connect().expect("listener is up");
+//! pool.put_back(conn); // after a clean round trip
+//! assert_eq!(pool.idle_count(), 1);
+//! assert!(pool.take_idle().is_some(), "steady state skips the handshake");
+//! ```
 
 use std::io;
 use std::net::{TcpStream, ToSocketAddrs};

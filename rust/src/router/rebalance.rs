@@ -1,0 +1,980 @@
+//! Elastic ring membership: warm-up rebalancing on backend join/drain
+//! (the ROADMAP's "Rebalancing on join" item; ops procedures in
+//! `docs/OPERATIONS.md`, wire format in `docs/PROTOCOL.md`).
+//!
+//! Ring membership used to be frozen at fleet start: adding a backend
+//! address shifts *every* key's rendezvous replica set, so a joiner
+//! would own keys it has never indexed and incumbents would hoard keys
+//! they no longer own. This module makes membership dynamic while
+//! keeping the serving invariant — **every key's serving set is fully
+//! indexed at every instant** — through a four-step protocol:
+//!
+//! 1. **Plan + dual-write window.** The next epoch's ring is computed
+//!    over the new address list and published as *pending*: queries
+//!    keep routing on the current ring, but dynamic writes
+//!    (`\x01insert`/`\x01delete`) are additionally applied to the
+//!    incoming epoch's replica set, so no write can land "between"
+//!    epochs and be lost.
+//! 2. **Warm-up handoff.** For every key the change moves, a current
+//!    replica dumps its indexed address list (`\x01dump`) and the
+//!    router replays it to the new owner as `\x01insert` lines —
+//!    batched per key (one dump returns the whole list) and
+//!    retry-idempotent (a replayed insert acks `applied:false` instead
+//!    of duplicating). On `join`, the mover is always the joiner; on
+//!    `drain`, the leaving backend's keys go to their next-ranked
+//!    owners (the drainee itself is the preferred dump source — it
+//!    still holds every key it serves).
+//! 3. **Epoch roll + admission.** Every member is `\x01repartition`ed
+//!    to the new epoch (the [`EpochGate`] accepts both epochs during
+//!    the roll), then the serving ring is swapped atomically — only
+//!    now does a joiner receive reads, and only now does a drainee
+//!    stop. A backend whose warm-up never completed keeps reporting a
+//!    stale epoch and is refused by the health prober.
+//! 4. **Drop pass.** Incumbents reclaim the keys the new epoch
+//!    disowns (`\x01purge` → bulk delete), shrinking per-backend live
+//!    index memory back toward the `~R/N` bound. This runs *after*
+//!    admission so a reader never races a key being dropped from the
+//!    replica still serving it.
+//!
+//! Mid-rebalance correctness is the point of the ordering: reads are
+//! always served from a ring whose members hold (at least) their keys
+//! — incumbents hold supersets until step 4, the joiner serves nothing
+//! until step 3 — and writes are double-applied from step 1, so the
+//! two coexisting partition epochs never disagree about a key.
+
+use std::io;
+use std::sync::{Arc, RwLock};
+
+use crate::coordinator::tcp::{
+    DELETE_REQUEST, DUMP_REQUEST, INSERT_REQUEST, PURGE_REQUEST,
+    REPARTITION_REQUEST, STATS_REQUEST,
+};
+use crate::filter::fingerprint::entity_key;
+use crate::rag::config::RouterConfig;
+use crate::router::backend::Backend;
+use crate::router::health::{EpochGate, ProbeTargets};
+use crate::router::metrics::RouterMetrics;
+use crate::router::ring::ShardRing;
+use crate::util::json::Json;
+use crate::util::log;
+
+/// One immutable generation of ring membership. The router's query
+/// path clones the `Arc` and works against a consistent snapshot; a
+/// rebalance builds the next generation aside and swaps it in.
+#[derive(Clone)]
+pub struct RingState {
+    /// Rendezvous ring over the member addresses.
+    pub ring: ShardRing,
+    /// `backends[i]` serves `ring.name(i)`.
+    pub backends: Vec<Arc<Backend>>,
+    /// Fleet membership epoch of this generation.
+    pub epoch: u64,
+    /// The next generation while a rebalance is in flight — the
+    /// dual-write window: writes also apply to this ring's replica
+    /// sets. `None` in steady state.
+    pub pending: Option<PendingState>,
+}
+
+impl RingState {
+    /// The member addresses in ring order.
+    pub fn addresses(&self) -> Vec<String> {
+        (0..self.ring.len())
+            .map(|i| self.ring.name(i).to_string())
+            .collect()
+    }
+}
+
+/// The incoming membership generation during a rebalance.
+#[derive(Clone)]
+pub struct PendingState {
+    /// The next epoch's ring.
+    pub ring: ShardRing,
+    /// `backends[i]` serves `ring.name(i)` in the next epoch.
+    pub backends: Vec<Arc<Backend>>,
+    /// The next epoch number.
+    pub epoch: u64,
+}
+
+/// Shared, swappable ring membership: the query path reads it
+/// lock-free-ish (one momentary read lock to clone an `Arc`), the
+/// rebalancer swaps generations, and the health prober re-reads its
+/// target list from it every round.
+pub struct Membership {
+    state: RwLock<Arc<RingState>>,
+    gate: Arc<EpochGate>,
+}
+
+impl Membership {
+    /// Initial membership at epoch 0 (fleet start).
+    pub fn new(
+        ring: ShardRing,
+        backends: Vec<Arc<Backend>>,
+        gate: Arc<EpochGate>,
+    ) -> Membership {
+        Membership {
+            state: RwLock::new(Arc::new(RingState {
+                ring,
+                backends,
+                epoch: 0,
+                pending: None,
+            })),
+            gate,
+        }
+    }
+
+    /// The current generation (a consistent snapshot).
+    pub fn load(&self) -> Arc<RingState> {
+        self.state.read().unwrap().clone()
+    }
+
+    /// The epoch gate shared with every backend's prober.
+    pub fn gate(&self) -> Arc<EpochGate> {
+        self.gate.clone()
+    }
+
+    /// The serving epoch.
+    pub fn epoch(&self) -> u64 {
+        self.load().epoch
+    }
+
+    /// Open the dual-write window: publish the incoming generation as
+    /// pending (queries keep routing on the current ring) and let the
+    /// epoch gate accept both epochs during the roll.
+    fn set_pending(&self, pending: PendingState) {
+        self.gate.open(pending.epoch);
+        let mut state = self.state.write().unwrap();
+        let mut next = (**state).clone();
+        next.pending = Some(pending);
+        *state = Arc::new(next);
+    }
+
+    /// Abort a rebalance: drop the pending generation. The gate keeps
+    /// accepting the pending epoch — members already rolled forward
+    /// must not start failing probes; a retried rebalance reuses the
+    /// same next epoch number.
+    fn clear_pending(&self) {
+        let mut state = self.state.write().unwrap();
+        let mut next = (**state).clone();
+        next.pending = None;
+        *state = Arc::new(next);
+    }
+
+    /// Commit a rebalance: swap the serving generation and retire the
+    /// old epoch (stale members now fail probes).
+    fn commit(&self, new_state: RingState) {
+        let epoch = new_state.epoch;
+        *self.state.write().unwrap() = Arc::new(new_state);
+        self.gate.commit(epoch);
+    }
+}
+
+impl ProbeTargets for Membership {
+    /// Serving members plus — mid-rebalance — the incoming generation's
+    /// extras (the joiner warms up under observation).
+    fn probe_targets(&self) -> Vec<Arc<Backend>> {
+        let state = self.load();
+        let mut targets = state.backends.clone();
+        if let Some(p) = &state.pending {
+            for b in &p.backends {
+                if !targets.iter().any(|t| Arc::ptr_eq(t, b)) {
+                    targets.push(b.clone());
+                }
+            }
+        }
+        targets
+    }
+}
+
+/// The backends that serve `key` on `ring`: its R-way replica set, or
+/// the whole ring in full-index mode (`replication == 0`).
+pub fn serving_set(
+    ring: &ShardRing,
+    replication: usize,
+    key: u64,
+) -> Vec<usize> {
+    if replication == 0 {
+        (0..ring.len()).collect()
+    } else {
+        ring.replicas(key, replication)
+    }
+}
+
+/// [`serving_set`] as addresses — membership changes shift ring
+/// *indices*, so cross-epoch comparisons (did this key's serving set
+/// actually change?) must compare addresses. Property-tested in
+/// `ring.rs` (a join moves only keys whose serving set changed).
+pub fn serving_addrs(
+    ring: &ShardRing,
+    replication: usize,
+    key: u64,
+) -> Vec<String> {
+    serving_set(ring, replication, key)
+        .into_iter()
+        .map(|i| ring.name(i).to_string())
+        .collect()
+}
+
+/// Outcome summary of a completed join/drain — the front door's reply
+/// to `\x01join`/`\x01drain`, and what `cft-rag route --admit/--drain`
+/// prints.
+#[derive(Clone, Debug)]
+pub struct RebalanceReport {
+    /// `"join"` or `"drain"`.
+    pub action: &'static str,
+    /// The backend that joined or drained.
+    pub addr: String,
+    /// The new serving epoch.
+    pub epoch: u64,
+    /// Entity keys streamed during the warm-up/handoff.
+    pub keys_streamed: usize,
+    /// `\x01insert` replays sent while streaming those keys.
+    pub inserts_sent: usize,
+    /// Disowned keys reclaimed by the post-admission drop pass.
+    pub keys_dropped: usize,
+    /// Ring size after the change.
+    pub backends: usize,
+}
+
+impl RebalanceReport {
+    /// The front-door JSON reply.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("action", Json::Str(self.action.to_string())),
+            ("addr", Json::Str(self.addr.clone())),
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("keys_streamed", Json::Num(self.keys_streamed as f64)),
+            ("inserts_sent", Json::Num(self.inserts_sent as f64)),
+            ("keys_dropped", Json::Num(self.keys_dropped as f64)),
+            ("backends", Json::Num(self.backends as f64)),
+        ])
+    }
+}
+
+/// Everything a rebalance needs from the router (kept explicit so the
+/// execution lives here while the router's fields stay private to
+/// `scatter.rs`).
+pub(crate) struct RebalanceCtx<'a> {
+    pub membership: &'a Arc<Membership>,
+    pub metrics: &'a RouterMetrics,
+    pub cfg: &'a RouterConfig,
+    /// The entity vocabulary the fleet indexes — the key universe the
+    /// rebalance plans over (the router localizes queries with exactly
+    /// these names, so nothing else is ever routed).
+    pub vocab: &'a [String],
+    pub replication: usize,
+}
+
+/// Join `addr` into the serving ring: warm it up over the handoff
+/// transport, roll the fleet to the next epoch, admit, then run the
+/// incumbents' drop pass. See the module docs for the ordering
+/// argument.
+pub(crate) fn execute_join(
+    ctx: &RebalanceCtx,
+    addr: &str,
+) -> Result<RebalanceReport, String> {
+    let addr = addr.trim();
+    if addr.is_empty() || addr.contains([',', ' ', '\x01']) {
+        return Err(format!("invalid backend address {addr:?}"));
+    }
+    let old = ctx.membership.load();
+    if old.pending.is_some() {
+        return Err("another rebalance is in flight".into());
+    }
+    if (0..old.ring.len()).any(|i| old.ring.name(i) == addr) {
+        return Err(format!("{addr} is already in the serving ring"));
+    }
+
+    let mut new_addrs = old.addresses();
+    new_addrs.push(addr.to_string());
+    let new_ring = ShardRing::new(new_addrs.iter().cloned());
+    let new_epoch = old.epoch + 1;
+    let joiner = Arc::new(Backend::new(
+        old.backends.len(),
+        addr,
+        ctx.cfg,
+        ctx.membership.gate(),
+    ));
+    // fail before disturbing anything if the joiner is not reachable
+    if let Err(e) = joiner.request(STATS_REQUEST) {
+        return Err(format!("joining backend {addr} is unreachable: {e}"));
+    }
+
+    let mut new_backends = old.backends.clone();
+    new_backends.push(joiner.clone());
+
+    // step 1: dual-write window opens before any key moves
+    ctx.membership.set_pending(PendingState {
+        ring: new_ring.clone(),
+        backends: new_backends.clone(),
+        epoch: new_epoch,
+    });
+
+    // step 2: stream every key the joiner will serve, sourced from a
+    // current replica (healthy first), on a bounded worker pool
+    let joiner_idx = new_ring.len() - 1;
+    let moved: Vec<&String> = ctx
+        .vocab
+        .iter()
+        .filter(|name| {
+            serving_set(&new_ring, ctx.replication, entity_key(name))
+                .contains(&joiner_idx)
+        })
+        .collect();
+    let (keys_streamed, inserts_sent) = match stream_keys(&moved, &|name| {
+        let old_set =
+            serving_set(&old.ring, ctx.replication, entity_key(name));
+        handoff(&old.backends, &old_set, None, &joiner, name).map_err(|e| {
+            format!("warm-up handoff of {name:?} to {addr} failed: {e}")
+        })
+    }) {
+        Ok(counts) => counts,
+        Err(e) => {
+            ctx.membership.clear_pending();
+            return Err(e);
+        }
+    };
+
+    // step 3: roll every member (incumbents keep serving their
+    // supersets; the joiner — last in the list — leaves warming mode),
+    // then admit. A partial roll is rolled back best-effort: a member
+    // left on the new partition while the ring stays on the old epoch
+    // would NACK writes for the keys it no longer owns.
+    let mut rolled: Vec<usize> = Vec::new();
+    for (i, b) in new_backends.iter().enumerate() {
+        if let Err(e) =
+            repartition(b, new_epoch, ctx.replication, i, &new_addrs)
+        {
+            let old_addrs = old.addresses();
+            for &j in &rolled {
+                // only incumbents can be in `rolled` here (the joiner
+                // is last), so index j is valid in the old list too
+                if let Err(re) = repartition(
+                    &new_backends[j],
+                    old.epoch,
+                    ctx.replication,
+                    j,
+                    &old_addrs,
+                ) {
+                    log::warn!(
+                        "rollback of {} to epoch {} failed (it will \
+                         NACK writes for its disowned keys until the \
+                         join is retried): {re}",
+                        new_backends[j].addr(),
+                        old.epoch
+                    );
+                }
+            }
+            ctx.membership.clear_pending();
+            return Err(format!(
+                "epoch roll to {new_epoch} failed on {}: {e}",
+                b.addr()
+            ));
+        }
+        rolled.push(i);
+    }
+    // refresh the joiner's health under the new epoch so admission does
+    // not wait out a probe interval
+    let _ = joiner.probe();
+    ctx.metrics.ensure_backends(new_backends.len());
+    // `pre_commit` is the snapshot queries have been loading since the
+    // dual-write window opened (`old` covers queries from before it);
+    // both route by the old ring, so both must drain before the purge
+    let pre_commit = ctx.membership.load();
+    ctx.membership.commit(RingState {
+        ring: new_ring,
+        backends: new_backends.clone(),
+        epoch: new_epoch,
+        pending: None,
+    });
+    ctx.metrics.record_join(keys_streamed as u64);
+    log::info!(
+        "backend {addr} admitted at epoch {new_epoch} \
+         ({keys_streamed} keys / {inserts_sent} inserts warmed)"
+    );
+
+    // step 4: incumbents reclaim what the new epoch disowns — but only
+    // once no in-flight query can still route by the old ring, where
+    // an evicted incumbent is a key's serving replica (purging under
+    // such a reader would answer it ok-with-zero-facts)
+    drain_old_readers(&[&old, &pre_commit], reader_drain_wait(ctx.cfg));
+    let mut keys_dropped = 0usize;
+    for b in &new_backends[..new_backends.len() - 1] {
+        match purge(b) {
+            Ok(n) => keys_dropped += n,
+            Err(e) => log::warn!(
+                "post-join purge on {} failed (disowned keys linger \
+                 until the next purge): {e}",
+                b.addr()
+            ),
+        }
+    }
+    ctx.metrics.record_dropped_keys(keys_dropped as u64);
+
+    Ok(RebalanceReport {
+        action: "join",
+        addr: addr.to_string(),
+        epoch: new_epoch,
+        keys_streamed,
+        inserts_sent,
+        keys_dropped,
+        backends: new_backends.len(),
+    })
+}
+
+/// Drain `addr` out of the serving ring: hand its keys to their
+/// next-ranked owners (sourced from the drainee itself while it still
+/// serves), roll the survivors to the next epoch, then remove it. The
+/// drained process can be stopped by the operator once this returns.
+pub(crate) fn execute_drain(
+    ctx: &RebalanceCtx,
+    addr: &str,
+) -> Result<RebalanceReport, String> {
+    let addr = addr.trim();
+    let old = ctx.membership.load();
+    if old.pending.is_some() {
+        return Err("another rebalance is in flight".into());
+    }
+    let Some(drain_idx) =
+        (0..old.ring.len()).find(|&i| old.ring.name(i) == addr)
+    else {
+        return Err(format!("{addr} is not in the serving ring"));
+    };
+    let floor = ctx.replication.max(1);
+    if old.ring.len() <= floor {
+        return Err(format!(
+            "cannot drain below {floor} backend(s) (replication factor)"
+        ));
+    }
+
+    let new_addrs: Vec<String> = old
+        .addresses()
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| *i != drain_idx)
+        .map(|(_, a)| a)
+        .collect();
+    let new_ring = ShardRing::new(new_addrs.iter().cloned());
+    let new_epoch = old.epoch + 1;
+    let survivors: Vec<Arc<Backend>> = old
+        .backends
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != drain_idx)
+        .map(|(_, b)| b.clone())
+        .collect();
+
+    // step 1: dual-write window (writes also land on the new owners)
+    ctx.membership.set_pending(PendingState {
+        ring: new_ring.clone(),
+        backends: survivors.clone(),
+        epoch: new_epoch,
+    });
+
+    // step 3a — before the handoff, unlike join: survivors must accept
+    // `\x01insert` for their *gained* keys, so they roll to the new
+    // epoch first (their indexes are untouched; reads keep flowing on
+    // the old ring, which they still fully cover). A partial roll is
+    // rolled back best-effort, as on join.
+    let mut rolled: Vec<usize> = Vec::new();
+    for (j, b) in survivors.iter().enumerate() {
+        if let Err(e) =
+            repartition(b, new_epoch, ctx.replication, j, &new_addrs)
+        {
+            let old_addrs = old.addresses();
+            for &k in &rolled {
+                // survivor position k maps back to its pre-drain index
+                let old_index = if k < drain_idx { k } else { k + 1 };
+                if let Err(re) = repartition(
+                    &survivors[k],
+                    old.epoch,
+                    ctx.replication,
+                    old_index,
+                    &old_addrs,
+                ) {
+                    log::warn!(
+                        "rollback of {} to epoch {} failed (it will \
+                         NACK writes for its disowned keys until the \
+                         drain is retried): {re}",
+                        survivors[k].addr(),
+                        old.epoch
+                    );
+                }
+            }
+            ctx.membership.clear_pending();
+            return Err(format!(
+                "epoch roll to {new_epoch} failed on {}: {e}",
+                b.addr()
+            ));
+        }
+        rolled.push(j);
+    }
+
+    // step 2: hand every key the drainee serves to its newly ranked
+    // owners, preferring the drainee itself as the dump source (it is
+    // the one backend guaranteed to hold them — for sole-replica keys
+    // it is the only one); per-key moves run on the worker pool
+    let moved: Vec<&String> = ctx
+        .vocab
+        .iter()
+        .filter(|name| {
+            // minimal disruption: a key the drainee never served keeps
+            // its serving set verbatim
+            serving_set(&old.ring, ctx.replication, entity_key(name))
+                .contains(&drain_idx)
+        })
+        .collect();
+    let (keys_streamed, inserts_sent) = match stream_keys(&moved, &|name| {
+        let key = entity_key(name);
+        let old_set = serving_set(&old.ring, ctx.replication, key);
+        let old_addrs: Vec<&str> =
+            old_set.iter().map(|&i| old.ring.name(i)).collect();
+        let mut sent = 0usize;
+        for &g in &serving_set(&new_ring, ctx.replication, key) {
+            if old_addrs.contains(&new_ring.name(g)) {
+                continue; // already holds the key
+            }
+            sent += handoff(
+                &old.backends,
+                &old_set,
+                Some(drain_idx),
+                &survivors[g],
+                name,
+            )
+            .map_err(|e| {
+                format!(
+                    "drain handoff of {name:?} to {} failed: {e}",
+                    survivors[g].addr()
+                )
+            })?;
+        }
+        Ok(sent)
+    }) {
+        Ok(counts) => counts,
+        Err(e) => {
+            ctx.membership.clear_pending();
+            return Err(e);
+        }
+    };
+
+    // step 3b: the drainee leaves the serving ring. Before reporting
+    // success — the operator's cue to stop the process — wait for
+    // queries still holding a pre-drain snapshot, which can route the
+    // drainee's keys to it until they finish.
+    ctx.metrics.remove_backend(drain_idx);
+    let pre_commit = ctx.membership.load();
+    ctx.membership.commit(RingState {
+        ring: new_ring,
+        backends: survivors.clone(),
+        epoch: new_epoch,
+        pending: None,
+    });
+    drain_old_readers(&[&old, &pre_commit], reader_drain_wait(ctx.cfg));
+    ctx.metrics.record_drain(keys_streamed as u64);
+    log::info!(
+        "backend {addr} drained at epoch {new_epoch} \
+         ({keys_streamed} keys / {inserts_sent} inserts handed off); \
+         the process can be stopped now"
+    );
+
+    Ok(RebalanceReport {
+        action: "drain",
+        addr: addr.to_string(),
+        epoch: new_epoch,
+        keys_streamed,
+        inserts_sent,
+        keys_dropped: 0,
+        backends: survivors.len(),
+    })
+}
+
+/// Run a per-key handoff over `keys` on a bounded worker pool — each
+/// key's move is independent (one dump source, one or more insert
+/// targets), so the dual-write window shrinks by the fan-out factor
+/// instead of scaling with the vocabulary. Stops scheduling new keys
+/// at the first failure and reports it. Returns
+/// `(keys_streamed, inserts_sent)` — keys whose move sent nothing
+/// (`Ok(0)`: not held anywhere, e.g. dynamically deleted) don't count.
+fn stream_keys(
+    keys: &[&String],
+    per_key: &(dyn Fn(&str) -> Result<usize, String> + Sync),
+) -> Result<(usize, usize), String> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    const HANDOFF_WORKERS: usize = 8;
+    let next = AtomicUsize::new(0);
+    let streamed = AtomicUsize::new(0);
+    let inserts = AtomicUsize::new(0);
+    let failure: std::sync::Mutex<Option<String>> =
+        std::sync::Mutex::new(None);
+    std::thread::scope(|s| {
+        for _ in 0..HANDOFF_WORKERS.min(keys.len().max(1)) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= keys.len() || failure.lock().unwrap().is_some() {
+                    break;
+                }
+                match per_key(keys[i]) {
+                    Ok(0) => {}
+                    Ok(n) => {
+                        streamed.fetch_add(1, Ordering::Relaxed);
+                        inserts.fetch_add(n, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        *failure.lock().unwrap() = Some(e);
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    match failure.into_inner().unwrap() {
+        Some(e) => Err(e),
+        None => Ok((
+            streamed.load(Ordering::Relaxed),
+            inserts.load(Ordering::Relaxed),
+        )),
+    }
+}
+
+/// How long to wait for pre-change snapshot holders: the longest a
+/// single query can run (a full failover walk of per-attempt request
+/// timeouts), floored at one second.
+fn reader_drain_wait(cfg: &RouterConfig) -> std::time::Duration {
+    cfg.request_timeout
+        .saturating_mul(cfg.max_attempts.max(1) as u32)
+        .max(std::time::Duration::from_secs(1))
+}
+
+/// Wait (bounded) for every query still holding a pre-change
+/// membership snapshot to finish. Queries route by the `Arc<RingState>`
+/// they loaded, so an in-flight query can still send a key to a member
+/// the *new* epoch evicted — the join's drop pass (and the operator
+/// stopping a drainee) are only safe once no such reader remains. The
+/// snapshot `Arc`s themselves are the tracker: a strong count above
+/// ours means a reader still holds one.
+fn drain_old_readers(states: &[&Arc<RingState>], max_wait: std::time::Duration) {
+    let deadline = std::time::Instant::now() + max_wait;
+    while states.iter().any(|s| Arc::strong_count(s) > 1) {
+        if std::time::Instant::now() >= deadline {
+            let lingering: usize =
+                states.iter().map(|s| Arc::strong_count(s) - 1).sum();
+            log::warn!(
+                "proceeding with {lingering} reader(s) still on a \
+                 previous membership snapshot"
+            );
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+}
+
+/// Stream one entity from a current replica to `target`: dump the
+/// address list off the first source that answers (sources ordered
+/// `prefer` first, then healthy-first in rank order), replay it as
+/// retry-idempotent `\x01insert` lines. `Ok(0)` when a source answered
+/// and holds nothing (e.g. the key was dynamically deleted) — nothing
+/// to move. **Every source failing is an error**: the rebalance must
+/// abort rather than complete "ok" with the key unmoved — the later
+/// drop pass (or the operator stopping a drainee) would otherwise
+/// delete its last copy.
+fn handoff(
+    backends: &[Arc<Backend>],
+    source_set: &[usize],
+    prefer: Option<usize>,
+    target: &Backend,
+    entity: &str,
+) -> io::Result<usize> {
+    let mut order: Vec<usize> = source_set.to_vec();
+    order.sort_by_key(|&i| {
+        (Some(i) != prefer, !backends[i].health().is_healthy())
+    });
+    let mut last_err: Option<io::Error> = None;
+    for &s in &order {
+        match dump_addresses(&backends[s], entity) {
+            Ok(addrs) => {
+                let sent = replay_inserts(target, entity, &addrs)?;
+                if sent > 0 {
+                    // Close the dump→replay window against a concurrent
+                    // \x01delete: a delete landing in between is
+                    // dual-applied to the target *before* the replayed
+                    // entries exist there (a no-op), so the replay would
+                    // resurrect the key. Re-dump the source — if the key
+                    // is gone there now, undo the replay (idempotent); a
+                    // delete landing after this re-check finds the
+                    // entries present on the target and removes them via
+                    // the dual-write path.
+                    if let Ok(now) = dump_addresses(&backends[s], entity) {
+                        if now.is_empty() {
+                            let _ = target.request(&format!(
+                                "{DELETE_REQUEST} {entity}"
+                            ));
+                            return Ok(0);
+                        }
+                    }
+                }
+                return Ok(sent);
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    match last_err {
+        Some(e) => Err(io::Error::other(format!(
+            "no source for {entity:?} could be dumped \
+             (restore or drain its replicas first): {e}"
+        ))),
+        None => Ok(0), // empty source set (cannot happen on a ring)
+    }
+}
+
+/// Surface an `ok:false` control-line reply as an error naming the
+/// backend and operation; pass the reply through otherwise. The four
+/// wire helpers below share this so the reply shape is interpreted in
+/// exactly one place.
+fn expect_ok(reply: Json, op: &str, addr: &str) -> io::Result<Json> {
+    if reply.get("ok") == Some(&Json::Bool(false)) {
+        return Err(io::Error::other(format!(
+            "{addr} refused {op}: {}",
+            reply
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown error")
+        )));
+    }
+    Ok(reply)
+}
+
+/// `\x01dump` one entity's indexed addresses off `source`.
+fn dump_addresses(
+    source: &Backend,
+    entity: &str,
+) -> io::Result<Vec<(u32, u32)>> {
+    let reply = source.request(&format!("{DUMP_REQUEST} {entity}"))?;
+    let reply = expect_ok(reply, "dump", source.addr())?;
+    let Some(arr) = reply.get("addresses").and_then(Json::as_arr) else {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("{} dump reply lacks addresses", source.addr()),
+        ));
+    };
+    let mut out = Vec::with_capacity(arr.len());
+    for a in arr {
+        match (
+            a.get("tree").and_then(Json::as_f64),
+            a.get("node").and_then(Json::as_f64),
+        ) {
+            (Some(t), Some(n)) => out.push((t as u32, n as u32)),
+            _ => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("{} dump reply malformed", source.addr()),
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Replay one entity's address list to `target` as `\x01insert` lines.
+/// Transport errors retry once (the write path is retry-idempotent —
+/// PR 4); an `ok:false` ack is terminal (the target refused the key).
+fn replay_inserts(
+    target: &Backend,
+    entity: &str,
+    addrs: &[(u32, u32)],
+) -> io::Result<usize> {
+    let mut sent = 0usize;
+    for &(tree, node) in addrs {
+        let line = format!("{INSERT_REQUEST} {tree} {node} {entity}");
+        let reply = match target.request(&line) {
+            Ok(reply) => reply,
+            Err(_) => target.request(&line)?, // idempotent: safe retry
+        };
+        expect_ok(reply, "insert", target.addr())?;
+        sent += 1;
+    }
+    Ok(sent)
+}
+
+/// Install the next epoch's partition on one member
+/// (`\x01repartition`).
+fn repartition(
+    backend: &Backend,
+    epoch: u64,
+    replicas: usize,
+    index: usize,
+    addrs: &[String],
+) -> io::Result<()> {
+    let line = format!(
+        "{REPARTITION_REQUEST} {epoch} {replicas} {index} {}",
+        addrs.join(",")
+    );
+    let reply = backend.request(&line)?;
+    expect_ok(reply, "repartition", backend.addr())?;
+    Ok(())
+}
+
+/// Run one member's disowned-key drop pass (`\x01purge`).
+fn purge(backend: &Backend) -> io::Result<usize> {
+    let reply = backend.request(PURGE_REQUEST)?;
+    let reply = expect_ok(reply, "purge", backend.addr())?;
+    Ok(reply
+        .get("dropped")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn member(addr: &str) -> Arc<Backend> {
+        Arc::new(Backend::new(
+            0,
+            addr,
+            &RouterConfig::for_backends([addr]),
+            Arc::new(EpochGate::new(0)),
+        ))
+    }
+
+    fn membership(addrs: &[&str]) -> Membership {
+        let ring = ShardRing::new(addrs.iter().copied());
+        let backends = addrs.iter().map(|a| member(a)).collect();
+        Membership::new(ring, backends, Arc::new(EpochGate::new(0)))
+    }
+
+    #[test]
+    fn serving_set_covers_full_index_and_replicated_modes() {
+        let ring = ShardRing::new(["a:1", "b:2", "c:3"]);
+        let key = entity_key("cardiology");
+        assert_eq!(serving_set(&ring, 0, key), vec![0, 1, 2], "R=0 = all");
+        assert_eq!(serving_set(&ring, 2, key), ring.replicas(key, 2));
+        assert_eq!(
+            serving_addrs(&ring, 2, key),
+            ring.replicas(key, 2)
+                .into_iter()
+                .map(|i| ring.name(i).to_string())
+                .collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn membership_pending_commit_and_gate_lifecycle() {
+        let m = membership(&["a:1", "b:2"]);
+        assert_eq!(m.epoch(), 0);
+        assert_eq!(m.load().addresses(), vec!["a:1", "b:2"]);
+        assert!(m.gate().accepts(0) && !m.gate().accepts(1));
+        assert_eq!(m.probe_targets().len(), 2);
+
+        // opening a pending generation widens the gate and the probe
+        // set, but not the serving ring
+        let joiner = member("c:3");
+        let pending_ring = ShardRing::new(["a:1", "b:2", "c:3"]);
+        let mut pending_backends = m.load().backends.clone();
+        pending_backends.push(joiner);
+        m.set_pending(PendingState {
+            ring: pending_ring.clone(),
+            backends: pending_backends.clone(),
+            epoch: 1,
+        });
+        assert_eq!(m.epoch(), 0, "queries still route on the old ring");
+        assert!(m.gate().accepts(0) && m.gate().accepts(1));
+        assert_eq!(m.probe_targets().len(), 3, "the joiner is observed");
+
+        // commit admits the new generation and retires the old epoch
+        m.commit(RingState {
+            ring: pending_ring,
+            backends: pending_backends,
+            epoch: 1,
+            pending: None,
+        });
+        assert_eq!(m.epoch(), 1);
+        assert_eq!(m.load().addresses(), vec!["a:1", "b:2", "c:3"]);
+        assert!(!m.gate().accepts(0), "stale epoch retired");
+        assert!(m.load().pending.is_none());
+    }
+
+    #[test]
+    fn clear_pending_keeps_rolled_members_probeable() {
+        let m = membership(&["a:1"]);
+        m.set_pending(PendingState {
+            ring: ShardRing::new(["a:1", "b:2"]),
+            backends: m.load().backends.clone(),
+            epoch: 1,
+        });
+        m.clear_pending();
+        assert!(m.load().pending.is_none());
+        assert!(
+            m.gate().accepts(1),
+            "members already rolled to the aborted epoch must not flap"
+        );
+        assert_eq!(m.epoch(), 0);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = RebalanceReport {
+            action: "join",
+            addr: "127.0.0.1:7184".into(),
+            epoch: 3,
+            keys_streamed: 41,
+            inserts_sent: 97,
+            keys_dropped: 12,
+            backends: 4,
+        };
+        let json = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(json.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(json.get("action").and_then(Json::as_str), Some("join"));
+        assert_eq!(json.get("epoch").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(
+            json.get("keys_streamed").and_then(Json::as_f64),
+            Some(41.0)
+        );
+        assert_eq!(json.get("backends").and_then(Json::as_f64), Some(4.0));
+    }
+
+    #[test]
+    fn join_rejects_bad_addresses_and_duplicates() {
+        let m = Arc::new(membership(&["a:1", "b:2"]));
+        let metrics = RouterMetrics::new(2);
+        let cfg = RouterConfig::for_backends(["a:1", "b:2"]);
+        let vocab = vec!["cardiology".to_string()];
+        let ctx = RebalanceCtx {
+            membership: &m,
+            metrics: &metrics,
+            cfg: &cfg,
+            vocab: &vocab,
+            replication: 0,
+        };
+        for bad in ["", "has space:1", "comma,addr:1"] {
+            let err = execute_join(&ctx, bad).unwrap_err();
+            assert!(err.contains("invalid"), "{bad:?}: {err}");
+        }
+        let err = execute_join(&ctx, "a:1").unwrap_err();
+        assert!(err.contains("already"), "{err}");
+        // an unreachable joiner fails before any state changes
+        let err = execute_join(&ctx, "127.0.0.1:9").unwrap_err();
+        assert!(err.contains("unreachable"), "{err}");
+        assert_eq!(m.epoch(), 0);
+        assert!(m.load().pending.is_none());
+    }
+
+    #[test]
+    fn drain_rejects_unknown_members_and_replication_floor() {
+        let m = Arc::new(membership(&["a:1", "b:2"]));
+        let metrics = RouterMetrics::new(2);
+        let cfg = RouterConfig::for_backends(["a:1", "b:2"]);
+        let vocab = vec!["cardiology".to_string()];
+        let ctx = RebalanceCtx {
+            membership: &m,
+            metrics: &metrics,
+            cfg: &cfg,
+            vocab: &vocab,
+            replication: 2,
+        };
+        let err = execute_drain(&ctx, "nope:9").unwrap_err();
+        assert!(err.contains("not in the serving ring"), "{err}");
+        let err = execute_drain(&ctx, "a:1").unwrap_err();
+        assert!(err.contains("cannot drain below"), "{err}");
+        assert_eq!(m.epoch(), 0);
+    }
+}

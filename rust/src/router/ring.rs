@@ -12,8 +12,30 @@
 //! construction: removing a backend from consideration only moves the
 //! keys that backend owned (the argmax over a subset is unchanged when
 //! a non-maximal element is dropped), and the full score ranking *is*
-//! the failover order. `tests/router_integration.rs` property-tests
-//! both.
+//! the failover order — which is also why elastic membership changes
+//! (`router/rebalance.rs`) move only the keys whose serving set
+//! actually changed (property-tested below: no gratuitous churn).
+//!
+//! # Examples
+//!
+//! ```
+//! use cft_rag::filter::fingerprint::entity_key;
+//! use cft_rag::router::ring::ShardRing;
+//!
+//! let ring = ShardRing::new(["10.0.0.1:7171", "10.0.0.2:7171", "10.0.0.3:7171"]);
+//! let key = entity_key("cardiology");
+//!
+//! // the owner is rank 0 of the deterministic failover order
+//! let ranked = ring.ranked(key);
+//! assert_eq!(ring.owner(key), Some(ranked[0]));
+//!
+//! // a key's R=2 replica set is the length-2 prefix of that order
+//! assert_eq!(ring.replicas(key, 2), &ranked[..2]);
+//!
+//! // excluding the owner (e.g. it is unhealthy) fails over to rank 1
+//! let fallback = ring.owner_where(key, |i| i != ranked[0]);
+//! assert_eq!(fallback, Some(ranked[1]));
+//! ```
 
 use crate::filter::fingerprint::rendezvous_score;
 use crate::util::rng::fnv1a;
@@ -216,6 +238,79 @@ mod tests {
                             "key {key:#x}: join reshuffled survivors \
                              {survivors:?} vs old {reps:?}"
                         ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn join_moves_only_keys_whose_serving_set_changed() {
+        // The elasticity invariant of ISSUE 5 (no gratuitous churn):
+        // for a backend joining the ring, the rebalance plan — "stream
+        // key K iff its new serving set contains the joiner" — must
+        // move exactly the keys whose serving *address* set changed.
+        //  1. A key whose new serving set omits the joiner keeps its
+        //     serving addresses verbatim (nothing to move, and the
+        //     planner skips it).
+        //  2. A key whose new serving set includes the joiner changes
+        //     by exactly the joiner evicting the old rank-R holder
+        //     (or extending the set when the ring was smaller than R)
+        //     — survivors keep their relative order.
+        // Together: planned keys = changed keys, and each change is
+        // one eviction, never a reshuffle. Exercised across both
+        // replicated (R >= 1) and full-index (R = 0 → whole ring)
+        // serving-set shapes via `rebalance::serving_addrs`.
+        use crate::router::rebalance::serving_addrs;
+
+        forall_simple(
+            128,
+            |rng: &mut Rng| {
+                let backends = 2 + rng.range(0, 7); // 2..=8
+                let r = rng.range(0, backends + 1); // 0..=backends (0 = full)
+                let keys: Vec<u64> =
+                    (0..64).map(|_| rng.next_u64()).collect();
+                (backends, r, keys)
+            },
+            |(backends, r, keys)| {
+                let before = ring(*backends);
+                let after = ring(*backends + 1);
+                let joiner_addr = after.name(*backends).to_string();
+                for &key in keys {
+                    let old = serving_addrs(&before, *r, key);
+                    let new = serving_addrs(&after, *r, key);
+                    let planned = new.contains(&joiner_addr);
+                    if !planned && new != old {
+                        return Err(format!(
+                            "key {key:#x}: unplanned churn {old:?} -> \
+                             {new:?} (joiner not in the new set)"
+                        ));
+                    }
+                    if planned {
+                        // survivors = new set minus the joiner; they
+                        // must be a prefix-order-preserving subset of
+                        // the old set (one eviction at most, no
+                        // reshuffle)
+                        let survivors: Vec<&String> = new
+                            .iter()
+                            .filter(|a| **a != joiner_addr)
+                            .collect();
+                        if survivors.len() + 1 < old.len() {
+                            return Err(format!(
+                                "key {key:#x}: join evicted {} members \
+                                 ({old:?} -> {new:?})",
+                                old.len() - survivors.len()
+                            ));
+                        }
+                        let old_refs: Vec<&String> =
+                            old.iter().take(survivors.len()).collect();
+                        if survivors != old_refs {
+                            return Err(format!(
+                                "key {key:#x}: join reshuffled \
+                                 survivors {survivors:?} vs {old:?}"
+                            ));
+                        }
                     }
                 }
                 Ok(())

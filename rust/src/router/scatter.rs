@@ -41,7 +41,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::io;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::tcp::{DELETE_REQUEST, INSERT_REQUEST};
@@ -50,8 +50,12 @@ use crate::filter::fingerprint::entity_key;
 use crate::nlp::ner::GazetteerNer;
 use crate::rag::config::RouterConfig;
 use crate::router::backend::Backend;
-use crate::router::health::HealthProber;
+use crate::router::health::{EpochGate, HealthProber};
 use crate::router::metrics::{RouterMetrics, RouterMetricsSnapshot};
+use crate::router::rebalance::{
+    execute_drain, execute_join, serving_set, Membership, RebalanceCtx,
+    RingState,
+};
 use crate::router::ring::ShardRing;
 use crate::util::json::Json;
 use crate::util::log;
@@ -72,11 +76,19 @@ type Portion = (Vec<String>, std::result::Result<(usize, Json), SendFailure>);
 
 /// The shard router: entity-aware scatter-gather over N coordinator
 /// backends. All methods take `&self`; clients query from any number of
-/// threads concurrently.
+/// threads concurrently. Ring membership is **elastic**: [`Router::join`]
+/// and [`Router::drain`] rebalance backends in and out at runtime
+/// (`router/rebalance.rs`, ops runbook in `docs/OPERATIONS.md`); the
+/// query path works against a consistent membership snapshot per query.
 pub struct Router {
-    ring: ShardRing,
-    backends: Vec<Arc<Backend>>,
+    membership: Arc<Membership>,
+    /// The router config the fleet was connected with — also used to
+    /// dial backends that join later.
+    cfg: RouterConfig,
     ner: GazetteerNer,
+    /// The entity vocabulary, retained for rebalance planning (the key
+    /// universe a membership change has to move).
+    vocab: Vec<String>,
     metrics: RouterMetrics,
     max_attempts: usize,
     /// R-way replication (0 = full-index backends; see `RouterConfig`).
@@ -84,6 +96,8 @@ pub struct Router {
     /// Acks required per broadcast write (already resolved: `0` in the
     /// config means "all targets", resolved per write).
     write_quorum: usize,
+    /// Serializes join/drain — one membership change at a time.
+    rebalance_lock: Mutex<()>,
     _prober: HealthProber,
 }
 
@@ -108,23 +122,33 @@ impl Router {
                 cfg.backends.len()
             )));
         }
+        let vocab: Vec<String> =
+            entity_names.into_iter().map(str::to_string).collect();
         let ring = ShardRing::new(cfg.backends.iter().cloned());
+        let gate = Arc::new(EpochGate::new(0));
         let backends: Vec<Arc<Backend>> = cfg
             .backends
             .iter()
             .enumerate()
-            .map(|(i, addr)| Arc::new(Backend::new(i, addr, cfg)))
+            .map(|(i, addr)| {
+                Arc::new(Backend::new(i, addr, cfg, gate.clone()))
+            })
             .collect();
-        let prober =
-            HealthProber::start(backends.clone(), cfg.probe_interval);
+        let membership =
+            Arc::new(Membership::new(ring, backends.clone(), gate));
+        let targets: Arc<dyn crate::router::health::ProbeTargets> =
+            membership.clone();
+        let prober = HealthProber::start(targets, cfg.probe_interval);
         Ok(Router {
-            ring,
+            membership,
+            cfg: cfg.clone(),
             metrics: RouterMetrics::new(backends.len()),
-            ner: GazetteerNer::new(entity_names),
-            backends,
+            ner: GazetteerNer::new(vocab.iter().map(String::as_str)),
+            vocab,
             max_attempts: cfg.max_attempts.max(1),
             replication: cfg.replication_factor,
             write_quorum: cfg.write_quorum,
+            rebalance_lock: Mutex::new(()),
             _prober: prober,
         })
     }
@@ -134,19 +158,26 @@ impl Router {
         self.replication
     }
 
-    /// Number of fronted backends.
+    /// Number of fronted backends (current membership).
     pub fn num_backends(&self) -> usize {
-        self.backends.len()
+        self.membership.load().backends.len()
     }
 
-    /// The routed backends (health inspection, tests).
-    pub fn backends(&self) -> &[Arc<Backend>] {
-        &self.backends
+    /// The routed backends (health inspection, tests) — a snapshot of
+    /// the current membership.
+    pub fn backends(&self) -> Vec<Arc<Backend>> {
+        self.membership.load().backends.clone()
     }
 
-    /// The ownership ring (tests, ops tooling).
-    pub fn ring(&self) -> &ShardRing {
-        &self.ring
+    /// The ownership ring (tests, ops tooling) — a snapshot of the
+    /// current membership.
+    pub fn ring(&self) -> ShardRing {
+        self.membership.load().ring.clone()
+    }
+
+    /// The serving membership epoch (bumped by every join/drain).
+    pub fn ring_epoch(&self) -> u64 {
+        self.membership.epoch()
     }
 
     /// Metrics sink handle.
@@ -154,14 +185,67 @@ impl Router {
         &self.metrics
     }
 
-    /// Counters joined with live per-backend health.
+    /// Counters joined with live per-backend health and the serving
+    /// membership epoch.
     pub fn snapshot(&self) -> RouterMetricsSnapshot {
-        let info: Vec<(String, bool)> = self
+        let state = self.membership.load();
+        let info: Vec<(String, bool)> = state
             .backends
             .iter()
             .map(|b| (b.addr().to_string(), b.health().is_healthy()))
             .collect();
-        self.metrics.snapshot(&info)
+        self.metrics.snapshot(&info, state.epoch)
+    }
+
+    /// Rebalance backend `addr` **into** the serving ring (the
+    /// `\x01join` front-door line, `cft-rag route --admit`): stream its
+    /// newly owned keys from current replicas over the `\x01insert`
+    /// handoff transport, roll the fleet to the next partition epoch,
+    /// admit it, then run the incumbents' disowned-key drop pass. One
+    /// rebalance runs at a time; the reply summarizes what moved.
+    pub fn join(&self, addr: &str) -> Json {
+        let _guard = self.rebalance_lock.lock().unwrap();
+        let ctx = self.rebalance_ctx();
+        match execute_join(&ctx, addr) {
+            Ok(report) => report.to_json(),
+            Err(e) => {
+                log::warn!("join of {addr} failed: {e}");
+                Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(e)),
+                ])
+            }
+        }
+    }
+
+    /// Rebalance backend `addr` **out of** the serving ring (the
+    /// `\x01drain` front-door line, `cft-rag route --drain`): hand its
+    /// keys — including sole-replica keys — to their next-ranked
+    /// owners, roll the survivors to the next epoch, then remove it.
+    /// The drained process can be stopped once this returns `ok`.
+    pub fn drain(&self, addr: &str) -> Json {
+        let _guard = self.rebalance_lock.lock().unwrap();
+        let ctx = self.rebalance_ctx();
+        match execute_drain(&ctx, addr) {
+            Ok(report) => report.to_json(),
+            Err(e) => {
+                log::warn!("drain of {addr} failed: {e}");
+                Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(e)),
+                ])
+            }
+        }
+    }
+
+    fn rebalance_ctx(&self) -> RebalanceCtx<'_> {
+        RebalanceCtx {
+            membership: &self.membership,
+            metrics: &self.metrics,
+            cfg: &self.cfg,
+            vocab: &self.vocab,
+            replication: self.replication,
+        }
     }
 
     /// Serve one query through the ring; always returns a reply object
@@ -170,6 +254,9 @@ impl Router {
     pub fn query(&self, query: &str) -> Json {
         let query = query.trim();
         let entities = self.ner.recognize(query);
+        // one consistent membership snapshot per query: a concurrent
+        // join/drain swaps the Arc, never mutates what we hold
+        let state = self.membership.load();
 
         // Group mentions by the backend set that can serve them: in
         // replicated mode a mention's replica set (mentions sharing a
@@ -181,9 +268,9 @@ impl Router {
         for e in entities {
             let key = entity_key(&e);
             let set = if self.replication > 0 {
-                self.ring.replicas(key, self.replication)
+                state.ring.replicas(key, self.replication)
             } else {
-                vec![self.owner_of(key)]
+                vec![self.owner_of(&state, key)]
             };
             groups.entry(set).or_default().push(e);
         }
@@ -196,13 +283,13 @@ impl Router {
                 // entity-free traffic still load-balances
                 None => fnv1a(query.as_bytes()),
             };
-            match self.send_with_failover(key, query) {
+            match self.send_with_failover(&state, key, query) {
                 Ok((_, json)) => annotate(json, 1, false),
                 Err(e) => error_reply(&e),
             }
         } else {
             self.metrics.record_fanout();
-            self.scatter(query, &groups)
+            self.scatter(&state, query, &groups)
         };
         self.metrics
             .record_query(reply.get("ok") == Some(&Json::Bool(true)));
@@ -212,16 +299,18 @@ impl Router {
     /// Owner of `key`: highest-ranked healthy backend, or the overall
     /// owner when nothing is currently healthy (the failover walk will
     /// try everything anyway).
-    fn owner_of(&self, key: u64) -> usize {
-        self.ring
-            .owner_where(key, |i| self.backends[i].health().is_healthy())
-            .or_else(|| self.ring.owner(key))
+    fn owner_of(&self, state: &RingState, key: u64) -> usize {
+        state
+            .ring
+            .owner_where(key, |i| state.backends[i].health().is_healthy())
+            .or_else(|| state.ring.owner(key))
             .expect("ring is non-empty by construction")
     }
 
     /// Fan the mention groups out in parallel and merge.
     fn scatter(
         &self,
+        state: &RingState,
         query: &str,
         groups: &BTreeMap<Vec<usize>, Vec<String>>,
     ) -> Json {
@@ -239,7 +328,10 @@ impl Router {
                         // spurious longer match.
                         let line = ents.join(" and ");
                         let key = entity_key(&ents[0]);
-                        (ents.clone(), self.send_with_failover(key, &line))
+                        (
+                            ents.clone(),
+                            self.send_with_failover(state, key, &line),
+                        )
                     })
                 })
                 .collect();
@@ -269,13 +361,15 @@ impl Router {
     /// health (it answered; the coordinator refused).
     fn send_with_failover(
         &self,
+        state: &RingState,
         key: u64,
         line: &str,
     ) -> std::result::Result<(usize, Json), SendFailure> {
+        let backends = &state.backends;
         let ranked = if self.replication > 0 {
-            self.ring.replicas(key, self.replication)
+            state.ring.replicas(key, self.replication)
         } else {
-            self.ring.ranked(key)
+            state.ring.ranked(key)
         };
         // one health read per candidate: reading twice (a healthy pass
         // then an unhealthy pass) would let a concurrent health flip
@@ -284,7 +378,7 @@ impl Router {
         let (mut order, unhealthy): (Vec<usize>, Vec<usize>) = ranked
             .iter()
             .copied()
-            .partition(|&i| self.backends[i].health().is_healthy());
+            .partition(|&i| backends[i].health().is_healthy());
         if self.replication > 0 {
             // Load = the backend's cumulative `requests` gauge from the
             // last `\x01stats` probe. Two knowing trade-offs: it is a
@@ -293,7 +387,7 @@ impl Router {
             // node and catches up fast); and with probing disabled it
             // stays 0 everywhere, degrading to plain rank order — never
             // to a wrong answer, since every candidate is a replica.
-            order.sort_by_key(|&i| self.backends[i].health().observed_load());
+            order.sort_by_key(|&i| backends[i].health().observed_load());
         }
         order.extend(unhealthy);
         order.truncate(self.max_attempts);
@@ -308,7 +402,7 @@ impl Router {
         };
         for idx in order {
             let t0 = Instant::now();
-            match self.backends[idx].request(line) {
+            match backends[idx].request(line) {
                 Ok(json) => {
                     let ok = json.get("ok") != Some(&Json::Bool(false));
                     self.metrics.record_backend(idx, ok, t0.elapsed());
@@ -320,9 +414,7 @@ impl Router {
                             .to_string();
                         last = SendFailure {
                             err: io::Error::other(msg),
-                            backend: Some(
-                                self.backends[idx].addr().to_string(),
-                            ),
+                            backend: Some(backends[idx].addr().to_string()),
                         };
                         walk_failed = true;
                         continue;
@@ -345,7 +437,7 @@ impl Router {
                     self.metrics.record_backend(idx, false, t0.elapsed());
                     last = SendFailure {
                         err: e,
-                        backend: Some(self.backends[idx].addr().to_string()),
+                        backend: Some(backends[idx].addr().to_string()),
                     };
                     walk_failed = true;
                 }
@@ -490,6 +582,15 @@ impl Router {
     /// reply carries `ok` (quorum reached), `replicas` (targets),
     /// `acks`, `applied` (acks that changed state), `quorum`, and a
     /// per-backend `errors` array when anything failed.
+    ///
+    /// While a rebalance is in flight (`Router::join`/`drain`), the
+    /// write is **dual-applied**: besides the current epoch's targets
+    /// it is sent, best-effort, to every backend the *incoming* epoch's
+    /// serving set adds — so a write landing mid-handoff cannot be
+    /// missing from the new owner after admission. Dual-write acks do
+    /// not count toward the quorum (the serving epoch's replicas are
+    /// the durability contract); failures are logged and counted
+    /// (`dual_writes` only counts sends).
     fn broadcast(&self, entity: &str, line: &str) -> Json {
         // The protocol is one line per request: an entity containing a
         // newline (or the \x01 control prefix) would desynchronize the
@@ -505,11 +606,12 @@ impl Router {
                 ),
             ]);
         }
+        let state = self.membership.load();
         let key = entity_key(entity);
         let targets: Vec<usize> = if self.replication > 0 {
-            self.ring.replicas(key, self.replication)
+            state.ring.replicas(key, self.replication)
         } else {
-            (0..self.backends.len()).collect()
+            (0..state.backends.len()).collect()
         };
         self.metrics.record_write_fanout();
         let quorum = if self.write_quorum == 0 {
@@ -518,14 +620,42 @@ impl Router {
             self.write_quorum.min(targets.len())
         };
 
+        // mid-rebalance dual writes: the incoming epoch's additions
+        let extras: Vec<Arc<Backend>> = match &state.pending {
+            Some(p) => serving_set(&p.ring, self.replication, key)
+                .into_iter()
+                .map(|i| p.backends[i].clone())
+                .filter(|b| {
+                    !targets
+                        .iter()
+                        .any(|&t| state.backends[t].addr() == b.addr())
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+
         let outcomes: Vec<(usize, io::Result<Json>)> =
             std::thread::scope(|s| {
+                for extra in &extras {
+                    self.metrics.record_dual_write();
+                    s.spawn(move || {
+                        if let Err(e) = extra.request(line) {
+                            log::warn!(
+                                "dual write of {line:?} to joining \
+                                 backend {} failed (the handoff replay \
+                                 will restore it): {e}",
+                                extra.addr()
+                            );
+                        }
+                    });
+                }
                 let handles: Vec<_> = targets
                     .iter()
                     .map(|&idx| {
+                        let backends = &state.backends;
                         s.spawn(move || {
                             let t0 = Instant::now();
-                            let res = self.backends[idx].request(line);
+                            let res = backends[idx].request(line);
                             let ok = matches!(
                                 &res,
                                 Ok(j) if j.get("ok") != Some(&Json::Bool(false))
@@ -545,7 +675,7 @@ impl Router {
         let mut applied = 0usize;
         let mut errors: Vec<Json> = Vec::new();
         for (idx, res) in outcomes {
-            let addr = self.backends[idx].addr();
+            let addr = state.backends[idx].addr();
             match res {
                 Ok(json) if json.get("ok") != Some(&Json::Bool(false)) => {
                     acks += 1;

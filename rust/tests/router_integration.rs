@@ -514,6 +514,226 @@ fn partitioned_r1_degrades_with_backend_attribution() {
 }
 
 #[test]
+fn joining_backend_warms_up_under_live_load_and_shrinks_incumbents() {
+    // The ISSUE-5 acceptance scenario: a backend is added to a LIVE
+    // key-partitioned R=2 fleet under Zipf query load. The joiner is
+    // started `--joining`-style (index built EMPTY — every key it ends
+    // up serving must have arrived through the warm-up handoff), the
+    // router admits it only after the warm-up completes, zero queries
+    // fail before/during/after admission, and the incumbents' post-drop
+    // live index memory shrinks toward the ~R/(N+1) bound.
+    let ds = dataset(6);
+    let (backends, router) = partitioned_cluster(&ds, 3, 2, &quiet_cfg());
+    let names = entity_names(&ds);
+    let forest = ds.build_forest();
+    let workload = cft_rag::data::workload::Workload::generate(
+        &forest,
+        cft_rag::data::workload::WorkloadConfig {
+            entities_per_query: 1,
+            queries: 32,
+            zipf_s: 1.2,
+            deep_bias: 0.0,
+            ..Default::default()
+        },
+    );
+    let live_before: usize = backends
+        .iter()
+        .map(|b| b.coordinator.live_index_bytes())
+        .sum();
+
+    // the joiner: bound first (the new partition hashes the final
+    // address list), index built EMPTY awaiting the handoff
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind joiner");
+    let joiner_addr = listener.local_addr().unwrap().to_string();
+    let mut new_list: Vec<String> =
+        backends.iter().map(|b| b.addr.clone()).collect();
+    new_list.push(joiner_addr.clone());
+    let joiner = TestBackend::start_on(
+        &ds,
+        listener,
+        RagConfig {
+            replication_factor: 2,
+            key_partition: Some(
+                KeyPartition::joining(new_list.clone(), 3, 2)
+                    .expect("joining partition"),
+            ),
+            ..RagConfig::default()
+        },
+    );
+    for name in &names {
+        assert!(
+            joiner.coordinator.dump_entity(name).is_empty(),
+            "{name}: a --joining backend must start with an empty index"
+        );
+    }
+
+    const CLIENTS: usize = 4;
+    const PHASE1: usize = 5;
+    const PHASE2: usize = 20;
+    let mid_load = Arc::new(Barrier::new(CLIENTS + 1));
+    let failures = Mutex::new(Vec::<String>::new());
+    let join_reply = std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let router = router.clone();
+            let mid_load = mid_load.clone();
+            let workload = &workload;
+            let failures = &failures;
+            s.spawn(move || {
+                let mut serve = |i: usize| {
+                    let q =
+                        &workload.queries[(c * 7 + i) % workload.queries.len()];
+                    let reply = router.query(&q.text);
+                    if !is_ok(&reply) {
+                        failures.lock().unwrap().push(reply.to_string());
+                    }
+                };
+                for i in 0..PHASE1 {
+                    serve(i);
+                }
+                // all clients are mid-load when the join starts and
+                // keep querying straight through warm-up + admission
+                mid_load.wait();
+                for i in PHASE1..PHASE1 + PHASE2 {
+                    serve(i);
+                }
+            });
+        }
+        mid_load.wait();
+        router.join(&joiner_addr)
+    });
+
+    assert_eq!(
+        join_reply.get("ok"),
+        Some(&Json::Bool(true)),
+        "{join_reply}"
+    );
+    assert_eq!(join_reply.get("epoch").and_then(Json::as_f64), Some(1.0));
+    assert!(
+        join_reply
+            .get("keys_streamed")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+            > 0.0,
+        "warm-up must stream the joiner's slice: {join_reply}"
+    );
+    let failed = failures.into_inner().unwrap();
+    assert!(
+        failed.is_empty(),
+        "{} queries failed across the join: {:?}",
+        failed.len(),
+        failed.first()
+    );
+    assert_eq!(router.num_backends(), 4);
+    assert_eq!(router.ring_epoch(), 1);
+
+    // warm-up completeness: the joiner holds EXACTLY its newly owned
+    // slice — every key whose new replica set contains it (streamed via
+    // handoff into an index that started empty), and nothing else
+    let ring = router.ring();
+    let mut owned = 0usize;
+    for name in &names {
+        let is_replica = ring.replicas(entity_key(name), 2).contains(&3);
+        let held = !joiner.coordinator.dump_entity(name).is_empty();
+        assert_eq!(held, is_replica, "{name}: joiner warm-up slice");
+        owned += usize::from(is_replica);
+    }
+    assert!(owned > 0, "the joiner must own some of {} keys", names.len());
+
+    // serving after admission: queries keep succeeding, and a key the
+    // joiner now co-serves retrieves real facts
+    let snap = router.snapshot();
+    assert_eq!(snap.failures, 0);
+    assert_eq!(snap.ring_epoch, 1);
+    assert_eq!(snap.joins, 1);
+    assert!(snap.rebalanced_keys > 0);
+    let victim = names
+        .iter()
+        .find(|n| ring.replicas(entity_key(n.as_str()), 2).contains(&3))
+        .expect("some key lands on the joiner");
+    let reply = router.query(&format!("tell me about {victim}"));
+    assert!(is_ok(&reply), "{reply}");
+    assert!(
+        reply.get("facts").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+        "{reply}"
+    );
+
+    // the ~R/(N+1) bound: incumbents dropped their disowned keys, so
+    // fleet-wide live index memory shrinks (2/3 -> 2/4 of the keyspace
+    // per incumbent) even though a fourth index now exists
+    assert!(
+        join_reply
+            .get("keys_dropped")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+            > 0.0,
+        "incumbents must reclaim disowned keys: {join_reply}"
+    );
+    let live_after: usize = backends
+        .iter()
+        .map(|b| b.coordinator.live_index_bytes())
+        .sum();
+    assert!(
+        live_after < live_before,
+        "incumbent live index bytes must shrink: {live_before} -> {live_after}"
+    );
+}
+
+#[test]
+fn drain_hands_sole_replica_keys_to_next_ranked_owners() {
+    // The mirror operation: at R=1 every key has exactly ONE holder, so
+    // draining a backend without handoff would lose its whole slice.
+    // After `drain`, the leaving backend's keys must be served by their
+    // next-ranked owners — provably, because the drained process is
+    // killed afterwards and every key still retrieves facts.
+    let ds = dataset(6);
+    let (mut backends, router) =
+        partitioned_cluster(&ds, 3, 1, &quiet_cfg());
+    let names = entity_names(&ds);
+
+    // sanity: some keys are solely held by backend 0
+    let pre_ring = router.ring();
+    let victim_keys: Vec<&String> = names
+        .iter()
+        .filter(|n| pre_ring.owner(entity_key(n.as_str())) == Some(0))
+        .collect();
+    assert!(!victim_keys.is_empty(), "backend 0 owns nothing?");
+
+    let drain_addr = backends[0].addr.clone();
+    let reply = router.drain(&drain_addr);
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(reply.get("action").and_then(Json::as_str), Some("drain"));
+    assert_eq!(reply.get("epoch").and_then(Json::as_f64), Some(1.0));
+    assert!(
+        reply
+            .get("keys_streamed")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as usize
+            >= victim_keys.len(),
+        "every sole-replica key must be handed off: {reply}"
+    );
+    assert_eq!(router.num_backends(), 2);
+    assert_eq!(router.ring_epoch(), 1);
+    let snap = router.snapshot();
+    assert_eq!(snap.drains, 1);
+    assert_eq!(snap.backends.len(), 2, "drained slot removed");
+
+    // the drained process can now really go away...
+    backends[0].kill();
+    // ...and every one of its former sole-replica keys still answers
+    // with facts, served by its next-ranked owner
+    for name in victim_keys {
+        let reply = router.query(&format!("tell me about {name}"));
+        assert!(is_ok(&reply), "{name}: {reply}");
+        assert!(
+            reply.get("facts").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+            "{name} lost its facts in the drain: {reply}"
+        );
+    }
+    let snap = router.snapshot();
+    assert_eq!(snap.failures, 0, "zero failed queries through the drain");
+}
+
+#[test]
 fn prober_observes_load_and_readmits_restarted_backend() {
     let ds = dataset(4);
     let cfg = RouterConfig {

@@ -19,9 +19,17 @@ echo "==> cargo clippy -D warnings"
 cargo clippy --workspace --all-targets -- -D warnings
 
 # Docs are a first-class deliverable (README.md + docs/PROTOCOL.md +
-# rustdoc): broken intra-doc links or malformed rustdoc fail the gate.
+# docs/OPERATIONS.md + rustdoc): broken intra-doc links or malformed
+# rustdoc fail the gate.
 echo "==> cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace --quiet
+
+# Module docs carry runnable `# Examples` (router/{ring,pool,health,
+# backend,metrics}.rs especially); run them explicitly so a drifted
+# example fails the gate even if a harness config ever stops `cargo
+# test` from picking doctests up implicitly.
+echo "==> cargo test --doc"
+cargo test --doc --quiet
 
 if [[ "$fast" == 0 ]]; then
   echo "==> cargo build --release"
