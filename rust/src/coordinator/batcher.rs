@@ -3,8 +3,9 @@
 //! serving trade-off between device efficiency (full batches for the
 //! fixed-shape artifacts) and tail latency.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::time::{Duration, Instant};
+use crate::sync::mpsc::{Receiver, RecvTimeoutError};
+use crate::sync::time::Instant;
+use std::time::Duration;
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -55,8 +56,8 @@ pub fn collect_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> BatchOutcome<T
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
-    use std::thread;
+    use crate::sync::mpsc::channel;
+    use crate::sync::thread;
 
     #[test]
     fn fills_to_max_when_items_ready() {

@@ -23,10 +23,11 @@
 //! stall embedding dispatch — pre-PR-2 it ran inline on the batcher and
 //! did exactly that.
 
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use crate::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use crate::sync::time::Instant;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::coordinator::batcher::{collect_batch, BatchOutcome, BatchPolicy};
 use crate::coordinator::metrics::Metrics;
@@ -272,7 +273,7 @@ impl Coordinator {
     /// silently discarded the job on a closed queue and blocked forever
     /// on a full one.
     pub fn submit(&self, query: &str) -> Result<Receiver<Result<ServeResponse>>> {
-        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+        let (resp_tx, resp_rx) = crate::sync::mpsc::channel();
         let job = Job {
             query: query.to_string(),
             enqueued: Instant::now(),
@@ -492,7 +493,9 @@ fn enqueue(queue: &SyncSender<Job>, job: Job, timeout: Duration) -> Result<()> {
                     )));
                 }
                 job = rejected;
-                std::thread::sleep(Duration::from_millis(1));
+                // virtual under a model run: the bounded wait costs no
+                // wall-clock time and times out deterministically
+                crate::sync::thread::sleep(Duration::from_millis(1));
             }
         }
     }
@@ -674,7 +677,7 @@ mod tests {
     }
 
     fn test_job(query: &str) -> Job {
-        let (resp, _rx) = std::sync::mpsc::channel();
+        let (resp, _rx) = crate::sync::mpsc::channel();
         Job { query: query.into(), enqueued: Instant::now(), resp }
     }
 

@@ -107,6 +107,8 @@ mod tests {
     }
 
     #[test]
+    // 110k hash probes: too slow under Miri
+    #[cfg_attr(miri, ignore)]
     fn false_positive_rate_near_target() {
         let mut bf = BloomFilter::new(10_000, 0.01);
         for i in 0..10_000 {

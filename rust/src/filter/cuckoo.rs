@@ -46,7 +46,7 @@
 //! ([`CuckooFilter::plan_maintenance`]) and per-bucket validated swaps
 //! ([`CuckooFilter::apply_bucket_plan`]).
 
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering::Relaxed};
+use crate::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering::Relaxed};
 
 use crate::filter::blocklist::{BlockArena, NIL};
 use crate::filter::fingerprint::{alt_index, fingerprint, primary_index};
@@ -274,14 +274,44 @@ impl Table {
     }
 
     /// One 64-bit load of a 4-slot bucket's fingerprints (the default
-    /// layout: 4 × u16 = one word). Requires `slots == 4`.
+    /// layout: 4 × u16 = one word), with [`scan4`]'s lane convention:
+    /// slot `i` of the bucket occupies bits `16*i..16*i+16`.
     #[inline]
     fn bucket_word(&self, bucket: usize) -> u64 {
         debug_assert_eq!(self.slots, 4);
         let base = bucket * 4;
-        debug_assert!(base + 4 <= self.fps.len());
-        // SAFETY: fps holds nbuckets*4 contiguous u16s; base+4 <= len.
-        unsafe { (self.fps.as_ptr().add(base) as *const u64).read_unaligned() }
+        debug_assert!(
+            base + 4 <= self.fps.len(),
+            "bucket {bucket} out of range for {} fingerprint slots",
+            self.fps.len()
+        );
+        if cfg!(target_endian = "little") {
+            // SAFETY:
+            // * bounds: `fps` is a Vec<u16> of exactly `nbuckets * 4`
+            //   elements (`slots == 4` is asserted above; every Table
+            //   constructor sizes fps as nbuckets*slots), and `bucket <
+            //   nbuckets` at every call site, so `base + 4 <= fps.len()`
+            //   (debug-asserted above) and all 8 bytes read lie inside
+            //   the allocation.
+            // * alignment: `read_unaligned` has no alignment
+            //   requirement; the pointer is only u16-aligned.
+            // * validity: u64 has no invalid bit patterns and the
+            //   source bytes are initialized Vec contents.
+            // * lane order: on little-endian targets the in-memory
+            //   order fps[base..base+4] lands in bits 0..16, 16..32,
+            //   ... — exactly the lane convention `scan4` assumes.
+            //   Big-endian targets take the safe fold below, which
+            //   builds the identical word explicitly.
+            unsafe {
+                (self.fps.as_ptr().add(base) as *const u64).read_unaligned()
+            }
+        } else {
+            let mut w = 0u64;
+            for i in 0..4 {
+                w |= u64::from(self.fps[base + i]) << (16 * i);
+            }
+            w
+        }
     }
 
     #[inline]
@@ -876,6 +906,7 @@ impl CuckooFilter {
     /// sharded wrapper calls this between reader turns so no reader ever
     /// waits behind more than one step.
     pub fn migrate_step(&mut self) -> bool {
+        crate::sync::hint::preemption_point();
         self.migrate_buckets(self.step_buckets())
     }
 
@@ -1034,6 +1065,7 @@ impl CuckooFilter {
     /// (migration steps take priority; buckets stay dirty and are planned
     /// on the next round) or when sorting is ablated off.
     pub fn plan_maintenance(&self) -> Vec<BucketPlan> {
+        crate::sync::hint::preemption_point();
         if !self.cfg.sort_by_temperature || self.migration.is_some() {
             return Vec::new();
         }
@@ -1065,6 +1097,7 @@ impl CuckooFilter {
     /// bucket mutated since planning is left untouched **and dirty**, so
     /// the next round re-plans it. Returns whether the swap was applied.
     pub fn apply_bucket_plan(&mut self, plan: &BucketPlan) -> bool {
+        crate::sync::hint::preemption_point();
         if self.migration.is_some() {
             return false; // table generations changed; plan is stale
         }
@@ -1205,6 +1238,9 @@ mod tests {
     }
 
     #[test]
+    // 20k keyed ops: minutes under Miri, no extra coverage of the
+    // unsafe read beyond the small tests
+    #[cfg_attr(miri, ignore)]
     fn insert_delete_churn_keeps_arena_bounded() {
         let mut cf = CuckooFilter::new(CuckooConfig {
             initial_buckets: 64,
@@ -1249,6 +1285,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn no_false_negatives_at_high_load() {
         let mut cf = CuckooFilter::new(CuckooConfig {
             initial_buckets: 64,
@@ -1285,6 +1322,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn interleaved_churn_survives_expansions() {
         // Regression for the expand() migration-retry entry loss: grow
         // through several expansions while deleting, then verify every
@@ -1346,6 +1384,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn step_zero_migrates_monolithically() {
         let mut cf = CuckooFilter::new(CuckooConfig {
             initial_buckets: 16,
@@ -1549,6 +1588,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn paper_scale_3148_entities_in_1024_buckets() {
         // §4.5.1: 3,148 entities, 1024 buckets x 4 slots, load 0.7686,
         // and a near-zero error rate.
@@ -1566,6 +1606,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn hot_bytes_much_smaller_than_total() {
         let mut cf = CuckooFilter::default();
         for i in 0..1000u64 {

@@ -16,9 +16,25 @@
 //! Start at the repo-level `README.md` for the architecture map and
 //! quickstart commands; the coordinator/router wire protocol is
 //! specified in `docs/PROTOCOL.md`. `examples/quickstart.rs` is the
-//! smallest end-to-end program.
+//! smallest end-to-end program. How the crate is verified — unit /
+//! property tests, the `modelcheck` schedule suite, sanitizers, TCP
+//! integration — is laid out in `docs/TESTING.md`.
+
+// Unsafe hygiene: the crate has exactly two unsafe sites (the SWAR
+// bucket-word read in `filter/cuckoo.rs` and the xla-gated
+// `unsafe impl Send for Runtime` in `runtime/client.rs`), both audited
+// and documented with `// SAFETY:` contracts. Deny the implicit-unsafe
+// footgun so any future unsafe fn must spell out its internal unsafe
+// blocks. (`missing_debug_implementations` is applied per-module in
+// the new `sync`/`modelcheck` layers rather than crate-wide: the
+// pre-existing public surface has many intentionally Debug-less types
+// and the clippy gate runs with `-D warnings`.)
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod util;
+pub mod sync;
+#[cfg(feature = "modelcheck")]
+pub mod modelcheck;
 pub mod text;
 pub mod nlp;
 pub mod forest;

@@ -1,0 +1,321 @@
+//! Deterministic concurrency model checking (`--features modelcheck`).
+//!
+//! A loom/shuttle-style checker, dependency-free like the rest of the
+//! crate: the drop-in primitives in [`crate::sync`] route every sync
+//! operation through a seeded cooperative scheduler
+//! ([`scheduler`]), so a multi-threaded test body becomes a
+//! *deterministic function of a seed*. [`explore`] runs the body under
+//! many seeds (each a different interleaving, with PCT-style random
+//! preemptions); a failing schedule panics with the seed that produced
+//! it, and re-running with that seed replays the exact interleaving:
+//!
+//! ```text
+//! MODELCHECK_SEED=12345 cargo test --features modelcheck -p cft-rag <test>
+//! ```
+//!
+//! What counts as a failure:
+//! * an assertion/panic anywhere in the model body or its vthreads,
+//! * a deadlock — every vthread parked with no timeout to fire
+//!   (reported with each vthread's name and what it waits on),
+//! * a livelock — the schedule exceeds [`Config::max_steps`].
+//!
+//! Timeouts (`sleep`, `recv_timeout`, bounded submit waits) use
+//! **virtual time**: a timeout only fires when no vthread can run, so
+//! schedules are instant regardless of wall-clock durations and a
+//! 5-second production timeout costs nothing to model.
+//!
+//! See `docs/TESTING.md` for where this sits in the verification
+//! pyramid, and `tests/modelcheck_schedules.rs` for the schedule suite
+//! covering the historical bug classes (PR-1 migration entry loss,
+//! PR-2 generation/maintenance races, batcher submit-vs-stop).
+
+#![warn(missing_debug_implementations)]
+
+mod scheduler;
+
+pub(crate) use scheduler::{managed, Shared, RES_SLEEP};
+
+/// Exploration parameters. `Default` is sized for the in-tree schedule
+/// suite: 64 seeds, 3 forced preemptions per schedule.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// How many seeds (schedules) [`explore`] tries.
+    pub iterations: u64,
+    /// PCT depth: forced demotions of the running vthread per schedule.
+    /// Depth *d* catches bugs needing *d* "unlucky" preemptions.
+    pub preemption_depth: u32,
+    /// Step range the preemption points are sampled from. Keep within
+    /// the same order of magnitude as the schedule's real step count so
+    /// the forced preemptions actually land inside the run.
+    pub change_window: u64,
+    /// Abort threshold: a schedule still running after this many sync
+    /// steps is reported as a livelock.
+    pub max_steps: u64,
+    /// Base seed; per-iteration seeds derive from it deterministically.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            iterations: 64,
+            preemption_depth: 3,
+            change_window: 512,
+            max_steps: 200_000,
+            seed: 0xCF7_4A61,
+        }
+    }
+}
+
+/// A failing schedule: the seed to replay plus the report (panic
+/// message, or the deadlock/livelock description).
+#[derive(Clone, Debug)]
+pub struct Failure {
+    /// Seed that produced the failing interleaving.
+    pub seed: u64,
+    /// What went wrong under that schedule.
+    pub report: String,
+}
+
+impl std::fmt::Display for Failure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "seed {}: {}", self.seed, self.report)
+    }
+}
+
+/// Run `body` under exactly one seed. The deterministic replay entry
+/// point: same seed, same interleaving, same outcome.
+pub fn run_one(cfg: &Config, seed: u64, body: impl Fn()) -> Result<(), Failure> {
+    scheduler::run(cfg, seed, &body).map_err(|report| Failure { seed, report })
+}
+
+/// Like [`explore`], but returns the first failure instead of
+/// panicking (for tests asserting that the checker *catches* a bug).
+/// `Ok(n)` reports how many schedules ran clean.
+pub fn try_explore(
+    cfg: &Config,
+    body: impl Fn(),
+) -> Result<u64, Failure> {
+    if let Ok(v) = std::env::var("MODELCHECK_SEED") {
+        let seed: u64 = v
+            .parse()
+            .unwrap_or_else(|_| panic!("MODELCHECK_SEED={v:?} is not a u64"));
+        run_one(cfg, seed, body)?;
+        return Ok(1);
+    }
+    let iterations = std::env::var("MODELCHECK_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cfg.iterations);
+    let mut stream = cfg.seed;
+    for _ in 0..iterations {
+        let seed = crate::util::rng::splitmix64(&mut stream);
+        run_one(cfg, seed, &body)?;
+    }
+    Ok(iterations)
+}
+
+/// Explore `cfg.iterations` schedules of `body` (`name` labels the
+/// failure report). Panics on the first failing schedule with the seed
+/// and the exact command line that replays it. Honors two env vars:
+/// `MODELCHECK_SEED` (replay a single seed) and `MODELCHECK_ITERS`
+/// (override the iteration count, e.g. a deeper nightly run).
+pub fn explore(name: &str, cfg: &Config, body: impl Fn()) {
+    if let Err(f) = try_explore(cfg, body) {
+        panic!(
+            "[{name}] schedule failed under seed {}:\n{}\n\
+             replay: MODELCHECK_SEED={} cargo test --features modelcheck \
+             -p cft-rag {name}",
+            f.seed, f.report, f.seed
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::atomic::{AtomicU32, Ordering::SeqCst};
+    use crate::sync::mpsc::{channel, sync_channel, RecvTimeoutError};
+    use crate::sync::{thread, Arc, Mutex};
+    use std::time::Duration;
+
+    fn quick(iterations: u64, window: u64) -> Config {
+        Config {
+            iterations,
+            change_window: window,
+            max_steps: 20_000,
+            ..Config::default()
+        }
+    }
+
+    /// Self-lock is a deadlock under every schedule: the detector must
+    /// fire on the very first seed and name the parked resource.
+    #[test]
+    fn detects_self_deadlock_deterministically() {
+        let f = try_explore(&quick(1, 16), || {
+            let m = Mutex::new(0u32);
+            let _g1 = m.lock().unwrap();
+            let _g2 = m.lock().unwrap(); // never acquirable
+        })
+        .expect_err("self-lock must deadlock");
+        assert!(f.report.contains("deadlock"), "report: {}", f.report);
+        assert!(f.report.contains("mutex"), "report: {}", f.report);
+    }
+
+    /// The classic ABBA deadlock, forced by a channel handshake so
+    /// *every* schedule reaches the cycle: both vthreads hold one lock
+    /// before either asks for the second.
+    #[test]
+    fn detects_lock_order_inversion() {
+        let f = try_explore(&quick(2, 64), || {
+            let a = Arc::new(Mutex::new(()));
+            let b = Arc::new(Mutex::new(()));
+            let (ready_tx, ready_rx) = channel::<()>();
+            let (go_tx, go_rx) = channel::<()>();
+            let worker = {
+                let (a, b) = (Arc::clone(&a), Arc::clone(&b));
+                thread::spawn(move || {
+                    let _ga = a.lock().unwrap();
+                    ready_tx.send(()).unwrap();
+                    go_rx.recv().unwrap();
+                    let _gb = b.lock().unwrap(); // A then B
+                })
+            };
+            ready_rx.recv().unwrap();
+            let _gb = b.lock().unwrap();
+            go_tx.send(()).unwrap();
+            let _ga = a.lock().unwrap(); // B then A
+            drop(_ga);
+            drop(_gb);
+            worker.join().unwrap();
+        })
+        .expect_err("ABBA inversion must deadlock under every schedule");
+        assert!(f.report.contains("deadlock"), "report: {}", f.report);
+    }
+
+    /// A load-then-store "increment" is not atomic; exploration must
+    /// find the interleaving where one update is lost. This is the
+    /// checker's own canary: if preemption sampling regresses, this
+    /// test stops failing-in-the-model and starts failing-for-real.
+    #[test]
+    fn finds_lost_update_interleaving() {
+        let f = try_explore(&quick(512, 24), || {
+            let n = Arc::new(AtomicU32::new(0));
+            let workers: Vec<_> = (0..2)
+                .map(|_| {
+                    let n = Arc::clone(&n);
+                    thread::spawn(move || {
+                        let v = n.load(SeqCst);
+                        n.store(v + 1, SeqCst); // racy read-modify-write
+                    })
+                })
+                .collect();
+            for w in workers {
+                w.join().unwrap();
+            }
+            assert_eq!(n.load(SeqCst), 2, "an increment was lost");
+        })
+        .expect_err("the lost-update schedule must be found");
+        assert!(f.report.contains("increment was lost"), "{}", f.report);
+    }
+
+    /// Replaying the failing seed reproduces the identical failure —
+    /// the contract the printed `MODELCHECK_SEED=` line relies on.
+    #[test]
+    fn failing_seed_replays_identically() {
+        let cfg = quick(512, 24);
+        let body = || {
+            let n = Arc::new(AtomicU32::new(0));
+            let workers: Vec<_> = (0..2)
+                .map(|_| {
+                    let n = Arc::clone(&n);
+                    thread::spawn(move || {
+                        let v = n.load(SeqCst);
+                        n.store(v + 1, SeqCst);
+                    })
+                })
+                .collect();
+            for w in workers {
+                w.join().unwrap();
+            }
+            assert_eq!(n.load(SeqCst), 2, "an increment was lost");
+        };
+        let first = try_explore(&cfg, body).expect_err("must fail");
+        let again =
+            run_one(&cfg, first.seed, body).expect_err("replay must fail");
+        assert_eq!(first.seed, again.seed);
+        assert_eq!(first.report, again.report, "replay diverged");
+    }
+
+    /// Virtual time: sleeps complete in deadline order, not spawn or
+    /// priority order, and cost no wall-clock time.
+    #[test]
+    fn virtual_time_orders_sleeps_by_deadline() {
+        explore("virtual_time_orders_sleeps_by_deadline", &quick(16, 64), || {
+            // std Mutex on purpose: bookkeeping the scheduler must not
+            // see (no yield points inside the critical section).
+            let log = Arc::new(std::sync::Mutex::new(Vec::new()));
+            let slow = {
+                let log = Arc::clone(&log);
+                thread::spawn(move || {
+                    thread::sleep(Duration::from_millis(50));
+                    log.lock().unwrap().push("slow");
+                })
+            };
+            let fast = {
+                let log = Arc::clone(&log);
+                thread::spawn(move || {
+                    thread::sleep(Duration::from_millis(1));
+                    log.lock().unwrap().push("fast");
+                })
+            };
+            fast.join().unwrap();
+            slow.join().unwrap();
+            assert_eq!(*log.lock().unwrap(), vec!["fast", "slow"]);
+        });
+    }
+
+    /// Bounded channels: FIFO order survives every schedule, a full
+    /// queue blocks the sender until the consumer drains, and
+    /// `recv_timeout` distinguishes Timeout from Disconnected.
+    #[test]
+    fn bounded_channel_semantics_hold_under_all_schedules() {
+        explore(
+            "bounded_channel_semantics_hold_under_all_schedules",
+            &quick(32, 128),
+            || {
+                let (tx, rx) = sync_channel::<u32>(1);
+                let producer = thread::spawn(move || {
+                    for i in 0..4 {
+                        tx.send(i).unwrap(); // blocks while full
+                    }
+                });
+                let mut got = Vec::new();
+                for _ in 0..4 {
+                    got.push(rx.recv().unwrap());
+                }
+                producer.join().unwrap();
+                assert_eq!(got, vec![0, 1, 2, 3]);
+                // all senders gone -> Disconnected, not Timeout
+                assert!(matches!(
+                    rx.recv_timeout(Duration::from_millis(5)),
+                    Err(RecvTimeoutError::Disconnected)
+                ));
+
+                // a live-but-slow sender -> Timeout at the virtual
+                // deadline (instant in wall-clock terms)
+                let (tx2, rx2) = sync_channel::<u32>(1);
+                let late = thread::spawn(move || {
+                    thread::sleep(Duration::from_millis(60));
+                    let _ = tx2.send(7);
+                });
+                assert!(matches!(
+                    rx2.recv_timeout(Duration::from_millis(5)),
+                    Err(RecvTimeoutError::Timeout)
+                ));
+                assert_eq!(rx2.recv().unwrap(), 7);
+                late.join().unwrap();
+            },
+        );
+    }
+}

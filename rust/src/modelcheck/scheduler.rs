@@ -1,0 +1,520 @@
+//! The cooperative scheduler behind `--features modelcheck`.
+//!
+//! One *virtual thread* (vthread) runs at a time: every vthread is a
+//! real OS thread, but all of them block on a single master
+//! mutex/condvar pair and only the thread whose id equals
+//! `State::active` makes progress. The shim primitives in `crate::sync`
+//! call [`Shared::yield_point`] before every acquire/load/store/send,
+//! which is where the scheduler may preempt — so a whole schedule is a
+//! deterministic function of the seed, and a failing interleaving can
+//! be replayed exactly by re-running that seed.
+//!
+//! Scheduling policy is PCT-style (Burckhardt et al., "A Randomized
+//! Scheduler with Probabilistic Guarantees of Finding Bugs"): each
+//! vthread gets a random priority at spawn, the highest-priority
+//! runnable vthread always runs, and at `preemption_depth` randomly
+//! chosen step indices the running vthread is demoted below every
+//! priority handed out so far. Blocking (locks, channels, joins) is
+//! modeled logically: a vthread that cannot proceed parks itself and
+//! the scheduler picks the next runnable one; when *nothing* is
+//! runnable the scheduler either advances virtual time to the earliest
+//! sleep/timeout deadline or — if no deadline exists — declares a
+//! deadlock and reports every vthread's parked state.
+
+use std::any::Any;
+use std::cell::{Cell, RefCell};
+use std::cmp::Reverse;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Once};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+use super::Config;
+
+/// What a finished vthread left behind (its closure's boxed return
+/// value, or the panic payload).
+pub(crate) type ThreadResult =
+    std::thread::Result<Box<dyn Any + Send + 'static>>;
+
+/// Resource id for pure sleeps: nothing ever wakes it, only virtual
+/// time. Real resources use heap addresses (never this small).
+pub(crate) const RES_SLEEP: usize = 0;
+/// Resource the controller thread parks on while waiting for every
+/// spawned vthread to finish; woken on each vthread exit.
+pub(crate) const RES_ALL_DONE: usize = 1;
+/// Join waits use `RES_JOIN_BASE + vtid` — still far below any valid
+/// heap address, so they cannot collide with address-derived ids.
+const RES_JOIN_BASE: usize = 0x10;
+
+fn res_join(vtid: usize) -> usize {
+    RES_JOIN_BASE + vtid
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    Runnable,
+    Blocked,
+    Finished,
+}
+
+struct VThread {
+    status: Status,
+    /// Meaningful only while `status == Blocked`.
+    resource: usize,
+    /// Virtual-time deadline (ns) after which a blocked vthread becomes
+    /// runnable again even without a wake (sleeps, `recv_timeout`).
+    deadline: Option<u128>,
+    /// Human label for deadlock reports ("mutex", "channel-recv", ...).
+    waiting_on: &'static str,
+    priority: u64,
+    name: String,
+    result: Option<ThreadResult>,
+}
+
+pub(crate) struct State {
+    rng: Rng,
+    threads: Vec<VThread>,
+    active: usize,
+    steps: u64,
+    max_steps: u64,
+    /// Sorted step indices at which the running vthread is demoted.
+    change_points: Vec<u64>,
+    /// Decreasing counter for demoted priorities: always below every
+    /// initial priority (which start at `PRIORITY_FLOOR`).
+    next_demotion: u64,
+    now_ns: u128,
+    failure: Option<String>,
+}
+
+/// Initial priorities live in `[FLOOR, FLOOR + 2^32)`; demotions count
+/// down from `FLOOR - 1`, so a demoted vthread ranks below everyone.
+const PRIORITY_FLOOR: u64 = 1 << 32;
+
+impl State {
+    fn new(cfg: &Config, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut change_points: Vec<u64> = (0..cfg.preemption_depth)
+            .map(|_| 1 + rng.below(cfg.change_window.max(1)))
+            .collect();
+        change_points.sort_unstable();
+        change_points.dedup();
+        State {
+            rng,
+            threads: Vec::new(),
+            active: 0,
+            steps: 0,
+            max_steps: cfg.max_steps,
+            change_points,
+            next_demotion: PRIORITY_FLOOR - 1,
+            now_ns: 0,
+            failure: None,
+        }
+    }
+
+    fn draw_priority(&mut self) -> u64 {
+        PRIORITY_FLOOR + (self.rng.next_u64() >> 32)
+    }
+
+    fn register(&mut self, name: String) -> usize {
+        let vtid = self.threads.len();
+        let priority = self.draw_priority();
+        self.threads.push(VThread {
+            status: Status::Runnable,
+            resource: RES_SLEEP,
+            deadline: None,
+            waiting_on: "",
+            priority,
+            name,
+            result: None,
+        });
+        vtid
+    }
+}
+
+/// Master scheduler state shared by every vthread of one schedule run.
+pub(crate) struct Shared {
+    state: Mutex<State>,
+    cv: Condvar,
+    os_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// The seed this schedule runs under (for failure messages).
+    pub(crate) seed: u64,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<Shared>, usize)>> =
+        const { RefCell::new(None) };
+    /// Set right before an abort panic so the quiet hook suppresses the
+    /// (expected, uninformative) "schedule aborted" unwind spam.
+    static QUIET_PANIC: Cell<bool> = const { Cell::new(false) };
+}
+
+/// The scheduler handle + vthread id of the calling thread, when it is
+/// part of a model run. The shim primitives branch on this: `None`
+/// means "behave exactly like std".
+pub(crate) fn managed() -> Option<(Arc<Shared>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+static INSTALL_QUIET_HOOK: Once = Once::new();
+
+/// Install (once, process-wide) a panic hook that suppresses output for
+/// our own schedule-abort panics — keyed on a thread-local flag, so
+/// genuine assertion failures in other tests keep printing normally.
+fn install_quiet_hook() {
+    INSTALL_QUIET_HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if !QUIET_PANIC.with(Cell::get) {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Unwind out of arbitrary user code when the schedule has failed
+/// elsewhere; caught by the vthread wrapper (or `run`).
+fn abort_schedule() -> ! {
+    QUIET_PANIC.with(|q| q.set(true));
+    panic!("modelcheck: schedule aborted");
+}
+
+fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+impl Shared {
+    fn lock_state(&self) -> MutexGuard<'_, State> {
+        // A vthread that panics between yield points never holds this
+        // mutex, but be tolerant anyway: the state stays consistent.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// One scheduling step: charge a step, maybe demote (PCT change
+    /// point), hand the CPU to the highest-priority runnable vthread,
+    /// and wait until this vthread is scheduled again.
+    pub(crate) fn yield_point(&self, vtid: usize) {
+        let mut st = self.lock_state();
+        if st.failure.is_some() {
+            drop(st);
+            abort_schedule();
+        }
+        st.steps += 1;
+        if st.steps >= st.max_steps {
+            st.failure = Some(format!(
+                "exceeded max_steps={} — livelock, or raise \
+                 Config::max_steps",
+                st.max_steps
+            ));
+            self.cv.notify_all();
+            drop(st);
+            abort_schedule();
+        }
+        if st.change_points.binary_search(&st.steps).is_ok() {
+            let demoted = st.next_demotion;
+            st.next_demotion -= 1;
+            st.threads[vtid].priority = demoted;
+        }
+        self.reschedule(&mut st);
+        self.wait_for_turn(st, vtid);
+    }
+
+    /// Park this vthread on `resource` (optionally with a virtual-time
+    /// deadline) and run someone else. Returns when rescheduled — the
+    /// caller re-checks its condition in a loop, condvar-style.
+    pub(crate) fn block(
+        &self,
+        vtid: usize,
+        resource: usize,
+        waiting_on: &'static str,
+        timeout: Option<Duration>,
+    ) {
+        let mut st = self.lock_state();
+        if st.failure.is_some() {
+            drop(st);
+            abort_schedule();
+        }
+        let deadline = timeout.map(|d| st.now_ns + d.as_nanos());
+        let t = &mut st.threads[vtid];
+        t.status = Status::Blocked;
+        t.resource = resource;
+        t.deadline = deadline;
+        t.waiting_on = waiting_on;
+        self.reschedule(&mut st);
+        self.wait_for_turn(st, vtid);
+    }
+
+    /// Mark every vthread parked on `resource` runnable. The caller
+    /// keeps the CPU until its next yield point (wakes are not
+    /// preemption points themselves — the yield before the *next* sync
+    /// op is).
+    pub(crate) fn wake(&self, resource: usize) {
+        if resource == RES_SLEEP {
+            return;
+        }
+        let mut st = self.lock_state();
+        for t in &mut st.threads {
+            if t.status == Status::Blocked && t.resource == resource {
+                t.status = Status::Runnable;
+                t.deadline = None;
+            }
+        }
+    }
+
+    /// Current virtual time (ns since the schedule started).
+    pub(crate) fn now_ns(&self) -> u128 {
+        self.lock_state().now_ns
+    }
+
+    /// Pick the next vthread. Called with the state lock held, by the
+    /// thread that currently owns the CPU.
+    fn reschedule(&self, st: &mut State) {
+        let next = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == Status::Runnable)
+            .max_by_key(|(i, t)| (t.priority, Reverse(*i)))
+            .map(|(i, _)| i);
+        match next {
+            Some(i) => st.active = i,
+            None => self.no_runnable(st),
+        }
+        self.cv.notify_all();
+    }
+
+    /// Nothing is runnable: advance virtual time to the earliest
+    /// deadline, or — with every vthread parked indefinitely — declare
+    /// a deadlock.
+    fn no_runnable(&self, st: &mut State) {
+        let earliest = st
+            .threads
+            .iter()
+            .filter(|t| t.status == Status::Blocked)
+            .filter_map(|t| t.deadline)
+            .min();
+        if let Some(deadline) = earliest {
+            st.now_ns = st.now_ns.max(deadline);
+            let now = st.now_ns;
+            for t in &mut st.threads {
+                if t.status == Status::Blocked
+                    && t.deadline.is_some_and(|d| d <= now)
+                {
+                    t.status = Status::Runnable;
+                    t.deadline = None;
+                }
+            }
+            self.reschedule(st);
+            return;
+        }
+        if st.threads.iter().all(|t| t.status == Status::Finished) {
+            // Schedule over; `run` notices on its own.
+            return;
+        }
+        let mut lines = vec![format!(
+            "deadlock: every virtual thread is parked (step {}, seed {})",
+            st.steps, self.seed
+        )];
+        for (i, t) in st.threads.iter().enumerate() {
+            lines.push(match t.status {
+                Status::Blocked => format!(
+                    "  vthread {i} '{}': blocked on {} (resource {:#x})",
+                    t.name, t.waiting_on, t.resource
+                ),
+                Status::Finished => {
+                    format!("  vthread {i} '{}': finished", t.name)
+                }
+                Status::Runnable => {
+                    format!("  vthread {i} '{}': runnable (?)", t.name)
+                }
+            });
+        }
+        st.failure = Some(lines.join("\n"));
+    }
+
+    /// Block until this vthread owns the CPU (or the schedule failed,
+    /// in which case unwind).
+    fn wait_for_turn(&self, mut st: MutexGuard<'_, State>, vtid: usize) {
+        loop {
+            if st.failure.is_some() {
+                drop(st);
+                abort_schedule();
+            }
+            if st.active == vtid {
+                return;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Spawn a vthread running `body`; it first waits to be scheduled,
+    /// so the spawner keeps the CPU. Returns the new vthread id.
+    pub(crate) fn spawn_vthread(
+        self: &Arc<Self>,
+        name: Option<String>,
+        body: Box<dyn FnOnce() -> Box<dyn Any + Send + 'static> + Send>,
+    ) -> usize {
+        let vtid = {
+            let mut st = self.lock_state();
+            let n = st.threads.len();
+            st.register(name.unwrap_or_else(|| format!("vthread-{n}")))
+        };
+        let shared = Arc::clone(self);
+        let handle = std::thread::Builder::new()
+            .name(format!("modelcheck-v{vtid}"))
+            .spawn(move || {
+                CURRENT.with(|c| {
+                    *c.borrow_mut() = Some((Arc::clone(&shared), vtid));
+                });
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    let st = shared.lock_state();
+                    shared.wait_for_turn(st, vtid);
+                    body()
+                }));
+                shared.finish_vthread(vtid, result);
+                CURRENT.with(|c| *c.borrow_mut() = None);
+            })
+            .expect("spawn modelcheck vthread");
+        self.os_handles
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(handle);
+        vtid
+    }
+
+    fn finish_vthread(&self, vtid: usize, result: ThreadResult) {
+        let mut st = self.lock_state();
+        if let Err(payload) = &result {
+            if st.failure.is_none() {
+                st.failure = Some(format!(
+                    "vthread {vtid} '{}' panicked: {}",
+                    st.threads[vtid].name,
+                    panic_message(payload.as_ref())
+                ));
+            }
+        }
+        st.threads[vtid].status = Status::Finished;
+        st.threads[vtid].result = Some(result);
+        let join_res = res_join(vtid);
+        for t in &mut st.threads {
+            if t.status == Status::Blocked
+                && (t.resource == join_res || t.resource == RES_ALL_DONE)
+            {
+                t.status = Status::Runnable;
+                t.deadline = None;
+            }
+        }
+        if st.failure.is_some() {
+            self.cv.notify_all();
+            return;
+        }
+        self.reschedule(&mut st);
+    }
+
+    /// Wait for `target` to finish and take its result (`me` is the
+    /// calling vthread).
+    pub(crate) fn join_vthread(
+        &self,
+        me: usize,
+        target: usize,
+    ) -> ThreadResult {
+        loop {
+            self.yield_point(me);
+            {
+                let mut st = self.lock_state();
+                if st.threads[target].status == Status::Finished {
+                    return st.threads[target]
+                        .result
+                        .take()
+                        .expect("vthread result already taken");
+                }
+            }
+            self.block(me, res_join(target), "join", None);
+        }
+    }
+
+    /// Has every vthread other than the controller (vtid 0) finished?
+    fn workers_done(&self) -> bool {
+        self.lock_state()
+            .threads
+            .iter()
+            .skip(1)
+            .all(|t| t.status == Status::Finished)
+    }
+}
+
+/// Execute one schedule of `body` under `seed`. Returns the failure
+/// report (deadlock, panic, livelock) or `Ok(())`.
+pub(crate) fn run(
+    cfg: &Config,
+    seed: u64,
+    body: &dyn Fn(),
+) -> Result<(), String> {
+    install_quiet_hook();
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State::new(cfg, seed)),
+        cv: Condvar::new(),
+        os_handles: Mutex::new(Vec::new()),
+        seed,
+    });
+    {
+        let mut st = shared.lock_state();
+        let vtid = st.register("main".to_string());
+        debug_assert_eq!(vtid, 0);
+        st.active = 0;
+    }
+    CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&shared), 0)));
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        body();
+        // Drain detached vthreads: the schedule is only over when every
+        // spawned vthread has finished (or everything deadlocked).
+        while !shared.workers_done() {
+            shared.block(0, RES_ALL_DONE, "all-done", None);
+        }
+    }));
+    CURRENT.with(|c| *c.borrow_mut() = None);
+    QUIET_PANIC.with(|q| q.set(false));
+    let failure = {
+        let mut st = shared.lock_state();
+        if let Err(payload) = &outcome {
+            if st.failure.is_none() {
+                st.failure = Some(format!(
+                    "main schedule thread panicked: {}",
+                    panic_message(payload.as_ref())
+                ));
+            }
+        }
+        st.threads[0].status = Status::Finished;
+        let f = st.failure.clone();
+        if f.is_some() {
+            // Unpark everyone so they observe the failure and unwind.
+            for t in &mut st.threads {
+                if t.status == Status::Blocked {
+                    t.status = Status::Runnable;
+                }
+            }
+            st.active = usize::MAX;
+            shared.cv.notify_all();
+        }
+        f
+    };
+    let handles = std::mem::take(
+        &mut *shared
+            .os_handles
+            .lock()
+            .unwrap_or_else(|e| e.into_inner()),
+    );
+    for h in handles {
+        let _ = h.join();
+    }
+    match failure {
+        Some(msg) => Err(msg),
+        None => Ok(()),
+    }
+}

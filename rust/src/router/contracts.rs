@@ -1,0 +1,344 @@
+//! Executable elasticity contracts.
+//!
+//! ROADMAP.md records five elasticity invariants the router and
+//! coordinator must keep. This module turns each one into a *named,
+//! checkable assertion* wired into the code paths that could break it
+//! (`rebalance.rs`, `ring.rs`, `scatter.rs`), so a regression fails a
+//! test with the invariant's name instead of surfacing three layers
+//! later as a lost key.
+//!
+//! The checks are **gated**: they run under `debug_assertions` (so
+//! every `cargo test` exercises them) and under `--features contracts`
+//! (to force them into a release build, e.g. a soak run); a default
+//! release build compiles them out entirely. Each checker returns
+//! immediately when disabled — no argument is inspected — so the
+//! serving hot path pays nothing.
+//!
+//! The names, in ROADMAP order:
+//!
+//! | constant | invariant |
+//! |---|---|
+//! | [`SERVING_SET_FULLY_INDEXED`] | (1) every key's serving set is fully indexed at every instant |
+//! | [`EPOCH_GATED_MEMBERSHIP`] | (2) membership changes are numbered by partition epoch and gated by the [`EpochGate`](crate::router::health::EpochGate) |
+//! | [`MINIMAL_KEY_MOVEMENT`] | (3) a join/drain moves exactly the keys whose serving set changed |
+//! | [`DUAL_WRITE_COVERAGE`] | (4) dynamic writes are idempotent and dual-applied across an in-flight rebalance |
+//! | [`SINGLE_FLIGHT_REBALANCE`] | (5) one rebalance at a time, and a failed rebalance changes nothing |
+
+use crate::filter::fingerprint::entity_key;
+use crate::router::health::EpochGate;
+use crate::router::rebalance::{serving_addrs, serving_set, RingState};
+use crate::router::ring::ShardRing;
+
+/// Invariant (1): every key's serving set is fully indexed at every
+/// instant. Checked as: a rebalance plan warms/hands off **every** key
+/// whose serving set the new epoch changes (no newly assigned key goes
+/// unstreamed), and a replica set never silently under-replicates.
+pub const SERVING_SET_FULLY_INDEXED: &str = "serving-set-fully-indexed";
+
+/// Invariant (2): membership changes are numbered by partition epoch
+/// (each rebalance is exactly `epoch + 1`) and the epoch gate accepts
+/// precisely the epochs the roll is in — both during the dual-write
+/// window and after commit.
+pub const EPOCH_GATED_MEMBERSHIP: &str = "epoch-gated-membership";
+
+/// Invariant (3): a join/drain moves exactly the keys whose serving
+/// set changed — a key that kept its serving set is never streamed.
+pub const MINIMAL_KEY_MOVEMENT: &str = "minimal-key-movement";
+
+/// Invariant (4): across an in-flight rebalance, a dynamic write
+/// reaches every backend of the **incoming** epoch's serving set too
+/// (as current-target ack or pending-extra dual write).
+pub const DUAL_WRITE_COVERAGE: &str = "dual-write-coverage";
+
+/// Invariant (5): one rebalance at a time, and a failed rebalance
+/// leaves the serving membership exactly as it found it.
+pub const SINGLE_FLIGHT_REBALANCE: &str = "single-flight-rebalance";
+
+/// All five contract names, in ROADMAP order — what the integration
+/// suite enumerates to prove the contracts exist and are spelled
+/// consistently.
+pub const ALL: [&str; 5] = [
+    SERVING_SET_FULLY_INDEXED,
+    EPOCH_GATED_MEMBERSHIP,
+    MINIMAL_KEY_MOVEMENT,
+    DUAL_WRITE_COVERAGE,
+    SINGLE_FLIGHT_REBALANCE,
+];
+
+/// Whether contract checks run in this build: every debug/test build,
+/// plus release builds compiled with `--features contracts`.
+#[inline]
+pub fn enabled() -> bool {
+    cfg!(any(debug_assertions, feature = "contracts"))
+}
+
+/// Assert one contract. `detail` is only evaluated on violation.
+#[track_caller]
+pub fn check(name: &str, ok: bool, detail: impl FnOnce() -> String) {
+    if enabled() && !ok {
+        panic!("elasticity contract violated [{name}]: {}", detail());
+    }
+}
+
+/// Contracts (1) + (3), checked against a rebalance **plan**: `moved`
+/// must be exactly the vocabulary keys whose serving *addresses*
+/// differ between the outgoing and incoming rings.
+///
+/// * a changed key missing from `moved` would serve unindexed after
+///   the roll — [`SERVING_SET_FULLY_INDEXED`];
+/// * an unchanged key present in `moved` is pointless churn the
+///   minimal-disruption design promises never happens —
+///   [`MINIMAL_KEY_MOVEMENT`].
+pub fn check_movement_plan(
+    vocab: &[String],
+    old_ring: &ShardRing,
+    new_ring: &ShardRing,
+    replication: usize,
+    moved: &[&String],
+) {
+    if !enabled() {
+        return;
+    }
+    let moved_set: std::collections::HashSet<&str> =
+        moved.iter().map(|s| s.as_str()).collect();
+    for name in vocab {
+        let key = entity_key(name);
+        let changed = serving_addrs(old_ring, replication, key)
+            != serving_addrs(new_ring, replication, key);
+        if changed {
+            check(SERVING_SET_FULLY_INDEXED, moved_set.contains(name.as_str()), || {
+                format!(
+                    "key {name:?} changes its serving set in the next \
+                     epoch but is not planned for warm-up/handoff"
+                )
+            });
+        } else {
+            check(MINIMAL_KEY_MOVEMENT, !moved_set.contains(name.as_str()), || {
+                format!(
+                    "key {name:?} keeps its serving set yet is planned \
+                     to move"
+                )
+            });
+        }
+    }
+}
+
+/// Contract (2) at window-open plus contract (5)'s single-flight half:
+/// the outgoing generation has no rebalance in flight, the incoming
+/// epoch is exactly `current + 1`, and after [`EpochGate::open`] the
+/// gate accepts both epochs of the roll.
+pub fn check_window_open(
+    current: &RingState,
+    pending_epoch: u64,
+    gate: &EpochGate,
+) {
+    if !enabled() {
+        return;
+    }
+    check(SINGLE_FLIGHT_REBALANCE, current.pending.is_none(), || {
+        format!(
+            "opening a dual-write window at epoch {pending_epoch} while \
+             another rebalance is pending"
+        )
+    });
+    check(EPOCH_GATED_MEMBERSHIP, pending_epoch == current.epoch + 1, || {
+        format!(
+            "membership change must be numbered {} (current epoch + 1), \
+             got {pending_epoch}",
+            current.epoch + 1
+        )
+    });
+    check(
+        EPOCH_GATED_MEMBERSHIP,
+        gate.accepts(current.epoch) && gate.accepts(pending_epoch),
+        || {
+            format!(
+                "during the roll the gate must accept both epoch {} and \
+                 epoch {pending_epoch}",
+                current.epoch
+            )
+        },
+    );
+}
+
+/// Contract (2) at commit: the gate was opened for this epoch, and
+/// after [`EpochGate::commit`] it serves exactly this epoch (stale
+/// members now fail probes). Call with `committed = false` before the
+/// swap and `committed = true` after.
+pub fn check_commit(gate: &EpochGate, epoch: u64, committed: bool) {
+    if !enabled() {
+        return;
+    }
+    if committed {
+        check(EPOCH_GATED_MEMBERSHIP, gate.current() == epoch, || {
+            format!(
+                "after commit the gate must serve epoch {epoch}, it \
+                 serves {}",
+                gate.current()
+            )
+        });
+    } else {
+        check(EPOCH_GATED_MEMBERSHIP, gate.accepts(epoch), || {
+            format!(
+                "committing epoch {epoch} which the gate never accepted \
+                 (window was not opened)"
+            )
+        });
+    }
+}
+
+/// Contract (5), abort half: a failed rebalance changes nothing — the
+/// serving epoch, the member addresses, and the (now absent) pending
+/// state all match the pre-rebalance snapshot.
+pub fn check_abort_unchanged(before: &RingState, after: &RingState) {
+    if !enabled() {
+        return;
+    }
+    check(SINGLE_FLIGHT_REBALANCE, after.pending.is_none(), || {
+        "aborted rebalance left a pending generation installed".into()
+    });
+    check(
+        SINGLE_FLIGHT_REBALANCE,
+        after.epoch == before.epoch && after.addresses() == before.addresses(),
+        || {
+            format!(
+                "aborted rebalance changed the serving membership: epoch \
+                 {} -> {}, members {:?} -> {:?}",
+                before.epoch,
+                after.epoch,
+                before.addresses(),
+                after.addresses()
+            )
+        },
+    );
+}
+
+/// Contract (4): while a rebalance is in flight, the write fan-out for
+/// `key` covers every backend of the **pending** epoch's serving set —
+/// either as a current-epoch target or as a dual-write extra.
+/// `covered` answers "does this fan-out reach address `a`?".
+pub fn check_dual_write_coverage(
+    pending_ring: &ShardRing,
+    replication: usize,
+    key: u64,
+    covered: impl Fn(&str) -> bool,
+) {
+    if !enabled() {
+        return;
+    }
+    for i in serving_set(pending_ring, replication, key) {
+        let addr = pending_ring.name(i);
+        check(DUAL_WRITE_COVERAGE, covered(addr), || {
+            format!(
+                "mid-rebalance write misses {addr}, a member of the \
+                 incoming epoch's serving set for this key"
+            )
+        });
+    }
+}
+
+/// Contract (1), replica-set half: a serving replica set must hold
+/// `min(max(r,1), ring len)` **distinct** members — duplicates or a
+/// short set would silently under-replicate every key it serves.
+pub fn check_replica_set(ring_len: usize, r: usize, set: &[usize]) {
+    if !enabled() {
+        return;
+    }
+    check(
+        SERVING_SET_FULLY_INDEXED,
+        set.len() == r.max(1).min(ring_len),
+        || {
+            format!(
+                "replica set size {} for r={r} on a {ring_len}-member ring",
+                set.len()
+            )
+        },
+    );
+    let distinct: std::collections::HashSet<usize> =
+        set.iter().copied().collect();
+    check(SERVING_SET_FULLY_INDEXED, distinct.len() == set.len(), || {
+        format!("replica set {set:?} contains duplicate members")
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(n: usize) -> ShardRing {
+        ShardRing::new((0..n).map(|i| format!("b{i}")))
+    }
+
+    #[test]
+    fn contracts_run_in_test_builds() {
+        assert!(enabled(), "debug/test builds must enforce the contracts");
+        assert_eq!(ALL.len(), 5);
+    }
+
+    #[test]
+    fn movement_plan_flags_missing_and_spurious_keys() {
+        let old = ring(2);
+        let new = ShardRing::new(["b0", "b1", "b2"].map(String::from));
+        let vocab: Vec<String> =
+            (0..64).map(|i| format!("entity-{i}")).collect();
+        // the correct plan: exactly the keys whose serving set changed
+        let correct: Vec<&String> = vocab
+            .iter()
+            .filter(|n| {
+                serving_addrs(&old, 1, entity_key(n))
+                    != serving_addrs(&new, 1, entity_key(n))
+            })
+            .collect();
+        assert!(!correct.is_empty(), "a 3rd member must win some keys");
+        check_movement_plan(&vocab, &old, &new, 1, &correct);
+
+        // dropping one changed key violates (1)
+        let short = &correct[1..];
+        let err = std::panic::catch_unwind(|| {
+            check_movement_plan(&vocab, &old, &new, 1, short)
+        })
+        .expect_err("under-planned move must violate the contract");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains(SERVING_SET_FULLY_INDEXED), "{msg}");
+
+        // adding an unchanged key violates (3)
+        let unchanged = vocab
+            .iter()
+            .find(|n| !correct.iter().any(|c| c == n))
+            .expect("some key keeps its serving set");
+        let mut over = correct.clone();
+        over.push(unchanged);
+        let err = std::panic::catch_unwind(|| {
+            check_movement_plan(&vocab, &old, &new, 1, &over)
+        })
+        .expect_err("over-planned move must violate the contract");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains(MINIMAL_KEY_MOVEMENT), "{msg}");
+    }
+
+    #[test]
+    fn replica_set_check_rejects_duplicates_and_short_sets() {
+        check_replica_set(3, 2, &[0, 2]);
+        assert!(std::panic::catch_unwind(|| {
+            check_replica_set(3, 2, &[1, 1])
+        })
+        .is_err());
+        assert!(std::panic::catch_unwind(|| {
+            check_replica_set(3, 2, &[0])
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn dual_write_coverage_names_the_missed_member() {
+        let pending = ring(3);
+        // full coverage passes
+        check_dual_write_coverage(&pending, 2, 42, |_| true);
+        let err = std::panic::catch_unwind(|| {
+            check_dual_write_coverage(&pending, 2, 42, |_| false)
+        })
+        .expect_err("uncovered pending member must violate the contract");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains(DUAL_WRITE_COVERAGE), "{msg}");
+    }
+}

@@ -68,6 +68,7 @@
 //! operator procedures in `docs/OPERATIONS.md`.
 
 pub mod backend;
+pub mod contracts;
 pub mod health;
 pub mod metrics;
 pub mod pool;

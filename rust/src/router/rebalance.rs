@@ -52,6 +52,7 @@ use crate::coordinator::tcp::{
 use crate::filter::fingerprint::entity_key;
 use crate::rag::config::RouterConfig;
 use crate::router::backend::Backend;
+use crate::router::contracts;
 use crate::router::health::{EpochGate, ProbeTargets};
 use crate::router::metrics::RouterMetrics;
 use crate::router::ring::ShardRing;
@@ -143,6 +144,11 @@ impl Membership {
     fn set_pending(&self, pending: PendingState) {
         self.gate.open(pending.epoch);
         let mut state = self.state.write().unwrap();
+        crate::router::contracts::check_window_open(
+            &state,
+            pending.epoch,
+            &self.gate,
+        );
         let mut next = (**state).clone();
         next.pending = Some(pending);
         *state = Arc::new(next);
@@ -163,8 +169,10 @@ impl Membership {
     /// old epoch (stale members now fail probes).
     fn commit(&self, new_state: RingState) {
         let epoch = new_state.epoch;
+        crate::router::contracts::check_commit(&self.gate, epoch, false);
         *self.state.write().unwrap() = Arc::new(new_state);
         self.gate.commit(epoch);
+        crate::router::contracts::check_commit(&self.gate, epoch, true);
     }
 }
 
@@ -321,6 +329,13 @@ pub(crate) fn execute_join(
                 .contains(&joiner_idx)
         })
         .collect();
+    contracts::check_movement_plan(
+        ctx.vocab,
+        &old.ring,
+        &new_ring,
+        ctx.replication,
+        &moved,
+    );
     let (keys_streamed, inserts_sent) = match stream_keys(&moved, &|name| {
         let old_set =
             serving_set(&old.ring, ctx.replication, entity_key(name));
@@ -331,6 +346,7 @@ pub(crate) fn execute_join(
         Ok(counts) => counts,
         Err(e) => {
             ctx.membership.clear_pending();
+            contracts::check_abort_unchanged(&old, &ctx.membership.load());
             return Err(e);
         }
     };
@@ -366,6 +382,7 @@ pub(crate) fn execute_join(
                 }
             }
             ctx.membership.clear_pending();
+            contracts::check_abort_unchanged(&old, &ctx.membership.load());
             return Err(format!(
                 "epoch roll to {new_epoch} failed on {}: {e}",
                 b.addr()
@@ -502,6 +519,7 @@ pub(crate) fn execute_drain(
                 }
             }
             ctx.membership.clear_pending();
+            contracts::check_abort_unchanged(&old, &ctx.membership.load());
             return Err(format!(
                 "epoch roll to {new_epoch} failed on {}: {e}",
                 b.addr()
@@ -524,6 +542,13 @@ pub(crate) fn execute_drain(
                 .contains(&drain_idx)
         })
         .collect();
+    contracts::check_movement_plan(
+        ctx.vocab,
+        &old.ring,
+        &new_ring,
+        ctx.replication,
+        &moved,
+    );
     let (keys_streamed, inserts_sent) = match stream_keys(&moved, &|name| {
         let key = entity_key(name);
         let old_set = serving_set(&old.ring, ctx.replication, key);
@@ -553,6 +578,7 @@ pub(crate) fn execute_drain(
         Ok(counts) => counts,
         Err(e) => {
             ctx.membership.clear_pending();
+            contracts::check_abort_unchanged(&old, &ctx.membership.load());
             return Err(e);
         }
     };
@@ -653,18 +679,16 @@ fn reader_drain_wait(cfg: &RouterConfig) -> std::time::Duration {
 /// snapshot `Arc`s themselves are the tracker: a strong count above
 /// ours means a reader still holds one.
 fn drain_old_readers(states: &[&Arc<RingState>], max_wait: std::time::Duration) {
-    let deadline = std::time::Instant::now() + max_wait;
-    while states.iter().any(|s| Arc::strong_count(s) > 1) {
-        if std::time::Instant::now() >= deadline {
-            let lingering: usize =
-                states.iter().map(|s| Arc::strong_count(s) - 1).sum();
-            log::warn!(
-                "proceeding with {lingering} reader(s) still on a \
-                 previous membership snapshot"
-            );
-            return;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(2));
+    let drained = crate::util::wait::wait_until(max_wait, || {
+        states.iter().all(|s| Arc::strong_count(s) == 1)
+    });
+    if !drained {
+        let lingering: usize =
+            states.iter().map(|s| Arc::strong_count(s) - 1).sum();
+        log::warn!(
+            "proceeding with {lingering} reader(s) still on a \
+             previous membership snapshot"
+        );
     }
 }
 

@@ -127,6 +127,9 @@ impl ShardRing {
     pub fn replicas(&self, key: u64, r: usize) -> Vec<usize> {
         let mut order = self.ranked(key);
         order.truncate(r.max(1));
+        // debug/`contracts` builds: a malformed replica set would
+        // silently under-replicate every key it serves
+        crate::router::contracts::check_replica_set(self.len(), r, &order);
         order
     }
 }

@@ -633,6 +633,17 @@ impl Router {
                 .collect(),
             None => Vec::new(),
         };
+        if let Some(p) = &state.pending {
+            crate::router::contracts::check_dual_write_coverage(
+                &p.ring,
+                self.replication,
+                key,
+                |a| {
+                    targets.iter().any(|&t| state.backends[t].addr() == a)
+                        || extras.iter().any(|b| b.addr() == a)
+                },
+            );
+        }
 
         let outcomes: Vec<(usize, io::Result<Json>)> =
             std::thread::scope(|s| {

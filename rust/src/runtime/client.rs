@@ -151,9 +151,18 @@ impl Runtime {
     }
 }
 
-// The runtime is used behind a dedicated executor thread by the
-// coordinator; it is Send (raw PJRT handles are plain pointers owned
-// exclusively by the wrapper).
+// SAFETY: `Runtime` owns its PJRT client and loaded executables
+// exclusively — the raw handles inside the `xla` wrapper types are
+// created in `Runtime::load`, never aliased outside the struct, and
+// PJRT's C API permits a client and its executables to be *used from
+// one thread at a time* (which is what `Send`-without-`Sync` encodes:
+// the wrapper may move to another thread, but `&Runtime` never crosses
+// threads concurrently). The coordinator upholds the single-thread-at-
+// a-time discipline by driving the runtime from one dedicated executor
+// thread; nothing hands out `&Runtime` across threads (no `Sync` impl
+// is provided, so the compiler enforces that part). If the `xla`
+// wrapper ever gains thread-affine state (e.g. a thread-local stream),
+// this impl must be revisited.
 #[cfg(feature = "xla")]
 unsafe impl Send for Runtime {}
 

@@ -1,0 +1,145 @@
+//! Model-checkable atomics (`--features modelcheck`).
+//!
+//! Thin wrappers over `std::sync::atomic` that insert a scheduler
+//! yield before every shared-access operation, making each load/store
+//! an interleaving point the model explores (that is how the checker's
+//! own lost-update canary finds its bug). `get_mut`/`into_inner` need
+//! `&mut self`/ownership — no concurrent access is possible — so they
+//! are not scheduling points, matching std's semantics exactly.
+
+pub use std::sync::atomic::Ordering;
+
+use crate::modelcheck::managed;
+
+#[inline]
+fn sync_op() {
+    if let Some((sh, vtid)) = managed() {
+        sh.yield_point(vtid);
+    }
+}
+
+macro_rules! int_atomic {
+    ($(#[$doc:meta])* $Name:ident, $T:ty) => {
+        $(#[$doc])*
+        #[derive(Debug, Default)]
+        pub struct $Name(std::sync::atomic::$Name);
+
+        impl $Name {
+            /// See the `std::sync::atomic` counterpart.
+            pub const fn new(v: $T) -> Self {
+                $Name(std::sync::atomic::$Name::new(v))
+            }
+
+            /// Scheduling point + atomic load.
+            pub fn load(&self, order: Ordering) -> $T {
+                sync_op();
+                self.0.load(order)
+            }
+
+            /// Scheduling point + atomic store.
+            pub fn store(&self, val: $T, order: Ordering) {
+                sync_op();
+                self.0.store(val, order);
+            }
+
+            /// Scheduling point + atomic swap.
+            pub fn swap(&self, val: $T, order: Ordering) -> $T {
+                sync_op();
+                self.0.swap(val, order)
+            }
+
+            /// Scheduling point + atomic add.
+            pub fn fetch_add(&self, val: $T, order: Ordering) -> $T {
+                sync_op();
+                self.0.fetch_add(val, order)
+            }
+
+            /// Scheduling point + atomic subtract.
+            pub fn fetch_sub(&self, val: $T, order: Ordering) -> $T {
+                sync_op();
+                self.0.fetch_sub(val, order)
+            }
+
+            /// Scheduling point + atomic read-modify-write. The whole
+            /// RMW is one step (it is atomic in the real build too).
+            pub fn fetch_update<F>(
+                &self,
+                set_order: Ordering,
+                fetch_order: Ordering,
+                f: F,
+            ) -> Result<$T, $T>
+            where
+                F: FnMut($T) -> Option<$T>,
+            {
+                sync_op();
+                self.0.fetch_update(set_order, fetch_order, f)
+            }
+
+            /// Exclusive access; not a scheduling point (see module
+            /// docs).
+            pub fn get_mut(&mut self) -> &mut $T {
+                self.0.get_mut()
+            }
+
+            /// Consume and return the value; not a scheduling point.
+            pub fn into_inner(self) -> $T {
+                self.0.into_inner()
+            }
+        }
+    };
+}
+
+int_atomic!(
+    /// Model-checkable [`std::sync::atomic::AtomicU32`].
+    AtomicU32,
+    u32
+);
+int_atomic!(
+    /// Model-checkable [`std::sync::atomic::AtomicU64`].
+    AtomicU64,
+    u64
+);
+int_atomic!(
+    /// Model-checkable [`std::sync::atomic::AtomicUsize`].
+    AtomicUsize,
+    usize
+);
+
+/// Model-checkable [`std::sync::atomic::AtomicBool`].
+#[derive(Debug, Default)]
+pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+impl AtomicBool {
+    /// See [`std::sync::atomic::AtomicBool::new`].
+    pub const fn new(v: bool) -> Self {
+        AtomicBool(std::sync::atomic::AtomicBool::new(v))
+    }
+
+    /// Scheduling point + atomic load.
+    pub fn load(&self, order: Ordering) -> bool {
+        sync_op();
+        self.0.load(order)
+    }
+
+    /// Scheduling point + atomic store.
+    pub fn store(&self, val: bool, order: Ordering) {
+        sync_op();
+        self.0.store(val, order);
+    }
+
+    /// Scheduling point + atomic swap.
+    pub fn swap(&self, val: bool, order: Ordering) -> bool {
+        sync_op();
+        self.0.swap(val, order)
+    }
+
+    /// Exclusive access; not a scheduling point.
+    pub fn get_mut(&mut self) -> &mut bool {
+        self.0.get_mut()
+    }
+
+    /// Consume and return the value; not a scheduling point.
+    pub fn into_inner(self) -> bool {
+        self.0.into_inner()
+    }
+}

@@ -1,0 +1,481 @@
+//! Model-checkable `Mutex` and `RwLock` (`--features modelcheck`).
+//!
+//! Each lock pairs the real std primitive (which still owns the data
+//! and the poisoning semantics) with a *logical ownership book* the
+//! scheduler consults. On a model vthread, acquisition is decided
+//! against the book under the scheduler's control — contenders park as
+//! virtual threads and the schedule explores who wins — and only then
+//! is the inner std lock taken, which is guaranteed uncontended at
+//! that point (exactly one vthread runs at a time and the book grants
+//! exclusivity). Off-model threads skip the book entirely and behave
+//! like plain std locks.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{LockResult, PoisonError, TryLockError, TryLockResult};
+
+use crate::modelcheck::managed;
+
+/// Logical ownership record, keyed by vthread id.
+#[derive(Default)]
+struct Book {
+    writer: Option<usize>,
+    readers: usize,
+}
+
+/// Error for a lock reached by both model vthreads and ordinary
+/// threads at once — outside the supported usage (see `sync` docs).
+const MIXED_USE: &str =
+    "modelcheck lock: inner std lock held outside the model \
+     (a primitive is shared between model vthreads and ordinary threads)";
+
+fn book_of(m: &std::sync::Mutex<Book>) -> std::sync::MutexGuard<'_, Book> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------- Mutex
+
+/// Drop-in `std::sync::Mutex` that the model scheduler can preempt
+/// around and reason about (deadlock detection, schedule exploration).
+pub struct Mutex<T: ?Sized> {
+    book: std::sync::Mutex<Book>,
+    inner: std::sync::Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    /// See [`std::sync::Mutex::new`].
+    pub fn new(value: T) -> Self {
+        Mutex {
+            book: std::sync::Mutex::new(Book::default()),
+            inner: std::sync::Mutex::new(value),
+        }
+    }
+
+    /// See [`std::sync::Mutex::into_inner`].
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    /// Scheduler resource id: the book's address (stable for the
+    /// lock's lifetime, never collides with the small built-in ids).
+    fn res(&self) -> usize {
+        &self.book as *const std::sync::Mutex<Book> as usize
+    }
+
+    /// See [`std::sync::Mutex::lock`]. Under a model run this is a
+    /// scheduling point and may park the vthread.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if let Some((sh, vtid)) = managed() {
+            loop {
+                sh.yield_point(vtid);
+                {
+                    let mut b = book_of(&self.book);
+                    if b.writer.is_none() && b.readers == 0 {
+                        b.writer = Some(vtid);
+                        break;
+                    }
+                }
+                sh.block(vtid, self.res(), "mutex", None);
+            }
+            match self.inner.try_lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), managed: true }),
+                Err(TryLockError::Poisoned(p)) => Err(PoisonError::new(
+                    MutexGuard { lock: self, inner: Some(p.into_inner()), managed: true },
+                )),
+                Err(TryLockError::WouldBlock) => panic!("{MIXED_USE}"),
+            }
+        } else {
+            match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), managed: false }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                    managed: false,
+                })),
+            }
+        }
+    }
+
+    /// See [`std::sync::Mutex::try_lock`].
+    pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+        if let Some((sh, vtid)) = managed() {
+            sh.yield_point(vtid);
+            {
+                let mut b = book_of(&self.book);
+                if b.writer.is_some() || b.readers > 0 {
+                    return Err(TryLockError::WouldBlock);
+                }
+                b.writer = Some(vtid);
+            }
+            match self.inner.try_lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), managed: true }),
+                Err(TryLockError::Poisoned(p)) => {
+                    Err(TryLockError::Poisoned(PoisonError::new(MutexGuard {
+                        lock: self,
+                        inner: Some(p.into_inner()),
+                        managed: true,
+                    })))
+                }
+                Err(TryLockError::WouldBlock) => panic!("{MIXED_USE}"),
+            }
+        } else {
+            match self.inner.try_lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), managed: false }),
+                Err(TryLockError::Poisoned(p)) => {
+                    Err(TryLockError::Poisoned(PoisonError::new(MutexGuard {
+                        lock: self,
+                        inner: Some(p.into_inner()),
+                        managed: false,
+                    })))
+                }
+                Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+            }
+        }
+    }
+
+    /// See [`std::sync::Mutex::get_mut`].
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T: ?Sized> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Mutex").finish_non_exhaustive()
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Mutex::new(T::default())
+    }
+}
+
+/// Guard for the shim [`Mutex`]; releases the logical claim (and wakes
+/// parked contenders) on drop.
+pub struct MutexGuard<'a, T: ?Sized> {
+    lock: &'a Mutex<T>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    managed: bool,
+}
+
+impl<T: ?Sized> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for MutexGuard<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the std lock before the logical claim so the next
+        // logical owner always finds the inner lock free.
+        drop(self.inner.take());
+        if self.managed {
+            book_of(&self.lock.book).writer = None;
+            if let Some((sh, _)) = managed() {
+                sh.wake(self.lock.res());
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- RwLock
+
+/// Drop-in `std::sync::RwLock` under scheduler control; see [`Mutex`].
+pub struct RwLock<T: ?Sized> {
+    book: std::sync::Mutex<Book>,
+    inner: std::sync::RwLock<T>,
+}
+
+impl<T> RwLock<T> {
+    /// See [`std::sync::RwLock::new`].
+    pub fn new(value: T) -> Self {
+        RwLock {
+            book: std::sync::Mutex::new(Book::default()),
+            inner: std::sync::RwLock::new(value),
+        }
+    }
+
+    /// See [`std::sync::RwLock::into_inner`].
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+}
+
+impl<T: ?Sized> RwLock<T> {
+    fn res(&self) -> usize {
+        &self.book as *const std::sync::Mutex<Book> as usize
+    }
+
+    /// See [`std::sync::RwLock::read`]. A scheduling point under a
+    /// model run.
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        if let Some((sh, vtid)) = managed() {
+            loop {
+                sh.yield_point(vtid);
+                {
+                    let mut b = book_of(&self.book);
+                    if b.writer.is_none() {
+                        b.readers += 1;
+                        break;
+                    }
+                }
+                sh.block(vtid, self.res(), "rwlock-read", None);
+            }
+            match self.inner.try_read() {
+                Ok(g) => {
+                    Ok(RwLockReadGuard { lock: self, inner: Some(g), managed: true })
+                }
+                Err(TryLockError::Poisoned(p)) => {
+                    Err(PoisonError::new(RwLockReadGuard {
+                        lock: self,
+                        inner: Some(p.into_inner()),
+                        managed: true,
+                    }))
+                }
+                Err(TryLockError::WouldBlock) => panic!("{MIXED_USE}"),
+            }
+        } else {
+            match self.inner.read() {
+                Ok(g) => {
+                    Ok(RwLockReadGuard { lock: self, inner: Some(g), managed: false })
+                }
+                Err(p) => Err(PoisonError::new(RwLockReadGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                    managed: false,
+                })),
+            }
+        }
+    }
+
+    /// See [`std::sync::RwLock::write`]. A scheduling point under a
+    /// model run.
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        if let Some((sh, vtid)) = managed() {
+            loop {
+                sh.yield_point(vtid);
+                {
+                    let mut b = book_of(&self.book);
+                    if b.writer.is_none() && b.readers == 0 {
+                        b.writer = Some(vtid);
+                        break;
+                    }
+                }
+                sh.block(vtid, self.res(), "rwlock-write", None);
+            }
+            match self.inner.try_write() {
+                Ok(g) => {
+                    Ok(RwLockWriteGuard { lock: self, inner: Some(g), managed: true })
+                }
+                Err(TryLockError::Poisoned(p)) => {
+                    Err(PoisonError::new(RwLockWriteGuard {
+                        lock: self,
+                        inner: Some(p.into_inner()),
+                        managed: true,
+                    }))
+                }
+                Err(TryLockError::WouldBlock) => panic!("{MIXED_USE}"),
+            }
+        } else {
+            match self.inner.write() {
+                Ok(g) => {
+                    Ok(RwLockWriteGuard { lock: self, inner: Some(g), managed: false })
+                }
+                Err(p) => Err(PoisonError::new(RwLockWriteGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                    managed: false,
+                })),
+            }
+        }
+    }
+
+    /// See [`std::sync::RwLock::try_read`].
+    pub fn try_read(&self) -> TryLockResult<RwLockReadGuard<'_, T>> {
+        if let Some((sh, vtid)) = managed() {
+            sh.yield_point(vtid);
+            {
+                let mut b = book_of(&self.book);
+                if b.writer.is_some() {
+                    return Err(TryLockError::WouldBlock);
+                }
+                b.readers += 1;
+            }
+            match self.inner.try_read() {
+                Ok(g) => {
+                    Ok(RwLockReadGuard { lock: self, inner: Some(g), managed: true })
+                }
+                Err(TryLockError::Poisoned(p)) => {
+                    Err(TryLockError::Poisoned(PoisonError::new(RwLockReadGuard {
+                        lock: self,
+                        inner: Some(p.into_inner()),
+                        managed: true,
+                    })))
+                }
+                Err(TryLockError::WouldBlock) => panic!("{MIXED_USE}"),
+            }
+        } else {
+            match self.inner.try_read() {
+                Ok(g) => {
+                    Ok(RwLockReadGuard { lock: self, inner: Some(g), managed: false })
+                }
+                Err(TryLockError::Poisoned(p)) => {
+                    Err(TryLockError::Poisoned(PoisonError::new(RwLockReadGuard {
+                        lock: self,
+                        inner: Some(p.into_inner()),
+                        managed: false,
+                    })))
+                }
+                Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+            }
+        }
+    }
+
+    /// See [`std::sync::RwLock::try_write`] (the sharded filter's
+    /// opportunistic migration help relies on this).
+    pub fn try_write(&self) -> TryLockResult<RwLockWriteGuard<'_, T>> {
+        if let Some((sh, vtid)) = managed() {
+            sh.yield_point(vtid);
+            {
+                let mut b = book_of(&self.book);
+                if b.writer.is_some() || b.readers > 0 {
+                    return Err(TryLockError::WouldBlock);
+                }
+                b.writer = Some(vtid);
+            }
+            match self.inner.try_write() {
+                Ok(g) => {
+                    Ok(RwLockWriteGuard { lock: self, inner: Some(g), managed: true })
+                }
+                Err(TryLockError::Poisoned(p)) => {
+                    Err(TryLockError::Poisoned(PoisonError::new(RwLockWriteGuard {
+                        lock: self,
+                        inner: Some(p.into_inner()),
+                        managed: true,
+                    })))
+                }
+                Err(TryLockError::WouldBlock) => panic!("{MIXED_USE}"),
+            }
+        } else {
+            match self.inner.try_write() {
+                Ok(g) => {
+                    Ok(RwLockWriteGuard { lock: self, inner: Some(g), managed: false })
+                }
+                Err(TryLockError::Poisoned(p)) => {
+                    Err(TryLockError::Poisoned(PoisonError::new(RwLockWriteGuard {
+                        lock: self,
+                        inner: Some(p.into_inner()),
+                        managed: false,
+                    })))
+                }
+                Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+            }
+        }
+    }
+
+    /// See [`std::sync::RwLock::get_mut`].
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T: ?Sized> fmt::Debug for RwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RwLock").finish_non_exhaustive()
+    }
+}
+
+impl<T: Default> Default for RwLock<T> {
+    fn default() -> Self {
+        RwLock::new(T::default())
+    }
+}
+
+/// Shared-access guard for the shim [`RwLock`].
+pub struct RwLockReadGuard<'a, T: ?Sized> {
+    lock: &'a RwLock<T>,
+    inner: Option<std::sync::RwLockReadGuard<'a, T>>,
+    managed: bool,
+}
+
+impl<T: ?Sized> Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for RwLockReadGuard<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<T: ?Sized> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.inner.take());
+        if self.managed {
+            {
+                let mut b = book_of(&self.lock.book);
+                b.readers = b.readers.saturating_sub(1);
+            }
+            if let Some((sh, _)) = managed() {
+                sh.wake(self.lock.res());
+            }
+        }
+    }
+}
+
+/// Exclusive-access guard for the shim [`RwLock`].
+pub struct RwLockWriteGuard<'a, T: ?Sized> {
+    lock: &'a RwLock<T>,
+    inner: Option<std::sync::RwLockWriteGuard<'a, T>>,
+    managed: bool,
+}
+
+impl<T: ?Sized> Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized> DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for RwLockWriteGuard<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<T: ?Sized> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.inner.take());
+        if self.managed {
+            book_of(&self.lock.book).writer = None;
+            if let Some((sh, _)) = managed() {
+                sh.wake(self.lock.res());
+            }
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Synchronization primitives for the concurrency core — std by
+//! default, model-checkable on demand.
+//!
+//! Every lock, atomic, channel, thread-spawn and clock the
+//! filter/coordinator concurrency core uses is imported from here
+//! instead of `std::sync`/`std::thread`/`std::time`:
+//!
+//! * **Default build**: everything in this module is a verbatim
+//!   re-export of the std item — zero cost, zero behavior change (the
+//!   release binary is bit-for-bit the same code it was before this
+//!   module existed).
+//! * **`--features modelcheck`**: the same names resolve to thin
+//!   wrappers that route every acquire/release/load/store/send/park
+//!   through the seeded cooperative scheduler in [`crate::modelcheck`],
+//!   turning a multi-threaded test into a deterministic, replayable
+//!   exploration of interleavings (see `docs/TESTING.md`).
+//!
+//! The wrappers **pass through to std behavior on any thread that is
+//! not part of a model run** (scheduler presence is thread-local), so
+//! `cargo test --features modelcheck` still runs the ordinary suite —
+//! TCP integration tests included — unchanged; only bodies executed
+//! under [`crate::modelcheck::explore`] get scheduled.
+//!
+//! Two usage rules under the feature (irrelevant to default builds):
+//! primitives created inside a model run must not escape it, and a
+//! primitive must not be shared between model vthreads and ordinary
+//! threads (the shim panics with a clear message if that happens).
+#![warn(missing_debug_implementations)]
+
+// Shared std error vocabulary: the shim guards reuse std's poisoning
+// and try-lock error types, so caller code is identical either way.
+pub use std::sync::{LockResult, PoisonError, TryLockError, TryLockResult};
+
+#[cfg(not(feature = "modelcheck"))]
+pub use std::sync::{
+    atomic, mpsc, Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard,
+    RwLockWriteGuard,
+};
+#[cfg(not(feature = "modelcheck"))]
+pub use std::thread;
+
+#[cfg(feature = "modelcheck")]
+mod locks;
+#[cfg(feature = "modelcheck")]
+pub use locks::{
+    Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+#[cfg(feature = "modelcheck")]
+pub mod atomic;
+#[cfg(feature = "modelcheck")]
+pub mod mpsc;
+#[cfg(feature = "modelcheck")]
+pub mod thread;
+// `Arc` needs no instrumentation: clone/drop are not interleaving
+// decisions the model needs to control (loom tracks them to validate
+// memory reclamation; our checker targets lock/channel schedules).
+#[cfg(feature = "modelcheck")]
+pub use std::sync::Arc;
+
+pub mod time;
+
+/// Scheduler hints for instrumented hot paths.
+pub mod hint {
+    //! Explicit interleaving points.
+    //!
+    //! Long critical sections (incremental migration, maintenance
+    //! application) call [`preemption_point`] between steps so the
+    //! model checker can interleave other vthreads at step granularity
+    //! instead of only at lock boundaries. Compiles to nothing without
+    //! the `modelcheck` feature.
+
+    /// Mark a point where the cooperative scheduler may preempt.
+    /// No-op (inlined away) in default builds; under `modelcheck` it
+    /// yields to the scheduler when the calling thread is part of a
+    /// model run.
+    #[inline(always)]
+    pub fn preemption_point() {
+        #[cfg(feature = "modelcheck")]
+        {
+            if let Some((sh, vtid)) = crate::modelcheck::managed() {
+                sh.yield_point(vtid);
+            }
+        }
+    }
+}

@@ -1,0 +1,368 @@
+//! Model-checkable mpsc channels (`--features modelcheck`).
+//!
+//! Construction decides the implementation: a channel created on a
+//! model vthread is *virtual* — a `VecDeque` whose send/recv ops are
+//! scheduling points, with blocking (bounded send, `recv`) and
+//! timeouts (`recv_timeout`, in virtual time) modeled by the
+//! scheduler — while a channel created anywhere else wraps the real
+//! `std::sync::mpsc` channel and behaves exactly like it. Error types
+//! are std's, so call sites compile identically either way.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::Arc;
+use std::time::Duration;
+
+pub use std::sync::mpsc::{
+    RecvError, RecvTimeoutError, SendError, TryRecvError, TrySendError,
+};
+
+use crate::modelcheck::managed;
+
+const OFF_MODEL: &str =
+    "modelcheck channel: a virtual channel endpoint was used outside \
+     the model run that created it";
+
+struct VBook<T> {
+    queue: VecDeque<T>,
+    /// `usize::MAX` encodes an unbounded channel.
+    cap: usize,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+struct VChan<T> {
+    book: std::sync::Mutex<VBook<T>>,
+}
+
+impl<T> VChan<T> {
+    fn new(cap: usize) -> Arc<Self> {
+        Arc::new(VChan {
+            book: std::sync::Mutex::new(VBook {
+                queue: VecDeque::new(),
+                cap,
+                senders: 1,
+                receiver_alive: true,
+            }),
+        })
+    }
+
+    fn res(self: &Arc<Self>) -> usize {
+        Arc::as_ptr(self) as usize
+    }
+
+    fn book(&self) -> std::sync::MutexGuard<'_, VBook<T>> {
+        self.book.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Wake parked peers if we are on a model vthread; a plain-thread
+    /// drop after the run has no peers left to wake.
+    fn wake_peers(self: &Arc<Self>) {
+        if let Some((sh, _)) = managed() {
+            sh.wake(self.res());
+        }
+    }
+
+    fn add_sender(&self) {
+        self.book().senders += 1;
+    }
+
+    fn drop_sender(self: &Arc<Self>) {
+        let last = {
+            let mut b = self.book();
+            b.senders = b.senders.saturating_sub(1);
+            b.senders == 0
+        };
+        if last {
+            self.wake_peers();
+        }
+    }
+
+    fn send_virtual(self: &Arc<Self>, value: T) -> Result<(), SendError<T>> {
+        let (sh, vtid) = managed().expect(OFF_MODEL);
+        let mut item = Some(value);
+        loop {
+            sh.yield_point(vtid);
+            {
+                let mut b = self.book();
+                if !b.receiver_alive {
+                    return Err(SendError(item.take().expect("send item")));
+                }
+                if b.queue.len() < b.cap {
+                    b.queue.push_back(item.take().expect("send item"));
+                    drop(b);
+                    self.wake_peers();
+                    return Ok(());
+                }
+            }
+            sh.block(vtid, self.res(), "channel-send", None);
+        }
+    }
+
+    fn try_send_virtual(
+        self: &Arc<Self>,
+        value: T,
+    ) -> Result<(), TrySendError<T>> {
+        let (sh, vtid) = managed().expect(OFF_MODEL);
+        sh.yield_point(vtid);
+        let mut b = self.book();
+        if !b.receiver_alive {
+            return Err(TrySendError::Disconnected(value));
+        }
+        if b.queue.len() >= b.cap {
+            return Err(TrySendError::Full(value));
+        }
+        b.queue.push_back(value);
+        drop(b);
+        self.wake_peers();
+        Ok(())
+    }
+
+    fn recv_virtual(self: &Arc<Self>) -> Result<T, RecvError> {
+        let (sh, vtid) = managed().expect(OFF_MODEL);
+        loop {
+            sh.yield_point(vtid);
+            {
+                let mut b = self.book();
+                if let Some(v) = b.queue.pop_front() {
+                    drop(b);
+                    self.wake_peers(); // a bounded sender may fit now
+                    return Ok(v);
+                }
+                if b.senders == 0 {
+                    return Err(RecvError);
+                }
+            }
+            sh.block(vtid, self.res(), "channel-recv", None);
+        }
+    }
+
+    fn try_recv_virtual(self: &Arc<Self>) -> Result<T, TryRecvError> {
+        let (sh, vtid) = managed().expect(OFF_MODEL);
+        sh.yield_point(vtid);
+        let mut b = self.book();
+        if let Some(v) = b.queue.pop_front() {
+            drop(b);
+            self.wake_peers();
+            return Ok(v);
+        }
+        if b.senders == 0 {
+            return Err(TryRecvError::Disconnected);
+        }
+        Err(TryRecvError::Empty)
+    }
+
+    fn recv_timeout_virtual(
+        self: &Arc<Self>,
+        timeout: Duration,
+    ) -> Result<T, RecvTimeoutError> {
+        let (sh, vtid) = managed().expect(OFF_MODEL);
+        let deadline = sh.now_ns() + timeout.as_nanos();
+        loop {
+            sh.yield_point(vtid);
+            {
+                let mut b = self.book();
+                if let Some(v) = b.queue.pop_front() {
+                    drop(b);
+                    self.wake_peers();
+                    return Ok(v);
+                }
+                if b.senders == 0 {
+                    return Err(RecvTimeoutError::Disconnected);
+                }
+            }
+            let now = sh.now_ns();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let remaining = Duration::from_nanos((deadline - now) as u64);
+            sh.block(vtid, self.res(), "channel-recv", Some(remaining));
+        }
+    }
+}
+
+enum SenderImpl<T> {
+    Std(std::sync::mpsc::Sender<T>),
+    Virt(Arc<VChan<T>>),
+}
+
+enum SyncSenderImpl<T> {
+    Std(std::sync::mpsc::SyncSender<T>),
+    Virt(Arc<VChan<T>>),
+}
+
+enum ReceiverImpl<T> {
+    Std(std::sync::mpsc::Receiver<T>),
+    Virt(Arc<VChan<T>>),
+}
+
+/// Drop-in [`std::sync::mpsc::Sender`] (unbounded).
+pub struct Sender<T>(SenderImpl<T>);
+
+/// Drop-in [`std::sync::mpsc::SyncSender`] (bounded, blocking send).
+pub struct SyncSender<T>(SyncSenderImpl<T>);
+
+/// Drop-in [`std::sync::mpsc::Receiver`].
+pub struct Receiver<T>(ReceiverImpl<T>);
+
+/// See [`std::sync::mpsc::channel`]. Virtual when called on a model
+/// vthread, real std otherwise.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    if managed().is_some() {
+        let chan = VChan::new(usize::MAX);
+        (
+            Sender(SenderImpl::Virt(Arc::clone(&chan))),
+            Receiver(ReceiverImpl::Virt(chan)),
+        )
+    } else {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (Sender(SenderImpl::Std(tx)), Receiver(ReceiverImpl::Std(rx)))
+    }
+}
+
+/// See [`std::sync::mpsc::sync_channel`]. Virtual when called on a
+/// model vthread (`bound == 0` rendezvous channels are not modeled),
+/// real std otherwise.
+pub fn sync_channel<T>(bound: usize) -> (SyncSender<T>, Receiver<T>) {
+    if managed().is_some() {
+        assert!(bound > 0, "modelcheck sync_channel: rendezvous (bound 0) is not modeled");
+        let chan = VChan::new(bound);
+        (
+            SyncSender(SyncSenderImpl::Virt(Arc::clone(&chan))),
+            Receiver(ReceiverImpl::Virt(chan)),
+        )
+    } else {
+        let (tx, rx) = std::sync::mpsc::sync_channel(bound);
+        (
+            SyncSender(SyncSenderImpl::Std(tx)),
+            Receiver(ReceiverImpl::Std(rx)),
+        )
+    }
+}
+
+impl<T> Sender<T> {
+    /// See [`std::sync::mpsc::Sender::send`].
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        match &self.0 {
+            SenderImpl::Std(tx) => tx.send(value),
+            SenderImpl::Virt(chan) => chan.send_virtual(value),
+        }
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        match &self.0 {
+            SenderImpl::Std(tx) => Sender(SenderImpl::Std(tx.clone())),
+            SenderImpl::Virt(chan) => {
+                chan.add_sender();
+                Sender(SenderImpl::Virt(Arc::clone(chan)))
+            }
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        if let SenderImpl::Virt(chan) = &self.0 {
+            chan.drop_sender();
+        }
+    }
+}
+
+impl<T> fmt::Debug for Sender<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Sender").finish_non_exhaustive()
+    }
+}
+
+impl<T> SyncSender<T> {
+    /// See [`std::sync::mpsc::SyncSender::send`] — blocks while the
+    /// queue is full (a parked vthread under a model run).
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        match &self.0 {
+            SyncSenderImpl::Std(tx) => tx.send(value),
+            SyncSenderImpl::Virt(chan) => chan.send_virtual(value),
+        }
+    }
+
+    /// See [`std::sync::mpsc::SyncSender::try_send`].
+    pub fn try_send(&self, value: T) -> Result<(), TrySendError<T>> {
+        match &self.0 {
+            SyncSenderImpl::Std(tx) => tx.try_send(value),
+            SyncSenderImpl::Virt(chan) => chan.try_send_virtual(value),
+        }
+    }
+}
+
+impl<T> Clone for SyncSender<T> {
+    fn clone(&self) -> Self {
+        match &self.0 {
+            SyncSenderImpl::Std(tx) => SyncSender(SyncSenderImpl::Std(tx.clone())),
+            SyncSenderImpl::Virt(chan) => {
+                chan.add_sender();
+                SyncSender(SyncSenderImpl::Virt(Arc::clone(chan)))
+            }
+        }
+    }
+}
+
+impl<T> Drop for SyncSender<T> {
+    fn drop(&mut self) {
+        if let SyncSenderImpl::Virt(chan) = &self.0 {
+            chan.drop_sender();
+        }
+    }
+}
+
+impl<T> fmt::Debug for SyncSender<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SyncSender").finish_non_exhaustive()
+    }
+}
+
+impl<T> Receiver<T> {
+    /// See [`std::sync::mpsc::Receiver::recv`].
+    pub fn recv(&self) -> Result<T, RecvError> {
+        match &self.0 {
+            ReceiverImpl::Std(rx) => rx.recv(),
+            ReceiverImpl::Virt(chan) => chan.recv_virtual(),
+        }
+    }
+
+    /// See [`std::sync::mpsc::Receiver::try_recv`].
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        match &self.0 {
+            ReceiverImpl::Std(rx) => rx.try_recv(),
+            ReceiverImpl::Virt(chan) => chan.try_recv_virtual(),
+        }
+    }
+
+    /// See [`std::sync::mpsc::Receiver::recv_timeout`]. Under a model
+    /// run the timeout is virtual: it fires (deterministically) only
+    /// when no vthread can make progress before the deadline.
+    pub fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> Result<T, RecvTimeoutError> {
+        match &self.0 {
+            ReceiverImpl::Std(rx) => rx.recv_timeout(timeout),
+            ReceiverImpl::Virt(chan) => chan.recv_timeout_virtual(timeout),
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        if let ReceiverImpl::Virt(chan) = &self.0 {
+            chan.book().receiver_alive = false;
+            chan.wake_peers();
+        }
+    }
+}
+
+impl<T> fmt::Debug for Receiver<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Receiver").finish_non_exhaustive()
+    }
+}

@@ -1,0 +1,96 @@
+//! Model-checkable threading (`--features modelcheck`).
+//!
+//! `spawn` on a model vthread creates another *virtual* thread under
+//! the scheduler (a real OS thread, but one that only runs when
+//! scheduled); anywhere else it is `std::thread::spawn`. `sleep`
+//! under a model run parks the vthread until **virtual** time reaches
+//! the deadline — sleeps cost nothing in wall-clock terms and fire in
+//! deterministic deadline order.
+
+use std::any::Any;
+use std::fmt;
+use std::marker::PhantomData;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::modelcheck::{managed, Shared, RES_SLEEP};
+
+enum HandleImpl<T> {
+    Std(std::thread::JoinHandle<T>),
+    Virt {
+        shared: Arc<Shared>,
+        vtid: usize,
+        _result: PhantomData<fn() -> T>,
+    },
+}
+
+/// Drop-in [`std::thread::JoinHandle`].
+pub struct JoinHandle<T>(HandleImpl<T>);
+
+/// See [`std::thread::spawn`]. On a model vthread the child becomes a
+/// virtual thread: it starts parked and runs only when the scheduler
+/// picks it, so the spawner keeps the CPU until its next sync point.
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    if let Some((sh, _)) = managed() {
+        let vtid = sh.spawn_vthread(
+            None,
+            Box::new(move || Box::new(f()) as Box<dyn Any + Send>),
+        );
+        JoinHandle(HandleImpl::Virt { shared: sh, vtid, _result: PhantomData })
+    } else {
+        JoinHandle(HandleImpl::Std(std::thread::spawn(f)))
+    }
+}
+
+impl<T> JoinHandle<T> {
+    /// See [`std::thread::JoinHandle::join`]. Joining a virtual thread
+    /// is a scheduling point; a panic in the child surfaces here (and
+    /// fails the schedule with the child's panic message).
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.0 {
+            HandleImpl::Std(h) => h.join(),
+            HandleImpl::Virt { shared, vtid, .. } => {
+                let (_, me) = managed().expect(
+                    "modelcheck join: virtual threads can only be joined \
+                     from inside their model run",
+                );
+                match shared.join_vthread(me, vtid) {
+                    Ok(boxed) => Ok(*boxed
+                        .downcast::<T>()
+                        .expect("vthread result has the spawned type")),
+                    Err(payload) => Err(payload),
+                }
+            }
+        }
+    }
+}
+
+impl<T> fmt::Debug for JoinHandle<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("JoinHandle").finish_non_exhaustive()
+    }
+}
+
+/// See [`std::thread::sleep`]. Virtual (instant, deterministic) under
+/// a model run; real otherwise.
+pub fn sleep(dur: Duration) {
+    if let Some((sh, vtid)) = managed() {
+        sh.block(vtid, RES_SLEEP, "sleep", Some(dur));
+    } else {
+        std::thread::sleep(dur);
+    }
+}
+
+/// See [`std::thread::yield_now`]. A plain scheduling point under a
+/// model run.
+pub fn yield_now() {
+    if let Some((sh, vtid)) = managed() {
+        sh.yield_point(vtid);
+    } else {
+        std::thread::yield_now();
+    }
+}

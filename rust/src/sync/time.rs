@@ -1,0 +1,109 @@
+//! Clock shim: `Instant` that reads **virtual time** inside a model
+//! run (`--features modelcheck`) and the real monotonic clock
+//! everywhere else. Deadline arithmetic in the coordinator (batch
+//! deadlines, bounded submit waits) goes through this type, which is
+//! what lets the model checker explore a 5-second production timeout
+//! in zero wall-clock time.
+//!
+//! Rule of thumb under the feature: an `Instant` must not cross the
+//! model boundary — arithmetic mixing a real and a virtual instant
+//! panics rather than returning a nonsense duration.
+
+pub use std::time::Duration;
+
+#[cfg(not(feature = "modelcheck"))]
+pub use std::time::Instant;
+
+#[cfg(feature = "modelcheck")]
+pub use shim::Instant;
+
+#[cfg(feature = "modelcheck")]
+mod shim {
+    use std::cmp::Ordering as CmpOrdering;
+    use std::ops::{Add, Sub};
+    use std::time::Duration;
+
+    use crate::modelcheck::managed;
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    enum Repr {
+        Real(std::time::Instant),
+        Virtual(u128),
+    }
+
+    /// Drop-in [`std::time::Instant`]; virtual inside a model run.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct Instant(Repr);
+
+    impl Instant {
+        /// Scheduler virtual time on a model vthread, the monotonic
+        /// clock otherwise.
+        pub fn now() -> Instant {
+            match managed() {
+                Some((sh, _)) => Instant(Repr::Virtual(sh.now_ns())),
+                None => Instant(Repr::Real(std::time::Instant::now())),
+            }
+        }
+
+        /// See [`std::time::Instant::elapsed`].
+        pub fn elapsed(&self) -> Duration {
+            Instant::now() - *self
+        }
+
+        /// See [`std::time::Instant::duration_since`] (saturating).
+        pub fn duration_since(&self, earlier: Instant) -> Duration {
+            *self - earlier
+        }
+    }
+
+    impl Add<Duration> for Instant {
+        type Output = Instant;
+        fn add(self, rhs: Duration) -> Instant {
+            match self.0 {
+                Repr::Real(t) => Instant(Repr::Real(t + rhs)),
+                Repr::Virtual(ns) => {
+                    Instant(Repr::Virtual(ns + rhs.as_nanos()))
+                }
+            }
+        }
+    }
+
+    impl Sub<Instant> for Instant {
+        type Output = Duration;
+        fn sub(self, rhs: Instant) -> Duration {
+            match (self.0, rhs.0) {
+                (Repr::Real(a), Repr::Real(b)) => {
+                    a.saturating_duration_since(b)
+                }
+                (Repr::Virtual(a), Repr::Virtual(b)) => {
+                    Duration::from_nanos(a.saturating_sub(b) as u64)
+                }
+                _ => panic!(
+                    "sync::time::Instant: arithmetic mixing a real and \
+                     a virtual instant (an Instant crossed the model \
+                     boundary)"
+                ),
+            }
+        }
+    }
+
+    impl PartialOrd for Instant {
+        fn partial_cmp(&self, other: &Instant) -> Option<CmpOrdering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    impl Ord for Instant {
+        fn cmp(&self, other: &Instant) -> CmpOrdering {
+            match (self.0, other.0) {
+                (Repr::Real(a), Repr::Real(b)) => a.cmp(&b),
+                (Repr::Virtual(a), Repr::Virtual(b)) => a.cmp(&b),
+                _ => panic!(
+                    "sync::time::Instant: comparison mixing a real and \
+                     a virtual instant (an Instant crossed the model \
+                     boundary)"
+                ),
+            }
+        }
+    }
+}

@@ -9,3 +9,4 @@ pub mod log;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod wait;

@@ -1,0 +1,70 @@
+//! Bounded condition polling — the one sanctioned way to wait for
+//! cross-thread state in tests and maintenance paths.
+//!
+//! A bare `thread::sleep(<guessed duration>)` before asserting on
+//! another thread's progress is a flake generator: too short and slow
+//! CI fails, too long and every run pays the worst case. Polling a
+//! condition against a generous deadline is deterministic in outcome
+//! (the condition either holds within the budget or it genuinely never
+//! will) and costs only as long as the condition actually takes.
+
+use std::time::{Duration, Instant};
+
+/// Interval between condition checks. Short enough that a wait costs
+/// barely more than the condition itself takes to become true.
+const POLL: Duration = Duration::from_millis(2);
+
+/// Poll `cond` until it returns `true` or `timeout` elapses. Returns
+/// whether the condition held — with one final check at the deadline,
+/// so a condition that becomes true exactly as time runs out still
+/// counts.
+pub fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if cond() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return cond();
+        }
+        std::thread::sleep(POLL);
+    }
+}
+
+/// [`wait_until`] that panics with `what` on timeout — the test-side
+/// form: `require("prober sees the load", SECS_10, || observed() >= 3)`.
+pub fn require(what: &str, timeout: Duration, cond: impl FnMut() -> bool) {
+    assert!(wait_until(timeout, cond), "timed out waiting: {what}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn true_condition_returns_immediately() {
+        let t = Instant::now();
+        assert!(wait_until(Duration::from_secs(10), || true));
+        assert!(t.elapsed() < Duration::from_secs(1), "no pointless wait");
+    }
+
+    #[test]
+    fn false_condition_times_out() {
+        assert!(!wait_until(Duration::from_millis(10), || false));
+    }
+
+    #[test]
+    fn sees_condition_flipped_by_another_thread() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let setter = {
+            let flag = Arc::clone(&flag);
+            std::thread::spawn(move || flag.store(true, Ordering::Release))
+        };
+        assert!(wait_until(Duration::from_secs(10), || {
+            flag.load(Ordering::Acquire)
+        }));
+        setter.join().unwrap();
+    }
+}

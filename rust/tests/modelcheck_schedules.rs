@@ -1,0 +1,439 @@
+//! Schedule-exploration suite (`--features modelcheck`): the
+//! historical bug classes of the filter/coordinator core, encoded as
+//! deterministic interleaving searches over the real data structures.
+//!
+//! Every test runs its body under [`cft_rag::modelcheck::explore`]:
+//! many seeds, PCT-style forced preemptions, virtual time. A failure
+//! panics with the seed and the exact `MODELCHECK_SEED=… cargo test`
+//! line that replays it bit-for-bit. The bug classes covered:
+//!
+//! * **PR-1 entry loss on migration retry** — an entry evicted from
+//!   the old generation had to survive a failed re-placement into the
+//!   target. `migration_churn_never_loses_entries` re-runs that churn
+//!   under every explored schedule;
+//!   `checker_catches_reintroduced_entry_loss` proves the checker
+//!   *would* flag the pre-fix protocol (remove-then-insert with a
+//!   preemption window) if it were ever reintroduced.
+//! * **PR-2 generation invariant** — a reader must observe every key
+//!   in exactly one generation at every instant of an incremental
+//!   doubling (`reader_observes_exactly_one_generation`).
+//! * **PR-2 stale maintenance plans** — a temperature re-sort planned
+//!   against a snapshot must reject (or harmlessly apply) after
+//!   concurrent mutation (`stale_maintenance_plan_is_rejected_or_safe`).
+//! * **Batcher submit/stop** — accepted jobs are delivered exactly
+//!   once across a racing stop; a full queue bounds the submitter's
+//!   wait in virtual time (`batcher_*` tests).
+
+#![cfg(feature = "modelcheck")]
+
+use std::time::Duration;
+
+use cft_rag::filter::cuckoo::{CuckooConfig, CuckooFilter};
+use cft_rag::filter::sharded::ShardedCuckooFilter;
+use cft_rag::forest::address::EntityAddress;
+use cft_rag::modelcheck::{explore, try_explore, Config};
+use cft_rag::sync::{thread, Arc, Mutex, RwLock};
+
+/// A table small enough that a handful of inserts forces a doubling,
+/// stepped one bucket at a time so migrations stay pending across many
+/// scheduling points.
+fn tiny_cfg() -> CuckooConfig {
+    CuckooConfig {
+        initial_buckets: 2,
+        slots: 4,
+        load_threshold: 0.5,
+        migration_step_buckets: 1,
+        sort_by_temperature: false,
+        ..CuckooConfig::default()
+    }
+}
+
+fn addr(i: u32) -> EntityAddress {
+    EntityAddress::new(i, i)
+}
+
+/// Exploration budget for the filter bodies: fewer seeds than the
+/// checker's own unit tests (each schedule here walks a real filter),
+/// a window sized to the bodies' actual step counts.
+fn filter_cfg(iterations: u64) -> Config {
+    Config {
+        iterations,
+        change_window: 256,
+        max_steps: 50_000,
+        ..Config::default()
+    }
+}
+
+/// PR-1 bug class, on the real structure: stable keys must survive
+/// expansion churn — concurrent fresh inserts forcing doublings, a
+/// maintainer stepping the migration, and a delete/re-insert retry
+/// loop — under every explored interleaving.
+#[test]
+fn migration_churn_never_loses_entries() {
+    explore("migration_churn_never_loses_entries", &filter_cfg(24), || {
+        let f = Arc::new(ShardedCuckooFilter::new(tiny_cfg(), 1));
+        for k in 0..3u64 {
+            assert!(f.insert(k, &[addr(k as u32)]));
+        }
+
+        let inserter = {
+            let f = Arc::clone(&f);
+            thread::spawn(move || {
+                // enough fresh keys to force at least one doubling
+                for k in 100..106u64 {
+                    assert!(f.insert(k, &[addr(k as u32)]), "table full");
+                }
+            })
+        };
+        let maintainer = {
+            let f = Arc::clone(&f);
+            thread::spawn(move || {
+                for _ in 0..4 {
+                    f.maintain(); // steps any pending migration
+                }
+            })
+        };
+        let retrier = {
+            let f = Arc::clone(&f);
+            thread::spawn(move || {
+                // the PR-1 shape: a key deleted and re-inserted while
+                // buckets are migrating must land in exactly one place
+                for _ in 0..2 {
+                    assert!(f.delete(2));
+                    assert!(f.insert(2, &[addr(2)]));
+                }
+            })
+        };
+        inserter.join().unwrap();
+        maintainer.join().unwrap();
+        retrier.join().unwrap();
+
+        f.maintain();
+        for k in (0..3u64).chain(100..106u64) {
+            assert!(f.contains_exact(k), "key {k} lost in migration churn");
+            let addrs = f.lookup_collect(k).expect("addresses lost");
+            assert_eq!(addrs.len(), 1, "key {k} address list corrupted");
+        }
+    });
+}
+
+/// PR-2 generation invariant: while a doubling is stepped forward and
+/// fresh inserts land in the target generation, a reader holding the
+/// shard read-lock sees every stable key in exactly one generation —
+/// never zero (lost), never two (duplicated).
+#[test]
+fn reader_observes_exactly_one_generation() {
+    explore("reader_observes_exactly_one_generation", &filter_cfg(24), || {
+        let mut filter = CuckooFilter::new(tiny_cfg());
+        let mut k = 0u64;
+        while !filter.migration_pending() {
+            assert!(filter.insert(k, &[addr(k as u32)]), "table full");
+            k += 1;
+            assert!(k < 64, "expansion never triggered");
+        }
+        let stable = k; // keys 0..stable are in, migration in flight
+        let f = Arc::new(RwLock::new(filter));
+
+        let migrator = {
+            let f = Arc::clone(&f);
+            thread::spawn(move || {
+                while f.write().unwrap().migrate_step() {}
+            })
+        };
+        let inserter = {
+            let f = Arc::clone(&f);
+            thread::spawn(move || {
+                for k in 200..203u64 {
+                    assert!(
+                        f.write().unwrap().insert(k, &[addr(k as u32)]),
+                        "table full"
+                    );
+                }
+            })
+        };
+        let reader = {
+            let f = Arc::clone(&f);
+            thread::spawn(move || {
+                for _ in 0..4 {
+                    let g = f.read().unwrap();
+                    for k in 0..stable {
+                        assert_eq!(
+                            g.occurrences(k),
+                            1,
+                            "key {k} not in exactly one generation"
+                        );
+                    }
+                }
+            })
+        };
+        migrator.join().unwrap();
+        inserter.join().unwrap();
+        reader.join().unwrap();
+
+        let g = f.read().unwrap();
+        for k in (0..stable).chain(200..203u64) {
+            assert_eq!(g.occurrences(k), 1, "key {k} duplicated or lost");
+        }
+    });
+}
+
+/// PR-2 stale-plan invariant: a temperature re-sort planned against a
+/// read-locked snapshot races a mutator (delete + insert + address
+/// push). Whatever `apply_bucket_plan` decides — apply or reject as
+/// stale — no surviving key may be lost, duplicated, or detached from
+/// its address list.
+#[test]
+fn stale_maintenance_plan_is_rejected_or_safe() {
+    explore(
+        "stale_maintenance_plan_is_rejected_or_safe",
+        &filter_cfg(32),
+        || {
+            let cfg = CuckooConfig {
+                initial_buckets: 4,
+                slots: 4,
+                sort_by_temperature: true,
+                ..CuckooConfig::default()
+            };
+            let mut filter = CuckooFilter::new(cfg);
+            for k in 0..6u64 {
+                assert!(filter.insert(k, &[addr(k as u32)]));
+            }
+            // skew temperatures so the planner has re-sorts to propose
+            for _ in 0..3 {
+                let _ = filter.lookup_shared(5);
+            }
+            let f = Arc::new(RwLock::new(filter));
+
+            let planner = {
+                let f = Arc::clone(&f);
+                thread::spawn(move || {
+                    let plans = f.read().unwrap().plan_maintenance();
+                    for plan in &plans {
+                        // stale plans must return false, not corrupt
+                        let _ = f.write().unwrap().apply_bucket_plan(plan);
+                    }
+                })
+            };
+            let mutator = {
+                let f = Arc::clone(&f);
+                thread::spawn(move || {
+                    let mut g = f.write().unwrap();
+                    assert!(g.delete(0));
+                    drop(g);
+                    let mut g = f.write().unwrap();
+                    assert!(g.insert(300, &[addr(300)]));
+                    drop(g);
+                    assert!(f.write().unwrap().push_address(5, addr(55)));
+                })
+            };
+            planner.join().unwrap();
+            mutator.join().unwrap();
+
+            let g = f.read().unwrap();
+            assert_eq!(g.occurrences(0), 0, "deleted key resurrected");
+            for k in (1..6u64).chain([300]) {
+                assert_eq!(g.occurrences(k), 1, "key {k} lost or duplicated");
+            }
+            let hit = g.lookup_shared(5).expect("key 5 lost");
+            assert_eq!(
+                g.addresses(hit).len(),
+                2,
+                "pushed address detached by a stale re-sort"
+            );
+        },
+    );
+}
+
+/// The demonstration that the suite has teeth: the *pre-PR-1* migration
+/// protocol — remove the entry from the old generation, then insert it
+/// into the target as a separate step — modeled with shim primitives.
+/// The explorer must find the schedule where a reader lands in the
+/// window and observes the key in zero generations.
+#[test]
+fn checker_catches_reintroduced_entry_loss() {
+    let cfg = Config {
+        iterations: 512,
+        change_window: 24,
+        max_steps: 20_000,
+        ..Config::default()
+    };
+    let failure = try_explore(&cfg, || {
+        // two generations of a one-key table
+        let old_gen = Arc::new(Mutex::new(vec![7u64]));
+        let new_gen = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let migrator = {
+            let (o, n) = (Arc::clone(&old_gen), Arc::clone(&new_gen));
+            thread::spawn(move || {
+                // BUG (pre-PR-1): the entry leaves the old table before
+                // it is placed in the new one — two critical sections
+                // with a preemptible window between them
+                let k = o.lock().unwrap().pop().unwrap();
+                n.lock().unwrap().push(k);
+            })
+        };
+        let occurrences = old_gen.lock().unwrap().len()
+            + new_gen.lock().unwrap().len();
+        assert_eq!(occurrences, 1, "key observed in {occurrences} generations");
+        migrator.join().unwrap();
+    })
+    .expect_err("the entry-loss window must be discoverable");
+    assert!(
+        failure.report.contains("generations"),
+        "wrong failure: {}",
+        failure.report
+    );
+}
+
+// ---------------------------------------------------------------------
+// Batcher / coordinator submit path
+// ---------------------------------------------------------------------
+
+use cft_rag::coordinator::batcher::{collect_batch, BatchOutcome, BatchPolicy};
+use cft_rag::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use cft_rag::sync::time::Instant;
+
+/// The coordinator's bounded enqueue, distilled (`coordinator/server.rs`
+/// `enqueue`): try_send with a backoff sleep until a deadline. Under the
+/// model the sleep is virtual — the full timeout costs no wall-clock.
+fn enqueue_bounded(
+    tx: &SyncSender<u32>,
+    job: u32,
+    max_wait: Duration,
+) -> Result<(), &'static str> {
+    let deadline = Instant::now() + max_wait;
+    let mut job = job;
+    loop {
+        match tx.try_send(job) {
+            Ok(()) => return Ok(()),
+            Err(TrySendError::Disconnected(_)) => return Err("stopped"),
+            Err(TrySendError::Full(j)) => {
+                if Instant::now() >= deadline {
+                    return Err("queue full");
+                }
+                job = j;
+                thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+}
+
+/// Submit-vs-stop: jobs whose submit wins the race against `stop()` are
+/// delivered to the batch loop exactly once; jobs that lose are refused
+/// cleanly. Mirrors `Coordinator::submit`'s `Mutex<Option<Sender>>`
+/// idiom, with the real `collect_batch` as the consumer.
+#[test]
+fn batcher_submit_vs_stop_loses_no_accepted_job() {
+    explore(
+        "batcher_submit_vs_stop_loses_no_accepted_job",
+        &Config { iterations: 48, change_window: 256, ..Config::default() },
+        || {
+            let (tx, rx) = sync_channel::<u32>(1);
+            let slot = Arc::new(Mutex::new(Some(tx)));
+            let accepted = Arc::new(Mutex::new(Vec::<u32>::new()));
+
+            let consumer = thread::spawn(move || {
+                let policy = BatchPolicy {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(2),
+                };
+                let mut got = Vec::new();
+                loop {
+                    match collect_batch(&rx, policy) {
+                        BatchOutcome::Batch(b) => got.extend(b),
+                        BatchOutcome::Closed => return got,
+                    }
+                }
+            });
+
+            let submitters: Vec<_> = (0..2u32)
+                .map(|s| {
+                    let slot = Arc::clone(&slot);
+                    let accepted = Arc::clone(&accepted);
+                    thread::spawn(move || {
+                        for job in [s * 10, s * 10 + 1] {
+                            // take the sender under the lock, send
+                            // outside it — submit() exactly; a None
+                            // slot is the clean "stopped" refusal
+                            let tx = slot.lock().unwrap().clone();
+                            if let Some(tx) = tx {
+                                // a cloned sender outlives stop();
+                                // the send must still deliver
+                                tx.send(job).unwrap();
+                                accepted.lock().unwrap().push(job);
+                            }
+                        }
+                    })
+                })
+                .collect();
+            let stopper = {
+                let slot = Arc::clone(&slot);
+                thread::spawn(move || {
+                    drop(slot.lock().unwrap().take());
+                })
+            };
+
+            for s in submitters {
+                s.join().unwrap();
+            }
+            stopper.join().unwrap();
+            let mut delivered = consumer.join().unwrap();
+            let mut accepted = accepted.lock().unwrap().clone();
+            delivered.sort_unstable();
+            accepted.sort_unstable();
+            assert_eq!(
+                delivered, accepted,
+                "accepted jobs must be delivered exactly once"
+            );
+        },
+    );
+}
+
+/// Backpressure: with the queue full and no consumer, a bounded submit
+/// waits out its (virtual) deadline and fails with "queue full"; once a
+/// consumer drains, the same submit succeeds; after stop it reports
+/// "stopped" immediately.
+#[test]
+fn batcher_enqueue_bounded_wait_on_full_queue() {
+    explore(
+        "batcher_enqueue_bounded_wait_on_full_queue",
+        &Config { iterations: 32, change_window: 128, ..Config::default() },
+        || {
+            // full queue, nobody draining: must give up at the deadline
+            let (tx, rx) = sync_channel::<u32>(1);
+            tx.send(0).unwrap();
+            let t = Instant::now();
+            assert_eq!(
+                enqueue_bounded(&tx, 1, Duration::from_millis(8)),
+                Err("queue full")
+            );
+            assert!(t.elapsed() >= Duration::from_millis(8), "gave up early");
+
+            // a consumer appears: the retry loop must get through
+            let drainer = thread::spawn(move || {
+                thread::sleep(Duration::from_millis(3));
+                assert_eq!(rx.recv().unwrap(), 0);
+                let next = rx.recv().unwrap();
+                assert_eq!(next, 2);
+            });
+            assert_eq!(
+                enqueue_bounded(&tx, 2, Duration::from_millis(50)),
+                Ok(())
+            );
+            drainer.join().unwrap();
+
+            // stopped coordinator: immediate, not a timeout
+            let (tx, rx) = sync_channel::<u32>(1);
+            drop(rx);
+            let t = Instant::now();
+            assert_eq!(
+                enqueue_bounded(&tx, 3, Duration::from_millis(30)),
+                Err("stopped")
+            );
+            assert_eq!(
+                t.elapsed(),
+                Duration::ZERO,
+                "disconnect must not wait out the deadline"
+            );
+        },
+    );
+}

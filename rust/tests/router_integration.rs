@@ -7,7 +7,7 @@
 
 use std::net::TcpListener;
 use std::sync::{Arc, Barrier, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use cft_rag::coordinator::tcp::{serve_listener, ServeHandle};
 use cft_rag::coordinator::{Coordinator, CoordinatorConfig};
@@ -749,13 +749,10 @@ fn prober_observes_load_and_readmits_restarted_backend() {
     for _ in 0..3 {
         assert!(is_ok(&router.query("describe the hierarchy around cardiology")));
     }
-    // poll-wait with a fresh deadline per phase (CI can be slow)
-    fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
-        let deadline = Instant::now() + Duration::from_secs(10);
-        while !cond() {
-            assert!(Instant::now() < deadline, "timed out waiting: {what}");
-            std::thread::sleep(Duration::from_millis(20));
-        }
+    // poll-wait with a fresh, generous deadline per phase (CI can be
+    // slow); no bare sleeps — see `util::wait`
+    fn wait_until(what: &str, cond: impl FnMut() -> bool) {
+        cft_rag::util::wait::require(what, Duration::from_secs(10), cond);
     }
     let observed = |router: &Router| -> u64 {
         router
@@ -782,4 +779,87 @@ fn prober_observes_load_and_readmits_restarted_backend() {
     assert!(router.backends()[0].health().readmissions() >= 1);
     // and the fleet serves as before
     assert!(is_ok(&router.query("what is the parent unit of oncology")));
+}
+
+#[test]
+fn elasticity_contracts_are_named_and_enforced() {
+    use cft_rag::router::contracts;
+
+    // the five ROADMAP invariants exist as named executable assertions,
+    // and every test build enforces them (debug_assertions) — a release
+    // soak can force them with `--features contracts`
+    assert!(contracts::enabled(), "test builds must enforce the contracts");
+    assert_eq!(
+        contracts::ALL,
+        [
+            contracts::SERVING_SET_FULLY_INDEXED,
+            contracts::EPOCH_GATED_MEMBERSHIP,
+            contracts::MINIMAL_KEY_MOVEMENT,
+            contracts::DUAL_WRITE_COVERAGE,
+            contracts::SINGLE_FLIGHT_REBALANCE,
+        ]
+    );
+
+    let ds = dataset(4);
+    let (backends, router) = partitioned_cluster(&ds, 3, 2, &quiet_cfg());
+    assert_eq!(router.ring_epoch(), 0);
+
+    // A joiner whose partition claims the WRONG slice (index 0 of the
+    // new ring instead of its own): it NACKs the warm-up inserts, the
+    // join aborts mid-handoff, and the wired check_abort_unchanged
+    // assertion proves the abort left the serving membership untouched
+    // [single-flight-rebalance: "a failed rebalance changes nothing"].
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind joiner");
+    let joiner_addr = listener.local_addr().unwrap().to_string();
+    let mut new_list: Vec<String> =
+        backends.iter().map(|b| b.addr.clone()).collect();
+    new_list.push(joiner_addr.clone());
+    let mut bad_joiner = TestBackend::start_on(
+        &ds,
+        listener,
+        RagConfig {
+            replication_factor: 2,
+            key_partition: Some(
+                KeyPartition::new(new_list.clone(), 0, 2)
+                    .expect("mis-sliced partition"),
+            ),
+            ..RagConfig::default()
+        },
+    );
+    let reply = router.join(&joiner_addr);
+    assert_eq!(
+        reply.get("ok"),
+        Some(&Json::Bool(false)),
+        "a joiner NACKing its warm-up must abort the join: {reply}"
+    );
+    assert_eq!(router.ring_epoch(), 0, "failed join must not roll the epoch");
+    assert_eq!(router.num_backends(), 3, "failed join must not admit");
+    bad_joiner.kill();
+
+    // The same address rejoining correctly runs the full wired gauntlet:
+    // window-open [epoch-gated-membership + single-flight-rebalance],
+    // the movement plan [serving-set-fully-indexed half: every changed
+    // key is streamed; minimal-key-movement half: nothing else is],
+    // per-routing replica-set sanity [serving-set-fully-indexed], and
+    // the epoch commit [epoch-gated-membership]. (dual-write-coverage
+    // fires on writes inside the window; unit-tested in
+    // `router::contracts`.)
+    let listener = TcpListener::bind(&joiner_addr).expect("rebind joiner");
+    let _joiner = TestBackend::start_on(
+        &ds,
+        listener,
+        RagConfig {
+            replication_factor: 2,
+            key_partition: Some(
+                KeyPartition::joining(new_list, 3, 2)
+                    .expect("joining partition"),
+            ),
+            ..RagConfig::default()
+        },
+    );
+    let reply = router.join(&joiner_addr);
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(router.ring_epoch(), 1);
+    assert_eq!(router.num_backends(), 4);
+    assert!(is_ok(&router.query("describe the hierarchy around cardiology")));
 }

@@ -1,13 +1,89 @@
 #!/usr/bin/env bash
 # Tier-1 verify + lint gate. Run from the repository root:
 #
-#   scripts/check.sh           # fmt + clippy + build + test
-#   scripts/check.sh --fast    # skip the release build
+#   scripts/check.sh                      # fmt + clippy + build + test
+#   scripts/check.sh --fast               # skip the release build
+#   scripts/check.sh --analysis           # all deep-analysis jobs
+#   scripts/check.sh --analysis modelcheck|miri|tsan   # one job
 #
-# CI runs exactly this script; keep it in sync with
-# .github/workflows/ci.yml and ROADMAP.md ("Tier-1 verify").
+# CI runs exactly this script — the push/PR job runs the default gate,
+# and the analysis jobs each run one `--analysis` selector — so the
+# local gate and .github/workflows/ci.yml cannot drift. Keep in sync
+# with ROADMAP.md ("Tier-1 verify") and docs/TESTING.md (the
+# verification pyramid these jobs implement).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# --------------------------------------------------------------------
+# Deep analysis: deterministic model checking (stable toolchain) plus
+# the two nightly sanitizer jobs. Nightly-only jobs degrade to a loud
+# skip when the toolchain/component is missing, so `--analysis` is
+# runnable on any dev box without lying about what it covered.
+# --------------------------------------------------------------------
+run_modelcheck() {
+  # The default gate lints without the feature, so the shim/scheduler
+  # code and the schedule suite are cfg'd out there — lint them here.
+  echo "==> cargo clippy --features modelcheck -D warnings"
+  cargo clippy --workspace --all-targets --features modelcheck -- -D warnings
+
+  # The whole suite with the sync shims routed through the scheduler:
+  # proves the feature changes nothing off-model, then explores the
+  # schedule suite (tests/modelcheck_schedules.rs) seed by seed.
+  echo "==> cargo test --features modelcheck (schedule exploration)"
+  cargo test -q --features modelcheck
+
+  # The feature must be zero-overhead when disabled: the bench graph
+  # (release profile, no feature) has to keep compiling against the
+  # very same `sync` names the instrumented build wraps.
+  echo "==> cargo bench --no-run (modelcheck off: zero-overhead check)"
+  cargo bench --no-run
+}
+
+run_miri() {
+  # Scoped to the filter unit tests: they drive the crate's one unsafe
+  # read path (the SWAR bucket scan in filter/cuckoo.rs) through every
+  # table geometry; heavyweight loops are #[cfg_attr(miri, ignore)]d.
+  if ! cargo +nightly miri --version >/dev/null 2>&1; then
+    echo "SKIP miri: nightly toolchain with the miri component not installed"
+    echo "      (rustup toolchain install nightly && rustup +nightly component add miri)"
+    return 0
+  fi
+  echo "==> cargo +nightly miri test --lib -- filter::"
+  cargo +nightly miri test -p cft-rag --lib -- filter::
+}
+
+run_tsan() {
+  # ThreadSanitizer over the real-thread suite: catches data races on
+  # plain std primitives that the modelcheck shims do not wrap.
+  # Needs nightly + rust-src (std is rebuilt instrumented).
+  if ! cargo +nightly --version >/dev/null 2>&1; then
+    echo "SKIP tsan: nightly toolchain not installed"
+    return 0
+  fi
+  if ! rustup component list --toolchain nightly 2>/dev/null \
+      | grep -q '^rust-src.*(installed)'; then
+    echo "SKIP tsan: rust-src component missing on nightly"
+    echo "      (rustup +nightly component add rust-src)"
+    return 0
+  fi
+  local host
+  host="$(rustc -vV | sed -n 's/^host: //p')"
+  echo "==> ThreadSanitizer: cargo +nightly test (target $host)"
+  RUSTFLAGS="-Z sanitizer=thread" \
+    cargo +nightly test -p cft-rag -q -Z build-std --target "$host"
+}
+
+if [[ "${1:-}" == "--analysis" ]]; then
+  case "${2:-all}" in
+    modelcheck) run_modelcheck ;;
+    miri)       run_miri ;;
+    tsan)       run_tsan ;;
+    all)        run_modelcheck; run_miri; run_tsan ;;
+    *) echo "unknown analysis job '${2}' (modelcheck|miri|tsan)"; exit 2 ;;
+  esac
+  echo "OK (analysis)"
+  exit 0
+fi
 
 fast=0
 [[ "${1:-}" == "--fast" ]] && fast=1
@@ -19,8 +95,8 @@ echo "==> cargo clippy -D warnings"
 cargo clippy --workspace --all-targets -- -D warnings
 
 # Docs are a first-class deliverable (README.md + docs/PROTOCOL.md +
-# docs/OPERATIONS.md + rustdoc): broken intra-doc links or malformed
-# rustdoc fail the gate.
+# docs/OPERATIONS.md + docs/TESTING.md + rustdoc): broken intra-doc
+# links or malformed rustdoc fail the gate.
 echo "==> cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace --quiet
 
