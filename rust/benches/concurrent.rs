@@ -37,11 +37,22 @@
 //! over two backends, at 2× the per-key index memory — both axes
 //! (throughput and per-backend index bytes) are reported.
 //!
+//! The PR-7 scenario: **connection scaling** — many idle connections
+//! squatting while a hot minority exchanges request lines, served once
+//! by the nonblocking reactor core (`reactor/server.rs`: one poll
+//! thread for every connection) and once by the pre-reactor shape (one
+//! OS thread per accepted connection). Reports how many concurrent
+//! connections each design sustained plus hot-path p50/p99/max — the
+//! reactor's idle connections cost bytes of state, the baseline's cost
+//! a thread each.
+//!
 //! Run: `cargo bench --bench concurrent`. Writes `results/concurrent.csv`,
 //! `results/concurrent_expansion.csv`, `results/concurrent_bloom.csv`,
-//! `results/concurrent_router.csv` and `results/concurrent_replication.csv`.
+//! `results/concurrent_router.csv`, `results/concurrent_replication.csv`,
+//! `results/concurrent_join.csv` and `results/concurrent_connscale.csv`.
 
-use std::net::TcpListener;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -57,6 +68,9 @@ use cft_rag::filter::cuckoo::CuckooConfig;
 use cft_rag::filter::sharded::ShardedCuckooFilter;
 use cft_rag::forest::EntityAddress;
 use cft_rag::rag::config::{KeyPartition, RagConfig, RouterConfig};
+use cft_rag::reactor::server::{
+    serve_lines, Completion, LineService, ServerConfig, ServerStats,
+};
 use cft_rag::retrieval::bloom_rag::BloomTRag;
 use cft_rag::retrieval::cuckoo_rag::CuckooTRag;
 use cft_rag::retrieval::sharded_rag::ShardedCuckooTRag;
@@ -88,6 +102,24 @@ fn main() {
         spec("router-clients", "concurrent router clients", Some("8"), false),
         spec("router-workers", "workers per routed backend", Some("2"), false),
         spec("router-trees", "forest size for the router scenario", Some("60"), false),
+        spec(
+            "connscale-idle",
+            "idle squatter connections for the connection-scaling arm",
+            Some("10000"),
+            false,
+        ),
+        spec(
+            "connscale-hot",
+            "hot request-exchanging connections for the scaling arm",
+            Some("1000"),
+            false,
+        ),
+        spec(
+            "connscale-passes",
+            "request roundtrips per hot connection",
+            Some("3"),
+            false,
+        ),
         spec("bench", "ignored (cargo bench passes it)", None, true),
     ])
     .unwrap_or_else(|e| {
@@ -389,6 +421,9 @@ fn main() {
 
     // ---- elasticity: join a backend into a live R=2 fleet ----
     join_scenario(&args, &out);
+
+    // ---- connection scaling: reactor vs thread-per-connection ----
+    connscale_scenario(&args, &out);
 }
 
 /// The PR-3 acceptance scenario: the same client load against the
@@ -949,4 +984,220 @@ fn join_scenario(args: &Args, out: &str) {
     };
     csv.write_to(&join_out).expect("write join csv");
     println!("wrote {join_out}");
+}
+
+/// Both arms reply this exact line per request, so the measurement
+/// isolates the serving core: connection bookkeeping, framing, and
+/// scheduling — not request work.
+const CONNSCALE_REPLY: &str = "{\"ok\":true}";
+
+/// Reactor-arm service: zero request work.
+struct FixedReply;
+
+impl LineService for FixedReply {
+    fn serve_line(&self, _line: &str, done: Completion) {
+        done.reply(CONNSCALE_REPLY.to_string());
+    }
+}
+
+/// The pre-reactor serving shape: accept loop, one OS thread per
+/// accepted connection, blocking line IO — the baseline arm. Small
+/// stacks, so the arm is limited by what the OS lets it *spawn*, not
+/// by address space.
+fn thread_per_conn_server(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let spawned = std::thread::Builder::new()
+                .stack_size(64 * 1024)
+                .spawn(move || {
+                    let Ok(read_half) = stream.try_clone() else { return };
+                    let mut writer = stream;
+                    for line in BufReader::new(read_half).lines() {
+                        if line.is_err()
+                            || writer
+                                .write_all(CONNSCALE_REPLY.as_bytes())
+                                .is_err()
+                            || writer.write_all(b"\n").is_err()
+                        {
+                            break;
+                        }
+                    }
+                });
+            // Err = the OS refused another thread; the connection just
+            // drops and the sweep counts it as unsustained
+            drop(spawned);
+        }
+    })
+}
+
+/// One request roundtrip per pass per connection, spread over a bounded
+/// client worker pool (so 1000 hot *connections* do not need 1000
+/// client threads). Returns the per-request latencies in nanoseconds —
+/// requests that error or see EOF record nothing, which is how dropped
+/// connections fall out of the sustained count.
+fn sweep(conns: &mut [BufReader<TcpStream>], passes: usize) -> Vec<u64> {
+    if conns.is_empty() {
+        return Vec::new();
+    }
+    let workers = 16.min(conns.len());
+    let chunk = conns.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = conns
+            .chunks_mut(chunk)
+            .map(|slice| {
+                s.spawn(move || {
+                    let mut lat = Vec::with_capacity(slice.len() * passes);
+                    let mut line = String::new();
+                    for _ in 0..passes {
+                        for conn in slice.iter_mut() {
+                            let t0 = Instant::now();
+                            if conn.get_mut().write_all(b"ping\n").is_err() {
+                                continue;
+                            }
+                            line.clear();
+                            if matches!(conn.read_line(&mut line), Ok(n) if n > 0)
+                            {
+                                lat.push(t0.elapsed().as_nanos() as u64);
+                            }
+                        }
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("sweep worker"))
+            .collect()
+    })
+}
+
+/// Open up to `n` connections; stops early when the OS runs out of
+/// descriptors — the point where the *client* side caps the experiment.
+fn open_conns(addr: std::net::SocketAddr, n: usize) -> Vec<BufReader<TcpStream>> {
+    let mut conns = Vec::with_capacity(n);
+    for _ in 0..n {
+        let Ok(s) = TcpStream::connect(addr) else { break };
+        let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+        let _ = s.set_nodelay(true);
+        conns.push(BufReader::new(s));
+    }
+    conns
+}
+
+/// The PR-7 acceptance scenario: `connscale-idle` connections squat
+/// (admitted, then silent) while `connscale-hot` connections exchange
+/// request lines, against the reactor serving core and against
+/// thread-per-connection. "Sustained" is measured, not assumed: at the
+/// end every connection — idle and hot — must still complete a
+/// roundtrip to count.
+fn connscale_scenario(args: &Args, out: &str) {
+    let idle_target: usize = args.num_or("connscale-idle", 10_000);
+    let hot_target: usize = args.num_or("connscale-hot", 1_000);
+    let passes: usize = args.num_or("connscale-passes", 3).max(1);
+
+    println!(
+        "\nconnection scaling ({idle_target} idle + {hot_target} hot \
+         clients, {passes} roundtrips/hot conn):"
+    );
+    let mut csv = CsvTable::new(&[
+        "design",
+        "idle_target",
+        "hot_target",
+        "sustained_conns",
+        "requests",
+        "p50_us",
+        "p99_us",
+        "max_ms",
+    ]);
+    for design in ["reactor", "thread-per-conn"] {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut reactor = None;
+        let mut baseline = None;
+        if design == "reactor" {
+            let config = ServerConfig {
+                // unlimited admission, no reaping: idle squatters are
+                // the load, and capacity is what's being measured
+                max_connections: 0,
+                idle_timeout: Duration::ZERO,
+                ..ServerConfig::default()
+            };
+            reactor = Some(
+                serve_lines(
+                    listener,
+                    Arc::new(FixedReply),
+                    config,
+                    Arc::new(ServerStats::default()),
+                )
+                .expect("reactor server"),
+            );
+        } else {
+            baseline = Some(thread_per_conn_server(listener, stop.clone()));
+        }
+
+        let mut idle = open_conns(addr, idle_target);
+        let mut hot = open_conns(addr, hot_target);
+
+        // the hot phase, timed per request
+        let mut lat = sweep(&mut hot, passes);
+        let requests = lat.len();
+        lat.sort_unstable();
+        let pick = |q: f64| {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((lat.len() - 1) as f64 * q) as usize]
+            }
+        };
+        let (p50_us, p99_us) = (
+            pick(0.50) as f64 / 1_000.0,
+            pick(0.99) as f64 / 1_000.0,
+        );
+        let max_ms = lat.last().copied().unwrap_or(0) as f64 / 1e6;
+
+        // verification: every connection still alive counts once
+        let sustained = sweep(&mut idle, 1).len() + sweep(&mut hot, 1).len();
+        println!(
+            "  {design:<16} sustained {sustained:>6} conns  hot p50 \
+             {p50_us:>8.1} us  p99 {p99_us:>8.1} us  max {max_ms:>7.2} ms  \
+             ({requests} requests)"
+        );
+        csv.push(&[
+            design.to_string(),
+            idle_target.to_string(),
+            hot_target.to_string(),
+            sustained.to_string(),
+            requests.to_string(),
+            format!("{p50_us}"),
+            format!("{p99_us}"),
+            format!("{max_ms}"),
+        ]);
+
+        drop(idle);
+        drop(hot);
+        if let Some(mut h) = reactor.take() {
+            h.shutdown();
+        }
+        if let Some(t) = baseline.take() {
+            stop.store(true, Ordering::Relaxed);
+            // unblock the accept loop so it observes the stop flag
+            let _ = TcpStream::connect(addr);
+            let _ = t.join();
+        }
+    }
+    let conn_out = match out.strip_suffix(".csv") {
+        Some(stem) => format!("{stem}_connscale.csv"),
+        None => format!("{out}_connscale.csv"),
+    };
+    csv.write_to(&conn_out).expect("write connscale csv");
+    println!("wrote {conn_out}");
 }

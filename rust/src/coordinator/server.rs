@@ -87,10 +87,30 @@ pub struct ServeResponse {
     pub total_time: Duration,
 }
 
+/// Where a job's response goes: the channel a blocking
+/// [`Coordinator::submit`] caller waits on, or the callback the
+/// nonblocking TCP front door registered via
+/// [`Coordinator::submit_with`] (which queues the reply line back on
+/// the connection's reactor).
+enum Delivery {
+    Channel(Sender<Result<ServeResponse>>),
+    Callback(Box<dyn FnOnce(Result<ServeResponse>) + Send>),
+}
+
+impl Delivery {
+    fn deliver(self, out: Result<ServeResponse>) {
+        match self {
+            // a caller that stopped listening is not an error
+            Delivery::Channel(tx) => drop(tx.send(out)),
+            Delivery::Callback(f) => f(out),
+        }
+    }
+}
+
 struct Job {
     query: String,
     enqueued: Instant,
-    resp: Sender<Result<ServeResponse>>,
+    resp: Delivery,
 }
 
 struct WorkItem {
@@ -127,6 +147,12 @@ pub struct Coordinator {
     /// health prober refuses to admit a backend whose epoch does not
     /// match the serving ring's.
     partition_epoch: std::sync::atomic::AtomicU64,
+    /// Front-door connection cap ([`RagConfig::max_connections`]),
+    /// read by `coordinator/tcp.rs` when it builds the listener's
+    /// reactor config.
+    max_connections: usize,
+    /// Front-door idle reap timeout ([`RagConfig::idle_timeout`]).
+    idle_timeout: Duration,
 }
 
 impl Coordinator {
@@ -241,7 +267,7 @@ impl Coordinator {
                                 .record_request(r.total_time, r.retrieval_time),
                             Err(_) => metrics.record_failure(),
                         }
-                        let _ = item.job.resp.send(out);
+                        item.job.resp.deliver(out);
                     })
                     .expect("spawn worker"),
             );
@@ -261,6 +287,8 @@ impl Coordinator {
             partition_epoch: std::sync::atomic::AtomicU64::new(
                 partition_epoch,
             ),
+            max_connections: rag_cfg.max_connections,
+            idle_timeout: rag_cfg.idle_timeout,
         })
     }
 
@@ -277,7 +305,7 @@ impl Coordinator {
         let job = Job {
             query: query.to_string(),
             enqueued: Instant::now(),
-            resp: resp_tx,
+            resp: Delivery::Channel(resp_tx),
         };
         // clone the sender under the lock, enqueue outside it: the
         // bounded full-queue wait must not serialize other submitters
@@ -289,6 +317,55 @@ impl Coordinator {
             .ok_or_else(|| CftError::Coordinator("coordinator stopped".into()))?;
         enqueue(&queue, job, SUBMIT_FULL_TIMEOUT)?;
         Ok(resp_rx)
+    }
+
+    /// Submit a query whose response (or enqueue failure) is delivered
+    /// through `done` instead of a channel — the nonblocking TCP front
+    /// door's path: the calling reactor thread must never block, so a
+    /// full request queue fails fast through the callback rather than
+    /// waiting out [`SUBMIT_FULL_TIMEOUT`] like
+    /// [`submit`](Coordinator::submit) does (over TCP, immediate
+    /// backpressure beats a silently stalled accept loop).
+    pub fn submit_with(
+        &self,
+        query: &str,
+        done: Box<dyn FnOnce(Result<ServeResponse>) + Send>,
+    ) {
+        let queue = match self.submit_tx.lock().unwrap().clone() {
+            Some(q) => q,
+            None => {
+                done(Err(CftError::Coordinator("coordinator stopped".into())));
+                return;
+            }
+        };
+        let job = Job {
+            query: query.to_string(),
+            enqueued: Instant::now(),
+            resp: Delivery::Callback(done),
+        };
+        match queue.try_send(job) {
+            Ok(()) => {}
+            Err(TrySendError::Disconnected(job)) => job.resp.deliver(Err(
+                CftError::Coordinator(
+                    "request queue closed (batcher gone)".into(),
+                ),
+            )),
+            Err(TrySendError::Full(job)) => {
+                job.resp.deliver(Err(CftError::Coordinator(format!(
+                    "request queue full ({SUBMIT_QUEUE_DEPTH} pending)"
+                ))))
+            }
+        }
+    }
+
+    /// Front-door connection cap this backend was configured with.
+    pub fn max_connections(&self) -> usize {
+        self.max_connections
+    }
+
+    /// Front-door idle reap timeout this backend was configured with.
+    pub fn idle_timeout(&self) -> Duration {
+        self.idle_timeout
     }
 
     /// Submit and wait.
@@ -542,9 +619,7 @@ fn dispatch_batch(
             Err(e) => {
                 let msg = e.to_string();
                 for job in chunk {
-                    let _ = job
-                        .resp
-                        .send(Err(CftError::Runtime(msg.clone())));
+                    job.resp.deliver(Err(CftError::Runtime(msg.clone())));
                 }
             }
         }
@@ -678,7 +753,11 @@ mod tests {
 
     fn test_job(query: &str) -> Job {
         let (resp, _rx) = crate::sync::mpsc::channel();
-        Job { query: query.into(), enqueued: Instant::now(), resp }
+        Job {
+            query: query.into(),
+            enqueued: Instant::now(),
+            resp: Delivery::Channel(resp),
+        }
     }
 
     #[test]

@@ -5,6 +5,20 @@
 //! backend-side implementation (the router front door in `router/`
 //! speaks the same lines).
 //!
+//! Serving runs on the nonblocking reactor
+//! ([`crate::reactor::server`]): one event-loop thread drives the
+//! accept loop and a per-connection protocol state machine, instead of
+//! one OS thread per accepted connection. Control lines are answered
+//! synchronously on the reactor thread (they are index metadata
+//! operations); queries hand off to the coordinator's batcher/worker
+//! pool via [`Coordinator::submit_with`] and the reply is queued back
+//! to the connection when the worker finishes — so a slow retrieval
+//! never blocks the event loop, and replies on one connection always
+//! come back in request order (strict pipelining, see
+//! `docs/PROTOCOL.md`). Connection limits and idle reaping come from
+//! [`RagConfig::max_connections`] / [`RagConfig::idle_timeout`]
+//! (`docs/OPERATIONS.md` §Connection limits and timeouts).
+//!
 //! Protocol extras beyond plain queries (all parsed by
 //! [`parse_control`]; the `\x01` prefix keeps control lines out of the
 //! natural-language query space):
@@ -12,8 +26,11 @@
 //! * `:quit` closes the connection.
 //! * [`STATS_REQUEST`] (`\x01stats`) returns the coordinator's
 //!   [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot) as one
-//!   JSON line — the shard router's health prober uses it to observe
-//!   backend *load*, and it is handy for single-node ops too.
+//!   JSON line — stamped with live serving-pressure gauges
+//!   (`open_connections`, `reactor_queue_depth`, `overloaded_rejects`,
+//!   `idle_deadlines_expired`) — the shard router's health prober uses
+//!   it to observe backend *load*, and it is handy for single-node ops
+//!   too.
 //! * [`INSERT_REQUEST`] (`\x01insert <tree> <node> <entity…>`) and
 //!   [`DELETE_REQUEST`] (`\x01delete <entity…>`) apply dynamic
 //!   entity-index point updates (paper §5 / Algorithm 2) through
@@ -32,25 +49,28 @@
 //!   router's prober matches before (re-)admitting a backend.
 //!
 //! [`KeyPartition`]: crate::rag::config::KeyPartition
+//! [`RagConfig::max_connections`]: crate::rag::config::RagConfig::max_connections
+//! [`RagConfig::idle_timeout`]: crate::rag::config::RagConfig::idle_timeout
 //!
 //! Serving comes in three lifetimes: [`serve`] (runs until the process
 //! dies — the CLI path), [`serve_with_shutdown`], which returns a
-//! [`ServeHandle`] whose `shutdown()` stops the accept loop and joins
-//! it — so tests (the router's especially) can start and stop real TCP
+//! [`ServeHandle`] whose `shutdown()` stops the reactor and joins it —
+//! so tests (the router's especially) can start and stop real TCP
 //! backends in-process without leaking listeners — and
 //! [`serve_listener`], the pre-bound-listener form: a key-partitioned
 //! fleet must fix every backend's address *before* any index is built,
 //! so callers bind all listeners first, build each coordinator with its
 //! [`KeyPartition`](crate::rag::config::KeyPartition), then serve.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::thread::JoinHandle;
+use std::net::{SocketAddr, TcpListener};
 
-use crate::coordinator::server::Coordinator;
+use crate::coordinator::server::{Coordinator, ServeResponse};
 use crate::error::Result;
+use crate::reactor::server::{
+    serve_lines, Completion, LineService, ServerConfig, ServerHandle,
+    ServerStats,
+};
+use crate::sync::Arc;
 use crate::util::json::Json;
 use crate::util::log;
 
@@ -188,18 +208,17 @@ pub fn parse_control(
     })
 }
 
-/// Serve until the process is killed. Each connection gets a thread;
-/// queries are newline-delimited; responses are JSON lines.
+/// Serve until the process is killed: bind, start the reactor, and
+/// block on its event-loop thread. The CLI path.
 pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    log::info!("cft-rag listening on {addr}");
-    accept_loop(coordinator, listener, &AtomicBool::new(false));
+    let mut handle = serve_listener(coordinator, TcpListener::bind(addr)?)?;
+    handle.inner.wait();
     Ok(())
 }
 
-/// Bind `addr` and serve on a background thread; the returned handle
-/// stops the listener on demand. Bind to port 0 for an ephemeral port
-/// (the handle reports the resolved address).
+/// Bind `addr` and serve on a background reactor thread; the returned
+/// handle stops the listener on demand. Bind to port 0 for an
+/// ephemeral port (the handle reports the resolved address).
 pub fn serve_with_shutdown(
     coordinator: Arc<Coordinator>,
     addr: &str,
@@ -217,154 +236,89 @@ pub fn serve_listener(
     listener: TcpListener,
 ) -> Result<ServeHandle> {
     let local = listener.local_addr()?;
-    let stop = Arc::new(AtomicBool::new(false));
-    let thread = {
-        let stop = stop.clone();
-        std::thread::Builder::new()
-            .name("cft-tcp-accept".into())
-            .spawn(move || accept_loop(coordinator, listener, &stop))
-            .expect("spawn accept loop")
+    let stats = Arc::new(ServerStats::default());
+    let config = ServerConfig {
+        max_connections: coordinator.max_connections(),
+        idle_timeout: coordinator.idle_timeout(),
+        ..ServerConfig::default()
     };
-    log::info!("cft-rag listening on {local} (with shutdown handle)");
-    Ok(ServeHandle { addr: local, stop, thread: Some(thread) })
-}
-
-/// Accept until `stop` is raised (checked after every accept outcome;
-/// [`ServeHandle::shutdown`] raises it and then connects-to-self so a
-/// blocked `accept()` wakes immediately).
-fn accept_loop(
-    coordinator: Arc<Coordinator>,
-    listener: TcpListener,
-    stop: &AtomicBool,
-) {
-    for stream in listener.incoming() {
-        if stop.load(Ordering::Acquire) {
-            // the wakeup (or a late client) connection is dropped
-            // unserved; the listener closes when this frame returns
-            break;
-        }
-        accept_one(&coordinator, stream);
-    }
+    let service = Arc::new(CoordinatorService {
+        coordinator,
+        stats: Arc::clone(&stats),
+    });
+    let inner = serve_lines(listener, service, config, stats)?;
+    log::info!("cft-rag listening on {local} (nonblocking reactor)");
+    Ok(ServeHandle { inner })
 }
 
 /// A running TCP front end that can be stopped.
 pub struct ServeHandle {
-    addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    thread: Option<JoinHandle<()>>,
+    inner: ServerHandle,
 }
 
 impl ServeHandle {
     /// The bound address (resolved — useful after binding port 0).
     pub fn addr(&self) -> SocketAddr {
-        self.addr
+        self.inner.addr()
     }
 
-    /// Stop accepting and join the accept thread. Connections already
-    /// handed to handler threads drain on their own (they exit when the
-    /// peer closes or `:quit`s); the listener socket itself is released
+    /// The front end's live serving-pressure counters (also stamped
+    /// into every `\x01stats` reply).
+    pub fn stats(&self) -> Arc<ServerStats> {
+        self.inner.stats()
+    }
+
+    /// Stop the reactor and join its thread. Open connections are
+    /// dropped (in-flight worker replies are discarded at the closed
+    /// completion queue); the listener socket itself is released
     /// before this returns, so the port can be rebound.
     pub fn shutdown(mut self) {
-        self.stop_and_join();
-    }
-
-    fn stop_and_join(&mut self) {
-        let Some(thread) = self.thread.take() else { return };
-        self.stop.store(true, Ordering::Release);
-        // connect-to-self: unblocks an accept() with nothing inbound
-        let _ = TcpStream::connect(self.addr);
-        let _ = thread.join();
+        self.inner.shutdown();
     }
 }
 
-impl Drop for ServeHandle {
-    fn drop(&mut self) {
-        // dropping the handle must not leak the listener thread
-        self.stop_and_join();
-    }
+/// The coordinator's [`LineService`] implementation — one per served
+/// listener. Control lines are answered synchronously on the reactor
+/// thread (index metadata operations, not retrievals); plain queries
+/// go through [`Coordinator::submit_with`], whose worker-side callback
+/// queues the reply back onto the connection's reactor, so a slow
+/// retrieval never stalls the event loop.
+struct CoordinatorService {
+    coordinator: Arc<Coordinator>,
+    /// Shared with the reactor loop; read when composing `\x01stats`.
+    stats: Arc<ServerStats>,
 }
 
-/// Handle one `accept()` outcome. Accept failures are *transient* from
-/// the listener's point of view — a reset half-open connection
-/// (`ECONNABORTED`), fd exhaustion (`EMFILE`), an interrupted syscall —
-/// so they are logged and survived; the pre-PR-2 `stream?` turned any
-/// one of them into the death of the whole listener.
-fn accept_one(coordinator: &Arc<Coordinator>, stream: std::io::Result<TcpStream>) {
-    match stream {
-        Ok(stream) => {
-            let c = coordinator.clone();
-            std::thread::spawn(move || {
-                let _ = handle_conn(c, stream);
-            });
-        }
-        Err(e) => {
-            log::warn!("accept failed (transient; listener continues): {e}");
-            // A *persistent* failure (e.g. EMFILE under fd exhaustion)
-            // would otherwise hot-spin the accept loop at 100% CPU and
-            // flood the log; a short pause bounds the retry rate while
-            // still recovering as soon as the condition clears. EINTR
-            // is the one kind where an immediate retry is always right.
-            if e.kind() != std::io::ErrorKind::Interrupted {
-                std::thread::sleep(std::time::Duration::from_millis(50));
-            }
-        }
-    }
-}
-
-fn handle_conn(coordinator: Arc<Coordinator>, stream: TcpStream) -> std::io::Result<()> {
-    let peer = stream.peer_addr()?;
-    log::debug!("connection from {peer}");
-    let reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    for line in reader.lines() {
-        let line = line?;
-        if coordinator.is_stopped() {
+impl LineService for CoordinatorService {
+    fn serve_line(&self, line: &str, done: Completion) {
+        if self.coordinator.is_stopped() {
             // behave like a dead process: close instead of answering —
             // a live `\x01stats` on a stopped backend would hide its
             // death from the router's health prober
-            break;
+            done.close();
+            return;
         }
-        let query = line.trim();
-        if query.is_empty() {
-            continue;
+        if line == ":quit" {
+            done.close();
+            return;
         }
-        if query == ":quit" {
-            break;
-        }
-        let reply = match parse_control(query) {
-            Some(Ok(ControlLine::Stats)) => stats_reply(&coordinator),
+        let c = &self.coordinator;
+        let reply = match parse_control(line) {
+            Some(Ok(ControlLine::Stats)) => stats_reply(c, &self.stats),
             Some(Ok(ControlLine::Insert { tree, node, entity })) => {
-                update_ack(coordinator.update_entity(entity, tree, node))
+                update_ack(c.update_entity(entity, tree, node))
             }
             Some(Ok(ControlLine::Delete { entity })) => {
-                update_ack(coordinator.remove_entity(entity))
+                update_ack(c.remove_entity(entity))
             }
-            Some(Ok(ControlLine::Dump { entity })) => {
-                dump_reply(&coordinator, entity)
-            }
+            Some(Ok(ControlLine::Dump { entity })) => dump_reply(c, entity),
             Some(Ok(ControlLine::Repartition {
                 epoch,
                 replicas,
                 index,
                 backends,
-            })) => repartition_reply(
-                &coordinator,
-                epoch,
-                replicas,
-                index,
-                backends,
-            ),
-            Some(Ok(ControlLine::Purge)) => match coordinator.drop_disowned()
-            {
-                Ok(n) => Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("dropped", Json::Num(n as f64)),
-                ]),
-                Err(e) => Json::obj(vec![
-                    ("ok", Json::Bool(false)),
-                    ("error", Json::Str(e.to_string())),
-                ]),
-            },
+            })) => repartition_reply(c, epoch, replicas, index, backends),
+            Some(Ok(ControlLine::Purge)) => purge_reply(c),
             Some(Ok(
                 ControlLine::Join { .. } | ControlLine::Drain { .. },
             )) => Json::obj(vec![
@@ -382,24 +336,48 @@ fn handle_conn(coordinator: Arc<Coordinator>, stream: TcpStream) -> std::io::Res
                 ("ok", Json::Bool(false)),
                 ("error", Json::Str(reason)),
             ]),
-            None => respond(&coordinator, query),
+            None => {
+                let query = line;
+                c.submit_with(
+                    query,
+                    Box::new(move |out| {
+                        done.reply(query_reply(out).to_string());
+                    }),
+                );
+                return;
+            }
         };
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
+        done.reply(reply.to_string());
     }
-    Ok(())
 }
 
 /// The `\x01stats` payload: the coordinator's metrics snapshot stamped
 /// with the backend's `partition_epoch` — what the router's health
-/// prober matches against the serving ring's epoch before (re-)admitting
-/// the backend.
-fn stats_reply(coordinator: &Coordinator) -> Json {
+/// prober matches against the serving ring's epoch before
+/// (re-)admitting the backend — plus the front end's live
+/// serving-pressure gauges (`docs/PROTOCOL.md` §Stats).
+fn stats_reply(coordinator: &Coordinator, serving: &ServerStats) -> Json {
     let mut json = coordinator.metrics().snapshot().to_json();
     if let Json::Obj(m) = &mut json {
         m.insert(
             "partition_epoch".into(),
             Json::Num(coordinator.partition_epoch() as f64),
+        );
+        m.insert(
+            "open_connections".into(),
+            Json::Num(serving.open_connections() as f64),
+        );
+        m.insert(
+            "reactor_queue_depth".into(),
+            Json::Num(serving.reactor_queue_depth() as f64),
+        );
+        m.insert(
+            "overloaded_rejects".into(),
+            Json::Num(serving.overloaded_rejects() as f64),
+        );
+        m.insert(
+            "idle_deadlines_expired".into(),
+            Json::Num(serving.idle_deadlines_expired() as f64),
         );
     }
     json
@@ -468,6 +446,21 @@ fn repartition_reply(
     }
 }
 
+/// The `\x01purge` reply: how many disowned keys the drop pass
+/// reclaimed.
+fn purge_reply(coordinator: &Coordinator) -> Json {
+    match coordinator.drop_disowned() {
+        Ok(n) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("dropped", Json::Num(n as f64)),
+        ]),
+        Err(e) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str(e.to_string())),
+        ]),
+    }
+}
+
 /// The one-line ack for a dynamic-update control line: `ok` is whether
 /// the backend processed the request, `applied` whether the index
 /// actually changed (a deleted-but-absent key acks `applied:false`).
@@ -485,9 +478,16 @@ fn update_ack(outcome: Result<bool>) -> Json {
     }
 }
 
-/// Build the JSON reply for one query (exposed for tests).
+/// Build the JSON reply for one query, synchronously (exposed for
+/// tests and the thread-per-connection bench baseline).
 pub fn respond(coordinator: &Coordinator, query: &str) -> Json {
-    match coordinator.query_blocking(query) {
+    query_reply(coordinator.query_blocking(query))
+}
+
+/// One query outcome as its wire JSON — shared by [`respond`] and the
+/// nonblocking path's worker callback.
+fn query_reply(out: Result<ServeResponse>) -> Json {
+    match out {
         Ok(r) => Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("answer", Json::Str(r.answer)),
@@ -518,6 +518,7 @@ mod tests {
     use crate::rag::config::RagConfig;
     use crate::runtime::engine::{Engine, NativeEngine};
     use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
 
     fn coordinator() -> Arc<Coordinator> {
         let ds = HospitalDataset::generate(HospitalConfig {
@@ -539,6 +540,10 @@ mod tests {
         )
     }
 
+    fn served(c: Arc<Coordinator>) -> ServeHandle {
+        serve_listener(c, TcpListener::bind("127.0.0.1:0").unwrap()).unwrap()
+    }
+
     #[test]
     fn respond_builds_json() {
         let c = coordinator();
@@ -548,79 +553,100 @@ mod tests {
     }
 
     #[test]
-    fn accept_error_does_not_kill_listener() {
-        let c = coordinator();
-        // a transient accept failure is absorbed (pre-PR-2 this bubbled
-        // out of serve() and killed the listener)...
-        for kind in [
-            std::io::ErrorKind::ConnectionAborted,
-            std::io::ErrorKind::Interrupted,
-            std::io::ErrorKind::Other, // e.g. EMFILE surfaces as Other/Uncategorized
-        ] {
-            accept_one(&c, Err(std::io::Error::from(kind)));
-        }
-        // ...and the very same accept path still serves a real
-        // connection afterwards.
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let client = std::thread::spawn(move || {
-            let mut client = TcpStream::connect(addr).unwrap();
-            client
-                .write_all(b"what is the parent unit of cardiology\n:quit\n")
-                .unwrap();
-            let mut reader = BufReader::new(client);
-            let mut line = String::new();
-            reader.read_line(&mut line).unwrap();
-            line
-        });
-        let (stream, _) = listener.accept().unwrap();
-        accept_one(&c, Ok(stream));
-        let line = client.join().unwrap();
-        assert!(line.contains("\"ok\":true"), "{line}");
-    }
-
-    #[test]
-    fn stats_control_line_returns_metrics_json() {
-        let c = coordinator();
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let server = {
-            let c = c.clone();
-            std::thread::spawn(move || {
-                let (stream, _) = listener.accept().unwrap();
-                handle_conn(c, stream).unwrap();
-            })
-        };
-        let mut client = TcpStream::connect(addr).unwrap();
-        // one real query, then the stats line: the snapshot must count it
+    fn tcp_roundtrip() {
+        let handle = served(coordinator());
+        let mut client = TcpStream::connect(handle.addr()).unwrap();
         client
-            .write_all(b"what is the parent unit of cardiology\n\x01stats\n:quit\n")
+            .write_all(b"what is the parent unit of cardiology\n:quit\n")
             .unwrap();
-        let mut reader = BufReader::new(client.try_clone().unwrap());
+        let mut reader = BufReader::new(client);
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("\"ok\":true"), "{line}");
+        // :quit closes the connection from the server side
         line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+    }
+
+    #[test]
+    fn pipelined_lines_reply_in_request_order() {
+        let handle = served(coordinator());
+        let mut client = TcpStream::connect(handle.addr()).unwrap();
+        // a burst of sync control lines around an async query: replies
+        // must come back in request order even though the query detours
+        // through the worker pool while the stats lines are answered on
+        // the reactor thread
+        client
+            .write_all(
+                b"\x01stats\n\
+                  what is the parent unit of cardiology\n\
+                  \x01stats\n:quit\n",
+            )
+            .unwrap();
+        let mut reader = BufReader::new(client);
+        let mut next = || {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(line.trim()).expect("reply is JSON")
+        };
+        let before = next();
+        assert_eq!(
+            before.get("requests").and_then(Json::as_f64),
+            Some(0.0),
+            "{before}"
+        );
+        let answer = next();
+        assert_eq!(answer.get("ok"), Some(&Json::Bool(true)), "{answer}");
+        assert!(answer.get("answer").is_some(), "{answer}");
+        // the trailing stats line was held behind the query: it must
+        // observe the completed request
+        let after = next();
+        assert_eq!(
+            after.get("requests").and_then(Json::as_f64),
+            Some(1.0),
+            "{after}"
+        );
+    }
+
+    #[test]
+    fn stats_reply_reports_serving_pressure() {
+        let handle = served(coordinator());
+        let mut client = TcpStream::connect(handle.addr()).unwrap();
+        client.write_all(b"\x01stats\n:quit\n").unwrap();
+        let mut reader = BufReader::new(client);
+        let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         let snap = Json::parse(line.trim()).expect("stats reply is JSON");
-        assert_eq!(snap.get("requests").and_then(Json::as_f64), Some(1.0));
-        assert!(snap.get("total_mean_s").is_some());
-        server.join().unwrap();
+        // this connection is the one open connection, and the stats
+        // line itself is the one dispatched-but-uncompleted request at
+        // the moment the reply is composed
+        assert_eq!(
+            snap.get("open_connections").and_then(Json::as_f64),
+            Some(1.0),
+            "{snap}"
+        );
+        assert_eq!(
+            snap.get("reactor_queue_depth").and_then(Json::as_f64),
+            Some(1.0),
+            "{snap}"
+        );
+        assert_eq!(
+            snap.get("overloaded_rejects").and_then(Json::as_f64),
+            Some(0.0),
+            "{snap}"
+        );
+        assert_eq!(
+            snap.get("idle_deadlines_expired").and_then(Json::as_f64),
+            Some(0.0),
+            "{snap}"
+        );
     }
 
     #[test]
     fn stopped_coordinator_drops_connections_instead_of_answering() {
         let c = coordinator();
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let server = {
-            let c = c.clone();
-            std::thread::spawn(move || {
-                let (stream, _) = listener.accept().unwrap();
-                let _ = handle_conn(c, stream);
-            })
-        };
-        let mut client = TcpStream::connect(addr).unwrap();
+        let handle = served(c.clone());
+        let mut client = TcpStream::connect(handle.addr()).unwrap();
         c.stop();
         // even the stats control line must NOT be answered once the
         // coordinator is stopped — the router's prober relies on a dead
@@ -630,7 +656,6 @@ mod tests {
         let mut line = String::new();
         let n = reader.read_line(&mut line).unwrap();
         assert_eq!(n, 0, "expected EOF, got {line:?}");
-        server.join().unwrap();
     }
 
     #[test]
@@ -712,17 +737,8 @@ mod tests {
 
     #[test]
     fn rebalance_control_lines_roundtrip_over_tcp() {
-        let c = coordinator();
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let server = {
-            let c = c.clone();
-            std::thread::spawn(move || {
-                let (stream, _) = listener.accept().unwrap();
-                handle_conn(c, stream).unwrap();
-            })
-        };
-        let mut client = TcpStream::connect(addr).unwrap();
+        let handle = served(coordinator());
+        let mut client = TcpStream::connect(handle.addr()).unwrap();
         client
             .write_all(
                 b"\x01stats\n\
@@ -775,22 +791,12 @@ mod tests {
         // join is a router verb: backends refuse it
         let join = next();
         assert_eq!(join.get("ok"), Some(&Json::Bool(false)), "{join}");
-        server.join().unwrap();
     }
 
     #[test]
     fn update_control_lines_ack_over_tcp() {
-        let c = coordinator();
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let server = {
-            let c = c.clone();
-            std::thread::spawn(move || {
-                let (stream, _) = listener.accept().unwrap();
-                handle_conn(c, stream).unwrap();
-            })
-        };
-        let mut client = TcpStream::connect(addr).unwrap();
+        let handle = served(coordinator());
+        let mut client = TcpStream::connect(handle.addr()).unwrap();
         // delete a known entity, idempotently re-delete, reject garbage
         client
             .write_all(
@@ -813,29 +819,5 @@ mod tests {
         expect(true, true); // first delete applied
         expect(true, false); // second is an idempotent no-op
         expect(false, false); // out-of-range node rejected
-        server.join().unwrap();
-    }
-
-    #[test]
-    fn tcp_roundtrip() {
-        let c = coordinator();
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let server = {
-            let c = c.clone();
-            std::thread::spawn(move || {
-                let (stream, _) = listener.accept().unwrap();
-                handle_conn(c, stream).unwrap();
-            })
-        };
-        let mut client = TcpStream::connect(addr).unwrap();
-        client
-            .write_all(b"what is the parent unit of cardiology\n:quit\n")
-            .unwrap();
-        let mut reader = BufReader::new(client.try_clone().unwrap());
-        let mut line = String::new();
-        reader.read_line(&mut line).unwrap();
-        assert!(line.contains("\"ok\":true"), "{line}");
-        server.join().unwrap();
     }
 }

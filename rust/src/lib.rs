@@ -20,12 +20,14 @@
 //! property tests, the `modelcheck` schedule suite, sanitizers, TCP
 //! integration — is laid out in `docs/TESTING.md`.
 
-// Unsafe hygiene: the crate has exactly two unsafe sites (the SWAR
-// bucket-word read in `filter/cuckoo.rs` and the xla-gated
-// `unsafe impl Send for Runtime` in `runtime/client.rs`), both audited
-// and documented with `// SAFETY:` contracts. Deny the implicit-unsafe
-// footgun so any future unsafe fn must spell out its internal unsafe
-// blocks. (`missing_debug_implementations` is applied per-module in
+// Unsafe hygiene: the crate has exactly three unsafe sites (the SWAR
+// bucket-word read in `filter/cuckoo.rs`, the xla-gated
+// `unsafe impl Send for Runtime` in `runtime/client.rs`, and the
+// syscall layer of the serving reactor in `reactor/sys.rs` — epoll /
+// poll(2) / nonblocking connect, the only place the crate talks to
+// the kernel without std), all audited and documented with
+// `// SAFETY:` contracts. Deny the implicit-unsafe footgun so any
+// future unsafe fn must spell out its internal unsafe blocks. (`missing_debug_implementations` is applied per-module in
 // the new `sync`/`modelcheck` layers rather than crate-wide: the
 // pre-existing public surface has many intentionally Debug-less types
 // and the clippy gate runs with `-D warnings`.)
@@ -33,6 +35,7 @@
 
 pub mod util;
 pub mod sync;
+pub mod reactor;
 #[cfg(feature = "modelcheck")]
 pub mod modelcheck;
 pub mod text;

@@ -229,6 +229,17 @@ pub struct RagConfig {
     /// dynamic insert/delete thereafter). `None` = full index (single
     /// node, or the pre-replication full-index fleet).
     pub key_partition: Option<KeyPartition>,
+    /// Front-door connection cap of this backend's TCP listener
+    /// (`coordinator/tcp.rs`): connections past it get a one-line
+    /// `{"ok":false,"error":"overloaded"}` refusal instead of
+    /// accepting until fd exhaustion. `0` = unlimited. See
+    /// `docs/OPERATIONS.md`, "Connection limits and timeouts".
+    pub max_connections: usize,
+    /// Reap a front-door connection this long after its last
+    /// *completed* request line (dribbled partial lines do not refresh
+    /// the clock, so slowloris clients are reaped on schedule). Zero
+    /// disables the reaper.
+    pub idle_timeout: Duration,
 }
 
 impl Default for RagConfig {
@@ -242,6 +253,8 @@ impl Default for RagConfig {
             shards: 0,
             replication_factor: 1,
             key_partition: None,
+            max_connections: 4096,
+            idle_timeout: Duration::from_secs(60),
         }
     }
 }
@@ -311,9 +324,13 @@ pub struct RouterConfig {
     pub backends: Vec<String>,
     /// TCP connect timeout per backend attempt.
     pub connect_timeout: Duration,
-    /// Per-backend request timeout (socket read/write): one slow
-    /// backend degrades its portion of a fanned-out reply instead of
-    /// stalling the whole merge.
+    /// **End-to-end per-request deadline**: connect + write + the full
+    /// reply, enforced by the outbound reactor
+    /// (`reactor/client.rs::NetDriver`) as an absolute deadline rather
+    /// than per-stream socket timeouts — a backend dribbling one byte
+    /// per read-timeout cannot stretch the budget. One slow backend
+    /// degrades its portion of a fanned-out reply instead of stalling
+    /// the whole merge.
     pub request_timeout: Duration,
     /// Active health-probe period (`\x01stats` round trip per backend);
     /// zero disables the prober thread (tests that want deterministic
@@ -342,6 +359,13 @@ pub struct RouterConfig {
     /// requires every targeted replica to ack; otherwise at least this
     /// many (clamped to the target count).
     pub write_quorum: usize,
+    /// Router front-door connection cap (`router/mod.rs::serve`):
+    /// connections past it get a one-line
+    /// `{"ok":false,"error":"overloaded"}` refusal. `0` = unlimited.
+    pub max_connections: usize,
+    /// Reap a router front-door connection this long after its last
+    /// completed request line. Zero disables the reaper.
+    pub idle_timeout: Duration,
 }
 
 impl Default for RouterConfig {
@@ -356,6 +380,8 @@ impl Default for RouterConfig {
             max_idle_conns: 4,
             replication_factor: 0,
             write_quorum: 0,
+            max_connections: 4096,
+            idle_timeout: Duration::from_secs(60),
         }
     }
 }
@@ -431,6 +457,22 @@ mod tests {
         assert!(!cfg.request_timeout.is_zero());
         let cfg = RouterConfig::for_backends(["a:1", "b:2"]);
         assert_eq!(cfg.backends, vec!["a:1".to_string(), "b:2".to_string()]);
+    }
+
+    #[test]
+    fn serving_knob_defaults_bound_both_front_doors() {
+        // both front doors ship with a finite connection cap and a
+        // nonzero idle reaper — an unbounded default would accept
+        // until fd exhaustion and never reap a slowloris client
+        let rag = RagConfig::default();
+        assert!(rag.max_connections > 0);
+        assert!(!rag.idle_timeout.is_zero());
+        let router = RouterConfig::default();
+        assert!(router.max_connections > 0);
+        assert!(!router.idle_timeout.is_zero());
+        // and the two doors agree, so a fleet behaves uniformly
+        assert_eq!(rag.max_connections, router.max_connections);
+        assert_eq!(rag.idle_timeout, router.idle_timeout);
     }
 
     #[test]

@@ -1,0 +1,926 @@
+//! The multiplexed outbound request driver: every router-side wire
+//! exchange — query fan-outs, health probes, rebalance dump/replay
+//! streams — is one nonblocking state machine on a single shared
+//! reactor thread, instead of a blocked OS thread per in-flight
+//! request.
+//!
+//! Callers stay synchronous: [`NetDriver::exchange`] submits one
+//! round trip and blocks the *calling* thread on a channel until the
+//! reply lands; [`NetDriver::exchange_many`] submits a whole fan-out
+//! at once, so N sub-requests overlap on the wire while costing zero
+//! additional threads. The blocking moves from "one thread per
+//! socket" to "one thread per caller", and callers (the query path,
+//! the prober, a rebalance) were already threads.
+//!
+//! # Deadlines
+//!
+//! Each [`Exchange`] carries an **absolute end-to-end deadline**
+//! covering connect + write + the full reply — not per-stream socket
+//! timeouts set once at connect. A backend that dribbles one byte per
+//! `read_timeout` can stretch a socket-timeout budget arbitrarily;
+//! against the driver's deadline it cannot exceed the configured
+//! budget by a single tick. An expired deadline fails the exchange
+//! with `TimedOut`, bumps the driver's `deadlines_expired` counter
+//! (surfaced in router `\x01stats`), and drops the socket rather than
+//! pooling a stream with an unread reply in flight.
+//!
+//! # Pooled-connection retry
+//!
+//! The pool makes no liveness promise for idle sockets, so a failure
+//! on a pooled connection clears the pool (its siblings are from the
+//! same era and equally suspect) and retries **once** on a fresh
+//! connection within the same deadline — the same policy the blocking
+//! `router/backend.rs` path had. Failures on the fresh connection are
+//! authoritative and surface to the caller.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::os::fd::AsRawFd;
+use std::time::{Duration, Instant};
+
+use crate::reactor::sys::{Event, Interest, Poller, Waker};
+use crate::reactor::timer::Timers;
+use crate::router::pool::ConnPool;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{mpsc, Arc, Mutex};
+
+/// Token of the wakeup socket; ops get tokens from 2 up.
+const TOKEN_WAKER: u64 = 1;
+const FIRST_OP: u64 = 2;
+
+/// Largest accepted reply line (dump streams are the big ones).
+const MAX_REPLY_BYTES: usize = 64 * 1024 * 1024;
+
+/// Grace past the latest submitted deadline before a caller declares
+/// the driver itself wedged.
+const DRIVER_SLACK: Duration = Duration::from_secs(5);
+
+/// One outbound round trip: write `line`, read one reply line.
+#[derive(Debug)]
+pub struct Exchange {
+    /// Idle-socket pool for the target backend (also names the addr).
+    pub pool: Arc<ConnPool>,
+    /// Request line, without the trailing newline.
+    pub line: String,
+    /// Budget for each fresh TCP connect attempt (still bounded by
+    /// `deadline`). Zero means "whatever the deadline allows".
+    pub connect_timeout: Duration,
+    /// Absolute end-to-end deadline: connect + write + full reply.
+    pub deadline: Instant,
+}
+
+type ReplyTx = mpsc::Sender<(usize, io::Result<String>, Duration)>;
+
+/// Where an op currently is in its round trip.
+#[derive(Debug, PartialEq, Eq)]
+enum Phase {
+    /// Waiting for a nonblocking connect to finish.
+    Connecting,
+    /// Writing the request line.
+    Writing,
+    /// Accumulating the reply until `\n`.
+    Reading,
+}
+
+#[derive(Debug)]
+struct Op {
+    pool: Arc<ConnPool>,
+    /// Request bytes including the trailing newline.
+    wire: Vec<u8>,
+    /// Pre-resolved candidate addresses (resolved on the caller
+    /// thread so DNS never blocks the loop).
+    addrs: Vec<SocketAddr>,
+    addr_idx: usize,
+    connect_timeout: Duration,
+    /// Deadline of the current connect attempt (≤ `deadline`).
+    connect_deadline: Instant,
+    deadline: Instant,
+    started: Instant,
+    phase: Phase,
+    stream: Option<TcpStream>,
+    written: usize,
+    rbuf: Vec<u8>,
+    /// The current socket came from the pool.
+    from_pool: bool,
+    /// The one pooled-failure retry was already spent.
+    retried: bool,
+    tx: ReplyTx,
+    slot: usize,
+}
+
+/// A submitted-but-not-yet-admitted exchange.
+#[derive(Debug)]
+struct Pending {
+    pool: Arc<ConnPool>,
+    wire: Vec<u8>,
+    addrs: Vec<SocketAddr>,
+    connect_timeout: Duration,
+    deadline: Instant,
+    started: Instant,
+    tx: ReplyTx,
+    slot: usize,
+}
+
+#[derive(Debug, Default)]
+struct DriverCounters {
+    deadlines_expired: AtomicU64,
+    inflight: AtomicU64,
+}
+
+#[derive(Debug)]
+struct Shared {
+    submitted: Mutex<Vec<Pending>>,
+    waker: Waker,
+    stop: AtomicBool,
+    counters: DriverCounters,
+}
+
+/// Handle to the shared outbound reactor. Cheap to share via `Arc`;
+/// dropping the last handle stops and joins the loop thread.
+#[derive(Debug)]
+pub struct NetDriver {
+    shared: Arc<Shared>,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl NetDriver {
+    /// Start the driver loop on its own named thread.
+    pub fn start() -> io::Result<NetDriver> {
+        let shared = Arc::new(Shared {
+            submitted: Mutex::new(Vec::new()),
+            waker: Waker::new()?,
+            stop: AtomicBool::new(false),
+            counters: DriverCounters::default(),
+        });
+        let poller = Poller::new()?;
+        poller.register(shared.waker.raw_fd(), TOKEN_WAKER, Interest::READ)?;
+        let mut driver_loop = DriverLoop {
+            poller,
+            shared: Arc::clone(&shared),
+            timers: Timers::new(),
+            ops: HashMap::new(),
+            next_token: FIRST_OP,
+        };
+        let thread = std::thread::Builder::new()
+            .name("net-driver".to_string())
+            .spawn(move || driver_loop.run())?;
+        Ok(NetDriver { shared, thread: Mutex::new(Some(thread)) })
+    }
+
+    /// Exchanges that have failed by deadline expiry (counter) — the
+    /// router reports this as `deadlines_expired` in `\x01stats`.
+    pub fn deadlines_expired(&self) -> u64 {
+        self.shared.counters.deadlines_expired.load(Ordering::Relaxed)
+    }
+
+    /// Round trips currently on the wire (gauge).
+    pub fn inflight(&self) -> u64 {
+        self.shared.counters.inflight.load(Ordering::Relaxed)
+    }
+
+    /// One blocking round trip (the fan-out-of-one case).
+    pub fn exchange(&self, spec: Exchange) -> io::Result<String> {
+        self.exchange_many(vec![spec])
+            .pop()
+            .expect("one spec yields one result")
+            .0
+    }
+
+    /// Submit every exchange at once and block the calling thread
+    /// until all replies (or failures) are in. Result `i` belongs to
+    /// spec `i`; the `Duration` is that exchange's wire time.
+    pub fn exchange_many(
+        &self,
+        specs: Vec<Exchange>,
+    ) -> Vec<(io::Result<String>, Duration)> {
+        let n = specs.len();
+        let mut results: Vec<Option<(io::Result<String>, Duration)>> =
+            (0..n).map(|_| None).collect();
+        if n == 0 {
+            return Vec::new();
+        }
+        let (tx, rx) = mpsc::channel();
+        let started = Instant::now();
+        let mut latest_deadline = started;
+        let mut submitted = 0usize;
+        for (slot, spec) in specs.into_iter().enumerate() {
+            debug_assert!(
+                !spec.line.contains('\n'),
+                "protocol is one line per request"
+            );
+            latest_deadline = latest_deadline.max(spec.deadline);
+            // resolve on the caller thread: DNS must not stall the loop
+            let addrs: Vec<SocketAddr> =
+                match spec.pool.addr().to_socket_addrs() {
+                    Ok(it) => it.collect(),
+                    Err(e) => {
+                        results[slot] = Some((Err(e), started.elapsed()));
+                        continue;
+                    }
+                };
+            if addrs.is_empty() {
+                results[slot] = Some((
+                    Err(io::Error::new(
+                        io::ErrorKind::AddrNotAvailable,
+                        format!(
+                            "no addresses resolved for {}",
+                            spec.pool.addr()
+                        ),
+                    )),
+                    started.elapsed(),
+                ));
+                continue;
+            }
+            let mut wire = spec.line.into_bytes();
+            wire.push(b'\n');
+            self.shared.submitted.lock().unwrap().push(Pending {
+                pool: spec.pool,
+                wire,
+                addrs,
+                connect_timeout: spec.connect_timeout,
+                deadline: spec.deadline,
+                started: Instant::now(),
+                tx: tx.clone(),
+                slot,
+            });
+            submitted += 1;
+        }
+        drop(tx);
+        if submitted > 0 {
+            self.shared.waker.wake();
+        }
+        let hard_stop = latest_deadline + DRIVER_SLACK;
+        let mut received = 0usize;
+        while received < submitted {
+            let budget = hard_stop.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(budget.max(Duration::from_millis(1))) {
+                Ok((slot, result, elapsed)) => {
+                    results[slot] = Some((result, elapsed));
+                    received += 1;
+                }
+                Err(_) => break, // driver wedged or gone: fill below
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| {
+                r.unwrap_or_else(|| {
+                    (
+                        Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            "net driver unresponsive",
+                        )),
+                        started.elapsed(),
+                    )
+                })
+            })
+            .collect()
+    }
+}
+
+impl Drop for NetDriver {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.waker.wake();
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+struct DriverLoop {
+    poller: Poller,
+    shared: Arc<Shared>,
+    timers: Timers,
+    ops: HashMap<u64, Op>,
+    next_token: u64,
+}
+
+impl DriverLoop {
+    fn run(&mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            let timeout = self
+                .timers
+                .next_deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()));
+            match self.poller.wait(&mut events, timeout) {
+                Ok(_) => {}
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+            if self.shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            for &ev in events.iter() {
+                if ev.token == TOKEN_WAKER {
+                    self.shared.waker.drain();
+                } else {
+                    self.op_ready(ev);
+                }
+            }
+            self.admit_submitted();
+            self.fire_timers();
+        }
+        // refuse whatever is still queued or in flight so callers
+        // unblock immediately instead of waiting out the slack
+        for p in self.shared.submitted.lock().unwrap().drain(..) {
+            let _ = p.tx.send((
+                p.slot,
+                Err(io::Error::other("net driver stopped")),
+                p.started.elapsed(),
+            ));
+        }
+        for (_, op) in std::mem::take(&mut self.ops) {
+            let _ = op.tx.send((
+                op.slot,
+                Err(io::Error::other("net driver stopped")),
+                op.started.elapsed(),
+            ));
+        }
+        self.shared.counters.inflight.store(0, Ordering::Relaxed);
+    }
+
+    fn admit_submitted(&mut self) {
+        let pending = std::mem::take(
+            &mut *self.shared.submitted.lock().unwrap(),
+        );
+        for p in pending {
+            let token = self.next_token;
+            self.next_token += 1;
+            let now = Instant::now();
+            let mut op = Op {
+                pool: p.pool,
+                wire: p.wire,
+                addrs: p.addrs,
+                addr_idx: 0,
+                connect_timeout: p.connect_timeout,
+                connect_deadline: p.deadline,
+                deadline: p.deadline,
+                started: p.started,
+                phase: Phase::Connecting,
+                stream: None,
+                written: 0,
+                rbuf: Vec::new(),
+                from_pool: false,
+                retried: false,
+                tx: p.tx,
+                slot: p.slot,
+            };
+            self.shared.counters.inflight.fetch_add(1, Ordering::Relaxed);
+            self.timers.arm(op.deadline, token);
+            if now >= op.deadline {
+                self.expire(token, op);
+                continue;
+            }
+            if let Some(stream) = op.pool.take_idle() {
+                // pooled sockets are already nonblocking (they were
+                // pooled by this loop); re-assert for the transition
+                // period where blocking call sites pooled them
+                let _ = stream.set_nonblocking(true);
+                op.stream = Some(stream);
+                op.from_pool = true;
+                op.phase = Phase::Writing;
+                self.ops.insert(token, op);
+                self.advance(token);
+            } else {
+                self.start_connect_attempt(token, op);
+            }
+        }
+    }
+
+    /// Begin (or continue, on `addr_idx`) a fresh connect for `op`,
+    /// inserting it into the op table. Consumes the op by value so
+    /// retry paths can rebuild state cleanly.
+    fn start_connect_attempt(&mut self, token: u64, mut op: Op) {
+        loop {
+            if op.addr_idx >= op.addrs.len() {
+                self.fail_or_retry(
+                    token,
+                    op,
+                    io::Error::new(
+                        io::ErrorKind::ConnectionRefused,
+                        "all resolved addresses failed to connect",
+                    ),
+                );
+                return;
+            }
+            let addr = op.addrs[op.addr_idx];
+            let now = Instant::now();
+            op.connect_deadline = if op.connect_timeout.is_zero() {
+                op.deadline
+            } else {
+                op.deadline.min(now + op.connect_timeout)
+            };
+            match connect_nonblocking(&addr, op.connect_deadline) {
+                Ok((stream, connected)) => {
+                    let _ = stream.set_nodelay(true);
+                    op.stream = Some(stream);
+                    op.from_pool = false;
+                    if connected {
+                        op.phase = Phase::Writing;
+                        self.ops.insert(token, op);
+                        self.advance(token);
+                    } else {
+                        op.phase = Phase::Connecting;
+                        let fd = op
+                            .stream
+                            .as_ref()
+                            .expect("just set")
+                            .as_raw_fd();
+                        self.timers.arm(op.connect_deadline, token);
+                        if self
+                            .poller
+                            .register(fd, token, Interest::WRITE)
+                            .is_err()
+                        {
+                            op.addr_idx += 1;
+                            op.stream = None;
+                            continue;
+                        }
+                        self.ops.insert(token, op);
+                    }
+                    return;
+                }
+                Err(_) => {
+                    op.addr_idx += 1;
+                    continue;
+                }
+            }
+        }
+    }
+
+    fn op_ready(&mut self, ev: Event) {
+        let token = ev.token;
+        let phase_is_connecting = match self.ops.get(&token) {
+            Some(op) => op.phase == Phase::Connecting,
+            None => return, // stale event (lazy timer/close races)
+        };
+        if phase_is_connecting {
+            if ev.writable || ev.broken {
+                self.finish_connect(token);
+            }
+            return;
+        }
+        self.advance(token);
+    }
+
+    /// A connecting socket reported writable: read back SO_ERROR and
+    /// either proceed to Writing or move to the next address.
+    fn finish_connect(&mut self, token: u64) {
+        let op = match self.ops.get_mut(&token) {
+            Some(op) => op,
+            None => return,
+        };
+        let stream = op.stream.as_ref().expect("connecting ops have streams");
+        match connect_outcome(stream) {
+            Ok(()) => {
+                let _ = stream.set_nodelay(true);
+                op.phase = Phase::Writing;
+                self.advance(token);
+            }
+            Err(_) => {
+                let mut op = self.ops.remove(&token).expect("present");
+                if let Some(s) = op.stream.take() {
+                    let _ = self.poller.deregister(s.as_raw_fd());
+                }
+                op.addr_idx += 1;
+                self.start_connect_attempt(token, op);
+            }
+        }
+    }
+
+    /// Drive Writing/Reading IO until `WouldBlock`, completion, or
+    /// failure, then reconcile poller registration.
+    fn advance(&mut self, token: u64) {
+        let op = match self.ops.get_mut(&token) {
+            Some(op) => op,
+            None => return,
+        };
+        let mut tmp = [0u8; 8192];
+        let failure: Option<io::Error> = loop {
+            let stream = op.stream.as_mut().expect("active ops have streams");
+            match op.phase {
+                Phase::Connecting => unreachable!("handled in op_ready"),
+                Phase::Writing => {
+                    if op.written >= op.wire.len() {
+                        op.phase = Phase::Reading;
+                        continue;
+                    }
+                    match stream.write(&op.wire[op.written..]) {
+                        Ok(0) => {
+                            break Some(io::Error::new(
+                                io::ErrorKind::WriteZero,
+                                format!(
+                                    "{} stopped accepting the request",
+                                    op.pool.addr()
+                                ),
+                            ))
+                        }
+                        Ok(n) => op.written += n,
+                        Err(e)
+                            if e.kind() == io::ErrorKind::WouldBlock =>
+                        {
+                            break None
+                        }
+                        Err(e)
+                            if e.kind() == io::ErrorKind::Interrupted =>
+                        {
+                            continue
+                        }
+                        Err(e) => break Some(e),
+                    }
+                }
+                Phase::Reading => {
+                    if op.rbuf.contains(&b'\n') {
+                        self.complete(token);
+                        return;
+                    }
+                    match stream.read(&mut tmp) {
+                        Ok(0) => {
+                            break Some(io::Error::new(
+                                io::ErrorKind::UnexpectedEof,
+                                format!(
+                                    "{} closed before replying",
+                                    op.pool.addr()
+                                ),
+                            ))
+                        }
+                        Ok(n) => {
+                            op.rbuf.extend_from_slice(&tmp[..n]);
+                            if op.rbuf.len() > MAX_REPLY_BYTES {
+                                break Some(io::Error::new(
+                                    io::ErrorKind::InvalidData,
+                                    format!(
+                                        "reply from {} exceeds {} bytes",
+                                        op.pool.addr(),
+                                        MAX_REPLY_BYTES
+                                    ),
+                                ));
+                            }
+                        }
+                        Err(e)
+                            if e.kind() == io::ErrorKind::WouldBlock =>
+                        {
+                            break None
+                        }
+                        Err(e)
+                            if e.kind() == io::ErrorKind::Interrupted =>
+                        {
+                            continue
+                        }
+                        Err(e) => break Some(e),
+                    }
+                }
+            }
+        };
+        match failure {
+            Some(e) => {
+                let mut op = self.ops.remove(&token).expect("present");
+                if let Some(s) = op.stream.take() {
+                    let _ = self.poller.deregister(s.as_raw_fd());
+                }
+                self.fail_or_retry(token, op, e);
+            }
+            None => {
+                // WouldBlock: (re-)register for what the phase needs
+                let op = self.ops.get(&token).expect("present");
+                let want = match op.phase {
+                    Phase::Writing => Interest::WRITE,
+                    _ => Interest::READ,
+                };
+                let fd = op
+                    .stream
+                    .as_ref()
+                    .expect("active ops have streams")
+                    .as_raw_fd();
+                // reregister first (the common case once registered);
+                // fall back to register for the first transition off a
+                // pooled or freshly-connected socket
+                if self.poller.reregister(fd, token, want).is_err()
+                    && self.poller.register(fd, token, want).is_err()
+                {
+                    let mut op = self.ops.remove(&token).expect("present");
+                    op.stream = None;
+                    self.fail_or_retry(
+                        token,
+                        op,
+                        io::Error::other("poller registration failed"),
+                    );
+                }
+            }
+        }
+    }
+
+    /// The reply line is complete: deliver it and maybe pool the
+    /// socket back.
+    fn complete(&mut self, token: u64) {
+        let mut op = match self.ops.remove(&token) {
+            Some(op) => op,
+            None => return,
+        };
+        let stream = op.stream.take().expect("completing ops have streams");
+        let _ = self.poller.deregister(stream.as_raw_fd());
+        let nl = op
+            .rbuf
+            .iter()
+            .position(|&b| b == b'\n')
+            .expect("complete() requires a newline");
+        // pool the socket back only when the reply ended *exactly* at
+        // the newline — any trailing bytes mean framing drift and the
+        // socket cannot be trusted for the next request
+        if nl == op.rbuf.len() - 1 {
+            op.pool.put_back(stream);
+        }
+        let reply =
+            String::from_utf8_lossy(&op.rbuf[..nl]).trim().to_string();
+        self.shared.counters.inflight.fetch_sub(1, Ordering::Relaxed);
+        let _ = op.tx.send((op.slot, Ok(reply), op.started.elapsed()));
+    }
+
+    /// A pooled-socket failure retries once on a fresh connection
+    /// (clearing the pool); anything else is delivered to the caller.
+    fn fail_or_retry(&mut self, token: u64, mut op: Op, e: io::Error) {
+        if op.from_pool && !op.retried {
+            op.pool.clear();
+            op.retried = true;
+            op.from_pool = false;
+            op.addr_idx = 0;
+            op.written = 0;
+            op.rbuf.clear();
+            op.stream = None;
+            op.phase = Phase::Connecting;
+            if Instant::now() < op.deadline {
+                self.start_connect_attempt(token, op);
+                return;
+            }
+            self.expire(token, op);
+            return;
+        }
+        self.shared.counters.inflight.fetch_sub(1, Ordering::Relaxed);
+        let _ = op.tx.send((op.slot, Err(e), op.started.elapsed()));
+    }
+
+    /// Deliver a deadline expiry (op already removed from the table).
+    fn expire(&mut self, _token: u64, op: Op) {
+        if let Some(s) = op.stream.as_ref() {
+            let _ = self.poller.deregister(s.as_raw_fd());
+        }
+        self.shared
+            .counters
+            .deadlines_expired
+            .fetch_add(1, Ordering::Relaxed);
+        self.shared.counters.inflight.fetch_sub(1, Ordering::Relaxed);
+        let _ = op.tx.send((
+            op.slot,
+            Err(io::Error::new(
+                io::ErrorKind::TimedOut,
+                format!(
+                    "request to {} exceeded its deadline",
+                    op.pool.addr()
+                ),
+            )),
+            op.started.elapsed(),
+        ));
+    }
+
+    fn fire_timers(&mut self) {
+        let now = Instant::now();
+        let mut fired = Vec::new();
+        if self.timers.pop_expired(now, &mut fired) == 0 {
+            return;
+        }
+        for token in fired {
+            let (expired, connect_expired) = match self.ops.get(&token) {
+                None => continue, // completed: stale deadline
+                Some(op) => (
+                    now >= op.deadline,
+                    op.phase == Phase::Connecting
+                        && now >= op.connect_deadline,
+                ),
+            };
+            if expired {
+                let op = self.ops.remove(&token).expect("present");
+                self.expire(token, op);
+            } else if connect_expired {
+                // this connect attempt timed out; move to the next
+                // candidate address (or the retry/fail path)
+                let mut op = self.ops.remove(&token).expect("present");
+                if let Some(s) = op.stream.take() {
+                    let _ = self.poller.deregister(s.as_raw_fd());
+                }
+                op.addr_idx += 1;
+                self.start_connect_attempt(token, op);
+            }
+            // else: stale hint (deadline pushed by retry); the real
+            // deadline timer is still armed
+        }
+    }
+}
+
+/// Begin a TCP connect that never blocks the loop. On Linux this is a
+/// raw `SOCK_NONBLOCK` connect completed via writability +
+/// `SO_ERROR`; elsewhere it degrades to a bounded blocking
+/// `connect_timeout` on the driver thread (a documented portability
+/// compromise — production and CI are Linux).
+#[cfg(target_os = "linux")]
+fn connect_nonblocking(
+    addr: &SocketAddr,
+    _deadline: Instant,
+) -> io::Result<(TcpStream, bool)> {
+    crate::reactor::sys::start_connect(addr)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn connect_nonblocking(
+    addr: &SocketAddr,
+    deadline: Instant,
+) -> io::Result<(TcpStream, bool)> {
+    let budget = deadline
+        .saturating_duration_since(Instant::now())
+        .max(Duration::from_millis(1));
+    let stream = TcpStream::connect_timeout(addr, budget)?;
+    stream.set_nonblocking(true)?;
+    Ok((stream, true))
+}
+
+/// Outcome of a pending nonblocking connect (Linux: `SO_ERROR`).
+#[cfg(target_os = "linux")]
+fn connect_outcome(stream: &TcpStream) -> io::Result<()> {
+    crate::reactor::sys::connect_result(stream)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn connect_outcome(_stream: &TcpStream) -> io::Result<()> {
+    Ok(()) // connects complete synchronously on the fallback path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+    use std::net::TcpListener;
+
+    /// A line-echo server that answers `[line]` per request line, with
+    /// an optional fixed delay before each reply.
+    fn echo_server(delay: Duration, conns: usize) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            for _ in 0..conns {
+                let Ok((stream, _)) = listener.accept() else { return };
+                std::thread::spawn(move || {
+                    let mut reader =
+                        BufReader::new(stream.try_clone().unwrap());
+                    let mut writer = stream;
+                    let mut line = String::new();
+                    while reader.read_line(&mut line).unwrap_or(0) > 0 {
+                        if !delay.is_zero() {
+                            std::thread::sleep(delay);
+                        }
+                        let reply = format!("[{}]\n", line.trim());
+                        if writer.write_all(reply.as_bytes()).is_err() {
+                            return;
+                        }
+                        line.clear();
+                    }
+                });
+            }
+        });
+        addr
+    }
+
+    fn spec(pool: &Arc<ConnPool>, line: &str, budget: Duration) -> Exchange {
+        Exchange {
+            pool: Arc::clone(pool),
+            line: line.to_string(),
+            connect_timeout: Duration::from_secs(2),
+            deadline: Instant::now() + budget,
+        }
+    }
+
+    #[test]
+    fn exchange_roundtrips_and_pools_the_socket() {
+        let addr = echo_server(Duration::ZERO, 1);
+        let driver = NetDriver::start().unwrap();
+        let pool = Arc::new(ConnPool::new(addr, 2));
+        let reply = driver
+            .exchange(spec(&pool, "hello", Duration::from_secs(10)))
+            .unwrap();
+        assert_eq!(reply, "[hello]");
+        assert_eq!(pool.idle_count(), 1, "clean roundtrip pools the socket");
+        // second exchange reuses it: the server accepts only one conn
+        let reply = driver
+            .exchange(spec(&pool, "again", Duration::from_secs(10)))
+            .unwrap();
+        assert_eq!(reply, "[again]");
+    }
+
+    #[test]
+    fn fan_out_overlaps_on_one_thread() {
+        // three servers that each take ~80ms to answer: a serial
+        // client needs ~240ms, the multiplexed fan-out ~80ms
+        let pools: Vec<Arc<ConnPool>> = (0..3)
+            .map(|_| {
+                Arc::new(ConnPool::new(
+                    echo_server(Duration::from_millis(80), 1),
+                    2,
+                ))
+            })
+            .collect();
+        let driver = NetDriver::start().unwrap();
+        let specs = pools
+            .iter()
+            .enumerate()
+            .map(|(i, p)| spec(p, &format!("q{i}"), Duration::from_secs(10)))
+            .collect();
+        let t = Instant::now();
+        let results = driver.exchange_many(specs);
+        let elapsed = t.elapsed();
+        for (i, (r, _)) in results.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap(), &format!("[q{i}]"));
+        }
+        assert!(
+            elapsed < Duration::from_millis(200),
+            "fan-out must overlap, took {elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn deadline_bounds_a_dribbling_backend_end_to_end() {
+        // server answers after 5s; a 150ms end-to-end deadline must
+        // fail fast with TimedOut and bump the counter
+        let addr = echo_server(Duration::from_secs(5), 1);
+        let driver = NetDriver::start().unwrap();
+        let pool = Arc::new(ConnPool::new(addr, 2));
+        let t = Instant::now();
+        let err = driver
+            .exchange(spec(&pool, "slow", Duration::from_millis(150)))
+            .expect_err("deadline must expire");
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+        assert!(t.elapsed() < Duration::from_secs(2));
+        assert_eq!(driver.deadlines_expired(), 1);
+        assert_eq!(pool.idle_count(), 0, "expired sockets are not pooled");
+    }
+
+    /// A socket whose server side already hung up — exchanges on it
+    /// fail immediately, exercising the pooled-failure retry path.
+    fn stale_socket() -> (TcpStream, TcpListener) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let s = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (server_side, _) = l.accept().unwrap();
+        drop(server_side); // immediate close: s is now stale
+        s.set_nonblocking(true).unwrap();
+        (s, l)
+    }
+
+    #[test]
+    fn stale_pooled_socket_retries_once_on_fresh_connection() {
+        let addr = echo_server(Duration::ZERO, 1);
+        let driver = NetDriver::start().unwrap();
+        let live = Arc::new(ConnPool::new(addr, 2));
+        let (stale, _keep) = stale_socket();
+        live.put_back(stale);
+        let reply = driver
+            .exchange(spec(&live, "revived", Duration::from_secs(10)))
+            .expect("fresh-connection retry must succeed");
+        assert_eq!(reply, "[revived]");
+    }
+
+    #[test]
+    fn stale_pool_plus_dead_backend_fails_and_clears_the_pool() {
+        let dead_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let driver = NetDriver::start().unwrap();
+        let dead_pool = Arc::new(ConnPool::new(dead_addr, 2));
+        let (stale, _keep) = stale_socket();
+        dead_pool.put_back(stale);
+        let err = driver
+            .exchange(spec(&dead_pool, "q", Duration::from_secs(2)))
+            .expect_err("stale pool + dead backend must fail");
+        assert_eq!(dead_pool.idle_count(), 0, "stale pool was cleared");
+        assert_ne!(
+            err.kind(),
+            io::ErrorKind::TimedOut,
+            "failure should be a connect refusal, got {err}"
+        );
+    }
+
+    #[test]
+    fn connect_refused_is_not_a_deadline_expiry() {
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let driver = NetDriver::start().unwrap();
+        let pool = Arc::new(ConnPool::new(dead, 1));
+        let err = driver
+            .exchange(spec(&pool, "q", Duration::from_secs(5)))
+            .expect_err("nothing listens there");
+        assert_ne!(err.kind(), io::ErrorKind::TimedOut, "{err}");
+        assert_eq!(driver.deadlines_expired(), 0);
+    }
+}

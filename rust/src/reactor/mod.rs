@@ -1,0 +1,42 @@
+//! Hand-rolled, dependency-free readiness reactor — the nonblocking
+//! serving core under both front doors and the router's outbound
+//! wire traffic.
+//!
+//! The seed served every TCP connection on its own blocked OS thread,
+//! which caps concurrent clients at thread-pool scale and makes
+//! per-request deadlines expensive (socket timeouts are per-stream,
+//! set once at connect). This module replaces that with mio-style
+//! readiness polling over nonblocking sockets — no external crates,
+//! `extern "C"` straight to `epoll`/`poll(2)` — so connections cost a
+//! few hundred bytes of state instead of a stack, and deadlines are
+//! exact timer entries instead of kernel socket options.
+//!
+//! Layout, bottom up:
+//!
+//! * [`sys`] — the one thin unsafe layer: [`sys::Poller`]
+//!   (epoll on Linux, `poll(2)` elsewhere), [`sys::Waker`]
+//!   (cross-thread loop wakeup), and the Linux nonblocking-connect
+//!   helpers.
+//! * [`timer`] — [`timer::Timers`], exact-deadline bookkeeping with
+//!   lazy cancellation, used for idle reaping, accept backoff, and
+//!   per-request deadlines.
+//! * [`server`] — the inbound engine: [`server::serve_lines`] drives
+//!   an accept loop plus per-connection `\x01` line-protocol state
+//!   machines for any [`server::LineService`]; connection limits,
+//!   idle reaping, pipelining with strict reply ordering.
+//! * [`client`] — the outbound engine: [`client::NetDriver`]
+//!   multiplexes every router exchange (scatter fan-outs, health
+//!   probes, rebalance streams) on one thread with true end-to-end
+//!   per-request deadlines.
+//!
+//! Shared state follows the same `crate::sync` shim discipline as the
+//! rest of the concurrency core (PR 6): locks, atomics and channels
+//! come from [`crate::sync`], so the queues between reactor threads
+//! and their callers stay model-checkable; the reactor loops
+//! themselves are real named OS threads (one per server, one driver),
+//! not per-connection threads.
+
+pub mod client;
+pub mod server;
+pub mod sys;
+pub mod timer;

@@ -1,0 +1,874 @@
+//! The nonblocking line-protocol server engine: one reactor thread
+//! drives an accept loop plus a per-connection protocol state machine
+//! for the `\x01` line protocol (read-buffer → parse line → dispatch
+//! → queued write-back), replacing thread-per-connection serving.
+//!
+//! The engine is protocol-shape generic: anything that answers one
+//! request line with one reply line implements [`LineService`] and
+//! gets accept, framing, pipelining, back-pressure, idle reaping,
+//! connection limits, and clean shutdown for free. The coordinator
+//! front door (`coordinator/tcp.rs`) and the router front door
+//! (`router/mod.rs`) are the two services.
+//!
+//! # Connection state machine
+//!
+//! Per connection the loop keeps an inbound buffer, an outbound
+//! buffer, and an `awaiting` flag. Readable bytes accumulate until a
+//! `\n`; each complete line is dispatched to the service with a
+//! [`Completion`] handle, **one at a time per connection** — further
+//! pipelined lines stay buffered until the in-flight reply lands, so
+//! replies are written strictly in request order (the ordering
+//! guarantee documented in `docs/PROTOCOL.md`). Services may complete
+//! synchronously on the reactor thread or hand the completion to
+//! another thread (the coordinator's batch workers do); either way
+//! the reply is queued and flushed by the loop.
+//!
+//! # Adversarial clients
+//!
+//! * **Slowloris** — the idle clock (`idle_timeout`) advances only
+//!   when a *complete* line arrives, so dribbling bytes forever never
+//!   refreshes it and the connection is reaped on schedule.
+//! * **Half-close** — a client may `shutdown(Write)` after its last
+//!   line; buffered complete lines are still served and replies
+//!   delivered before the server closes. A partial line at EOF is
+//!   discarded, never served.
+//! * **Overload** — past `max_connections` the acceptor writes one
+//!   best-effort `{"ok":false,"error":"overloaded"}` line and drops
+//!   the socket without admitting it.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::time::{Duration, Instant};
+
+use crate::reactor::sys::{Event, Interest, Poller, Waker};
+use crate::reactor::timer::Timers;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{Arc, Mutex};
+
+/// Token of the listening socket (also its re-arm timer).
+const TOKEN_LISTENER: u64 = 0;
+/// Token of the wakeup socket.
+const TOKEN_WAKER: u64 = 1;
+/// First connection id; ids are never reused within a server.
+const FIRST_CONN: u64 = 2;
+
+/// How long a persistently failing `accept` parks the listener before
+/// retrying (transient fd-exhaustion style errors).
+const ACCEPT_BACKOFF: Duration = Duration::from_millis(50);
+
+/// Refusal line written (best-effort) to connections over the limit.
+const OVERLOADED_LINE: &[u8] = b"{\"ok\":false,\"error\":\"overloaded\"}\n";
+
+/// Error line a [`Completion`] dropped without an answer turns into,
+/// so a service bug degrades to a visible protocol error instead of a
+/// connection that hangs forever.
+const DROPPED_LINE: &str = "{\"ok\":false,\"error\":\"request dropped\"}";
+
+/// A request-line handler. One implementation per front door.
+pub trait LineService: Send + Sync {
+    /// Serve one complete, trimmed, non-empty request `line`. Answer
+    /// through `done` — synchronously on the calling reactor thread
+    /// or later from any thread. Dropping `done` unanswered yields a
+    /// `request dropped` protocol error.
+    fn serve_line(&self, line: &str, done: Completion);
+}
+
+/// What a completed request does to its connection.
+#[derive(Debug)]
+enum Outcome {
+    /// Write this reply line (newline appended if missing), then
+    /// resume serving pipelined lines.
+    Reply(String),
+    /// Drop the connection without replying (stopped coordinator,
+    /// `\x01quit`), discarding any buffered pipelined lines.
+    Close,
+}
+
+/// Completed-request mailbox: services push outcomes from any thread,
+/// the reactor loop drains and applies them after each wakeup.
+#[derive(Debug)]
+struct CompletionQueue {
+    items: Mutex<Vec<(u64, Outcome)>>,
+    waker: Arc<Waker>,
+}
+
+impl CompletionQueue {
+    fn push(&self, conn: u64, outcome: Outcome) {
+        self.items.lock().unwrap().push((conn, outcome));
+        self.waker.wake();
+    }
+
+    fn drain(&self) -> Vec<(u64, Outcome)> {
+        std::mem::take(&mut *self.items.lock().unwrap())
+    }
+}
+
+/// The reply handle for one in-flight request line. Exactly one of
+/// [`reply`](Completion::reply) / [`close`](Completion::close) should
+/// be called; dropping the handle unanswered produces the
+/// `request dropped` error reply instead of wedging the connection.
+#[derive(Debug)]
+pub struct Completion {
+    inner: Option<(u64, Arc<CompletionQueue>)>,
+}
+
+impl Completion {
+    /// Answer the request with `line` (a trailing newline is added if
+    /// absent) and let the connection continue.
+    pub fn reply(mut self, line: String) {
+        if let Some((conn, queue)) = self.inner.take() {
+            queue.push(conn, Outcome::Reply(line));
+        }
+    }
+
+    /// Drop the connection without answering (and discard any
+    /// pipelined lines buffered behind this request).
+    pub fn close(mut self) {
+        if let Some((conn, queue)) = self.inner.take() {
+            queue.push(conn, Outcome::Close);
+        }
+    }
+}
+
+impl Drop for Completion {
+    fn drop(&mut self) {
+        if let Some((conn, queue)) = self.inner.take() {
+            queue.push(conn, Outcome::Reply(DROPPED_LINE.to_string()));
+        }
+    }
+}
+
+/// Live serving-pressure counters, shared between the reactor loop
+/// (writer) and the service's `\x01stats` reply (reader). All relaxed
+/// atomics — these are monitoring gauges, not synchronization.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    open: AtomicU64,
+    queue_depth: AtomicU64,
+    overloaded: AtomicU64,
+    idle_reaped: AtomicU64,
+}
+
+impl ServerStats {
+    /// Currently admitted connections (gauge).
+    pub fn open_connections(&self) -> u64 {
+        self.open.load(Ordering::Relaxed)
+    }
+
+    /// Request lines dispatched to the service and not yet completed
+    /// (gauge) — queueing pressure behind the front door.
+    pub fn reactor_queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Connections refused at the `max_connections` limit (counter).
+    pub fn overloaded_rejects(&self) -> u64 {
+        self.overloaded.load(Ordering::Relaxed)
+    }
+
+    /// Connections reaped by the idle timeout (counter) — a rising
+    /// value under load is the slowloris signature.
+    pub fn idle_deadlines_expired(&self) -> u64 {
+        self.idle_reaped.load(Ordering::Relaxed)
+    }
+}
+
+/// Front-door admission and reaping knobs (wired from
+/// `RagConfig`/`RouterConfig`; see `docs/OPERATIONS.md`, "Connection
+/// limits and timeouts").
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Admitted-connection cap; connections past it get the
+    /// `overloaded` refusal. `0` = unlimited.
+    pub max_connections: usize,
+    /// Reap a connection this long after its last *completed* request
+    /// line. Zero disables reaping.
+    pub idle_timeout: Duration,
+    /// Longest accepted request line; a longer unterminated line gets
+    /// a `request line too long` error and the connection is closed.
+    pub max_line_bytes: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_connections: 4096,
+            idle_timeout: Duration::from_secs(60),
+            max_line_bytes: 64 * 1024,
+        }
+    }
+}
+
+/// Handle to a running reactor server. Dropping it (or calling
+/// [`shutdown`](ServerHandle::shutdown)) stops the loop, closes every
+/// connection and the listener, and joins the thread — after which
+/// the port is free to rebind.
+#[derive(Debug)]
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    waker: Arc<Waker>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound listen address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The live serving-pressure counters.
+    pub fn stats(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Stop the loop and join it. Idempotent; the listener socket is
+    /// closed (port released) before this returns.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.waker.wake();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Block until the serving loop exits (i.e. until some other
+    /// holder shuts it down or the process ends) — the foreground
+    /// `serve()` entry points are built on this.
+    pub fn wait(&mut self) {
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serve `listener` with `service` on a dedicated reactor thread.
+/// `stats` is caller-supplied so the service can also read it when
+/// composing its `\x01stats` reply.
+pub fn serve_lines(
+    listener: TcpListener,
+    service: Arc<dyn LineService>,
+    config: ServerConfig,
+    stats: Arc<ServerStats>,
+) -> io::Result<ServerHandle> {
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let poller = Poller::new()?;
+    let waker = Arc::new(Waker::new()?);
+    poller.register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+    poller.register(waker.raw_fd(), TOKEN_WAKER, Interest::READ)?;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let completions = Arc::new(CompletionQueue {
+        items: Mutex::new(Vec::new()),
+        waker: Arc::clone(&waker),
+    });
+    let mut event_loop = EventLoop {
+        poller,
+        listener,
+        listener_parked: false,
+        waker: Arc::clone(&waker),
+        timers: Timers::new(),
+        conns: HashMap::new(),
+        next_id: FIRST_CONN,
+        service,
+        completions,
+        config,
+        stats: Arc::clone(&stats),
+        stop: Arc::clone(&stop),
+    };
+    let thread = std::thread::Builder::new()
+        .name(format!("reactor-serve-{}", addr.port()))
+        .spawn(move || event_loop.run())?;
+    Ok(ServerHandle { addr, stats, stop, waker, thread: Some(thread) })
+}
+
+/// One admitted connection's protocol state.
+#[derive(Debug)]
+struct Conn {
+    stream: TcpStream,
+    /// Inbound bytes not yet consumed as lines.
+    buf: Vec<u8>,
+    /// Outbound bytes queued for the socket.
+    out: Vec<u8>,
+    /// How much of `out` is already written.
+    written: usize,
+    /// A request line is dispatched and not yet completed.
+    awaiting: bool,
+    /// Peer closed its write side; serve buffered lines, then close.
+    eof: bool,
+    /// When the last *complete* line arrived — the idle clock.
+    last_line_at: Instant,
+    /// Interest currently registered with the poller.
+    interest: Interest,
+}
+
+struct EventLoop {
+    poller: Poller,
+    listener: TcpListener,
+    /// Accept hit a persistent error; listener is deregistered until
+    /// the `ACCEPT_BACKOFF` timer re-arms it.
+    listener_parked: bool,
+    waker: Arc<Waker>,
+    timers: Timers,
+    conns: HashMap<u64, Conn>,
+    next_id: u64,
+    service: Arc<dyn LineService>,
+    completions: Arc<CompletionQueue>,
+    config: ServerConfig,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+}
+
+impl EventLoop {
+    fn run(&mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            let timeout = self
+                .timers
+                .next_deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()));
+            match self.poller.wait(&mut events, timeout) {
+                Ok(_) => {}
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                // a broken poller is unrecoverable; exit the loop so
+                // the handle's join returns instead of spinning
+                Err(_) => break,
+            }
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            for &ev in events.iter() {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.waker.drain(),
+                    id => self.conn_ready(id, ev),
+                }
+            }
+            self.drain_completions();
+            self.fire_timers();
+            self.drain_completions();
+        }
+        // teardown: closing fds deregisters them; dropping the
+        // listener releases the port before the join returns
+        self.conns.clear();
+        self.stats.open.store(0, Ordering::Relaxed);
+    }
+
+    // ---- accept path ------------------------------------------------
+
+    fn accept_ready(&mut self) {
+        if self.listener_parked {
+            return;
+        }
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => self.admit(stream),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // fd exhaustion and friends: park the listener and
+                    // retry on a timer instead of spinning hot
+                    self.park_listener();
+                    break;
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream) {
+        let at_cap = self.config.max_connections > 0
+            && self.conns.len() >= self.config.max_connections;
+        if at_cap {
+            self.stats.overloaded.fetch_add(1, Ordering::Relaxed);
+            // best-effort refusal line; a full socket buffer means the
+            // peer was not reading anyway
+            let _ = stream.set_nonblocking(true);
+            let _ = (&stream).write_all(OVERLOADED_LINE);
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let id = self.next_id;
+        self.next_id += 1;
+        if self
+            .poller
+            .register(stream.as_raw_fd(), id, Interest::READ)
+            .is_err()
+        {
+            return;
+        }
+        let now = Instant::now();
+        if !self.config.idle_timeout.is_zero() {
+            self.timers.arm(now + self.config.idle_timeout, id);
+        }
+        self.conns.insert(
+            id,
+            Conn {
+                stream,
+                buf: Vec::new(),
+                out: Vec::new(),
+                written: 0,
+                awaiting: false,
+                eof: false,
+                last_line_at: now,
+                interest: Interest::READ,
+            },
+        );
+        self.stats.open.store(self.conns.len() as u64, Ordering::Relaxed);
+    }
+
+    fn park_listener(&mut self) {
+        if self.listener_parked {
+            return;
+        }
+        let _ = self.poller.deregister(self.listener.as_raw_fd());
+        self.listener_parked = true;
+        self.timers.arm(Instant::now() + ACCEPT_BACKOFF, TOKEN_LISTENER);
+    }
+
+    fn unpark_listener(&mut self) {
+        if !self.listener_parked {
+            return;
+        }
+        if self
+            .poller
+            .register(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)
+            .is_ok()
+        {
+            self.listener_parked = false;
+            // catch up on anything that queued while parked
+            self.accept_ready();
+        } else {
+            self.timers.arm(Instant::now() + ACCEPT_BACKOFF, TOKEN_LISTENER);
+        }
+    }
+
+    // ---- connection IO ----------------------------------------------
+
+    fn conn_ready(&mut self, id: u64, ev: Event) {
+        if !self.conns.contains_key(&id) {
+            return;
+        }
+        if ev.readable || ev.broken {
+            if !self.conn_readable(id) {
+                return;
+            }
+        }
+        if ev.writable && !self.flush_out(id) {
+            return;
+        }
+        self.after_io(id);
+    }
+
+    /// Drain the socket's readable bytes and dispatch complete lines.
+    /// Returns false when the connection was closed.
+    fn conn_readable(&mut self, id: u64) -> bool {
+        let mut tmp = [0u8; 8192];
+        loop {
+            let conn = match self.conns.get_mut(&id) {
+                Some(c) => c,
+                None => return false,
+            };
+            if conn.eof {
+                break;
+            }
+            match conn.stream.read(&mut tmp) {
+                Ok(0) => {
+                    // half-close: keep complete buffered lines, drop
+                    // the partial tail (it can never complete)
+                    conn.eof = true;
+                    let keep = conn
+                        .buf
+                        .iter()
+                        .rposition(|&b| b == b'\n')
+                        .map(|p| p + 1)
+                        .unwrap_or(0);
+                    conn.buf.truncate(keep);
+                    break;
+                }
+                Ok(n) => {
+                    conn.buf.extend_from_slice(&tmp[..n]);
+                    let tail = conn
+                        .buf
+                        .iter()
+                        .rposition(|&b| b == b'\n')
+                        .map(|p| conn.buf.len() - (p + 1))
+                        .unwrap_or(conn.buf.len());
+                    if tail > self.config.max_line_bytes {
+                        // unframed flood: answer once, then hang up
+                        conn.out.extend_from_slice(
+                            b"{\"ok\":false,\"error\":\
+                              \"request line too long\"}\n",
+                        );
+                        let keep = conn.buf.len() - tail;
+                        conn.buf.truncate(keep);
+                        conn.eof = true;
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_conn(id);
+                    return false;
+                }
+            }
+        }
+        self.advance(id)
+    }
+
+    /// Dispatch buffered complete lines, one in flight at a time.
+    /// Returns false when the connection was closed.
+    fn advance(&mut self, id: u64) -> bool {
+        loop {
+            let conn = match self.conns.get_mut(&id) {
+                Some(c) => c,
+                None => return false,
+            };
+            if conn.awaiting {
+                return true;
+            }
+            let pos = match conn.buf.iter().position(|&b| b == b'\n') {
+                Some(p) => p,
+                None => return true,
+            };
+            let line_bytes: Vec<u8> = conn.buf.drain(..=pos).collect();
+            conn.last_line_at = Instant::now();
+            let line = match std::str::from_utf8(&line_bytes) {
+                Ok(s) => s.trim().to_string(),
+                Err(_) => {
+                    // not our protocol: refuse loudly and hang up
+                    conn.out.extend_from_slice(
+                        b"{\"ok\":false,\"error\":\
+                          \"request line is not utf-8\"}\n",
+                    );
+                    conn.buf.clear();
+                    conn.eof = true;
+                    return true;
+                }
+            };
+            if line.is_empty() {
+                continue;
+            }
+            conn.awaiting = true;
+            self.stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+            let done = Completion {
+                inner: Some((id, Arc::clone(&self.completions))),
+            };
+            // may complete synchronously; the outcome lands in the
+            // completion queue either way and is applied by
+            // drain_completions, never recursively here
+            self.service.serve_line(&line, done);
+        }
+    }
+
+    /// Apply completed requests. Loops because applying a reply can
+    /// dispatch the next pipelined line, which can complete
+    /// synchronously and enqueue again.
+    fn drain_completions(&mut self) {
+        loop {
+            let batch = self.completions.drain();
+            if batch.is_empty() {
+                return;
+            }
+            for (id, outcome) in batch {
+                self.stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                match outcome {
+                    Outcome::Close => self.close_conn(id),
+                    Outcome::Reply(line) => {
+                        let conn = match self.conns.get_mut(&id) {
+                            Some(c) => c,
+                            // completed after the conn died (write
+                            // error, shutdown): nothing to deliver to
+                            None => continue,
+                        };
+                        conn.awaiting = false;
+                        conn.out.extend_from_slice(line.as_bytes());
+                        if !line.ends_with('\n') {
+                            conn.out.push(b'\n');
+                        }
+                        if self.flush_out(id) && self.advance(id) {
+                            self.after_io(id);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Write queued output until done or `WouldBlock`. Returns false
+    /// when the connection was closed.
+    fn flush_out(&mut self, id: u64) -> bool {
+        loop {
+            let conn = match self.conns.get_mut(&id) {
+                Some(c) => c,
+                None => return false,
+            };
+            if conn.written >= conn.out.len() {
+                conn.out.clear();
+                conn.written = 0;
+                return true;
+            }
+            match conn.stream.write(&conn.out[conn.written..]) {
+                Ok(0) => {
+                    self.close_conn(id);
+                    return false;
+                }
+                Ok(n) => conn.written += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    return true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_conn(id);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Post-IO disposition: close a finished connection, otherwise
+    /// make the registered interest match the buffers.
+    fn after_io(&mut self, id: u64) {
+        let conn = match self.conns.get(&id) {
+            Some(c) => c,
+            None => return,
+        };
+        let pending_line = conn.buf.contains(&b'\n');
+        let pending_out = conn.written < conn.out.len();
+        if conn.eof && !conn.awaiting && !pending_out && !pending_line {
+            self.close_conn(id);
+            return;
+        }
+        let want = Interest {
+            readable: !conn.eof,
+            writable: pending_out,
+            edge: false,
+        };
+        if want != conn.interest {
+            let fd = conn.stream.as_raw_fd();
+            if self.poller.reregister(fd, id, want).is_ok() {
+                if let Some(c) = self.conns.get_mut(&id) {
+                    c.interest = want;
+                }
+            } else {
+                self.close_conn(id);
+            }
+        }
+    }
+
+    fn close_conn(&mut self, id: u64) {
+        if let Some(conn) = self.conns.remove(&id) {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            self.stats
+                .open
+                .store(self.conns.len() as u64, Ordering::Relaxed);
+        }
+    }
+
+    // ---- timers -----------------------------------------------------
+
+    fn fire_timers(&mut self) {
+        let now = Instant::now();
+        let mut fired = Vec::new();
+        if self.timers.pop_expired(now, &mut fired) == 0 {
+            return;
+        }
+        for token in fired {
+            if token == TOKEN_LISTENER {
+                self.unpark_listener();
+                continue;
+            }
+            let idle = self.config.idle_timeout;
+            if idle.is_zero() {
+                continue;
+            }
+            let conn = match self.conns.get(&token) {
+                Some(c) => c,
+                None => continue, // stale deadline (lazy cancellation)
+            };
+            if conn.awaiting {
+                // in-flight requests are load, not idleness
+                self.timers.arm(now + idle, token);
+                continue;
+            }
+            let deadline = conn.last_line_at + idle;
+            if now >= deadline {
+                self.stats.idle_reaped.fetch_add(1, Ordering::Relaxed);
+                self.close_conn(token);
+            } else {
+                // traffic pushed the idle clock back; re-arm exactly
+                self.timers.arm(deadline, token);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+    use std::net::Shutdown;
+
+    /// Echoes `line` back wrapped in brackets; `close!` drops the
+    /// connection; `drop!` leaks the completion (tests the Drop
+    /// error); `slow!` answers from a detached thread.
+    struct Echo;
+    impl LineService for Echo {
+        fn serve_line(&self, line: &str, done: Completion) {
+            match line {
+                "close!" => done.close(),
+                "drop!" => drop(done),
+                "slow!" => {
+                    std::thread::spawn(move || {
+                        std::thread::sleep(Duration::from_millis(30));
+                        done.reply("[slow!]".to_string());
+                    });
+                }
+                _ => done.reply(format!("[{line}]")),
+            }
+        }
+    }
+
+    fn start(config: ServerConfig) -> ServerHandle {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        serve_lines(
+            listener,
+            Arc::new(Echo),
+            config,
+            Arc::new(ServerStats::default()),
+        )
+        .unwrap()
+    }
+
+    fn roundtrip(addr: SocketAddr, lines: &[&str]) -> Vec<String> {
+        let mut sock = TcpStream::connect(addr).unwrap();
+        for l in lines {
+            sock.write_all(l.as_bytes()).unwrap();
+            sock.write_all(b"\n").unwrap();
+        }
+        sock.shutdown(Shutdown::Write).unwrap();
+        BufReader::new(sock).lines().map(|l| l.unwrap()).collect()
+    }
+
+    #[test]
+    fn serves_lines_and_preserves_pipeline_order() {
+        let handle = start(ServerConfig::default());
+        let replies = roundtrip(handle.addr(), &["a", "b", "slow!", "c"]);
+        assert_eq!(replies, vec!["[a]", "[b]", "[slow!]", "[c]"]);
+    }
+
+    #[test]
+    fn half_close_still_gets_replies_and_partial_tail_is_dropped() {
+        let handle = start(ServerConfig::default());
+        let mut sock = TcpStream::connect(handle.addr()).unwrap();
+        // one complete line + one partial line, then write-side close
+        sock.write_all(b"whole\npart-with-no-newline").unwrap();
+        sock.shutdown(Shutdown::Write).unwrap();
+        let replies: Vec<String> =
+            BufReader::new(sock).lines().map(|l| l.unwrap()).collect();
+        assert_eq!(replies, vec!["[whole]"]);
+    }
+
+    #[test]
+    fn dropped_completion_becomes_an_error_reply() {
+        let handle = start(ServerConfig::default());
+        let replies = roundtrip(handle.addr(), &["drop!", "after"]);
+        assert_eq!(replies.len(), 2);
+        assert!(replies[0].contains("request dropped"), "{}", replies[0]);
+        assert_eq!(replies[1], "[after]");
+    }
+
+    #[test]
+    fn close_outcome_discards_pipelined_lines() {
+        let handle = start(ServerConfig::default());
+        let replies = roundtrip(handle.addr(), &["x", "close!", "never"]);
+        assert_eq!(replies, vec!["[x]"]);
+    }
+
+    #[test]
+    fn overload_refusal_past_max_connections() {
+        let handle = start(ServerConfig {
+            max_connections: 2,
+            ..ServerConfig::default()
+        });
+        let keep1 = TcpStream::connect(handle.addr()).unwrap();
+        let keep2 = TcpStream::connect(handle.addr()).unwrap();
+        // make sure both are admitted before the third knocks
+        crate::util::wait::require("two admitted", Duration::from_secs(5), || {
+            handle.stats().open_connections() == 2
+        });
+        let third = TcpStream::connect(handle.addr()).unwrap();
+        let mut line = String::new();
+        BufReader::new(third).read_line(&mut line).unwrap();
+        assert!(line.contains("overloaded"), "{line}");
+        assert_eq!(handle.stats().overloaded_rejects(), 1);
+        drop((keep1, keep2));
+    }
+
+    #[test]
+    fn slowloris_is_reaped_while_honest_client_is_unaffected() {
+        let handle = start(ServerConfig {
+            idle_timeout: Duration::from_millis(80),
+            ..ServerConfig::default()
+        });
+        let mut dribbler = TcpStream::connect(handle.addr()).unwrap();
+        let honest = std::thread::spawn({
+            let addr = handle.addr();
+            move || {
+                // keeps completing lines the whole time the dribbler
+                // is being starved out
+                let mut sock = TcpStream::connect(addr).unwrap();
+                let mut reader =
+                    BufReader::new(sock.try_clone().unwrap());
+                for _ in 0..10 {
+                    sock.write_all(b"hi\n").unwrap();
+                    let mut reply = String::new();
+                    reader.read_line(&mut reply).unwrap();
+                    assert_eq!(reply.trim_end(), "[hi]");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        });
+        // dribble single bytes, never a newline: the idle clock never
+        // advances, so the reaper closes us
+        let mut reaped = false;
+        for _ in 0..60 {
+            if dribbler.write_all(b"x").is_err() {
+                reaped = true;
+                break;
+            }
+            let mut byte = [0u8; 1];
+            dribbler
+                .set_read_timeout(Some(Duration::from_millis(25)))
+                .unwrap();
+            if let Ok(0) = dribbler.read(&mut byte) {
+                reaped = true;
+                break;
+            }
+        }
+        assert!(reaped, "slowloris connection was never reaped");
+        assert!(handle.stats().idle_deadlines_expired() >= 1);
+        honest.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_releases_the_port() {
+        let mut handle = start(ServerConfig::default());
+        let addr = handle.addr();
+        handle.shutdown();
+        TcpListener::bind(addr).expect("port must be free after shutdown");
+    }
+}

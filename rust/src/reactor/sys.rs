@@ -1,0 +1,666 @@
+//! The reactor's one thin unsafe layer: readiness polling and
+//! nonblocking connect, bound directly against the C runtime std
+//! already links — **no external crates**.
+//!
+//! Everything above this module ([`server`](crate::reactor::server),
+//! [`client`](crate::reactor::client)) is safe Rust over std types;
+//! everything below is the kernel. The surface is deliberately tiny:
+//!
+//! * [`Poller`] — readiness notification. On Linux it is an `epoll`
+//!   instance (level- or edge-triggered per registration, mio-style);
+//!   on other unixes it degrades to a `poll(2)` set rebuilt per wait
+//!   (level-triggered only — the `edge` flag is advisory there).
+//!   Non-unix targets are rejected at compile time: the serving core
+//!   is a Linux deployment target and CI runs Linux.
+//! * [`Waker`] — cross-thread loop wakeup built from a connected
+//!   UDP socket pair (pure std; keeps `eventfd`/pipes out of the
+//!   unsafe surface). Sends are coalescible and never block.
+//! * [`start_connect`] / [`connect_result`] (Linux) — a nonblocking
+//!   TCP connect: `socket(2)` with `SOCK_NONBLOCK`, `connect(2)`
+//!   returning `EINPROGRESS`, completion read back with
+//!   `getsockopt(SO_ERROR)` once the poller reports writability.
+//!
+//! Unsafe hygiene matches the crate rule (`lib.rs`): every unsafe
+//! block carries a `// SAFETY:` contract, and raw fds are wrapped in
+//! owning std types (`OwnedFd`, `TcpStream`) at the earliest possible
+//! moment so no code path leaks a descriptor.
+
+use std::io;
+use std::time::Duration;
+
+/// One readiness event delivered by [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The registration token (the reactor uses connection/op ids).
+    pub token: u64,
+    /// Readable (or a peer close flagged via `EPOLLRDHUP`).
+    pub readable: bool,
+    /// Writable (also how a completed nonblocking connect reports).
+    pub writable: bool,
+    /// Error/hangup condition on the fd — the owner should attempt IO
+    /// and let the resulting `Err`/EOF drive teardown.
+    pub broken: bool,
+}
+
+/// What a registration wants to hear about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    /// Readable readiness.
+    pub readable: bool,
+    /// Writable readiness.
+    pub writable: bool,
+    /// Edge-triggered delivery (Linux only; the `poll(2)` fallback is
+    /// inherently level-triggered and ignores this). The serving core
+    /// registers level-triggered and drains to `WouldBlock` anyway, so
+    /// the flag is an option, not a correctness requirement.
+    pub edge: bool,
+}
+
+impl Interest {
+    /// Level-triggered read interest.
+    pub const READ: Interest =
+        Interest { readable: true, writable: false, edge: false };
+    /// Level-triggered write interest.
+    pub const WRITE: Interest =
+        Interest { readable: false, writable: true, edge: false };
+
+    /// Level-triggered read+write interest.
+    pub fn read_write() -> Interest {
+        Interest { readable: true, writable: true, edge: false }
+    }
+}
+
+/// Clamp an optional wait budget to the millisecond argument `epoll`/
+/// `poll` take: `None` → block forever (-1), sub-millisecond budgets
+/// round **up** so a near deadline cannot spin the loop at 0ms.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_millis();
+            let ms = if Duration::from_millis(ms as u64) < d {
+                ms + 1
+            } else {
+                ms
+            };
+            ms.min(i32::MAX as u128) as i32
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub use linux::{connect_result, start_connect, Poller};
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use super::{timeout_ms, Event, Interest};
+    use std::io;
+    use std::net::{SocketAddr, TcpStream};
+    use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+    use std::os::raw::{c_int, c_void};
+    use std::time::Duration;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLLET: u32 = 1 << 31;
+
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+    const AF_INET: c_int = 2;
+    const AF_INET6: c_int = 10;
+    const SOCK_STREAM: c_int = 1;
+    const SOCK_NONBLOCK: c_int = 0o4000;
+    const SOCK_CLOEXEC: c_int = 0o2000000;
+    const SOL_SOCKET: c_int = 1;
+    const SO_ERROR: c_int = 4;
+    /// Linux `EINPROGRESS` — the expected "connect started" errno of a
+    /// nonblocking `connect(2)`.
+    const EINPROGRESS: i32 = 115;
+
+    /// Mirror of `struct epoll_event`. On x86-64 the kernel ABI packs
+    /// it to 12 bytes (no padding between `events` and the 64-bit
+    /// payload); everywhere else natural `repr(C)` layout matches.
+    #[derive(Clone, Copy)]
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(
+            epfd: c_int,
+            op: c_int,
+            fd: c_int,
+            event: *mut EpollEvent,
+        ) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+        fn connect(
+            fd: c_int,
+            addr: *const c_void,
+            len: u32,
+        ) -> c_int;
+        fn getsockopt(
+            fd: c_int,
+            level: c_int,
+            optname: c_int,
+            optval: *mut c_void,
+            optlen: *mut u32,
+        ) -> c_int;
+    }
+
+    /// An `epoll` instance. Registration tokens ride in the kernel's
+    /// per-fd event payload, so `wait` hands back `(token, readiness)`
+    /// pairs with no userspace lookup.
+    #[derive(Debug)]
+    pub struct Poller {
+        epfd: OwnedFd,
+    }
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = EPOLLRDHUP;
+        if interest.readable {
+            m |= EPOLLIN;
+        }
+        if interest.writable {
+            m |= EPOLLOUT;
+        }
+        if interest.edge {
+            m |= EPOLLET;
+        }
+        m
+    }
+
+    fn cvt(rc: c_int) -> io::Result<c_int> {
+        if rc < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(rc)
+        }
+    }
+
+    impl Poller {
+        /// A fresh epoll instance (close-on-exec).
+        pub fn new() -> io::Result<Poller> {
+            // SAFETY: plain syscall, no pointers; the returned fd is
+            // immediately wrapped in an OwnedFd so it cannot leak.
+            let fd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            // SAFETY: `fd` is a freshly created, valid, owned epoll fd.
+            Ok(Poller { epfd: unsafe { OwnedFd::from_raw_fd(fd) } })
+        }
+
+        fn ctl(
+            &self,
+            op: c_int,
+            fd: RawFd,
+            interest: Interest,
+            token: u64,
+        ) -> io::Result<()> {
+            let mut ev = EpollEvent { events: mask(interest), data: token };
+            // SAFETY: `ev` outlives the call; the kernel copies it.
+            cvt(unsafe {
+                epoll_ctl(self.epfd.as_raw_fd(), op, fd, &mut ev)
+            })?;
+            Ok(())
+        }
+
+        /// Start watching `fd` under `token`.
+        pub fn register(
+            &self,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, interest, token)
+        }
+
+        /// Change what an already-registered `fd` wants to hear.
+        pub fn reregister(
+            &self,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, interest, token)
+        }
+
+        /// Stop watching `fd`. Safe to call with an fd the kernel
+        /// already dropped (closing an fd auto-deregisters it).
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            // SAFETY: as in `ctl`; DEL ignores the event payload (the
+            // non-null pointer keeps pre-2.6.9 kernel semantics happy).
+            cvt(unsafe {
+                epoll_ctl(self.epfd.as_raw_fd(), EPOLL_CTL_DEL, fd, &mut ev)
+            })?;
+            Ok(())
+        }
+
+        /// Block until readiness or `timeout` (`None` = forever),
+        /// filling `events`. Returns the number of events delivered.
+        pub fn wait(
+            &self,
+            events: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<usize> {
+            events.clear();
+            let mut buf = [EpollEvent { events: 0, data: 0 }; 256];
+            // SAFETY: `buf` is a valid writable array of `buf.len()`
+            // epoll_event slots for the duration of the call.
+            let n = cvt(unsafe {
+                epoll_wait(
+                    self.epfd.as_raw_fd(),
+                    buf.as_mut_ptr(),
+                    buf.len() as c_int,
+                    timeout_ms(timeout),
+                )
+            })? as usize;
+            for ev in buf.iter().take(n) {
+                // copy out of the (possibly packed) struct by value
+                let bits = { ev.events };
+                let token = { ev.data };
+                events.push(Event {
+                    token,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    broken: bits & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(n)
+        }
+    }
+
+    /// `struct sockaddr_in`, network byte order where the ABI says so.
+    #[repr(C)]
+    struct SockAddrV4 {
+        family: u16,
+        port: u16,
+        addr: [u8; 4],
+        zero: [u8; 8],
+    }
+
+    /// `struct sockaddr_in6`.
+    #[repr(C)]
+    struct SockAddrV6 {
+        family: u16,
+        port: u16,
+        flowinfo: u32,
+        addr: [u8; 16],
+        scope_id: u32,
+    }
+
+    /// Begin a nonblocking TCP connect to `addr`. Returns the socket
+    /// (already owned by a std `TcpStream`, already nonblocking) and
+    /// whether the connect completed synchronously (loopback often
+    /// does). When `false`, register the stream for writability and
+    /// call [`connect_result`] once the poller reports it.
+    pub fn start_connect(addr: &SocketAddr) -> io::Result<(TcpStream, bool)> {
+        let domain = match addr {
+            SocketAddr::V4(_) => AF_INET,
+            SocketAddr::V6(_) => AF_INET6,
+        };
+        // SAFETY: plain syscall; the fd is wrapped immediately below.
+        let fd = cvt(unsafe {
+            socket(domain, SOCK_STREAM | SOCK_NONBLOCK | SOCK_CLOEXEC, 0)
+        })?;
+        // SAFETY: `fd` is a fresh, valid, owned stream socket.
+        let stream = unsafe { TcpStream::from_raw_fd(fd) };
+        let rc = match addr {
+            SocketAddr::V4(v4) => {
+                let sa = SockAddrV4 {
+                    family: AF_INET as u16,
+                    port: v4.port().to_be(),
+                    addr: v4.ip().octets(),
+                    zero: [0; 8],
+                };
+                // SAFETY: `sa` is a correctly laid out sockaddr_in and
+                // outlives the call; the kernel copies it.
+                unsafe {
+                    connect(
+                        fd,
+                        (&sa as *const SockAddrV4).cast(),
+                        std::mem::size_of::<SockAddrV4>() as u32,
+                    )
+                }
+            }
+            SocketAddr::V6(v6) => {
+                let sa = SockAddrV6 {
+                    family: AF_INET6 as u16,
+                    port: v6.port().to_be(),
+                    flowinfo: v6.flowinfo().to_be(),
+                    addr: v6.ip().octets(),
+                    scope_id: v6.scope_id(),
+                };
+                // SAFETY: as above, for sockaddr_in6.
+                unsafe {
+                    connect(
+                        fd,
+                        (&sa as *const SockAddrV6).cast(),
+                        std::mem::size_of::<SockAddrV6>() as u32,
+                    )
+                }
+            }
+        };
+        if rc == 0 {
+            return Ok((stream, true));
+        }
+        let err = io::Error::last_os_error();
+        if err.raw_os_error() == Some(EINPROGRESS) {
+            Ok((stream, false))
+        } else {
+            Err(err)
+        }
+    }
+
+    /// Read back the outcome of a nonblocking connect after the poller
+    /// reported the socket writable: `Ok(())` = connected, `Err` = the
+    /// pending socket error (e.g. `ECONNREFUSED`).
+    pub fn connect_result(stream: &TcpStream) -> io::Result<()> {
+        let mut err: c_int = 0;
+        let mut len = std::mem::size_of::<c_int>() as u32;
+        // SAFETY: `err`/`len` are valid for writes of the sizes passed;
+        // SO_ERROR writes a c_int.
+        cvt(unsafe {
+            getsockopt(
+                stream.as_raw_fd(),
+                SOL_SOCKET,
+                SO_ERROR,
+                (&mut err as *mut c_int).cast(),
+                &mut len,
+            )
+        })?;
+        if err == 0 {
+            Ok(())
+        } else {
+            Err(io::Error::from_raw_os_error(err))
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+pub use fallback::Poller;
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod fallback {
+    //! Portable `poll(2)` readiness for non-Linux unixes (dev boxes;
+    //! production and CI are Linux/epoll). The interest set lives in
+    //! userspace and the pollfd array is rebuilt per wait — O(n) per
+    //! tick, which is fine at fallback scale. Level-triggered only.
+
+    use super::{timeout_ms, Event, Interest};
+    use crate::sync::Mutex;
+    use std::collections::HashMap;
+    use std::io;
+    use std::os::fd::RawFd;
+    use std::os::raw::{c_int, c_short, c_uint};
+    use std::time::Duration;
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_uint, timeout: c_int) -> c_int;
+    }
+
+    /// `poll(2)`-backed stand-in for the Linux epoll poller.
+    #[derive(Debug, Default)]
+    pub struct Poller {
+        interests: Mutex<HashMap<RawFd, (u64, Interest)>>,
+    }
+
+    impl Poller {
+        /// A fresh (empty) interest set.
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller::default())
+        }
+
+        /// Start watching `fd` under `token`.
+        pub fn register(
+            &self,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.interests.lock().unwrap().insert(fd, (token, interest));
+            Ok(())
+        }
+
+        /// Change what an already-registered `fd` wants to hear.
+        pub fn reregister(
+            &self,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.register(fd, token, interest)
+        }
+
+        /// Stop watching `fd`.
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            self.interests.lock().unwrap().remove(&fd);
+            Ok(())
+        }
+
+        /// Block until readiness or `timeout`, filling `events`.
+        pub fn wait(
+            &self,
+            events: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<usize> {
+            events.clear();
+            let mut fds: Vec<PollFd> = Vec::new();
+            let mut tokens: Vec<u64> = Vec::new();
+            for (&fd, &(token, interest)) in
+                self.interests.lock().unwrap().iter()
+            {
+                let mut ev: c_short = 0;
+                if interest.readable {
+                    ev |= POLLIN;
+                }
+                if interest.writable {
+                    ev |= POLLOUT;
+                }
+                fds.push(PollFd { fd, events: ev, revents: 0 });
+                tokens.push(token);
+            }
+            // SAFETY: `fds` is a valid array of fds.len() pollfd slots
+            // for the duration of the call.
+            let rc = unsafe {
+                poll(fds.as_mut_ptr(), fds.len() as c_uint, timeout_ms(timeout))
+            };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            for (pfd, &token) in fds.iter().zip(&tokens) {
+                if pfd.revents == 0 {
+                    continue;
+                }
+                events.push(Event {
+                    token,
+                    readable: pfd.revents & POLLIN != 0,
+                    writable: pfd.revents & POLLOUT != 0,
+                    broken: pfd.revents & (POLLERR | POLLHUP) != 0,
+                });
+            }
+            Ok(events.len())
+        }
+    }
+}
+
+#[cfg(not(unix))]
+compile_error!(
+    "the reactor serving core targets unix (epoll on Linux, poll(2) \
+     elsewhere); no Windows backend is implemented"
+);
+
+/// Cross-thread wakeup for a blocked [`Poller::wait`]: a nonblocking
+/// UDP socket connected to itself. Any thread holding a clone handle
+/// calls [`Waker::wake`]; the loop registers the socket read-side and
+/// [`Waker::drain`]s it when it fires. Built from pure std so the
+/// unsafe surface stays confined to the poller above.
+#[derive(Debug)]
+pub struct Waker {
+    sock: std::net::UdpSocket,
+}
+
+impl Waker {
+    /// Bind a loopback self-connected datagram socket.
+    pub fn new() -> io::Result<Waker> {
+        let sock = std::net::UdpSocket::bind("127.0.0.1:0")?;
+        sock.connect(sock.local_addr()?)?;
+        sock.set_nonblocking(true)?;
+        Ok(Waker { sock })
+    }
+
+    /// The fd to register (read interest) in the loop's poller.
+    pub fn raw_fd(&self) -> std::os::fd::RawFd {
+        use std::os::fd::AsRawFd;
+        self.sock.as_raw_fd()
+    }
+
+    /// Nudge the loop. Never blocks; a full socket buffer means a wake
+    /// is already pending, which is all a wake means.
+    pub fn wake(&self) {
+        let _ = self.sock.send(&[1]);
+    }
+
+    /// Swallow pending wake datagrams (loop side).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        while self.sock.recv(&mut buf).is_ok() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::time::Instant;
+
+    #[test]
+    fn timeout_rounds_up_not_down() {
+        assert_eq!(timeout_ms(None), -1);
+        assert_eq!(timeout_ms(Some(Duration::ZERO)), 0);
+        assert_eq!(timeout_ms(Some(Duration::from_micros(10))), 1);
+        assert_eq!(timeout_ms(Some(Duration::from_millis(250))), 250);
+    }
+
+    #[test]
+    fn waker_wakes_a_blocked_poll() {
+        let poller = Poller::new().unwrap();
+        let waker = Waker::new().unwrap();
+        poller.register(waker.raw_fd(), 7, Interest::READ).unwrap();
+        // no wake: the wait times out quietly
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert!(events.is_empty());
+        // wake from another thread: the wait returns promptly
+        let t = Instant::now();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(10));
+                waker.wake();
+            });
+            poller.wait(&mut events, Some(Duration::from_secs(10))).unwrap();
+        });
+        assert!(t.elapsed() < Duration::from_secs(5));
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+        waker.drain();
+    }
+
+    #[test]
+    fn poller_reports_readable_on_tcp_data() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let poller = Poller::new().unwrap();
+        poller.register(server.as_raw_fd(), 42, Interest::READ).unwrap();
+        client.write_all(b"ping\n").unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(10))).unwrap();
+        assert!(events.iter().any(|e| e.token == 42 && e.readable));
+        let mut buf = [0u8; 8];
+        let n = (&server).read(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"ping\n");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn nonblocking_connect_completes_and_reports_refusal() {
+        use super::linux::{connect_result, start_connect};
+        // a live listener: the connect either completes synchronously
+        // (loopback fast path) or after one writability event
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (stream, done) = start_connect(&addr).unwrap();
+        if !done {
+            let poller = Poller::new().unwrap();
+            poller
+                .register(stream.as_raw_fd(), 1, Interest::WRITE)
+                .unwrap();
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_secs(10))).unwrap();
+            assert!(!events.is_empty());
+        }
+        connect_result(&stream).unwrap();
+        drop(listener);
+
+        // a dead port: the deferred error surfaces through SO_ERROR
+        let dead = TcpListener::bind("127.0.0.1:0").unwrap();
+        let dead_addr = dead.local_addr().unwrap();
+        drop(dead);
+        match start_connect(&dead_addr) {
+            Err(_) => {} // synchronous refusal is fine too
+            Ok((stream, done)) => {
+                if !done {
+                    let poller = Poller::new().unwrap();
+                    poller
+                        .register(
+                            stream.as_raw_fd(),
+                            1,
+                            Interest::read_write(),
+                        )
+                        .unwrap();
+                    let mut events = Vec::new();
+                    poller
+                        .wait(&mut events, Some(Duration::from_secs(10)))
+                        .unwrap();
+                }
+                assert!(
+                    connect_result(&stream).is_err(),
+                    "connect to a closed port must fail"
+                );
+            }
+        }
+    }
+}

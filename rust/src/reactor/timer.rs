@@ -1,0 +1,121 @@
+//! Deadline bookkeeping for the reactor loops.
+//!
+//! A sorted map of `(Instant, seq) → token` rather than a hashed
+//! timer wheel: the loops here carry at most a few entries per
+//! connection/in-flight op, and what they need from the structure is
+//! an **exact** next-deadline (to bound the poll timeout, so an idle
+//! loop sleeps precisely until the earliest deadline instead of
+//! ticking) and **free cancellation**. Both fall out of a `BTreeMap`;
+//! a wheel would buy O(1) insert at the cost of tick quantization and
+//! explicit cancel lists, which nothing at this fan-in needs.
+//!
+//! Cancellation is lazy: owners do not remove entries when a deadline
+//! becomes irrelevant (the connection closed, the request completed,
+//! the idle clock was pushed back by traffic). A fired token is only a
+//! *hint* — the owner re-checks its own state and either acts or
+//! re-arms. This keeps the hot paths free of timer bookkeeping.
+
+use std::time::Instant;
+
+/// Min-ordered pending deadlines. Not thread-safe by design — each
+/// reactor loop owns one and touches it only from the loop thread.
+#[derive(Debug, Default)]
+pub struct Timers {
+    /// `(when, seq) → token`; `seq` disambiguates equal instants.
+    queue: std::collections::BTreeMap<(Instant, u64), u64>,
+    seq: u64,
+}
+
+impl Timers {
+    /// An empty deadline set.
+    pub fn new() -> Timers {
+        Timers::default()
+    }
+
+    /// Arm `token` to fire at `when`. Multiple deadlines may be armed
+    /// for one token; each fires once (see module doc on laziness).
+    pub fn arm(&mut self, when: Instant, token: u64) {
+        self.seq += 1;
+        self.queue.insert((when, self.seq), token);
+    }
+
+    /// The earliest pending deadline, for bounding the poll timeout.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.keys().next().map(|&(when, _)| when)
+    }
+
+    /// Pop every deadline at or before `now` into `fired` (appended in
+    /// firing order). Returns how many fired.
+    pub fn pop_expired(&mut self, now: Instant, fired: &mut Vec<u64>) -> usize {
+        let mut n = 0;
+        while let Some((&key, &token)) = self.queue.iter().next() {
+            if key.0 > now {
+                break;
+            }
+            self.queue.remove(&key);
+            fired.push(token);
+            n += 1;
+        }
+        n
+    }
+
+    /// Number of pending (possibly stale) deadlines.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Whether no deadlines are pending.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fires_in_deadline_order_and_tracks_next() {
+        let mut t = Timers::new();
+        let base = Instant::now();
+        t.arm(base + Duration::from_millis(30), 3);
+        t.arm(base + Duration::from_millis(10), 1);
+        t.arm(base + Duration::from_millis(20), 2);
+        assert_eq!(t.next_deadline(), Some(base + Duration::from_millis(10)));
+
+        let mut fired = Vec::new();
+        assert_eq!(t.pop_expired(base + Duration::from_millis(25), &mut fired), 2);
+        assert_eq!(fired, vec![1, 2]);
+        assert_eq!(t.next_deadline(), Some(base + Duration::from_millis(30)));
+
+        assert_eq!(t.pop_expired(base + Duration::from_millis(30), &mut fired), 1);
+        assert_eq!(fired, vec![1, 2, 3]);
+        assert!(t.is_empty());
+        assert_eq!(t.next_deadline(), None);
+    }
+
+    #[test]
+    fn equal_instants_keep_arm_order() {
+        let mut t = Timers::new();
+        let when = Instant::now();
+        t.arm(when, 10);
+        t.arm(when, 20);
+        t.arm(when, 30);
+        assert_eq!(t.len(), 3);
+        let mut fired = Vec::new();
+        t.pop_expired(when, &mut fired);
+        assert_eq!(fired, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn nothing_fires_before_its_time() {
+        let mut t = Timers::new();
+        let base = Instant::now();
+        t.arm(base + Duration::from_secs(60), 1);
+        let mut fired = Vec::new();
+        assert_eq!(t.pop_expired(base, &mut fired), 0);
+        assert!(fired.is_empty());
+        assert_eq!(t.len(), 1);
+    }
+}

@@ -1,42 +1,62 @@
 //! One routed backend: a TCP coordinator address plus its connection
 //! pool and health state. A backend owns the single-request round trip
-//! (`line out, JSON line back`) including the stale-pooled-connection
-//! retry policy; the scatter layer composes these into fan-outs and
-//! failover. Probes are **epoch-gated**: a `\x01stats` reply whose
-//! `partition_epoch` the router's [`EpochGate`] rejects counts as a
-//! probe *failure*, so a backend mid-warm-up or running a stale
-//! partition is never (re-)admitted early.
+//! (`line out, JSON line back`) — executed on the router's shared
+//! outbound reactor ([`NetDriver`]) under a true **end-to-end
+//! deadline** (connect + write + full reply =
+//! `RouterConfig::request_timeout`) — including the
+//! stale-pooled-connection retry policy; the scatter layer composes
+//! these into fan-outs and failover. Probes are **epoch-gated**: a
+//! `\x01stats` reply whose `partition_epoch` the router's [`EpochGate`]
+//! rejects counts as a probe *failure*, so a backend mid-warm-up or
+//! running a stale partition is never (re-)admitted early.
 //!
 //! # Examples
 //!
 //! ```
 //! use std::sync::Arc;
 //! use cft_rag::rag::config::RouterConfig;
+//! use cft_rag::reactor::client::NetDriver;
 //! use cft_rag::router::backend::Backend;
 //! use cft_rag::router::health::EpochGate;
 //!
 //! let cfg = RouterConfig::for_backends(["127.0.0.1:7181"]);
-//! let b = Backend::new(0, "127.0.0.1:7181", &cfg, Arc::new(EpochGate::new(0)));
+//! let driver = Arc::new(NetDriver::start().unwrap());
+//! let b = Backend::new(
+//!     0,
+//!     "127.0.0.1:7181",
+//!     &cfg,
+//!     Arc::new(EpochGate::new(0)),
+//!     driver,
+//! );
 //! assert_eq!(b.addr(), "127.0.0.1:7181");
 //! assert!(b.health().is_healthy(), "backends start optimistic");
 //! ```
 
-use std::io::{self, BufRead, BufReader, Write};
-use std::net::TcpStream;
-use std::sync::Arc;
+use std::io;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::tcp::STATS_REQUEST;
 use crate::rag::config::RouterConfig;
+use crate::reactor::client::{Exchange, NetDriver};
 use crate::router::health::{EpochGate, HealthState};
 use crate::router::pool::ConnPool;
+use crate::sync::Arc;
 use crate::util::json::Json;
 use crate::util::log;
+
+/// Deadline stand-in for a zero (= "no timeout") request timeout:
+/// far enough out to be unbounded in practice while keeping the
+/// driver's timer arithmetic finite.
+const NO_TIMEOUT: Duration = Duration::from_secs(24 * 60 * 60);
 
 /// A backend coordinator behind the router.
 #[derive(Debug)]
 pub struct Backend {
     index: usize,
-    pool: ConnPool,
+    pool: Arc<ConnPool>,
+    /// The router's shared outbound reactor: every exchange — query,
+    /// probe, rebalance wire op — multiplexes onto its one thread.
+    driver: Arc<NetDriver>,
     health: HealthState,
     /// The membership epochs the router currently accepts — shared
     /// fleet-wide, consulted by [`probe`](Backend::probe).
@@ -47,28 +67,30 @@ pub struct Backend {
     /// would, and no prober also means epoch staleness could never
     /// have been detected, so the gate is vacuous in that deployment.
     passive_readmit: bool,
+    connect_timeout: Duration,
+    request_timeout: Duration,
 }
 
 impl Backend {
-    /// Backend `index` at `addr`, with the router config's timeouts,
-    /// probing against the fleet's shared `epoch_gate`.
+    /// Backend `index` at `addr`, with the router config's deadlines,
+    /// probing against the fleet's shared `epoch_gate`, exchanging
+    /// over the shared outbound reactor `driver`.
     pub fn new(
         index: usize,
         addr: &str,
         cfg: &RouterConfig,
         epoch_gate: Arc<EpochGate>,
+        driver: Arc<NetDriver>,
     ) -> Backend {
         Backend {
             index,
-            pool: ConnPool::new(
-                addr,
-                cfg.max_idle_conns,
-                cfg.connect_timeout,
-                cfg.request_timeout,
-            ),
+            pool: Arc::new(ConnPool::new(addr, cfg.max_idle_conns)),
+            driver,
             health: HealthState::new(cfg.failure_threshold),
             epoch_gate,
             passive_readmit: cfg.probe_interval.is_zero(),
+            connect_timeout: cfg.connect_timeout,
+            request_timeout: cfg.request_timeout,
         }
     }
 
@@ -89,58 +111,77 @@ impl Backend {
 
     /// One request/reply round trip.
     ///
-    /// At most **one** pooled connection is tried before falling
-    /// through to a *fresh* connection — so a hung backend costs this
-    /// attempt at most 2× the request timeout, never timeout-per-idle-
-    /// socket — and a pooled failure discards the whole idle pool (its
-    /// siblings are from the same era and equally suspect). The fresh
-    /// connection's outcome is authoritative: success resets the health
-    /// failure streak, failure counts toward demotion. The reply being
-    /// parseable JSON is part of "success" — a backend speaking garbage
-    /// is as unusable as a dead one. When the router runs a prober, a
-    /// success here does **not** re-admit a marked-down backend: query
-    /// replies carry no partition epoch, so re-admission is reserved
-    /// for the epoch-validating [`probe`](Backend::probe) — otherwise
-    /// one answered query on the failover tail would bypass the
-    /// [`EpochGate`] and route traffic to a backend serving a stale
-    /// key slice. With probing disabled (`probe_interval == 0`) a
-    /// success re-admits directly, as before the gate existed —
-    /// nothing else ever would.
+    /// The exchange runs on the outbound reactor under an absolute
+    /// end-to-end deadline (`request_timeout` from the first byte of
+    /// connect to the last byte of the reply). At most **one** pooled
+    /// connection is tried before the driver falls through to a
+    /// *fresh* connection within the same deadline — so a hung backend
+    /// costs this attempt at most one request timeout, never
+    /// timeout-per-idle-socket — and a pooled failure discards the
+    /// whole idle pool (its siblings are from the same era and equally
+    /// suspect). The fresh connection's outcome is authoritative:
+    /// success resets the health failure streak, failure counts toward
+    /// demotion. The reply being parseable JSON is part of "success" —
+    /// a backend speaking garbage is as unusable as a dead one. When
+    /// the router runs a prober, a success here does **not** re-admit
+    /// a marked-down backend: query replies carry no partition epoch,
+    /// so re-admission is reserved for the epoch-validating
+    /// [`probe`](Backend::probe) — otherwise one answered query on the
+    /// failover tail would bypass the [`EpochGate`] and route traffic
+    /// to a backend serving a stale key slice. With probing disabled
+    /// (`probe_interval == 0`) a success re-admits directly, as before
+    /// the gate existed — nothing else ever would.
     pub fn request(&self, line: &str) -> io::Result<Json> {
-        match self.exchange(line) {
-            Ok(json) => {
+        let raw = self.driver.exchange(self.exchange_spec(line));
+        self.finish_exchange(raw)
+    }
+
+    /// The driver spec for one round trip to this backend — the
+    /// scatter layer uses this to batch many backends' exchanges into
+    /// a single multiplexed [`NetDriver::exchange_many`] call. The
+    /// deadline clock starts *now*.
+    pub(crate) fn exchange_spec(&self, line: &str) -> Exchange {
+        let budget = if self.request_timeout.is_zero() {
+            NO_TIMEOUT
+        } else {
+            self.request_timeout
+        };
+        Exchange {
+            pool: Arc::clone(&self.pool),
+            line: line.to_string(),
+            connect_timeout: self.connect_timeout,
+            deadline: Instant::now() + budget,
+        }
+    }
+
+    /// Turn one driver reply into the request outcome — parse plus the
+    /// same health accounting as [`request`](Backend::request) (which
+    /// is implemented on top of this).
+    pub(crate) fn finish_exchange(
+        &self,
+        raw: io::Result<String>,
+    ) -> io::Result<Json> {
+        let out = raw.and_then(|reply| self.parse_reply(&reply));
+        match &out {
+            Ok(_) => {
                 if self.passive_readmit {
                     self.on_success();
                 } else {
                     self.health.record_success();
                 }
-                Ok(json)
             }
-            Err(e) => {
-                self.on_failure(&e);
-                Err(e)
-            }
+            Err(e) => self.on_failure(e),
         }
+        out
     }
 
-    /// The raw round trip of [`request`](Backend::request) without any
-    /// health accounting — the probe path needs to *validate* a reply
-    /// (partition epoch) before deciding whether it counts as success.
-    fn exchange(&self, line: &str) -> io::Result<Json> {
-        debug_assert!(!line.contains('\n'), "protocol is one line per request");
-        if let Some(conn) = self.pool.take_idle() {
-            match self.roundtrip(conn, line) {
-                Ok(json) => return Ok(json),
-                Err(e) => {
-                    log::debug!(
-                        "stale pooled connection to {}: {e}",
-                        self.addr()
-                    );
-                    self.pool.clear();
-                }
-            }
-        }
-        self.pool.connect().and_then(|conn| self.roundtrip(conn, line))
+    fn parse_reply(&self, reply: &str) -> io::Result<Json> {
+        Json::parse(reply.trim()).map_err(|e| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bad reply from {}: {e}", self.addr()),
+            )
+        })
     }
 
     /// Health probe: a `\x01stats` round trip. A reply only counts as
@@ -151,8 +192,26 @@ impl Backend {
     /// re-admitted early. On success the reply's `requests` gauge is
     /// recorded as the backend's observed load.
     pub fn probe(&self) -> io::Result<Json> {
+        let spec = self.probe_spec();
+        self.finish_probe(self.driver.exchange(spec))
+    }
+
+    /// The wire half of [`probe`](Backend::probe), for fleet-batched
+    /// probing ([`probe_fleet`]): counts the probe and returns its
+    /// `\x01stats` exchange. Pair every spec with a
+    /// [`finish_probe`](Backend::finish_probe) on the driver's reply.
+    pub(crate) fn probe_spec(&self) -> Exchange {
         self.health.record_probe();
-        let json = match self.exchange(STATS_REQUEST) {
+        self.exchange_spec(STATS_REQUEST)
+    }
+
+    /// The validation half of [`probe`](Backend::probe): parse the raw
+    /// driver reply, epoch-gate it, record load, settle health.
+    pub(crate) fn finish_probe(
+        &self,
+        raw: io::Result<String>,
+    ) -> io::Result<Json> {
+        let json = match raw.and_then(|reply| self.parse_reply(&reply)) {
             Ok(json) => json,
             Err(e) => {
                 self.on_failure(&e);
@@ -196,38 +255,31 @@ impl Backend {
             self.pool.clear();
         }
     }
+}
 
-    /// Write `line`, read one reply line, parse it; the connection goes
-    /// back to the pool only after a fully clean round trip.
-    fn roundtrip(&self, mut conn: TcpStream, line: &str) -> io::Result<Json> {
-        conn.write_all(line.as_bytes())?;
-        conn.write_all(b"\n")?;
-        let mut reply = String::new();
-        {
-            let mut reader = BufReader::new(&conn);
-            if reader.read_line(&mut reply)? == 0 {
-                return Err(io::Error::new(
-                    io::ErrorKind::UnexpectedEof,
-                    format!("{} closed before replying", self.addr()),
-                ));
-            }
-        }
-        let json = Json::parse(reply.trim()).map_err(|e| {
-            io::Error::new(
-                io::ErrorKind::InvalidData,
-                format!("bad reply from {}: {e}", self.addr()),
-            )
-        })?;
-        self.pool.put_back(conn);
-        Ok(json)
+/// Probe a whole fleet in one multiplexed round: every backend's
+/// `\x01stats` exchange flies concurrently on the shared outbound
+/// reactor, so a probe round costs at most one request deadline even
+/// when several backends hang — sequential [`Backend::probe`] calls
+/// would stack a deadline per hung backend. Relies on the router
+/// invariant that every backend shares one driver (`Router::connect`
+/// builds the fleet that way, and joiners inherit it).
+pub fn probe_fleet(backends: &[Arc<Backend>]) {
+    let Some(first) = backends.first() else { return };
+    let specs = backends.iter().map(|b| b.probe_spec()).collect();
+    let results = first.driver.exchange_many(specs);
+    for (b, (raw, _)) in backends.iter().zip(results) {
+        // outcome lands in the backend's HealthState; a failed probe
+        // is the demotion signal itself
+        let _ = b.finish_probe(raw);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::{BufRead, BufReader, Write};
     use std::net::TcpListener;
-    use std::time::Duration;
 
     fn cfg() -> RouterConfig {
         RouterConfig {
@@ -238,7 +290,13 @@ mod tests {
     }
 
     fn backend(addr: &str) -> Backend {
-        Backend::new(0, addr, &cfg(), Arc::new(EpochGate::new(0)))
+        Backend::new(
+            0,
+            addr,
+            &cfg(),
+            Arc::new(EpochGate::new(0)),
+            Arc::new(NetDriver::start().unwrap()),
+        )
     }
 
     /// One-shot echo server speaking the line protocol with a fixed
@@ -303,6 +361,28 @@ mod tests {
     }
 
     #[test]
+    fn hung_backend_times_out_at_the_request_deadline() {
+        // a listener that accepts and then never replies: only the
+        // end-to-end deadline (not a per-stream socket timeout) can
+        // bound this request
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let hold = std::thread::spawn(move || listener.accept());
+        let b = backend(&addr);
+        let started = Instant::now();
+        let err = b.request("q").expect_err("nothing ever replies");
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut, "{err}");
+        let waited = started.elapsed();
+        assert!(
+            waited >= Duration::from_millis(400)
+                && waited < Duration::from_secs(5),
+            "deadline ~500ms, waited {waited:?}"
+        );
+        assert!(!b.health().is_healthy());
+        drop(hold);
+    }
+
+    #[test]
     fn probe_records_backend_load() {
         let addr = fake_backend(r#"{"requests":7,"failures":0}"#, 1);
         let b = backend(&addr);
@@ -322,13 +402,15 @@ mod tests {
             probe_interval: Duration::ZERO,
             ..cfg()
         };
-        let b = Backend::new(0, &addr, &cfg, Arc::new(EpochGate::new(0)));
+        let driver = Arc::new(NetDriver::start().unwrap());
+        let gate = Arc::new(EpochGate::new(0));
+        let b = Backend::new(0, &addr, &cfg, gate.clone(), driver.clone());
         // demote via a failure against a dead port first
         let dead = {
             let l = TcpListener::bind("127.0.0.1:0").unwrap();
             l.local_addr().unwrap().to_string()
         };
-        let down = Backend::new(0, &dead, &cfg, Arc::new(EpochGate::new(0)));
+        let down = Backend::new(0, &dead, &cfg, gate, driver);
         assert!(down.request("q").is_err());
         assert!(!down.health().is_healthy());
         // the live backend: force a demotion, then one success re-admits
@@ -353,7 +435,13 @@ mod tests {
             4,
         );
         let gate = Arc::new(EpochGate::new(2));
-        let b = Backend::new(0, &addr, &cfg(), gate.clone());
+        let b = Backend::new(
+            0,
+            &addr,
+            &cfg(),
+            gate.clone(),
+            Arc::new(NetDriver::start().unwrap()),
+        );
         let err = b.probe().expect_err("stale epoch must fail the probe");
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
         assert!(err.to_string().contains("epoch"), "{err}");

@@ -36,7 +36,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::router::backend::Backend;
+use crate::router::backend::{probe_fleet, Backend};
 use crate::util::log;
 
 /// Which fleet membership epochs the router currently accepts from a
@@ -199,8 +199,9 @@ impl HealthState {
     }
 }
 
-/// Background prober: every `interval`, one `\x01stats` round trip per
-/// backend. Success re-admits a down backend (and refreshes its load
+/// Background prober: every `interval`, one fleet-wide multiplexed
+/// `\x01stats` round ([`probe_fleet`] on the shared outbound reactor).
+/// Success re-admits a down backend (and refreshes its load
 /// gauge); failure demotes it — so a killed backend stops attracting
 /// first-attempt traffic within one probe period even with no queries
 /// flowing, and rejoins automatically when it comes back.
@@ -229,11 +230,9 @@ impl HealthProber {
                 .name("cft-router-prober".into())
                 .spawn(move || {
                     while !stop.load(Ordering::Acquire) {
-                        for b in targets.probe_targets() {
-                            // outcome lands in the backend's HealthState;
-                            // a failed probe is the demotion signal itself
-                            let _ = b.probe();
-                        }
+                        // one multiplexed round on the shared outbound
+                        // reactor: hung backends time out concurrently
+                        probe_fleet(&targets.probe_targets());
                         // sleep in short slices so shutdown is prompt
                         // even with a long probe interval
                         let mut left = interval;

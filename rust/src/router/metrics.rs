@@ -78,6 +78,11 @@ pub struct RouterMetricsSnapshot {
     /// Writes additionally applied to the incoming epoch's replica set
     /// while a rebalance was in flight (mid-rebalance consistency).
     pub dual_writes: u64,
+    /// Backend exchanges cut off by their end-to-end request deadline
+    /// on the outbound reactor. Stamped by `Router::snapshot` from the
+    /// [`NetDriver`](crate::reactor::client::NetDriver) counter — the
+    /// sink itself always reports 0 here.
+    pub deadlines_expired: u64,
     /// The serving ring's membership epoch at snapshot time.
     pub ring_epoch: u64,
     pub backends: Vec<BackendMetricsSnapshot>,
@@ -123,6 +128,10 @@ impl RouterMetricsSnapshot {
             ("rebalanced_keys", Json::Num(self.rebalanced_keys as f64)),
             ("dropped_keys", Json::Num(self.dropped_keys as f64)),
             ("dual_writes", Json::Num(self.dual_writes as f64)),
+            (
+                "deadlines_expired",
+                Json::Num(self.deadlines_expired as f64),
+            ),
             ("ring_epoch", Json::Num(self.ring_epoch as f64)),
             ("backends", Json::Arr(backends)),
         ])
@@ -321,6 +330,7 @@ impl RouterMetrics {
             rebalanced_keys: m.rebalanced_keys,
             dropped_keys: m.dropped_keys,
             dual_writes: m.dual_writes,
+            deadlines_expired: 0,
             ring_epoch,
             backends: m
                 .backends
@@ -402,6 +412,7 @@ mod tests {
             "rebalanced_keys",
             "dropped_keys",
             "dual_writes",
+            "deadlines_expired",
             "ring_epoch",
         ] {
             assert_eq!(

@@ -38,7 +38,8 @@
 //!        └─────┘└─────┘└─────┘   (in-process shards ⊂ process shards)
 //! ```
 //!
-//! Failure model: per-backend request timeouts bound the damage of a
+//! Failure model: per-request end-to-end deadlines (reactor timers
+//! covering connect + write + full reply) bound the damage of a
 //! slow backend to its own portion of a fan-out; transport errors and
 //! coordinator refusals walk the ring's deterministic failover order
 //! (minimal disruption: only the dead backend's keys move — property-
@@ -86,94 +87,223 @@ pub use rebalance::{Membership, RebalanceReport, RingState};
 pub use ring::ShardRing;
 pub use scatter::Router;
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::net::{SocketAddr, TcpListener};
 
 use crate::coordinator::tcp::{parse_control, ControlLine};
 use crate::error::Result;
+use crate::reactor::server::{
+    serve_lines, Completion, LineService, ServerConfig, ServerHandle,
+    ServerStats,
+};
+use crate::sync::{mpsc, Arc, Mutex};
 use crate::util::json::Json;
 use crate::util::log;
 
-/// Front-door TCP loop: the router speaks the *same* line protocol as
-/// a single coordinator (`coordinator/tcp.rs`, spec in
+/// Dispatch workers behind the front-door reactor. The reactor thread
+/// never blocks, but a router dispatch does — a scattered query waits
+/// for its fan-out rounds, a `\x01join` for a whole warm-up rebalance —
+/// so accepted lines hop to this small fixed pool. The pool bounds
+/// concurrent *dispatches*, not connections: thousands of connections
+/// cost only reactor state, and the strict per-connection pipelining
+/// (one dispatched line per connection at a time) keeps any one client
+/// from monopolizing the workers.
+const FRONT_DOOR_WORKERS: usize = 8;
+
+/// Front-door TCP serving: the router speaks the *same* line protocol
+/// as a single coordinator (`coordinator/tcp.rs`, spec in
 /// `docs/PROTOCOL.md`), so clients cannot tell one node from a fleet.
+/// Serving runs on the nonblocking reactor
+/// ([`serve_lines`](crate::reactor::server::serve_lines)): one poll
+/// thread owns every connection's read/parse/write state machine,
+/// enforces `RouterConfig::max_connections` (excess connections get an
+/// `overloaded` refusal) and reaps idle connections after
+/// `RouterConfig::idle_timeout`.
+///
 /// `\x01stats` returns the router-level snapshot (per-backend
-/// health/latency and the serving `ring_epoch` included);
-/// `\x01insert`/`\x01delete` become quorum broadcasts to the key's
-/// replica set; `\x01join <addr>`/`\x01drain <addr>` run an elastic
-/// membership change ([`Router::join`]/[`Router::drain`] — warm-up
-/// rebalancing, `router/rebalance.rs`; runbook in
+/// health/latency, the serving `ring_epoch`, the outbound
+/// `deadlines_expired` counter, and the front door's own serving
+/// gauges); `\x01insert`/`\x01delete` become quorum broadcasts to the
+/// key's replica set; `\x01join <addr>`/`\x01drain <addr>` run an
+/// elastic membership change ([`Router::join`]/[`Router::drain`] —
+/// warm-up rebalancing, `router/rebalance.rs`; runbook in
 /// `docs/OPERATIONS.md`). Backend-side control lines
 /// (`\x01dump`/`\x01repartition`/`\x01purge`) are refused here — the
 /// rebalancer drives those against backends directly. Serves until the
 /// process dies — the `cft-rag route` CLI path.
 pub fn serve(router: Arc<Router>, addr: &str) -> Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    log::info!("cft-rag router listening on {addr}");
-    for stream in listener.incoming() {
-        match stream {
-            Ok(stream) => {
-                let r = router.clone();
-                std::thread::spawn(move || {
-                    let _ = handle_conn(r, stream);
-                });
-            }
-            Err(e) => {
-                log::warn!("router accept failed (transient): {e}");
-                if e.kind() != std::io::ErrorKind::Interrupted {
-                    std::thread::sleep(std::time::Duration::from_millis(50));
-                }
-            }
-        }
-    }
+    let mut handle = serve_listener(router, TcpListener::bind(addr)?)?;
+    handle.inner.wait();
     Ok(())
 }
 
-fn handle_conn(router: Arc<Router>, stream: TcpStream) -> std::io::Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    for line in reader.lines() {
-        let line = line?;
-        let query = line.trim();
-        if query.is_empty() {
-            continue;
-        }
-        if query == ":quit" {
-            break;
-        }
-        let reply = match parse_control(query) {
-            Some(Ok(ControlLine::Stats)) => router.snapshot().to_json(),
-            Some(Ok(ControlLine::Insert { tree, node, entity })) => {
-                router.update(entity, tree, node)
-            }
-            Some(Ok(ControlLine::Delete { entity })) => router.remove(entity),
-            Some(Ok(ControlLine::Join { addr })) => router.join(addr),
-            Some(Ok(ControlLine::Drain { addr })) => router.drain(addr),
-            Some(Ok(
-                ControlLine::Dump { .. }
-                | ControlLine::Repartition { .. }
-                | ControlLine::Purge,
-            )) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                (
-                    "error",
-                    Json::Str(
-                        "dump/repartition/purge are backend control \
-                         lines; the rebalancer drives them — send \
-                         \\x01join/\\x01drain here instead"
-                            .into(),
-                    ),
-                ),
-            ]),
-            Some(Err(reason)) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(reason)),
-            ]),
-            None => router.query(query),
-        };
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
+/// [`serve`] against an already-bound listener, returning a handle
+/// instead of blocking — the embedded/test entry point.
+pub fn serve_listener(
+    router: Arc<Router>,
+    listener: TcpListener,
+) -> Result<RouterServeHandle> {
+    let local = listener.local_addr()?;
+    let stats = Arc::new(ServerStats::default());
+    let (work_tx, work_rx) = mpsc::channel::<(String, Completion)>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
+    let workers = (0..FRONT_DOOR_WORKERS)
+        .map(|i| {
+            let rx = Arc::clone(&work_rx);
+            let r = Arc::clone(&router);
+            let serving = Arc::clone(&stats);
+            std::thread::Builder::new()
+                .name(format!("router-dispatch-{i}"))
+                .spawn(move || {
+                    // lock held only while *waiting*: recv returns the
+                    // moment a line arrives, releasing the mutex before
+                    // the (possibly long) dispatch runs
+                    loop {
+                        let next = rx.lock().unwrap().recv();
+                        match next {
+                            Ok((line, done)) => {
+                                let reply = dispatch(&r, &serving, &line);
+                                done.reply(reply.to_string());
+                            }
+                            Err(_) => break, // sender gone: shutting down
+                        }
+                    }
+                })
+                .expect("spawn router dispatch worker")
+        })
+        .collect();
+    let config = ServerConfig {
+        max_connections: router.max_connections(),
+        idle_timeout: router.idle_timeout(),
+        ..ServerConfig::default()
+    };
+    let service = Arc::new(RouterService { work: work_tx.clone() });
+    let inner = serve_lines(listener, service, config, stats)?;
+    log::info!("cft-rag router listening on {local} (nonblocking reactor)");
+    Ok(RouterServeHandle {
+        inner,
+        work_tx: Some(work_tx),
+        workers,
+    })
+}
+
+/// A running router front door: the reactor serving thread plus its
+/// dispatch worker pool. Dropping it shuts both down.
+pub struct RouterServeHandle {
+    inner: ServerHandle,
+    work_tx: Option<mpsc::Sender<(String, Completion)>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl RouterServeHandle {
+    /// The bound address (the OS-assigned port when bound to `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.inner.addr()
     }
-    Ok(())
+
+    /// The live serving-pressure counters.
+    pub fn stats(&self) -> Arc<ServerStats> {
+        self.inner.stats()
+    }
+
+    /// Stop accepting, drop the connections, and join the serving
+    /// thread and dispatch workers. The port is released on return.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.inner.shutdown();
+        // the RouterService sender died with the reactor; dropping ours
+        // disconnects the channel and the workers drain out
+        drop(self.work_tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for RouterServeHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// The front door's [`LineService`]: hands every accepted line to the
+/// dispatch pool (router dispatches block on backend IO, and the
+/// reactor thread must not).
+struct RouterService {
+    work: mpsc::Sender<(String, Completion)>,
+}
+
+impl LineService for RouterService {
+    fn serve_line(&self, line: &str, done: Completion) {
+        if line == ":quit" {
+            done.close();
+            return;
+        }
+        // a failed send means shutdown is racing in; the moved-in
+        // Completion drops with the error and answers `request dropped`
+        let _ = self.work.send((line.to_string(), done));
+    }
+}
+
+/// One front-door line to its reply — the same dispatch table as a
+/// coordinator's, with fleet-level handlers.
+fn dispatch(router: &Router, serving: &ServerStats, query: &str) -> Json {
+    match parse_control(query) {
+        Some(Ok(ControlLine::Stats)) => stats_reply(router, serving),
+        Some(Ok(ControlLine::Insert { tree, node, entity })) => {
+            router.update(entity, tree, node)
+        }
+        Some(Ok(ControlLine::Delete { entity })) => router.remove(entity),
+        Some(Ok(ControlLine::Join { addr })) => router.join(addr),
+        Some(Ok(ControlLine::Drain { addr })) => router.drain(addr),
+        Some(Ok(
+            ControlLine::Dump { .. }
+            | ControlLine::Repartition { .. }
+            | ControlLine::Purge,
+        )) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            (
+                "error",
+                Json::Str(
+                    "dump/repartition/purge are backend control \
+                     lines; the rebalancer drives them — send \
+                     \\x01join/\\x01drain here instead"
+                        .into(),
+                ),
+            ),
+        ]),
+        Some(Err(reason)) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str(reason)),
+        ]),
+        None => router.query(query),
+    }
+}
+
+/// The router's `\x01stats` payload: the metrics snapshot plus the
+/// front door's own serving-pressure gauges (mirroring the coordinator
+/// stats shape, `docs/PROTOCOL.md`).
+fn stats_reply(router: &Router, serving: &ServerStats) -> Json {
+    let mut json = router.snapshot().to_json();
+    if let Json::Obj(m) = &mut json {
+        m.insert(
+            "open_connections".into(),
+            Json::Num(serving.open_connections() as f64),
+        );
+        m.insert(
+            "reactor_queue_depth".into(),
+            Json::Num(serving.reactor_queue_depth() as f64),
+        );
+        m.insert(
+            "overloaded_rejects".into(),
+            Json::Num(serving.overloaded_rejects() as f64),
+        );
+        m.insert(
+            "idle_deadlines_expired".into(),
+            Json::Num(serving.idle_deadlines_expired() as f64),
+        );
+    }
+    json
 }

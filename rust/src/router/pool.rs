@@ -1,74 +1,62 @@
 //! Pooled TCP connections to one backend.
 //!
 //! The router keeps a small free list of idle connections per backend
-//! so the steady-state query path pays no TCP handshake. Freshly opened
-//! sockets get `TCP_NODELAY` (the protocol is one short line each way)
-//! and the router's per-backend IO timeouts, which is what turns a slow
-//! backend into a bounded, degradable failure instead of a stall.
+//! so the steady-state query path pays no TCP handshake. The pool is
+//! *only* the free list: connecting, IO, and deadlines all live in the
+//! outbound reactor ([`crate::reactor::client::NetDriver`]), which
+//! checks sockets out of here, runs the nonblocking round trip, and
+//! returns them after a fully clean exchange. Per-request deadlines
+//! are therefore exact reactor timers covering connect + write + the
+//! whole reply — not per-stream kernel socket timeouts set once at
+//! connect time, as in the pre-reactor design.
 //!
 //! The pool makes no liveness promise for idle connections — a backend
-//! restart leaves stale sockets behind — so the consumer
-//! (`router/backend.rs`) retries idle-connection failures against a
-//! fresh connection before counting the backend as unhealthy.
+//! restart leaves stale sockets behind — so the driver retries
+//! idle-connection failures against a fresh connection before the
+//! consumer (`router/backend.rs`) counts the backend as unhealthy.
 //!
 //! # Examples
 //!
 //! ```
-//! use std::net::TcpListener;
-//! use std::time::Duration;
+//! use std::net::{TcpListener, TcpStream};
 //! use cft_rag::router::pool::ConnPool;
 //!
 //! // a listener stands in for a backend
 //! let listener = TcpListener::bind("127.0.0.1:0").unwrap();
 //! let addr = listener.local_addr().unwrap().to_string();
 //!
-//! let pool = ConnPool::new(
-//!     addr,
-//!     2, // keep at most two idle sockets
-//!     Duration::from_millis(500),
-//!     Duration::from_millis(500),
-//! );
+//! let pool = ConnPool::new(addr.clone(), 2); // at most two idle sockets
 //! assert!(pool.take_idle().is_none(), "nothing pooled yet");
-//! let conn = pool.connect().expect("listener is up");
+//! let conn = TcpStream::connect(&addr).unwrap();
 //! pool.put_back(conn); // after a clean round trip
 //! assert_eq!(pool.idle_count(), 1);
 //! assert!(pool.take_idle().is_some(), "steady state skips the handshake");
 //! ```
 
-use std::io;
-use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::Mutex;
-use std::time::Duration;
+use std::net::TcpStream;
 
-/// Idle-connection pool for one backend address.
+use crate::sync::Mutex;
+
+/// Idle-connection free list for one backend address.
 #[derive(Debug)]
 pub struct ConnPool {
     addr: String,
     idle: Mutex<Vec<TcpStream>>,
     max_idle: usize,
-    connect_timeout: Duration,
-    io_timeout: Duration,
 }
 
 impl ConnPool {
     /// New pool for `addr`, keeping at most `max_idle` idle sockets.
-    /// Zero timeouts mean "no timeout" (blocking IO).
-    pub fn new(
-        addr: impl Into<String>,
-        max_idle: usize,
-        connect_timeout: Duration,
-        io_timeout: Duration,
-    ) -> Self {
+    pub fn new(addr: impl Into<String>, max_idle: usize) -> Self {
         ConnPool {
             addr: addr.into(),
             idle: Mutex::new(Vec::new()),
             max_idle,
-            connect_timeout,
-            io_timeout,
         }
     }
 
-    /// The backend address this pool dials.
+    /// The backend address this pool's sockets are connected to (the
+    /// driver resolves and dials it).
     pub fn addr(&self) -> &str {
         &self.addr
     }
@@ -76,31 +64,6 @@ impl ConnPool {
     /// Pop one idle connection, if any (freshness not guaranteed).
     pub fn take_idle(&self) -> Option<TcpStream> {
         self.idle.lock().unwrap().pop()
-    }
-
-    /// Open a fresh connection with the pool's timeouts applied.
-    pub fn connect(&self) -> io::Result<TcpStream> {
-        let mut last = io::Error::new(
-            io::ErrorKind::AddrNotAvailable,
-            format!("no addresses resolved for {}", self.addr),
-        );
-        for sa in self.addr.to_socket_addrs()? {
-            match if self.connect_timeout.is_zero() {
-                TcpStream::connect(sa)
-            } else {
-                TcpStream::connect_timeout(&sa, self.connect_timeout)
-            } {
-                Ok(stream) => {
-                    stream.set_nodelay(true).ok();
-                    let t = (!self.io_timeout.is_zero()).then_some(self.io_timeout);
-                    stream.set_read_timeout(t)?;
-                    stream.set_write_timeout(t)?;
-                    return Ok(stream);
-                }
-                Err(e) => last = e,
-            }
-        }
-        Err(last)
     }
 
     /// Return a connection after a clean round trip (dropped — i.e.
@@ -129,22 +92,14 @@ mod tests {
     use super::*;
     use std::net::TcpListener;
 
-    fn pool_for(listener: &TcpListener, max_idle: usize) -> ConnPool {
-        ConnPool::new(
-            listener.local_addr().unwrap().to_string(),
-            max_idle,
-            Duration::from_millis(500),
-            Duration::from_millis(500),
-        )
-    }
-
     #[test]
-    fn connect_checkin_checkout_roundtrip() {
+    fn checkin_checkout_roundtrip() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let pool = pool_for(&listener, 2);
+        let addr = listener.local_addr().unwrap().to_string();
+        let pool = ConnPool::new(addr.clone(), 2);
+        assert_eq!(pool.addr(), addr);
         assert!(pool.take_idle().is_none());
-        let c = pool.connect().expect("listener is up");
-        pool.put_back(c);
+        pool.put_back(TcpStream::connect(&addr).unwrap());
         assert_eq!(pool.idle_count(), 1);
         assert!(pool.take_idle().is_some());
         assert_eq!(pool.idle_count(), 0);
@@ -153,29 +108,13 @@ mod tests {
     #[test]
     fn pool_caps_idle_and_clears() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let pool = pool_for(&listener, 2);
+        let addr = listener.local_addr().unwrap().to_string();
+        let pool = ConnPool::new(addr.clone(), 2);
         for _ in 0..4 {
-            let c = pool.connect().unwrap();
-            pool.put_back(c);
+            pool.put_back(TcpStream::connect(&addr).unwrap());
         }
         assert_eq!(pool.idle_count(), 2, "excess connections dropped");
         pool.clear();
         assert_eq!(pool.idle_count(), 0);
-    }
-
-    #[test]
-    fn connect_to_dead_backend_errors() {
-        // bind then drop to get a port that refuses connections
-        let addr = {
-            let l = TcpListener::bind("127.0.0.1:0").unwrap();
-            l.local_addr().unwrap().to_string()
-        };
-        let pool = ConnPool::new(
-            addr,
-            1,
-            Duration::from_millis(200),
-            Duration::from_millis(200),
-        );
-        assert!(pool.connect().is_err());
     }
 }

@@ -51,6 +51,7 @@ use crate::coordinator::tcp::{
 };
 use crate::filter::fingerprint::entity_key;
 use crate::rag::config::RouterConfig;
+use crate::reactor::client::NetDriver;
 use crate::router::backend::Backend;
 use crate::router::contracts;
 use crate::router::health::{EpochGate, ProbeTargets};
@@ -271,6 +272,9 @@ pub(crate) struct RebalanceCtx<'a> {
     /// these names, so nothing else is ever routed).
     pub vocab: &'a [String],
     pub replication: usize,
+    /// The router's shared outbound reactor — joining backends are
+    /// dialed through the same driver as the rest of the fleet.
+    pub driver: &'a Arc<NetDriver>,
 }
 
 /// Join `addr` into the serving ring: warm it up over the handoff
@@ -302,6 +306,7 @@ pub(crate) fn execute_join(
         addr,
         ctx.cfg,
         ctx.membership.gate(),
+        ctx.driver.clone(),
     ));
     // fail before disturbing anything if the joiner is not reachable
     if let Err(e) = joiner.request(STATS_REQUEST) {
@@ -857,6 +862,7 @@ mod tests {
             addr,
             &RouterConfig::for_backends([addr]),
             Arc::new(EpochGate::new(0)),
+            Arc::new(NetDriver::start().unwrap()),
         ))
     }
 
@@ -962,12 +968,14 @@ mod tests {
         let metrics = RouterMetrics::new(2);
         let cfg = RouterConfig::for_backends(["a:1", "b:2"]);
         let vocab = vec!["cardiology".to_string()];
+        let driver = Arc::new(NetDriver::start().unwrap());
         let ctx = RebalanceCtx {
             membership: &m,
             metrics: &metrics,
             cfg: &cfg,
             vocab: &vocab,
             replication: 0,
+            driver: &driver,
         };
         for bad in ["", "has space:1", "comma,addr:1"] {
             let err = execute_join(&ctx, bad).unwrap_err();
@@ -988,12 +996,14 @@ mod tests {
         let metrics = RouterMetrics::new(2);
         let cfg = RouterConfig::for_backends(["a:1", "b:2"]);
         let vocab = vec!["cardiology".to_string()];
+        let driver = Arc::new(NetDriver::start().unwrap());
         let ctx = RebalanceCtx {
             membership: &m,
             metrics: &metrics,
             cfg: &cfg,
             vocab: &vocab,
             replication: 2,
+            driver: &driver,
         };
         let err = execute_drain(&ctx, "nope:9").unwrap_err();
         assert!(err.contains("not in the serving ring"), "{err}");

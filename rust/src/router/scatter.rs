@@ -26,9 +26,13 @@
 //! mode the walk stays **within the replica set** — a non-replica would
 //! answer with silently missing facts — and healthy replicas are tried
 //! least-loaded first (the `\x01stats` `requests` gauge the prober
-//! collects), so hot keys spread across their replicas. Because every
-//! backend request carries the per-backend IO timeout, one slow backend
-//! can only delay its own portion; if every candidate for a portion
+//! collects), so hot keys spread across their replicas. Fan-outs
+//! multiplex on the router's shared outbound reactor
+//! ([`NetDriver`](crate::reactor::client::NetDriver)) — one driver
+//! thread runs every concurrent exchange, instead of a blocking thread
+//! per sub-request — and every exchange carries an absolute end-to-end
+//! deadline (`request_timeout`: connect + write + full reply), so one
+//! slow backend can only delay its own portion; if every candidate for a portion
 //! fails, the merged reply is flagged `degraded` (with the missing
 //! mentions and the failing backends' addresses) rather than failing
 //! the query — unless *no* portion succeeded, which is the only path to
@@ -42,13 +46,14 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::io;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::tcp::{DELETE_REQUEST, INSERT_REQUEST};
 use crate::error::{CftError, Result};
 use crate::filter::fingerprint::entity_key;
 use crate::nlp::ner::GazetteerNer;
 use crate::rag::config::RouterConfig;
+use crate::reactor::client::{Exchange, NetDriver};
 use crate::router::backend::Backend;
 use crate::router::health::{EpochGate, HealthProber};
 use crate::router::metrics::{RouterMetrics, RouterMetricsSnapshot};
@@ -74,6 +79,18 @@ struct SendFailure {
 /// outcome (serving backend index + its reply).
 type Portion = (Vec<String>, std::result::Result<(usize, Json), SendFailure>);
 
+/// One fan-out group's in-progress failover walk: the scatter path
+/// advances every unfinished walk one candidate per multiplexed round.
+struct GroupWalk {
+    ents: Vec<String>,
+    line: String,
+    candidates: Vec<usize>,
+    owner: usize,
+    attempt: usize,
+    walk_failed: bool,
+    outcome: std::result::Result<(usize, Json), SendFailure>,
+}
+
 /// The shard router: entity-aware scatter-gather over N coordinator
 /// backends. All methods take `&self`; clients query from any number of
 /// threads concurrently. Ring membership is **elastic**: [`Router::join`]
@@ -98,6 +115,9 @@ pub struct Router {
     write_quorum: usize,
     /// Serializes join/drain — one membership change at a time.
     rebalance_lock: Mutex<()>,
+    /// The shared outbound reactor: every backend exchange — queries,
+    /// probes, rebalance streams — multiplexes onto its one thread.
+    driver: Arc<NetDriver>,
     _prober: HealthProber,
 }
 
@@ -126,12 +146,19 @@ impl Router {
             entity_names.into_iter().map(str::to_string).collect();
         let ring = ShardRing::new(cfg.backends.iter().cloned());
         let gate = Arc::new(EpochGate::new(0));
+        let driver = Arc::new(NetDriver::start()?);
         let backends: Vec<Arc<Backend>> = cfg
             .backends
             .iter()
             .enumerate()
             .map(|(i, addr)| {
-                Arc::new(Backend::new(i, addr, cfg, gate.clone()))
+                Arc::new(Backend::new(
+                    i,
+                    addr,
+                    cfg,
+                    gate.clone(),
+                    driver.clone(),
+                ))
             })
             .collect();
         let membership =
@@ -149,6 +176,7 @@ impl Router {
             replication: cfg.replication_factor,
             write_quorum: cfg.write_quorum,
             rebalance_lock: Mutex::new(()),
+            driver,
             _prober: prober,
         })
     }
@@ -185,8 +213,20 @@ impl Router {
         &self.metrics
     }
 
-    /// Counters joined with live per-backend health and the serving
-    /// membership epoch.
+    /// Front-door connection cap (`RouterConfig::max_connections`) —
+    /// read by `router::serve` when sizing the serving reactor.
+    pub fn max_connections(&self) -> usize {
+        self.cfg.max_connections
+    }
+
+    /// Front-door idle reap timeout (`RouterConfig::idle_timeout`).
+    pub fn idle_timeout(&self) -> Duration {
+        self.cfg.idle_timeout
+    }
+
+    /// Counters joined with live per-backend health, the serving
+    /// membership epoch, and the outbound reactor's deadline-expiry
+    /// counter.
     pub fn snapshot(&self) -> RouterMetricsSnapshot {
         let state = self.membership.load();
         let info: Vec<(String, bool)> = state
@@ -194,7 +234,9 @@ impl Router {
             .iter()
             .map(|b| (b.addr().to_string(), b.health().is_healthy()))
             .collect();
-        self.metrics.snapshot(&info, state.epoch)
+        let mut snap = self.metrics.snapshot(&info, state.epoch);
+        snap.deadlines_expired = self.driver.deadlines_expired();
+        snap
     }
 
     /// Rebalance backend `addr` **into** the serving ring (the
@@ -245,6 +287,7 @@ impl Router {
             cfg: &self.cfg,
             vocab: &self.vocab,
             replication: self.replication,
+            driver: &self.driver,
         }
     }
 
@@ -307,43 +350,99 @@ impl Router {
             .expect("ring is non-empty by construction")
     }
 
-    /// Fan the mention groups out in parallel and merge.
+    /// Fan the mention groups out as one multiplexed batch per failover
+    /// round and merge. Round `k` sends every unfinished group's `k`-th
+    /// candidate exchange through the outbound reactor in a single
+    /// [`NetDriver::exchange_many`] call — the groups' wire time
+    /// overlaps on the one driver thread, so a round costs at most one
+    /// request deadline even when several backends hang.
     fn scatter(
         &self,
         state: &RingState,
         query: &str,
         groups: &BTreeMap<Vec<usize>, Vec<String>>,
     ) -> Json {
-        let parts: Vec<Portion> = std::thread::scope(|s| {
-            let handles: Vec<_> = groups
-                .values()
-                .map(|ents| {
-                    s.spawn(move || {
-                        // The sub-request carries only this owner's
-                        // mentions; its first mention keys the failover
-                        // walk. Joined with " and ": the backend
-                        // normalizes punctuation away, so the separator
-                        // must be a word no entity name contains, or
-                        // adjacent mentions could bridge into a
-                        // spurious longer match.
-                        let line = ents.join(" and ");
-                        let key = entity_key(&ents[0]);
-                        (
-                            ents.clone(),
-                            self.send_with_failover(state, key, &line),
-                        )
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("scatter worker panicked"))
-                .collect()
-        });
+        let mut walks: Vec<GroupWalk> = groups
+            .values()
+            .map(|ents| {
+                // The sub-request carries only this owner's mentions;
+                // its first mention keys the failover walk. Joined with
+                // " and ": the backend normalizes punctuation away, so
+                // the separator must be a word no entity name contains,
+                // or adjacent mentions could bridge into a spurious
+                // longer match.
+                let line = ents.join(" and ");
+                let key = entity_key(&ents[0]);
+                let (candidates, owner) = self.candidate_walk(state, key);
+                GroupWalk {
+                    ents: ents.clone(),
+                    line,
+                    candidates,
+                    owner,
+                    attempt: 0,
+                    walk_failed: false,
+                    outcome: Err(SendFailure {
+                        err: io::Error::new(
+                            io::ErrorKind::NotConnected,
+                            "no backend candidates",
+                        ),
+                        backend: None,
+                    }),
+                }
+            })
+            .collect();
+
+        loop {
+            // this round's batch: every unfinished walk's next candidate
+            let mut round: Vec<usize> = Vec::new();
+            let mut specs: Vec<Exchange> = Vec::new();
+            for (wi, w) in walks.iter().enumerate() {
+                if w.outcome.is_err() && w.attempt < w.candidates.len() {
+                    let idx = w.candidates[w.attempt];
+                    specs.push(state.backends[idx].exchange_spec(&w.line));
+                    round.push(wi);
+                }
+            }
+            if specs.is_empty() {
+                break;
+            }
+            let results = self.driver.exchange_many(specs);
+            for (wi, (raw, elapsed)) in round.into_iter().zip(results) {
+                let w = &mut walks[wi];
+                let idx = w.candidates[w.attempt];
+                w.attempt += 1;
+                let backend = &state.backends[idx];
+                match backend.finish_exchange(raw) {
+                    Ok(json) => {
+                        let ok = json.get("ok") != Some(&Json::Bool(false));
+                        self.metrics.record_backend(idx, ok, elapsed);
+                        if !ok {
+                            w.outcome = Err(refusal(backend, &json));
+                            w.walk_failed = true;
+                            continue;
+                        }
+                        self.note_success(idx, w.owner, w.walk_failed);
+                        w.outcome = Ok((idx, json));
+                    }
+                    Err(e) => {
+                        self.metrics.record_backend(idx, false, elapsed);
+                        w.outcome = Err(SendFailure {
+                            err: e,
+                            backend: Some(backend.addr().to_string()),
+                        });
+                        w.walk_failed = true;
+                    }
+                }
+            }
+        }
+
+        let parts: Vec<Portion> =
+            walks.into_iter().map(|w| (w.ents, w.outcome)).collect();
         self.merge(query, parts)
     }
 
-    /// Try `line` against the candidates for `key`, in order:
+    /// The failover candidate order for `key`, truncated to
+    /// `max_attempts`, plus the key's overall owner:
     ///
     /// * **Full-index mode** (`replication == 0`): the whole ring,
     ///   healthy backends in rank order first.
@@ -355,16 +454,12 @@ impl Router {
     ///
     /// Unhealthy candidates still follow within `max_attempts` — a
     /// marked-down backend may have just come back, and trying it last
-    /// costs nothing when everything else is gone. An `ok:false`
-    /// protocol reply is treated like a transport failure for
-    /// candidate-walking purposes, but does *not* demote the backend's
-    /// health (it answered; the coordinator refused).
-    fn send_with_failover(
+    /// costs nothing when everything else is gone.
+    fn candidate_walk(
         &self,
         state: &RingState,
         key: u64,
-        line: &str,
-    ) -> std::result::Result<(usize, Json), SendFailure> {
+    ) -> (Vec<usize>, usize) {
         let backends = &state.backends;
         let ranked = if self.replication > 0 {
             state.ring.replicas(key, self.replication)
@@ -391,7 +486,39 @@ impl Router {
         }
         order.extend(unhealthy);
         order.truncate(self.max_attempts);
-        let owner = ranked[0];
+        (order, ranked[0])
+    }
+
+    /// Bookkeeping for a walk that ended in a success:
+    /// rescued-after-failure is a failover; merely serving off-owner
+    /// (the replicated load balancer's choice) is a replica hit.
+    fn note_success(&self, idx: usize, owner: usize, walk_failed: bool) {
+        if self.replication > 0 {
+            if walk_failed {
+                self.metrics.record_failover();
+            } else if idx != owner {
+                self.metrics.record_replica_hit();
+            }
+        } else if idx != owner {
+            self.metrics.record_failover();
+        }
+    }
+
+    /// Try `line` against the candidates for `key` in
+    /// [`candidate_walk`](Router::candidate_walk) order, sequentially —
+    /// the single-portion path; each attempt still multiplexes on the
+    /// outbound reactor under its end-to-end deadline. An `ok:false`
+    /// protocol reply is treated like a transport failure for
+    /// candidate-walking purposes, but does *not* demote the backend's
+    /// health (it answered; the coordinator refused).
+    fn send_with_failover(
+        &self,
+        state: &RingState,
+        key: u64,
+        line: &str,
+    ) -> std::result::Result<(usize, Json), SendFailure> {
+        let backends = &state.backends;
+        let (order, owner) = self.candidate_walk(state, key);
         let mut walk_failed = false;
         let mut last = SendFailure {
             err: io::Error::new(
@@ -407,30 +534,11 @@ impl Router {
                     let ok = json.get("ok") != Some(&Json::Bool(false));
                     self.metrics.record_backend(idx, ok, t0.elapsed());
                     if !ok {
-                        let msg = json
-                            .get("error")
-                            .and_then(Json::as_str)
-                            .unwrap_or("backend refused")
-                            .to_string();
-                        last = SendFailure {
-                            err: io::Error::other(msg),
-                            backend: Some(backends[idx].addr().to_string()),
-                        };
+                        last = refusal(&backends[idx], &json);
                         walk_failed = true;
                         continue;
                     }
-                    if self.replication > 0 {
-                        // replicated bookkeeping: rescued-after-failure
-                        // is a failover; merely serving off-owner (the
-                        // load balancer's choice) is a replica hit
-                        if walk_failed {
-                            self.metrics.record_failover();
-                        } else if idx != owner {
-                            self.metrics.record_replica_hit();
-                        }
-                    } else if idx != owner {
-                        self.metrics.record_failover();
-                    }
+                    self.note_success(idx, owner, walk_failed);
                     return Ok((idx, json));
                 }
                 Err(e) => {
@@ -645,42 +753,43 @@ impl Router {
             );
         }
 
-        let outcomes: Vec<(usize, io::Result<Json>)> =
-            std::thread::scope(|s| {
-                for extra in &extras {
-                    self.metrics.record_dual_write();
-                    s.spawn(move || {
-                        if let Err(e) = extra.request(line) {
-                            log::warn!(
-                                "dual write of {line:?} to joining \
-                                 backend {} failed (the handoff replay \
-                                 will restore it): {e}",
-                                extra.addr()
-                            );
-                        }
-                    });
-                }
-                let handles: Vec<_> = targets
-                    .iter()
-                    .map(|&idx| {
-                        let backends = &state.backends;
-                        s.spawn(move || {
-                            let t0 = Instant::now();
-                            let res = backends[idx].request(line);
-                            let ok = matches!(
-                                &res,
-                                Ok(j) if j.get("ok") != Some(&Json::Bool(false))
-                            );
-                            self.metrics.record_backend(idx, ok, t0.elapsed());
-                            (idx, res)
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("write fan-out worker panicked"))
-                    .collect()
-            });
+        // one multiplexed batch: the best-effort dual writes to the
+        // incoming epoch's additions ride along with the quorum
+        // targets' exchanges in the same driver round
+        let mut specs: Vec<Exchange> =
+            Vec::with_capacity(extras.len() + targets.len());
+        for extra in &extras {
+            self.metrics.record_dual_write();
+            specs.push(extra.exchange_spec(line));
+        }
+        for &idx in &targets {
+            specs.push(state.backends[idx].exchange_spec(line));
+        }
+        let mut results = self.driver.exchange_many(specs).into_iter();
+        for extra in &extras {
+            let (raw, _) = results.next().expect("one result per spec");
+            if let Err(e) = extra.finish_exchange(raw) {
+                log::warn!(
+                    "dual write of {line:?} to joining backend {} failed \
+                     (the handoff replay will restore it): {e}",
+                    extra.addr()
+                );
+            }
+        }
+        let outcomes: Vec<(usize, io::Result<Json>)> = targets
+            .iter()
+            .map(|&idx| {
+                let (raw, elapsed) =
+                    results.next().expect("one result per spec");
+                let res = state.backends[idx].finish_exchange(raw);
+                let ok = matches!(
+                    &res,
+                    Ok(j) if j.get("ok") != Some(&Json::Bool(false))
+                );
+                self.metrics.record_backend(idx, ok, elapsed);
+                (idx, res)
+            })
+            .collect();
 
         let mut acks = 0usize;
         let mut applied = 0usize;
@@ -745,6 +854,21 @@ fn annotate(reply: Json, backends: usize, degraded: bool) -> Json {
             Json::Obj(m)
         }
         other => other,
+    }
+}
+
+/// An `ok:false` protocol reply, as a walk failure naming the refusing
+/// backend (it answered — the coordinator declined — so this does not
+/// touch backend health).
+fn refusal(backend: &Backend, json: &Json) -> SendFailure {
+    SendFailure {
+        err: io::Error::other(
+            json.get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("backend refused")
+                .to_string(),
+        ),
+        backend: Some(backend.addr().to_string()),
     }
 }
 

@@ -1,0 +1,299 @@
+//! Adversarial front-door serving tests over the REAL stack: slow
+//! (dribbling) clients, half-closes, mid-line disconnects, and
+//! connection-cap overload against both the coordinator's and the
+//! router's nonblocking reactor front doors (`coordinator/tcp.rs`,
+//! `router/mod.rs`). The reactor engine has unit tests for the same
+//! attacks in isolation (`reactor/server.rs`); these prove the wiring —
+//! config knobs reaching the reactor, `\x01stats` gauges reporting what
+//! happened, honest clients staying served throughout.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use cft_rag::coordinator::tcp::serve_listener;
+use cft_rag::coordinator::{Coordinator, CoordinatorConfig};
+use cft_rag::data::corpus::corpus_from_texts;
+use cft_rag::data::hospital::{HospitalConfig, HospitalDataset};
+use cft_rag::rag::config::{RagConfig, RouterConfig};
+use cft_rag::router::{serve_listener as router_serve_listener, Router};
+use cft_rag::runtime::engine::{Engine, NativeEngine};
+use cft_rag::util::json::Json;
+use cft_rag::util::wait::{require, wait_until};
+
+const SECS_10: Duration = Duration::from_secs(10);
+
+fn dataset() -> HospitalDataset {
+    HospitalDataset::generate(HospitalConfig {
+        trees: 3,
+        ..HospitalConfig::default()
+    })
+}
+
+fn coordinator(cfg: RagConfig) -> Arc<Coordinator> {
+    let ds = dataset();
+    let forest = Arc::new(ds.build_forest());
+    let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+    Arc::new(
+        Coordinator::start(
+            forest,
+            corpus_from_texts(&ds.documents()),
+            engine,
+            cfg,
+            CoordinatorConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap(),
+    )
+}
+
+/// One fresh-connection line exchange; `None` on any refusal or IO
+/// failure — the polling predicate for "the front door serves again".
+fn roundtrip(addr: &SocketAddr, line: &str) -> Option<String> {
+    let mut conn = TcpStream::connect(addr).ok()?;
+    conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    conn.write_all(format!("{line}\n").as_bytes()).ok()?;
+    let mut reply = String::new();
+    BufReader::new(conn).read_line(&mut reply).ok()?;
+    (!reply.is_empty()).then(|| reply.trim().to_string())
+}
+
+fn stats_served(addr: &SocketAddr) -> bool {
+    roundtrip(addr, "\x01stats").is_some_and(|l| l.contains("\"requests\""))
+}
+
+#[test]
+fn coordinator_overload_is_refused_cleanly_and_recovers() {
+    let c = coordinator(RagConfig {
+        max_connections: 1,
+        ..RagConfig::default()
+    });
+    let handle =
+        serve_listener(c.clone(), TcpListener::bind("127.0.0.1:0").unwrap())
+            .unwrap();
+    let addr = handle.addr();
+
+    // fill the single admitted slot and prove it serves
+    let mut admitted = TcpStream::connect(addr).unwrap();
+    admitted
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    admitted.write_all(b"\x01stats\n").unwrap();
+    let mut admitted = BufReader::new(admitted);
+    let mut line = String::new();
+    admitted.read_line(&mut line).unwrap();
+    assert!(line.contains("\"requests\""), "{line}");
+
+    // the connection over the cap gets one refusal line, then EOF —
+    // never a hang, never a silent drop
+    let refused = TcpStream::connect(addr).unwrap();
+    refused
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let mut refused = BufReader::new(refused);
+    line.clear();
+    refused.read_line(&mut line).unwrap();
+    let reply = Json::parse(line.trim()).expect("refusal is a JSON line");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    assert_eq!(
+        reply.get("error").and_then(Json::as_str),
+        Some("overloaded"),
+        "{reply}"
+    );
+    line.clear();
+    assert_eq!(refused.read_line(&mut line).unwrap(), 0, "refused conn EOF");
+    assert!(handle.stats().overloaded_rejects() >= 1);
+
+    // freeing the slot re-opens the door
+    drop(admitted);
+    require("a new client is admitted after the slot freed", SECS_10, || {
+        stats_served(&addr)
+    });
+    handle.shutdown();
+    c.stop();
+}
+
+#[test]
+fn coordinator_slowloris_is_reaped_while_honest_clients_are_served() {
+    let c = coordinator(RagConfig {
+        idle_timeout: Duration::from_millis(150),
+        ..RagConfig::default()
+    });
+    let handle =
+        serve_listener(c.clone(), TcpListener::bind("127.0.0.1:0").unwrap())
+            .unwrap();
+    let addr = handle.addr();
+
+    // the attack: bytes trickle in but a line never completes, so the
+    // idle clock (keyed on *completed* lines) never advances
+    let mut dribbler = TcpStream::connect(addr).unwrap();
+    dribbler.write_all(b"\x01sta").unwrap();
+
+    // an honest client is served while the dribbler squats
+    assert!(stats_served(&addr));
+
+    require("dribbler reaped by the idle timeout", SECS_10, || {
+        handle.stats().idle_deadlines_expired() >= 1
+    });
+
+    // the reaped socket is genuinely dead from the client side
+    dribbler
+        .set_read_timeout(Some(Duration::from_millis(50)))
+        .unwrap();
+    let mut buf = [0u8; 16];
+    let dead = wait_until(SECS_10, || match dribbler.read(&mut buf) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) => !matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ),
+    });
+    assert!(dead, "reaped connection reads EOF or reset");
+
+    // the reap shows up in the stats payload, and serving continues
+    let reply = roundtrip(&addr, "\x01stats").expect("still serving");
+    let snap = Json::parse(&reply).unwrap();
+    assert!(
+        snap.get("idle_deadlines_expired").and_then(Json::as_f64)
+            >= Some(1.0),
+        "{snap}"
+    );
+    handle.shutdown();
+    c.stop();
+}
+
+#[test]
+fn coordinator_half_close_and_mid_line_disconnect_are_contained() {
+    let c = coordinator(RagConfig::default());
+    let handle =
+        serve_listener(c.clone(), TcpListener::bind("127.0.0.1:0").unwrap())
+            .unwrap();
+    let addr = handle.addr();
+
+    // half-close: a complete line plus a partial tail, then FIN. The
+    // complete line is still answered; the tail is dropped silently.
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    conn.write_all(b"\x01stats\n\x01sta").unwrap();
+    conn.shutdown(Shutdown::Write).unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"requests\""), "answered after FIN: {line}");
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "then EOF");
+
+    // mid-line hard disconnect: partial line, socket vanishes
+    let mut rude = TcpStream::connect(addr).unwrap();
+    rude.write_all(b"describe the hierar").unwrap();
+    drop(rude);
+
+    require("server keeps serving after the disconnects", SECS_10, || {
+        stats_served(&addr)
+    });
+    require("dead connections leave the open gauge", SECS_10, || {
+        handle.stats().open_connections() == 0
+    });
+    handle.shutdown();
+    c.stop();
+}
+
+#[test]
+fn router_front_door_caps_reaps_and_survives_rude_clients() {
+    let ds = dataset();
+    let backend = coordinator(RagConfig::default());
+    let backend_handle = serve_listener(
+        backend.clone(),
+        TcpListener::bind("127.0.0.1:0").unwrap(),
+    )
+    .unwrap();
+    let names: Vec<String> = ds
+        .build_forest()
+        .interner()
+        .iter()
+        .map(|(_, n)| n.to_string())
+        .collect();
+    let cfg = RouterConfig {
+        backends: vec![backend_handle.addr().to_string()],
+        probe_interval: Duration::ZERO,
+        max_connections: 1,
+        idle_timeout: Duration::from_millis(200),
+        ..RouterConfig::default()
+    };
+    let router = Arc::new(
+        Router::connect(names.iter().map(String::as_str), &cfg).unwrap(),
+    );
+    let handle = router_serve_listener(
+        router,
+        TcpListener::bind("127.0.0.1:0").unwrap(),
+    )
+    .unwrap();
+    let addr = handle.addr();
+
+    // a real query runs the whole pipeline: front-door reactor →
+    // dispatch worker → scatter → outbound reactor → backend reactor
+    let mut admitted = TcpStream::connect(addr).unwrap();
+    admitted
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    admitted
+        .write_all(b"what is the parent unit of cardiology\n\x01stats\n")
+        .unwrap();
+    let mut admitted = BufReader::new(admitted);
+    let mut line = String::new();
+    admitted.read_line(&mut line).unwrap();
+    let reply = Json::parse(line.trim()).expect("query reply is JSON");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    // the pipelined stats line reports the front door's own gauges
+    line.clear();
+    admitted.read_line(&mut line).unwrap();
+    let snap = Json::parse(line.trim()).expect("stats reply is JSON");
+    assert_eq!(
+        snap.get("open_connections").and_then(Json::as_f64),
+        Some(1.0),
+        "{snap}"
+    );
+    assert!(snap.get("ring_epoch").is_some(), "{snap}");
+    assert!(snap.get("deadlines_expired").is_some(), "{snap}");
+
+    // over the cap: clean overloaded refusal
+    let refused = TcpStream::connect(addr).unwrap();
+    refused
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let mut refused = BufReader::new(refused);
+    line.clear();
+    refused.read_line(&mut line).unwrap();
+    let reply = Json::parse(line.trim()).unwrap();
+    assert_eq!(
+        reply.get("error").and_then(Json::as_str),
+        Some("overloaded"),
+        "{reply}"
+    );
+    assert!(handle.stats().overloaded_rejects() >= 1);
+
+    // free the slot, then squat on it with a dribbler: reaped on the
+    // idle timeout, and the door opens again
+    drop(admitted);
+    require("slot freed", SECS_10, || {
+        handle.stats().open_connections() == 0
+    });
+    let mut dribbler = TcpStream::connect(addr).unwrap();
+    dribbler.write_all(b"\x01sta").unwrap();
+    require("router reaps the dribbler", SECS_10, || {
+        handle.stats().idle_deadlines_expired() >= 1
+    });
+
+    // mid-line disconnect, then the front door still serves
+    let mut rude = TcpStream::connect(addr).unwrap();
+    rude.write_all(b"what is the par").unwrap();
+    drop(rude);
+    require("router serves after the rude clients", SECS_10, || {
+        stats_served(&addr)
+    });
+
+    handle.shutdown();
+    backend_handle.shutdown();
+    backend.stop();
+}
