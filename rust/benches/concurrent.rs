@@ -46,10 +46,19 @@
 //! reactor's idle connections cost bytes of state, the baseline's cost
 //! a thread each.
 //!
+//! The PR-8 scenario: **observability overhead** — the same client load
+//! against one TCP coordinator with request tracing disabled
+//! (`trace_sample_every = 0`, the production default) and head-sampling
+//! *every* query. The acceptance claim is that the disabled-sampling
+//! tracing hooks plus the filter's relaxed-atomic telemetry counters
+//! cost < 3% throughput.
+//!
 //! Run: `cargo bench --bench concurrent`. Writes `results/concurrent.csv`,
 //! `results/concurrent_expansion.csv`, `results/concurrent_bloom.csv`,
 //! `results/concurrent_router.csv`, `results/concurrent_replication.csv`,
-//! `results/concurrent_join.csv` and `results/concurrent_connscale.csv`.
+//! `results/concurrent_join.csv`, `results/concurrent_connscale.csv`,
+//! `results/concurrent_obs.csv`, and a machine-readable summary of every
+//! scenario's headline numbers to `results/BENCH_concurrent.json`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -159,6 +168,7 @@ fn main() {
 
     let mut rows = Vec::new();
     let mut csv = CsvTable::new(&["design", "threads", "mops_per_s", "speedup_vs_mutex"]);
+    let mut sweep_json: Vec<Json> = Vec::new();
 
     // per-(arm, threads) p50 Mops/s
     let run = |label: &str, threads: usize, f: &(dyn Fn(usize) + Sync)| -> f64 {
@@ -223,6 +233,12 @@ fn main() {
                 format!("{mops}"),
                 format!("{speedup}"),
             ]);
+            sweep_json.push(Json::obj(vec![
+                ("design", Json::Str(design.to_string())),
+                ("threads", Json::Num(threads as f64)),
+                ("mops_per_s", Json::Num(mops)),
+                ("speedup_vs_mutex", Json::Num(speedup)),
+            ]));
         }
     }
 
@@ -277,6 +293,7 @@ fn main() {
         "lookups",
         "expansions",
     ]);
+    let mut exp_json: Vec<Json> = Vec::new();
     let exp_key = |i: u64| fnv1a(&i.to_le_bytes());
     for (label, step) in [("monolithic", 0usize), ("incremental", 64)] {
         let cf = Arc::new(ShardedCuckooFilter::new(
@@ -340,6 +357,13 @@ fn main() {
             lat.len().to_string(),
             expansions.to_string(),
         ]);
+        exp_json.push(Json::obj(vec![
+            ("migration", Json::Str(label.to_string())),
+            ("p50_ns", Json::Num(p50 as f64)),
+            ("p99_ns", Json::Num(p99 as f64)),
+            ("max_us", Json::Num(max_us)),
+            ("expansions", Json::Num(expansions as f64)),
+        ]));
     }
     // derive from `out` without clobbering it when --out lacks ".csv"
     let exp_out = match out.strip_suffix(".csv") {
@@ -366,6 +390,7 @@ fn main() {
         Arc::new(ArcRetriever::new(BloomTRag::new(forest.clone(), 0.01)));
     let mut bloom_csv =
         CsvTable::new(&["design", "threads", "mops_per_s", "scaling"]);
+    let mut bloom_json: Vec<Json> = Vec::new();
     for (label, r) in [("bloom-mutex", &bloom_mutex), ("bloom-arc", &bloom_arc)]
     {
         let mut one_thread = 0.0f64;
@@ -404,6 +429,12 @@ fn main() {
                 format!("{mops}"),
                 format!("{scaling}"),
             ]);
+            bloom_json.push(Json::obj(vec![
+                ("design", Json::Str(label.to_string())),
+                ("threads", Json::Num(threads as f64)),
+                ("mops_per_s", Json::Num(mops)),
+                ("scaling", Json::Num(scaling)),
+            ]));
         }
     }
     let bloom_out = match out.strip_suffix(".csv") {
@@ -414,16 +445,46 @@ fn main() {
     println!("wrote {bloom_out}");
 
     // ---- shard router: 1-backend vs N-backend scatter-gather ----
-    router_scenario(&args, &out);
+    let router_json = router_scenario(&args, &out);
 
     // ---- replication: R=1 vs R=2 partitioned backends, skewed load ----
-    replication_scenario(&args, &out);
+    let replication_json = replication_scenario(&args, &out);
 
     // ---- elasticity: join a backend into a live R=2 fleet ----
-    join_scenario(&args, &out);
+    let join_json = join_scenario(&args, &out);
 
     // ---- connection scaling: reactor vs thread-per-connection ----
-    connscale_scenario(&args, &out);
+    let connscale_json = connscale_scenario(&args, &out);
+
+    // ---- observability overhead: tracing off vs every-query ----
+    let obs_json = obs_overhead_scenario(&args, &out);
+
+    // machine-readable summary of every scenario, alongside the CSVs
+    let bench_json = Json::obj(vec![
+        ("bench", Json::Str("concurrent".to_string())),
+        ("throughput_sweep", Json::Arr(sweep_json)),
+        (
+            "single_thread_lookup_ns",
+            Json::obj(vec![
+                ("unsharded", Json::Num(p)),
+                ("sharded", Json::Num(s)),
+            ]),
+        ),
+        ("expansion", Json::Arr(exp_json)),
+        ("bloom", Json::Arr(bloom_json)),
+        ("router", router_json),
+        ("replication", replication_json),
+        ("join", join_json),
+        ("connscale", connscale_json),
+        ("obs_overhead", obs_json),
+    ]);
+    let json_out = match out.rfind('/') {
+        Some(i) => format!("{}/BENCH_concurrent.json", &out[..i]),
+        None => "BENCH_concurrent.json".to_string(),
+    };
+    std::fs::write(&json_out, format!("{bench_json}\n"))
+        .expect("write bench json");
+    println!("wrote {json_out}");
 }
 
 /// The PR-3 acceptance scenario: the same client load against the
@@ -431,7 +492,7 @@ fn main() {
 /// each with its own engine and its own serialized embed/search
 /// batcher), reporting aggregate throughput and the speedup of the
 /// N-backend arm over the single-backend arm.
-fn router_scenario(args: &Args, out: &str) {
+fn router_scenario(args: &Args, out: &str) -> Json {
     let arms: Vec<usize> = args.list_or("router-backends", &[1, 4]);
     let queries: usize = args.num_or("router-queries", 384);
     let clients: usize = args.num_or("router-clients", 8).max(1);
@@ -479,6 +540,7 @@ fn router_scenario(args: &Args, out: &str) {
         "fanouts",
         "failures",
     ]);
+    let mut arms_json: Vec<Json> = Vec::new();
     let mut base_qps = 0.0f64;
     for &n in &arms {
         // real TCP backends, each a full coordinator with its own engine
@@ -560,6 +622,13 @@ fn router_scenario(args: &Args, out: &str) {
             snap.fanouts.to_string(),
             failures.to_string(),
         ]);
+        arms_json.push(Json::obj(vec![
+            ("backends", Json::Num(n as f64)),
+            ("qps", Json::Num(qps)),
+            ("speedup_vs_1", Json::Num(speedup)),
+            ("fanouts", Json::Num(snap.fanouts as f64)),
+            ("failures", Json::Num(failures as f64)),
+        ]));
 
         drop(router); // prober stops before its backends vanish
         for (coordinator, handle) in backends {
@@ -573,6 +642,10 @@ fn router_scenario(args: &Args, out: &str) {
     };
     csv.write_to(&router_out).expect("write router csv");
     println!("wrote {router_out}");
+    Json::obj(vec![
+        ("arms", Json::Arr(arms_json)),
+        ("csv", Json::Str(router_out)),
+    ])
 }
 
 /// The ISSUE-4 acceptance scenario: 3 key-partitioned backends under a
@@ -582,7 +655,7 @@ fn router_scenario(args: &Args, out: &str) {
 /// two backends). Reports aggregate throughput *and* per-backend index
 /// memory — replication buys read capacity at exactly R× the per-key
 /// index bytes, and this arm makes both sides of that trade visible.
-fn replication_scenario(args: &Args, out: &str) {
+fn replication_scenario(args: &Args, out: &str) -> Json {
     let queries: usize = args.num_or("router-queries", 384);
     let clients: usize = args.num_or("router-clients", 8).max(1);
     let workers: usize = args.num_or("router-workers", 2);
@@ -627,6 +700,7 @@ fn replication_scenario(args: &Args, out: &str) {
         "index_kib_mean_per_backend",
         "index_kib_total",
     ]);
+    let mut arms_json: Vec<Json> = Vec::new();
     let mut base_qps = 0.0f64;
     for r in [1usize, 2] {
         // bind first: partitioned indexes need the final address list
@@ -735,6 +809,16 @@ fn replication_scenario(args: &Args, out: &str) {
             format!("{mean_kib}"),
             format!("{total_kib}"),
         ]);
+        arms_json.push(Json::obj(vec![
+            ("replicas", Json::Num(r as f64)),
+            ("qps", Json::Num(qps)),
+            ("speedup_vs_r1", Json::Num(speedup)),
+            ("replica_hits", Json::Num(snap.replica_hits as f64)),
+            ("failovers", Json::Num(snap.failovers as f64)),
+            ("degraded", Json::Num(snap.degraded as f64)),
+            ("failures", Json::Num(failures as f64)),
+            ("index_kib_mean_per_backend", Json::Num(mean_kib)),
+        ]));
 
         drop(router); // prober stops before its backends vanish
         for (coordinator, handle) in backends {
@@ -748,6 +832,10 @@ fn replication_scenario(args: &Args, out: &str) {
     };
     csv.write_to(&rep_out).expect("write replication csv");
     println!("wrote {rep_out}");
+    Json::obj(vec![
+        ("arms", Json::Arr(arms_json)),
+        ("csv", Json::Str(rep_out)),
+    ])
 }
 
 /// The ISSUE-5 acceptance scenario: a 4th backend joins a LIVE 3-node
@@ -757,7 +845,7 @@ fn replication_scenario(args: &Args, out: &str) {
 /// starts with an EMPTY index (warming partition; every key it serves
 /// arrives via the `\x01insert` handoff), and the incumbents' post-drop
 /// live index shrinks from ~R/N toward the ~R/(N+1) bound.
-fn join_scenario(args: &Args, out: &str) {
+fn join_scenario(args: &Args, out: &str) -> Json {
     let queries: usize = args.num_or("router-queries", 384);
     let clients: usize = args.num_or("router-clients", 8).max(1);
     let workers: usize = args.num_or("router-workers", 2);
@@ -945,6 +1033,7 @@ fn join_scenario(args: &Args, out: &str) {
         "keys_dropped",
         "ring_epoch",
     ]);
+    let mut phases_json: Vec<Json> = Vec::new();
     for (phase, qps, failures, kib) in [
         ("before", qps_before, fail_before, kib_before),
         ("during", qps_during, fail_during, kib_before),
@@ -964,6 +1053,12 @@ fn join_scenario(args: &Args, out: &str) {
             format!("{keys_dropped}"),
             router.ring_epoch().to_string(),
         ]);
+        phases_json.push(Json::obj(vec![
+            ("phase", Json::Str(phase.to_string())),
+            ("qps", Json::Num(qps)),
+            ("failures", Json::Num(failures as f64)),
+            ("incumbent_live_kib_mean", Json::Num(kib)),
+        ]));
     }
     println!(
         "  join: {keys_streamed:.0} keys streamed to the (initially \
@@ -984,6 +1079,13 @@ fn join_scenario(args: &Args, out: &str) {
     };
     csv.write_to(&join_out).expect("write join csv");
     println!("wrote {join_out}");
+    Json::obj(vec![
+        ("phases", Json::Arr(phases_json)),
+        ("keys_streamed", Json::Num(keys_streamed)),
+        ("keys_dropped", Json::Num(keys_dropped)),
+        ("joiner_live_kib", Json::Num(joiner_kib)),
+        ("csv", Json::Str(join_out)),
+    ])
 }
 
 /// Both arms reply this exact line per request, so the measurement
@@ -995,7 +1097,7 @@ const CONNSCALE_REPLY: &str = "{\"ok\":true}";
 struct FixedReply;
 
 impl LineService for FixedReply {
-    fn serve_line(&self, _line: &str, done: Completion) {
+    fn serve_line(&self, _line: &str, _queued: Duration, done: Completion) {
         done.reply(CONNSCALE_REPLY.to_string());
     }
 }
@@ -1098,7 +1200,7 @@ fn open_conns(addr: std::net::SocketAddr, n: usize) -> Vec<BufReader<TcpStream>>
 /// thread-per-connection. "Sustained" is measured, not assumed: at the
 /// end every connection — idle and hot — must still complete a
 /// roundtrip to count.
-fn connscale_scenario(args: &Args, out: &str) {
+fn connscale_scenario(args: &Args, out: &str) -> Json {
     let idle_target: usize = args.num_or("connscale-idle", 10_000);
     let hot_target: usize = args.num_or("connscale-hot", 1_000);
     let passes: usize = args.num_or("connscale-passes", 3).max(1);
@@ -1117,6 +1219,7 @@ fn connscale_scenario(args: &Args, out: &str) {
         "p99_us",
         "max_ms",
     ]);
+    let mut arms_json: Vec<Json> = Vec::new();
     for design in ["reactor", "thread-per-conn"] {
         let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
         let addr = listener.local_addr().unwrap();
@@ -1181,6 +1284,14 @@ fn connscale_scenario(args: &Args, out: &str) {
             format!("{p99_us}"),
             format!("{max_ms}"),
         ]);
+        arms_json.push(Json::obj(vec![
+            ("design", Json::Str(design.to_string())),
+            ("sustained_conns", Json::Num(sustained as f64)),
+            ("requests", Json::Num(requests as f64)),
+            ("p50_us", Json::Num(p50_us)),
+            ("p99_us", Json::Num(p99_us)),
+            ("max_ms", Json::Num(max_ms)),
+        ]));
 
         drop(idle);
         drop(hot);
@@ -1200,4 +1311,140 @@ fn connscale_scenario(args: &Args, out: &str) {
     };
     csv.write_to(&conn_out).expect("write connscale csv");
     println!("wrote {conn_out}");
+    Json::obj(vec![
+        ("arms", Json::Arr(arms_json)),
+        ("csv", Json::Str(conn_out)),
+    ])
+}
+
+/// The PR-8 acceptance arm: the same skewed client load against one
+/// TCP coordinator with tracing disabled (`trace_sample_every: 0`,
+/// the default — span recording short-circuits on the unsampled id)
+/// and with every query traced. The headline number is the throughput
+/// delta between the arms; the acceptance bar is < 3%, checked from
+/// the JSON summary rather than asserted here (bench containers are
+/// too noisy for a hard perf gate).
+fn obs_overhead_scenario(args: &Args, out: &str) -> Json {
+    let queries: usize = args.num_or("router-queries", 384);
+    let clients: usize = args.num_or("router-clients", 8).max(1);
+    let workers: usize = args.num_or("router-workers", 2);
+    let trees: usize = args.num_or("router-trees", 60);
+
+    let ds = HospitalDataset::generate(HospitalConfig {
+        trees,
+        ..HospitalConfig::default()
+    });
+    let forest = Arc::new(ds.build_forest());
+    let workload = Workload::generate(
+        &forest,
+        WorkloadConfig {
+            entities_per_query: 1,
+            queries: 64,
+            zipf_s: 0.0,
+            deep_bias: 0.0,
+            ..Default::default()
+        },
+    );
+
+    println!(
+        "\nobservability overhead (1 coordinator, {queries} queries, \
+         {clients} clients, tracing off vs every-query):"
+    );
+    let mut csv = CsvTable::new(&["tracing", "qps", "delta_pct_vs_off"]);
+    let mut arms_json: Vec<Json> = Vec::new();
+    let mut qps_off = 0.0f64;
+    for (label, every) in [("off", 0u64), ("every-query", 1u64)] {
+        let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+        let coordinator = Arc::new(
+            Coordinator::start(
+                forest.clone(),
+                corpus_from_texts(&ds.documents()),
+                engine,
+                RagConfig {
+                    trace_sample_every: every,
+                    ..RagConfig::default()
+                },
+                CoordinatorConfig { workers, ..Default::default() },
+            )
+            .expect("coordinator"),
+        );
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().unwrap();
+        let handle =
+            serve_listener(coordinator.clone(), listener).expect("listener");
+
+        {
+            let mut warm = BufReader::new(
+                TcpStream::connect(addr).expect("warmup connect"),
+            );
+            let mut line = String::new();
+            for q in workload.queries.iter().take(8) {
+                warm.get_mut()
+                    .write_all(format!("{}\n", q.text).as_bytes())
+                    .expect("warmup write");
+                line.clear();
+                warm.read_line(&mut line).expect("warmup read");
+            }
+        }
+
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let workload = &workload;
+                let share =
+                    queries / clients + usize::from(c < queries % clients);
+                s.spawn(move || {
+                    let mut conn = BufReader::new(
+                        TcpStream::connect(addr).expect("client connect"),
+                    );
+                    let mut line = String::new();
+                    for i in 0..share {
+                        let q = &workload.queries
+                            [(c + i * clients) % workload.queries.len()];
+                        conn.get_mut()
+                            .write_all(format!("{}\n", q.text).as_bytes())
+                            .expect("client write");
+                        line.clear();
+                        conn.read_line(&mut line).expect("client read");
+                        assert!(
+                            line.contains("\"ok\":true"),
+                            "query failed: {line}"
+                        );
+                    }
+                });
+            }
+        });
+        let qps = queries as f64 / t0.elapsed().as_secs_f64();
+        if qps_off == 0.0 {
+            qps_off = qps;
+        }
+        let delta_pct = (qps_off / qps - 1.0) * 100.0;
+        println!(
+            "  tracing {label:<12} {qps:>8.1} q/s  \
+             delta vs off {delta_pct:>+6.2}%"
+        );
+        csv.push(&[
+            label.to_string(),
+            format!("{qps}"),
+            format!("{delta_pct}"),
+        ]);
+        arms_json.push(Json::obj(vec![
+            ("tracing", Json::Str(label.to_string())),
+            ("qps", Json::Num(qps)),
+            ("delta_pct_vs_off", Json::Num(delta_pct)),
+        ]));
+
+        handle.shutdown();
+        coordinator.stop();
+    }
+    let obs_out = match out.strip_suffix(".csv") {
+        Some(stem) => format!("{stem}_obs.csv"),
+        None => format!("{out}_obs.csv"),
+    };
+    csv.write_to(&obs_out).expect("write obs csv");
+    println!("wrote {obs_out}");
+    Json::obj(vec![
+        ("arms", Json::Arr(arms_json)),
+        ("csv", Json::Str(obs_out)),
+    ])
 }

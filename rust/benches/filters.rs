@@ -2,7 +2,8 @@
 //! the improved Cuckoo Filter vs Bloom filter vs std HashMap index —
 //! the raw data-structure numbers behind the Table 1/2 system results.
 //!
-//! Run: `cargo bench --bench filters`. Writes `results/filters.csv`.
+//! Run: `cargo bench --bench filters`. Writes `results/filters.csv` and
+//! a machine-readable copy of the same rows to `results/BENCH_filters.json`.
 
 use std::collections::HashMap;
 
@@ -13,6 +14,7 @@ use cft_rag::filter::fingerprint::entity_key;
 use cft_rag::forest::EntityAddress;
 use cft_rag::util::cli::{spec, Args};
 use cft_rag::util::csv::CsvTable;
+use cft_rag::util::json::Json;
 
 fn main() {
     let args = Args::from_env(vec![
@@ -39,6 +41,7 @@ fn main() {
 
     let mut rows = Vec::new();
     let mut csv = CsvTable::new(&["structure", "op", "mops_per_s"]);
+    let mut rows_json: Vec<Json> = Vec::new();
     let mut emit = |structure: &str, op: &str, secs: f64, ops: usize| {
         let mops = ops as f64 / secs / 1e6;
         rows.push(vec![
@@ -47,6 +50,11 @@ fn main() {
             format!("{mops:.2}"),
         ]);
         csv.push(&[structure.to_string(), op.to_string(), format!("{mops}")]);
+        rows_json.push(Json::obj(vec![
+            ("structure", Json::Str(structure.to_string())),
+            ("op", Json::Str(op.to_string())),
+            ("mops_per_s", Json::Num(mops)),
+        ]));
     };
 
     // Cuckoo filter
@@ -157,4 +165,17 @@ fn main() {
     let out = args.str_or("out", "results/filters.csv");
     csv.write_to(&out).expect("write csv");
     println!("\nwrote {out}");
+
+    let bench_json = Json::obj(vec![
+        ("bench", Json::Str("filters".to_string())),
+        ("keys", Json::Num(n as f64)),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    let json_out = match out.rfind('/') {
+        Some(i) => format!("{}/BENCH_filters.json", &out[..i]),
+        None => "BENCH_filters.json".to_string(),
+    };
+    std::fs::write(&json_out, format!("{bench_json}\n"))
+        .expect("write bench json");
+    println!("wrote {json_out}");
 }

@@ -25,7 +25,15 @@ impl Default for BatchPolicy {
 /// Outcome of one collect call.
 pub enum BatchOutcome<T> {
     /// A (possibly partial) batch.
-    Batch(Vec<T>),
+    Batch {
+        /// The collected items, submit order preserved.
+        items: Vec<T>,
+        /// When the first item arrived and opened the batch window —
+        /// the boundary the tracer uses to split a request's
+        /// `submit_wait` (queued behind earlier batches) from its
+        /// `batch_wait` (holding for stragglers).
+        opened: Instant,
+    },
     /// The channel closed and no items remain.
     Closed,
 }
@@ -37,8 +45,9 @@ pub fn collect_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> BatchOutcome<T
         Ok(item) => item,
         Err(_) => return BatchOutcome::Closed,
     };
+    let opened = Instant::now();
     let mut batch = vec![first];
-    let deadline = Instant::now() + policy.max_wait;
+    let deadline = opened + policy.max_wait;
     while batch.len() < policy.max_batch {
         let now = Instant::now();
         if now >= deadline {
@@ -50,7 +59,7 @@ pub fn collect_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> BatchOutcome<T
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    BatchOutcome::Batch(batch)
+    BatchOutcome::Batch { items: batch, opened }
 }
 
 #[cfg(test)]
@@ -66,12 +75,14 @@ mod tests {
             tx.send(i).unwrap();
         }
         match collect_batch(&rx, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) }) {
-            BatchOutcome::Batch(b) => assert_eq!(b, (0..8).collect::<Vec<_>>()),
+            BatchOutcome::Batch { items, .. } => {
+                assert_eq!(items, (0..8).collect::<Vec<_>>())
+            }
             BatchOutcome::Closed => panic!("closed"),
         }
         // leftovers stay queued
         match collect_batch(&rx, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) }) {
-            BatchOutcome::Batch(b) => assert_eq!(b, vec![8, 9]),
+            BatchOutcome::Batch { items, .. } => assert_eq!(items, vec![8, 9]),
             BatchOutcome::Closed => panic!("closed"),
         }
     }
@@ -82,9 +93,12 @@ mod tests {
         tx.send(1).unwrap();
         let t = Instant::now();
         match collect_batch(&rx, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) }) {
-            BatchOutcome::Batch(b) => {
-                assert_eq!(b, vec![1]);
+            BatchOutcome::Batch { items, opened } => {
+                assert_eq!(items, vec![1]);
                 assert!(t.elapsed() >= Duration::from_millis(9));
+                // the window opened at the first recv, before the
+                // straggler deadline expired
+                assert!(opened.elapsed() >= Duration::from_millis(9));
             }
             BatchOutcome::Closed => panic!("closed"),
         }
@@ -110,7 +124,9 @@ mod tests {
             tx2.send(1).unwrap();
         });
         match collect_batch(&rx, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(40) }) {
-            BatchOutcome::Batch(b) => assert_eq!(b.len(), 2, "straggler joined"),
+            BatchOutcome::Batch { items, .. } => {
+                assert_eq!(items.len(), 2, "straggler joined")
+            }
             BatchOutcome::Closed => panic!("closed"),
         }
     }

@@ -1,12 +1,16 @@
 //! Serving metrics: request counters, stage latency histograms, batch
-//! fill statistics. Shared across threads behind one mutex (updates are
-//! a few hundred ns; contention is negligible at this testbed's rates).
+//! fill statistics — allocated out of the unified [`Registry`]
+//! (`obs/registry.rs`), so every series here is also scrapeable
+//! through the `\x01metrics` control line as Prometheus text. The
+//! `\x01stats` JSON payload keeps its historical field names (the
+//! shard router's health prober reads them); [`MetricsSnapshot`] is
+//! that contract.
 
-use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::obs::{Counter, Histogram, Registry};
+use crate::sync::Arc;
 use crate::util::json::Json;
-use crate::util::stats::LatencyHistogram;
 
 /// Snapshot of the counters at one instant.
 #[derive(Clone, Debug)]
@@ -50,65 +54,91 @@ impl MetricsSnapshot {
     }
 }
 
-#[derive(Debug, Default)]
-struct Inner {
-    requests: u64,
-    failures: u64,
-    batches: u64,
-    batch_fill_sum: u64,
-    total: LatencyHistogram,
-    retrieval: LatencyHistogram,
+/// Thread-shared metrics sink. Cloning shares the same underlying
+/// series; recording is lock-free (relaxed atomics via `obs`).
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    registry: Arc<Registry>,
+    requests: Arc<Counter>,
+    failures: Arc<Counter>,
+    batches: Arc<Counter>,
+    batch_fill_sum: Arc<Counter>,
+    total: Arc<Histogram>,
+    retrieval: Arc<Histogram>,
 }
 
-/// Thread-shared metrics sink.
-#[derive(Clone, Debug, Default)]
-pub struct Metrics {
-    inner: Arc<Mutex<Inner>>,
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Metrics {
-    /// New empty metrics.
+    /// New empty metrics (a fresh registry per coordinator).
     pub fn new() -> Self {
-        Self::default()
+        let registry = Arc::new(Registry::new());
+        let requests = registry
+            .counter("cft_coordinator_requests_total", "requests completed successfully");
+        let failures =
+            registry.counter("cft_coordinator_failures_total", "requests that failed");
+        let batches =
+            registry.counter("cft_coordinator_batches_total", "embedding batches dispatched");
+        let batch_fill_sum = registry.counter(
+            "cft_coordinator_batch_fill_sum",
+            "sum of batch fills (divide by batches for the mean)",
+        );
+        let total = registry.histogram(
+            "cft_coordinator_request_seconds",
+            "end-to-end request latency (submit to reply)",
+        );
+        let retrieval = registry.histogram(
+            "cft_coordinator_retrieval_seconds",
+            "filter-backed retrieval stage latency",
+        );
+        Metrics { registry, requests, failures, batches, batch_fill_sum, total, retrieval }
+    }
+
+    /// The registry backing this sink — the coordinator's `\x01metrics`
+    /// exposition renders it (plus point-in-time gauges).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
     }
 
     /// Record one completed request.
     pub fn record_request(&self, total: Duration, retrieval: Duration) {
-        let mut m = self.inner.lock().unwrap();
-        m.requests += 1;
-        m.total.record(total.as_secs_f64());
-        m.retrieval.record(retrieval.as_secs_f64());
+        self.requests.inc();
+        self.total.record_duration(total);
+        self.retrieval.record_duration(retrieval);
     }
 
     /// Record one failed request.
     pub fn record_failure(&self) {
-        self.inner.lock().unwrap().failures += 1;
+        self.failures.inc();
     }
 
     /// Record one dispatched batch of `fill` requests.
     pub fn record_batch(&self, fill: usize) {
-        let mut m = self.inner.lock().unwrap();
-        m.batches += 1;
-        m.batch_fill_sum += fill as u64;
+        self.batches.inc();
+        self.batch_fill_sum.add(fill as u64);
     }
 
     /// Current snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let m = self.inner.lock().unwrap();
+        let batches = self.batches.get();
         MetricsSnapshot {
-            requests: m.requests,
-            failures: m.failures,
-            batches: m.batches,
-            mean_batch_fill: if m.batches == 0 {
+            requests: self.requests.get(),
+            failures: self.failures.get(),
+            batches,
+            mean_batch_fill: if batches == 0 {
                 0.0
             } else {
-                m.batch_fill_sum as f64 / m.batches as f64
+                self.batch_fill_sum.get() as f64 / batches as f64
             },
-            total_mean_s: m.total.mean(),
-            total_p50_s: m.total.quantile(0.5),
-            total_p99_s: m.total.quantile(0.99),
-            retrieval_mean_s: m.retrieval.mean(),
-            retrieval_p99_s: m.retrieval.quantile(0.99),
+            total_mean_s: self.total.mean(),
+            total_p50_s: self.total.quantile(0.5),
+            total_p99_s: self.total.quantile(0.99),
+            retrieval_mean_s: self.retrieval.mean(),
+            retrieval_p99_s: self.retrieval.quantile(0.99),
         }
     }
 }
@@ -162,5 +192,15 @@ mod tests {
         let m2 = m.clone();
         m2.record_request(Duration::from_millis(1), Duration::from_micros(1));
         assert_eq!(m.snapshot().requests, 1);
+    }
+
+    #[test]
+    fn registry_renders_every_series() {
+        let m = Metrics::new();
+        m.record_request(Duration::from_millis(2), Duration::from_micros(10));
+        let text = m.registry().render();
+        assert!(text.contains("# TYPE cft_coordinator_requests_total counter"));
+        assert!(text.contains("# TYPE cft_coordinator_request_seconds histogram"));
+        assert!(text.contains("cft_coordinator_request_seconds_bucket{le=\"+Inf\"} 1"));
     }
 }

@@ -32,6 +32,7 @@ use std::time::Duration;
 use crate::coordinator::batcher::{collect_batch, BatchOutcome, BatchPolicy};
 use crate::coordinator::metrics::Metrics;
 use crate::data::corpus::Document;
+use crate::obs::trace::{self, Sampler, Stage, TraceId};
 use crate::error::{CftError, Result};
 use crate::forest::Forest;
 use crate::llm::cache::EmbedCache;
@@ -110,12 +111,18 @@ impl Delivery {
 struct Job {
     query: String,
     enqueued: Instant,
+    /// Sampling decision made at the front door ([`TraceId::NONE`]
+    /// when untraced) — every stage below records its span against it.
+    trace: TraceId,
     resp: Delivery,
 }
 
 struct WorkItem {
     job: Job,
     doc_hits: Vec<u32>,
+    /// When the batcher handed this item to the worker queue — the
+    /// start of the `worker_wait` span.
+    dispatched: Instant,
 }
 
 /// The running coordinator.
@@ -153,6 +160,14 @@ pub struct Coordinator {
     max_connections: usize,
     /// Front-door idle reap timeout ([`RagConfig::idle_timeout`]).
     idle_timeout: Duration,
+    /// This door's head-sampling policy
+    /// ([`RagConfig::trace_sample_every`] /
+    /// [`RagConfig::slow_query_threshold`]), consulted by the TCP
+    /// layer per request line.
+    sampler: Sampler,
+    /// Process start, for the `uptime_s` stats field (real wall clock
+    /// on purpose — uptime is operator-facing, never model-checked).
+    started: std::time::Instant,
 }
 
 impl Coordinator {
@@ -215,10 +230,43 @@ impl Coordinator {
                     .spawn(move || {
                         let mut batches = 0usize;
                         loop {
-                            let jobs = match collect_batch(&submit_rx, cfg.batch) {
-                                BatchOutcome::Batch(b) => b,
-                                BatchOutcome::Closed => break,
-                            };
+                            let (jobs, opened) =
+                                match collect_batch(&submit_rx, cfg.batch) {
+                                    BatchOutcome::Batch { items, opened } => {
+                                        (items, opened)
+                                    }
+                                    BatchOutcome::Closed => break,
+                                };
+                            let collected = Instant::now();
+                            for job in &jobs {
+                                if !job.trace.is_sampled() {
+                                    continue;
+                                }
+                                // submit_wait ends when the batch
+                                // window opened (or on arrival, for a
+                                // straggler that joined mid-window);
+                                // batch_wait runs from there to
+                                // collection — contiguous on purpose
+                                let mid = if job.enqueued > opened {
+                                    job.enqueued
+                                } else {
+                                    opened
+                                };
+                                trace::record(
+                                    job.trace,
+                                    Stage::SubmitWait,
+                                    0,
+                                    job.enqueued,
+                                    mid.duration_since(job.enqueued),
+                                );
+                                trace::record(
+                                    job.trace,
+                                    Stage::BatchWait,
+                                    jobs.len() as u32,
+                                    mid,
+                                    collected.duration_since(mid),
+                                );
+                            }
                             batches += 1;
                             metrics.record_batch(jobs.len());
                             if cfg.maintain_every > 0
@@ -289,6 +337,11 @@ impl Coordinator {
             ),
             max_connections: rag_cfg.max_connections,
             idle_timeout: rag_cfg.idle_timeout,
+            sampler: Sampler::new(
+                rag_cfg.trace_sample_every,
+                rag_cfg.slow_query_threshold,
+            ),
+            started: std::time::Instant::now(),
         })
     }
 
@@ -305,6 +358,7 @@ impl Coordinator {
         let job = Job {
             query: query.to_string(),
             enqueued: Instant::now(),
+            trace: TraceId::NONE,
             resp: Delivery::Channel(resp_tx),
         };
         // clone the sender under the lock, enqueue outside it: the
@@ -331,6 +385,18 @@ impl Coordinator {
         query: &str,
         done: Box<dyn FnOnce(Result<ServeResponse>) + Send>,
     ) {
+        self.submit_traced(query, TraceId::NONE, done);
+    }
+
+    /// [`submit_with`](Coordinator::submit_with) carrying the front
+    /// door's sampling decision: every pipeline stage below records
+    /// its span against `trace` (a no-op branch when unsampled).
+    pub fn submit_traced(
+        &self,
+        query: &str,
+        trace: TraceId,
+        done: Box<dyn FnOnce(Result<ServeResponse>) + Send>,
+    ) {
         let queue = match self.submit_tx.lock().unwrap().clone() {
             Some(q) => q,
             None => {
@@ -341,6 +407,7 @@ impl Coordinator {
         let job = Job {
             query: query.to_string(),
             enqueued: Instant::now(),
+            trace,
             resp: Delivery::Callback(done),
         };
         match queue.try_send(job) {
@@ -378,6 +445,25 @@ impl Coordinator {
     /// Metrics handle.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// This door's head-sampling policy (the TCP layer consults it per
+    /// request line).
+    pub fn sampler(&self) -> &Sampler {
+        &self.sampler
+    }
+
+    /// Wall time since this coordinator started (the `uptime_s` stats
+    /// field).
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Filter-internals snapshot of the serving index, when the
+    /// retriever is Cuckoo-backed (`None` for the baselines) — the
+    /// `"filter"` sub-object of the `\x01stats` payload.
+    pub fn filter_telemetry(&self) -> Option<crate::filter::FilterTelemetry> {
+        self.retriever.filter_telemetry()
     }
 
     /// Apply a dynamic entity-index **insert** (the `\x01insert` control
@@ -587,6 +673,7 @@ fn dispatch_batch(
     work_tx: &SyncSender<WorkItem>,
 ) {
     let shape = engine.shape();
+    let batch_start = Instant::now();
     let mut jobs = jobs;
     while !jobs.is_empty() {
         let take = jobs.len().min(shape.batch);
@@ -604,12 +691,23 @@ fn dispatch_batch(
                 search_topk(engine.as_ref(), store, &qemb, chunk.len(), topk)
             }
         });
+        // the embed_search span runs from batch-dispatch start so it
+        // also covers waiting behind earlier chunks of the same batch
+        let chunk_done = Instant::now();
         match hits {
             Ok(rows) => {
                 for (job, row) in chunk.into_iter().zip(rows) {
+                    trace::record(
+                        job.trace,
+                        Stage::EmbedSearch,
+                        take as u32,
+                        batch_start,
+                        chunk_done.duration_since(batch_start),
+                    );
                     let item = WorkItem {
                         job,
                         doc_hits: row.iter().map(|h| h.doc).collect(),
+                        dispatched: chunk_done,
                     };
                     if work_tx.send(item).is_err() {
                         return; // workers gone; shutting down
@@ -638,11 +736,34 @@ fn serve_one(
     cache: &EmbedCache,
     levels: usize,
 ) -> Result<ServeResponse> {
+    let traced = item.job.trace.is_sampled();
+    let picked = Instant::now();
+    if traced {
+        trace::record(
+            item.job.trace,
+            Stage::WorkerWait,
+            0,
+            item.dispatched,
+            picked.duration_since(item.dispatched),
+        );
+    }
     let query = &item.job.query;
     let entities = ner.recognize(query);
+    let ner_done = Instant::now();
+    if traced {
+        trace::record(
+            item.job.trace,
+            Stage::Ner,
+            entities.len() as u32,
+            picked,
+            ner_done.duration_since(picked),
+        );
+    }
 
     // No retriever-wide lock: each find takes at most a shard read lock,
     // so workers run this stage in parallel.
+    let probes_before =
+        if traced { retriever.probe_counters() } else { None };
     let rt = Timer::start();
     let mut context = Context::default();
     let mut addrs = Vec::with_capacity(64);
@@ -652,6 +773,25 @@ fn serve_one(
         context.merge(generate_context(forest, e, &addrs, levels));
     }
     let retrieval_time = rt.elapsed();
+    let retrieval_done = Instant::now();
+    if traced {
+        // arg = cuckoo slots this request probed (process-wide delta;
+        // concurrent requests can inflate it, which monitoring accepts)
+        let probed = probes_before
+            .and_then(|(_, before)| {
+                retriever
+                    .probe_counters()
+                    .map(|(_, after)| after.saturating_sub(before))
+            })
+            .unwrap_or(0);
+        trace::record(
+            item.job.trace,
+            Stage::Retrieval,
+            u32::try_from(probed).unwrap_or(u32::MAX),
+            ner_done,
+            retrieval_done.duration_since(ner_done),
+        );
+    }
 
     let docs_text: Vec<String> = item
         .doc_hits
@@ -661,6 +801,15 @@ fn serve_one(
     let prompt = Prompt::assemble(docs_text, &context, query);
     let generator = Generator::with_cache(engine.as_ref(), cache.clone());
     let answer = generator.generate(query, &context, &prompt)?;
+    if traced {
+        trace::record(
+            item.job.trace,
+            Stage::Generate,
+            0,
+            retrieval_done,
+            retrieval_done.elapsed(),
+        );
+    }
 
     Ok(ServeResponse {
         answer: answer.text,
@@ -756,6 +905,7 @@ mod tests {
         Job {
             query: query.into(),
             enqueued: Instant::now(),
+            trace: TraceId::NONE,
             resp: Delivery::Channel(resp),
         }
     }

@@ -63,13 +63,16 @@
 //! [`KeyPartition`](crate::rag::config::KeyPartition), then serve.
 
 use std::net::{SocketAddr, TcpListener};
+use std::time::Duration;
 
 use crate::coordinator::server::{Coordinator, ServeResponse};
 use crate::error::Result;
+use crate::obs::trace::{self, TraceId};
 use crate::reactor::server::{
     serve_lines, Completion, LineService, ServerConfig, ServerHandle,
     ServerStats,
 };
+use crate::sync::time::Instant;
 use crate::sync::Arc;
 use crate::util::json::Json;
 use crate::util::log;
@@ -112,6 +115,17 @@ pub const JOIN_REQUEST: &str = "\x01join";
 /// reject it. See `docs/PROTOCOL.md`.
 pub const DRAIN_REQUEST: &str = "\x01drain";
 
+/// Control-line verb exporting recently sampled request traces:
+/// `\x01trace` (recent) or `\x01trace <id>` (one trace by hex id) —
+/// the reply is the span tree JSON from [`crate::obs::trace`]. See
+/// `docs/PROTOCOL.md` and `docs/OBSERVABILITY.md`.
+pub const TRACE_REQUEST: &str = "\x01trace";
+
+/// Control-line verb returning the unified metrics registry in
+/// Prometheus text exposition format, wrapped as one JSON line
+/// (`{"ok":true,"content_type":…,"text":…}`). See `docs/PROTOCOL.md`.
+pub const METRICS_REQUEST: &str = "\x01metrics";
+
 /// A parsed `\x01` control line (`docs/PROTOCOL.md` §Control lines).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ControlLine<'a> {
@@ -138,6 +152,12 @@ pub enum ControlLine<'a> {
     Join { addr: &'a str },
     /// `\x01drain <addr>` — router front door: rebalance a backend out.
     Drain { addr: &'a str },
+    /// `\x01trace [id]` — recently sampled request traces (optionally
+    /// filtered to one hex trace id).
+    Trace { id: Option<&'a str> },
+    /// `\x01metrics` — Prometheus text exposition of the metrics
+    /// registry.
+    Metrics,
 }
 
 /// Parse a control line. Returns `None` when `line` is not a control
@@ -204,6 +224,10 @@ pub fn parse_control(
         "join" => Err("\\x01join wants: <addr>".into()),
         "drain" if !rest.is_empty() => Ok(ControlLine::Drain { addr: rest }),
         "drain" => Err("\\x01drain wants: <addr>".into()),
+        "trace" if rest.is_empty() => Ok(ControlLine::Trace { id: None }),
+        "trace" => Ok(ControlLine::Trace { id: Some(rest) }),
+        "metrics" if rest.is_empty() => Ok(ControlLine::Metrics),
+        "metrics" => Err("\\x01metrics takes no arguments".into()),
         other => Err(format!("unknown control line {other:?}")),
     })
 }
@@ -290,7 +314,7 @@ struct CoordinatorService {
 }
 
 impl LineService for CoordinatorService {
-    fn serve_line(&self, line: &str, done: Completion) {
+    fn serve_line(&self, line: &str, queued: Duration, done: Completion) {
         if self.coordinator.is_stopped() {
             // behave like a dead process: close instead of answering —
             // a live `\x01stats` on a stopped backend would hide its
@@ -298,6 +322,10 @@ impl LineService for CoordinatorService {
             done.close();
             return;
         }
+        // An upstream front door (the router) may prefix any line with
+        // `\x01t=<id> ` to propagate its trace id; peel it before verb
+        // dispatch so every verb — `:quit` included — works traced.
+        let (wire_trace, line) = trace::strip_trace(line);
         if line == ":quit" {
             done.close();
             return;
@@ -305,6 +333,8 @@ impl LineService for CoordinatorService {
         let c = &self.coordinator;
         let reply = match parse_control(line) {
             Some(Ok(ControlLine::Stats)) => stats_reply(c, &self.stats),
+            Some(Ok(ControlLine::Trace { id })) => trace_reply(id),
+            Some(Ok(ControlLine::Metrics)) => metrics_reply(c),
             Some(Ok(ControlLine::Insert { tree, node, entity })) => {
                 update_ack(c.update_entity(entity, tree, node))
             }
@@ -337,11 +367,60 @@ impl LineService for CoordinatorService {
                 ("error", Json::Str(reason)),
             ]),
             None => {
-                let query = line;
-                c.submit_with(
-                    query,
+                // A query. Adopt the wire trace when the upstream door
+                // already sampled this request; otherwise roll the
+                // local head sampler. The reactor-queue span is backed
+                // out of the `queued` duration the reactor measured
+                // (zero when the line was dispatched on arrival).
+                let trace = if wire_trace.is_sampled() {
+                    wire_trace
+                } else {
+                    c.sampler().begin()
+                };
+                let start = Instant::now();
+                if trace.is_sampled() && !queued.is_zero() {
+                    trace::record(
+                        trace,
+                        trace::Stage::ReactorQueue,
+                        0,
+                        start,
+                        queued,
+                    );
+                }
+                let owned = line.to_string();
+                let c = Arc::clone(&self.coordinator);
+                self.coordinator.submit_traced(
+                    line,
+                    trace,
                     Box::new(move |out| {
-                        done.reply(query_reply(out).to_string());
+                        let total = start.elapsed();
+                        let slow = c.sampler().is_slow(total);
+                        // Slow queries are always traced: when head
+                        // sampling skipped this request, mint an id so
+                        // the slow-query log line and the `\x01trace`
+                        // export still carry a root record (root-only —
+                        // stage spans cannot be recorded retroactively).
+                        let trace = if slow && !trace.is_sampled() {
+                            trace::mint()
+                        } else {
+                            trace
+                        };
+                        trace::finish_root(
+                            trace,
+                            trace::DOOR_COORDINATOR,
+                            start,
+                            total,
+                            slow,
+                        );
+                        if slow {
+                            trace::log_slow(
+                                trace::DOOR_COORDINATOR,
+                                trace,
+                                total,
+                                &owned,
+                            );
+                        }
+                        done.reply(query_reply(out, trace).to_string());
                     }),
                 );
                 return;
@@ -379,8 +458,63 @@ fn stats_reply(coordinator: &Coordinator, serving: &ServerStats) -> Json {
             "idle_deadlines_expired".into(),
             Json::Num(serving.idle_deadlines_expired() as f64),
         );
+        m.insert(
+            "uptime_s".into(),
+            Json::Num(coordinator.uptime().as_secs_f64()),
+        );
+        m.insert(
+            "version".into(),
+            Json::Str(env!("CARGO_PKG_VERSION").to_string()),
+        );
+        m.insert(
+            "build_profile".into(),
+            Json::Str(
+                if cfg!(debug_assertions) { "debug" } else { "release" }
+                    .to_string(),
+            ),
+        );
+        if let Some(telemetry) = coordinator.filter_telemetry() {
+            m.insert("filter".into(), telemetry.to_json());
+        }
     }
     json
+}
+
+/// The `\x01trace` reply: recently sampled traces as a span-tree JSON
+/// document, optionally filtered to one hex trace id. An unparsable id
+/// is an error reply (an empty `traces` array would be
+/// indistinguishable from "not sampled"). Shared with the router front
+/// door — the trace hub is process-wide, so both doors export the same
+/// way.
+pub(crate) fn trace_reply(id: Option<&str>) -> Json {
+    match id {
+        None => trace::export_json(None, 16),
+        Some(hex) => match TraceId::from_hex(hex) {
+            Some(t) => trace::export_json(Some(t), 1),
+            None => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    Json::Str(format!("bad trace id {hex:?}")),
+                ),
+            ]),
+        },
+    }
+}
+
+/// The `\x01metrics` reply: the unified registry rendered in Prometheus
+/// text exposition format, wrapped in a one-line JSON envelope so the
+/// line protocol stays one-reply-per-line (the exposition itself is
+/// multi-line; the JSON string escapes the newlines).
+fn metrics_reply(coordinator: &Coordinator) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "content_type",
+            Json::Str("text/plain; version=0.0.4".to_string()),
+        ),
+        ("text", Json::Str(coordinator.metrics().registry().render())),
+    ])
 }
 
 /// The `\x01dump` reply: the entity's indexed addresses on this
@@ -481,27 +615,38 @@ fn update_ack(outcome: Result<bool>) -> Json {
 /// Build the JSON reply for one query, synchronously (exposed for
 /// tests and the thread-per-connection bench baseline).
 pub fn respond(coordinator: &Coordinator, query: &str) -> Json {
-    query_reply(coordinator.query_blocking(query))
+    query_reply(coordinator.query_blocking(query), TraceId::NONE)
 }
 
 /// One query outcome as its wire JSON — shared by [`respond`] and the
-/// nonblocking path's worker callback.
-fn query_reply(out: Result<ServeResponse>) -> Json {
+/// nonblocking path's worker callback. A sampled `trace` stamps the
+/// reply with the request's hex trace id so a client can fetch the
+/// span tree afterwards (`\x01trace <id>`); unsampled replies carry no
+/// `trace` field, keeping the old wire shape byte-compatible.
+fn query_reply(out: Result<ServeResponse>, trace: TraceId) -> Json {
     match out {
-        Ok(r) => Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("answer", Json::Str(r.answer)),
-            (
-                "entities",
-                Json::Arr(r.entities.into_iter().map(Json::Str).collect()),
-            ),
-            ("facts", Json::Num(r.fact_count as f64)),
-            (
-                "retrieval_us",
-                Json::Num(r.retrieval_time.as_micros() as f64),
-            ),
-            ("total_ms", Json::Num(r.total_time.as_millis() as f64)),
-        ]),
+        Ok(r) => {
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("answer", Json::Str(r.answer)),
+                (
+                    "entities",
+                    Json::Arr(
+                        r.entities.into_iter().map(Json::Str).collect(),
+                    ),
+                ),
+                ("facts", Json::Num(r.fact_count as f64)),
+                (
+                    "retrieval_us",
+                    Json::Num(r.retrieval_time.as_micros() as f64),
+                ),
+                ("total_ms", Json::Num(r.total_time.as_millis() as f64)),
+            ];
+            if trace.is_sampled() {
+                fields.push(("trace", Json::Str(trace.to_hex())));
+            }
+            Json::obj(fields)
+        }
         Err(e) => Json::obj(vec![
             ("ok", Json::Bool(false)),
             ("error", Json::Str(e.to_string())),
@@ -520,7 +665,7 @@ mod tests {
     use std::io::{BufRead, BufReader, Write};
     use std::net::TcpStream;
 
-    fn coordinator() -> Arc<Coordinator> {
+    fn coordinator_with(rag: RagConfig) -> Arc<Coordinator> {
         let ds = HospitalDataset::generate(HospitalConfig {
             trees: 4,
             ..HospitalConfig::default()
@@ -533,11 +678,15 @@ mod tests {
                 forest,
                 docs,
                 engine,
-                RagConfig::default(),
+                rag,
                 CoordinatorConfig { workers: 2, ..Default::default() },
             )
             .unwrap(),
         )
+    }
+
+    fn coordinator() -> Arc<Coordinator> {
+        coordinator_with(RagConfig::default())
     }
 
     fn served(c: Arc<Coordinator>) -> ServeHandle {
@@ -712,7 +861,20 @@ mod tests {
             parse_control("\x01drain 127.0.0.1:7184"),
             Some(Ok(ControlLine::Drain { addr: "127.0.0.1:7184" }))
         );
+        assert_eq!(
+            parse_control("\x01trace"),
+            Some(Ok(ControlLine::Trace { id: None }))
+        );
+        assert_eq!(
+            parse_control("\x01trace a1b2c3"),
+            Some(Ok(ControlLine::Trace { id: Some("a1b2c3") }))
+        );
+        assert_eq!(
+            parse_control("\x01metrics"),
+            Some(Ok(ControlLine::Metrics))
+        );
         for bad in [
+            "\x01metrics now",
             "\x01stats now",
             "\x01insert",
             "\x01insert x y z",
@@ -819,5 +981,93 @@ mod tests {
         expect(true, true); // first delete applied
         expect(true, false); // second is an idempotent no-op
         expect(false, false); // out-of-range node rejected
+    }
+
+    #[test]
+    fn traced_query_exports_spans_and_metrics() {
+        let rag = RagConfig {
+            trace_sample_every: 1,
+            ..RagConfig::default()
+        };
+        let handle = served(coordinator_with(rag));
+        let client = TcpStream::connect(handle.addr()).unwrap();
+        let mut reader = BufReader::new(client);
+        let mut send = |line: String| {
+            reader.get_mut().write_all(line.as_bytes()).unwrap();
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            Json::parse(reply.trim()).expect("reply is JSON")
+        };
+        let reply =
+            send("what is the parent unit of cardiology\n".to_string());
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+        let id = reply
+            .get("trace")
+            .and_then(Json::as_str)
+            .expect("sampled reply carries its trace id")
+            .to_string();
+        // the span tree for that id is exported over \x01trace
+        let traces = send(format!("\x01trace {id}\n"));
+        assert_eq!(traces.get("ok"), Some(&Json::Bool(true)), "{traces}");
+        let arr = traces.get("traces").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), 1, "{traces}");
+        assert_eq!(arr[0].get("id").and_then(Json::as_str), Some(&*id));
+        let spans = arr[0].get("spans").and_then(Json::as_arr).unwrap();
+        assert!(!spans.is_empty(), "{traces}");
+        for span in spans {
+            assert!(span.get("stage").and_then(Json::as_str).is_some());
+            assert!(
+                span.get("dur_us").and_then(Json::as_f64).unwrap() >= 0.0
+            );
+        }
+        // the metrics registry renders Prometheus text exposition
+        let metrics = send("\x01metrics\n".to_string());
+        assert_eq!(metrics.get("ok"), Some(&Json::Bool(true)), "{metrics}");
+        let text =
+            metrics.get("text").and_then(Json::as_str).unwrap();
+        assert!(
+            text.contains("cft_coordinator_requests_total 1"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE"), "{text}");
+        // stats carries the build/uptime satellites
+        let stats = send("\x01stats\n".to_string());
+        assert!(
+            stats.get("uptime_s").and_then(Json::as_f64).unwrap() >= 0.0,
+            "{stats}"
+        );
+        assert_eq!(
+            stats.get("version").and_then(Json::as_str),
+            Some(env!("CARGO_PKG_VERSION")),
+            "{stats}"
+        );
+        let profile =
+            stats.get("build_profile").and_then(Json::as_str).unwrap();
+        assert!(profile == "debug" || profile == "release", "{stats}");
+        reader.get_mut().write_all(b":quit\n").unwrap();
+    }
+
+    #[test]
+    fn wire_trace_prefix_is_adopted_and_echoed() {
+        // sampling disabled locally: the wire prefix alone must carry
+        // the upstream door's sampling decision through to the reply
+        let handle = served(coordinator());
+        let mut client = TcpStream::connect(handle.addr()).unwrap();
+        client
+            .write_all(
+                b"\x01t=abc123 what is the parent unit of cardiology\n\
+                  :quit\n",
+            )
+            .unwrap();
+        let mut reader = BufReader::new(client);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let reply = Json::parse(line.trim()).expect("reply is JSON");
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+        assert_eq!(
+            reply.get("trace").and_then(Json::as_str),
+            Some("abc123"),
+            "{reply}"
+        );
     }
 }

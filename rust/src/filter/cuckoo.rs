@@ -93,7 +93,28 @@ impl Default for CuckooConfig {
     }
 }
 
-/// Counters reported by benches and EXPERIMENTS.md.
+/// Number of kick-depth histogram buckets in [`CuckooStats`].
+pub const KICK_DEPTH_BUCKETS: usize = 8;
+
+/// Bucket index for one insert's displacement-chain depth. Ranges:
+/// `0, 1, 2, 3–4, 5–8, 9–16, 17–64, 65+` — log-ish spacing so a
+/// rising tail (the "table is getting full" signal) is visible long
+/// before inserts start failing at `max_kicks`.
+fn kick_depth_bucket(depth: u64) -> usize {
+    match depth {
+        0 => 0,
+        1 => 1,
+        2 => 2,
+        3..=4 => 3,
+        5..=8 => 4,
+        9..=16 => 5,
+        17..=64 => 6,
+        _ => 7,
+    }
+}
+
+/// Counters reported by benches, EXPERIMENTS.md and the serving
+/// layer's filter telemetry (`\x01stats` / `docs/OBSERVABILITY.md`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CuckooStats {
     pub inserts: u64,
@@ -104,6 +125,11 @@ pub struct CuckooStats {
     pub lookups: u64,
     /// slots probed across all lookups (the metric temperature sorting improves)
     pub slots_probed: u64,
+    /// Histogram of displacement-chain depth per placement (see
+    /// [`KICK_DEPTH_BUCKETS`] for the bucket ranges). Every placement
+    /// lands in exactly one bucket — depth 0 means the entry went
+    /// straight into an empty slot.
+    pub kick_depth_hist: [u64; KICK_DEPTH_BUCKETS],
 }
 
 impl CuckooStats {
@@ -115,6 +141,14 @@ impl CuckooStats {
         self.migration_steps += other.migration_steps;
         self.lookups += other.lookups;
         self.slots_probed += other.slots_probed;
+        for (a, b) in self.kick_depth_hist.iter_mut().zip(other.kick_depth_hist) {
+            *a += b;
+        }
+    }
+
+    /// Record one placement's displacement-chain depth.
+    pub fn record_kick_depth(&mut self, depth: u64) {
+        self.kick_depth_hist[kick_depth_bucket(depth)] += 1;
     }
 }
 
@@ -452,11 +486,13 @@ impl Table {
         for b in bucket_pair(i1, i2) {
             if let Some(s) = self.empty_slot(b) {
                 self.write_slot(s, fp, key, temp, head);
+                stats.record_kick_depth(0);
                 return Ok(());
             }
         }
         let mut i = if rng.chance(0.5) { i1 } else { i2 };
         let mut cur = (fp, key, temp, head);
+        let mut depth = 0u64;
         for _ in 0..cfg.max_kicks {
             // evict a random resident entry
             let s = i * self.slots + rng.range(0, self.slots);
@@ -469,13 +505,16 @@ impl Table {
             self.write_slot(s, cur.0, cur.1, cur.2, cur.3);
             cur = victim;
             stats.kicks += 1;
+            depth += 1;
 
             i = alt_index(i, cur.0, self.nbuckets);
             if let Some(s2) = self.empty_slot(i) {
                 self.write_slot(s2, cur.0, cur.1, cur.2, cur.3);
+                stats.record_kick_depth(depth);
                 return Ok(());
             }
         }
+        stats.record_kick_depth(depth);
         Err((cur.1, cur.2, cur.3))
     }
 
@@ -615,6 +654,19 @@ impl CuckooFilter {
     /// Load factor: occupied slots / capacity slots.
     pub fn load_factor(&self) -> f64 {
         self.len as f64 / self.capacity_slots() as f64
+    }
+
+    /// Estimated false-positive rate at the current load: the classic
+    /// cuckoo-filter bound `1 - (1 - 2^-f)^(2bα)` for fingerprint
+    /// width `f`, bucket size `b` and load factor `α` — a lookup of an
+    /// absent key compares against about `2bα` stored fingerprints.
+    /// Monitoring-grade (the real rate also depends on key mixing);
+    /// a drift upward means the table grew fuller or a migration is
+    /// holding entries in two generations.
+    pub fn estimated_fp_rate(&self) -> f64 {
+        let per_cmp = 1.0 / f64::from(1u32 << self.cfg.fingerprint_bits.min(31));
+        let cmps = 2.0 * self.cfg.slots as f64 * self.load_factor();
+        1.0 - (1.0 - per_cmp).powf(cmps)
     }
 
     /// Counters (snapshot; read-path counters are atomics).
@@ -1623,6 +1675,62 @@ mod tests {
         copy.delete(key(1));
         assert!(cf.contains_exact(key(1)), "original unaffected by clone ops");
         assert!(!copy.contains_exact(key(1)));
+    }
+
+    #[test]
+    fn kick_depth_histogram_counts_every_placement() {
+        let mut cf = CuckooFilter::new(CuckooConfig {
+            initial_buckets: 8,
+            ..CuckooConfig::default()
+        });
+        let n = 500u64;
+        for i in 0..n {
+            cf.insert(key(i), &addrs(1));
+        }
+        let s = cf.stats();
+        let placements: u64 = s.kick_depth_hist.iter().sum();
+        assert!(
+            placements >= n,
+            "every insert records a depth (migration re-placements add more): \
+             {placements} < {n}"
+        );
+        assert!(s.kick_depth_hist[0] > 0, "most placements are kick-free");
+        // the histogram's weighted depth floor is consistent with the
+        // raw kick counter: bucket lower bounds 0,1,2,3,5,9,17,65
+        let lower = [0u64, 1, 2, 3, 5, 9, 17, 65];
+        let floor: u64 = s
+            .kick_depth_hist
+            .iter()
+            .zip(lower)
+            .map(|(c, lo)| c * lo)
+            .sum();
+        assert!(floor <= s.kicks, "floor {floor} exceeds kicks {}", s.kicks);
+    }
+
+    #[test]
+    fn stats_merge_adds_kick_depths() {
+        let mut a = CuckooStats::default();
+        a.record_kick_depth(0);
+        a.record_kick_depth(3);
+        let mut b = CuckooStats::default();
+        b.record_kick_depth(3);
+        b.record_kick_depth(100);
+        a.merge(b);
+        assert_eq!(a.kick_depth_hist.iter().sum::<u64>(), 4);
+        assert_eq!(a.kick_depth_hist[3], 2, "depths 3-4 share a bucket");
+        assert_eq!(a.kick_depth_hist[7], 1, "65+ tail bucket");
+    }
+
+    #[test]
+    fn estimated_fp_rate_tracks_load() {
+        let mut cf = CuckooFilter::new(CuckooConfig::default());
+        assert_eq!(cf.estimated_fp_rate(), 0.0, "empty filter, no collisions");
+        for i in 0..3148u64 {
+            cf.insert(key(i), &addrs(1));
+        }
+        let est = cf.estimated_fp_rate();
+        // 12-bit fingerprints at ~0.77 load: about 2*4*0.77/4096 ≈ 0.15%
+        assert!(est > 1e-4 && est < 1e-2, "estimate out of range: {est}");
     }
 
     #[test]

@@ -11,7 +11,10 @@ pub mod tree_bloom;
 
 pub use blocklist::{BlockArena, BLOCK_CAP, NIL};
 pub use bloom::BloomFilter;
-pub use cuckoo::{BucketPlan, CuckooConfig, CuckooFilter, CuckooStats, LookupHit};
+pub use cuckoo::{
+    BucketPlan, CuckooConfig, CuckooFilter, CuckooStats, LookupHit,
+    KICK_DEPTH_BUCKETS,
+};
 pub use fingerprint::entity_key;
-pub use sharded::ShardedCuckooFilter;
+pub use sharded::{FilterTelemetry, ShardedCuckooFilter};
 pub use tree_bloom::BloomForest;

@@ -67,13 +67,93 @@
 
 use crate::sync::RwLock;
 
-use crate::filter::cuckoo::{CuckooConfig, CuckooFilter, CuckooStats};
+use crate::filter::cuckoo::{
+    CuckooConfig, CuckooFilter, CuckooStats, KICK_DEPTH_BUCKETS,
+};
 use crate::filter::fingerprint::shard_index;
 use crate::forest::EntityAddress;
+use crate::util::json::Json;
 
 /// Planned bucket swaps applied per write-lock acquisition during
 /// [`ShardedCuckooFilter::maintain`] — the bound on a maintenance hold.
 const MAINTAIN_SWAP_BATCH: usize = 32;
+
+/// One-shot snapshot of the filter's internals for the observability
+/// plane: occupancy, probe work, displacement pressure, migration
+/// progress, memory footprint and the analytic false-positive estimate.
+/// Produced by [`ShardedCuckooFilter::telemetry`], surfaced through the
+/// coordinator's `\x01stats` payload (under `"filter"`) and the
+/// `\x01metrics` Prometheus exposition.
+#[derive(Clone, Debug)]
+pub struct FilterTelemetry {
+    /// Shard count (power of two).
+    pub shards: usize,
+    /// Live entries across all shards.
+    pub entries: usize,
+    /// Total slot capacity across all shards (active generations).
+    pub capacity_slots: usize,
+    /// Aggregate load factor (`entries / capacity_slots`).
+    pub load_factor: f64,
+    /// Per-shard load factors, in shard order — skew here means the
+    /// key space is hashing unevenly.
+    pub shard_load: Vec<f64>,
+    /// Lookup probes answered (all shards, lifetime).
+    pub lookups: u64,
+    /// Bucket slots examined across all lookups — divide by `lookups`
+    /// for the mean probe count temperature sorting optimizes.
+    pub slots_probed: u64,
+    /// Cuckoo displacements performed by inserts.
+    pub kicks: u64,
+    /// Placements by displacement-chain depth; bucket ranges are
+    /// documented at [`KICK_DEPTH_BUCKETS`].
+    pub kick_depth_hist: [u64; KICK_DEPTH_BUCKETS],
+    /// Table doublings triggered.
+    pub expansions: u64,
+    /// Incremental migration steps driven (several per expansion).
+    pub migration_steps: u64,
+    /// Approximate heap bytes, including freed block-list capacity.
+    pub memory_bytes: usize,
+    /// Heap bytes backing live entries only.
+    pub live_memory_bytes: usize,
+    /// Analytic false-positive probability at the current load
+    /// (capacity-weighted across shards).
+    pub est_fp_rate: f64,
+}
+
+impl FilterTelemetry {
+    /// JSON form for the `\x01stats` payload (`"filter"` sub-object).
+    /// These are *additive* fields — new keys here never collide with
+    /// the historical top-level stats names the router's prober reads.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::Num(self.shards as f64)),
+            ("entries", Json::Num(self.entries as f64)),
+            ("capacity_slots", Json::Num(self.capacity_slots as f64)),
+            ("load_factor", Json::Num(self.load_factor)),
+            (
+                "shard_load",
+                Json::Arr(self.shard_load.iter().map(|&l| Json::Num(l)).collect()),
+            ),
+            ("lookups", Json::Num(self.lookups as f64)),
+            ("slots_probed", Json::Num(self.slots_probed as f64)),
+            ("kicks", Json::Num(self.kicks as f64)),
+            (
+                "kick_depth_hist",
+                Json::Arr(
+                    self.kick_depth_hist
+                        .iter()
+                        .map(|&c| Json::Num(c as f64))
+                        .collect(),
+                ),
+            ),
+            ("expansions", Json::Num(self.expansions as f64)),
+            ("migration_steps", Json::Num(self.migration_steps as f64)),
+            ("memory_bytes", Json::Num(self.memory_bytes as f64)),
+            ("live_memory_bytes", Json::Num(self.live_memory_bytes as f64)),
+            ("est_fp_rate", Json::Num(self.est_fp_rate)),
+        ])
+    }
+}
 
 /// A Cuckoo Filter partitioned across independent, individually locked
 /// shards. All operations take `&self`; see the module docs for which
@@ -283,6 +363,73 @@ impl ShardedCuckooFilter {
             .map(|s| s.read().unwrap().live_memory_bytes())
             .sum()
     }
+
+    /// Per-shard load factors in shard order (monitoring; one read
+    /// lock per shard, no cross-shard atomicity promise).
+    pub fn shard_occupancy(&self) -> Vec<f64> {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().load_factor())
+            .collect()
+    }
+
+    /// `(lookups, slots_probed)` summed across shards — the pair the
+    /// tracer diffs around a retrieval stage to attribute probe work
+    /// to one request.
+    pub fn probe_counters(&self) -> (u64, u64) {
+        let mut lookups = 0u64;
+        let mut probed = 0u64;
+        for shard in &self.shards {
+            let s = shard.read().unwrap().stats();
+            lookups += s.lookups;
+            probed += s.slots_probed;
+        }
+        (lookups, probed)
+    }
+
+    /// Assemble a full [`FilterTelemetry`] snapshot. Locks each shard
+    /// once (read), so the numbers within one shard are consistent;
+    /// across shards they are monitoring-grade, like every other
+    /// aggregate accessor here.
+    pub fn telemetry(&self) -> FilterTelemetry {
+        let mut stats = CuckooStats::default();
+        let mut entries = 0usize;
+        let mut slots = 0usize;
+        let mut memory = 0usize;
+        let mut live = 0usize;
+        let mut shard_load = Vec::with_capacity(self.shards.len());
+        // capacity-weighted false-positive estimate: each shard probes
+        // only its own table, so the fleet-level rate is the average
+        // weighted by how much of the key space (∝ slots) each serves
+        let mut fp_weighted = 0.0f64;
+        for lock in &self.shards {
+            let g = lock.read().unwrap();
+            stats.merge(g.stats());
+            entries += g.len();
+            let cap = g.capacity_slots();
+            slots += cap;
+            memory += g.memory_bytes();
+            live += g.live_memory_bytes();
+            shard_load.push(g.load_factor());
+            fp_weighted += g.estimated_fp_rate() * cap as f64;
+        }
+        FilterTelemetry {
+            shards: self.shards.len(),
+            entries,
+            capacity_slots: slots,
+            load_factor: if slots == 0 { 0.0 } else { entries as f64 / slots as f64 },
+            shard_load,
+            lookups: stats.lookups,
+            slots_probed: stats.slots_probed,
+            kicks: stats.kicks,
+            kick_depth_hist: stats.kick_depth_hist,
+            expansions: stats.expansions,
+            migration_steps: stats.migration_steps,
+            memory_bytes: memory,
+            live_memory_bytes: live,
+            est_fp_rate: if slots == 0 { 0.0 } else { fp_weighted / slots as f64 },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -439,6 +586,42 @@ mod tests {
         assert_eq!(s.lookups, 100);
         assert!(s.slots_probed >= 100);
         assert!(cf.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn telemetry_snapshot_is_consistent_and_serializes() {
+        let cf = ShardedCuckooFilter::new(CuckooConfig::default(), 4);
+        for i in 0..200 {
+            cf.insert(key(i), &addrs(1));
+        }
+        let mut out = Vec::new();
+        for i in 0..200 {
+            out.clear();
+            cf.lookup_into(key(i), &mut out);
+        }
+        let t = cf.telemetry();
+        assert_eq!(t.shards, 4);
+        assert_eq!(t.entries, 200);
+        assert_eq!(t.capacity_slots, cf.capacity_slots());
+        assert!((t.load_factor - cf.load_factor()).abs() < 1e-12);
+        assert_eq!(t.shard_load.len(), 4);
+        assert!(t.shard_load.iter().all(|&l| (0.0..=1.0).contains(&l)));
+        assert_eq!(t.lookups, 200);
+        assert!(t.slots_probed >= 200);
+        assert!(t.kick_depth_hist.iter().sum::<u64>() >= 200, "every placement bucketed");
+        assert!(t.memory_bytes >= t.live_memory_bytes);
+        assert!(t.est_fp_rate > 0.0 && t.est_fp_rate < 1.0);
+        assert_eq!(cf.probe_counters(), (t.lookups, t.slots_probed));
+
+        let json = Json::parse(&t.to_json().to_string()).unwrap();
+        assert_eq!(json.get("shards").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(json.get("entries").and_then(Json::as_f64), Some(200.0));
+        let hist = json.get("kick_depth_hist").unwrap();
+        match hist {
+            Json::Arr(items) => assert_eq!(items.len(), KICK_DEPTH_BUCKETS),
+            other => panic!("kick_depth_hist not an array: {other:?}"),
+        }
+        assert!(json.get("est_fp_rate").and_then(Json::as_f64).unwrap() > 0.0);
     }
 
     #[test]

@@ -35,6 +35,7 @@
 
 pub mod util;
 pub mod sync;
+pub mod obs;
 pub mod reactor;
 #[cfg(feature = "modelcheck")]
 pub mod modelcheck;

@@ -1,0 +1,34 @@
+//! Observability plane: unified metrics registry and distributed
+//! request tracing, dependency-free.
+//!
+//! Three pillars, one module (see `docs/OBSERVABILITY.md` for the
+//! operator-facing catalog and runbooks):
+//!
+//! * [`registry`] — a process-wide vocabulary of named counters,
+//!   gauges and log-linear histograms. Both front doors' `\x01stats`
+//!   payloads are built on it, and the `\x01metrics` control line
+//!   renders the whole registry as Prometheus text exposition so one
+//!   scraper covers the fleet.
+//! * [`trace`] — request tracing across the serving stack. A trace id
+//!   is minted at whichever front door a request enters (router or
+//!   coordinator) and propagated to backends with an optional
+//!   `\x01t=<hex>` line prefix that old peers simply reject per
+//!   unknown-control rules, so a fleet upgrades incrementally. Spans
+//!   (queue waits, batch formation, retrieval, per-backend exchanges,
+//!   merge) land in per-thread lock-free ring buffers and are exported
+//!   as JSON via the `\x01trace` control line; slow queries are also
+//!   logged through [`crate::util::log`] as structured lines.
+//! * Filter internals — the cuckoo hot path exposes relaxed-atomic
+//!   telemetry (`crate::filter::FilterTelemetry`) that the coordinator
+//!   surfaces under `\x01stats` and `\x01metrics`; the per-request
+//!   probe count rides on retrieval spans.
+//!
+//! Everything here uses [`crate::sync`] primitives, so the registry is
+//! exercisable under the deterministic model-check scheduler like the
+//! rest of the concurrency core.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, Histogram, Registry};
+pub use trace::{Sampler, SpanRec, Stage, TraceId};

@@ -1,0 +1,467 @@
+//! Unified metrics registry: named counters, gauges and log-linear
+//! latency histograms behind lock-free handles, rendered on demand as
+//! Prometheus text exposition.
+//!
+//! This replaces the hand-rolled percentile plumbing that used to be
+//! duplicated across `coordinator/metrics.rs` and `router/metrics.rs`:
+//! both sinks now allocate their series here and keep only their
+//! domain-specific snapshot shapes (the `\x01stats` JSON contracts).
+//!
+//! Design points:
+//!
+//! * **Handles are cheap.** [`Counter`], [`Gauge`] and [`Histogram`]
+//!   are `Arc`ed atomics; recording is a relaxed `fetch_add` (three of
+//!   them for a histogram), safe on any hot path.
+//! * **Registration is idempotent.** Asking for an existing name
+//!   returns the existing handle, so construction order never matters.
+//!   Re-registering a name as a *different* kind is a programming
+//!   error and panics.
+//! * **Same buckets as `util/stats.rs`.** The histogram uses the
+//!   identical log-spaced layout (base 100 ns, growth 1.5, 64
+//!   buckets), so quantiles reported through `\x01stats` are unchanged
+//!   to the digit from the pre-registry code.
+//!
+//! # Examples
+//!
+//! ```
+//! use cft_rag::obs::Registry;
+//!
+//! let reg = Registry::new();
+//! let hits = reg.counter("cache_hits_total", "cache hits");
+//! hits.inc();
+//! let lat = reg.histogram("request_seconds", "request latency");
+//! lat.record(0.003);
+//! let text = reg.render();
+//! assert!(text.contains("# TYPE cache_hits_total counter"));
+//! assert!(text.contains("request_seconds_bucket"));
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Arc, Mutex};
+
+/// Number of log-spaced histogram buckets (matches `util/stats.rs`).
+pub const HIST_BUCKETS: usize = 64;
+/// Lower edge of bucket 0 in seconds: 100 ns (matches `util/stats.rs`).
+pub const HIST_BASE: f64 = 1e-7;
+/// Geometric growth factor between buckets (matches `util/stats.rs`).
+pub const HIST_GROWTH: f64 = 1.5;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// New counter at zero.
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time value (f64 bits in an atomic word).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// New gauge at zero.
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Lock-free log-linear latency histogram.
+///
+/// Bucket `i` covers `[HIST_BASE * HIST_GROWTH^i, HIST_BASE *
+/// HIST_GROWTH^(i+1))` seconds; observations above the last bucket land
+/// in an overflow cell (reported as the `+Inf` bucket). The index math
+/// and quantile convention (upper bucket edge) replicate
+/// `util::stats::LatencyHistogram` exactly, so callers migrating off
+/// the mutex-guarded histogram see identical numbers.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    overflow: AtomicU64,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// New empty histogram covering ~100 ns ..= ~3000 s.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            overflow: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation in seconds.
+    pub fn record(&self, secs: f64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let ns = (secs * 1e9).clamp(0.0, u64::MAX as f64) as u64;
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        if secs < HIST_BASE {
+            self.buckets[0].fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let idx = ((secs / HIST_BASE).ln() / HIST_GROWTH.ln()) as usize;
+        if idx < HIST_BUCKETS {
+            self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.overflow.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one observation given as a [`Duration`].
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations in seconds.
+    pub fn sum(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Mean observation in seconds (0 if empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 { 0.0 } else { self.sum() / n as f64 }
+    }
+
+    /// Approximate quantile (upper bucket edge), in seconds. Same
+    /// convention as `util::stats::LatencyHistogram::quantile`:
+    /// observations past the last bucket push the result to infinity.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let count = self.count();
+        if count == 0 {
+            return 0.0;
+        }
+        let target = (q * count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return HIST_BASE * HIST_GROWTH.powi(i as i32 + 1);
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Upper edge of bucket `i`, in seconds.
+    pub fn bucket_upper(i: usize) -> f64 {
+        HIST_BASE * HIST_GROWTH.powi(i as i32 + 1)
+    }
+
+    /// Per-bucket counts plus the overflow cell (monitoring-grade: the
+    /// loads are not a consistent cut against concurrent writers).
+    pub fn bucket_counts(&self) -> ([u64; HIST_BUCKETS], u64) {
+        let counts = std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed));
+        (counts, self.overflow.load(Ordering::Relaxed))
+    }
+}
+
+/// One registered series.
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    help: String,
+    metric: Metric,
+}
+
+/// Named-series registry; the process-wide metric vocabulary.
+///
+/// Lookup takes a short mutex on the name map; the returned handles
+/// are lock-free, so callers register once at construction and record
+/// through the handle on hot paths.
+#[derive(Debug, Default)]
+pub struct Registry {
+    series: Mutex<BTreeMap<String, Entry>>,
+}
+
+/// `debug_assert` helper: Prometheus metric-name grammar.
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+impl Registry {
+    /// New empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn get_or_insert(&self, name: &str, help: &str, make: impl FnOnce() -> Metric) -> Metric {
+        debug_assert!(valid_name(name), "invalid metric name {name:?}");
+        let mut series = self.series.lock().unwrap();
+        if let Some(entry) = series.get(name) {
+            let existing = entry.metric.clone();
+            let wanted = make();
+            assert_eq!(
+                existing.kind(),
+                wanted.kind(),
+                "metric {name:?} re-registered as a different kind"
+            );
+            return existing;
+        }
+        let metric = make();
+        series.insert(
+            name.to_string(),
+            Entry { help: help.to_string(), metric: metric.clone() },
+        );
+        metric
+    }
+
+    /// Register (or fetch) a counter.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        match self.get_or_insert(name, help, || Metric::Counter(Arc::new(Counter::new()))) {
+            Metric::Counter(c) => c,
+            _ => unreachable!("kind checked in get_or_insert"),
+        }
+    }
+
+    /// Register (or fetch) a gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        match self.get_or_insert(name, help, || Metric::Gauge(Arc::new(Gauge::new()))) {
+            Metric::Gauge(g) => g,
+            _ => unreachable!("kind checked in get_or_insert"),
+        }
+    }
+
+    /// Register (or fetch) a histogram.
+    pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        match self.get_or_insert(name, help, || Metric::Histogram(Arc::new(Histogram::new()))) {
+            Metric::Histogram(h) => h,
+            _ => unreachable!("kind checked in get_or_insert"),
+        }
+    }
+
+    /// Render every series as Prometheus text exposition (version
+    /// 0.0.4): `# HELP`/`# TYPE` per series, cumulative histogram
+    /// buckets terminated by `le="+Inf"`, plus `_sum`/`_count`.
+    pub fn render(&self) -> String {
+        let series = self.series.lock().unwrap();
+        let mut out = String::new();
+        for (name, entry) in series.iter() {
+            let help = entry.help.replace('\\', "\\\\").replace('\n', "\\n");
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {}", entry.metric.kind());
+            match &entry.metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let (counts, overflow) = h.bucket_counts();
+                    let mut acc = 0u64;
+                    for (i, c) in counts.iter().enumerate() {
+                        if *c == 0 {
+                            continue;
+                        }
+                        acc += c;
+                        let _ = writeln!(
+                            out,
+                            "{name}_bucket{{le=\"{:.6e}\"}} {acc}",
+                            Histogram::bucket_upper(i)
+                        );
+                    }
+                    acc += overflow;
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {acc}");
+                    let _ = writeln!(out, "{name}_sum {}", h.sum());
+                    let _ = writeln!(out, "{name}_count {}", h.count());
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::LatencyHistogram;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let reg = Registry::new();
+        let c = reg.counter("c_total", "a counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = reg.gauge("g", "a gauge");
+        g.set(2.5);
+        assert!((g.get() - 2.5).abs() < 1e-12);
+        // idempotent registration returns the same underlying series
+        reg.counter("c_total", "a counter").inc();
+        assert_eq!(c.get(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let reg = Registry::new();
+        reg.counter("x", "as counter");
+        reg.gauge("x", "as gauge");
+    }
+
+    #[test]
+    fn histogram_quantiles_match_legacy_latency_histogram() {
+        let reg = Registry::new();
+        let h = reg.histogram("lat_seconds", "latency");
+        let mut legacy = LatencyHistogram::new();
+        for i in 1..=500u32 {
+            let secs = 1e-5 * i as f64;
+            h.record(secs);
+            legacy.record(secs);
+        }
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(
+                h.quantile(q),
+                legacy.quantile(q),
+                "quantile {q} diverged from util::stats"
+            );
+        }
+        assert_eq!(h.count(), legacy.count());
+        assert!((h.mean() - legacy.mean()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let h = Histogram::new();
+        h.record(0.0); // below base: bucket 0
+        h.record(-1.0); // negative: bucket 0, sum clamped at 0
+        h.record(1e9); // far past the last bucket: overflow
+        assert_eq!(h.count(), 3);
+        let (counts, overflow) = h.bucket_counts();
+        assert_eq!(counts[0], 2);
+        assert_eq!(overflow, 1);
+        assert_eq!(h.quantile(0.99), f64::INFINITY);
+    }
+
+    #[test]
+    fn render_is_lintable_exposition() {
+        let reg = Registry::new();
+        reg.counter("reqs_total", "requests").add(3);
+        reg.gauge("depth", "queue depth").set(1.0);
+        let h = reg.histogram("lat_seconds", "latency");
+        h.record(1e-4);
+        h.record(1e-2);
+        h.record(5e3); // overflow
+        let text = reg.render();
+        assert!(text.contains("# HELP reqs_total requests"));
+        assert!(text.contains("# TYPE reqs_total counter"));
+        assert!(text.contains("reqs_total 3"));
+        assert!(text.contains("# TYPE depth gauge"));
+        assert!(text.contains("# TYPE lat_seconds histogram"));
+        // buckets are cumulative and +Inf-terminated with the count
+        let mut last = 0u64;
+        let mut inf_seen = false;
+        for line in text.lines().filter(|l| l.starts_with("lat_seconds_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "buckets must be cumulative: {line}");
+            last = v;
+            inf_seen = line.contains("le=\"+Inf\"");
+        }
+        assert!(inf_seen, "last bucket must be +Inf");
+        assert_eq!(last, 3, "+Inf bucket equals the observation count");
+        assert!(text.contains("lat_seconds_count 3"));
+    }
+
+    #[test]
+    fn empty_histogram_still_renders_inf_bucket() {
+        let reg = Registry::new();
+        reg.histogram("idle_seconds", "never recorded");
+        let text = reg.render();
+        assert!(text.contains("idle_seconds_bucket{le=\"+Inf\"} 0"));
+        assert!(text.contains("idle_seconds_count 0"));
+    }
+
+    #[test]
+    fn name_grammar() {
+        assert!(valid_name("a_b:c9"));
+        assert!(!valid_name(""));
+        assert!(!valid_name("9a"));
+        assert!(!valid_name("a-b"));
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        use crate::sync::thread;
+        let reg = Arc::new(Registry::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let reg = Arc::clone(&reg);
+            handles.push(thread::spawn(move || {
+                let c = reg.counter("shared_total", "shared");
+                let h = reg.histogram("shared_seconds", "shared");
+                for _ in 0..1000 {
+                    c.inc();
+                    h.record(1e-3);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.counter("shared_total", "shared").get(), 4000);
+        assert_eq!(reg.histogram("shared_seconds", "shared").count(), 4000);
+    }
+}

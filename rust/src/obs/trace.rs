@@ -1,0 +1,673 @@
+//! Distributed request tracing for the serving stack.
+//!
+//! A trace id is minted at whichever front door a request enters (the
+//! shard router or a coordinator) when head sampling selects it, and
+//! rides to backends as an optional `\x01t=<hex> ` prefix on protocol
+//! lines ([`prefix_line`]/[`strip_trace`]). A peer that predates this
+//! module rejects the prefixed line as an unknown control — the
+//! documented behavior for every unrecognized `\x01` verb — so a fleet
+//! upgrades one process at a time with tracing simply disabled across
+//! mixed-version edges.
+//!
+//! Spans are recorded with [`record`] into fixed-size per-thread rings
+//! of relaxed atomics: the owning thread writes, any thread may read,
+//! and a per-slot sequence word discards the (vanishingly rare) slot
+//! caught mid-write — every access is an atomic operation, so the
+//! protocol is clean under ThreadSanitizer/Miri, and a torn slot costs
+//! one telemetry sample, never a data race. Completed sampled requests
+//! register a root record ([`finish_root`]); the `\x01trace` control
+//! line exports the most recent roots with their span trees as JSON
+//! ([`export_json`]), and slow queries additionally emit a structured
+//! `slow_query` log line ([`log_slow`]).
+//!
+//! Clock note: span timestamps are offsets from a process-wide epoch
+//! taken at first use, using [`crate::sync::time::Instant`] so the
+//! arithmetic stays inside the model-check clock shim's rules.
+
+use std::collections::VecDeque;
+use std::sync::OnceLock;
+use std::time::Duration;
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::time::Instant;
+use crate::sync::{Arc, Mutex};
+use crate::util::json::Json;
+use crate::util::log;
+
+/// Front-door label for coordinator-rooted traces.
+pub const DOOR_COORDINATOR: &str = "coordinator";
+/// Front-door label for router-rooted traces.
+pub const DOOR_ROUTER: &str = "router";
+
+/// Wire prefix carrying a trace id on a protocol line.
+pub const TRACE_PREFIX: &str = "\x01t=";
+
+/// Spans retained per recording thread (newest overwrite oldest).
+const RING_SPANS: usize = 256;
+/// Completed sampled roots retained for `\x01trace` export.
+const RECENT_ROOTS: usize = 64;
+
+/// The named stages a request can pass through; one span per stage
+/// occurrence. `docs/OBSERVABILITY.md` documents each stage's meaning
+/// and what to suspect when it dominates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Root span: front-door wall time, dispatch to reply.
+    Request = 0,
+    /// A complete line sat buffered behind its pipelined predecessor
+    /// before the reactor could dispatch it.
+    ReactorQueue = 1,
+    /// Router front door: wait in the worker-pool dispatch queue.
+    DispatchWait = 2,
+    /// Coordinator: wait in the submit queue before the batcher saw
+    /// the request.
+    SubmitWait = 3,
+    /// Coordinator: batch formation window (batcher saw the request →
+    /// batch dispatched).
+    BatchWait = 4,
+    /// Coordinator: embedding + document search for the request's
+    /// batch chunk (includes waiting for earlier chunks of the same
+    /// batch; `arg` = chunk size).
+    EmbedSearch = 5,
+    /// Coordinator: wait in the worker queue between batch dispatch
+    /// and a worker picking the request up.
+    WorkerWait = 6,
+    /// Entity recognition over the query text.
+    Ner = 7,
+    /// Filter-backed context retrieval (`arg` = cuckoo slots probed,
+    /// when the retriever exposes probe counters).
+    Retrieval = 8,
+    /// Prompt assembly + answer generation.
+    Generate = 9,
+    /// Router: one backend exchange — connect/write/reply against the
+    /// outbound reactor's deadline (`arg` = backend index).
+    Exchange = 10,
+    /// Router: deterministic merge of scattered portions.
+    Merge = 11,
+}
+
+/// Every stage, indexable by the `repr(u8)` discriminant.
+pub const STAGES: [Stage; 12] = [
+    Stage::Request,
+    Stage::ReactorQueue,
+    Stage::DispatchWait,
+    Stage::SubmitWait,
+    Stage::BatchWait,
+    Stage::EmbedSearch,
+    Stage::WorkerWait,
+    Stage::Ner,
+    Stage::Retrieval,
+    Stage::Generate,
+    Stage::Exchange,
+    Stage::Merge,
+];
+
+impl Stage {
+    /// Stable snake_case name used in exports, logs and docs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Request => "request",
+            Stage::ReactorQueue => "reactor_queue",
+            Stage::DispatchWait => "dispatch_wait",
+            Stage::SubmitWait => "submit_wait",
+            Stage::BatchWait => "batch_wait",
+            Stage::EmbedSearch => "embed_search",
+            Stage::WorkerWait => "worker_wait",
+            Stage::Ner => "ner",
+            Stage::Retrieval => "retrieval",
+            Stage::Generate => "generate",
+            Stage::Exchange => "exchange",
+            Stage::Merge => "merge",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Stage> {
+        STAGES.get(v as usize).copied()
+    }
+}
+
+/// A request's trace identity. The zero id means "not sampled": every
+/// recording call is a no-op for it, which is what bounds disabled
+/// tracing to a branch per stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceId(u64);
+
+impl TraceId {
+    /// The unsampled id.
+    pub const NONE: TraceId = TraceId(0);
+
+    /// True if spans should be recorded for this request.
+    pub fn is_sampled(self) -> bool {
+        self.0 != 0
+    }
+
+    /// Raw id (0 for [`TraceId::NONE`]).
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+
+    /// Rebuild from a raw id.
+    pub fn from_raw(raw: u64) -> TraceId {
+        TraceId(raw)
+    }
+
+    /// Lowercase hex form (the wire and export encoding).
+    pub fn to_hex(self) -> String {
+        format!("{:x}", self.0)
+    }
+
+    /// Parse the hex form; `None` for malformed or zero input.
+    pub fn from_hex(s: &str) -> Option<TraceId> {
+        match u64::from_str_radix(s, 16) {
+            Ok(0) | Err(_) => None,
+            Ok(v) => Some(TraceId(v)),
+        }
+    }
+}
+
+/// Mint a fresh process-unique trace id (never [`TraceId::NONE`]).
+pub fn mint() -> TraceId {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    // splitmix64 over a sequence counter: unique per process, and the
+    // mixing spreads ids so prefixes differ visibly in logs.
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    let mut z = n.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    TraceId(if z == 0 { 1 } else { z })
+}
+
+/// Head-sampling policy owned by one front door (deliberately not
+/// global: a process can host several doors — tests do — each with its
+/// own `RagConfig`/`RouterConfig` knobs).
+#[derive(Debug)]
+pub struct Sampler {
+    every: u64,
+    slow: Duration,
+    seq: AtomicU64,
+}
+
+impl Sampler {
+    /// Sample one request in `every` (0 disables sampling); requests
+    /// slower than `slow` are flagged and logged regardless (0
+    /// disables the slow path too).
+    pub fn new(every: u64, slow: Duration) -> Sampler {
+        Sampler { every, slow, seq: AtomicU64::new(0) }
+    }
+
+    /// A sampler that never samples and never flags slow queries.
+    pub fn disabled() -> Sampler {
+        Sampler::new(0, Duration::ZERO)
+    }
+
+    /// Head-sampling decision for the next request: a fresh id for
+    /// every `every`-th arrival, [`TraceId::NONE`] otherwise.
+    pub fn begin(&self) -> TraceId {
+        if self.every == 0 {
+            return TraceId::NONE;
+        }
+        let n = self.seq.fetch_add(1, Ordering::Relaxed);
+        if n % self.every == 0 { mint() } else { TraceId::NONE }
+    }
+
+    /// True if a completed request's wall time crosses the slow-query
+    /// threshold.
+    pub fn is_slow(&self, total: Duration) -> bool {
+        self.slow > Duration::ZERO && total >= self.slow
+    }
+
+    /// The configured sampling period (0 = disabled).
+    pub fn sample_every(&self) -> u64 {
+        self.every
+    }
+
+    /// The configured slow-query threshold (0 = disabled).
+    pub fn slow_threshold(&self) -> Duration {
+        self.slow
+    }
+}
+
+/// One recorded span, as read back from the rings.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRec {
+    /// Raw trace id the span belongs to.
+    pub trace: u64,
+    /// Which stage the span measures.
+    pub stage: Stage,
+    /// Stage-specific argument (backend index, chunk size, slots
+    /// probed…; 0 when unused).
+    pub arg: u32,
+    /// Start offset from the process trace epoch, nanoseconds.
+    pub start_ns: u64,
+    /// Span duration, nanoseconds.
+    pub dur_ns: u64,
+}
+
+/// A completed sampled request, as retained for `\x01trace`.
+#[derive(Clone, Copy, Debug)]
+pub struct RootRec {
+    /// Raw trace id.
+    pub id: u64,
+    /// Which front door rooted the trace ([`DOOR_COORDINATOR`] /
+    /// [`DOOR_ROUTER`]).
+    pub door: &'static str,
+    /// Root start offset from the process trace epoch, nanoseconds.
+    pub start_ns: u64,
+    /// Front-door wall time, nanoseconds.
+    pub dur_ns: u64,
+    /// Whether the request crossed its door's slow-query threshold.
+    pub slow: bool,
+}
+
+struct Slot {
+    seq: AtomicU64,
+    trace: AtomicU64,
+    meta: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+}
+
+/// Per-thread span ring. Single writer (the owning thread), any
+/// readers; all fields are atomics, the `seq` word is odd while a
+/// write is in flight and bumps on completion, so readers can detect
+/// and drop a slot they raced with.
+struct SpanRing {
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl SpanRing {
+    fn new() -> SpanRing {
+        SpanRing {
+            head: AtomicU64::new(0),
+            slots: (0..RING_SPANS)
+                .map(|_| Slot {
+                    seq: AtomicU64::new(0),
+                    trace: AtomicU64::new(0),
+                    meta: AtomicU64::new(0),
+                    start_ns: AtomicU64::new(0),
+                    dur_ns: AtomicU64::new(0),
+                })
+                .collect(),
+        }
+    }
+
+    fn push(&self, trace: u64, stage: Stage, arg: u32, start_ns: u64, dur_ns: u64) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h as usize) % RING_SPANS];
+        slot.seq.store(2 * h + 1, Ordering::Release);
+        slot.trace.store(trace, Ordering::Relaxed);
+        slot.meta.store(((stage as u64) << 32) | u64::from(arg), Ordering::Relaxed);
+        slot.start_ns.store(start_ns, Ordering::Relaxed);
+        slot.dur_ns.store(dur_ns, Ordering::Relaxed);
+        slot.seq.store(2 * h + 2, Ordering::Release);
+        self.head.store(h.wrapping_add(1), Ordering::Release);
+    }
+
+    fn collect_into(&self, trace: u64, out: &mut Vec<SpanRec>) {
+        for slot in self.slots.iter() {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue; // empty, or a write is in flight
+            }
+            if slot.trace.load(Ordering::Relaxed) != trace {
+                continue;
+            }
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let start_ns = slot.start_ns.load(Ordering::Relaxed);
+            let dur_ns = slot.dur_ns.load(Ordering::Relaxed);
+            let s2 = slot.seq.load(Ordering::Acquire);
+            if s1 != s2 {
+                continue; // overwritten while reading; drop the sample
+            }
+            let Some(stage) = Stage::from_u8((meta >> 32) as u8) else {
+                continue;
+            };
+            out.push(SpanRec { trace, stage, arg: meta as u32, start_ns, dur_ns });
+        }
+    }
+}
+
+/// Process-wide trace sink: the registered per-thread rings plus the
+/// bounded list of recently completed sampled roots.
+struct TraceHub {
+    epoch: Instant,
+    rings: Mutex<Vec<Arc<SpanRing>>>,
+    recent: Mutex<VecDeque<RootRec>>,
+}
+
+fn hub() -> &'static TraceHub {
+    static HUB: OnceLock<TraceHub> = OnceLock::new();
+    HUB.get_or_init(|| TraceHub {
+        epoch: Instant::now(),
+        rings: Mutex::new(Vec::new()),
+        recent: Mutex::new(VecDeque::new()),
+    })
+}
+
+thread_local! {
+    static RING: Arc<SpanRing> = {
+        let ring = Arc::new(SpanRing::new());
+        hub().rings.lock().unwrap().push(Arc::clone(&ring));
+        ring
+    };
+}
+
+fn to_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+fn since_epoch_ns(at: Instant) -> u64 {
+    to_ns(at.duration_since(hub().epoch))
+}
+
+/// Record one span. A no-op (one branch) when `trace` is unsampled —
+/// cheap enough to leave on every hot path unconditionally.
+pub fn record(trace: TraceId, stage: Stage, arg: u32, start: Instant, dur: Duration) {
+    if !trace.is_sampled() {
+        return;
+    }
+    let start_ns = since_epoch_ns(start);
+    RING.with(|ring| ring.push(trace.raw(), stage, arg, start_ns, to_ns(dur)));
+}
+
+/// Record the root span for a completed front-door request and retain
+/// it for `\x01trace` export. No-op for unsampled ids.
+pub fn finish_root(trace: TraceId, door: &'static str, start: Instant, total: Duration, slow: bool) {
+    if !trace.is_sampled() {
+        return;
+    }
+    record(trace, Stage::Request, 0, start, total);
+    let rec = RootRec {
+        id: trace.raw(),
+        door,
+        start_ns: since_epoch_ns(start),
+        dur_ns: to_ns(total),
+        slow,
+    };
+    let mut recent = hub().recent.lock().unwrap();
+    recent.push_back(rec);
+    while recent.len() > RECENT_ROOTS {
+        recent.pop_front();
+    }
+}
+
+/// Emit the structured slow-query log line (one per slow request,
+/// whatever the sampling decision was; unsampled requests log
+/// `trace=-` and carry no span detail).
+pub fn log_slow(door: &str, trace: TraceId, total: Duration, line: &str) {
+    let id = if trace.is_sampled() { trace.to_hex() } else { "-".to_string() };
+    let snippet: String = line.chars().take(120).collect();
+    log::warn!(
+        "slow_query door={door} trace={id} total_ms={:.3} line={snippet:?}",
+        total.as_secs_f64() * 1e3
+    );
+}
+
+/// All spans recorded for `trace`, across every thread's ring, sorted
+/// by start time.
+pub fn spans_for(trace: TraceId) -> Vec<SpanRec> {
+    if !trace.is_sampled() {
+        return Vec::new();
+    }
+    let rings: Vec<Arc<SpanRing>> = hub().rings.lock().unwrap().clone();
+    let mut out = Vec::new();
+    for ring in &rings {
+        ring.collect_into(trace.raw(), &mut out);
+    }
+    out.sort_by_key(|s| (s.start_ns, s.stage as u8));
+    out
+}
+
+/// The retained root record for `trace`, if it completed recently.
+pub fn root_for(trace: TraceId) -> Option<RootRec> {
+    hub().recent.lock().unwrap().iter().rev().find(|r| r.id == trace.raw()).copied()
+}
+
+/// Fraction of the root interval `[root_start_ns, root_start_ns +
+/// root_dur_ns)` covered by the union of the given `(start_ns,
+/// dur_ns)` child intervals, clipped to the root. Overlapping children
+/// (parallel backend exchanges) count once; an empty root counts as
+/// fully covered.
+pub fn coverage(root_start_ns: u64, root_dur_ns: u64, spans: &[(u64, u64)]) -> f64 {
+    if root_dur_ns == 0 {
+        return 1.0;
+    }
+    let lo = root_start_ns;
+    let hi = root_start_ns.saturating_add(root_dur_ns);
+    let mut iv: Vec<(u64, u64)> = spans
+        .iter()
+        .map(|&(s, d)| (s.max(lo), s.saturating_add(d).min(hi)))
+        .filter(|&(s, e)| e > s)
+        .collect();
+    iv.sort_unstable();
+    let mut covered = 0u64;
+    let mut cursor = lo;
+    for (s, e) in iv {
+        let s = s.max(cursor);
+        if e > s {
+            covered += e - s;
+            cursor = e;
+        }
+    }
+    covered as f64 / root_dur_ns as f64
+}
+
+fn trace_to_json(root: &RootRec, spans: &[SpanRec]) -> Json {
+    let child_iv: Vec<(u64, u64)> = spans
+        .iter()
+        .filter(|s| s.stage != Stage::Request)
+        .map(|s| (s.start_ns, s.dur_ns))
+        .collect();
+    let span_json = spans
+        .iter()
+        .map(|s| {
+            let rel_us =
+                (s.start_ns.saturating_sub(root.start_ns)) as f64 / 1e3;
+            Json::obj(vec![
+                ("stage", Json::Str(s.stage.name().to_string())),
+                ("arg", Json::Num(f64::from(s.arg))),
+                ("start_us", Json::Num(rel_us)),
+                ("dur_us", Json::Num(s.dur_ns as f64 / 1e3)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("id", Json::Str(format!("{:x}", root.id))),
+        ("door", Json::Str(root.door.to_string())),
+        ("total_ms", Json::Num(root.dur_ns as f64 / 1e6)),
+        ("slow", Json::Bool(root.slow)),
+        (
+            "coverage",
+            Json::Num(coverage(root.start_ns, root.dur_ns, &child_iv)),
+        ),
+        ("spans", Json::Arr(span_json)),
+    ])
+}
+
+/// The `\x01trace` reply payload: the retained roots (newest first,
+/// up to `limit`; or just the one matching `filter`) with their span
+/// trees and per-trace coverage.
+pub fn export_json(filter: Option<TraceId>, limit: usize) -> Json {
+    let roots: Vec<RootRec> = {
+        let recent = hub().recent.lock().unwrap();
+        match filter {
+            Some(id) => recent.iter().rev().filter(|r| r.id == id.raw()).take(1).copied().collect(),
+            None => recent.iter().rev().take(limit).copied().collect(),
+        }
+    };
+    let traces = roots
+        .iter()
+        .map(|root| trace_to_json(root, &spans_for(TraceId::from_raw(root.id))))
+        .collect();
+    Json::obj(vec![("ok", Json::Bool(true)), ("traces", Json::Arr(traces))])
+}
+
+/// Prefix a protocol line with the trace id for propagation to a
+/// backend. Unsampled ids return the line unchanged.
+pub fn prefix_line(trace: TraceId, line: &str) -> String {
+    if trace.is_sampled() {
+        format!("{TRACE_PREFIX}{:x} {line}", trace.raw())
+    } else {
+        line.to_string()
+    }
+}
+
+/// Split an inbound line into its (optional) trace id and the payload.
+/// Lines without a well-formed `\x01t=<hex> ` prefix come back
+/// untouched with [`TraceId::NONE`] — in particular a *malformed*
+/// prefix is left on the line, which the control-line parser then
+/// rejects as an unknown `\x01` verb, preserving the old-peer
+/// behavior the incremental-upgrade story depends on.
+pub fn strip_trace(line: &str) -> (TraceId, &str) {
+    if let Some(rest) = line.strip_prefix(TRACE_PREFIX) {
+        if let Some((id_part, payload)) = rest.split_once(' ') {
+            if let Some(id) = TraceId::from_hex(id_part) {
+                return (id, payload);
+            }
+        }
+    }
+    (TraceId::NONE, line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mint_is_unique_and_sampled() {
+        let a = mint();
+        let b = mint();
+        assert_ne!(a, b);
+        assert!(a.is_sampled() && b.is_sampled());
+        assert!(!TraceId::NONE.is_sampled());
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let id = mint();
+        assert_eq!(TraceId::from_hex(&id.to_hex()), Some(id));
+        assert_eq!(TraceId::from_hex("zz"), None);
+        assert_eq!(TraceId::from_hex("0"), None, "zero is reserved for NONE");
+    }
+
+    #[test]
+    fn sampler_period_and_slow_threshold() {
+        let s = Sampler::new(4, Duration::from_millis(10));
+        let sampled = (0..8).filter(|_| s.begin().is_sampled()).count();
+        assert_eq!(sampled, 2, "one in four over eight arrivals");
+        assert!(s.is_slow(Duration::from_millis(10)));
+        assert!(!s.is_slow(Duration::from_millis(9)));
+        let off = Sampler::disabled();
+        assert!(!off.begin().is_sampled());
+        assert!(!off.is_slow(Duration::from_secs(60)));
+    }
+
+    #[test]
+    fn wire_prefix_roundtrip() {
+        let id = mint();
+        let line = prefix_line(id, "what is cardiology");
+        assert!(line.starts_with(TRACE_PREFIX));
+        let (back, payload) = strip_trace(&line);
+        assert_eq!(back, id);
+        assert_eq!(payload, "what is cardiology");
+        // unsampled: untouched
+        assert_eq!(prefix_line(TraceId::NONE, "q"), "q");
+        // plain lines and malformed prefixes come back as-is
+        assert_eq!(strip_trace("plain query"), (TraceId::NONE, "plain query"));
+        let bad = "\x01t=nothex query";
+        assert_eq!(strip_trace(bad), (TraceId::NONE, bad));
+        let no_payload = "\x01t=abc";
+        assert_eq!(strip_trace(no_payload), (TraceId::NONE, no_payload));
+    }
+
+    #[test]
+    fn spans_record_and_collect_across_threads() {
+        let id = mint();
+        let t0 = Instant::now();
+        record(id, Stage::Ner, 0, t0, Duration::from_micros(50));
+        let id2 = id;
+        crate::sync::thread::spawn(move || {
+            record(id2, Stage::Retrieval, 7, Instant::now(), Duration::from_micros(80));
+        })
+        .join()
+        .unwrap();
+        let spans = spans_for(id);
+        assert_eq!(spans.len(), 2);
+        let stages: Vec<&str> = spans.iter().map(|s| s.stage.name()).collect();
+        assert!(stages.contains(&"ner") && stages.contains(&"retrieval"));
+        let retr = spans.iter().find(|s| s.stage == Stage::Retrieval).unwrap();
+        assert_eq!(retr.arg, 7);
+        // unsampled recording is a no-op
+        record(TraceId::NONE, Stage::Ner, 0, Instant::now(), Duration::ZERO);
+        assert!(spans_for(TraceId::NONE).is_empty());
+    }
+
+    #[test]
+    fn finish_root_retains_and_exports() {
+        let id = mint();
+        let t0 = Instant::now();
+        record(id, Stage::Retrieval, 3, t0, Duration::from_millis(9));
+        finish_root(id, DOOR_COORDINATOR, t0, Duration::from_millis(10), true);
+        let root = root_for(id).expect("root retained");
+        assert_eq!(root.door, DOOR_COORDINATOR);
+        assert!(root.slow);
+        let json = export_json(Some(id), 8);
+        assert_eq!(json.get("ok"), Some(&Json::Bool(true)));
+        let traces = json.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(t.get("id").and_then(Json::as_str), Some(id.to_hex().as_str()));
+        assert_eq!(t.get("slow"), Some(&Json::Bool(true)));
+        let cov = t.get("coverage").and_then(Json::as_f64).unwrap();
+        assert!(cov > 0.85 && cov <= 1.0, "9ms of 10ms covered, got {cov}");
+        let spans = t.get("spans").unwrap().as_arr().unwrap();
+        assert!(spans.iter().any(|s| {
+            s.get("stage").and_then(Json::as_str) == Some("request")
+        }));
+        for s in spans {
+            assert!(s.get("dur_us").and_then(Json::as_f64).unwrap() >= 0.0);
+            assert!(s.get("start_us").and_then(Json::as_f64).unwrap() >= 0.0);
+        }
+        // the reply parses back through the crate's own JSON parser
+        assert!(Json::parse(&json.to_string()).is_ok());
+    }
+
+    #[test]
+    fn export_without_filter_lists_recent_roots() {
+        let id = mint();
+        finish_root(id, DOOR_ROUTER, Instant::now(), Duration::from_millis(1), false);
+        let json = export_json(None, RECENT_ROOTS);
+        let traces = json.get("traces").unwrap().as_arr().unwrap();
+        assert!(traces
+            .iter()
+            .any(|t| t.get("id").and_then(Json::as_str) == Some(id.to_hex().as_str())));
+    }
+
+    #[test]
+    fn coverage_unions_and_clips() {
+        // root [100, 200): two overlapping children + one outside
+        let spans = [(100, 40), (120, 50), (500, 100)];
+        let cov = coverage(100, 100, &spans);
+        assert!((cov - 0.7).abs() < 1e-12, "[100,170) = 70% covered, got {cov}");
+        assert_eq!(coverage(0, 0, &[]), 1.0);
+        assert_eq!(coverage(0, 100, &[]), 0.0);
+        assert_eq!(coverage(0, 100, &[(0, 100)]), 1.0);
+        // child longer than the root is clipped
+        assert_eq!(coverage(50, 100, &[(0, 1000)]), 1.0);
+    }
+
+    #[test]
+    fn ring_overwrite_keeps_newest() {
+        let id = mint();
+        let t0 = Instant::now();
+        for _ in 0..(RING_SPANS + 10) {
+            record(id, Stage::Exchange, 1, t0, Duration::from_micros(1));
+        }
+        let spans = spans_for(id);
+        assert!(!spans.is_empty());
+        assert!(spans.len() <= RING_SPANS);
+    }
+}

@@ -240,6 +240,18 @@ pub struct RagConfig {
     /// the clock, so slowloris clients are reaped on schedule). Zero
     /// disables the reaper.
     pub idle_timeout: Duration,
+    /// Head-sampling period of the request tracer (`obs/trace.rs`):
+    /// every Nth front-door request gets a trace id minted and its
+    /// stage spans recorded. `0` (default) disables head sampling —
+    /// tracing then costs one branch per stage. Slow queries (see
+    /// [`slow_query_threshold`](RagConfig::slow_query_threshold)) are
+    /// surfaced regardless of the sampling decision.
+    pub trace_sample_every: u64,
+    /// A request slower than this (front-door wall time) is always
+    /// recorded in the recent-traces ring and logged as a structured
+    /// `slow_query` line, even when head sampling skipped it. Zero
+    /// disables slow-query capture.
+    pub slow_query_threshold: Duration,
 }
 
 impl Default for RagConfig {
@@ -255,6 +267,8 @@ impl Default for RagConfig {
             key_partition: None,
             max_connections: 4096,
             idle_timeout: Duration::from_secs(60),
+            trace_sample_every: 0,
+            slow_query_threshold: Duration::from_millis(250),
         }
     }
 }
@@ -366,6 +380,14 @@ pub struct RouterConfig {
     /// Reap a router front-door connection this long after its last
     /// completed request line. Zero disables the reaper.
     pub idle_timeout: Duration,
+    /// Head-sampling period of the router's request tracer: every Nth
+    /// front-door request is traced end to end (the minted id rides to
+    /// the backends as a `\x01t=` line prefix). `0` (default) = off;
+    /// slow queries are captured regardless.
+    pub trace_sample_every: u64,
+    /// A routed request slower than this is always recorded and logged
+    /// as a `slow_query` line, sampled or not. Zero disables capture.
+    pub slow_query_threshold: Duration,
 }
 
 impl Default for RouterConfig {
@@ -382,6 +404,8 @@ impl Default for RouterConfig {
             write_quorum: 0,
             max_connections: 4096,
             idle_timeout: Duration::from_secs(60),
+            trace_sample_every: 0,
+            slow_query_threshold: Duration::from_millis(250),
         }
     }
 }
@@ -473,6 +497,12 @@ mod tests {
         // and the two doors agree, so a fleet behaves uniformly
         assert_eq!(rag.max_connections, router.max_connections);
         assert_eq!(rag.idle_timeout, router.idle_timeout);
+        // tracing knobs: off-by-default head sampling, slow queries
+        // always captured, and identical defaults across doors
+        assert_eq!(rag.trace_sample_every, 0);
+        assert!(!rag.slow_query_threshold.is_zero());
+        assert_eq!(rag.trace_sample_every, router.trace_sample_every);
+        assert_eq!(rag.slow_query_threshold, router.slow_query_threshold);
     }
 
     #[test]

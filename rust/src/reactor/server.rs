@@ -72,7 +72,13 @@ pub trait LineService: Send + Sync {
     /// through `done` — synchronously on the calling reactor thread
     /// or later from any thread. Dropping `done` unanswered yields a
     /// `request dropped` protocol error.
-    fn serve_line(&self, line: &str, done: Completion);
+    ///
+    /// `queued` is how long the complete line sat buffered behind the
+    /// connection's previous in-flight request before dispatch
+    /// (`Duration::ZERO` when it was dispatched on arrival) — the
+    /// front-door queueing delay the tracer records as the
+    /// `reactor_queue` span.
+    fn serve_line(&self, line: &str, queued: Duration, done: Completion);
 }
 
 /// What a completed request does to its connection.
@@ -308,6 +314,10 @@ struct Conn {
     eof: bool,
     /// When the last *complete* line arrived — the idle clock.
     last_line_at: Instant,
+    /// When a complete buffered line started waiting behind the
+    /// in-flight request (None while nothing waits) — measures the
+    /// `queued` duration handed to [`LineService::serve_line`].
+    queued_since: Option<Instant>,
     /// Interest currently registered with the poller.
     interest: Interest,
 }
@@ -423,6 +433,7 @@ impl EventLoop {
                 awaiting: false,
                 eof: false,
                 last_line_at: now,
+                queued_since: None,
                 interest: Interest::READ,
             },
         );
@@ -538,11 +549,19 @@ impl EventLoop {
                 None => return false,
             };
             if conn.awaiting {
+                // start the queue-wait clock the moment a complete
+                // line is observed waiting behind the in-flight one
+                if conn.queued_since.is_none() && conn.buf.contains(&b'\n') {
+                    conn.queued_since = Some(Instant::now());
+                }
                 return true;
             }
             let pos = match conn.buf.iter().position(|&b| b == b'\n') {
                 Some(p) => p,
-                None => return true,
+                None => {
+                    conn.queued_since = None;
+                    return true;
+                }
             };
             let line_bytes: Vec<u8> = conn.buf.drain(..=pos).collect();
             conn.last_line_at = Instant::now();
@@ -563,6 +582,11 @@ impl EventLoop {
                 continue;
             }
             conn.awaiting = true;
+            let queued = conn
+                .queued_since
+                .take()
+                .map(|since| since.elapsed())
+                .unwrap_or(Duration::ZERO);
             self.stats.queue_depth.fetch_add(1, Ordering::Relaxed);
             let done = Completion {
                 inner: Some((id, Arc::clone(&self.completions))),
@@ -570,7 +594,7 @@ impl EventLoop {
             // may complete synchronously; the outcome lands in the
             // completion queue either way and is applied by
             // drain_completions, never recursively here
-            self.service.serve_line(&line, done);
+            self.service.serve_line(&line, queued, done);
         }
     }
 
@@ -727,7 +751,7 @@ mod tests {
     /// error); `slow!` answers from a detached thread.
     struct Echo;
     impl LineService for Echo {
-        fn serve_line(&self, line: &str, done: Completion) {
+        fn serve_line(&self, line: &str, _queued: Duration, done: Completion) {
             match line {
                 "close!" => done.close(),
                 "drop!" => drop(done),

@@ -163,6 +163,23 @@ pub trait ConcurrentRetriever: Send + Sync {
     fn live_index_bytes(&self) -> usize {
         self.index_bytes()
     }
+
+    /// Filter-internals snapshot for the observability plane
+    /// ([`FilterTelemetry`](crate::filter::FilterTelemetry)): occupancy,
+    /// probe work, kick-depth histogram, migration progress, estimated
+    /// false-positive rate. `None` for retrievers without a Cuckoo
+    /// Filter index (the Bloom/naive baselines).
+    fn filter_telemetry(&self) -> Option<crate::filter::FilterTelemetry> {
+        None
+    }
+
+    /// Lifetime `(lookups, slots_probed)` counters of the underlying
+    /// filter — the tracer diffs this pair around a retrieval stage to
+    /// attribute probe work to one request. `None` when there is no
+    /// filter to count.
+    fn probe_counters(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// Adapts any [`Retriever`] to [`ConcurrentRetriever`] by serializing

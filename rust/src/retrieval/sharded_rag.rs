@@ -234,6 +234,14 @@ impl ConcurrentRetriever for ShardedCuckooTRag {
     fn live_index_bytes(&self) -> usize {
         self.cf.live_memory_bytes()
     }
+
+    fn filter_telemetry(&self) -> Option<crate::filter::FilterTelemetry> {
+        Some(self.cf.telemetry())
+    }
+
+    fn probe_counters(&self) -> Option<(u64, u64)> {
+        Some(self.cf.probe_counters())
+    }
 }
 
 /// The sharded retriever also fits the classic single-threaded trait, so
@@ -480,5 +488,28 @@ mod tests {
         assert_eq!(Retriever::name(&r), "CF T-RAG (sharded)");
         assert_eq!(r.find("alpha").len(), 2);
         assert!(Retriever::index_bytes(&r) > 0);
+    }
+
+    #[test]
+    fn exposes_filter_telemetry_and_probe_counters() {
+        let r = ShardedCuckooTRag::new(forest(), 4);
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            out.clear();
+            r.find_concurrent("alpha", &mut out);
+        }
+        let t = ConcurrentRetriever::filter_telemetry(&r).unwrap();
+        assert_eq!(t.shards, 4);
+        assert!(t.entries >= 3, "alpha/beta/gamma indexed");
+        assert_eq!(t.lookups, 3);
+        let (lookups, probed) = ConcurrentRetriever::probe_counters(&r).unwrap();
+        assert_eq!(lookups, 3);
+        assert!(probed >= 3);
+        // baselines stay telemetry-free through the default methods
+        let mutex = crate::retrieval::MutexRetriever::new(Box::new(
+            crate::retrieval::naive::NaiveTRag::new(forest()),
+        ));
+        assert!(ConcurrentRetriever::filter_telemetry(&mutex).is_none());
+        assert!(ConcurrentRetriever::probe_counters(&mutex).is_none());
     }
 }

@@ -1,12 +1,15 @@
-//! Router-level metrics, in the same shape as `coordinator/metrics.rs`:
-//! a cheap mutex-guarded sink, cloneable across threads, snapshotted on
-//! demand. Per-backend latency uses the shared [`LatencyHistogram`].
-//! Ring membership is elastic (`router/rebalance.rs`), so the
-//! per-backend slots grow on join and are remapped on drain, and the
-//! snapshot carries the serving ring's membership epoch plus the
-//! rebalance counters (`joins`/`drains`/keys streamed/keys dropped/
-//! dual writes). `docs/OPERATIONS.md` explains what to do when each
-//! counter moves.
+//! Router-level metrics, rebuilt on the unified [`Registry`]
+//! (`obs/registry.rs`): every fleet-wide counter is a registered
+//! series (scrapeable via the router's `\x01metrics` exposition), and
+//! per-backend latency uses the registry's lock-free [`Histogram`]
+//! type — the hand-rolled percentile plumbing this module used to
+//! duplicate with `coordinator/metrics.rs` is gone. Ring membership is
+//! elastic (`router/rebalance.rs`), so the per-backend slots grow on
+//! join and are remapped on drain, and the snapshot carries the
+//! serving ring's membership epoch plus the rebalance counters
+//! (`joins`/`drains`/keys streamed/keys dropped/dual writes).
+//! `docs/OPERATIONS.md` explains what to do when each counter moves.
+//! The `\x01stats` JSON payload keeps its historical field names.
 //!
 //! # Examples
 //!
@@ -26,11 +29,11 @@
 //! assert!(snap.to_json().to_string().contains("\"ring_epoch\""));
 //! ```
 
-use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::obs::{Counter, Histogram, Registry};
+use crate::sync::{Arc, Mutex};
 use crate::util::json::Json;
-use crate::util::stats::LatencyHistogram;
 
 /// Snapshot of one backend's counters at an instant.
 #[derive(Clone, Debug)]
@@ -138,136 +141,159 @@ impl RouterMetricsSnapshot {
     }
 }
 
+/// One backend's slot: request/failure tallies plus its latency
+/// histogram. Plain integers are fine — the slot vector itself sits
+/// behind a mutex because join/drain grow and shift it.
 #[derive(Debug, Default)]
-struct BackendInner {
+struct BackendSlot {
     requests: u64,
     failures: u64,
-    latency: LatencyHistogram,
-}
-
-#[derive(Debug)]
-struct Inner {
-    requests: u64,
-    failures: u64,
-    fanouts: u64,
-    failovers: u64,
-    replica_hits: u64,
-    degraded: u64,
-    write_fanouts: u64,
-    quorum_fails: u64,
-    joins: u64,
-    drains: u64,
-    rebalanced_keys: u64,
-    dropped_keys: u64,
-    dual_writes: u64,
-    backends: Vec<BackendInner>,
+    latency: Histogram,
 }
 
 /// Thread-shared router metrics sink.
 #[derive(Clone, Debug)]
 pub struct RouterMetrics {
-    inner: Arc<Mutex<Inner>>,
+    registry: Arc<Registry>,
+    requests: Arc<Counter>,
+    failures: Arc<Counter>,
+    fanouts: Arc<Counter>,
+    failovers: Arc<Counter>,
+    replica_hits: Arc<Counter>,
+    degraded: Arc<Counter>,
+    write_fanouts: Arc<Counter>,
+    quorum_fails: Arc<Counter>,
+    joins: Arc<Counter>,
+    drains: Arc<Counter>,
+    rebalanced_keys: Arc<Counter>,
+    dropped_keys: Arc<Counter>,
+    dual_writes: Arc<Counter>,
+    /// Aggregate backend-exchange latency across the whole fleet (the
+    /// per-backend split lives in the slots / `\x01stats` JSON; the
+    /// registry has no label dimension by design).
+    exchange: Arc<Histogram>,
+    backends: Arc<Mutex<Vec<BackendSlot>>>,
 }
 
 impl RouterMetrics {
     /// New sink for `nbackends` backends.
     pub fn new(nbackends: usize) -> Self {
+        let registry = Arc::new(Registry::new());
+        let c = |name: &str, help: &str| registry.counter(name, help);
         RouterMetrics {
-            inner: Arc::new(Mutex::new(Inner {
-                requests: 0,
-                failures: 0,
-                fanouts: 0,
-                failovers: 0,
-                replica_hits: 0,
-                degraded: 0,
-                write_fanouts: 0,
-                quorum_fails: 0,
-                joins: 0,
-                drains: 0,
-                rebalanced_keys: 0,
-                dropped_keys: 0,
-                dual_writes: 0,
-                backends: (0..nbackends)
-                    .map(|_| BackendInner::default())
-                    .collect(),
-            })),
+            requests: c("cft_router_requests_total", "queries answered"),
+            failures: c("cft_router_failures_total", "queries with no ok reply"),
+            fanouts: c("cft_router_fanouts_total", "queries scattered to >1 backend"),
+            failovers: c("cft_router_failovers_total", "sub-requests served off-owner"),
+            replica_hits: c(
+                "cft_router_replica_hits_total",
+                "sub-requests served by a replica chosen by load",
+            ),
+            degraded: c("cft_router_degraded_total", "merged replies missing a portion"),
+            write_fanouts: c("cft_router_write_fanouts_total", "broadcast write fan-outs"),
+            quorum_fails: c("cft_router_quorum_fails_total", "writes missing ack quorum"),
+            joins: c("cft_router_joins_total", "backends rebalanced into the ring"),
+            drains: c("cft_router_drains_total", "backends rebalanced out of the ring"),
+            rebalanced_keys: c(
+                "cft_router_rebalanced_keys_total",
+                "entity keys streamed by rebalances",
+            ),
+            dropped_keys: c(
+                "cft_router_dropped_keys_total",
+                "disowned keys reclaimed after rebalance",
+            ),
+            dual_writes: c(
+                "cft_router_dual_writes_total",
+                "writes dual-applied during a rebalance",
+            ),
+            exchange: registry.histogram(
+                "cft_router_backend_exchange_seconds",
+                "backend exchange round-trip latency, all backends",
+            ),
+            backends: Arc::new(Mutex::new(
+                (0..nbackends).map(|_| BackendSlot::default()).collect(),
+            )),
+            registry,
         }
+    }
+
+    /// The registry backing this sink — the router's `\x01metrics`
+    /// exposition renders it (plus point-in-time gauges).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
     }
 
     /// Record one completed `Router::query` (ok or not).
     pub fn record_query(&self, ok: bool) {
-        let mut m = self.inner.lock().unwrap();
-        m.requests += 1;
+        self.requests.inc();
         if !ok {
-            m.failures += 1;
+            self.failures.inc();
         }
     }
 
     /// Record a multi-backend fanned-out query.
     pub fn record_fanout(&self) {
-        self.inner.lock().unwrap().fanouts += 1;
+        self.fanouts.inc();
     }
 
     /// Record a sub-request served off-owner.
     pub fn record_failover(&self) {
-        self.inner.lock().unwrap().failovers += 1;
+        self.failovers.inc();
     }
 
     /// Record a sub-request served by a non-owner replica by load
     /// choice (replicated mode, nothing failed first).
     pub fn record_replica_hit(&self) {
-        self.inner.lock().unwrap().replica_hits += 1;
+        self.replica_hits.inc();
     }
 
     /// Record a merged reply with a missing portion.
     pub fn record_degraded(&self) {
-        self.inner.lock().unwrap().degraded += 1;
+        self.degraded.inc();
     }
 
     /// Record one broadcast write fan-out.
     pub fn record_write_fanout(&self) {
-        self.inner.lock().unwrap().write_fanouts += 1;
+        self.write_fanouts.inc();
     }
 
     /// Record a broadcast write that missed its ack quorum.
     pub fn record_quorum_fail(&self) {
-        self.inner.lock().unwrap().quorum_fails += 1;
+        self.quorum_fails.inc();
     }
 
     /// Record a completed `\x01join` rebalance: `keys` streamed to the
     /// warmed joiner.
     pub fn record_join(&self, keys: u64) {
-        let mut m = self.inner.lock().unwrap();
-        m.joins += 1;
-        m.rebalanced_keys += keys;
+        self.joins.inc();
+        self.rebalanced_keys.add(keys);
     }
 
     /// Record a completed `\x01drain` rebalance: `keys` handed off to
     /// their next-ranked owners.
     pub fn record_drain(&self, keys: u64) {
-        let mut m = self.inner.lock().unwrap();
-        m.drains += 1;
-        m.rebalanced_keys += keys;
+        self.drains.inc();
+        self.rebalanced_keys.add(keys);
     }
 
     /// Record disowned keys reclaimed by a post-rebalance drop pass.
     pub fn record_dropped_keys(&self, keys: u64) {
-        self.inner.lock().unwrap().dropped_keys += keys;
+        self.dropped_keys.add(keys);
     }
 
     /// Record a write dual-applied to the incoming epoch's replica set
     /// while a rebalance was in flight.
     pub fn record_dual_write(&self) {
-        self.inner.lock().unwrap().dual_writes += 1;
+        self.dual_writes.inc();
     }
 
     /// Grow the per-backend slots to `n` (a backend joined the ring;
     /// indexes are append-only on join, so existing slots keep their
     /// history).
     pub fn ensure_backends(&self, n: usize) {
-        let mut m = self.inner.lock().unwrap();
-        while m.backends.len() < n {
-            m.backends.push(BackendInner::default());
+        let mut slots = self.backends.lock().unwrap();
+        while slots.len() < n {
+            slots.push(BackendSlot::default());
         }
     }
 
@@ -281,9 +307,9 @@ impl RouterMetrics {
     /// handful of cross-attributed samples per drain is accepted
     /// rather than tagging every sample with a membership generation.
     pub fn remove_backend(&self, idx: usize) {
-        let mut m = self.inner.lock().unwrap();
-        if idx < m.backends.len() {
-            m.backends.remove(idx);
+        let mut slots = self.backends.lock().unwrap();
+        if idx < slots.len() {
+            slots.remove(idx);
         }
     }
 
@@ -294,13 +320,14 @@ impl RouterMetrics {
     /// [`remove_backend`](RouterMetrics::remove_backend)) that
     /// monitoring-grade sample beats panicking the query path.
     pub fn record_backend(&self, idx: usize, ok: bool, latency: Duration) {
-        let mut m = self.inner.lock().unwrap();
-        let Some(b) = m.backends.get_mut(idx) else { return };
+        self.exchange.record_duration(latency);
+        let mut slots = self.backends.lock().unwrap();
+        let Some(b) = slots.get_mut(idx) else { return };
         b.requests += 1;
         if !ok {
             b.failures += 1;
         }
-        b.latency.record(latency.as_secs_f64());
+        b.latency.record_duration(latency);
     }
 
     /// Snapshot against backend identities: `info[i]` is backend `i`'s
@@ -315,25 +342,24 @@ impl RouterMetrics {
         info: &[(String, bool)],
         ring_epoch: u64,
     ) -> RouterMetricsSnapshot {
-        let m = self.inner.lock().unwrap();
+        let slots = self.backends.lock().unwrap();
         RouterMetricsSnapshot {
-            requests: m.requests,
-            failures: m.failures,
-            fanouts: m.fanouts,
-            failovers: m.failovers,
-            replica_hits: m.replica_hits,
-            degraded: m.degraded,
-            write_fanouts: m.write_fanouts,
-            quorum_fails: m.quorum_fails,
-            joins: m.joins,
-            drains: m.drains,
-            rebalanced_keys: m.rebalanced_keys,
-            dropped_keys: m.dropped_keys,
-            dual_writes: m.dual_writes,
+            requests: self.requests.get(),
+            failures: self.failures.get(),
+            fanouts: self.fanouts.get(),
+            failovers: self.failovers.get(),
+            replica_hits: self.replica_hits.get(),
+            degraded: self.degraded.get(),
+            write_fanouts: self.write_fanouts.get(),
+            quorum_fails: self.quorum_fails.get(),
+            joins: self.joins.get(),
+            drains: self.drains.get(),
+            rebalanced_keys: self.rebalanced_keys.get(),
+            dropped_keys: self.dropped_keys.get(),
+            dual_writes: self.dual_writes.get(),
             deadlines_expired: 0,
             ring_epoch,
-            backends: m
-                .backends
+            backends: slots
                 .iter()
                 .zip(info)
                 .map(|(b, (addr, healthy))| BackendMetricsSnapshot {
@@ -473,5 +499,16 @@ mod tests {
             .map(|a| (a.to_string(), true))
             .collect();
         assert_eq!(m.snapshot(&longer, 2).backends.len(), 2);
+    }
+
+    #[test]
+    fn aggregate_exchange_histogram_feeds_the_registry() {
+        let m = RouterMetrics::new(1);
+        m.record_backend(0, true, Duration::from_millis(3));
+        // even an out-of-range slot index still lands in the aggregate
+        m.record_backend(9, true, Duration::from_millis(3));
+        let text = m.registry().render();
+        assert!(text.contains("# TYPE cft_router_backend_exchange_seconds histogram"));
+        assert!(text.contains("cft_router_backend_exchange_seconds_count 2"));
     }
 }

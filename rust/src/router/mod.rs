@@ -88,13 +88,16 @@ pub use ring::ShardRing;
 pub use scatter::Router;
 
 use std::net::{SocketAddr, TcpListener};
+use std::time::Duration;
 
-use crate::coordinator::tcp::{parse_control, ControlLine};
+use crate::coordinator::tcp::{parse_control, trace_reply, ControlLine};
 use crate::error::Result;
+use crate::obs::trace::{self, Stage};
 use crate::reactor::server::{
     serve_lines, Completion, LineService, ServerConfig, ServerHandle,
     ServerStats,
 };
+use crate::sync::time::Instant;
 use crate::sync::{mpsc, Arc, Mutex};
 use crate::util::json::Json;
 use crate::util::log;
@@ -144,7 +147,7 @@ pub fn serve_listener(
 ) -> Result<RouterServeHandle> {
     let local = listener.local_addr()?;
     let stats = Arc::new(ServerStats::default());
-    let (work_tx, work_rx) = mpsc::channel::<(String, Completion)>();
+    let (work_tx, work_rx) = mpsc::channel::<WorkLine>();
     let work_rx = Arc::new(Mutex::new(work_rx));
     let workers = (0..FRONT_DOOR_WORKERS)
         .map(|i| {
@@ -160,8 +163,10 @@ pub fn serve_listener(
                     loop {
                         let next = rx.lock().unwrap().recv();
                         match next {
-                            Ok((line, done)) => {
-                                let reply = dispatch(&r, &serving, &line);
+                            Ok(WorkLine { line, queued, enqueued, done }) => {
+                                let reply = dispatch(
+                                    &r, &serving, &line, queued, enqueued,
+                                );
                                 done.reply(reply.to_string());
                             }
                             Err(_) => break, // sender gone: shutting down
@@ -190,8 +195,20 @@ pub fn serve_listener(
 /// dispatch worker pool. Dropping it shuts both down.
 pub struct RouterServeHandle {
     inner: ServerHandle,
-    work_tx: Option<mpsc::Sender<(String, Completion)>>,
+    work_tx: Option<mpsc::Sender<WorkLine>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// One accepted line in flight from the reactor to the dispatch pool:
+/// the raw line, how long it sat buffered behind the connection's
+/// previous request (the `reactor_queue` span), when it was handed to
+/// the pool (start of the `dispatch_wait` span), and the completion
+/// that queues the reply back.
+struct WorkLine {
+    line: String,
+    queued: Duration,
+    enqueued: Instant,
+    done: Completion,
 }
 
 impl RouterServeHandle {
@@ -232,26 +249,43 @@ impl Drop for RouterServeHandle {
 /// dispatch pool (router dispatches block on backend IO, and the
 /// reactor thread must not).
 struct RouterService {
-    work: mpsc::Sender<(String, Completion)>,
+    work: mpsc::Sender<WorkLine>,
 }
 
 impl LineService for RouterService {
-    fn serve_line(&self, line: &str, done: Completion) {
-        if line == ":quit" {
+    fn serve_line(&self, line: &str, queued: Duration, done: Completion) {
+        // peel a `\x01t=` prefix only for the :quit check — the
+        // dispatch worker re-strips and adopts the trace id
+        if trace::strip_trace(line).1 == ":quit" {
             done.close();
             return;
         }
         // a failed send means shutdown is racing in; the moved-in
         // Completion drops with the error and answers `request dropped`
-        let _ = self.work.send((line.to_string(), done));
+        let _ = self.work.send(WorkLine {
+            line: line.to_string(),
+            queued,
+            enqueued: Instant::now(),
+            done,
+        });
     }
 }
 
 /// One front-door line to its reply — the same dispatch table as a
 /// coordinator's, with fleet-level handlers.
-fn dispatch(router: &Router, serving: &ServerStats, query: &str) -> Json {
+fn dispatch(
+    router: &Router,
+    serving: &ServerStats,
+    raw: &str,
+    queued: Duration,
+    enqueued: Instant,
+) -> Json {
+    let picked = Instant::now();
+    let (wire_trace, query) = trace::strip_trace(raw);
     match parse_control(query) {
         Some(Ok(ControlLine::Stats)) => stats_reply(router, serving),
+        Some(Ok(ControlLine::Trace { id })) => trace_reply(id),
+        Some(Ok(ControlLine::Metrics)) => metrics_reply(router),
         Some(Ok(ControlLine::Insert { tree, node, entity })) => {
             router.update(entity, tree, node)
         }
@@ -278,8 +312,75 @@ fn dispatch(router: &Router, serving: &ServerStats, query: &str) -> Json {
             ("ok", Json::Bool(false)),
             ("error", Json::Str(reason)),
         ]),
-        None => router.query(query),
+        None => {
+            // a query: adopt the wire trace (a traced client or an
+            // upstream door sampled it) or roll the local head sampler
+            let trace = if wire_trace.is_sampled() {
+                wire_trace
+            } else {
+                router.sampler().begin()
+            };
+            if trace.is_sampled() {
+                if !queued.is_zero() {
+                    trace::record(
+                        trace,
+                        Stage::ReactorQueue,
+                        0,
+                        picked,
+                        queued,
+                    );
+                }
+                trace::record(
+                    trace,
+                    Stage::DispatchWait,
+                    0,
+                    enqueued,
+                    picked.duration_since(enqueued),
+                );
+            }
+            let mut reply = router.query_traced(query, trace);
+            let total = enqueued.elapsed();
+            let slow = router.sampler().is_slow(total);
+            // slow queries always leave a trace: root-only when head
+            // sampling skipped this request (stage spans cannot be
+            // recorded retroactively)
+            let trace = if slow && !trace.is_sampled() {
+                trace::mint()
+            } else {
+                trace
+            };
+            trace::finish_root(
+                trace,
+                trace::DOOR_ROUTER,
+                enqueued,
+                total,
+                slow,
+            );
+            if slow {
+                trace::log_slow(trace::DOOR_ROUTER, trace, total, query);
+            }
+            if trace.is_sampled() {
+                if let Json::Obj(m) = &mut reply {
+                    m.insert("trace".into(), Json::Str(trace.to_hex()));
+                }
+            }
+            reply
+        }
     }
+}
+
+/// The router's `\x01metrics` reply: the unified registry in Prometheus
+/// text exposition format, wrapped as one JSON line (mirrors the
+/// coordinator door's shape, `docs/PROTOCOL.md`).
+fn metrics_reply(router: &Router) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "content_type",
+            Json::Str("text/plain; version=0.0.4".to_string()),
+        ),
+        ("text", Json::Str(router.metrics().registry().render())),
+    ])
 }
 
 /// The router's `\x01stats` payload: the metrics snapshot plus the
@@ -303,6 +404,21 @@ fn stats_reply(router: &Router, serving: &ServerStats) -> Json {
         m.insert(
             "idle_deadlines_expired".into(),
             Json::Num(serving.idle_deadlines_expired() as f64),
+        );
+        m.insert(
+            "uptime_s".into(),
+            Json::Num(router.uptime().as_secs_f64()),
+        );
+        m.insert(
+            "version".into(),
+            Json::Str(env!("CARGO_PKG_VERSION").to_string()),
+        );
+        m.insert(
+            "build_profile".into(),
+            Json::Str(
+                if cfg!(debug_assertions) { "debug" } else { "release" }
+                    .to_string(),
+            ),
         );
     }
     json

@@ -46,13 +46,15 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::io;
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::coordinator::tcp::{DELETE_REQUEST, INSERT_REQUEST};
 use crate::error::{CftError, Result};
 use crate::filter::fingerprint::entity_key;
 use crate::nlp::ner::GazetteerNer;
+use crate::obs::trace::{self, Sampler, Stage, TraceId};
 use crate::rag::config::RouterConfig;
+use crate::sync::time::Instant;
 use crate::reactor::client::{Exchange, NetDriver};
 use crate::router::backend::Backend;
 use crate::router::health::{EpochGate, HealthProber};
@@ -113,6 +115,12 @@ pub struct Router {
     /// Acks required per broadcast write (already resolved: `0` in the
     /// config means "all targets", resolved per write).
     write_quorum: usize,
+    /// Head sampler for distributed request tracing (`\x01t=` wire
+    /// propagation; `RouterConfig::trace_sample_every`).
+    sampler: Sampler,
+    /// Real wall clock (never the model-check shim): uptime is
+    /// operator-facing and stamped into `\x01stats`.
+    started: std::time::Instant,
     /// Serializes join/drain — one membership change at a time.
     rebalance_lock: Mutex<()>,
     /// The shared outbound reactor: every backend exchange — queries,
@@ -175,6 +183,11 @@ impl Router {
             max_attempts: cfg.max_attempts.max(1),
             replication: cfg.replication_factor,
             write_quorum: cfg.write_quorum,
+            sampler: Sampler::new(
+                cfg.trace_sample_every,
+                cfg.slow_query_threshold,
+            ),
+            started: std::time::Instant::now(),
             rebalance_lock: Mutex::new(()),
             driver,
             _prober: prober,
@@ -211,6 +224,17 @@ impl Router {
     /// Metrics sink handle.
     pub fn metrics(&self) -> &RouterMetrics {
         &self.metrics
+    }
+
+    /// The front door's trace head sampler (and slow-query threshold).
+    pub fn sampler(&self) -> &Sampler {
+        &self.sampler
+    }
+
+    /// Wall-clock time since this router was connected — the
+    /// `uptime_s` field of the `\x01stats` reply.
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
     }
 
     /// Front-door connection cap (`RouterConfig::max_connections`) —
@@ -295,8 +319,24 @@ impl Router {
     /// (`ok:false` only when every candidate backend for every portion
     /// failed).
     pub fn query(&self, query: &str) -> Json {
+        self.query_traced(query, TraceId::NONE)
+    }
+
+    /// [`Router::query`] carrying a request trace: a sampled `trace`
+    /// records the router-side stages (`ner`, per-backend `exchange`,
+    /// `merge`) and rides the wire to each backend as a `\x01t=` line
+    /// prefix, so one trace id names the whole fan-out tree.
+    pub fn query_traced(&self, query: &str, trace: TraceId) -> Json {
         let query = query.trim();
+        let ner_start = Instant::now();
         let entities = self.ner.recognize(query);
+        trace::record(
+            trace,
+            Stage::Ner,
+            entities.len() as u32,
+            ner_start,
+            ner_start.elapsed(),
+        );
         // one consistent membership snapshot per query: a concurrent
         // join/drain swaps the Arc, never mutates what we hold
         let state = self.membership.load();
@@ -320,19 +360,28 @@ impl Router {
 
         let reply = if groups.len() <= 1 {
             // single-set fast path: the whole query travels as-is
+            // (prefixed with the trace id when sampled, so the backend
+            // joins the same trace)
             let key = match groups.values().next() {
                 Some(ents) => entity_key(&ents[0]),
                 // no recognized entities: spread by query text so
                 // entity-free traffic still load-balances
                 None => fnv1a(query.as_bytes()),
             };
-            match self.send_with_failover(&state, key, query) {
+            let owned;
+            let line: &str = if trace.is_sampled() {
+                owned = trace::prefix_line(trace, query);
+                &owned
+            } else {
+                query
+            };
+            match self.send_with_failover(&state, key, line, trace) {
                 Ok((_, json)) => annotate(json, 1, false),
                 Err(e) => error_reply(&e),
             }
         } else {
             self.metrics.record_fanout();
-            self.scatter(&state, query, &groups)
+            self.scatter(&state, query, &groups, trace)
         };
         self.metrics
             .record_query(reply.get("ok") == Some(&Json::Bool(true)));
@@ -361,6 +410,7 @@ impl Router {
         state: &RingState,
         query: &str,
         groups: &BTreeMap<Vec<usize>, Vec<String>>,
+        trace: TraceId,
     ) -> Json {
         let mut walks: Vec<GroupWalk> = groups
             .values()
@@ -370,8 +420,15 @@ impl Router {
                 // " and ": the backend normalizes punctuation away, so
                 // the separator must be a word no entity name contains,
                 // or adjacent mentions could bridge into a spurious
-                // longer match.
-                let line = ents.join(" and ");
+                // longer match. A sampled trace prefixes every
+                // sub-request line, so the backends' span trees share
+                // this request's id.
+                let joined = ents.join(" and ");
+                let line = if trace.is_sampled() {
+                    trace::prefix_line(trace, &joined)
+                } else {
+                    joined
+                };
                 let key = entity_key(&ents[0]);
                 let (candidates, owner) = self.candidate_walk(state, key);
                 GroupWalk {
@@ -406,11 +463,19 @@ impl Router {
             if specs.is_empty() {
                 break;
             }
+            let round_start = Instant::now();
             let results = self.driver.exchange_many(specs);
             for (wi, (raw, elapsed)) in round.into_iter().zip(results) {
                 let w = &mut walks[wi];
                 let idx = w.candidates[w.attempt];
                 w.attempt += 1;
+                trace::record(
+                    trace,
+                    Stage::Exchange,
+                    idx as u32,
+                    round_start,
+                    elapsed,
+                );
                 let backend = &state.backends[idx];
                 match backend.finish_exchange(raw) {
                     Ok(json) => {
@@ -438,7 +503,16 @@ impl Router {
 
         let parts: Vec<Portion> =
             walks.into_iter().map(|w| (w.ents, w.outcome)).collect();
-        self.merge(query, parts)
+        let merge_start = Instant::now();
+        let reply = self.merge(query, parts);
+        trace::record(
+            trace,
+            Stage::Merge,
+            groups.len() as u32,
+            merge_start,
+            merge_start.elapsed(),
+        );
+        reply
     }
 
     /// The failover candidate order for `key`, truncated to
@@ -516,6 +590,7 @@ impl Router {
         state: &RingState,
         key: u64,
         line: &str,
+        trace: TraceId,
     ) -> std::result::Result<(usize, Json), SendFailure> {
         let backends = &state.backends;
         let (order, owner) = self.candidate_walk(state, key);
@@ -529,7 +604,15 @@ impl Router {
         };
         for idx in order {
             let t0 = Instant::now();
-            match backends[idx].request(line) {
+            let outcome = backends[idx].request(line);
+            trace::record(
+                trace,
+                Stage::Exchange,
+                idx as u32,
+                t0,
+                t0.elapsed(),
+            );
+            match outcome {
                 Ok(json) => {
                     let ok = json.get("ok") != Some(&Json::Bool(false));
                     self.metrics.record_backend(idx, ok, t0.elapsed());

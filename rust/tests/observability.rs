@@ -1,0 +1,357 @@
+//! End-to-end observability: request tracing across the router → backend
+//! TCP hop, the `\x01trace` span-tree export (including the ≥95%%
+//! wall-time coverage acceptance bar), the `\x01metrics` Prometheus
+//! text-exposition lint, wire compatibility for old-style peers, and a
+//! registry concurrency smoke over the `sync` shim primitives so the
+//! modelcheck scheduler can drive it too.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use cft_rag::coordinator::tcp::{serve_listener, ServeHandle};
+use cft_rag::coordinator::{Coordinator, CoordinatorConfig};
+use cft_rag::data::corpus::corpus_from_texts;
+use cft_rag::data::hospital::{HospitalConfig, HospitalDataset};
+use cft_rag::obs::registry::Registry;
+use cft_rag::obs::trace::{self, Stage, STAGES};
+use cft_rag::rag::config::{RagConfig, RouterConfig};
+use cft_rag::router::Router;
+use cft_rag::runtime::engine::{Engine, NativeEngine};
+use cft_rag::sync::Arc;
+use cft_rag::util::json::Json;
+
+/// One in-process backend: a coordinator behind a real TCP listener.
+struct TestBackend {
+    coordinator: Arc<Coordinator>,
+    handle: Option<ServeHandle>,
+    addr: String,
+}
+
+impl TestBackend {
+    fn start(ds: &HospitalDataset, cfg: RagConfig) -> TestBackend {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let forest = Arc::new(ds.build_forest());
+        let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+        let coordinator = Arc::new(
+            Coordinator::start(
+                forest,
+                corpus_from_texts(&ds.documents()),
+                engine,
+                cfg,
+                CoordinatorConfig { workers: 2, ..Default::default() },
+            )
+            .expect("backend coordinator"),
+        );
+        let handle = serve_listener(coordinator.clone(), listener)
+            .expect("backend listener");
+        let addr = handle.addr().to_string();
+        TestBackend { coordinator, handle: Some(handle), addr }
+    }
+
+    fn kill(&mut self) {
+        if let Some(h) = self.handle.take() {
+            h.shutdown();
+        }
+        self.coordinator.stop();
+    }
+}
+
+impl Drop for TestBackend {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+fn dataset() -> HospitalDataset {
+    HospitalDataset::generate(HospitalConfig {
+        trees: 4,
+        ..HospitalConfig::default()
+    })
+}
+
+/// One request/reply roundtrip on an already-open connection.
+fn roundtrip(conn: &mut BufReader<TcpStream>, line: &str) -> Json {
+    conn.get_mut()
+        .write_all(format!("{line}\n").as_bytes())
+        .expect("write request");
+    let mut reply = String::new();
+    conn.read_line(&mut reply).expect("read reply");
+    Json::parse(&reply).unwrap_or_else(|e| panic!("bad reply {reply:?}: {e}"))
+}
+
+fn connect(addr: &str) -> BufReader<TcpStream> {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    BufReader::new(s)
+}
+
+fn is_ok(reply: &Json) -> bool {
+    reply.get("ok") == Some(&Json::Bool(true))
+}
+
+/// A sampled trace id handed to the router must cross the TCP hop as a
+/// `\x01t=` line prefix and be adopted by the backend — provable
+/// because backend-side stages (batching, retrieval) can only land
+/// under this id if the backend learned it from the wire.
+#[test]
+fn trace_id_propagates_from_router_to_backend() {
+    let ds = dataset();
+    let backend =
+        TestBackend::start(&ds, RagConfig::default());
+    let names: Vec<String> = ds
+        .build_forest()
+        .interner()
+        .iter()
+        .map(|(_, n)| n.to_string())
+        .collect();
+    let router = Router::connect(
+        names.iter().map(String::as_str),
+        &RouterConfig {
+            probe_interval: Duration::ZERO,
+            ..RouterConfig::for_backends(vec![backend.addr.clone()])
+        },
+    )
+    .expect("router");
+
+    let trace = trace::mint();
+    let reply =
+        router.query_traced("what is the parent unit of cardiology", trace);
+    assert!(is_ok(&reply), "{reply}");
+
+    let stages: Vec<&str> =
+        trace::spans_for(trace).iter().map(|s| s.stage.name()).collect();
+    // router side of the hop
+    assert!(stages.contains(&Stage::Exchange.name()), "{stages:?}");
+    // backend side: only reachable through the wire prefix
+    assert!(stages.contains(&Stage::Retrieval.name()), "{stages:?}");
+    assert!(stages.contains(&Stage::EmbedSearch.name()), "{stages:?}");
+}
+
+/// The front-door acceptance bar: a traced query's span tree names
+/// every stage with non-negative durations and the union of its child
+/// spans covers ≥ 95%% of the front door's measured wall time.
+#[test]
+fn trace_export_names_stages_and_covers_wall_time() {
+    let ds = dataset();
+    let backend = TestBackend::start(
+        &ds,
+        RagConfig { trace_sample_every: 1, ..RagConfig::default() },
+    );
+    let mut conn = connect(&backend.addr);
+
+    let reply = roundtrip(&mut conn, "what is the parent unit of cardiology");
+    assert!(is_ok(&reply), "{reply}");
+    let id = reply
+        .get("trace")
+        .and_then(Json::as_str)
+        .expect("sampled reply carries its trace id")
+        .to_string();
+
+    let export = roundtrip(&mut conn, &format!("\x01trace {id}"));
+    assert!(is_ok(&export), "{export}");
+    let traces = export.get("traces").and_then(Json::as_arr).expect("traces");
+    assert_eq!(traces.len(), 1, "{export}");
+    let t = &traces[0];
+    assert_eq!(t.get("id").and_then(Json::as_str), Some(id.as_str()));
+    assert_eq!(t.get("door").and_then(Json::as_str), Some("coordinator"));
+
+    let known: Vec<&str> = STAGES.iter().map(|s| s.name()).collect();
+    let spans = t.get("spans").and_then(Json::as_arr).expect("spans");
+    assert!(!spans.is_empty(), "{export}");
+    for s in spans {
+        let stage = s.get("stage").and_then(Json::as_str).expect("stage");
+        assert!(known.contains(&stage), "unknown stage {stage}");
+        assert!(
+            s.get("dur_us").and_then(Json::as_f64).unwrap_or(-1.0) >= 0.0,
+            "negative duration: {s}"
+        );
+        assert!(
+            s.get("start_us").and_then(Json::as_f64).unwrap_or(-1.0) >= 0.0,
+            "span starts before its root: {s}"
+        );
+    }
+    // the tree must explain where the request's wall time went
+    let coverage =
+        t.get("coverage").and_then(Json::as_f64).expect("coverage");
+    assert!(
+        coverage >= 0.95,
+        "span tree covers {:.1}% of front-door wall time: {t}",
+        coverage * 100.0
+    );
+}
+
+/// `\x01metrics` must emit parseable Prometheus text exposition: every
+/// series typed, histogram buckets cumulative and `+Inf`-terminated,
+/// `_count` agreeing with the `+Inf` bucket.
+#[test]
+fn metrics_exposition_is_well_formed() {
+    let ds = dataset();
+    let backend = TestBackend::start(
+        &ds,
+        RagConfig { trace_sample_every: 1, ..RagConfig::default() },
+    );
+    let mut conn = connect(&backend.addr);
+    for _ in 0..3 {
+        assert!(is_ok(&roundtrip(
+            &mut conn,
+            "what is the parent unit of cardiology"
+        )));
+    }
+
+    let reply = roundtrip(&mut conn, "\x01metrics");
+    assert!(is_ok(&reply), "{reply}");
+    assert_eq!(
+        reply.get("content_type").and_then(Json::as_str),
+        Some("text/plain; version=0.0.4")
+    );
+    let text = reply.get("text").and_then(Json::as_str).expect("text");
+    assert!(text.contains("cft_coordinator_requests_total"), "{text}");
+
+    let mut typed: Vec<(String, String)> = Vec::new(); // (name, type)
+    let mut hist: std::collections::BTreeMap<String, (Vec<f64>, Vec<f64>)> =
+        std::collections::BTreeMap::new(); // name -> (les, counts)
+    let mut counts: std::collections::BTreeMap<String, f64> =
+        std::collections::BTreeMap::new();
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with("# HELP") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("typed name").to_string();
+            let kind = it.next().expect("type kind").to_string();
+            assert!(
+                ["counter", "gauge", "histogram"].contains(&kind.as_str()),
+                "{line}"
+            );
+            typed.push((name, kind));
+            continue;
+        }
+        // sample line: name[{labels}] value
+        let (series, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line {line}"));
+        let value: f64 = value
+            .parse()
+            .unwrap_or_else(|e| panic!("bad value in {line}: {e}"));
+        let (name, label) = match series.split_once('{') {
+            Some((n, l)) => (n, Some(l.trim_end_matches('}'))),
+            None => (series, None),
+        };
+        // every sample belongs to a typed family (suffixes fold back)
+        let family = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|f| typed.iter().any(|(n, k)| n == f && k == "histogram"))
+            .unwrap_or(name);
+        assert!(
+            typed.iter().any(|(n, _)| n == family),
+            "untyped series {name} in {line}"
+        );
+        if let Some(bucket) = name.strip_suffix("_bucket") {
+            let le = label
+                .and_then(|l| l.strip_prefix("le=\""))
+                .map(|l| l.trim_end_matches('"'))
+                .unwrap_or_else(|| panic!("bucket without le: {line}"));
+            let le = if le == "+Inf" {
+                f64::INFINITY
+            } else {
+                le.parse().unwrap_or_else(|e| panic!("bad le {le}: {e}"))
+            };
+            let entry = hist.entry(bucket.to_string()).or_default();
+            entry.0.push(le);
+            entry.1.push(value);
+        } else if let Some(base) = name.strip_suffix("_count") {
+            counts.insert(base.to_string(), value);
+        }
+    }
+    assert!(
+        typed.iter().any(|(_, k)| k == "histogram"),
+        "request latency histogram missing: {text}"
+    );
+    for (name, (les, bucket_counts)) in &hist {
+        assert_eq!(
+            les.last().copied(),
+            Some(f64::INFINITY),
+            "{name}: buckets must end at +Inf"
+        );
+        assert!(
+            les.windows(2).all(|w| w[0] < w[1]),
+            "{name}: le bounds must increase: {les:?}"
+        );
+        assert!(
+            bucket_counts.windows(2).all(|w| w[0] <= w[1]),
+            "{name}: buckets must be cumulative: {bucket_counts:?}"
+        );
+        assert_eq!(
+            counts.get(name).copied(),
+            bucket_counts.last().copied(),
+            "{name}: _count must equal the +Inf bucket"
+        );
+    }
+}
+
+/// Wire compatibility: peers that have never heard of tracing keep
+/// working — plain query lines, the unprefixed `\x01stats` verb, and
+/// the old reply shape (no `trace` field) when sampling is off; a
+/// malformed `\x01t=` prefix is rejected the way any unknown control
+/// verb always was.
+#[test]
+fn old_style_lines_still_parse() {
+    let ds = dataset();
+    let backend = TestBackend::start(&ds, RagConfig::default());
+    let mut conn = connect(&backend.addr);
+
+    let reply = roundtrip(&mut conn, "what is the parent unit of cardiology");
+    assert!(is_ok(&reply), "{reply}");
+    assert_eq!(reply.get("trace"), None, "unsampled replies stay old-shape");
+
+    let stats = roundtrip(&mut conn, "\x01stats");
+    assert!(is_ok(&stats), "{stats}");
+    for field in ["requests", "total_p99_s", "uptime_s", "version"] {
+        assert!(stats.get(field).is_some(), "{field} missing: {stats}");
+    }
+
+    // a mangled trace prefix (non-hex id) must NOT be half-understood:
+    // it falls through to the control parser as an unknown verb
+    let reply = roundtrip(&mut conn, "\x01t=nothexatall \x01stats");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply}");
+}
+
+/// The registry primitives under concurrent writers, built on the
+/// `sync` shim's thread spawn so the deterministic modelcheck
+/// scheduler can interleave it when the feature is on.
+#[test]
+fn registry_counters_and_histograms_under_concurrency() {
+    const THREADS: u64 = 4;
+    const PER_THREAD: u64 = 1000;
+    let registry = Arc::new(Registry::new());
+    let counter = registry.counter("smoke_total", "concurrency smoke");
+    let hist = registry.histogram("smoke_seconds", "concurrency smoke");
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let counter = Arc::clone(&counter);
+            let hist = Arc::clone(&hist);
+            cft_rag::sync::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    counter.inc();
+                    hist.record((t * PER_THREAD + i) as f64 * 1e-6);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("writer thread");
+    }
+
+    assert_eq!(counter.get(), THREADS * PER_THREAD);
+    assert_eq!(hist.count(), THREADS * PER_THREAD);
+    assert!(hist.sum() > 0.0);
+    let p99 = hist.quantile(0.99);
+    assert!(p99 > 0.0 && p99 <= hist.quantile(1.0) * 1.5 + 1e-9);
+    let text = registry.render();
+    assert!(text.contains("# TYPE smoke_total counter"), "{text}");
+    assert!(text.contains("smoke_seconds_bucket"), "{text}");
+}

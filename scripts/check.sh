@@ -3,6 +3,7 @@
 #
 #   scripts/check.sh                      # fmt + clippy + build + test
 #   scripts/check.sh --fast               # skip the release build
+#   scripts/check.sh --obs                # observability smoke (shipped binary)
 #   scripts/check.sh --analysis           # all deep-analysis jobs
 #   scripts/check.sh --analysis modelcheck|miri|tsan   # one job
 #
@@ -72,6 +73,72 @@ run_tsan() {
   RUSTFLAGS="-Z sanitizer=thread" \
     cargo +nightly test -p cft-rag -q -Z build-std --target "$host"
 }
+
+# --------------------------------------------------------------------
+# Observability smoke: boot one traced coordinator binary and prove,
+# over a real socket, that a sampled query reply carries its trace id,
+# `\x01trace <id>` answers a span tree (with the retrieval stage and a
+# coverage figure), and `\x01metrics` emits typed Prometheus text with
+# +Inf-terminated histograms. The deep assertions live in
+# rust/tests/observability.rs; this step proves the *shipped binary*
+# wires them up end to end. Run alone: scripts/check.sh --obs
+# --------------------------------------------------------------------
+run_obs() {
+  echo "==> obs smoke: traced serve + \\x01trace + \\x01metrics"
+  cargo build --release --quiet
+  local port="${OBS_SMOKE_PORT:-7917}"
+  target/release/cft-rag serve --port "$port" --trees 12 --workers 2 \
+    --trace-sample 1 &
+  local srv=$!
+  # shellcheck disable=SC2064  # expand $srv now: it is gone at trap time
+  trap "kill $srv 2>/dev/null || true; wait $srv 2>/dev/null || true" RETURN
+
+  local up=0
+  for _ in $(seq 1 100); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/$port") 2>/dev/null; then
+      up=1
+      break
+    fi
+    sleep 0.1
+  done
+  [[ "$up" == 1 ]] || { echo "obs smoke: server never came up"; return 1; }
+
+  exec 3<>"/dev/tcp/127.0.0.1/$port"
+  printf 'what is the parent unit of cardiology\n' >&3
+  local reply
+  read -r reply <&3
+  grep -q '"ok":true' <<<"$reply" \
+    || { echo "obs smoke: query failed: $reply"; return 1; }
+  local id
+  id=$(sed -n 's/.*"trace":"\([0-9a-f]*\)".*/\1/p' <<<"$reply")
+  [[ -n "$id" ]] \
+    || { echo "obs smoke: sampled reply carries no trace id: $reply"; return 1; }
+
+  printf '\x01trace %s\n' "$id" >&3
+  local trace
+  read -r trace <&3
+  for want in '"stage":"retrieval"' '"coverage":' "\"id\":\"$id\""; do
+    grep -qF "$want" <<<"$trace" \
+      || { echo "obs smoke: $want missing from trace export: $trace"; return 1; }
+  done
+
+  printf '\x01metrics\n' >&3
+  local metrics
+  read -r metrics <&3
+  for want in 'cft_coordinator_requests_total' '# TYPE' '+Inf' '_count'; do
+    grep -qF "$want" <<<"$metrics" \
+      || { echo "obs smoke: $want missing from metrics: $metrics"; return 1; }
+  done
+
+  printf ':quit\n' >&3
+  exec 3<&- 3>&-
+  echo "OK (obs smoke)"
+}
+
+if [[ "${1:-}" == "--obs" ]]; then
+  run_obs
+  exit 0
+fi
 
 if [[ "${1:-}" == "--analysis" ]]; then
   case "${2:-all}" in
