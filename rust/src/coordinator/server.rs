@@ -39,8 +39,10 @@ use crate::llm::cache::EmbedCache;
 use crate::llm::generator::Generator;
 use crate::llm::prompt::Prompt;
 use crate::nlp::ner::GazetteerNer;
+use crate::persist::{self, LogOp};
 use crate::rag::config::RagConfig;
 use crate::rag::pipeline::make_concurrent_retriever;
+use crate::util::log;
 use crate::retrieval::context::{generate_context, Context};
 use crate::retrieval::ConcurrentRetriever;
 use crate::runtime::engine::Engine;
@@ -168,6 +170,13 @@ pub struct Coordinator {
     /// Process start, for the `uptime_s` stats field (real wall clock
     /// on purpose — uptime is operator-facing, never model-checked).
     started: std::time::Instant,
+    /// Durable-state handle ([`RagConfig::data_dir`]): the op log every
+    /// acked `\x01insert`/`\x01delete` is appended to *before* its ack
+    /// is written, plus the snapshot machinery. `None` = volatile
+    /// backend. Behind a mutex because appends must serialize anyway
+    /// (one log file) and the ack path is already past the retriever's
+    /// shard locks when it gets here.
+    persist: Option<Mutex<persist::Store>>,
 }
 
 impl Coordinator {
@@ -321,17 +330,102 @@ impl Coordinator {
             );
         }
 
-        let partition_epoch = rag_cfg
-            .key_partition
-            .as_ref()
-            .map_or(0, |p| p.epoch());
+        // ---- durable-state recovery (--data-dir) ----
+        let mut key_partition = rag_cfg.key_partition;
+        let mut partition_epoch =
+            key_partition.as_ref().map_or(0, |p| p.epoch());
+        let persist = match &rag_cfg.data_dir {
+            None => None,
+            Some(dir) => {
+                let (store, recovery) = persist::Store::open(
+                    dir,
+                    rag_cfg.fsync_every,
+                    rag_cfg.snapshot_interval_ops,
+                )
+                .map_err(CftError::Io)?;
+                if let Some(snap) = &recovery.snapshot {
+                    // the snapshot is authoritative over the forest
+                    // build: entities deleted before it was cut must
+                    // stay deleted, so the index is replaced wholesale
+                    let restored = retriever
+                        .restore_index(&snap.entries)
+                        .ok_or_else(|| {
+                            CftError::Config(format!(
+                                "{} cannot restore a snapshot index",
+                                retriever.name()
+                            ))
+                        })?;
+                    log::info!(
+                        "restored {restored} entries from {} (epoch {})",
+                        dir.join(persist::SNAPSHOT_FILE).display(),
+                        snap.partition_epoch
+                    );
+                }
+                let mut replayed = 0usize;
+                for op in &recovery.ops {
+                    match op {
+                        LogOp::Insert { entity, addr } => {
+                            // every logged op was validated + acked
+                            // before the crash; re-apply is idempotent
+                            // and skips keys the configured partition no
+                            // longer owns. Bounds are re-checked because
+                            // a data dir paired with a different corpus
+                            // must not plant addresses retrieval would
+                            // panic on.
+                            let in_forest = forest
+                                .trees()
+                                .get(addr.tree as usize)
+                                .is_some_and(|t| {
+                                    (addr.node as usize) < t.len()
+                                });
+                            if in_forest {
+                                retriever.insert_occurrence(entity, *addr);
+                                replayed += 1;
+                            } else {
+                                log::warn!(
+                                    "op-log insert of {entity:?} at \
+                                     ({}, {}) is outside this forest; \
+                                     skipped (corpus changed?)",
+                                    addr.tree,
+                                    addr.node
+                                );
+                            }
+                        }
+                        LogOp::Delete { entity } => {
+                            retriever.remove_entity_concurrent(entity);
+                            replayed += 1;
+                        }
+                        LogOp::Epoch(_) => {}
+                    }
+                }
+                if replayed > 0 || recovery.truncated_bytes > 0 {
+                    log::info!(
+                        "replayed {replayed} op(s) from {} ({} torn \
+                         byte(s) truncated)",
+                        dir.join(persist::OPLOG_FILE).display(),
+                        recovery.truncated_bytes
+                    );
+                }
+                if let Some(epoch) = recovery.recorded_epoch() {
+                    // re-admit at the recorded membership epoch: the
+                    // configured partition supplies the membership, the
+                    // recovery supplies the epoch this backend last
+                    // acked — what the router's EpochGate checks
+                    key_partition =
+                        key_partition.map(|p| p.with_epoch(epoch));
+                    partition_epoch = epoch;
+                }
+                Some(Mutex::new(store))
+            }
+        };
+
         Ok(Coordinator {
             submit_tx: Mutex::new(Some(submit_tx)),
             metrics,
             threads: Mutex::new(threads),
             forest,
             retriever,
-            partition: std::sync::RwLock::new(rag_cfg.key_partition),
+            partition: std::sync::RwLock::new(key_partition),
             partition_epoch: std::sync::atomic::AtomicU64::new(
                 partition_epoch,
             ),
@@ -342,6 +436,7 @@ impl Coordinator {
                 rag_cfg.slow_query_threshold,
             ),
             started: std::time::Instant::now(),
+            persist,
         })
     }
 
@@ -496,11 +591,23 @@ impl Coordinator {
                 )));
             }
         }
-        match self
-            .retriever
-            .insert_occurrence(entity, crate::forest::EntityAddress::new(tree, node))
-        {
-            Some(applied) => Ok(applied),
+        let addr = crate::forest::EntityAddress::new(tree, node);
+        match self.retriever.insert_occurrence(entity, addr) {
+            Some(applied) => {
+                if applied {
+                    // ack-after-durable: the log record is fsynced (at
+                    // --fsync-every 1) before this returns, and a log
+                    // failure propagates as an error so the client is
+                    // never acked for a write that would not survive a
+                    // crash. An idempotent no-op retry changes nothing
+                    // and is not logged.
+                    self.append_durable(&LogOp::Insert {
+                        entity: entity.to_string(),
+                        addr,
+                    })?;
+                }
+                Ok(applied)
+            }
             None => Err(CftError::Config(format!(
                 "{} does not support dynamic point updates",
                 self.retriever.name()
@@ -516,7 +623,16 @@ impl Coordinator {
     /// updates at all.
     pub fn remove_entity(&self, entity: &str) -> Result<bool> {
         match self.retriever.remove_entity_concurrent(entity) {
-            Some(existed) => Ok(existed),
+            Some(existed) => {
+                if existed {
+                    // durable before ack, same contract as inserts — a
+                    // crash after this ack must not resurrect the entity
+                    self.append_durable(&LogOp::Delete {
+                        entity: entity.to_string(),
+                    })?;
+                }
+                Ok(existed)
+            }
             None => Err(CftError::Config(format!(
                 "{} does not support dynamic point updates",
                 self.retriever.name()
@@ -560,6 +676,9 @@ impl Coordinator {
         *self.partition.write().unwrap() = partition;
         self.partition_epoch
             .store(epoch, std::sync::atomic::Ordering::Release);
+        // Record the epoch the backend now serves, so a warm restart
+        // re-admits at this epoch instead of the stale snapshot one.
+        self.append_durable(&LogOp::Epoch(epoch))?;
         Ok(())
     }
 
@@ -584,6 +703,67 @@ impl Coordinator {
     pub fn partition_epoch(&self) -> u64 {
         self.partition_epoch
             .load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    /// Append one op to the durability log (no-op on a volatile
+    /// backend). The record is durable when this returns (at
+    /// `--fsync-every 1`); an I/O failure propagates so the caller
+    /// never acks a write the disk did not take — the index may then be
+    /// ahead of the log, which is safe (a replayed retry dedups) while
+    /// the reverse would lose data. Also cuts an automatic snapshot
+    /// when `--snapshot-interval-ops` says the log has grown enough.
+    fn append_durable(&self, op: &LogOp) -> Result<()> {
+        let Some(persist) = &self.persist else { return Ok(()) };
+        let mut store = persist.lock().unwrap();
+        store.record(op).map_err(|e| {
+            CftError::Coordinator(format!(
+                "durability log append failed (write NOT acked): {e}"
+            ))
+        })?;
+        if store.should_snapshot() {
+            // inline on the ack path by design: the interval amortizes
+            // the pause, and a snapshot folding the log keeps replay
+            // O(interval) instead of O(all ops since boot)
+            self.snapshot_locked(&mut store)?;
+        }
+        Ok(())
+    }
+
+    /// Cut a snapshot into an already-locked store: export the live
+    /// index, write it atomically at the current epoch, truncate the
+    /// op log. Returns the number of entries captured.
+    fn snapshot_locked(&self, store: &mut persist::Store) -> Result<usize> {
+        let entries = self.retriever.export_index().ok_or_else(|| {
+            CftError::Config(format!(
+                "{} cannot export its index for snapshotting",
+                self.retriever.name()
+            ))
+        })?;
+        let n = entries.len();
+        store
+            .write_snapshot(self.partition_epoch(), entries)
+            .map_err(|e| {
+                CftError::Coordinator(format!("snapshot write failed: {e}"))
+            })?;
+        Ok(n)
+    }
+
+    /// Cut a snapshot now (the `\x01snapshot` control line). Returns
+    /// the number of entries captured; errors on a volatile backend
+    /// (no `--data-dir`) or when the retriever cannot export.
+    pub fn trigger_snapshot(&self) -> Result<usize> {
+        let Some(persist) = &self.persist else {
+            return Err(CftError::Config(
+                "no --data-dir configured; nothing to snapshot into".into(),
+            ));
+        };
+        let mut store = persist.lock().unwrap();
+        self.snapshot_locked(&mut store)
+    }
+
+    /// Durability counters for `\x01stats` (`None` = volatile backend).
+    pub fn durability(&self) -> Option<persist::DurabilityCounters> {
+        self.persist.as_ref().map(|p| p.lock().unwrap().counters())
     }
 
     /// Approximate heap bytes of the serving index — a key-partitioned
@@ -619,10 +799,22 @@ impl Coordinator {
     /// queue lets the batcher finish what was admitted, then exit).
     pub fn stop(&self) {
         // close the queue; batcher exits, then workers, then maintainer
-        self.submit_tx.lock().unwrap().take();
+        let was_running = self.submit_tx.lock().unwrap().take().is_some();
         let mut threads = self.threads.lock().unwrap();
         for t in threads.drain(..) {
             let _ = t.join();
+        }
+        drop(threads);
+        if was_running {
+            // graceful shutdown cuts a final snapshot (once — the
+            // idempotent re-entry path skips it), so the next boot
+            // restores from the snapshot alone with an empty log
+            if let Some(persist) = &self.persist {
+                let mut store = persist.lock().unwrap();
+                if let Err(e) = self.snapshot_locked(&mut store) {
+                    log::warn!("shutdown snapshot failed: {e}");
+                }
+            }
         }
     }
 
@@ -1058,6 +1250,92 @@ mod tests {
         c.set_partition(None, 4).unwrap();
         assert_eq!(c.partition_epoch(), 4);
         assert_eq!(c.drop_disowned().unwrap(), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn warm_restart_recovers_acked_ops_and_epoch() {
+        let ds = HospitalDataset::generate(HospitalConfig {
+            trees: 6,
+            ..HospitalConfig::default()
+        });
+        let forest = Arc::new(ds.build_forest());
+        let docs = corpus_from_texts(&ds.documents());
+        let dir = std::env::temp_dir()
+            .join(format!("cft-coord-warm-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = RagConfig {
+            data_dir: Some(dir.clone()),
+            ..RagConfig::default()
+        };
+        let start = || {
+            Coordinator::start(
+                forest.clone(),
+                docs.clone(),
+                Arc::new(NativeEngine::new()),
+                cfg.clone(),
+                CoordinatorConfig { workers: 1, ..Default::default() },
+            )
+            .unwrap()
+        };
+        let addr = forest
+            .entity_id("cardiology")
+            .map(|id| forest.scan_addresses(id)[0])
+            .expect("cardiology in the hospital forest");
+
+        // boot 1: ack a delete and an insert, then "crash" (drop
+        // without stop — no shutdown snapshot, so boot 2 exercises the
+        // log-replay-only path)
+        {
+            let c = start();
+            assert!(c.remove_entity("oncology").unwrap());
+            assert!(c.remove_entity("cardiology").unwrap());
+            assert!(c
+                .update_entity("cardiology", addr.tree, addr.node)
+                .unwrap());
+            let d = c.durability().expect("persistent backend");
+            assert_eq!(d.log_records_appended, 3);
+            assert!(d.log_fsyncs >= 3, "fsync_every=1 syncs per ack");
+            assert!(!d.snapshot_loaded);
+        }
+
+        // boot 2: log replay only — acked delete stays deleted, acked
+        // re-insert survives
+        {
+            let c = start();
+            let d = c.durability().unwrap();
+            assert_eq!(d.log_replayed, 3);
+            assert!(!d.snapshot_loaded);
+            assert!(c.dump_entity("oncology").is_empty(), "resurrected");
+            assert_eq!(c.dump_entity("cardiology"), vec![addr]);
+            // record an epoch, then stop gracefully → final snapshot
+            c.set_partition(None, 5).unwrap();
+            c.stop();
+        }
+
+        // boot 3: snapshot restore (log folded in), recorded epoch wins
+        {
+            let c = start();
+            let d = c.durability().unwrap();
+            assert!(d.snapshot_loaded, "shutdown snapshot must load");
+            assert_eq!(d.log_replayed, 0, "log was folded into snapshot");
+            assert_eq!(c.partition_epoch(), 5, "recorded epoch re-admits");
+            assert!(c.dump_entity("oncology").is_empty());
+            assert_eq!(c.dump_entity("cardiology"), vec![addr]);
+            // on-demand snapshot works and counts
+            assert!(c.trigger_snapshot().unwrap() > 0);
+            assert_eq!(c.durability().unwrap().snapshots_written, 1);
+            c.stop();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn volatile_backend_has_no_durability_surface() {
+        let c = start_coordinator();
+        assert!(c.durability().is_none());
+        let err = c.trigger_snapshot().expect_err("no data dir");
+        assert!(err.to_string().contains("data-dir"), "{err}");
         c.shutdown();
     }
 

@@ -106,6 +106,12 @@ pub const REPARTITION_REQUEST: &str = "\x01repartition";
 /// owns. See `docs/PROTOCOL.md`.
 pub const PURGE_REQUEST: &str = "\x01purge";
 
+/// Control-line verb cutting a durability snapshot now: `\x01snapshot`
+/// exports the live index into `<data-dir>/snapshot.cft` (atomic
+/// write) and truncates the op log. Errors on a backend started
+/// without `--data-dir`. See `docs/PROTOCOL.md`.
+pub const SNAPSHOT_REQUEST: &str = "\x01snapshot";
+
 /// Router front-door verb: `\x01join <addr>` rebalances a new backend
 /// into the serving ring. Backends reject it. See `docs/PROTOCOL.md`.
 pub const JOIN_REQUEST: &str = "\x01join";
@@ -148,6 +154,9 @@ pub enum ControlLine<'a> {
     },
     /// `\x01purge` — drop every key the current partition disowns.
     Purge,
+    /// `\x01snapshot` — cut a durability snapshot now (requires
+    /// `--data-dir`).
+    Snapshot,
     /// `\x01join <addr>` — router front door: rebalance a backend in.
     Join { addr: &'a str },
     /// `\x01drain <addr>` — router front door: rebalance a backend out.
@@ -220,6 +229,8 @@ pub fn parse_control(
         }
         "purge" if rest.is_empty() => Ok(ControlLine::Purge),
         "purge" => Err("\\x01purge takes no arguments".into()),
+        "snapshot" if rest.is_empty() => Ok(ControlLine::Snapshot),
+        "snapshot" => Err("\\x01snapshot takes no arguments".into()),
         "join" if !rest.is_empty() => Ok(ControlLine::Join { addr: rest }),
         "join" => Err("\\x01join wants: <addr>".into()),
         "drain" if !rest.is_empty() => Ok(ControlLine::Drain { addr: rest }),
@@ -349,6 +360,7 @@ impl LineService for CoordinatorService {
                 backends,
             })) => repartition_reply(c, epoch, replicas, index, backends),
             Some(Ok(ControlLine::Purge)) => purge_reply(c),
+            Some(Ok(ControlLine::Snapshot)) => snapshot_reply(c),
             Some(Ok(
                 ControlLine::Join { .. } | ControlLine::Drain { .. },
             )) => Json::obj(vec![
@@ -476,6 +488,32 @@ fn stats_reply(coordinator: &Coordinator, serving: &ServerStats) -> Json {
         if let Some(telemetry) = coordinator.filter_telemetry() {
             m.insert("filter".into(), telemetry.to_json());
         }
+        if let Some(d) = coordinator.durability() {
+            m.insert(
+                "durability".into(),
+                Json::obj(vec![
+                    (
+                        "log_records_appended",
+                        Json::Num(d.log_records_appended as f64),
+                    ),
+                    ("log_fsyncs", Json::Num(d.log_fsyncs as f64)),
+                    ("log_replayed", Json::Num(d.log_replayed as f64)),
+                    (
+                        "log_truncated_bytes",
+                        Json::Num(d.log_truncated_bytes as f64),
+                    ),
+                    (
+                        "snapshots_written",
+                        Json::Num(d.snapshots_written as f64),
+                    ),
+                    ("snapshot_loaded", Json::Bool(d.snapshot_loaded)),
+                    (
+                        "ops_since_snapshot",
+                        Json::Num(d.ops_since_snapshot as f64),
+                    ),
+                ]),
+            );
+        }
     }
     json
 }
@@ -572,6 +610,26 @@ fn repartition_reply(
             ("ok", Json::Bool(true)),
             ("partition_epoch", Json::Num(epoch as f64)),
             ("replicas", Json::Num(replicas as f64)),
+        ]),
+        Err(e) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str(e.to_string())),
+        ]),
+    }
+}
+
+/// The `\x01snapshot` reply: how many live entries the snapshot
+/// captured (the op log is truncated alongside — its records are now
+/// folded into the snapshot).
+fn snapshot_reply(coordinator: &Coordinator) -> Json {
+    match coordinator.trigger_snapshot() {
+        Ok(n) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("entries", Json::Num(n as f64)),
+            (
+                "partition_epoch",
+                Json::Num(coordinator.partition_epoch() as f64),
+            ),
         ]),
         Err(e) => Json::obj(vec![
             ("ok", Json::Bool(false)),
@@ -854,6 +912,10 @@ mod tests {
         );
         assert_eq!(parse_control("\x01purge"), Some(Ok(ControlLine::Purge)));
         assert_eq!(
+            parse_control("\x01snapshot"),
+            Some(Ok(ControlLine::Snapshot))
+        );
+        assert_eq!(
             parse_control("\x01join 127.0.0.1:7184"),
             Some(Ok(ControlLine::Join { addr: "127.0.0.1:7184" }))
         );
@@ -886,6 +948,7 @@ mod tests {
             "\x01repartition x 1 0 a:1",
             "\x01repartition 1 1 0",
             "\x01purge now",
+            "\x01snapshot now",
             "\x01join",
             "\x01drain",
             "\x01launch missiles",
@@ -953,6 +1016,84 @@ mod tests {
         // join is a router verb: backends refuse it
         let join = next();
         assert_eq!(join.get("ok"), Some(&Json::Bool(false)), "{join}");
+    }
+
+    #[test]
+    fn snapshot_line_and_durability_stats_over_tcp() {
+        let dir = std::env::temp_dir()
+            .join(format!("cft-tcp-snap-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let handle = served(coordinator_with(RagConfig {
+            data_dir: Some(dir.clone()),
+            ..RagConfig::default()
+        }));
+        let mut client = TcpStream::connect(handle.addr()).unwrap();
+        client
+            .write_all(
+                b"\x01delete cardiology\n\x01stats\n\x01snapshot\n\
+                  \x01stats\n:quit\n",
+            )
+            .unwrap();
+        let mut reader = BufReader::new(client);
+        let mut next = || {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(line.trim()).expect("reply is JSON")
+        };
+        let del = next();
+        assert_eq!(del.get("ok"), Some(&Json::Bool(true)), "{del}");
+        // the acked delete shows up in the durability counters
+        let stats = next();
+        let d = stats.get("durability").expect("durability object");
+        assert_eq!(
+            d.get("log_records_appended").and_then(Json::as_f64),
+            Some(1.0),
+            "{stats}"
+        );
+        assert!(
+            d.get("log_fsyncs").and_then(Json::as_f64) >= Some(1.0),
+            "fsync-per-ack at the default --fsync-every 1: {stats}"
+        );
+        // snapshot folds the log and reports the entry count
+        let snap = next();
+        assert_eq!(snap.get("ok"), Some(&Json::Bool(true)), "{snap}");
+        assert!(
+            snap.get("entries").and_then(Json::as_f64) > Some(0.0),
+            "{snap}"
+        );
+        let stats = next();
+        let d = stats.get("durability").expect("durability object");
+        assert_eq!(
+            d.get("snapshots_written").and_then(Json::as_f64),
+            Some(1.0),
+            "{stats}"
+        );
+        assert_eq!(
+            d.get("ops_since_snapshot").and_then(Json::as_f64),
+            Some(0.0),
+            "{stats}"
+        );
+        assert!(dir.join(crate::persist::SNAPSHOT_FILE).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_line_errors_without_data_dir() {
+        let handle = served(coordinator());
+        let mut client = TcpStream::connect(handle.addr()).unwrap();
+        client.write_all(b"\x01snapshot\n:quit\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(client).read_line(&mut line).unwrap();
+        let reply = Json::parse(line.trim()).unwrap();
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply}");
+        assert!(
+            reply
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap()
+                .contains("data-dir"),
+            "{reply}"
+        );
     }
 
     #[test]

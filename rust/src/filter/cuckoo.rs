@@ -1222,6 +1222,83 @@ impl CuckooFilter {
         count(&self.table)
             + self.migration.as_ref().map_or(0, |m| count(&m.target))
     }
+
+    // ---------------------------------------------------------------
+    // Persistence (snapshot export / restore)
+    // ---------------------------------------------------------------
+
+    /// Export every live entry as `(key, temperature, addresses)` — the
+    /// exact state a snapshot must capture. Iterates the migration
+    /// target first (entries mid-doubling live there), then the main
+    /// table; each present entry appears exactly once because a
+    /// migration step removes from one generation as it places in the
+    /// other.
+    pub fn export_entries(&self) -> Vec<(u64, u32, Vec<EntityAddress>)> {
+        let mut out = Vec::with_capacity(self.len);
+        let mut collect = |t: &Table| {
+            for s in 0..t.fps.len() {
+                if t.fps[s] != 0 {
+                    out.push((
+                        t.keys[s],
+                        t.temps[s].load(Relaxed),
+                        self.arena.iter(t.heads[s]).collect(),
+                    ));
+                }
+            }
+        };
+        if let Some(m) = &self.migration {
+            collect(&m.target);
+        }
+        collect(&self.table);
+        out
+    }
+
+    /// Drop every entry and any in-flight migration, returning the
+    /// filter to its freshly-constructed geometry. Restore path: a
+    /// loaded snapshot is authoritative, so the forest-built index is
+    /// cleared before its entries are re-placed.
+    pub fn clear(&mut self) {
+        let nbuckets = self.cfg.initial_buckets.next_power_of_two().max(1);
+        self.table = Table::new(nbuckets, self.cfg.slots);
+        self.migration = None;
+        self.arena = BlockArena::new();
+        self.len = 0;
+    }
+
+    /// Overwrite the stored temperature of an exact-matched key.
+    /// Restore path only: recovers snapshot temperatures without
+    /// replaying the lookups that earned them.
+    pub fn set_temperature(&mut self, key: u64, temp: u32) -> bool {
+        let Some(loc) = self.find_exact_loc(key) else {
+            return false;
+        };
+        let (t, s): (&mut Table, usize) = match loc {
+            Loc::Main(s) => (&mut self.table, s),
+            Loc::Target(s) => {
+                (&mut self.migration.as_mut().expect("migration").target, s)
+            }
+        };
+        *t.temps[s].get_mut() = temp;
+        *t.dirty[s / t.slots].get_mut() = true;
+        true
+    }
+
+    /// Re-place one snapshot entry: key + full address list + recorded
+    /// temperature. Replaces any existing entry for the key (restore is
+    /// idempotent). Returns whether the entry is present afterwards —
+    /// `false` only if placement failed outright.
+    pub fn restore_entry(
+        &mut self,
+        key: u64,
+        temp: u32,
+        addrs: &[EntityAddress],
+    ) -> bool {
+        self.delete(key);
+        if !self.insert(key, addrs) {
+            return false;
+        }
+        self.set_temperature(key, temp)
+    }
 }
 
 #[cfg(test)]
@@ -1740,5 +1817,70 @@ mod tests {
             "incremental migration is the default; 0 is the monolithic opt-out"
         );
         assert!(crate::filter::blocklist::BLOCK_CAP >= 4);
+    }
+
+    #[test]
+    fn export_restore_preserves_membership_addresses_and_temps() {
+        let mut cf = CuckooFilter::default();
+        for i in 0..200u64 {
+            assert!(cf.insert(key(i), &addrs((i % 5 + 1) as u32)));
+            cf.set_temperature(key(i), i as u32 * 3);
+        }
+        let mut exported = cf.export_entries();
+        assert_eq!(exported.len(), 200);
+        let mut restored = CuckooFilter::default();
+        for (k, t, a) in &exported {
+            assert!(restored.restore_entry(*k, *t, a));
+        }
+        assert_eq!(restored.len(), 200);
+        let mut back = restored.export_entries();
+        exported.sort();
+        back.sort();
+        assert_eq!(exported, back);
+        assert_eq!(restored.temperature(key(7)), Some(21));
+    }
+
+    #[test]
+    fn export_covers_both_generations_mid_migration() {
+        let mut cfg = CuckooConfig::default();
+        cfg.initial_buckets = 2;
+        cfg.migration_step_buckets = 1;
+        let mut cf = CuckooFilter::new(cfg);
+        let mut n = 0u64;
+        while !cf.migration_pending() {
+            cf.insert(key(n), &addrs(1));
+            n += 1;
+        }
+        assert!(cf.migration_pending(), "doubling must be in flight");
+        let exported = cf.export_entries();
+        assert_eq!(exported.len(), cf.len(), "every entry exactly once");
+        let keys: std::collections::HashSet<u64> =
+            exported.iter().map(|(k, _, _)| *k).collect();
+        assert_eq!(keys.len(), exported.len(), "no duplicates across gens");
+    }
+
+    #[test]
+    fn clear_resets_to_fresh_geometry() {
+        let mut cf = CuckooFilter::default();
+        for i in 0..500u64 {
+            cf.insert(key(i), &addrs(3));
+        }
+        cf.clear();
+        assert!(cf.is_empty());
+        assert!(!cf.migration_pending());
+        assert!(!cf.contains(key(1)));
+        assert!(cf.insert(key(1), &addrs(2)), "usable after clear");
+    }
+
+    #[test]
+    fn restore_entry_is_idempotent() {
+        let mut cf = CuckooFilter::default();
+        let a = addrs(4);
+        assert!(cf.restore_entry(key(9), 11, &a));
+        assert!(cf.restore_entry(key(9), 12, &a), "re-restore replaces");
+        assert_eq!(cf.occurrences(key(9)), 1);
+        assert_eq!(cf.temperature(key(9)), Some(12));
+        let hit = cf.lookup(key(9)).expect("hit");
+        assert_eq!(cf.addresses(hit), a);
     }
 }

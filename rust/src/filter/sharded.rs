@@ -265,6 +265,38 @@ impl ShardedCuckooFilter {
         self.shard(key).read().unwrap().temperature(key)
     }
 
+    /// Export every live entry across all shards as `(key, temperature,
+    /// addresses)` — the snapshot image. Takes each shard's read lock in
+    /// turn, so the export is per-shard consistent (the snapshot's
+    /// global cut point is the op-log position, not this scan).
+    pub fn export_entries(&self) -> Vec<(u64, u32, Vec<EntityAddress>)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.read().unwrap().export_entries());
+        }
+        out
+    }
+
+    /// Drop every entry in every shard (restore path: a loaded snapshot
+    /// is authoritative, so the forest-built index is cleared first).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            shard.write().unwrap().clear();
+        }
+    }
+
+    /// Re-place one snapshot entry in its shard (write lock); replaces
+    /// any existing entry for the key. See
+    /// [`CuckooFilter::restore_entry`].
+    pub fn restore_entry(
+        &self,
+        key: u64,
+        temp: u32,
+        addrs: &[EntityAddress],
+    ) -> bool {
+        self.shard(key).write().unwrap().restore_entry(key, temp, addrs)
+    }
+
     /// Position of the key's slot within its bucket (test/bench helper;
     /// shard read lock).
     pub fn bucket_position(&self, key: u64) -> Option<usize> {
@@ -671,5 +703,29 @@ mod tests {
         cf.maintain();
         assert!(!cf.any_migration_pending());
         assert_eq!(cf.len(), n as usize);
+    }
+
+    #[test]
+    fn export_clear_restore_roundtrips_across_shards() {
+        let cf = ShardedCuckooFilter::new(CuckooConfig::default(), 4);
+        for i in 0..250u64 {
+            assert!(cf.insert(key(i), &addrs((i % 3 + 1) as u32)));
+        }
+        let mut exported = cf.export_entries();
+        assert_eq!(exported.len(), 250);
+        cf.clear();
+        assert!(cf.is_empty());
+        for (k, t, a) in &exported {
+            assert!(cf.restore_entry(*k, *t, a));
+        }
+        assert_eq!(cf.len(), 250);
+        let mut back = cf.export_entries();
+        exported.sort();
+        back.sort();
+        assert_eq!(exported, back);
+        assert_eq!(
+            cf.lookup_collect(key(5)).as_deref(),
+            Some(&addrs(3)[..])
+        );
     }
 }

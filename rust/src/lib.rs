@@ -43,6 +43,7 @@ pub mod text;
 pub mod nlp;
 pub mod forest;
 pub mod filter;
+pub mod persist;
 pub mod retrieval;
 pub mod data;
 pub mod error;

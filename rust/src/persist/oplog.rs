@@ -1,0 +1,435 @@
+//! Append-only log of acknowledged dynamic-update ops, with per-record
+//! CRC and fsync-on-ack batching.
+//!
+//! Every `\x01insert` / `\x01delete` the coordinator acknowledges is
+//! first appended here; with `fsync_every = 1` (the default) the record
+//! is fsynced before the append returns, so **an acked write is a
+//! durable write**. A `\x01repartition` additionally appends an `Epoch`
+//! record, which is how a warm restart knows which membership epoch it
+//! last served.
+//!
+//! Record layout (little-endian):
+//!
+//! ```text
+//! len   u32   body length in bytes
+//! crc   u32   CRC-32 of the body
+//! body  len B op tag (u8) + op-specific payload
+//! ```
+//!
+//! ## Torn-tail policy (replay)
+//!
+//! A SIGKILL or power cut can leave a partial record at the end of the
+//! file. Replay distinguishes two failure shapes:
+//!
+//! * **Torn tail** — the final record's header or body runs past EOF,
+//!   or the final complete record fails its CRC (a partially persisted
+//!   write). The tail is truncated off and replay returns the longest
+//!   valid prefix; since an un-synced record was by definition never
+//!   acked, nothing acknowledged is lost.
+//! * **Mid-log corruption** — a CRC mismatch on a record *followed by
+//!   more data*. That is not a torn write; it means the disk lied.
+//!   Replay refuses **loudly** with [`io::ErrorKind::InvalidData`]
+//!   rather than silently dropping acknowledged history.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use super::crc::crc32;
+use crate::forest::EntityAddress;
+
+/// One logged operation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LogOp {
+    /// An acknowledged `\x01insert`: one new occurrence of `entity`.
+    Insert { entity: String, addr: EntityAddress },
+    /// An acknowledged `\x01delete`: the entity's entry dropped.
+    Delete { entity: String },
+    /// A `\x01repartition` advanced the served membership epoch.
+    Epoch(u64),
+}
+
+const TAG_INSERT: u8 = 1;
+const TAG_DELETE: u8 = 2;
+const TAG_EPOCH: u8 = 3;
+
+impl LogOp {
+    /// Encode the record body (tag + payload; no header).
+    fn encode_body(&self) -> Vec<u8> {
+        match self {
+            LogOp::Insert { entity, addr } => {
+                let e = entity.as_bytes();
+                let mut b = Vec::with_capacity(11 + e.len());
+                b.push(TAG_INSERT);
+                b.extend_from_slice(&addr.tree.to_le_bytes());
+                b.extend_from_slice(&addr.node.to_le_bytes());
+                b.extend_from_slice(&(e.len() as u16).to_le_bytes());
+                b.extend_from_slice(e);
+                b
+            }
+            LogOp::Delete { entity } => {
+                let e = entity.as_bytes();
+                let mut b = Vec::with_capacity(3 + e.len());
+                b.push(TAG_DELETE);
+                b.extend_from_slice(&(e.len() as u16).to_le_bytes());
+                b.extend_from_slice(e);
+                b
+            }
+            LogOp::Epoch(e) => {
+                let mut b = Vec::with_capacity(9);
+                b.push(TAG_EPOCH);
+                b.extend_from_slice(&e.to_le_bytes());
+                b
+            }
+        }
+    }
+
+    /// Encode a full record (header + body).
+    pub fn encode(&self) -> Vec<u8> {
+        let body = self.encode_body();
+        let mut out = Vec::with_capacity(8 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode a record body (the CRC has already been verified).
+    fn decode_body(body: &[u8]) -> Result<LogOp, String> {
+        let take_str = |b: &[u8]| -> Result<String, String> {
+            if b.len() < 2 {
+                return Err("truncated entity length".into());
+            }
+            let n = u16::from_le_bytes([b[0], b[1]]) as usize;
+            if b.len() != 2 + n {
+                return Err("entity length disagrees with body".into());
+            }
+            String::from_utf8(b[2..].to_vec())
+                .map_err(|_| "entity is not UTF-8".into())
+        };
+        match body.split_first() {
+            Some((&TAG_INSERT, rest)) => {
+                if rest.len() < 8 {
+                    return Err("truncated insert payload".into());
+                }
+                let tree = u32::from_le_bytes(rest[..4].try_into().unwrap());
+                let node = u32::from_le_bytes(rest[4..8].try_into().unwrap());
+                Ok(LogOp::Insert {
+                    entity: take_str(&rest[8..])?,
+                    addr: EntityAddress::new(tree, node),
+                })
+            }
+            Some((&TAG_DELETE, rest)) => {
+                Ok(LogOp::Delete { entity: take_str(rest)? })
+            }
+            Some((&TAG_EPOCH, rest)) => {
+                if rest.len() != 8 {
+                    return Err("epoch payload is not 8 bytes".into());
+                }
+                Ok(LogOp::Epoch(u64::from_le_bytes(rest.try_into().unwrap())))
+            }
+            Some((tag, _)) => Err(format!("unknown op tag {tag}")),
+            None => Err("empty record body".into()),
+        }
+    }
+}
+
+/// How replay left the log's tail.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TailOutcome {
+    /// Every byte parsed as a valid record.
+    Clean,
+    /// A torn final record was truncated off (`dropped_bytes` of it).
+    Truncated { dropped_bytes: u64 },
+}
+
+/// Replay result: the valid op prefix plus what happened at the tail.
+#[derive(Clone, Debug)]
+pub struct Replay {
+    /// Decoded operations, in append order.
+    pub ops: Vec<LogOp>,
+    /// Tail disposition (a torn tail was already truncated on disk by
+    /// [`OpLog::open`]; [`replay_bytes`] only reports it).
+    pub tail: TailOutcome,
+    /// Byte offset of the end of the valid prefix.
+    pub valid_len: u64,
+}
+
+/// Parse a log image: the longest valid record prefix, torn-tail
+/// detection, and loud refusal of mid-log corruption (see the module
+/// docs for the policy).
+pub fn replay_bytes(bytes: &[u8]) -> io::Result<Replay> {
+    let mut ops = Vec::new();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let remaining = bytes.len() - pos;
+        if remaining < 8 {
+            // torn header at EOF
+            return Ok(torn(ops, pos, remaining));
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap())
+            as usize;
+        let stored_crc =
+            u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if remaining - 8 < len {
+            // body runs past EOF: torn write (this also covers a
+            // bit-flipped length field on the final record — the
+            // inflated length overruns EOF and the record is dropped)
+            return Ok(torn(ops, pos, remaining));
+        }
+        let body = &bytes[pos + 8..pos + 8 + len];
+        if crc32(body) != stored_crc {
+            if pos + 8 + len == bytes.len() {
+                // final complete record, bad CRC: partially persisted
+                return Ok(torn(ops, pos, remaining));
+            }
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "corrupt op log: record at byte {pos} fails its CRC \
+                     with {} bytes following — not a torn tail; refusing \
+                     to silently drop acknowledged history",
+                    bytes.len() - (pos + 8 + len)
+                ),
+            ));
+        }
+        match LogOp::decode_body(body) {
+            Ok(op) => ops.push(op),
+            Err(why) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!(
+                        "corrupt op log: record at byte {pos} passed its \
+                         CRC but does not decode ({why})"
+                    ),
+                ));
+            }
+        }
+        pos += 8 + len;
+    }
+    Ok(Replay { ops, tail: TailOutcome::Clean, valid_len: pos as u64 })
+}
+
+fn torn(ops: Vec<LogOp>, valid: usize, dropped: usize) -> Replay {
+    Replay {
+        ops,
+        tail: TailOutcome::Truncated { dropped_bytes: dropped as u64 },
+        valid_len: valid as u64,
+    }
+}
+
+/// The append handle: open-replay-truncate on startup, then append
+/// records with fsync-on-ack batching.
+#[derive(Debug)]
+pub struct OpLog {
+    file: File,
+    /// Records appended since the last fsync.
+    unsynced: u32,
+    /// Fsync after every N appends (1 = strictest: fsync-per-ack).
+    fsync_every: u32,
+    /// Lifetime appended-record count.
+    pub appended: u64,
+    /// Lifetime fsync count.
+    pub fsyncs: u64,
+}
+
+impl OpLog {
+    /// Open (creating if absent) the log at `path`, replay its valid
+    /// prefix, and truncate any torn tail **on disk** so later appends
+    /// extend a clean log. Returns the handle positioned at the end
+    /// plus the replayed ops. `fsync_every = N` batches durability:
+    /// every Nth append fsyncs (so at most N-1 acked-but-unsynced
+    /// records can be lost to a crash — only `1` gives the strict
+    /// ack-after-durable guarantee).
+    pub fn open(path: &Path, fsync_every: u32) -> io::Result<(OpLog, Replay)> {
+        assert!(fsync_every >= 1, "fsync_every must be >= 1");
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        let replay = replay_bytes(&bytes)?;
+        if matches!(replay.tail, TailOutcome::Truncated { .. }) {
+            file.set_len(replay.valid_len)?;
+            file.sync_all()?;
+        }
+        // position at the end of the valid prefix for appends
+        use std::io::Seek;
+        file.seek(io::SeekFrom::Start(replay.valid_len))?;
+        Ok((
+            OpLog { file, unsynced: 0, fsync_every, appended: 0, fsyncs: 0 },
+            replay,
+        ))
+    }
+
+    /// Append one record; fsyncs when the batching policy says so.
+    /// Returns `true` when this append was made durable (the caller may
+    /// only ack the client after a `true`, or after a later
+    /// [`sync`](OpLog::sync)).
+    pub fn append(&mut self, op: &LogOp) -> io::Result<bool> {
+        self.file.write_all(&op.encode())?;
+        self.appended += 1;
+        self.unsynced += 1;
+        if self.unsynced >= self.fsync_every {
+            self.sync()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Force the log durable (fsync). Idempotent when nothing is
+    /// pending.
+    pub fn sync(&mut self) -> io::Result<()> {
+        if self.unsynced > 0 {
+            self.file.sync_data()?;
+            self.fsyncs += 1;
+            self.unsynced = 0;
+        }
+        Ok(())
+    }
+
+    /// Truncate the log to empty (after a snapshot made it redundant).
+    /// Durable before return.
+    pub fn reset(&mut self) -> io::Result<()> {
+        use std::io::Seek;
+        self.file.set_len(0)?;
+        self.file.seek(io::SeekFrom::Start(0))?;
+        self.file.sync_all()?;
+        self.unsynced = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("cft-oplog-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d.join("oplog.cft")
+    }
+
+    fn sample_ops() -> Vec<LogOp> {
+        vec![
+            LogOp::Insert {
+                entity: "cardiology".into(),
+                addr: EntityAddress::new(3, 14),
+            },
+            LogOp::Epoch(2),
+            LogOp::Delete { entity: "ward 3".into() },
+            LogOp::Insert {
+                entity: "icu".into(),
+                addr: EntityAddress::new(0, 0),
+            },
+        ]
+    }
+
+    #[test]
+    fn append_reopen_replays_in_order() {
+        let path = tmp("roundtrip");
+        let ops = sample_ops();
+        {
+            let (mut log, replay) = OpLog::open(&path, 1).unwrap();
+            assert!(replay.ops.is_empty());
+            for op in &ops {
+                assert!(log.append(op).unwrap(), "fsync_every=1 is durable");
+            }
+        }
+        let (_, replay) = OpLog::open(&path, 1).unwrap();
+        assert_eq!(replay.ops, ops);
+        assert_eq!(replay.tail, TailOutcome::Clean);
+    }
+
+    #[test]
+    fn fsync_batching_counts_syncs() {
+        let path = tmp("batch");
+        let (mut log, _) = OpLog::open(&path, 3).unwrap();
+        let op = LogOp::Epoch(1);
+        assert!(!log.append(&op).unwrap());
+        assert!(!log.append(&op).unwrap());
+        assert!(log.append(&op).unwrap(), "third append syncs");
+        assert_eq!(log.fsyncs, 1);
+        log.sync().unwrap();
+        assert_eq!(log.fsyncs, 1, "sync with nothing pending is a no-op");
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_reopen_is_clean() {
+        let path = tmp("torn");
+        let ops = sample_ops();
+        {
+            let (mut log, _) = OpLog::open(&path, 1).unwrap();
+            for op in &ops {
+                log.append(op).unwrap();
+            }
+        }
+        // tear the final record mid-body
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let (_, replay) = OpLog::open(&path, 1).unwrap();
+        assert_eq!(replay.ops, ops[..ops.len() - 1].to_vec());
+        assert!(matches!(replay.tail, TailOutcome::Truncated { .. }));
+        // the truncation happened on disk: a second open is clean
+        let (_, replay2) = OpLog::open(&path, 1).unwrap();
+        assert_eq!(replay2.tail, TailOutcome::Clean);
+        assert_eq!(replay2.ops, ops[..ops.len() - 1].to_vec());
+    }
+
+    #[test]
+    fn final_record_with_bad_crc_is_a_torn_tail() {
+        let path = tmp("tailcrc");
+        let ops = sample_ops();
+        {
+            let (mut log, _) = OpLog::open(&path, 1).unwrap();
+            for op in &ops {
+                log.append(op).unwrap();
+            }
+        }
+        let mut bytes = fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF; // flip a bit in the final body byte
+        let replay = replay_bytes(&bytes).unwrap();
+        assert_eq!(replay.ops, ops[..ops.len() - 1].to_vec());
+        assert!(matches!(replay.tail, TailOutcome::Truncated { .. }));
+    }
+
+    #[test]
+    fn midlog_corruption_is_refused_loudly() {
+        let ops = sample_ops();
+        let mut bytes = Vec::new();
+        for op in &ops {
+            bytes.extend_from_slice(&op.encode());
+        }
+        // flip a body bit of the FIRST record: later records follow, so
+        // this must error, not truncate
+        bytes[10] ^= 0x01;
+        let err = replay_bytes(&bytes).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("corrupt op log"), "{err}");
+    }
+
+    #[test]
+    fn reset_empties_durably() {
+        let path = tmp("reset");
+        let (mut log, _) = OpLog::open(&path, 1).unwrap();
+        log.append(&LogOp::Epoch(9)).unwrap();
+        log.reset().unwrap();
+        log.append(&LogOp::Delete { entity: "x".into() }).unwrap();
+        let (_, replay) = OpLog::open(&path, 1).unwrap();
+        assert_eq!(replay.ops, vec![LogOp::Delete { entity: "x".into() }]);
+    }
+
+    #[test]
+    fn empty_log_replays_empty() {
+        let replay = replay_bytes(&[]).unwrap();
+        assert!(replay.ops.is_empty());
+        assert_eq!(replay.tail, TailOutcome::Clean);
+    }
+}

@@ -1,0 +1,306 @@
+//! Versioned, checksummed binary snapshot of the dynamic filter state.
+//!
+//! A snapshot captures exactly what a restart cannot rebuild from the
+//! forest: the filter's live entry set — `(key, temperature, address
+//! list)` per entity — plus the `partition_epoch` the backend was
+//! serving when the snapshot was cut. Layout (all integers
+//! little-endian):
+//!
+//! ```text
+//! magic    8 B   "CFTSNAP\x01"
+//! body:
+//!   version          u32  (= 1)
+//!   partition_epoch  u64
+//!   entry_count      u64
+//!   entries          entry_count ×
+//!     key         u64
+//!     temperature u32
+//!     addr_count  u32
+//!     addresses   addr_count × (tree u32, node u32)
+//! crc      4 B   CRC-32 of the body
+//! ```
+//!
+//! The trailing CRC covers the whole body, so a flipped bit anywhere —
+//! header, counts, payload — fails verification before a single entry
+//! is parsed; a corrupt snapshot is **refused loudly**, never loaded
+//! partially. Writes are atomic: the bytes go to a sibling `.tmp` file
+//! which is fsynced, renamed over the target, and the directory
+//! fsynced — a crash mid-write leaves either the old snapshot or the
+//! new one, never a torn hybrid (the `.tmp` leftover is ignored and
+//! overwritten by the next write).
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use super::crc::crc32;
+use crate::forest::EntityAddress;
+
+/// File magic: identifies the format and its major revision.
+pub const MAGIC: &[u8; 8] = b"CFTSNAP\x01";
+
+/// Body format version (bumped on incompatible layout changes).
+pub const VERSION: u32 = 1;
+
+/// One decoded snapshot: the recorded membership epoch plus every live
+/// filter entry as `(key, temperature, addresses)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Snapshot {
+    /// The `partition_epoch` the backend served when the snapshot was
+    /// cut — what the router's `EpochGate` checks at re-admission.
+    pub partition_epoch: u64,
+    /// Live entries: `(entity key, temperature, address list)`.
+    pub entries: Vec<(u64, u32, Vec<EntityAddress>)>,
+}
+
+impl Snapshot {
+    /// Serialize to the on-disk byte layout (magic + body + CRC).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(24 + self.entries.len() * 24);
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.extend_from_slice(&self.partition_epoch.to_le_bytes());
+        body.extend_from_slice(&(self.entries.len() as u64).to_le_bytes());
+        for (key, temp, addrs) in &self.entries {
+            body.extend_from_slice(&key.to_le_bytes());
+            body.extend_from_slice(&temp.to_le_bytes());
+            body.extend_from_slice(&(addrs.len() as u32).to_le_bytes());
+            for a in addrs {
+                body.extend_from_slice(&a.tree.to_le_bytes());
+                body.extend_from_slice(&a.node.to_le_bytes());
+            }
+        }
+        let mut out = Vec::with_capacity(MAGIC.len() + body.len() + 4);
+        out.extend_from_slice(MAGIC);
+        let crc = crc32(&body);
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Decode from on-disk bytes, verifying magic, version and CRC.
+    /// Every failure is a loud [`io::ErrorKind::InvalidData`] — a
+    /// corrupt snapshot must never be loaded in part.
+    pub fn from_bytes(bytes: &[u8]) -> io::Result<Snapshot> {
+        let corrupt = |what: &str| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("corrupt snapshot: {what}"),
+            )
+        };
+        if bytes.len() < MAGIC.len() + 4 {
+            return Err(corrupt("shorter than magic + checksum"));
+        }
+        if &bytes[..MAGIC.len()] != MAGIC {
+            return Err(corrupt("bad magic (not a CFT snapshot?)"));
+        }
+        let body = &bytes[MAGIC.len()..bytes.len() - 4];
+        let stored = u32::from_le_bytes(
+            bytes[bytes.len() - 4..].try_into().expect("4-byte tail"),
+        );
+        if crc32(body) != stored {
+            return Err(corrupt("body checksum mismatch"));
+        }
+        let mut r = Reader { buf: body, pos: 0 };
+        let version = r.u32().map_err(|_| corrupt("truncated header"))?;
+        if version != VERSION {
+            return Err(corrupt(&format!(
+                "unsupported version {version} (this build reads {VERSION})"
+            )));
+        }
+        let partition_epoch =
+            r.u64().map_err(|_| corrupt("truncated header"))?;
+        let count = r.u64().map_err(|_| corrupt("truncated header"))?;
+        let mut entries = Vec::with_capacity(count.min(1 << 20) as usize);
+        for _ in 0..count {
+            let key = r.u64().map_err(|_| corrupt("truncated entry"))?;
+            let temp = r.u32().map_err(|_| corrupt("truncated entry"))?;
+            let naddrs = r.u32().map_err(|_| corrupt("truncated entry"))?;
+            let mut addrs = Vec::with_capacity(naddrs.min(1 << 20) as usize);
+            for _ in 0..naddrs {
+                let tree =
+                    r.u32().map_err(|_| corrupt("truncated address"))?;
+                let node =
+                    r.u32().map_err(|_| corrupt("truncated address"))?;
+                addrs.push(EntityAddress::new(tree, node));
+            }
+            entries.push((key, temp, addrs));
+        }
+        if r.pos != body.len() {
+            return Err(corrupt("trailing bytes after last entry"));
+        }
+        Ok(Snapshot { partition_epoch, entries })
+    }
+}
+
+/// Bounds-checked little-endian cursor over the snapshot body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], ()> {
+        if self.pos + n > self.buf.len() {
+            return Err(());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, ()> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ()> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Atomically replace the snapshot at `path`: write a sibling `.tmp`
+/// file, fsync it, rename it over `path`, then fsync the directory so
+/// the rename itself is durable. A crash at any point leaves `path`
+/// holding either the previous complete snapshot or the new one.
+pub fn write_atomic(path: &Path, snapshot: &Snapshot) -> io::Result<()> {
+    let tmp = tmp_path(path);
+    {
+        let mut f = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&tmp)?;
+        f.write_all(&snapshot.to_bytes())?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        // Directory fsync makes the rename durable on Linux; platforms
+        // where opening a directory fails simply skip it (best effort).
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Load and verify the snapshot at `path`.
+pub fn load(path: &Path) -> io::Result<Snapshot> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    Snapshot::from_bytes(&bytes)
+}
+
+/// The sibling temp-file path a [`write_atomic`] stages into
+/// (`<file>.tmp` in the same directory, so the rename never crosses a
+/// filesystem).
+pub fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Snapshot {
+        Snapshot {
+            partition_epoch: 7,
+            entries: vec![
+                (
+                    0xDEAD_BEEF,
+                    42,
+                    vec![EntityAddress::new(1, 2), EntityAddress::new(3, 4)],
+                ),
+                (0x1234, 0, vec![]),
+                (u64::MAX, u32::MAX, vec![EntityAddress::new(0, 0)]),
+            ],
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("cft-snap-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrips_bytes() {
+        let s = sample();
+        assert_eq!(Snapshot::from_bytes(&s.to_bytes()).unwrap(), s);
+    }
+
+    #[test]
+    fn roundtrips_through_disk_atomically() {
+        let dir = tmp_dir("disk");
+        let path = dir.join("snapshot.cft");
+        let s = sample();
+        write_atomic(&path, &s).unwrap();
+        assert_eq!(load(&path).unwrap(), s);
+        assert!(!tmp_path(&path).exists(), "tmp staging file renamed away");
+        // overwrite is atomic too: the new content fully replaces
+        let s2 = Snapshot { partition_epoch: 8, entries: vec![] };
+        write_atomic(&path, &s2).unwrap();
+        assert_eq!(load(&path).unwrap(), s2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_snapshot_roundtrips() {
+        let s = Snapshot { partition_epoch: 0, entries: vec![] };
+        assert_eq!(Snapshot::from_bytes(&s.to_bytes()).unwrap(), s);
+    }
+
+    #[test]
+    fn bad_magic_refused() {
+        let mut b = sample().to_bytes();
+        b[0] ^= 0xFF;
+        let err = Snapshot::from_bytes(&b).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn truncated_file_refused() {
+        let b = sample().to_bytes();
+        for cut in [0, 5, MAGIC.len(), b.len() - 5, b.len() - 1] {
+            assert!(
+                Snapshot::from_bytes(&b[..cut]).is_err(),
+                "cut at {cut} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn any_flipped_body_bit_is_detected() {
+        let b = sample().to_bytes();
+        // flip one bit in every body/crc byte; all must be refused
+        for i in MAGIC.len()..b.len() {
+            let mut c = b.clone();
+            c[i] ^= 0x10;
+            assert!(
+                Snapshot::from_bytes(&c).is_err(),
+                "flip at byte {i} loaded silently"
+            );
+        }
+    }
+
+    #[test]
+    fn future_version_refused_loudly() {
+        let s = Snapshot { partition_epoch: 1, entries: vec![] };
+        let mut b = s.to_bytes();
+        // bump the version field, then re-stamp the CRC so only the
+        // version check can object
+        b[MAGIC.len()] = 99;
+        let body_end = b.len() - 4;
+        let crc = crc32(&b[MAGIC.len()..body_end]);
+        b[body_end..].copy_from_slice(&crc.to_le_bytes());
+        let err = Snapshot::from_bytes(&b).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+}

@@ -252,6 +252,24 @@ pub struct RagConfig {
     /// `slow_query` line, even when head sampling skipped it. Zero
     /// disables slow-query capture.
     pub slow_query_threshold: Duration,
+    /// When set, the coordinator persists its dynamic-update stream
+    /// here (`persist/`): acked `\x01insert`/`\x01delete` ops go to an
+    /// append-only log, snapshots to `snapshot.cft`, and startup
+    /// recovers snapshot + log replay so a killed backend restarts warm
+    /// (`--data-dir`). `None` (default) = volatile, the pre-durability
+    /// behaviour.
+    pub data_dir: Option<std::path::PathBuf>,
+    /// fsync the op log after every N acked ops (`--fsync-every`). `1`
+    /// (default) is the strict ack-after-durable guarantee the crash
+    /// harness proves; `N > 1` batches fsyncs, trading up to N-1 acked
+    /// writes on power loss for throughput. Ignored without
+    /// [`data_dir`](RagConfig::data_dir); must be ≥ 1.
+    pub fsync_every: u32,
+    /// Cut a snapshot automatically after this many acked ops
+    /// (`--snapshot-interval-ops`), folding the log into `snapshot.cft`
+    /// and truncating it. `0` (default) = only on `\x01snapshot` or
+    /// graceful shutdown. Ignored without [`data_dir`](RagConfig::data_dir).
+    pub snapshot_interval_ops: u64,
 }
 
 impl Default for RagConfig {
@@ -269,6 +287,9 @@ impl Default for RagConfig {
             idle_timeout: Duration::from_secs(60),
             trace_sample_every: 0,
             slow_query_threshold: Duration::from_millis(250),
+            data_dir: None,
+            fsync_every: 1,
+            snapshot_interval_ops: 0,
         }
     }
 }
@@ -322,6 +343,13 @@ impl RagConfig {
                     self.replication_factor
                 )));
             }
+        }
+        if self.fsync_every == 0 {
+            return Err(CftError::Config(
+                "fsync_every must be >= 1 (1 = fsync per acked op; \
+                 N > 1 batches durability)"
+                    .to_string(),
+            ));
         }
         Ok(())
     }
@@ -503,6 +531,17 @@ mod tests {
         assert!(!rag.slow_query_threshold.is_zero());
         assert_eq!(rag.trace_sample_every, router.trace_sample_every);
         assert_eq!(rag.slow_query_threshold, router.slow_query_threshold);
+    }
+
+    #[test]
+    fn durability_knobs_default_volatile_and_strict() {
+        let rag = RagConfig::default();
+        assert!(rag.data_dir.is_none(), "persistence is opt-in");
+        assert_eq!(rag.fsync_every, 1, "default is ack-after-durable");
+        assert_eq!(rag.snapshot_interval_ops, 0, "no auto-snapshot");
+        assert!(rag.validate().is_ok());
+        let bad = RagConfig { fsync_every: 0, ..RagConfig::default() };
+        assert!(bad.validate().is_err(), "fsync_every 0 must fail fast");
     }
 
     #[test]

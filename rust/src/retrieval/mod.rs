@@ -180,6 +180,28 @@ pub trait ConcurrentRetriever: Send + Sync {
     fn probe_counters(&self) -> Option<(u64, u64)> {
         None
     }
+
+    /// Export every live index entry as `(key, temperature, addresses)`
+    /// — the image a durable snapshot (`persist/`) captures. `None` for
+    /// retrievers without an exportable dynamic index (the Bloom/naive
+    /// baselines rebuild from the forest instead).
+    fn export_index(&self) -> Option<Vec<(u64, u32, Vec<EntityAddress>)>> {
+        None
+    }
+
+    /// Replace the whole index with `entries` (a verified snapshot).
+    /// The snapshot is **authoritative**: the forest-built index is
+    /// cleared first, so entities deleted before the snapshot was cut
+    /// stay deleted. Deliberately bypasses partition ownership checks —
+    /// the snapshot was cut under the recorded partition, which the
+    /// caller reinstalls alongside. `None` = unsupported; `Some(n)` =
+    /// entries restored.
+    fn restore_index(
+        &self,
+        _entries: &[(u64, u32, Vec<EntityAddress>)],
+    ) -> Option<usize> {
+        None
+    }
 }
 
 /// Adapts any [`Retriever`] to [`ConcurrentRetriever`] by serializing

@@ -242,6 +242,28 @@ impl ConcurrentRetriever for ShardedCuckooTRag {
     fn probe_counters(&self) -> Option<(u64, u64)> {
         Some(self.cf.probe_counters())
     }
+
+    fn export_index(&self) -> Option<Vec<(u64, u32, Vec<EntityAddress>)>> {
+        Some(self.cf.export_entries())
+    }
+
+    fn restore_index(
+        &self,
+        entries: &[(u64, u32, Vec<EntityAddress>)],
+    ) -> Option<usize> {
+        // The snapshot is authoritative: clear the forest-built index so
+        // pre-snapshot deletes stay deleted, then re-place every entry.
+        // Ownership checks are skipped on purpose — the caller restores
+        // the partition the snapshot was cut under.
+        self.cf.clear();
+        let mut restored = 0usize;
+        for (key, temp, addrs) in entries {
+            if self.cf.restore_entry(*key, *temp, addrs) {
+                restored += 1;
+            }
+        }
+        Some(restored)
+    }
 }
 
 /// The sharded retriever also fits the classic single-threaded trait, so
@@ -511,5 +533,37 @@ mod tests {
         ));
         assert!(ConcurrentRetriever::filter_telemetry(&mutex).is_none());
         assert!(ConcurrentRetriever::probe_counters(&mutex).is_none());
+    }
+
+    #[test]
+    fn restore_index_is_authoritative_over_forest_build() {
+        let f = forest();
+        let r = ShardedCuckooTRag::new(f.clone(), 4);
+        // dynamic churn the forest knows nothing about
+        r.add_occurrence("delta", EntityAddress::new(5, 0));
+        assert!(r.remove_entity("beta"));
+        let exported = ConcurrentRetriever::export_index(&r).unwrap();
+
+        // a fresh boot rebuilds beta from the forest...
+        let warm = ShardedCuckooTRag::new(f, 4);
+        let mut out = Vec::new();
+        warm.find_concurrent("beta", &mut out);
+        assert!(!out.is_empty(), "forest build resurrects beta");
+        // ...until the snapshot restore makes the recorded state win
+        let n = ConcurrentRetriever::restore_index(&warm, &exported).unwrap();
+        assert_eq!(n, exported.len());
+        out.clear();
+        warm.find_concurrent("beta", &mut out);
+        assert!(out.is_empty(), "acked delete must stay deleted");
+        out.clear();
+        warm.find_concurrent("delta", &mut out);
+        assert_eq!(out.len(), 1, "acked insert must survive");
+
+        // baselines opt out through the defaults
+        let mutex = crate::retrieval::MutexRetriever::new(Box::new(
+            crate::retrieval::naive::NaiveTRag::new(forest()),
+        ));
+        assert!(ConcurrentRetriever::export_index(&mutex).is_none());
+        assert!(ConcurrentRetriever::restore_index(&mutex, &[]).is_none());
     }
 }

@@ -8,7 +8,12 @@
 //! — a backend mid-warm-up, or restarted with a stale partition after
 //! the fleet's membership moved on, keeps failing probes until it
 //! catches up, instead of being re-admitted to serve the wrong slice
-//! of the key space.
+//! of the key space. A durable backend that warm-restarted from its
+//! `--data-dir` (`persist/`) comes back *reporting the epoch recorded
+//! in its snapshot*, so as long as the ring has not moved on it passes
+//! the gate on the first probe and is re-admitted immediately — the
+//! O(delta) catch-up (`rebalance::execute_rejoin`) then runs behind an
+//! operator `\x01join` without the backend ever leaving the ring.
 //!
 //! # Examples
 //!

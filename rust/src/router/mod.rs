@@ -295,14 +295,16 @@ fn dispatch(
         Some(Ok(
             ControlLine::Dump { .. }
             | ControlLine::Repartition { .. }
-            | ControlLine::Purge,
+            | ControlLine::Purge
+            | ControlLine::Snapshot,
         )) => Json::obj(vec![
             ("ok", Json::Bool(false)),
             (
                 "error",
                 Json::Str(
-                    "dump/repartition/purge are backend control \
-                     lines; the rebalancer drives them — send \
+                    "dump/repartition/purge/snapshot are backend \
+                     control lines; the rebalancer (or an operator, \
+                     for snapshot) drives them on a backend — send \
                      \\x01join/\\x01drain here instead"
                         .into(),
                 ),

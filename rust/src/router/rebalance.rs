@@ -41,6 +41,11 @@
 //! — incumbents hold supersets until step 4, the joiner serves nothing
 //! until step 3 — and writes are double-applied from step 1, so the
 //! two coexisting partition epochs never disagree about a key.
+//!
+//! A `\x01join` of an address **already in the ring** takes none of
+//! those steps: it is a *rejoin* — a durable backend (`persist/`) that
+//! warm-restarted from its snapshot + op log at the recorded epoch and
+//! only needs the writes it missed while down. See [`execute_rejoin`].
 
 use std::io;
 use std::sync::{Arc, RwLock};
@@ -293,8 +298,15 @@ pub(crate) fn execute_join(
     if old.pending.is_some() {
         return Err("another rebalance is in flight".into());
     }
-    if (0..old.ring.len()).any(|i| old.ring.name(i) == addr) {
-        return Err(format!("{addr} is already in the serving ring"));
+    if let Some(idx) =
+        (0..old.ring.len()).find(|&i| old.ring.name(i) == addr)
+    {
+        // Joining an address that is already a ring member is a
+        // **rejoin**: a warm-restarted backend (snapshot + op-log
+        // recovery, `persist/`) that needs only the writes it missed
+        // while down — no epoch roll, no dual-write window, O(delta)
+        // streaming instead of O(index).
+        return execute_rejoin(ctx, addr, idx, &old);
     }
 
     let mut new_addrs = old.addresses();
@@ -442,6 +454,158 @@ pub(crate) fn execute_join(
         keys_dropped,
         backends: new_backends.len(),
     })
+}
+
+/// Re-admit a warm-restarted ring member by streaming only the delta
+/// it missed while down — the durable-backend fast path
+/// (`docs/OPERATIONS.md` "Kill recovery").
+///
+/// The member restored its index from its `--data-dir` snapshot +
+/// op log and came back reporting the partition epoch recorded there,
+/// so — unlike a cold [`execute_join`] — nothing about the ring
+/// changes: no new epoch, no dual-write window, no drop pass. The only
+/// work is catch-up: for every key the member owns, compare its copy
+/// against a peer replica's (two `\x01dump`s, no payload streaming)
+/// and replay the authoritative list only where they differ. Writes
+/// landing *during* the rejoin go to the member through the normal
+/// write path (it is already in every serving set it belongs to), so
+/// the catch-up set only shrinks.
+///
+/// Sole-replica keys (`R = 1`, or every peer unreachable) have no
+/// authority to reconcile against; the restored copy — complete up to
+/// the last acked write, by the durability contract — stands.
+///
+/// Fails loudly when the member is unreachable or reports an epoch the
+/// [`EpochGate`] refuses (it was down across a membership change and
+/// its snapshot is stale): the operator must `\x01drain` it and
+/// re-`\x01join` it cold instead.
+pub(crate) fn execute_rejoin(
+    ctx: &RebalanceCtx,
+    addr: &str,
+    member_idx: usize,
+    old: &Arc<RingState>,
+) -> Result<RebalanceReport, String> {
+    let target = &old.backends[member_idx];
+    // The probe is epoch-gated: success both proves reachability and
+    // validates the recorded epoch, and re-admits the member's health
+    // state so the scatter path stops failing over around it.
+    if let Err(e) = target.probe() {
+        return Err(format!(
+            "cannot rejoin {addr}: {e} (if it restarted with a stale \
+             partition epoch, drain it and join it cold instead)"
+        ));
+    }
+
+    let owned: Vec<&String> = ctx
+        .vocab
+        .iter()
+        .filter(|name| {
+            serving_set(&old.ring, ctx.replication, entity_key(name))
+                .contains(&member_idx)
+        })
+        .collect();
+    let (keys_streamed, inserts_sent) = stream_keys(&owned, &|name| {
+        let set = serving_set(&old.ring, ctx.replication, entity_key(name));
+        let peers: Vec<usize> =
+            set.into_iter().filter(|&i| i != member_idx).collect();
+        if peers.is_empty() {
+            return Ok(0); // sole replica: the restored copy stands
+        }
+        reconcile_key(&old.backends, &peers, target, name).map_err(|e| {
+            format!("rejoin catch-up of {name:?} on {addr} failed: {e}")
+        })
+    })?;
+
+    let _ = target.probe(); // refresh load/health post-catch-up
+    ctx.metrics.record_join(keys_streamed as u64);
+    log::info!(
+        "backend {addr} rejoined at epoch {} \
+         ({keys_streamed} keys / {inserts_sent} inserts caught up \
+         out of {} owned)",
+        old.epoch,
+        owned.len()
+    );
+
+    Ok(RebalanceReport {
+        action: "rejoin",
+        addr: addr.to_string(),
+        epoch: old.epoch,
+        keys_streamed,
+        inserts_sent,
+        keys_dropped: 0,
+        backends: old.backends.len(),
+    })
+}
+
+/// Bring `target`'s copy of one entity in line with its peer replicas:
+/// dump the first peer that answers (healthy first) as the
+/// authoritative list, dump the target, and only when they differ
+/// clear the target's stale copy and replay the authoritative one.
+/// Returns the `\x01insert` replays sent — `0` when the copies already
+/// agree (the common case after a warm restart) **and** when the only
+/// divergence was a missed delete (the stale copy is removed, nothing
+/// streamed). Every peer failing is an error: completing "ok" while
+/// the member silently keeps a divergent copy would defeat the
+/// rejoin's purpose.
+fn reconcile_key(
+    backends: &[Arc<Backend>],
+    peers: &[usize],
+    target: &Backend,
+    entity: &str,
+) -> io::Result<usize> {
+    let mut order: Vec<usize> = peers.to_vec();
+    order.sort_by_key(|&i| !backends[i].health().is_healthy());
+    let mut last_err: Option<io::Error> = None;
+    let (source, want) = 'found: {
+        for &p in &order {
+            match dump_addresses(&backends[p], entity) {
+                Ok(addrs) => break 'found (Some(p), addrs),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        match last_err {
+            Some(e) => {
+                return Err(io::Error::other(format!(
+                    "no peer replica of {entity:?} could be dumped: {e}"
+                )))
+            }
+            None => (None, Vec::new()), // no peers (guarded by caller)
+        }
+    };
+
+    let have = dump_addresses(target, entity)?;
+    let canon = |mut v: Vec<(u32, u32)>| {
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    if canon(want.clone()) == canon(have.clone()) {
+        return Ok(0); // already caught up
+    }
+    if !have.is_empty() {
+        // stale copy (missed delete, or divergent list): clear before
+        // replaying so the replay is exact, not additive
+        let reply =
+            target.request(&format!("{DELETE_REQUEST} {entity}"))?;
+        expect_ok(reply, "delete", target.addr())?;
+    }
+    let sent = replay_inserts(target, entity, &want)?;
+    if sent > 0 {
+        // Same dump→replay race as `handoff`: a delete landing between
+        // the peer dump and the replay hit the target before the
+        // replayed entries existed there. Re-dump the peer — if the
+        // key is gone now, undo the replay.
+        if let Some(p) = source {
+            if let Ok(now) = dump_addresses(&backends[p], entity) {
+                if now.is_empty() {
+                    let _ = target
+                        .request(&format!("{DELETE_REQUEST} {entity}"));
+                    return Ok(0);
+                }
+            }
+        }
+    }
+    Ok(sent)
 }
 
 /// Drain `addr` out of the serving ring: hand its keys to their
@@ -981,8 +1145,10 @@ mod tests {
             let err = execute_join(&ctx, bad).unwrap_err();
             assert!(err.contains("invalid"), "{bad:?}: {err}");
         }
+        // joining an existing member routes to the rejoin path, whose
+        // first step is an epoch-gated probe — unreachable here
         let err = execute_join(&ctx, "a:1").unwrap_err();
-        assert!(err.contains("already"), "{err}");
+        assert!(err.contains("cannot rejoin"), "{err}");
         // an unreachable joiner fails before any state changes
         let err = execute_join(&ctx, "127.0.0.1:9").unwrap_err();
         assert!(err.contains("unreachable"), "{err}");

@@ -1,0 +1,298 @@
+//! Property-based tests for the persistence formats (`persist/`):
+//!
+//! - **snapshot roundtrip** — encode → decode (and write-atomic →
+//!   load) preserves epoch, membership, temperatures and address
+//!   lists exactly, including through a live cuckoo filter;
+//! - **torn-tail truncation** — an op log cut at ANY byte replays to
+//!   exactly the longest prefix of complete records, never an error
+//!   (a torn tail is what a crash legitimately leaves behind);
+//! - **single-bit corruption** — a snapshot with any one bit flipped
+//!   is refused (checksum), never silently loaded; a corrupted op log
+//!   either refuses loudly or yields a clean *prefix* of what was
+//!   written (a flipped length field can mimic a torn tail, which
+//!   truncates — it can never fabricate or reorder operations).
+//!
+//! Harness: the in-crate `util::proptest` (seed override via
+//! `CFT_PROPTEST_SEED`, shrinking on failure) — no external deps.
+
+use cft_rag::filter::cuckoo::{CuckooConfig, CuckooFilter};
+use cft_rag::forest::EntityAddress;
+use cft_rag::persist::oplog::{replay_bytes, LogOp, TailOutcome};
+use cft_rag::persist::snapshot::{self, Snapshot};
+use cft_rag::util::proptest::{forall, forall_simple, shrink_vec, Config};
+use cft_rag::util::rng::Rng;
+
+fn gen_addrs(rng: &mut Rng, max: usize) -> Vec<EntityAddress> {
+    (0..rng.below(max as u64 + 1))
+        .map(|_| {
+            EntityAddress::new(rng.below(500) as u32, rng.below(500) as u32)
+        })
+        .collect()
+}
+
+fn gen_snapshot(rng: &mut Rng) -> Snapshot {
+    // unique keys via BTreeMap (the filter never exports duplicates)
+    let n = rng.below(30) as usize;
+    let mut entries = std::collections::BTreeMap::new();
+    for _ in 0..n {
+        entries.insert(
+            rng.next_u64(),
+            (rng.below(10_000) as u32, gen_addrs(rng, 6)),
+        );
+    }
+    Snapshot {
+        partition_epoch: rng.next_u64(),
+        entries: entries
+            .into_iter()
+            .map(|(k, (t, a))| (k, t, a))
+            .collect(),
+    }
+}
+
+fn gen_ops(rng: &mut Rng, max_len: usize) -> Vec<LogOp> {
+    let n = rng.range(1, max_len + 1);
+    (0..n)
+        .map(|_| {
+            let entity = format!("entity-{}", rng.below(50));
+            match rng.below(4) {
+                0 => LogOp::Delete { entity },
+                1 => LogOp::Epoch(rng.next_u64()),
+                _ => LogOp::Insert {
+                    entity,
+                    addr: EntityAddress::new(
+                        rng.below(64) as u32,
+                        rng.below(64) as u32,
+                    ),
+                },
+            }
+        })
+        .collect()
+}
+
+fn encode_log(ops: &[LogOp]) -> Vec<u8> {
+    ops.iter().flat_map(|op| op.encode()).collect()
+}
+
+#[test]
+fn snapshot_roundtrips_through_bytes_and_disk() {
+    let path = std::env::temp_dir()
+        .join(format!("cft-prop-snap-{}.cft", std::process::id()));
+    forall_simple(
+        60,
+        |rng| gen_snapshot(rng),
+        |snap| {
+            let decoded = Snapshot::from_bytes(&snap.to_bytes())
+                .map_err(|e| format!("decode of clean bytes failed: {e}"))?;
+            if &decoded != snap {
+                return Err(format!("byte roundtrip lost state: {snap:?}"));
+            }
+            snapshot::write_atomic(&path, snap)
+                .map_err(|e| format!("write_atomic: {e}"))?;
+            let loaded = snapshot::load(&path)
+                .map_err(|e| format!("load of clean snapshot failed: {e}"))?;
+            if &loaded != snap {
+                return Err("disk roundtrip lost state".into());
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn snapshot_roundtrips_through_a_live_filter() {
+    // membership, temperatures AND address lists survive
+    // export → snapshot bytes → restore into a FRESH filter
+    forall_simple(
+        30,
+        |rng| {
+            let n = rng.range(1, 120);
+            let mut seen = std::collections::BTreeSet::new();
+            (0..n)
+                .map(|_| {
+                    let mut k = rng.next_u64();
+                    while !seen.insert(k) {
+                        k = rng.next_u64();
+                    }
+                    // non-empty: the filter stores no empty entries
+                    let mut a = gen_addrs(rng, 4);
+                    if a.is_empty() {
+                        a.push(EntityAddress::new(1, 1));
+                    }
+                    (k, rng.below(1000) as u32, a)
+                })
+                .collect::<Vec<(u64, u32, Vec<EntityAddress>)>>()
+        },
+        |entries| {
+            let mut cf = CuckooFilter::new(CuckooConfig {
+                initial_buckets: 4, // force expansions along the way
+                ..CuckooConfig::default()
+            });
+            for (k, t, a) in entries {
+                if !cf.insert(*k, a) {
+                    return Err(format!("insert {k} rejected"));
+                }
+                cf.set_temperature(*k, *t);
+            }
+            let snap = Snapshot {
+                partition_epoch: 7,
+                entries: cf.export_entries(),
+            };
+            let decoded = Snapshot::from_bytes(&snap.to_bytes())
+                .map_err(|e| format!("decode: {e}"))?;
+            let mut restored = CuckooFilter::new(CuckooConfig {
+                initial_buckets: 4,
+                ..CuckooConfig::default()
+            });
+            for (k, t, a) in &decoded.entries {
+                if !restored.restore_entry(*k, *t, a) {
+                    return Err(format!("restore of {k} rejected"));
+                }
+            }
+            let canon = |mut v: Vec<(u64, u32, Vec<EntityAddress>)>| {
+                v.sort_unstable_by_key(|(k, _, _)| *k);
+                v
+            };
+            let (want, got) =
+                (canon(cf.export_entries()), canon(restored.export_entries()));
+            if want != got {
+                return Err(format!(
+                    "filter state diverged: {} vs {} entries",
+                    want.len(),
+                    got.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn log_truncated_at_any_byte_replays_the_longest_valid_prefix() {
+    forall(
+        Config { cases: 200, ..Config::default() },
+        |rng| {
+            let ops = gen_ops(rng, 12);
+            let total = encode_log(&ops).len();
+            (ops, rng.below(total as u64 + 1) as usize)
+        },
+        |(ops, cut)| {
+            let bytes = encode_log(ops);
+            // the maximal prefix of records fully inside the cut
+            let mut fit = 0usize;
+            let mut off = 0usize;
+            for op in ops {
+                let next = off + op.encode().len();
+                if next > *cut {
+                    break;
+                }
+                off = next;
+                fit += 1;
+            }
+            let replay = replay_bytes(&bytes[..*cut]).map_err(|e| {
+                format!("byte-truncation must never refuse: {e}")
+            })?;
+            if replay.ops != ops[..fit] {
+                return Err(format!(
+                    "cut at {cut}: replayed {} ops, longest valid prefix \
+                     is {fit}",
+                    replay.ops.len()
+                ));
+            }
+            if replay.valid_len != off as u64 {
+                return Err(format!(
+                    "cut at {cut}: valid_len {} != prefix end {off}",
+                    replay.valid_len
+                ));
+            }
+            let clean = off == *cut;
+            match replay.tail {
+                TailOutcome::Clean if !clean => {
+                    Err(format!("cut at {cut} mid-record reported Clean"))
+                }
+                TailOutcome::Truncated { dropped_bytes }
+                    if clean || dropped_bytes != (*cut - off) as u64 =>
+                {
+                    Err(format!(
+                        "cut at {cut}: dropped {dropped_bytes}, expected {}",
+                        *cut - off
+                    ))
+                }
+                _ => Ok(()),
+            }
+        },
+        |(ops, cut)| {
+            // shrink the op list; clamp the cut into the smaller image
+            shrink_vec(ops)
+                .into_iter()
+                .map(|o| {
+                    let max = encode_log(&o).len();
+                    (o, (*cut).min(max))
+                })
+                .collect()
+        },
+    );
+}
+
+#[test]
+fn snapshot_with_any_single_bit_flipped_is_refused() {
+    forall_simple(
+        120,
+        |rng| {
+            let snap = gen_snapshot(rng);
+            let bits = snap.to_bytes().len() * 8;
+            (snap, rng.below(bits as u64) as usize)
+        },
+        |(snap, bit)| {
+            let mut bytes = snap.to_bytes();
+            bytes[bit / 8] ^= 1 << (bit % 8);
+            match Snapshot::from_bytes(&bytes) {
+                Err(_) => Ok(()), // refused loudly — required
+                Ok(loaded) => Err(format!(
+                    "bit {bit} flipped yet the snapshot loaded \
+                     ({} entries, epoch {})",
+                    loaded.entries.len(),
+                    loaded.partition_epoch
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn log_with_a_flipped_bit_errs_or_yields_a_clean_prefix() {
+    // A flipped bit inside a record body/CRC is detected: mid-log it
+    // refuses loudly, on the final record it truncates (indistinct
+    // from a torn tail). A flipped LENGTH field may also swallow valid
+    // trailing records by overrunning EOF — still a prefix. What can
+    // NEVER happen: fabricated, mutated or reordered operations.
+    forall_simple(
+        200,
+        |rng| {
+            let ops = gen_ops(rng, 10);
+            let bits = encode_log(&ops).len() * 8;
+            (ops, rng.below(bits as u64) as usize)
+        },
+        |(ops, bit)| {
+            let mut bytes = encode_log(ops);
+            bytes[bit / 8] ^= 1 << (bit % 8);
+            match replay_bytes(&bytes) {
+                Err(_) => Ok(()), // loud refusal
+                Ok(replay) => {
+                    if replay.ops.len() <= ops.len()
+                        && replay.ops == ops[..replay.ops.len()]
+                    {
+                        Ok(())
+                    } else {
+                        Err(format!(
+                            "bit {bit} flipped and replay returned {} ops \
+                             that are NOT a prefix of the {} written",
+                            replay.ops.len(),
+                            ops.len()
+                        ))
+                    }
+                }
+            }
+        },
+    );
+}

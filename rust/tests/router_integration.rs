@@ -782,6 +782,209 @@ fn prober_observes_load_and_readmits_restarted_backend() {
 }
 
 #[test]
+fn warm_restart_rejoins_at_recorded_epoch_with_delta_catch_up() {
+    // The ISSUE-9 acceptance scenario: a DURABLE backend (--data-dir)
+    // is killed and restarted warm from its snapshot + op log. The
+    // prober must re-admit it at the partition epoch recorded on disk
+    // (no operator repartition), and `\x01join` of the already-member
+    // address must take the REJOIN path: no epoch roll, and only the
+    // writes it missed while down are streamed — O(delta), not the
+    // O(index) full handoff a cold join performs.
+    let data_dir = std::env::temp_dir()
+        .join(format!("cft-warm-rejoin-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&data_dir);
+
+    let ds = dataset(6);
+    let cfg = RouterConfig {
+        probe_interval: Duration::from_millis(40),
+        connect_timeout: Duration::from_secs(2),
+        request_timeout: Duration::from_secs(10),
+        // writes must still ack while one of R=2 replicas is down —
+        // that is precisely the delta the rejoin exists to close
+        write_quorum: 1,
+        ..RouterConfig::default()
+    };
+
+    // 3-backend R=2 partitioned fleet; backend 0 is the durable one
+    let listeners: Vec<TcpListener> = (0..3)
+        .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind"))
+        .collect();
+    let addrs: Vec<String> = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect();
+    let mut backends: Vec<TestBackend> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(i, listener)| {
+            let cfg = RagConfig {
+                replication_factor: 2,
+                key_partition: Some(
+                    KeyPartition::new(addrs.clone(), i, 2).expect("partition"),
+                ),
+                data_dir: (i == 0).then(|| data_dir.clone()),
+                ..RagConfig::default()
+            };
+            TestBackend::start_on(&ds, listener, cfg)
+        })
+        .collect();
+    let names = entity_names(&ds);
+    let router_cfg = RouterConfig {
+        backends: addrs.clone(),
+        replication_factor: 2,
+        ..cfg
+    };
+    let router = Arc::new(
+        Router::connect(names.iter().map(String::as_str), &router_cfg)
+            .expect("router"),
+    );
+    fn wait_until(what: &str, cond: impl FnMut() -> bool) {
+        cft_rag::util::wait::require(what, Duration::from_secs(10), cond);
+    }
+
+    // roll the fleet off epoch 0 so "re-admitted at the RECORDED epoch"
+    // is a real assertion: drain backend 2 → epoch 1, survivors
+    // repartitioned over [addr0, addr1] (R=2 of 2: every key on both);
+    // backend 0 logs the Epoch(1) record durably
+    let reply = router.drain(&addrs[2]);
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(router.ring_epoch(), 1);
+    let rebalanced_before_rejoin = router.snapshot().rebalanced_keys;
+
+    // entities with real forest occurrences, for valid write addresses
+    let forest = ds.build_forest();
+    let occupied: Vec<&String> = names
+        .iter()
+        .filter(|n| {
+            forest
+                .entity_id(n)
+                .is_some_and(|id| !forest.scan_addresses(id).is_empty())
+        })
+        .collect();
+    assert!(occupied.len() >= 3, "need 3 occupied entities");
+    let (e_pre, e_dead_del, e_dead_ins) =
+        (occupied[0], occupied[1], occupied[2]);
+
+    // an acked PRE-kill write: this delete must survive the restart
+    // purely from disk (a plain forest rebuild would resurrect it)
+    let reply = router.remove(e_pre);
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+
+    // kill the durable backend (final snapshot cut on clean stop; the
+    // SIGKILL-mid-churn variant lives in tests/crash_consistency.rs)
+    backends[0].kill();
+    wait_until("prober demotes the dead durable backend", || {
+        !router.backends()[0].health().is_healthy()
+    });
+
+    // the WHILE-DEAD delta: one delete, one brand-new occurrence —
+    // acked by the surviving replica alone (write_quorum = 1)
+    let reply = router.remove(e_dead_del);
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    let ins_id = forest.entity_id(e_dead_ins).unwrap();
+    let have: Vec<_> = forest.scan_addresses(ins_id);
+    let novel = forest
+        .entity_id(e_pre)
+        .map(|id| forest.scan_addresses(id))
+        .unwrap()
+        .into_iter()
+        .find(|a| !have.contains(a))
+        .expect("an address not already indexed for e_dead_ins");
+    let reply = router.update(e_dead_ins, novel.tree, novel.node);
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+
+    // warm restart on the same address, same data dir, the post-drain
+    // partition — the recovery path restores snapshot + log and stamps
+    // the RECORDED epoch (1), with no repartition from anyone
+    let listener = TcpListener::bind(&addrs[0]).expect("rebind backend 0");
+    backends[0] = TestBackend::start_on(
+        &ds,
+        listener,
+        RagConfig {
+            replication_factor: 2,
+            key_partition: Some(
+                KeyPartition::new(
+                    vec![addrs[0].clone(), addrs[1].clone()],
+                    0,
+                    2,
+                )
+                .expect("partition"),
+            ),
+            data_dir: Some(data_dir.clone()),
+            ..RagConfig::default()
+        },
+    );
+    let warm = &backends[0].coordinator;
+    assert_eq!(
+        warm.partition_epoch(),
+        1,
+        "recovery must re-stamp the partition at the recorded epoch"
+    );
+    let d = warm.durability().expect("durable backend has counters");
+    assert!(d.snapshot_loaded, "restart must load the final snapshot");
+    assert!(
+        warm.dump_entity(e_pre).is_empty(),
+        "the acked pre-kill delete must hold from disk"
+    );
+    assert!(
+        !warm.dump_entity(e_dead_del).is_empty(),
+        "sanity: the while-dead delete is exactly what rejoin must close"
+    );
+
+    // the prober re-admits off the recorded epoch alone
+    wait_until("prober re-admits the warm-restarted backend", || {
+        router.backends()[0].health().is_healthy()
+    });
+    assert!(router.backends()[0].health().readmissions() >= 1);
+
+    // \x01join of an existing member = REJOIN: same epoch, no drop
+    // pass, and ONLY the while-dead delta streamed
+    let reply = router.join(&addrs[0]);
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(
+        reply.get("action").and_then(Json::as_str),
+        Some("rejoin"),
+        "{reply}"
+    );
+    assert_eq!(
+        reply.get("epoch").and_then(Json::as_f64),
+        Some(1.0),
+        "a rejoin must not roll the epoch: {reply}"
+    );
+    assert_eq!(router.ring_epoch(), 1);
+    assert_eq!(router.num_backends(), 2);
+    let streamed = reply
+        .get("keys_streamed")
+        .and_then(Json::as_f64)
+        .unwrap_or(f64::NAN) as usize;
+    // the delta is one replayed key (the while-dead insert; the
+    // while-dead delete reconciles by deletion, streaming nothing) —
+    // a full handoff would stream every owned key (R=2 of 2: ALL keys)
+    assert!(
+        streamed >= 1 && streamed < names.len() / 2,
+        "rejoin must stream O(delta), not O(index): {streamed} of {} keys",
+        names.len()
+    );
+    let rejoin_keys =
+        router.snapshot().rebalanced_keys - rebalanced_before_rejoin;
+    assert!(
+        (rejoin_keys as usize) < names.len() / 2,
+        "stats must show delta-sized catch-up, got {rejoin_keys}"
+    );
+
+    // the rejoined backend converged on the while-dead writes
+    assert!(
+        warm.dump_entity(e_dead_del).is_empty(),
+        "rejoin must apply the missed delete"
+    );
+    assert!(
+        warm.dump_entity(e_dead_ins).contains(&novel),
+        "rejoin must replay the missed insert"
+    );
+    let _ = std::fs::remove_dir_all(&data_dir);
+}
+
+#[test]
 fn elasticity_contracts_are_named_and_enforced() {
     use cft_rag::router::contracts;
 

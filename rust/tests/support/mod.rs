@@ -1,0 +1,204 @@
+//! Subprocess harness for crash-consistency testing: spawns the REAL
+//! `cft-rag` binary (not an in-process coordinator) so a test can
+//! SIGKILL it at an arbitrary instant — no destructors, no flushes,
+//! exactly the failure a durable backend (`persist/`) must survive —
+//! then restart it from the same `--data-dir` and interrogate the
+//! recovered state over the newline-delimited TCP protocol.
+//!
+//! Kept under `tests/support/` (not a `tests/*.rs` target of its own)
+//! so every integration test that needs a killable backend process can
+//! `mod support;` it.
+
+#![allow(dead_code)] // each test binary uses its own subset
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use cft_rag::util::json::Json;
+
+/// Reserve a free loopback port: bind :0, read the assignment, drop
+/// the listener. (The tiny window before the subprocess re-binds it is
+/// the standard test-harness race; loopback reassignment inside one
+/// process tree is effectively never observed in practice.)
+pub fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0")
+        .expect("reserve port")
+        .local_addr()
+        .unwrap()
+        .port()
+}
+
+/// One `cft-rag serve` child process bound to `127.0.0.1:{port}`.
+///
+/// Dropping the handle SIGKILLs and reaps the child — tests that want
+/// a *clean* shutdown (final snapshot cut) must call [`stop`] first.
+///
+/// [`stop`]: BackendProc::stop
+pub struct BackendProc {
+    child: Child,
+    pub addr: String,
+    pub data_dir: PathBuf,
+}
+
+impl BackendProc {
+    /// Spawn `cft-rag serve` with a durable `--data-dir`, plus any
+    /// extra CLI arguments, and wait until it accepts connections.
+    pub fn spawn(
+        port: u16,
+        data_dir: &Path,
+        extra_args: &[&str],
+    ) -> BackendProc {
+        let addr = format!("127.0.0.1:{port}");
+        let child = Command::new(env!("CARGO_BIN_EXE_cft-rag"))
+            .arg("serve")
+            .args(["--port", &port.to_string()])
+            .args(["--trees", "12"])
+            .args(["--workers", "2"])
+            .args(["--engine", "native"])
+            .args(["--data-dir", &data_dir.display().to_string()])
+            .args(extra_args)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn cft-rag serve");
+        let mut proc = BackendProc {
+            child,
+            addr,
+            data_dir: data_dir.to_path_buf(),
+        };
+        proc.wait_listening(Duration::from_secs(30));
+        proc
+    }
+
+    /// Poll-connect until the child accepts (the listen banner prints
+    /// *before* the bind, so connecting is the only reliable signal).
+    fn wait_listening(&mut self, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if TcpStream::connect(&self.addr).is_ok() {
+                return;
+            }
+            if let Ok(Some(status)) = self.child.try_wait() {
+                panic!("backend exited before listening: {status}");
+            }
+            if Instant::now() >= deadline {
+                let _ = self.child.kill();
+                let _ = self.child.wait();
+                panic!("backend never listened on {}", self.addr);
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// A fresh protocol connection to the child.
+    pub fn client(&self) -> Client {
+        Client::connect(&self.addr).expect("connect to backend")
+    }
+
+    /// SIGKILL — no shutdown path runs, no buffers flush. This is the
+    /// crash under test.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill(); // SIGKILL on unix
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for BackendProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// One persistent connection speaking the newline-delimited protocol:
+/// send a line, read the one-line JSON reply.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> std::io::Result<Client> {
+        let writer = TcpStream::connect(addr)?;
+        writer.set_nodelay(true)?;
+        let reader = BufReader::new(writer.try_clone()?);
+        Ok(Client { writer, reader })
+    }
+
+    /// Send `line` and read the acknowledging reply. Panics on a
+    /// non-JSON reply — every control line acks with one JSON line.
+    pub fn send(&mut self, line: &str) -> Json {
+        self.send_no_reply(line);
+        self.read_reply()
+    }
+
+    /// Write `line` without waiting for its ack — the "crash with an
+    /// op in flight" half of a kill-point schedule.
+    pub fn send_no_reply(&mut self, line: &str) {
+        self.writer
+            .write_all(format!("{line}\n").as_bytes())
+            .expect("write line");
+        self.writer.flush().expect("flush line");
+    }
+
+    /// Read one JSON reply line.
+    pub fn read_reply(&mut self) -> Json {
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf).expect("read reply");
+        assert!(n > 0, "backend closed the connection mid-reply");
+        Json::parse(buf.trim_end())
+            .unwrap_or_else(|e| panic!("non-JSON reply {buf:?}: {e}"))
+    }
+
+    /// `\x01insert tree node entity`, acked.
+    pub fn insert(&mut self, entity: &str, tree: u32, node: u32) -> Json {
+        self.send(&format!("\x01insert {tree} {node} {entity}"))
+    }
+
+    /// `\x01delete entity`, acked.
+    pub fn delete(&mut self, entity: &str) -> Json {
+        self.send(&format!("\x01delete {entity}"))
+    }
+
+    /// `\x01dump entity` → the sorted (tree, node) address list.
+    pub fn dump(&mut self, entity: &str) -> Vec<(u32, u32)> {
+        let reply = self.send(&format!("\x01dump {entity}"));
+        assert_eq!(
+            reply.get("ok"),
+            Some(&Json::Bool(true)),
+            "dump {entity}: {reply}"
+        );
+        let mut out: Vec<(u32, u32)> = reply
+            .get("addresses")
+            .and_then(Json::as_arr)
+            .unwrap_or_else(|| panic!("dump without addresses: {reply}"))
+            .iter()
+            .map(|a| {
+                (
+                    a.get("tree").and_then(Json::as_f64).unwrap() as u32,
+                    a.get("node").and_then(Json::as_f64).unwrap() as u32,
+                )
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// `\x01stats`, acked.
+    pub fn stats(&mut self) -> Json {
+        self.send("\x01stats")
+    }
+}
+
+/// A unique scratch directory under the system temp dir; pre-cleaned
+/// so a rerun never inherits a previous run's state.
+pub fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("cft-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}

@@ -4,6 +4,7 @@
 #   scripts/check.sh                      # fmt + clippy + build + test
 #   scripts/check.sh --fast               # skip the release build
 #   scripts/check.sh --obs                # observability smoke (shipped binary)
+#   scripts/check.sh --crash              # SIGKILL crash-consistency harness
 #   scripts/check.sh --analysis           # all deep-analysis jobs
 #   scripts/check.sh --analysis modelcheck|miri|tsan   # one job
 #
@@ -135,8 +136,42 @@ run_obs() {
   echo "OK (obs smoke)"
 }
 
+# --------------------------------------------------------------------
+# Crash consistency: SIGKILL real `cft-rag serve --data-dir` child
+# processes mid-churn and prove the durable backend loses no acked
+# write (tests/crash_consistency.rs; format proptests ride along in
+# tests/prop_persist.rs). The harness prints each schedule's seed and a
+# one-line replay command (CFT_CRASH_SEED=<seed> …) on failure — the
+# modelcheck convention. Loud SKIP where subprocess supervision is
+# unavailable (no /proc: sandboxed or exotic containers).
+# --------------------------------------------------------------------
+run_crash() {
+  if [[ "$(uname -s)" != "Linux" && "$(uname -s)" != "Darwin" ]]; then
+    echo "SKIP crash: needs a unix host (SIGKILL semantics)"
+    return 0
+  fi
+  if [[ "$(uname -s)" == "Linux" && ! -d /proc ]]; then
+    echo "SKIP crash: /proc unavailable — cannot supervise subprocesses"
+    return 0
+  fi
+  if ! cargo --version >/dev/null 2>&1; then
+    echo "SKIP crash: cargo not installed"
+    return 0
+  fi
+  echo "==> cargo test --test crash_consistency (seeded SIGKILL schedules)"
+  cargo test -q --test crash_consistency -- --nocapture
+  echo "==> cargo test --test prop_persist (format roundtrip/corruption)"
+  cargo test -q --test prop_persist
+}
+
 if [[ "${1:-}" == "--obs" ]]; then
   run_obs
+  exit 0
+fi
+
+if [[ "${1:-}" == "--crash" ]]; then
+  run_crash
+  echo "OK (crash)"
   exit 0
 fi
 
