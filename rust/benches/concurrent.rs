@@ -53,12 +53,22 @@
 //! tracing hooks plus the filter's relaxed-atomic telemetry counters
 //! cost < 3% throughput.
 //!
+//! The ISSUE-10 scenario: **reply caching under a hot query mix** — a
+//! skewed (Zipf s = 1.1) single-entity load repeated against a 3-backend
+//! R=2 partitioned fleet, once with the reply cache disabled
+//! (`cache_capacity_bytes = 0`, i.e. `--cache-off`) and once with the
+//! default 8 MiB cache. The working set repeats every pass, so after
+//! the first pass the cached arm answers hot queries from memory;
+//! the arm reports the hit rate and the throughput delta vs the
+//! uncached arm.
+//!
 //! Run: `cargo bench --bench concurrent`. Writes `results/concurrent.csv`,
 //! `results/concurrent_expansion.csv`, `results/concurrent_bloom.csv`,
 //! `results/concurrent_router.csv`, `results/concurrent_replication.csv`,
 //! `results/concurrent_join.csv`, `results/concurrent_connscale.csv`,
-//! `results/concurrent_obs.csv`, and a machine-readable summary of every
-//! scenario's headline numbers to `results/BENCH_concurrent.json`.
+//! `results/concurrent_obs.csv`, `results/concurrent_cache.csv`, and a
+//! machine-readable summary of every scenario's headline numbers to
+//! `results/BENCH_concurrent.json`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -459,6 +469,9 @@ fn main() {
     // ---- observability overhead: tracing off vs every-query ----
     let obs_json = obs_overhead_scenario(&args, &out);
 
+    // ---- reply cache: hot Zipf load, cache off vs the 8 MiB default ----
+    let cache_json = cache_scenario(&args, &out);
+
     // machine-readable summary of every scenario, alongside the CSVs
     let bench_json = Json::obj(vec![
         ("bench", Json::Str("concurrent".to_string())),
@@ -477,6 +490,7 @@ fn main() {
         ("join", join_json),
         ("connscale", connscale_json),
         ("obs_overhead", obs_json),
+        ("reply_cache", cache_json),
     ]);
     let json_out = match out.rfind('/') {
         Some(i) => format!("{}/BENCH_concurrent.json", &out[..i]),
@@ -835,6 +849,207 @@ fn replication_scenario(args: &Args, out: &str) -> Json {
     Json::obj(vec![
         ("arms", Json::Arr(arms_json)),
         ("csv", Json::Str(rep_out)),
+    ])
+}
+
+/// The ISSUE-10 acceptance scenario: the reply cache under a hot query
+/// mix. A skewed (Zipf s = 1.1) single-entity load cycles through a
+/// 64-query working set against a 3-backend R=2 partitioned fleet,
+/// once with the cache disabled (`cache_capacity_bytes = 0` — what
+/// `--cache-off` sets) and once with the 8 MiB default. Every pass
+/// after the first re-asks the same hot queries, so the cached arm
+/// serves most of them from memory without touching a backend.
+/// Reports the cached arm's hit rate and its throughput delta vs the
+/// uncached arm — the two headline numbers of the caching PR.
+fn cache_scenario(args: &Args, out: &str) -> Json {
+    let queries: usize = args.num_or("router-queries", 384);
+    let clients: usize = args.num_or("router-clients", 8).max(1);
+    let workers: usize = args.num_or("router-workers", 2);
+    let trees: usize = args.num_or("router-trees", 60);
+    const N: usize = 3;
+    const R: usize = 2;
+
+    let ds = HospitalDataset::generate(HospitalConfig {
+        trees,
+        ..HospitalConfig::default()
+    });
+    let forest = Arc::new(ds.build_forest());
+    let names: Vec<String> = forest
+        .interner()
+        .iter()
+        .map(|(_, n)| n.to_string())
+        .collect();
+    // Hot working set: Zipf-drawn single-entity mentions, repeated every
+    // pass — the load shape a reply cache exists for. s = 1.1 keeps a
+    // long tail alive so misses never disappear entirely.
+    let workload = Workload::generate(
+        &forest,
+        WorkloadConfig {
+            entities_per_query: 1,
+            queries: 64,
+            zipf_s: 1.1,
+            deep_bias: 0.0,
+            ..Default::default()
+        },
+    );
+
+    println!(
+        "\nreply cache under hot Zipf load ({N} backends, R={R}, \
+         {queries} queries, {clients} clients):"
+    );
+    let mut csv = CsvTable::new(&[
+        "cache_bytes",
+        "qps",
+        "speedup_vs_off",
+        "hits",
+        "misses",
+        "hit_rate",
+        "evictions",
+        "resident_bytes",
+        "failures",
+    ]);
+    let mut arms_json: Vec<Json> = Vec::new();
+    let mut base_qps = 0.0f64;
+    for cache_bytes in [0usize, 8 * 1024 * 1024] {
+        // bind first: partitioned indexes need the final address list
+        let listeners: Vec<TcpListener> = (0..N)
+            .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind"))
+            .collect();
+        let addrs: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        let mut backends = Vec::with_capacity(N);
+        for (i, listener) in listeners.into_iter().enumerate() {
+            let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+            let cfg = RagConfig {
+                replication_factor: R,
+                key_partition: Some(
+                    KeyPartition::new(addrs.clone(), i, R)
+                        .expect("partition"),
+                ),
+                ..RagConfig::default()
+            };
+            let coordinator = Arc::new(
+                Coordinator::start(
+                    forest.clone(),
+                    corpus_from_texts(&ds.documents()),
+                    engine,
+                    cfg,
+                    CoordinatorConfig { workers, ..Default::default() },
+                )
+                .expect("backend coordinator"),
+            );
+            let handle = serve_listener(coordinator.clone(), listener)
+                .expect("backend listener");
+            backends.push((coordinator, handle));
+        }
+        let router = Arc::new(
+            Router::connect(
+                names.iter().map(String::as_str),
+                &RouterConfig {
+                    replication_factor: R,
+                    cache_capacity_bytes: cache_bytes,
+                    probe_interval: Duration::from_millis(25),
+                    ..RouterConfig::for_backends(addrs)
+                },
+            )
+            .expect("router"),
+        );
+
+        for q in workload.queries.iter().take(8) {
+            let _ = router.query(&q.text);
+        }
+        // counters are cumulative; delta out the warmup's fills so the
+        // reported hit rate covers only the timed window
+        let warm = router.snapshot();
+
+        let t0 = Instant::now();
+        let failures: usize = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let router = router.clone();
+                    let workload = &workload;
+                    let share = queries / clients
+                        + usize::from(c < queries % clients);
+                    s.spawn(move || {
+                        let mut failures = 0usize;
+                        for i in 0..share {
+                            let q = &workload.queries
+                                [(c + i * clients) % workload.queries.len()];
+                            let reply = router.query(&q.text);
+                            if reply.get("ok") != Some(&Json::Bool(true)) {
+                                failures += 1;
+                            }
+                        }
+                        failures
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let qps = queries as f64 / wall;
+        if base_qps == 0.0 {
+            base_qps = qps;
+        }
+        let speedup = qps / base_qps;
+        let snap = router.snapshot();
+        let hits = snap.cache_hits - warm.cache_hits;
+        let misses = snap.cache_misses - warm.cache_misses;
+        let looked = (hits + misses).max(1);
+        let hit_rate = hits as f64 / looked as f64;
+        println!(
+            "  cache {:>8}  {qps:>8.1} q/s ({speedup:.2}x vs off)  \
+             {hits} hits / {misses} misses ({:.0}% hit rate)  \
+             {} evictions  {} resident bytes  {failures} failures",
+            if cache_bytes == 0 {
+                "off".to_string()
+            } else {
+                format!("{} MiB", cache_bytes >> 20)
+            },
+            hit_rate * 100.0,
+            snap.cache_evictions,
+            snap.cache_bytes,
+        );
+        csv.push(&[
+            cache_bytes.to_string(),
+            format!("{qps}"),
+            format!("{speedup}"),
+            hits.to_string(),
+            misses.to_string(),
+            format!("{hit_rate}"),
+            snap.cache_evictions.to_string(),
+            snap.cache_bytes.to_string(),
+            failures.to_string(),
+        ]);
+        arms_json.push(Json::obj(vec![
+            ("cache_bytes", Json::Num(cache_bytes as f64)),
+            ("qps", Json::Num(qps)),
+            ("speedup_vs_off", Json::Num(speedup)),
+            ("hits", Json::Num(hits as f64)),
+            ("misses", Json::Num(misses as f64)),
+            ("hit_rate", Json::Num(hit_rate)),
+            ("evictions", Json::Num(snap.cache_evictions as f64)),
+            ("resident_bytes", Json::Num(snap.cache_bytes as f64)),
+            ("failures", Json::Num(failures as f64)),
+        ]));
+
+        drop(router); // prober stops before its backends vanish
+        for (coordinator, handle) in backends {
+            handle.shutdown();
+            coordinator.stop();
+        }
+    }
+    let cache_out = match out.strip_suffix(".csv") {
+        Some(stem) => format!("{stem}_cache.csv"),
+        None => format!("{out}_cache.csv"),
+    };
+    csv.write_to(&cache_out).expect("write cache csv");
+    println!("wrote {cache_out}");
+    Json::obj(vec![
+        ("arms", Json::Arr(arms_json)),
+        ("csv", Json::Str(cache_out)),
     ])
 }
 

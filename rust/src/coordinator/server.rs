@@ -44,6 +44,7 @@ use crate::rag::config::RagConfig;
 use crate::rag::pipeline::make_concurrent_retriever;
 use crate::util::log;
 use crate::retrieval::context::{generate_context, Context};
+use crate::retrieval::context_cache::ContextCache;
 use crate::retrieval::ConcurrentRetriever;
 use crate::runtime::engine::Engine;
 use crate::text::tokenizer::tokenize_padded;
@@ -170,6 +171,13 @@ pub struct Coordinator {
     /// Process start, for the `uptime_s` stats field (real wall clock
     /// on purpose — uptime is operator-facing, never model-checked).
     started: std::time::Instant,
+    /// Per-entity context memo ([`RagConfig::context_cache_entries`],
+    /// 0 = disabled): shared with the worker pool, invalidated by the
+    /// dynamic-update control lines *before* their acks return and
+    /// flushed on `\x01repartition`/`\x01purge` — the backend half of
+    /// the hot-entity caching story (`router/cache.rs` is the router
+    /// half).
+    context_cache: Arc<ContextCache>,
     /// Durable-state handle ([`RagConfig::data_dir`]): the op log every
     /// acked `\x01insert`/`\x01delete` is appended to *before* its ack
     /// is written, plus the snapshot machinery. `None` = volatile
@@ -202,6 +210,8 @@ impl Coordinator {
             make_concurrent_retriever(forest.clone(), &rag_cfg);
         let metrics = Metrics::new();
         let cache = EmbedCache::new();
+        let context_cache =
+            Arc::new(ContextCache::new(rag_cfg.context_cache_entries));
 
         let (submit_tx, submit_rx) = sync_channel::<Job>(SUBMIT_QUEUE_DEPTH);
         let (work_tx, work_rx) = sync_channel::<WorkItem>(1024);
@@ -305,6 +315,7 @@ impl Coordinator {
             let metrics = metrics.clone();
             let store = store.clone();
             let cache = cache.clone();
+            let ctx_cache = context_cache.clone();
             let levels = rag_cfg.context_levels;
             threads.push(
                 std::thread::Builder::new()
@@ -317,7 +328,7 @@ impl Coordinator {
                         let Ok(item) = item else { break };
                         let out = serve_one(
                             &item, &engine, &forest, &ner, &retriever, &store,
-                            &cache, levels,
+                            &cache, &ctx_cache, levels,
                         );
                         match &out {
                             Ok(r) => metrics
@@ -436,6 +447,7 @@ impl Coordinator {
                 rag_cfg.slow_query_threshold,
             ),
             started: std::time::Instant::now(),
+            context_cache,
             persist,
         })
     }
@@ -595,6 +607,11 @@ impl Coordinator {
         match self.retriever.insert_occurrence(entity, addr) {
             Some(applied) => {
                 if applied {
+                    // invalidate-before-ack: the entity's memoized
+                    // context reflects pre-write trees, and a racing
+                    // fill holding an older token is declined — after
+                    // this ack no reader can see the stale facts
+                    self.context_cache.invalidate(entity);
                     // ack-after-durable: the log record is fsynced (at
                     // --fsync-every 1) before this returns, and a log
                     // failure propagates as an error so the client is
@@ -625,6 +642,8 @@ impl Coordinator {
         match self.retriever.remove_entity_concurrent(entity) {
             Some(existed) => {
                 if existed {
+                    // invalidate-before-ack, same contract as inserts
+                    self.context_cache.invalidate(entity);
                     // durable before ack, same contract as inserts — a
                     // crash after this ack must not resurrect the entity
                     self.append_durable(&LogOp::Delete {
@@ -676,6 +695,9 @@ impl Coordinator {
         *self.partition.write().unwrap() = partition;
         self.partition_epoch
             .store(epoch, std::sync::atomic::Ordering::Release);
+        // ownership just changed wholesale; every memoized context is
+        // suspect, and the flush also poisons in-flight fill tokens
+        self.context_cache.flush();
         // Record the epoch the backend now serves, so a warm restart
         // re-admits at this epoch instead of the stale snapshot one.
         self.append_durable(&LogOp::Epoch(epoch))?;
@@ -689,7 +711,12 @@ impl Coordinator {
     /// Returns the number of keys removed (0 with no partition).
     pub fn drop_disowned(&self) -> Result<usize> {
         match self.retriever.drop_disowned_concurrent() {
-            Some(n) => Ok(n),
+            Some(n) => {
+                // dropped keys may be memoized; flush before the ack so
+                // no later query serves a reclaimed entity's context
+                self.context_cache.flush();
+                Ok(n)
+            }
             None if self.partition.read().unwrap().is_none() => Ok(0),
             None => Err(CftError::Config(format!(
                 "{} cannot drop disowned keys",
@@ -759,6 +786,13 @@ impl Coordinator {
         };
         let mut store = persist.lock().unwrap();
         self.snapshot_locked(&mut store)
+    }
+
+    /// Per-entity context cache handle — the TCP layer reports its
+    /// [`stats`](ContextCache::stats) in the `\x01stats` payload when
+    /// the cache is enabled, and tests drive invalidation through it.
+    pub fn context_cache(&self) -> &ContextCache {
+        &self.context_cache
     }
 
     /// Durability counters for `\x01stats` (`None` = volatile backend).
@@ -926,6 +960,7 @@ fn serve_one(
     retriever: &Arc<dyn ConcurrentRetriever>,
     store: &Arc<VectorStore>,
     cache: &EmbedCache,
+    ctx_cache: &ContextCache,
     levels: usize,
 ) -> Result<ServeResponse> {
     let traced = item.job.trace.is_sampled();
@@ -960,9 +995,22 @@ fn serve_one(
     let mut context = Context::default();
     let mut addrs = Vec::with_capacity(64);
     for e in &entities {
+        // memoized contexts short-circuit the filter walk entirely; a
+        // miss fills through the token so a write racing this query
+        // cannot park pre-write facts in the cache (fill-race guard,
+        // `retrieval/context_cache.rs`)
+        let (hit, token) = ctx_cache.lookup(e);
+        if let Some(ctx) = hit {
+            context.merge((*ctx).clone());
+            continue;
+        }
         addrs.clear();
         retriever.find_concurrent(e, &mut addrs);
-        context.merge(generate_context(forest, e, &addrs, levels));
+        let generated = generate_context(forest, e, &addrs, levels);
+        if ctx_cache.enabled() {
+            ctx_cache.admit(e, generated.clone(), token);
+        }
+        context.merge(generated);
     }
     let retrieval_time = rt.elapsed();
     let retrieval_done = Instant::now();

@@ -488,6 +488,26 @@ fn stats_reply(coordinator: &Coordinator, serving: &ServerStats) -> Json {
         if let Some(telemetry) = coordinator.filter_telemetry() {
             m.insert("filter".into(), telemetry.to_json());
         }
+        if coordinator.context_cache().enabled() {
+            let c = coordinator.context_cache().stats();
+            m.insert(
+                "context_cache".into(),
+                Json::obj(vec![
+                    ("hits", Json::Num(c.hits as f64)),
+                    ("misses", Json::Num(c.misses as f64)),
+                    (
+                        "invalidations",
+                        Json::Num(c.invalidations as f64),
+                    ),
+                    (
+                        "entries",
+                        Json::Num(
+                            coordinator.context_cache().len() as f64
+                        ),
+                    ),
+                ]),
+            );
+        }
         if let Some(d) = coordinator.durability() {
             m.insert(
                 "durability".into(),

@@ -270,6 +270,17 @@ pub struct RagConfig {
     /// and truncating it. `0` (default) = only on `\x01snapshot` or
     /// graceful shutdown. Ignored without [`data_dir`](RagConfig::data_dir).
     pub snapshot_interval_ops: u64,
+    /// Backend-side per-entity context cache
+    /// (`retrieval/context_cache.rs`): memoize each hot entity's
+    /// generated [`Context`](crate::retrieval::context::Context) so a
+    /// repeat mention skips the filter walk and tree traversal
+    /// entirely. Entries, not bytes — contexts are small and uniform.
+    /// Invalidated per-entity on applied `\x01insert`/`\x01delete` and
+    /// wholesale on `\x01repartition`/purge, under the same
+    /// never-stale contract as the router's reply cache. `0`
+    /// (default) = off; the `cft-rag serve` CLI enables it
+    /// (`--context-cache`).
+    pub context_cache_entries: usize,
 }
 
 impl Default for RagConfig {
@@ -290,6 +301,7 @@ impl Default for RagConfig {
             data_dir: None,
             fsync_every: 1,
             snapshot_interval_ops: 0,
+            context_cache_entries: 0,
         }
     }
 }
@@ -416,6 +428,14 @@ pub struct RouterConfig {
     /// A routed request slower than this is always recorded and logged
     /// as a `slow_query` line, sampled or not. Zero disables capture.
     pub slow_query_threshold: Duration,
+    /// Reply-cache budget in approximate heap bytes
+    /// (`router/cache.rs`): hot query replies are served straight from
+    /// the router, invalidated per-entity on acked writes and
+    /// wholesale on membership epoch rolls. `0` (default) disables the
+    /// cache — the library default is off so embedding tests see
+    /// unchanged routing behaviour; the `cft-rag route` CLI turns it
+    /// on (8 MiB) unless `--cache-off`.
+    pub cache_capacity_bytes: usize,
 }
 
 impl Default for RouterConfig {
@@ -434,6 +454,7 @@ impl Default for RouterConfig {
             idle_timeout: Duration::from_secs(60),
             trace_sample_every: 0,
             slow_query_threshold: Duration::from_millis(250),
+            cache_capacity_bytes: 0,
         }
     }
 }
@@ -636,6 +657,16 @@ mod tests {
         let cfg = RouterConfig::default();
         assert_eq!(cfg.replication_factor, 0, "0 = full-index backends");
         assert_eq!(cfg.write_quorum, 0, "0 = all replicas must ack");
+    }
+
+    #[test]
+    fn cache_knobs_default_off_in_the_library() {
+        // both caches are opt-in at the library layer so embedding
+        // tests (and the pre-cache fleets they model) see byte-for-byte
+        // unchanged behaviour; the CLI flips the defaults on
+        assert_eq!(RouterConfig::default().cache_capacity_bytes, 0);
+        assert_eq!(RagConfig::default().context_cache_entries, 0);
+        assert!(RagConfig::default().validate().is_ok());
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Backend-side per-entity context cache — the coordinator half of the
+//! hot-entity caching story (`router/cache.rs` is the router half).
+//!
+//! The per-query retrieval loop in `coordinator/server.rs` walks the
+//! filter and traverses the forest once per mentioned entity
+//! ([`generate_context`](crate::retrieval::context::generate_context)).
+//! Under Zipf mention skew the same hot entities repeat constantly and
+//! their trees are immutable between dynamic updates, so the generated
+//! [`Context`] can be memoized per entity and reused across queries —
+//! including queries for *different* entity sets that share a hot
+//! mention, which the router's whole-reply cache cannot serve.
+//!
+//! The never-stale contract mirrors the reply cache exactly:
+//!
+//! * **Point invalidation**: every applied `\x01insert` and every
+//!   `\x01delete` that removed an entry invalidates that entity's
+//!   context *before* the coordinator acks the write.
+//! * **Wholesale flush**: `\x01repartition` (a membership epoch
+//!   landing on this backend) and the post-rebalance disowned-key drop
+//!   pass flush everything — ownership changed under us.
+//! * **Fill-race guard**: a worker that looked the entity up, lost the
+//!   CPU, and admits a context generated from pre-write state must not
+//!   resurrect it after the invalidation. [`ContextCache::lookup`]
+//!   returns a [`CtxFillToken`]; [`ContextCache::admit`] declines when
+//!   any invalidation of that entity (or a flush) postdates it.
+//!
+//! Capacity is counted in **entries**, not bytes — contexts are small
+//! and uniform (a handful of rendered facts). When full, admission
+//! simply declines: under a skewed workload the hot entities are the
+//! first to arrive, so a full cache is already holding the right set,
+//! and declining is cheaper and simpler than an eviction policy whose
+//! wins the router-side sketch already captures.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::retrieval::context::Context;
+use crate::sync::Mutex;
+use crate::util::rng::fnv1a;
+
+/// Proof of *when* a lookup happened (the invalidation event counter at
+/// miss time); carried into [`ContextCache::admit`].
+#[derive(Clone, Copy, Debug)]
+pub struct CtxFillToken {
+    events: u64,
+}
+
+/// Counters snapshot: `(hits, misses, invalidations)`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ContextCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub invalidations: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// entity-key (`fnv1a` of the name) → cached context. The entity
+    /// name is stored and compared on hit: a 64-bit collision must
+    /// miss, never serve another entity's context.
+    entries: HashMap<u64, (String, Arc<Context>)>,
+    events: u64,
+    flushed_at: u64,
+    invalidated: HashMap<u64, u64>,
+}
+
+/// Thread-shared per-entity context cache. `capacity == 0` disables it
+/// (every method a cheap no-op), which is the library default —
+/// `cft-rag serve --context-cache N` turns it on.
+#[derive(Debug)]
+pub struct ContextCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+impl ContextCache {
+    /// New cache holding at most `capacity` entity contexts.
+    pub fn new(capacity: usize) -> ContextCache {
+        ContextCache {
+            capacity,
+            inner: Mutex::new(Inner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether this cache can ever hold an entry.
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Number of cached contexts.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hit/miss/invalidation counters (reported in the coordinator's
+    /// `\x01stats` payload when the cache is enabled).
+    pub fn stats(&self) -> ContextCacheStats {
+        ContextCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Look `entity` up; on a miss the caller generates the context
+    /// and offers it back through [`admit`](ContextCache::admit) with
+    /// the returned token.
+    pub fn lookup(&self, entity: &str) -> (Option<Arc<Context>>, CtxFillToken) {
+        if !self.enabled() {
+            return (None, CtxFillToken { events: 0 });
+        }
+        let key = fnv1a(entity.as_bytes());
+        let inner = self.inner.lock().unwrap();
+        let token = CtxFillToken { events: inner.events };
+        let hit = inner
+            .entries
+            .get(&key)
+            .filter(|(name, _)| name == entity)
+            .map(|(_, ctx)| Arc::clone(ctx));
+        drop(inner);
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        (hit, token)
+    }
+
+    /// Offer a freshly generated context. Declined when the cache is
+    /// full (hot entities arrive first under skew), or when an
+    /// invalidation of this entity — or a wholesale flush — postdates
+    /// `token` (the fill-race guard). Returns whether it was admitted.
+    pub fn admit(&self, entity: &str, ctx: Context, token: CtxFillToken) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        let key = fnv1a(entity.as_bytes());
+        let mut inner = self.inner.lock().unwrap();
+        if inner.flushed_at > token.events {
+            return false;
+        }
+        if inner.invalidated.get(&key).is_some_and(|&at| at > token.events) {
+            return false;
+        }
+        if inner.entries.len() >= self.capacity && !inner.entries.contains_key(&key)
+        {
+            return false;
+        }
+        inner.entries.insert(key, (entity.to_string(), Arc::new(ctx)));
+        true
+    }
+
+    /// Drop `entity`'s cached context (called by the coordinator after
+    /// an applied `\x01insert`/`\x01delete`, before the ack) and arm
+    /// the fill-race guard for it. Returns whether an entry existed.
+    pub fn invalidate(&self, entity: &str) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        let key = fnv1a(entity.as_bytes());
+        let mut inner = self.inner.lock().unwrap();
+        inner.events += 1;
+        let at = inner.events;
+        inner.invalidated.insert(key, at);
+        let existed = inner.entries.remove(&key).is_some();
+        drop(inner);
+        self.invalidations.fetch_add(1, Ordering::Relaxed);
+        existed
+    }
+
+    /// Drop everything (repartition / disowned-key reclamation) and arm
+    /// the fill-race guard globally. Returns entries dropped.
+    pub fn flush(&self) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.events += 1;
+        inner.flushed_at = inner.events;
+        inner.invalidated.clear();
+        let dropped = inner.entries.len();
+        inner.entries.clear();
+        drop(inner);
+        self.invalidations.fetch_add(1, Ordering::Relaxed);
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retrieval::context::{ContextFact, Direction};
+
+    fn ctx(entity: &str, related: &str) -> Context {
+        Context {
+            facts: vec![ContextFact {
+                entity: entity.to_string(),
+                related: related.to_string(),
+                direction: Direction::Up,
+                tree: 0,
+                distance: 1,
+            }],
+        }
+    }
+
+    #[test]
+    fn memoizes_and_counts() {
+        let c = ContextCache::new(8);
+        let (miss, token) = c.lookup("cardiology");
+        assert!(miss.is_none());
+        assert!(c.admit("cardiology", ctx("cardiology", "hospital"), token));
+        let (hit, _) = c.lookup("cardiology");
+        assert_eq!(hit.unwrap().facts[0].related, "hospital");
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let c = ContextCache::new(0);
+        assert!(!c.enabled());
+        let (miss, token) = c.lookup("x");
+        assert!(miss.is_none());
+        assert!(!c.admit("x", ctx("x", "y"), token));
+        assert!(!c.invalidate("x"));
+        assert_eq!(c.flush(), 0);
+        assert_eq!(c.stats(), ContextCacheStats::default());
+    }
+
+    #[test]
+    fn invalidation_drops_and_guards_racing_fills() {
+        let c = ContextCache::new(8);
+        let (_, token) = c.lookup("icu");
+        assert!(c.admit("icu", ctx("icu", "cardiology"), token));
+        // a write lands: the entry goes and the old token is poisoned
+        let (_, stale) = c.lookup("icu");
+        assert!(c.invalidate("icu"));
+        assert!(!c.admit("icu", ctx("icu", "pre-write"), stale));
+        assert!(c.lookup("icu").0.is_none(), "stale fill must not land");
+        // a token minted after the write admits fine
+        let (_, fresh) = c.lookup("icu");
+        assert!(c.admit("icu", ctx("icu", "post-write"), fresh));
+        assert_eq!(c.lookup("icu").0.unwrap().facts[0].related, "post-write");
+    }
+
+    #[test]
+    fn flush_guards_everything() {
+        let c = ContextCache::new(8);
+        let (_, t_a) = c.lookup("a");
+        let (_, t_b) = c.lookup("b");
+        assert!(c.admit("a", ctx("a", "x"), t_a));
+        assert_eq!(c.flush(), 1);
+        assert!(!c.admit("b", ctx("b", "y"), t_b), "flush poisons all tokens");
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn full_cache_declines_new_entities_but_refreshes_cached_ones() {
+        let c = ContextCache::new(2);
+        let (_, t) = c.lookup("a");
+        assert!(c.admit("a", ctx("a", "1"), t));
+        let (_, t) = c.lookup("b");
+        assert!(c.admit("b", ctx("b", "1"), t));
+        let (_, t) = c.lookup("overflow");
+        assert!(!c.admit("overflow", ctx("overflow", "1"), t));
+        assert_eq!(c.len(), 2);
+        // an already-cached entity may be refreshed in place
+        let (_, t) = c.lookup("a");
+        assert!(c.admit("a", ctx("a", "2"), t));
+        assert_eq!(c.lookup("a").0.unwrap().facts[0].related, "2");
+    }
+}

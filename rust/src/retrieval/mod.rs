@@ -23,11 +23,15 @@
 //! [`KeyPartition`](crate::rag::config::KeyPartition) at build time and
 //! index only the keys whose replica set contains the backend — the
 //! partitioned-backend-index half of the router's replication story
-//! (see `router/` and `docs/PROTOCOL.md`).
+//! (see `router/` and `docs/PROTOCOL.md`). Hot entities can
+//! additionally be memoized per backend by the opt-in
+//! [`context_cache::ContextCache`] (`--context-cache`), under the same
+//! never-stale invalidation contract as the router's reply cache.
 
 pub mod bloom2_rag;
 pub mod bloom_rag;
 pub mod context;
+pub mod context_cache;
 pub mod cuckoo_rag;
 pub mod naive;
 pub mod sharded_rag;

@@ -1,0 +1,653 @@
+//! Hot-entity reply cache for the router's query path (ROADMAP:
+//! "Hot-entity result caching, router and backend side").
+//!
+//! The paper's temperature mechanism exists because entity mention
+//! skew is heavy: under Zipf load a handful of hot entities dominate
+//! retrieval. Once retrieval itself is fast, the next multiplier is
+//! not doing the fan-out at all — a reply cache in front of the fleet.
+//! The hard part is never serving a stale reply, so the design is
+//! invalidation-first:
+//!
+//! * **Epoch in the key.** Entries are keyed on `(query text,
+//!   normalized entity set, partition epoch)`. A membership change
+//!   rolls the epoch, so every old entry becomes unreachable even
+//!   before the wholesale flush the rebalance path also performs
+//!   (belt *and* suspenders). The query text rides in the key because
+//!   a backend's generated answer depends on the phrasing, not only
+//!   the entity set — two phrasings of the same entities must not
+//!   share an entry.
+//! * **Exact, synchronous point invalidation.** The router's
+//!   `\x01insert`/`\x01delete` broadcast path calls
+//!   [`ReplyCache::invalidate_entity`] after the backends applied the
+//!   write and *before* the quorum ack returns — a client that saw
+//!   the ack can never read the pre-write reply (the
+//!   write-ack-implies-invalidated promise in `docs/PROTOCOL.md`).
+//! * **Fill-race guard.** A fill races concurrent invalidation: the
+//!   reply was assembled from backend state read *before* a
+//!   `\x01delete` landed, and a naive insert after the delete's
+//!   eviction would resurrect the stale reply. Every lookup returns a
+//!   [`FillToken`] capturing the invalidation event counter;
+//!   [`ReplyCache::admit`] re-checks under the cache lock that no
+//!   flush and no point invalidation of the entry's entities happened
+//!   since the token was minted, and declines the fill otherwise.
+//!   The `modelcheck_schedules.rs` cache schedules explore exactly
+//!   this window.
+//! * **Failover-aware fill.** The caller only admits replies whose
+//!   `ok:true`/`degraded:false` — a reply assembled from a degraded
+//!   scatter is missing facts and must not be pinned into the cache
+//!   (enforced at the call site in `scatter.rs`; the cache itself
+//!   additionally refuses non-`ok` replies).
+//!
+//! Admission is **frequency-driven, not recency-driven** (an LFU-ish
+//! sketch, per ROADMAP — not plain LRU): a [`FreqSketch`] — a small
+//! count-min sketch whose rows hash with the filter's own fingerprint
+//! family ([`rendezvous_score`]) — estimates how hot a key is. A new
+//! reply is admitted only by evicting strictly colder entries; a
+//! one-hit-wonder never displaces a hot entry. Capacity is counted in
+//! approximate heap **bytes** (`RouterConfig::cache_capacity_bytes`),
+//! not entries, so one giant merged reply cannot blow the budget.
+//!
+//! The sixth executable elasticity contract
+//! ([`CACHE_EPOCH_COHERENT`](crate::router::contracts::CACHE_EPOCH_COHERENT))
+//! is checked at every fill and hit site: no cache entry outlives its
+//! admission epoch.
+
+use std::collections::HashMap;
+
+use crate::filter::fingerprint::rendezvous_score;
+use crate::router::contracts;
+use crate::sync::Mutex;
+use crate::util::json::Json;
+use crate::util::rng::fnv1a;
+
+/// Count-min rows. Four independent hash rows keep the over-estimate
+/// bias low at this sketch size.
+const SKETCH_ROWS: usize = 4;
+
+/// Counters per row (power of two so the row hash is a mask).
+const SKETCH_COLS: usize = 1024;
+
+/// Halve every sketch counter after this many increments — the aging
+/// that turns raw counts into a sliding-window temperature, same idea
+/// as the filter's temperature decay.
+const SKETCH_AGE_EVERY: u64 = (SKETCH_COLS as u64) * 8;
+
+/// Fixed per-entry overhead charged against the byte budget on top of
+/// the measured key/reply strings (map slots, indexes, bookkeeping).
+const ENTRY_OVERHEAD_BYTES: usize = 128;
+
+/// Row seeds: fnv1a of literal row names, mixed per-row through
+/// [`rendezvous_score`] — the same fingerprint hash family the filter
+/// shards and the ring routes with, so the sketch inherits its tested
+/// independence properties instead of inventing a new mixer.
+fn row_seed(row: usize) -> u64 {
+    fnv1a(b"reply-cache-sketch-row") ^ (row as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// LFU-ish frequency sketch: a count-min sketch with saturating 8-bit
+/// counters and periodic halving. `estimate` over-counts (never
+/// under-counts) until saturation, which is the safe direction for an
+/// admission filter — a cold key can look warm and waste a slot, but a
+/// hot key can never look cold and be refused.
+#[derive(Debug)]
+struct FreqSketch {
+    rows: Vec<[u8; SKETCH_COLS]>,
+    increments: u64,
+}
+
+impl FreqSketch {
+    fn new() -> FreqSketch {
+        FreqSketch { rows: vec![[0u8; SKETCH_COLS]; SKETCH_ROWS], increments: 0 }
+    }
+
+    fn slot(row: usize, key: u64) -> usize {
+        (rendezvous_score(key, row_seed(row)) as usize) & (SKETCH_COLS - 1)
+    }
+
+    fn touch(&mut self, key: u64) {
+        for (i, row) in self.rows.iter_mut().enumerate() {
+            let c = &mut row[Self::slot(i, key)];
+            *c = c.saturating_add(1);
+        }
+        self.increments += 1;
+        if self.increments >= SKETCH_AGE_EVERY {
+            self.increments = 0;
+            for row in &mut self.rows {
+                for c in row.iter_mut() {
+                    *c >>= 1;
+                }
+            }
+        }
+    }
+
+    fn estimate(&self, key: u64) -> u8 {
+        self.rows
+            .iter()
+            .enumerate()
+            .map(|(i, row)| row[Self::slot(i, key)])
+            .min()
+            .unwrap_or(0)
+    }
+}
+
+/// One cached reply. The full key material is stored and compared on
+/// hit — a 64-bit slot-key collision must miss, never serve another
+/// query's reply.
+#[derive(Debug)]
+struct Entry {
+    query: String,
+    /// Sorted, deduplicated entity names — the normalized entity set.
+    entities: Vec<String>,
+    /// The membership epoch this reply was admitted under. A hit is
+    /// only valid at the same serving epoch (contract
+    /// `cache-epoch-coherent`).
+    epoch: u64,
+    reply: Json,
+    bytes: usize,
+}
+
+/// Opaque proof of *when* a lookup happened: the invalidation event
+/// count at miss time. [`ReplyCache::admit`] uses it to decline fills
+/// that raced an invalidation — see the module docs' fill-race guard.
+#[derive(Clone, Copy, Debug)]
+pub struct FillToken {
+    events: u64,
+}
+
+/// Outcome of an [`ReplyCache::admit`] attempt, for metrics and tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Admission {
+    /// The reply is now cached.
+    pub admitted: bool,
+    /// Capacity-driven evictions performed to make room (0 when the
+    /// fill was declined or nothing had to move).
+    pub evicted: usize,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    entries: HashMap<u64, Entry>,
+    /// entity-key (`fnv1a` of the name) → slot keys of entries whose
+    /// entity set contains it: the point-invalidation index.
+    by_entity: HashMap<u64, Vec<u64>>,
+    sketch: Option<FreqSketch>,
+    bytes: usize,
+    /// Monotonic invalidation event counter ([`FillToken`] source).
+    events: u64,
+    /// `events` value at the last wholesale flush.
+    flushed_at: u64,
+    /// entity-key → `events` value at its last point invalidation.
+    /// Cleared wholesale by a flush (`flushed_at` supersedes every
+    /// per-key stamp), which bounds it: every membership epoch roll
+    /// flushes, so the map never outgrows one epoch's write set.
+    invalidated: HashMap<u64, u64>,
+}
+
+impl Inner {
+    fn sketch(&mut self) -> &mut FreqSketch {
+        self.sketch.get_or_insert_with(FreqSketch::new)
+    }
+
+    fn remove_slot(&mut self, slot: u64) -> bool {
+        let Some(entry) = self.entries.remove(&slot) else {
+            return false;
+        };
+        self.bytes = self.bytes.saturating_sub(entry.bytes);
+        for e in &entry.entities {
+            let k = fnv1a(e.as_bytes());
+            if let Some(slots) = self.by_entity.get_mut(&k) {
+                slots.retain(|&s| s != slot);
+                if slots.is_empty() {
+                    self.by_entity.remove(&k);
+                }
+            }
+        }
+        true
+    }
+}
+
+/// The router-side reply cache. Shared by reference from the `Router`;
+/// all methods take `&self` and serialize on one internal mutex — the
+/// critical sections are map probes, far cheaper than the backend
+/// round trip a hit saves.
+#[derive(Debug)]
+pub struct ReplyCache {
+    capacity_bytes: usize,
+    inner: Mutex<Inner>,
+}
+
+/// Slot key of `(query, entities, epoch)`: fnv1a over the full key
+/// material with unambiguous separators (entity names cannot contain
+/// `\n` on the wire — the broadcast path rejects them — but the hash
+/// does not rely on that: the stored entry is compared field by field
+/// on every hit).
+fn slot_key(query: &str, entities: &[String], epoch: u64) -> u64 {
+    let mut material =
+        String::with_capacity(query.len() + entities.iter().map(|e| e.len() + 1).sum::<usize>() + 8);
+    material.push_str(query);
+    for e in entities {
+        material.push('\n');
+        material.push_str(e);
+    }
+    fnv1a(material.as_bytes()) ^ rendezvous_score(epoch, row_seed(SKETCH_ROWS))
+}
+
+impl ReplyCache {
+    /// New cache bounded by `capacity_bytes` of approximate entry
+    /// heap. `0` disables the cache entirely: every method is a cheap
+    /// no-op and [`ReplyCache::enabled`] is false.
+    pub fn new(capacity_bytes: usize) -> ReplyCache {
+        ReplyCache { capacity_bytes, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Whether this cache can ever hold an entry.
+    pub fn enabled(&self) -> bool {
+        self.capacity_bytes > 0
+    }
+
+    /// Approximate heap bytes of the cached entries (the `cache_bytes`
+    /// gauge).
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Number of cached entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up `(query, entities, epoch)`; `entities` must be the
+    /// normalized (sorted, deduplicated) entity set. Returns the
+    /// cached reply on a hit, plus the [`FillToken`] an eventual
+    /// [`ReplyCache::admit`] of a freshly assembled reply must carry.
+    /// Every lookup — hit or miss — warms the frequency sketch, so
+    /// admission temperature tracks demand, not cache contents.
+    pub fn lookup(
+        &self,
+        query: &str,
+        entities: &[String],
+        epoch: u64,
+    ) -> (Option<Json>, FillToken) {
+        if !self.enabled() {
+            return (None, FillToken { events: 0 });
+        }
+        let slot = slot_key(query, entities, epoch);
+        let mut inner = self.inner.lock().unwrap();
+        inner.sketch().touch(slot);
+        let token = FillToken { events: inner.events };
+        let hit = inner.entries.get(&slot).and_then(|e| {
+            let matches =
+                e.query == query && e.entities == entities && e.epoch == epoch;
+            if matches {
+                // contract (6): a served entry's admission epoch equals
+                // the serving epoch of the membership snapshot in hand
+                contracts::check_cache_epoch(e.epoch, epoch);
+                Some(e.reply.clone())
+            } else {
+                None // slot-key collision: miss, never cross-serve
+            }
+        });
+        (hit, token)
+    }
+
+    /// Try to cache `reply` for `(query, entities, epoch)`. Declined
+    /// (returning `admitted: false`) when:
+    ///
+    /// * the cache is disabled, the reply is not `ok:true`, or the
+    ///   entry alone exceeds the whole byte budget;
+    /// * an invalidation (wholesale or of any of the entry's entities)
+    ///   happened after `token` was minted — the fill-race guard;
+    /// * making room would require evicting an entry at least as hot
+    ///   as this one (the LFU-ish admission policy).
+    pub fn admit(
+        &self,
+        query: &str,
+        entities: &[String],
+        epoch: u64,
+        reply: &Json,
+        token: FillToken,
+    ) -> Admission {
+        let declined = Admission { admitted: false, evicted: 0 };
+        if !self.enabled() || reply.get("ok") != Some(&Json::Bool(true)) {
+            return declined;
+        }
+        let slot = slot_key(query, entities, epoch);
+        let mut inner = self.inner.lock().unwrap();
+
+        // fill-race guard: the reply in hand was assembled from
+        // backend state read before `token`; any newer invalidation
+        // makes it unusable
+        if inner.flushed_at > token.events {
+            return declined;
+        }
+        if entities.iter().any(|e| {
+            inner
+                .invalidated
+                .get(&fnv1a(e.as_bytes()))
+                .is_some_and(|&at| at > token.events)
+        }) {
+            return declined;
+        }
+
+        // contract (6) at the fill site: the admission epoch is the
+        // serving epoch the caller looked up under
+        contracts::check_cache_epoch(epoch, epoch);
+
+        let bytes = entry_bytes(query, entities, reply);
+        if bytes > self.capacity_bytes {
+            return declined;
+        }
+        // replacing an existing entry (same key, e.g. re-filled after
+        // a point invalidation) releases its bytes first
+        inner.remove_slot(slot);
+
+        // LFU-ish admission: make room by evicting strictly colder
+        // entries; if the coldest survivor is at least as hot as the
+        // newcomer, the newcomer loses instead
+        let heat = inner.sketch().estimate(slot);
+        let mut evicted = 0usize;
+        while inner.bytes + bytes > self.capacity_bytes {
+            let victim = inner
+                .entries
+                .iter()
+                .map(|(&s, e)| {
+                    (s, inner.sketch.as_ref().map_or(0, |sk| sk.estimate(s)), e.bytes)
+                })
+                .min_by_key(|&(_, est, _)| est);
+            match victim {
+                Some((slot, est, _)) if est < heat => {
+                    inner.remove_slot(slot);
+                    evicted += 1;
+                }
+                _ => return Admission { admitted: false, evicted },
+            }
+        }
+
+        inner.bytes += bytes;
+        for e in entities {
+            inner.by_entity.entry(fnv1a(e.as_bytes())).or_default().push(slot);
+        }
+        inner.entries.insert(
+            slot,
+            Entry {
+                query: query.to_string(),
+                entities: entities.to_vec(),
+                epoch,
+                reply: reply.clone(),
+                bytes,
+            },
+        );
+        Admission { admitted: true, evicted }
+    }
+
+    /// Point-invalidate every entry whose entity set contains
+    /// `entity` — the `\x01insert`/`\x01delete` broadcast path calls
+    /// this after the backends applied the write and before the quorum
+    /// ack returns. Also arms the fill-race guard for the entity, so a
+    /// fill whose token predates this call is declined. Returns the
+    /// number of entries dropped.
+    pub fn invalidate_entity(&self, entity: &str) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        let key = fnv1a(entity.as_bytes());
+        let mut inner = self.inner.lock().unwrap();
+        inner.events += 1;
+        let at = inner.events;
+        inner.invalidated.insert(key, at);
+        let slots = inner.by_entity.remove(&key).unwrap_or_default();
+        let mut dropped = 0usize;
+        for slot in slots {
+            if inner.remove_slot(slot) {
+                dropped += 1;
+            }
+        }
+        dropped
+    }
+
+    /// Wholesale flush — the epoch-roll path (`Router::join`/`drain`,
+    /// commit *and* abort). Drops every entry and arms the fill-race
+    /// guard globally: any fill whose token predates the flush is
+    /// declined. Returns the number of entries dropped.
+    pub fn flush(&self) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.events += 1;
+        inner.flushed_at = inner.events;
+        inner.invalidated.clear();
+        let dropped = inner.entries.len();
+        inner.entries.clear();
+        inner.by_entity.clear();
+        inner.bytes = 0;
+        dropped
+    }
+}
+
+/// Approximate heap bytes of one entry: the key material, the
+/// serialized reply, and a fixed bookkeeping overhead.
+fn entry_bytes(query: &str, entities: &[String], reply: &Json) -> usize {
+    query.len()
+        + entities.iter().map(|e| e.len() + 24).sum::<usize>()
+        + reply.to_string().len()
+        + ENTRY_OVERHEAD_BYTES
+}
+
+/// Normalize a recognized mention list into the cache's entity-set key
+/// form: sorted and deduplicated.
+pub fn normalize_entities(mut entities: Vec<String>) -> Vec<String> {
+    entities.sort();
+    entities.dedup();
+    entities
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reply(tag: &str) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("answer", Json::Str(tag.to_string())),
+        ])
+    }
+
+    fn ents(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn hit_roundtrip_and_epoch_separation() {
+        let c = ReplyCache::new(64 * 1024);
+        let e = ents(&["cardiology"]);
+        let (miss, token) = c.lookup("q", &e, 0);
+        assert!(miss.is_none());
+        assert!(c.admit("q", &e, 0, &reply("a"), token).admitted);
+        let (hit, _) = c.lookup("q", &e, 0);
+        assert_eq!(hit.unwrap().get("answer"), Some(&Json::Str("a".into())));
+        // same query at the next epoch is a distinct entry — an epoch
+        // roll makes old entries unreachable even without the flush
+        let (miss, _) = c.lookup("q", &e, 1);
+        assert!(miss.is_none(), "old-epoch entry must not serve epoch 1");
+        // distinct phrasings of the same entity set do not share
+        let (miss, _) = c.lookup("q2", &e, 0);
+        assert!(miss.is_none());
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let c = ReplyCache::new(0);
+        assert!(!c.enabled());
+        let e = ents(&["cardiology"]);
+        let (miss, token) = c.lookup("q", &e, 0);
+        assert!(miss.is_none());
+        assert!(!c.admit("q", &e, 0, &reply("a"), token).admitted);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.invalidate_entity("cardiology"), 0);
+        assert_eq!(c.flush(), 0);
+    }
+
+    #[test]
+    fn non_ok_replies_are_refused() {
+        let c = ReplyCache::new(64 * 1024);
+        let e = ents(&["cardiology"]);
+        let (_, token) = c.lookup("q", &e, 0);
+        let bad = Json::obj(vec![("ok", Json::Bool(false))]);
+        assert!(!c.admit("q", &e, 0, &bad, token).admitted);
+    }
+
+    #[test]
+    fn point_invalidation_drops_only_matching_entities() {
+        let c = ReplyCache::new(64 * 1024);
+        let ab = normalize_entities(ents(&["b", "a"]));
+        let cd = normalize_entities(ents(&["d", "c"]));
+        let (_, t1) = c.lookup("q1", &ab, 0);
+        let (_, t2) = c.lookup("q2", &cd, 0);
+        assert!(c.admit("q1", &ab, 0, &reply("ab"), t1).admitted);
+        assert!(c.admit("q2", &cd, 0, &reply("cd"), t2).admitted);
+        assert_eq!(c.len(), 2);
+        // invalidating "a" drops the ab entry only
+        assert_eq!(c.invalidate_entity("a"), 1);
+        assert_eq!(c.len(), 1);
+        assert!(c.lookup("q1", &ab, 0).0.is_none());
+        assert!(c.lookup("q2", &cd, 0).0.is_some());
+        // invalidating an uncached entity drops nothing but still
+        // arms the fill guard (covered below)
+        assert_eq!(c.invalidate_entity("zzz"), 0);
+    }
+
+    #[test]
+    fn fill_race_is_declined_after_point_invalidation() {
+        let c = ReplyCache::new(64 * 1024);
+        let e = ents(&["cardiology"]);
+        // the fill's token is minted at miss time...
+        let (_, token) = c.lookup("q", &e, 0);
+        // ...a delete lands while the reply is being assembled...
+        c.invalidate_entity("cardiology");
+        // ...so the (now stale) fill must be declined
+        assert!(!c.admit("q", &e, 0, &reply("stale"), token).admitted);
+        assert!(c.lookup("q", &e, 0).0.is_none());
+        // a fill begun after the invalidation goes through
+        let (_, fresh) = c.lookup("q", &e, 0);
+        assert!(c.admit("q", &e, 0, &reply("fresh"), fresh).admitted);
+    }
+
+    #[test]
+    fn fill_race_is_declined_after_flush() {
+        let c = ReplyCache::new(64 * 1024);
+        let e = ents(&["cardiology"]);
+        let (_, token) = c.lookup("q", &e, 0);
+        assert_eq!(c.flush(), 0);
+        assert!(!c.admit("q", &e, 0, &reply("stale"), token).admitted);
+        // unrelated entities are also guarded by a flush: it is an
+        // epoch-roll-grade event
+        let other = ents(&["oncology"]);
+        assert!(!c.admit("q2", &other, 0, &reply("stale"), token).admitted);
+    }
+
+    #[test]
+    fn flush_drops_everything() {
+        let c = ReplyCache::new(64 * 1024);
+        for i in 0..8 {
+            let e = ents(&[&format!("e{i}")]);
+            let (_, t) = c.lookup("q", &e, 0);
+            assert!(c.admit("q", &e, 0, &reply("x"), t).admitted);
+        }
+        assert_eq!(c.len(), 8);
+        assert!(c.bytes() > 0);
+        assert_eq!(c.flush(), 8);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.bytes(), 0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn byte_budget_bounds_the_cache() {
+        // capacity for roughly two entries of this shape
+        let e0 = ents(&["e0"]);
+        let (probe_cache, probe) =
+            (ReplyCache::new(usize::MAX), reply("xxxxxxxxxxxxxxxx"));
+        let (_, t) = probe_cache.lookup("q0", &e0, 0);
+        probe_cache.admit("q0", &e0, 0, &probe, t);
+        let per_entry = probe_cache.bytes();
+        let c = ReplyCache::new(per_entry * 2 + per_entry / 2);
+
+        // warm two keys hot, then try to push a cold third through
+        for _ in 0..4 {
+            c.lookup("q0", &ents(&["e0"]), 0);
+            c.lookup("q1", &ents(&["e1"]), 0);
+        }
+        let (_, t0) = c.lookup("q0", &ents(&["e0"]), 0);
+        assert!(c.admit("q0", &ents(&["e0"]), 0, &probe, t0).admitted);
+        let (_, t1) = c.lookup("q1", &ents(&["e1"]), 0);
+        assert!(c.admit("q1", &ents(&["e1"]), 0, &probe, t1).admitted);
+        assert!(c.bytes() <= per_entry * 2 + per_entry / 2);
+
+        // the cold newcomer cannot displace the hot incumbents...
+        let (_, t2) = c.lookup("q2", &ents(&["e2"]), 0);
+        let cold = c.admit("q2", &ents(&["e2"]), 0, &probe, t2);
+        assert!(!cold.admitted, "cold fill must not evict hot entries");
+        assert_eq!(c.len(), 2);
+
+        // ...but once it is hotter than an incumbent, it displaces it
+        for _ in 0..16 {
+            c.lookup("q3", &ents(&["e3"]), 0);
+        }
+        let (_, t3) = c.lookup("q3", &ents(&["e3"]), 0);
+        let hot = c.admit("q3", &ents(&["e3"]), 0, &probe, t3);
+        assert!(hot.admitted, "hot fill must displace a colder entry");
+        assert!(hot.evicted >= 1);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn oversized_entry_is_refused_outright() {
+        let c = ReplyCache::new(64);
+        let e = ents(&["cardiology"]);
+        let (_, t) = c.lookup("q", &e, 0);
+        let big = reply(&"x".repeat(4096));
+        assert!(!c.admit("q", &e, 0, &big, t).admitted);
+        assert_eq!(c.bytes(), 0);
+    }
+
+    #[test]
+    fn refill_after_invalidation_replaces_bytes_exactly() {
+        let c = ReplyCache::new(64 * 1024);
+        let e = ents(&["cardiology"]);
+        let (_, t) = c.lookup("q", &e, 0);
+        assert!(c.admit("q", &e, 0, &reply("v1"), t).admitted);
+        let b1 = c.bytes();
+        c.invalidate_entity("cardiology");
+        assert_eq!(c.bytes(), 0);
+        let (_, t) = c.lookup("q", &e, 0);
+        assert!(c.admit("q", &e, 0, &reply("v1"), t).admitted);
+        assert_eq!(c.bytes(), b1, "byte accounting must not drift");
+    }
+
+    #[test]
+    fn sketch_estimates_track_frequency_and_age() {
+        let mut s = FreqSketch::new();
+        for _ in 0..10 {
+            s.touch(42);
+        }
+        s.touch(7);
+        assert!(s.estimate(42) >= 10);
+        assert!(s.estimate(7) >= 1);
+        assert!(
+            s.estimate(42) > s.estimate(7),
+            "hot key must estimate hotter"
+        );
+        // aging halves counters so temperature is a sliding window
+        for i in 0..SKETCH_AGE_EVERY {
+            s.touch(1000 + i);
+        }
+        assert!(s.estimate(42) <= 5, "aging must decay stale heat");
+    }
+}

@@ -23,6 +23,7 @@
 //! | [`MINIMAL_KEY_MOVEMENT`] | (3) a join/drain moves exactly the keys whose serving set changed |
 //! | [`DUAL_WRITE_COVERAGE`] | (4) dynamic writes are idempotent and dual-applied across an in-flight rebalance |
 //! | [`SINGLE_FLIGHT_REBALANCE`] | (5) one rebalance at a time, and a failed rebalance changes nothing |
+//! | [`CACHE_EPOCH_COHERENT`] | (6) no reply-cache entry outlives its admission epoch |
 
 use crate::filter::fingerprint::entity_key;
 use crate::router::health::EpochGate;
@@ -54,15 +55,24 @@ pub const DUAL_WRITE_COVERAGE: &str = "dual-write-coverage";
 /// leaves the serving membership exactly as it found it.
 pub const SINGLE_FLIGHT_REBALANCE: &str = "single-flight-rebalance";
 
-/// All five contract names, in ROADMAP order — what the integration
+/// Invariant (6): no reply-cache entry outlives its admission epoch —
+/// a cached reply is only ever admitted and served at the membership
+/// epoch it was assembled under
+/// ([`ReplyCache`](crate::router::cache::ReplyCache) keys entries on
+/// the epoch and the rebalance paths flush wholesale, so a violation
+/// means the cache and the membership snapshot disagree).
+pub const CACHE_EPOCH_COHERENT: &str = "cache-epoch-coherent";
+
+/// All six contract names, in ROADMAP order — what the integration
 /// suite enumerates to prove the contracts exist and are spelled
 /// consistently.
-pub const ALL: [&str; 5] = [
+pub const ALL: [&str; 6] = [
     SERVING_SET_FULLY_INDEXED,
     EPOCH_GATED_MEMBERSHIP,
     MINIMAL_KEY_MOVEMENT,
     DUAL_WRITE_COVERAGE,
     SINGLE_FLIGHT_REBALANCE,
+    CACHE_EPOCH_COHERENT,
 ];
 
 /// Whether contract checks run in this build: every debug/test build,
@@ -237,6 +247,22 @@ pub fn check_dual_write_coverage(
     }
 }
 
+/// Contract (6): a reply-cache entry served or admitted at
+/// `serving_epoch` must carry exactly that epoch as its admission
+/// epoch — no entry outlives the membership generation it was
+/// assembled under. Checked at every cache hit and fill site.
+pub fn check_cache_epoch(entry_epoch: u64, serving_epoch: u64) {
+    if !enabled() {
+        return;
+    }
+    check(CACHE_EPOCH_COHERENT, entry_epoch == serving_epoch, || {
+        format!(
+            "cache entry admitted at epoch {entry_epoch} touched while \
+             serving epoch {serving_epoch}"
+        )
+    });
+}
+
 /// Contract (1), replica-set half: a serving replica set must hold
 /// `min(max(r,1), ring len)` **distinct** members — duplicates or a
 /// short set would silently under-replicate every key it serves.
@@ -272,7 +298,18 @@ mod tests {
     #[test]
     fn contracts_run_in_test_builds() {
         assert!(enabled(), "debug/test builds must enforce the contracts");
-        assert_eq!(ALL.len(), 5);
+        assert_eq!(ALL.len(), 6);
+    }
+
+    #[test]
+    fn cache_epoch_check_rejects_cross_epoch_entries() {
+        check_cache_epoch(3, 3);
+        let err =
+            std::panic::catch_unwind(|| check_cache_epoch(2, 3)).expect_err(
+                "an entry outliving its admission epoch must violate (6)",
+            );
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains(CACHE_EPOCH_COHERENT), "{msg}");
     }
 
     #[test]

@@ -31,7 +31,7 @@
 
 use std::time::Duration;
 
-use crate::obs::{Counter, Histogram, Registry};
+use crate::obs::{Counter, Gauge, Histogram, Registry};
 use crate::sync::{Arc, Mutex};
 use crate::util::json::Json;
 
@@ -86,6 +86,18 @@ pub struct RouterMetricsSnapshot {
     /// [`NetDriver`](crate::reactor::client::NetDriver) counter — the
     /// sink itself always reports 0 here.
     pub deadlines_expired: u64,
+    /// Queries answered straight from the reply cache.
+    pub cache_hits: u64,
+    /// Cache-eligible queries that had to hit the backends.
+    pub cache_misses: u64,
+    /// Cache entries displaced by the frequency-sketch admission
+    /// policy (capacity pressure, not correctness).
+    pub cache_evictions: u64,
+    /// Invalidation events: one per acked write broadcast and one per
+    /// epoch-roll flush (correctness, not capacity).
+    pub cache_invalidations: u64,
+    /// Approximate heap bytes held by the reply cache at snapshot time.
+    pub cache_bytes: u64,
     /// The serving ring's membership epoch at snapshot time.
     pub ring_epoch: u64,
     pub backends: Vec<BackendMetricsSnapshot>,
@@ -135,6 +147,14 @@ impl RouterMetricsSnapshot {
                 "deadlines_expired",
                 Json::Num(self.deadlines_expired as f64),
             ),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("cache_misses", Json::Num(self.cache_misses as f64)),
+            ("cache_evictions", Json::Num(self.cache_evictions as f64)),
+            (
+                "cache_invalidations",
+                Json::Num(self.cache_invalidations as f64),
+            ),
+            ("cache_bytes", Json::Num(self.cache_bytes as f64)),
             ("ring_epoch", Json::Num(self.ring_epoch as f64)),
             ("backends", Json::Arr(backends)),
         ])
@@ -168,6 +188,14 @@ pub struct RouterMetrics {
     rebalanced_keys: Arc<Counter>,
     dropped_keys: Arc<Counter>,
     dual_writes: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    cache_evictions: Arc<Counter>,
+    cache_invalidations: Arc<Counter>,
+    /// Reply-cache resident bytes — a gauge, stamped by the router
+    /// after every cache mutation so the `\x01metrics` exposition and
+    /// the `\x01stats` snapshot agree.
+    cache_bytes: Arc<Gauge>,
     /// Aggregate backend-exchange latency across the whole fleet (the
     /// per-backend split lives in the slots / `\x01stats` JSON; the
     /// registry has no label dimension by design).
@@ -205,6 +233,26 @@ impl RouterMetrics {
             dual_writes: c(
                 "cft_router_dual_writes_total",
                 "writes dual-applied during a rebalance",
+            ),
+            cache_hits: c(
+                "cft_router_cache_hits_total",
+                "queries answered from the reply cache",
+            ),
+            cache_misses: c(
+                "cft_router_cache_misses_total",
+                "cache-eligible queries that hit the backends",
+            ),
+            cache_evictions: c(
+                "cft_router_cache_evictions_total",
+                "reply-cache entries displaced by admission",
+            ),
+            cache_invalidations: c(
+                "cft_router_cache_invalidations_total",
+                "reply-cache invalidation events (writes + epoch rolls)",
+            ),
+            cache_bytes: registry.gauge(
+                "cft_router_cache_bytes",
+                "approximate reply-cache resident bytes",
             ),
             exchange: registry.histogram(
                 "cft_router_backend_exchange_seconds",
@@ -287,6 +335,32 @@ impl RouterMetrics {
         self.dual_writes.inc();
     }
 
+    /// Record a query answered straight from the reply cache.
+    pub fn record_cache_hit(&self) {
+        self.cache_hits.inc();
+    }
+
+    /// Record a cache-eligible query that had to hit the backends.
+    pub fn record_cache_miss(&self) {
+        self.cache_misses.inc();
+    }
+
+    /// Record `n` entries displaced by the cache's admission policy.
+    pub fn record_cache_evictions(&self, n: u64) {
+        self.cache_evictions.add(n);
+    }
+
+    /// Record one invalidation event (an acked write broadcast or an
+    /// epoch-roll flush).
+    pub fn record_cache_invalidation(&self) {
+        self.cache_invalidations.inc();
+    }
+
+    /// Stamp the reply cache's resident bytes (after any mutation).
+    pub fn set_cache_bytes(&self, bytes: usize) {
+        self.cache_bytes.set(bytes as f64);
+    }
+
     /// Grow the per-backend slots to `n` (a backend joined the ring;
     /// indexes are append-only on join, so existing slots keep their
     /// history).
@@ -358,6 +432,11 @@ impl RouterMetrics {
             dropped_keys: self.dropped_keys.get(),
             dual_writes: self.dual_writes.get(),
             deadlines_expired: 0,
+            cache_hits: self.cache_hits.get(),
+            cache_misses: self.cache_misses.get(),
+            cache_evictions: self.cache_evictions.get(),
+            cache_invalidations: self.cache_invalidations.get(),
+            cache_bytes: self.cache_bytes.get() as u64,
             ring_epoch,
             backends: slots
                 .iter()
@@ -395,6 +474,12 @@ mod tests {
         m.record_drain(5);
         m.record_dropped_keys(9);
         m.record_dual_write();
+        m.record_cache_hit();
+        m.record_cache_miss();
+        m.record_cache_miss();
+        m.record_cache_evictions(3);
+        m.record_cache_invalidation();
+        m.set_cache_bytes(4096);
         m.record_backend(0, true, Duration::from_millis(2));
         m.record_backend(1, false, Duration::from_millis(4));
         let info = vec![("a:1".to_string(), true), ("b:2".to_string(), false)];
@@ -412,6 +497,11 @@ mod tests {
         assert_eq!(s.rebalanced_keys, 17, "join keys + drain keys");
         assert_eq!(s.dropped_keys, 9);
         assert_eq!(s.dual_writes, 1);
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 2);
+        assert_eq!(s.cache_evictions, 3);
+        assert_eq!(s.cache_invalidations, 1);
+        assert_eq!(s.cache_bytes, 4096);
         assert_eq!(s.ring_epoch, 2);
         assert_eq!(s.backends[0].requests, 1);
         assert_eq!(s.backends[0].failures, 0);
@@ -439,6 +529,11 @@ mod tests {
             "dropped_keys",
             "dual_writes",
             "deadlines_expired",
+            "cache_hits",
+            "cache_misses",
+            "cache_evictions",
+            "cache_invalidations",
+            "cache_bytes",
             "ring_epoch",
         ] {
             assert_eq!(
@@ -510,5 +605,18 @@ mod tests {
         let text = m.registry().render();
         assert!(text.contains("# TYPE cft_router_backend_exchange_seconds histogram"));
         assert!(text.contains("cft_router_backend_exchange_seconds_count 2"));
+    }
+
+    #[test]
+    fn cache_series_flow_to_the_prometheus_exposition() {
+        let m = RouterMetrics::new(1);
+        m.record_cache_hit();
+        m.record_cache_invalidation();
+        m.set_cache_bytes(1536);
+        let text = m.registry().render();
+        assert!(text.contains("cft_router_cache_hits_total 1"));
+        assert!(text.contains("cft_router_cache_misses_total 0"));
+        assert!(text.contains("cft_router_cache_invalidations_total 1"));
+        assert!(text.contains("cft_router_cache_bytes 1536"));
     }
 }

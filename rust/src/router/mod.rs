@@ -67,8 +67,16 @@
 //! admission, and a disowned-key drop pass. The protocol and its
 //! mid-rebalance correctness argument live in [`rebalance`]; the
 //! operator procedures in `docs/OPERATIONS.md`.
+//!
+//! **Hot-entity reply cache** (ISSUE 10): hot query replies are served
+//! straight from the router when `--cache-bytes` is set, keyed on
+//! (query, entity set, membership epoch) with frequency-sketch
+//! admission, point-invalidated by acked writes and flushed on every
+//! epoch roll — proven never-stale by `tests/prop_cache.rs` and the
+//! cache modelcheck schedules. See [`cache`].
 
 pub mod backend;
+pub mod cache;
 pub mod contracts;
 pub mod health;
 pub mod metrics;
@@ -78,6 +86,7 @@ pub mod ring;
 pub mod scatter;
 
 pub use backend::Backend;
+pub use cache::ReplyCache;
 pub use health::{EpochGate, HealthProber, HealthState};
 pub use metrics::{
     BackendMetricsSnapshot, RouterMetrics, RouterMetricsSnapshot,

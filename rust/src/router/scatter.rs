@@ -42,6 +42,14 @@
 //! `\x01insert`/`\x01delete` control line to every backend that indexes
 //! the key — the replica set, or the whole fleet in full-index mode —
 //! and count per-replica acks against the configured write quorum.
+//!
+//! When the hot-entity reply cache is enabled
+//! (`RouterConfig::cache_capacity_bytes`, `router/cache.rs`), step 1
+//! first consults it under the query's membership snapshot: a hit skips
+//! the fan-out entirely, a fully served (`ok`, non-degraded) miss is
+//! offered back, writes point-invalidate the entity's entries before
+//! their ack returns, and a join/drain flushes wholesale on commit and
+//! abort alike.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::io;
@@ -57,6 +65,7 @@ use crate::rag::config::RouterConfig;
 use crate::sync::time::Instant;
 use crate::reactor::client::{Exchange, NetDriver};
 use crate::router::backend::Backend;
+use crate::router::cache::{normalize_entities, ReplyCache};
 use crate::router::health::{EpochGate, HealthProber};
 use crate::router::metrics::{RouterMetrics, RouterMetricsSnapshot};
 use crate::router::rebalance::{
@@ -123,6 +132,10 @@ pub struct Router {
     started: std::time::Instant,
     /// Serializes join/drain — one membership change at a time.
     rebalance_lock: Mutex<()>,
+    /// Hot-entity reply cache (`router/cache.rs`), keyed on (query,
+    /// normalized entity set, membership epoch). Disabled at capacity
+    /// 0 (`RouterConfig::cache_capacity_bytes`, the library default).
+    cache: ReplyCache,
     /// The shared outbound reactor: every backend exchange — queries,
     /// probes, rebalance streams — multiplexes onto its one thread.
     driver: Arc<NetDriver>,
@@ -189,6 +202,7 @@ impl Router {
             ),
             started: std::time::Instant::now(),
             rebalance_lock: Mutex::new(()),
+            cache: ReplyCache::new(cfg.cache_capacity_bytes),
             driver,
             _prober: prober,
         })
@@ -224,6 +238,12 @@ impl Router {
     /// Metrics sink handle.
     pub fn metrics(&self) -> &RouterMetrics {
         &self.metrics
+    }
+
+    /// The reply cache (tests, ops tooling). Inert when
+    /// `RouterConfig::cache_capacity_bytes` was 0.
+    pub fn cache(&self) -> &ReplyCache {
+        &self.cache
     }
 
     /// The front door's trace head sampler (and slow-query threshold).
@@ -272,7 +292,14 @@ impl Router {
     pub fn join(&self, addr: &str) -> Json {
         let _guard = self.rebalance_lock.lock().unwrap();
         let ctx = self.rebalance_ctx();
-        match execute_join(&ctx, addr) {
+        let result = execute_join(&ctx, addr);
+        // epoch-roll flush, commit AND abort paths: on commit the old
+        // epoch's replies are dead (the epoch in the key already makes
+        // them unreachable — this reclaims the bytes); on abort the
+        // warm-up may have partially streamed keys, so flushing is the
+        // conservative, always-correct choice
+        self.flush_cache_for_epoch_roll();
+        match result {
             Ok(report) => report.to_json(),
             Err(e) => {
                 log::warn!("join of {addr} failed: {e}");
@@ -292,7 +319,10 @@ impl Router {
     pub fn drain(&self, addr: &str) -> Json {
         let _guard = self.rebalance_lock.lock().unwrap();
         let ctx = self.rebalance_ctx();
-        match execute_drain(&ctx, addr) {
+        let result = execute_drain(&ctx, addr);
+        // epoch-roll flush — same commit-and-abort coverage as `join`
+        self.flush_cache_for_epoch_roll();
+        match result {
             Ok(report) => report.to_json(),
             Err(e) => {
                 log::warn!("drain of {addr} failed: {e}");
@@ -302,6 +332,20 @@ impl Router {
                 ])
             }
         }
+    }
+
+    /// Wholesale reply-cache flush after a rebalance attempt (observed
+    /// here as the `RingState` swap the `execute_join`/`execute_drain`
+    /// call just performed — or didn't, on abort). Runs under the
+    /// `rebalance_lock`, so the flush and the epoch roll it answers are
+    /// ordered with respect to any other membership change.
+    fn flush_cache_for_epoch_roll(&self) {
+        if !self.cache.enabled() {
+            return;
+        }
+        self.cache.flush();
+        self.metrics.record_cache_invalidation();
+        self.metrics.set_cache_bytes(self.cache.bytes());
     }
 
     fn rebalance_ctx(&self) -> RebalanceCtx<'_> {
@@ -340,6 +384,28 @@ impl Router {
         // one consistent membership snapshot per query: a concurrent
         // join/drain swaps the Arc, never mutates what we hold
         let state = self.membership.load();
+
+        // Reply-cache lookup under this snapshot's epoch. On a hit the
+        // fan-out is skipped entirely; on a miss the token is kept so
+        // the eventual fill can prove no invalidation raced the
+        // assembly (see `router/cache.rs`). The epoch in the key plus
+        // the contract check inside the cache keep every served entry
+        // coherent with the membership snapshot in hand.
+        let fill = if self.cache.enabled() {
+            let ents = normalize_entities(entities.clone());
+            let (hit, token) = self.cache.lookup(query, &ents, state.epoch);
+            if let Some(reply) = hit {
+                self.metrics.record_cache_hit();
+                self.metrics.record_query(
+                    reply.get("ok") == Some(&Json::Bool(true)),
+                );
+                return reply;
+            }
+            self.metrics.record_cache_miss();
+            Some((ents, token))
+        } else {
+            None
+        };
 
         // Group mentions by the backend set that can serve them: in
         // replicated mode a mention's replica set (mentions sharing a
@@ -383,6 +449,25 @@ impl Router {
             self.metrics.record_fanout();
             self.scatter(&state, query, &groups, trace)
         };
+        // Failover-aware fill: only a fully served reply is cacheable.
+        // A degraded reply is missing a portion's facts — pinning it
+        // would keep serving the hole after the backend recovers — and
+        // an `ok:false` reply is an error, not an answer.
+        if let Some((ents, token)) = fill {
+            if reply.get("ok") == Some(&Json::Bool(true))
+                && reply.get("degraded") == Some(&Json::Bool(false))
+            {
+                let outcome =
+                    self.cache.admit(query, &ents, state.epoch, &reply, token);
+                if outcome.evicted > 0 {
+                    self.metrics
+                        .record_cache_evictions(outcome.evicted as u64);
+                }
+                if outcome.admitted {
+                    self.metrics.set_cache_bytes(self.cache.bytes());
+                }
+            }
+        }
         self.metrics
             .record_query(reply.get("ok") == Some(&Json::Bool(true)));
         reply
@@ -873,6 +958,20 @@ impl Router {
                 (idx, res)
             })
             .collect();
+
+        // Per-key cache eviction *before* the quorum ack returns: the
+        // backends above have already applied (or refused) the write,
+        // so dropping the entity's cached replies here means a client
+        // that saw this ack can never read the pre-write reply — the
+        // write-ack-implies-invalidated promise of docs/PROTOCOL.md.
+        // Invalidate even on a missed quorum: any applied replica makes
+        // the cached replies stale. The cache's fill token also fences
+        // any in-flight fill that read pre-write backend state.
+        if self.cache.enabled() {
+            self.cache.invalidate_entity(entity);
+            self.metrics.record_cache_invalidation();
+            self.metrics.set_cache_bytes(self.cache.bytes());
+        }
 
         let mut acks = 0usize;
         let mut applied = 0usize;

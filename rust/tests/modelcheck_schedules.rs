@@ -23,6 +23,11 @@
 //! * **Batcher submit/stop** — accepted jobs are delivered exactly
 //!   once across a racing stop; a full queue bounds the submitter's
 //!   wait in virtual time (`batcher_*` tests).
+//! * **ISSUE-10 cache fill race** — a reply-cache fill that read
+//!   backend state before a write's invalidation must not land after
+//!   it (`cache_fill_never_resurrects_invalidated_replies` on the real
+//!   [`ReplyCache`]; `checker_catches_unguarded_cache_fill` proves the
+//!   checker would flag a token-less fill if it were reintroduced).
 
 #![cfg(feature = "modelcheck")]
 
@@ -339,7 +344,7 @@ fn batcher_submit_vs_stop_loses_no_accepted_job() {
                 let mut got = Vec::new();
                 loop {
                     match collect_batch(&rx, policy) {
-                        BatchOutcome::Batch(b) => got.extend(b),
+                        BatchOutcome::Batch { items, .. } => got.extend(items),
                         BatchOutcome::Closed => return got,
                     }
                 }
@@ -436,4 +441,140 @@ fn batcher_enqueue_bounded_wait_on_full_queue() {
             );
         },
     );
+}
+
+// ---------------------------------------------------------------------
+// Reply-cache fill vs invalidation (ISSUE 10)
+// ---------------------------------------------------------------------
+
+use cft_rag::router::cache::{normalize_entities, ReplyCache};
+use cft_rag::util::json::Json;
+
+/// A reply stamped with the backend-state version it was assembled
+/// from — the observable that makes staleness checkable.
+fn versioned_reply(v: u64) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("degraded", Json::Bool(false)),
+        ("answer", Json::Str(format!("v{v}"))),
+    ])
+}
+
+/// The ISSUE-10 race, on the real [`ReplyCache`]: a filler thread that
+/// misses, reads backend state, and admits through its [`FillToken`],
+/// against a writer that mutates the state and then invalidates (the
+/// router's broadcast order: backends apply, *then* the entity's
+/// entries are dropped, *then* the ack returns). Under every explored
+/// preemption, a hit after both threads retire may only serve the
+/// post-write reply — the fill token must fence the window between the
+/// filler's state read and its admit.
+#[test]
+fn cache_fill_never_resurrects_invalidated_replies() {
+    explore(
+        "cache_fill_never_resurrects_invalidated_replies",
+        &Config { iterations: 64, change_window: 128, ..Config::default() },
+        || {
+            let cache = Arc::new(ReplyCache::new(64 * 1024));
+            let ents = normalize_entities(vec!["cardiology".to_string()]);
+            // the backend-side state the reply is assembled from
+            let version = Arc::new(Mutex::new(0u64));
+
+            let filler = {
+                let cache = Arc::clone(&cache);
+                let version = Arc::clone(&version);
+                let ents = ents.clone();
+                thread::spawn(move || {
+                    for _ in 0..2 {
+                        let (hit, token) = cache.lookup("q", &ents, 0);
+                        if hit.is_none() {
+                            // preemptible window: the state read and
+                            // the admit are separate critical sections
+                            let v = *version.lock().unwrap();
+                            cache.admit(
+                                "q",
+                                &ents,
+                                0,
+                                &versioned_reply(v),
+                                token,
+                            );
+                        }
+                    }
+                })
+            };
+            let writer = {
+                let cache = Arc::clone(&cache);
+                let version = Arc::clone(&version);
+                thread::spawn(move || {
+                    *version.lock().unwrap() += 1; // backends applied
+                    cache.invalidate_entity("cardiology"); // before ack
+                })
+            };
+            filler.join().unwrap();
+            writer.join().unwrap();
+
+            // the write has acked; only the post-write reply may serve
+            let (hit, _) = cache.lookup("q", &ents, 0);
+            if let Some(reply) = hit {
+                assert_eq!(
+                    reply.get("answer"),
+                    Some(&Json::Str("v1".to_string())),
+                    "stale pre-write reply survived the invalidation"
+                );
+            }
+        },
+    );
+}
+
+/// Teeth check: the same race against a cache WITHOUT the fill token —
+/// read the state in one critical section, install the reply in
+/// another, nothing fencing the gap. The explorer must find the
+/// schedule where the write's bump-and-invalidate lands inside that
+/// gap and the stale fill survives the ack; the returned
+/// [`cft_rag::modelcheck::Failure`] carries the seed that replays it
+/// (`MODELCHECK_SEED=<seed>`).
+#[test]
+fn checker_catches_unguarded_cache_fill() {
+    let cfg = Config {
+        iterations: 512,
+        change_window: 24,
+        max_steps: 20_000,
+        ..Config::default()
+    };
+    let failure = try_explore(&cfg, || {
+        let version = Arc::new(Mutex::new(0u64));
+        let cached = Arc::new(Mutex::new(None::<u64>));
+        let filler = {
+            let (v, c) = (Arc::clone(&version), Arc::clone(&cached));
+            thread::spawn(move || {
+                // BUG (the pre-ISSUE-10 strawman): no token — an
+                // invalidation between these two sections goes unseen
+                let snapshot = *v.lock().unwrap();
+                c.lock().unwrap().replace(snapshot);
+            })
+        };
+        let writer = {
+            let (v, c) = (Arc::clone(&version), Arc::clone(&cached));
+            thread::spawn(move || {
+                *v.lock().unwrap() += 1;
+                c.lock().unwrap().take(); // the write's invalidation
+            })
+        };
+        filler.join().unwrap();
+        writer.join().unwrap();
+        if let Some(got) = *cached.lock().unwrap() {
+            let now = *version.lock().unwrap();
+            assert_eq!(
+                got, now,
+                "stale reply (v{got}) cached past the write's ack (v{now})"
+            );
+        }
+    })
+    .expect_err("the unguarded-fill window must be discoverable");
+    assert!(
+        failure.report.contains("stale reply"),
+        "wrong failure: {}",
+        failure.report
+    );
+    // `failure.seed` is the replay handle; `modelcheck::mod` unit-tests
+    // prove replaying a failing seed reproduces the identical schedule.
 }

@@ -1,0 +1,348 @@
+//! Cache-consistency property: a router with the reply cache ON is
+//! **observationally identical** to one without it, under arbitrary
+//! interleavings of queries, dynamic writes (`\x01insert`/`\x01delete`
+//! through the cached router), and membership epoch rolls (real
+//! `\x01join`/`\x01drain` of a spare backend).
+//!
+//! Both routers front the SAME live partitioned fleet, so the only
+//! thing that can diverge is the cache itself: any stale entry — one
+//! surviving a write's point invalidation, an epoch roll's flush, or a
+//! fill race — shows up as a byte-level reply mismatch. Timing fields
+//! (`retrieval_us`/`total_ms`) are stripped before comparison; every
+//! other byte must match. On failure the harness shrinks to a minimal
+//! violating op sequence and prints the seed
+//! (`CFT_PROPTEST_SEED=<seed>` replays it).
+
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use cft_rag::coordinator::tcp::{serve_listener, ServeHandle};
+use cft_rag::coordinator::{Coordinator, CoordinatorConfig};
+use cft_rag::data::corpus::corpus_from_texts;
+use cft_rag::data::hospital::{HospitalConfig, HospitalDataset};
+use cft_rag::forest::EntityAddress;
+use cft_rag::rag::config::{KeyPartition, RagConfig, RouterConfig};
+use cft_rag::router::Router;
+use cft_rag::runtime::engine::{Engine, NativeEngine};
+use cft_rag::util::json::Json;
+use cft_rag::util::proptest::{forall, shrink_vec, Config};
+use cft_rag::util::rng::Rng;
+use std::time::Duration;
+
+/// One in-process backend: a coordinator behind a real TCP listener.
+struct TestBackend {
+    coordinator: Arc<Coordinator>,
+    handle: Option<ServeHandle>,
+    addr: String,
+}
+
+impl TestBackend {
+    fn start_on(
+        ds: &HospitalDataset,
+        listener: TcpListener,
+        cfg: RagConfig,
+    ) -> TestBackend {
+        let forest = Arc::new(ds.build_forest());
+        let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new());
+        let coordinator = Arc::new(
+            Coordinator::start(
+                forest,
+                corpus_from_texts(&ds.documents()),
+                engine,
+                cfg,
+                CoordinatorConfig { workers: 2, ..Default::default() },
+            )
+            .expect("backend coordinator"),
+        );
+        let handle = serve_listener(coordinator.clone(), listener)
+            .expect("backend listener");
+        let addr = handle.addr().to_string();
+        TestBackend { coordinator, handle: Some(handle), addr }
+    }
+
+    fn kill(&mut self) {
+        if let Some(h) = self.handle.take() {
+            h.shutdown();
+        }
+        self.coordinator.stop();
+    }
+}
+
+impl Drop for TestBackend {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// One step of a generated history.
+#[derive(Clone, Debug)]
+enum Op {
+    /// Ask about pool entity `i` through BOTH routers; replies must be
+    /// byte-identical (modulo timing fields).
+    Query(usize),
+    /// Re-insert pool entity `i`'s first forest occurrence through the
+    /// cached router (idempotent when present — the ack still
+    /// invalidates, which is part of what's under test).
+    Insert(usize),
+    /// Delete pool entity `i` through the cached router.
+    Delete(usize),
+    /// Roll the membership epoch: join a fresh spare backend, or drain
+    /// the one joined by the previous roll.
+    EpochRoll,
+}
+
+/// Deterministic, prober-free router config.
+fn base_cfg() -> RouterConfig {
+    RouterConfig {
+        replication_factor: 2,
+        probe_interval: Duration::ZERO,
+        connect_timeout: Duration::from_secs(2),
+        request_timeout: Duration::from_secs(10),
+        ..RouterConfig::default()
+    }
+}
+
+/// The live fleet both routers front, plus the cycling spare.
+struct Fleet {
+    ds: HospitalDataset,
+    names: Vec<String>,
+    /// Current member addresses (incumbents, plus the spare when joined).
+    members: Vec<String>,
+    _incumbents: Vec<TestBackend>,
+    spare: Option<TestBackend>,
+    /// Cache ON — the router under test; join/drain run through it.
+    cached: Arc<Router>,
+    /// Cache OFF — the oracle; rebuilt after every membership change.
+    uncached: Router,
+}
+
+impl Fleet {
+    fn start() -> Fleet {
+        let ds = HospitalDataset::generate(HospitalConfig {
+            trees: 4,
+            ..HospitalConfig::default()
+        });
+        let names: Vec<String> = ds
+            .build_forest()
+            .interner()
+            .iter()
+            .map(|(_, n)| n.to_string())
+            .collect();
+        let listeners: Vec<TcpListener> = (0..3)
+            .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind"))
+            .collect();
+        let members: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        let incumbents: Vec<TestBackend> = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(i, listener)| {
+                TestBackend::start_on(
+                    &ds,
+                    listener,
+                    RagConfig {
+                        replication_factor: 2,
+                        key_partition: Some(
+                            KeyPartition::new(members.clone(), i, 2)
+                                .expect("partition"),
+                        ),
+                        ..RagConfig::default()
+                    },
+                )
+            })
+            .collect();
+        let cached = Arc::new(
+            Router::connect(
+                names.iter().map(String::as_str),
+                &RouterConfig {
+                    backends: members.clone(),
+                    cache_capacity_bytes: 256 * 1024,
+                    ..base_cfg()
+                },
+            )
+            .expect("cached router"),
+        );
+        let uncached = Self::oracle(&names, &members);
+        Fleet {
+            ds,
+            names,
+            members,
+            _incumbents: incumbents,
+            spare: None,
+            cached,
+            uncached,
+        }
+    }
+
+    /// A fresh cache-less router over the current membership. Ownership
+    /// is rendezvous-hashed over the address *set*, so a rebuilt ring
+    /// routes identically to the evolved one the cached router holds.
+    fn oracle(names: &[String], members: &[String]) -> Router {
+        Router::connect(
+            names.iter().map(String::as_str),
+            &RouterConfig {
+                backends: members.to_vec(),
+                cache_capacity_bytes: 0,
+                ..base_cfg()
+            },
+        )
+        .expect("oracle router")
+    }
+
+    /// Join a fresh spare, or drain the currently joined one.
+    fn roll_epoch(&mut self) {
+        if let Some(mut spare) = self.spare.take() {
+            let reply = self.cached.drain(&spare.addr);
+            assert_eq!(
+                reply.get("ok"),
+                Some(&Json::Bool(true)),
+                "harness: drain failed: {reply}"
+            );
+            self.members.retain(|a| a != &spare.addr);
+            spare.kill();
+        } else {
+            let listener =
+                TcpListener::bind("127.0.0.1:0").expect("bind spare");
+            let addr = listener.local_addr().unwrap().to_string();
+            let mut new_list = self.members.clone();
+            new_list.push(addr.clone());
+            let spare = TestBackend::start_on(
+                &self.ds,
+                listener,
+                RagConfig {
+                    replication_factor: 2,
+                    key_partition: Some(
+                        KeyPartition::joining(
+                            new_list.clone(),
+                            new_list.len() - 1,
+                            2,
+                        )
+                        .expect("joining partition"),
+                    ),
+                    ..RagConfig::default()
+                },
+            );
+            let reply = self.cached.join(&addr);
+            assert_eq!(
+                reply.get("ok"),
+                Some(&Json::Bool(true)),
+                "harness: join failed: {reply}"
+            );
+            self.members = new_list;
+            self.spare = Some(spare);
+        }
+        self.uncached = Self::oracle(&self.names, &self.members);
+    }
+}
+
+/// Canonical reply text: timing fields vary run to run and carry no
+/// retrieval semantics; everything else must match to the byte.
+fn stripped(reply: &Json) -> String {
+    fn strip(j: &Json) -> Json {
+        match j {
+            Json::Obj(m) => Json::Obj(
+                m.iter()
+                    .filter(|(k, _)| {
+                        k.as_str() != "retrieval_us"
+                            && k.as_str() != "total_ms"
+                    })
+                    .map(|(k, v)| (k.clone(), strip(v)))
+                    .collect(),
+            ),
+            Json::Arr(a) => Json::Arr(a.iter().map(strip).collect()),
+            other => other.clone(),
+        }
+    }
+    strip(reply).to_string()
+}
+
+#[test]
+fn cached_router_is_byte_identical_to_uncached_under_any_interleaving() {
+    let fleet = std::cell::RefCell::new(Fleet::start());
+
+    // pool: entities with at least one forest occurrence, so Insert
+    // ops have a real address to (re-)plant
+    let forest = fleet.borrow().ds.build_forest();
+    let pool: Vec<(String, EntityAddress)> = fleet
+        .borrow()
+        .names
+        .iter()
+        .filter_map(|n| {
+            forest.entity_id(n).and_then(|id| {
+                forest
+                    .scan_addresses(id)
+                    .first()
+                    .map(|a| (n.clone(), *a))
+            })
+        })
+        .take(8)
+        .collect();
+    assert!(pool.len() >= 4, "need a few occupied entities");
+    let pool_len = pool.len() as u64;
+
+    let gen = |rng: &mut Rng| -> Vec<Op> {
+        let len = rng.range(2, 7);
+        (0..len)
+            .map(|_| match rng.below(8) {
+                0 => Op::EpochRoll,
+                1 | 2 => Op::Insert(rng.below(pool_len) as usize),
+                3 | 4 => Op::Delete(rng.below(pool_len) as usize),
+                _ => Op::Query(rng.below(pool_len) as usize),
+            })
+            .collect()
+    };
+
+    let prop = |ops: &Vec<Op>| -> Result<(), String> {
+        let mut fleet = fleet.borrow_mut();
+        let compare = |fleet: &Fleet, i: usize| -> Result<(), String> {
+            let q = format!("tell me about {}", pool[i].0);
+            let hot = stripped(&fleet.cached.query(&q));
+            let cold = stripped(&fleet.uncached.query(&q));
+            if hot == cold {
+                Ok(())
+            } else {
+                Err(format!(
+                    "stale or divergent reply for {:?}:\n  \
+                     cached:   {hot}\n  uncached: {cold}",
+                    pool[i].0
+                ))
+            }
+        };
+        for op in ops {
+            match op {
+                Op::Query(i) => compare(&fleet, *i)?,
+                Op::Insert(i) => {
+                    let (name, addr) = &pool[*i];
+                    let reply =
+                        fleet.cached.update(name, addr.tree, addr.node);
+                    if reply.get("ok") != Some(&Json::Bool(true)) {
+                        return Err(format!("insert NACKed: {reply}"));
+                    }
+                }
+                Op::Delete(i) => {
+                    let reply = fleet.cached.remove(&pool[*i].0);
+                    if reply.get("ok") != Some(&Json::Bool(true)) {
+                        return Err(format!("delete NACKed: {reply}"));
+                    }
+                }
+                Op::EpochRoll => fleet.roll_epoch(),
+            }
+        }
+        // final sweep: probe the whole pool, not just the sequence's
+        // own queries — a stale entry planted by this history must not
+        // survive to poison the next one
+        for i in 0..pool.len() {
+            compare(&fleet, i)?;
+        }
+        Ok(())
+    };
+
+    forall(
+        Config { cases: 20, max_shrinks: 40, ..Config::default() },
+        gen,
+        prop,
+        |ops| shrink_vec(ops),
+    );
+}

@@ -988,7 +988,7 @@ fn warm_restart_rejoins_at_recorded_epoch_with_delta_catch_up() {
 fn elasticity_contracts_are_named_and_enforced() {
     use cft_rag::router::contracts;
 
-    // the five ROADMAP invariants exist as named executable assertions,
+    // the six ROADMAP invariants exist as named executable assertions,
     // and every test build enforces them (debug_assertions) — a release
     // soak can force them with `--features contracts`
     assert!(contracts::enabled(), "test builds must enforce the contracts");
@@ -1000,6 +1000,7 @@ fn elasticity_contracts_are_named_and_enforced() {
             contracts::MINIMAL_KEY_MOVEMENT,
             contracts::DUAL_WRITE_COVERAGE,
             contracts::SINGLE_FLIGHT_REBALANCE,
+            contracts::CACHE_EPOCH_COHERENT,
         ]
     );
 
@@ -1065,4 +1066,146 @@ fn elasticity_contracts_are_named_and_enforced() {
     assert_eq!(router.ring_epoch(), 1);
     assert_eq!(router.num_backends(), 4);
     assert!(is_ok(&router.query("describe the hierarchy around cardiology")));
+}
+
+#[test]
+fn reply_cache_hits_hot_queries_and_stays_fresh_across_writes_and_joins() {
+    // The ISSUE-10 acceptance scenario: Zipf-skewed load on a
+    // key-partitioned R=2 fleet with the reply cache ON hits >50%, a
+    // quorum write and a live `\x01join` mid-stream invalidate
+    // synchronously (no reply ever reflects pre-write or pre-roll
+    // state), and the cache counters surface all of it. The
+    // cache-epoch-coherent contract is armed throughout (test build):
+    // any cross-epoch cache touch would panic this test.
+    let ds = dataset(6);
+    let cfg = RouterConfig {
+        cache_capacity_bytes: 8 * 1024 * 1024,
+        ..quiet_cfg()
+    };
+    let (backends, router) = partitioned_cluster(&ds, 3, 2, &cfg);
+    let forest = ds.build_forest();
+
+    // Zipf s=1.1 single-entity workload: the hot head repeats, which
+    // is exactly the traffic the cache exists to absorb
+    let workload = cft_rag::data::workload::Workload::generate(
+        &forest,
+        cft_rag::data::workload::WorkloadConfig {
+            entities_per_query: 1,
+            queries: 16,
+            zipf_s: 1.1,
+            deep_bias: 0.0,
+            ..Default::default()
+        },
+    );
+    for _ in 0..4 {
+        for q in &workload.queries {
+            assert!(is_ok(&router.query(&q.text)));
+        }
+    }
+    let snap = router.snapshot();
+    let served = snap.cache_hits + snap.cache_misses;
+    assert_eq!(served, 64, "every query consults the enabled cache");
+    assert!(
+        snap.cache_hits as f64 / served as f64 > 0.5,
+        "hot Zipf load must hit >50%: {} of {served}",
+        snap.cache_hits
+    );
+    assert!(snap.cache_bytes > 0, "admitted entries must report bytes");
+
+    // Staleness probe, delete edition: cache the reply, delete through
+    // the router, re-ask the SAME query — the delete's ack must have
+    // already evicted it, so the answer reflects the delete at once.
+    let victim = "cardiology";
+    let addr = forest
+        .entity_id(victim)
+        .map(|id| forest.scan_addresses(id)[0])
+        .expect("cardiology occurs in the hospital forest");
+    let probe = format!("tell me about {victim}");
+    let facts_of = |reply: &Json| -> f64 {
+        reply.get("facts").and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    assert!(facts_of(&router.query(&probe)) > 0.0);
+    assert!(is_ok(&router.query(&probe)), "prime the cache");
+    let inv_before = router.snapshot().cache_invalidations;
+    assert!(is_ok(&router.remove(victim)));
+    assert!(
+        router.snapshot().cache_invalidations > inv_before,
+        "an acked write must count an invalidation"
+    );
+    let gone = router.query(&probe);
+    assert!(is_ok(&gone), "{gone}");
+    assert_eq!(facts_of(&gone), 0.0, "stale reply after delete: {gone}");
+
+    // Insert edition: the now-cached zero-fact reply must die with the
+    // re-insert's ack, not linger as a stale hole.
+    assert!(is_ok(&router.query(&probe)), "cache the empty answer");
+    assert!(is_ok(&router.update(victim, addr.tree, addr.node)));
+    let back = router.query(&probe);
+    assert!(facts_of(&back) > 0.0, "stale empty reply after insert: {back}");
+
+    // Live join mid-load: clients hammer the hot head straight through
+    // the membership change. Zero failures, the epoch roll flushes the
+    // cache, and post-join hits re-fill under the new epoch.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind joiner");
+    let joiner_addr = listener.local_addr().unwrap().to_string();
+    let mut new_list: Vec<String> =
+        backends.iter().map(|b| b.addr.clone()).collect();
+    new_list.push(joiner_addr.clone());
+    let _joiner = TestBackend::start_on(
+        &ds,
+        listener,
+        RagConfig {
+            replication_factor: 2,
+            key_partition: Some(
+                KeyPartition::joining(new_list, 3, 2)
+                    .expect("joining partition"),
+            ),
+            ..RagConfig::default()
+        },
+    );
+    const CLIENTS: usize = 2;
+    let mid_load = Arc::new(Barrier::new(CLIENTS + 1));
+    let failures = Mutex::new(Vec::<String>::new());
+    let flushes_before = router.snapshot().cache_invalidations;
+    let join_reply = std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let router = router.clone();
+            let mid_load = mid_load.clone();
+            let workload = &workload;
+            let failures = &failures;
+            s.spawn(move || {
+                mid_load.wait();
+                for i in 0..16 {
+                    let q = &workload.queries
+                        [(c * 7 + i) % workload.queries.len()];
+                    let reply = router.query(&q.text);
+                    if !is_ok(&reply) {
+                        failures.lock().unwrap().push(reply.to_string());
+                    }
+                }
+            });
+        }
+        mid_load.wait();
+        router.join(&joiner_addr)
+    });
+    assert_eq!(
+        join_reply.get("ok"),
+        Some(&Json::Bool(true)),
+        "{join_reply}"
+    );
+    let failed = failures.into_inner().unwrap();
+    assert!(
+        failed.is_empty(),
+        "{} queries failed across the cached join: {:?}",
+        failed.len(),
+        failed.first()
+    );
+    assert_eq!(router.ring_epoch(), 1);
+    assert!(
+        router.snapshot().cache_invalidations > flushes_before,
+        "the epoch roll must flush the cache"
+    );
+    let reply = router.query(&probe);
+    assert!(is_ok(&reply), "{reply}");
+    assert!(facts_of(&reply) > 0.0, "post-join epoch-1 refill: {reply}");
 }

@@ -30,7 +30,9 @@ run_modelcheck() {
 
   # The whole suite with the sync shims routed through the scheduler:
   # proves the feature changes nothing off-model, then explores the
-  # schedule suite (tests/modelcheck_schedules.rs) seed by seed.
+  # schedule suite (tests/modelcheck_schedules.rs) seed by seed —
+  # including the reply-cache fill-vs-invalidate schedules and the
+  # checker_catches_unguarded_cache_fill companion.
   echo "==> cargo test --features modelcheck (schedule exploration)"
   cargo test -q --features modelcheck
 
@@ -227,8 +229,10 @@ if [[ "$fast" == 0 ]]; then
 fi
 
 # The full suite includes tests/router_integration.rs (real TCP
-# backends in-process — the multi-process serving path); cargo reports
-# failing test names, so no separate named run is needed.
+# backends in-process — the multi-process serving path) and the
+# cache-consistency tier (tests/prop_cache.rs equivalence oracle plus
+# the reply-cache integration test); cargo reports failing test names,
+# so no separate named run is needed.
 echo "==> cargo test -q"
 cargo test -q
 
